@@ -1,0 +1,72 @@
+//! The paper's stability headline (Fig. 1 left/center, §4): KFAC becomes
+//! numerically unstable in BFloat16 because it must invert its damped
+//! Kronecker factors, while the inverse-free methods (IKFAC / INGD /
+//! SINGD) remain stable — their updates are multiplications only.
+//!
+//! This driver trains a small VGG on synthetic CIFAR-100 under
+//! fp32 / bf16 / pure-bf16 with KFAC, IKFAC and SINGD-Diag, and reports
+//! divergences and Cholesky failures.
+//!
+//! ```bash
+//! cargo run --release --example low_precision_stability
+//! ```
+
+use singd::config::{Arch, JobConfig};
+use singd::exp::{default_hyper, run_job};
+use singd::numerics::Policy;
+use singd::optim::Method;
+use singd::structured::Structure;
+use singd::train::Schedule;
+
+fn main() {
+    let base = JobConfig {
+        arch: Arch::Vgg { width: 8 },
+        dataset: "cifar100".into(),
+        classes: 20,
+        n_train: 1200,
+        n_test: 300,
+        method: Method::Kfac,
+        hyper: default_hyper(&Method::Kfac, false),
+        schedule: Schedule::Step { every: 120, gamma: 0.5 },
+        epochs: 8,
+        batch_size: 32,
+        seed: 17,
+        label: "stability".into(),
+    };
+
+    println!("{:<16} {:<10} {:>9} {:>9} {:>10}  {}", "method", "precision", "final", "best", "diverged", "telemetry");
+    println!("{}", "-".repeat(72));
+    for method in [
+        Method::Kfac,
+        Method::Ikfac { structure: Structure::Dense },
+        Method::Singd { structure: Structure::Diagonal },
+    ] {
+        for prec in ["fp32", "bf16", "bf16-pure"] {
+            let mut cfg = base.clone();
+            cfg.method = method.clone();
+            cfg.hyper = default_hyper(&method, true);
+            cfg.hyper.policy = Policy::parse(prec).unwrap();
+            // Small damping stresses the inversion exactly as large-scale
+            // training does (damping ≲ bf16's 2⁻⁸ entrywise rounding of S).
+            if matches!(method, Method::Kfac | Method::Ikfac { .. }) {
+                cfg.hyper.damping = 2e-3;
+                cfg.hyper.precond_lr = 0.1;
+            }
+            let res = run_job(&cfg);
+            println!(
+                "{:<16} {:<10} {:>9.3} {:>9.3} {:>10}  {}",
+                method.name(),
+                prec,
+                res.final_test_err,
+                res.best_test_err,
+                if res.diverged { "YES" } else { "no" },
+                res.telemetry
+            );
+        }
+    }
+    println!("\nExpected shape (paper Fig. 1): KFAC's bf16 runs hit Cholesky failures");
+    println!("(its damped factors lose positive-definiteness to rounding) and degrade,");
+    println!("while the inverse-free methods (IKFAC / SINGD) match their fp32 quality");
+    println!("in bf16 with no failures. The hard-NaN regime is exercised by");
+    println!("`cargo test bf16_cholesky` and `cargo test kfac_bf16`.");
+}

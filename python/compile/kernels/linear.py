@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: fused bias-folded linear layer ``y = [x,1] @ Wᵀ``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the output
+(m × d_out) into MXU-aligned blocks; each program loads an (bm × d_in+1)
+activation panel and a (bn × d_in+1) weight panel into VMEM and contracts
+them on the MXU. The bias is folded as a homogeneous coordinate so there is
+no separate bias-add pass over HBM.
+
+``interpret=True`` always: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+everywhere. Real-TPU perf is estimated from the VMEM footprint in
+EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    # x_ref: (bm, d_in+1) biased activation tile; w_ref: (bn, d_in+1).
+    x = x_ref[...]
+    w = w_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pick_block(n, target):
+    """Largest divisor of n that is ≤ target (keeps the grid exact)."""
+    for b in range(min(n, target), 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def _matmul_bias_pallas(x, w, bm=128, bn=128):
+    m, d_in = x.shape
+    d_out = w.shape[0]
+    assert w.shape[1] == d_in + 1, (w.shape, d_in)
+    xb = jnp.concatenate([x, jnp.ones((m, 1), dtype=x.dtype)], axis=1)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(d_out, bn)
+    grid = (m // bm, d_out // bn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d_in + 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d_in + 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d_out), x.dtype),
+        interpret=True,
+    )(xb, w)
+
+
+@jax.custom_vjp
+def matmul_bias(x, w):
+    """``y = [x, 1] @ w.T`` via a tiled Pallas kernel.
+
+    x: (m, d_in); w: (d_out, d_in+1) with the bias as the last column.
+    Interpret-mode ``pallas_call`` does not support reverse-mode autodiff,
+    so the backward pass is supplied explicitly (dense contractions — the
+    same shapes a transposed kernel instance would compute on TPU).
+    """
+    return _matmul_bias_pallas(x, w)
+
+
+def _matmul_bias_fwd(x, w):
+    return _matmul_bias_pallas(x, w), (x, w)
+
+
+def _matmul_bias_bwd(res, dy):
+    x, w = res
+    m = x.shape[0]
+    xb = jnp.concatenate([x, jnp.ones((m, 1), dtype=x.dtype)], axis=1)
+    dw = dy.T @ xb
+    dxb = dy @ w
+    return dxb[:, :-1], dw
+
+
+matmul_bias.defvjp(_matmul_bias_fwd, _matmul_bias_bwd)
+
+
+def vmem_bytes(m, d_in, d_out, bm=128, bn=128, itemsize=4):
+    """Estimated VMEM footprint of one program instance (perf model)."""
+    bm = _pick_block(m, bm)
+    bn = _pick_block(d_out, bn)
+    return (bm * (d_in + 1) + bn * (d_in + 1) + bm * bn) * itemsize

@@ -1,0 +1,82 @@
+"""L1 Pallas kernels for the SINGD preconditioner statistics.
+
+The memory-critical step of SINGD is ``Π̂(BᵀB/m)`` with ``B = A K``:
+
+- ``precond_gram`` — dense projection (INGD / SINGD-Dense): tiles the
+  (d × d) Gram output; each program keeps a (bd × bd) accumulator in VMEM
+  and streams the m-dimension of B through it — the dense log-space matrix
+  never round-trips to HBM per-tile.
+- ``precond_gram_diag`` — diagonal projection (SINGD-Diag): only the
+  row-sum of B² is ever computed, O(d) output. This is the kernel-level
+  expression of the paper's memory claim: the structure choice changes the
+  *kernel*, not just post-processing.
+
+interpret=True for CPU-PJRT executability (see linear.py docstring).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .linear import _pick_block
+
+
+def _gram_kernel(b1_ref, b2_ref, o_ref, *, inv_m):
+    # b1: (m, bd1) column panel i; b2: (m, bd2) column panel j.
+    b1 = b1_ref[...]
+    b2 = b2_ref[...]
+    acc = jax.lax.dot_general(
+        b1, b2, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[...] = (acc * inv_m).astype(o_ref.dtype)
+
+
+@jax.jit
+def precond_gram(b):
+    """Dense ``H = BᵀB/m`` tiled over (d × d) output panels."""
+    m, d = b.shape
+    bd = _pick_block(d, 128)
+    grid = (d // bd, d // bd)
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, inv_m=1.0 / m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, bd), lambda i, j: (0, i)),
+            pl.BlockSpec((m, bd), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bd, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), b.dtype),
+        interpret=True,
+    )(b, b)
+
+
+def _diag_kernel(b_ref, o_ref, *, inv_m):
+    b = b_ref[...]
+    o_ref[...] = (jnp.sum(b * b, axis=0) * inv_m).astype(o_ref.dtype)
+
+
+@jax.jit
+def precond_gram_diag(b):
+    """Diagonal of ``BᵀB/m`` — O(d) output, never forms the Gram matrix."""
+    m, d = b.shape
+    bd = _pick_block(d, 256)
+    grid = (d // bd,)
+    return pl.pallas_call(
+        functools.partial(_diag_kernel, inv_m=1.0 / m),
+        grid=grid,
+        in_specs=[pl.BlockSpec((m, bd), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((d,), b.dtype),
+        interpret=True,
+    )(b)
+
+
+@jax.jit
+def singd_diag_update(k_diag, a, lam, beta1):
+    """Fused SINGD-Diag K-side refresh (see ref.singd_diag_update)."""
+    b = a * k_diag[None, :]
+    h_diag = precond_gram_diag(b)
+    m_k = 0.5 * (h_diag + lam * k_diag * k_diag - 1.0)
+    return k_diag * (1.0 - beta1 * m_k)

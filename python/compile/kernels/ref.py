@@ -1,0 +1,53 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every kernel in this package has an entry here with identical semantics;
+``python/tests/test_kernels.py`` asserts allclose between the two across a
+hypothesis-driven sweep of shapes and dtypes. These references are also the
+ground truth the Rust native implementations were validated against
+conceptually (same formulas as ``rust/src/structured``/``rust/src/optim``).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_bias(x, w):
+    """Linear layer with folded bias: ``y = [x, 1] @ w.T``.
+
+    x: (m, d_in) activations; w: (d_out, d_in + 1) weight whose last column
+    is the bias.
+    """
+    m = x.shape[0]
+    xb = jnp.concatenate([x, jnp.ones((m, 1), dtype=x.dtype)], axis=1)
+    return xb @ w.T
+
+
+def precond_gram(b):
+    """Dense Gram statistic ``H = BᵀB / m`` (the SINGD ``H_K`` with B = A K)."""
+    m = b.shape[0]
+    return (b.T @ b) / m
+
+
+def precond_gram_diag(b):
+    """Diagonal of ``BᵀB/m`` without forming the dense Gram matrix."""
+    m = b.shape[0]
+    return jnp.sum(b * b, axis=0) / m
+
+
+def singd_diag_update(k_diag, a, lam, beta1, d_o):
+    """One SINGD-Diag preconditioner refresh of the K side (Fig. 4 with
+    diagonal structure and the IKFAC trace weights).
+
+    k_diag: (d,) diagonal of K; a: (m, d) layer inputs.
+    Returns the updated diagonal.
+    """
+    b = a * k_diag[None, :]
+    h_diag = precond_gram_diag(b)  # diag(Kᵀ U K)
+    m_k = 0.5 * (h_diag + lam * k_diag * k_diag - 1.0)
+    return k_diag * (1.0 - beta1 * m_k)
+
+
+def softmax_xent(logits, y_onehot):
+    """Mean softmax cross-entropy (matches ``rust/src/model::softmax_xent``)."""
+    logz = jnp.log(jnp.sum(jnp.exp(logits - logits.max(axis=1, keepdims=True)), axis=1))
+    logp = logits - logits.max(axis=1, keepdims=True) - logz[:, None]
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=1))

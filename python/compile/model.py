@@ -1,0 +1,143 @@
+"""L2: JAX forward/backward graphs, lowered once to HLO by aot.py.
+
+Two compute graphs, both pure functions of their tensor inputs (so the Rust
+coordinator owns all state and just streams tensors through PJRT):
+
+- ``mlp_fwdbwd`` — the cross-check model: a 2-layer MLP with bias-folded
+  weights and softmax-CE, architecture-identical to ``rust/src/model::Mlp``.
+  Returns (loss, dW1, dW2). The Rust runtime test executes the artifact and
+  compares against the native model bit-for-bit-ish.
+
+- ``transformer_lm_fwdbwd`` — the e2e workhorse: a pre-LN causal
+  transformer LM (token one-hot embed → blocks → LN → tied-free head).
+  Returns loss, per-layer gradients, and per-layer Kronecker statistics
+  ``(A_l, G_l)`` obtained with the zero-probe trick: a probe tensor is
+  added to each layer's pre-activation, and d(loss)/d(probe) *is* the
+  output-side gradient that SINGD's ``C`` factor needs. The Rust SINGD
+  optimizer consumes these exactly like the native models' stats.
+
+All linear layers go through the L1 Pallas kernel ``kernels.linear.
+matmul_bias`` so the kernels lower into the same HLO artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import linear as klinear
+from .kernels import ref
+
+
+def mlp_fwdbwd(x, y_onehot, w1, w2):
+    """(loss, dW1, dW2) for the 2-layer ReLU MLP with folded biases."""
+
+    def loss_fn(params):
+        w1_, w2_ = params
+        h = jax.nn.relu(klinear.matmul_bias(x, w1_))
+        logits = klinear.matmul_bias(h, w2_)
+        return ref.softmax_xent(logits, y_onehot)
+
+    loss, grads = jax.value_and_grad(loss_fn)((w1, w2))
+    return (loss, grads[0], grads[1])
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM
+# ---------------------------------------------------------------------------
+
+
+def transformer_param_shapes(vocab, dim, depth, mlp_ratio=2):
+    """Ordered (name, (d_out, d_in+1)) list — the contract with Rust.
+
+    Order: embed, then per block (wq, wk, wv, wo, w1, w2), then head.
+    """
+    shapes = [("embed", (dim, vocab + 1))]
+    for b in range(depth):
+        shapes += [
+            (f"b{b}.wq", (dim, dim + 1)),
+            (f"b{b}.wk", (dim, dim + 1)),
+            (f"b{b}.wv", (dim, dim + 1)),
+            (f"b{b}.wo", (dim, dim + 1)),
+            (f"b{b}.w1", (dim * mlp_ratio, dim + 1)),
+            (f"b{b}.w2", (dim, dim * mlp_ratio + 1)),
+        ]
+    shapes.append(("head", (vocab, dim + 1)))
+    return shapes
+
+
+def _layernorm(x, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps)
+
+
+def _transformer_with_probes(params, probes, tokens, targets, vocab, dim, depth, mlp_ratio):
+    """Returns (loss, activations). ``probes`` are zeros added to each
+    layer's pre-activation so grad-wrt-probe = output-side gradient G_l."""
+    m, s = tokens.shape
+    onehot = jax.nn.one_hot(tokens.astype(jnp.int32), vocab, dtype=params[0].dtype)
+    rows = onehot.reshape(m * s, vocab)
+
+    acts = []  # layer inputs A_l (without bias col; Rust appends it)
+    idx = 0
+
+    def lin(x):
+        nonlocal idx
+        acts.append(x)
+        y = klinear.matmul_bias(x, params[idx]) + probes[idx]
+        idx += 1
+        return y
+
+    h = lin(rows)  # embed
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dim, dtype=h.dtype))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    for _ in range(depth):
+        x1 = _layernorm(h)
+        q = lin(x1).reshape(m, s, dim)
+        k = lin(x1).reshape(m, s, dim)
+        v = lin(x1).reshape(m, s, dim)
+        scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+        scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+        p = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("bqk,bkd->bqd", p, v).reshape(m * s, dim)
+        h = h + lin(att)  # wo projection + residual
+        x2 = _layernorm(h)
+        h = h + lin(jax.nn.relu(lin(x2)))  # mlp (w1 inside relu, w2 outside)
+
+    hf = _layernorm(h)
+    logits = lin(hf)  # head → (m·s, vocab)
+    # Next-token targets, flattened (m·s,) — provided by Rust.
+    tgt_onehot = jax.nn.one_hot(targets.astype(jnp.int32).reshape(m * s), vocab, dtype=h.dtype)
+    loss = ref.softmax_xent(logits, tgt_onehot)
+    return loss, acts
+
+
+def transformer_lm_fwdbwd(tokens, targets, *params_flat, vocab, dim, depth, mlp_ratio=2):
+    """Full training step computation.
+
+    Inputs: tokens (m, s) float-encoded ids; targets (m, s) next-token ids;
+    params in ``transformer_param_shapes`` order.
+
+    Outputs (flat tuple): loss, then per layer: dW_l, A_l, G_l where
+    A_l = layer input rows (m·s, d_in) and G_l = d(mean loss)/d(pre-act)
+    rows (m·s, d_out). Rust rescales G by m·s to match KFAC conventions.
+    """
+    params = list(params_flat)
+    m, s = tokens.shape
+    n_layers = len(params)
+    shapes = transformer_param_shapes(vocab, dim, depth, mlp_ratio)
+    assert n_layers == len(shapes), (n_layers, len(shapes))
+    probes = [jnp.zeros((m * s, shp[0]), dtype=params[0].dtype) for _, shp in shapes]
+
+    def loss_fn(params, probes):
+        loss, acts = _transformer_with_probes(
+            params, probes, tokens, targets, vocab, dim, depth, mlp_ratio
+        )
+        return loss, acts
+
+    (loss, acts), (dparams, dprobes) = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+        params, probes
+    )
+    out = [loss]
+    for layer in range(n_layers):
+        out += [dparams[layer], acts[layer], dprobes[layer]]
+    return tuple(out)

@@ -1,0 +1,133 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py is THE
+correctness signal for the kernel layer (kernels run under interpret=True,
+so these tests exercise exactly what the AOT artifacts contain).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linear as klinear
+from compile.kernels import precond as kprecond
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+def tol_for(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    d_in=st.integers(1, 40),
+    d_out=st.integers(1, 40),
+    dt=st.sampled_from(range(len(DTYPES))),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_bias_matches_ref(m, d_in, d_out, dt, seed):
+    dtype = DTYPES[dt]
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (m, d_in), dtype)
+    w = rand(rng, (d_out, d_in + 1), dtype)
+    got = klinear.matmul_bias(x, w)
+    want = ref.matmul_bias(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol_for(dtype)
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    d=st.integers(1, 48),
+    dt=st.sampled_from(range(len(DTYPES))),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_precond_gram_matches_ref(m, d, dt, seed):
+    dtype = DTYPES[dt]
+    rng = np.random.default_rng(seed)
+    b = rand(rng, (m, d), dtype)
+    got = kprecond.precond_gram(b)
+    want = ref.precond_gram(b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol_for(dtype)
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    d=st.integers(1, 96),
+    dt=st.sampled_from(range(len(DTYPES))),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_precond_gram_diag_matches_ref(m, d, dt, seed):
+    dtype = DTYPES[dt]
+    rng = np.random.default_rng(seed)
+    b = rand(rng, (m, d), dtype)
+    got = kprecond.precond_gram_diag(b)
+    want = ref.precond_gram_diag(b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **tol_for(dtype)
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 48),
+    d=st.integers(2, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_singd_diag_update_matches_ref(m, d, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, (m, d), jnp.float32)
+    k = jnp.abs(rand(rng, (d,), jnp.float32)) + 0.5
+    got = kprecond.singd_diag_update(k, a, 1e-3, 0.05)
+    want = ref.singd_diag_update(k, a, 1e-3, 0.05, d_o=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(0)
+    b = rand(rng, (16, 12), jnp.float32)
+    h = np.asarray(kprecond.precond_gram(b))
+    np.testing.assert_allclose(h, h.T, rtol=1e-6)
+    eig = np.linalg.eigvalsh(h)
+    assert eig.min() > -1e-5
+
+
+def test_block_picking_always_divides():
+    from compile.kernels.linear import _pick_block
+
+    for n in range(1, 300):
+        b = _pick_block(n, 128)
+        assert n % b == 0 and 1 <= b <= min(n, 128)
+
+
+def test_vmem_footprint_model_monotone():
+    small = klinear.vmem_bytes(256, 64, 64)
+    large = klinear.vmem_bytes(256, 512, 512)
+    assert small < large
+    # A 128×128 tile at d_in=512 stays well under 16 MiB VMEM.
+    assert klinear.vmem_bytes(4096, 512, 4096) < 16 * 2**20
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_kernels_preserve_dtype(dtype):
+    rng = np.random.default_rng(1)
+    x = rand(rng, (8, 6), dtype)
+    w = rand(rng, (5, 7), dtype)
+    assert klinear.matmul_bias(x, w).dtype == dtype
+    assert kprecond.precond_gram(x).dtype == dtype

@@ -1,0 +1,114 @@
+"""L2 correctness: model graphs — shapes, gradients, probe-trick stats."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_mlp_fwdbwd_shapes_and_grad():
+    rng = np.random.default_rng(0)
+    m, d_in, hidden, classes = 8, 16, 32, 4
+    x = jnp.asarray(rng.standard_normal((m, d_in)), jnp.float32)
+    y = jax.nn.one_hot(jnp.arange(m) % classes, classes)
+    w1 = jnp.asarray(rng.standard_normal((hidden, d_in + 1)) * 0.3, jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((classes, hidden + 1)) * 0.3, jnp.float32)
+    loss, d1, d2 = model.mlp_fwdbwd(x, y, w1, w2)
+    assert d1.shape == w1.shape and d2.shape == w2.shape
+    assert float(loss) > 0
+
+    # Finite-difference on one weight.
+    eps = 1e-3
+    idx = (3, 5)
+    w1p = w1.at[idx].add(eps)
+    w1m = w1.at[idx].add(-eps)
+    lp, _, _ = model.mlp_fwdbwd(x, y, w1p, w2)
+    lm, _, _ = model.mlp_fwdbwd(x, y, w1m, w2)
+    fd = (float(lp) - float(lm)) / (2 * eps)
+    assert abs(fd - float(d1[idx])) < 1e-2 * (1 + abs(fd))
+
+
+def _tiny_lm():
+    vocab, dim, depth = 11, 8, 1
+    shapes = model.transformer_param_shapes(vocab, dim, depth)
+    rng = np.random.default_rng(3)
+    params = [
+        jnp.asarray(rng.standard_normal(shp) * (2.0 / shp[1]) ** 0.5, jnp.float32)
+        for _, shp in shapes
+    ]
+    fn = functools.partial(model.transformer_lm_fwdbwd, vocab=vocab, dim=dim, depth=depth)
+    return vocab, dim, depth, shapes, params, fn
+
+
+def test_transformer_output_layout():
+    vocab, dim, depth, shapes, params, fn = _tiny_lm()
+    m, s = 2, 5
+    rng = np.random.default_rng(4)
+    tokens = jnp.asarray(rng.integers(0, vocab, (m, s)), jnp.float32)
+    targets = jnp.asarray(rng.integers(0, vocab, (m, s)), jnp.float32)
+    out = fn(tokens, targets, *params)
+    assert len(out) == 1 + 3 * len(shapes)
+    loss = out[0]
+    assert loss.shape == () and float(loss) > 0
+    for layer, (_, (d_out, d_in1)) in enumerate(shapes):
+        dw, a, g = out[1 + 3 * layer : 4 + 3 * layer]
+        assert dw.shape == (d_out, d_in1), (layer, dw.shape)
+        assert a.shape == (m * s, d_in1 - 1), (layer, a.shape)
+        assert g.shape == (m * s, d_out), (layer, g.shape)
+
+
+def test_probe_stats_reproduce_gradient():
+    # KFAC consistency: dW = Gᵀ [A, 1] for every layer (G is d(mean
+    # loss)/d(pre-activation) rows, so no extra 1/m factor).
+    vocab, dim, depth, shapes, params, fn = _tiny_lm()
+    m, s = 2, 4
+    rng = np.random.default_rng(5)
+    tokens = jnp.asarray(rng.integers(0, vocab, (m, s)), jnp.float32)
+    targets = jnp.asarray(rng.integers(0, vocab, (m, s)), jnp.float32)
+    out = fn(tokens, targets, *params)
+    for layer in range(len(shapes)):
+        dw, a, g = out[1 + 3 * layer : 4 + 3 * layer]
+        ab = jnp.concatenate([a, jnp.ones((a.shape[0], 1), a.dtype)], axis=1)
+        rebuilt = g.T @ ab
+        np.testing.assert_allclose(
+            np.asarray(rebuilt), np.asarray(dw), rtol=1e-4, atol=1e-5,
+        )
+
+
+def test_transformer_grad_matches_fd():
+    vocab, dim, depth, shapes, params, fn = _tiny_lm()
+    m, s = 2, 4
+    rng = np.random.default_rng(6)
+    tokens = jnp.asarray(rng.integers(0, vocab, (m, s)), jnp.float32)
+    targets = jnp.asarray(rng.integers(0, vocab, (m, s)), jnp.float32)
+    out = fn(tokens, targets, *params)
+    eps = 1e-3
+    layer, idx = 2, (1, 3)  # wk of block 0
+    pp = [p for p in params]
+    pp[layer] = params[layer].at[idx].add(eps)
+    lp = fn(tokens, targets, *pp)[0]
+    pp[layer] = params[layer].at[idx].add(-eps)
+    lm = fn(tokens, targets, *pp)[0]
+    fd = (float(lp) - float(lm)) / (2 * eps)
+    an = float(out[1 + 3 * layer][idx])
+    assert abs(fd - an) < 2e-2 * (1 + abs(fd)), (fd, an)
+
+
+def test_softmax_xent_matches_uniform():
+    logits = jnp.zeros((4, 10))
+    y = jax.nn.one_hot(jnp.arange(4) % 10, 10)
+    loss = ref.softmax_xent(logits, y)
+    np.testing.assert_allclose(float(loss), np.log(10.0), rtol=1e-6)
+
+
+def test_param_shapes_contract():
+    shapes = model.transformer_param_shapes(vocab=32, dim=16, depth=2)
+    assert shapes[0] == ("embed", (16, 33))
+    assert shapes[-1] == ("head", (32, 17))
+    assert len(shapes) == 2 + 6 * 2

@@ -1,0 +1,88 @@
+//! Ablations over SINGD's design choices (DESIGN.md §5 extension):
+//!
+//! 1. **Trace adaptivity** (INGD's `Tr(H_C)·H_K`/adaptive damping vs
+//!    IKFAC's constants) at fixed structure — what §3.1's "these terms can
+//!    contribute to stability" claims;
+//! 2. **Riemannian momentum** `α₁ ∈ {0, 0.3, 0.6, 0.9}`;
+//! 3. **Preconditioner refresh interval** `T ∈ {1, 5, 20}` — the
+//!    amortization knob of §2.1 (cost ∝ 1/T, quality should degrade
+//!    gracefully).
+//!
+//! (The Appendix-F Kronecker-rescaling invariance is exercised exactly in
+//! `optim::singd::tests::invariance_of_ingd_to_kronecker_rescaling`.)
+//!
+//! Run: `cargo bench --bench ablations`
+
+use singd::config::{Arch, JobConfig};
+use singd::exp::{default_hyper, run_job};
+use singd::optim::Method;
+use singd::structured::Structure;
+use singd::train::Schedule;
+
+fn base() -> JobConfig {
+    let m = Method::Singd { structure: Structure::Diagonal };
+    JobConfig {
+        arch: Arch::Mlp { hidden: vec![64, 32] },
+        dataset: "cifar100".into(),
+        classes: 10,
+        n_train: 1000,
+        n_test: 250,
+        method: m.clone(),
+        hyper: default_hyper(&m, false),
+        schedule: Schedule::Cosine { total: 300 },
+        epochs: 10,
+        batch_size: 32,
+        seed: 77,
+        label: "ablation".into(),
+    }
+}
+
+fn main() {
+    let mut csv = String::from("ablation,setting,final_err,best_err,diverged,wall_s\n");
+    let mut emit = |group: &str, setting: &str, cfg: &JobConfig| {
+        let res = run_job(cfg);
+        println!(
+            "{group:<22} {setting:<16} final {:.3} best {:.3}{}",
+            res.final_test_err,
+            res.best_test_err,
+            if res.diverged { "  DIVERGED" } else { "" }
+        );
+        csv.push_str(&format!(
+            "{group},{setting},{},{},{},{:.2}\n",
+            res.final_test_err, res.best_test_err, res.diverged as u8, res.wall_secs
+        ));
+        (res.best_test_err, res.diverged)
+    };
+
+    println!("== ablation 1: trace adaptivity (dense structure) ==");
+    let mut cfg = base();
+    cfg.method = Method::Singd { structure: Structure::Dense };
+    cfg.hyper = default_hyper(&cfg.method, false);
+    let (adaptive_err, _) = emit("adaptivity", "ingd(adaptive)", &cfg);
+    cfg.method = Method::Ikfac { structure: Structure::Dense };
+    cfg.hyper = default_hyper(&cfg.method, false);
+    let (ikfac_err, _) = emit("adaptivity", "ikfac(fixed)", &cfg);
+    println!("-> adaptive {adaptive_err:.3} vs fixed {ikfac_err:.3}\n");
+
+    println!("== ablation 2: Riemannian momentum α₁ ==");
+    for a1 in [0.0f32, 0.3, 0.6, 0.9] {
+        let mut cfg = base();
+        cfg.hyper.riem_momentum = a1;
+        emit("riem_momentum", &format!("α₁={a1}"), &cfg);
+    }
+    println!();
+
+    println!("== ablation 3: refresh interval T ==");
+    let mut errs_t = Vec::new();
+    for t in [1usize, 5, 20] {
+        let mut cfg = base();
+        cfg.hyper.t_update = t;
+        let (e, d) = emit("t_update", &format!("T={t}"), &cfg);
+        errs_t.push((t, e, d));
+    }
+    // Amortization must degrade gracefully: T=20 within 0.1 of T=1.
+    let e1 = errs_t[0].1;
+    let e20 = errs_t[2].1;
+    assert!(e20 < e1 + 0.1, "T=20 should stay close to T=1: {e1} vs {e20}");
+    singd::train::write_csv("ablations.csv", &csv).ok();
+}

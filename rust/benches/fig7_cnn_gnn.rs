@@ -1,0 +1,98 @@
+//! Fig. 7 — CNN models (ConvMixer-ish, Rep-ViT stand-in = VGG on
+//! ImageWoof) in bf16 and a GNN on synthetic Cora in fp32 (the paper
+//! trains the GNN in fp32 so KFAC can participate).
+//!
+//! Expected shape: SINGD (incl. Diag) ≥ AdamW on the CNNs; on the GNN,
+//! KFAC-fp32 is a strong baseline and SINGD matches it.
+//!
+//! Scale with `SINGD_BENCH_EPOCHS` (default 6).
+//! Run: `cargo bench --bench fig7_cnn_gnn`
+
+use singd::config::{Arch, JobConfig};
+use singd::exp::{cosine_for, default_hyper, run_gcn, run_grid};
+use singd::optim::Method;
+use singd::structured::Structure;
+
+fn main() {
+    let epochs: usize =
+        std::env::var("SINGD_BENCH_EPOCHS").ok().and_then(|v| v.parse().ok()).unwrap_or(6);
+    let methods: Vec<_> = [
+        Method::Sgd,
+        Method::AdamW,
+        Method::Singd { structure: Structure::Diagonal },
+        Method::Singd { structure: Structure::Hierarchical { k1: 4, k2: 4 } },
+        Method::Singd { structure: Structure::Dense },
+    ]
+    .into_iter()
+    .map(|m| (m.clone(), default_hyper(&m, true)))
+    .collect();
+
+    let mut all_csv = String::new();
+    for (name, arch, ds, classes, n_train) in [
+        ("convmixer/cifar100", Arch::ConvMixer { patch: 4, width: 16, depth: 2 }, "cifar100", 20usize, 900usize),
+        ("vgg/imagewoof", Arch::Vgg { width: 8 }, "imagewoof", 10, 600),
+    ] {
+        println!("\n== Fig. 7 — {name}, bf16, {epochs} epochs ==");
+        let base = JobConfig {
+            arch,
+            dataset: ds.into(),
+            classes,
+            n_train,
+            n_test: 240,
+            method: Method::Sgd,
+            hyper: default_hyper(&Method::Sgd, true),
+            schedule: cosine_for(epochs, n_train, 32),
+            epochs,
+            batch_size: 32,
+            seed: 31,
+            label: name.replace('/', "-"),
+        };
+        let grid = run_grid(&base, &methods, &["bf16"]);
+        for (label, res) in &grid {
+            all_csv.push_str(&res.to_csv(&format!("{name}/{label}")));
+        }
+        let err =
+            |l: &str| grid.iter().find(|(n, _)| n == l).map(|(_, r)| r.best_test_err).unwrap();
+        let best_singd = ["singd:diag-bf16", "singd:hier:8-bf16", "ingd-bf16"]
+            .iter()
+            .map(|l| err(l))
+            .fold(f32::INFINITY, f32::min);
+        println!("\n{name}: best SINGD {:.3} vs AdamW {:.3} vs SGD {:.3}",
+            best_singd, err("adamw-bf16"), err("sgd-bf16"));
+        assert!(grid.iter().all(|(_, r)| !r.diverged), "{name}: bf16 stability");
+        assert!(best_singd <= err("adamw-bf16") + 0.05, "{name}: SINGD ≥ AdamW (Fig. 7)");
+    }
+    singd::train::write_csv("fig7_cnn_curves.csv", &all_csv).ok();
+
+    // -- GNN on Cora, fp32 (KFAC participates here, as in the paper) --
+    println!("\n== Fig. 7 right — GCN on synthetic Cora, fp32 ==");
+    let steps = 60 * epochs;
+    let mut gnn_csv = String::from("method,step,test_loss,test_err\n");
+    let mut finals = Vec::new();
+    for method in [
+        Method::AdamW,
+        Method::Kfac,
+        Method::Singd { structure: Structure::Diagonal },
+        Method::Singd { structure: Structure::Dense },
+    ] {
+        let mut hp = default_hyper(&method, false);
+        hp.lr *= 3.0;
+        let (curve, diverged) = run_gcn(&method, &hp, steps, 7);
+        let last = curve.last().unwrap().2;
+        println!("{:<14} final test err {:.3} diverged={}", method.name(), last, diverged);
+        for (t, loss, err) in &curve {
+            gnn_csv.push_str(&format!("{},{},{},{}\n", method.name(), t, loss, err));
+        }
+        finals.push((method.name(), last, diverged));
+        assert!(!diverged, "{}: GNN fp32 run must be stable", method.name());
+    }
+    singd::train::write_csv("fig7_gnn_curves.csv", &gnn_csv).ok();
+    let kfac = finals.iter().find(|(n, _, _)| n == "kfac").unwrap().1;
+    let best_singd = finals
+        .iter()
+        .filter(|(n, _, _)| n.starts_with("singd") || n == "ingd")
+        .map(|(_, e, _)| *e)
+        .fold(f32::INFINITY, f32::min);
+    println!("\nGNN: best SINGD {best_singd:.3} vs KFAC {kfac:.3}");
+    assert!(best_singd <= kfac + 0.08, "SINGD should match KFAC on the GNN (Fig. 7)");
+}

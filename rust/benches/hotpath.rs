@@ -1,0 +1,103 @@
+//! §Perf microbenchmarks — the L3 hot paths.
+//!
+//! 1. `tensor::matmul` (model fwd/bwd substrate) across sizes;
+//! 2. structured factor ops (`gram_project`, `matmul`, `kkt_right`);
+//! 3. full optimizer steps (KFAC vs INGD vs SINGD-Diag/Hier);
+//! 4. PJRT engine call overhead (when artifacts are built).
+//!
+//! Before/after numbers for each optimization iteration are logged in
+//! EXPERIMENTS.md §Perf.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use singd::bench::{black_box, Harness};
+use singd::optim::{Hyper, KronStats, Method, Optimizer};
+use singd::proptest::Pcg;
+use singd::structured::{SMat, Structure};
+use singd::tensor::{matmul, Mat};
+
+fn main() {
+    let mut h = Harness::new("hotpath");
+    h.target_secs = 0.4;
+    let mut rng = Pcg::new(3);
+
+    // 1. matmul GFLOP/s.
+    for n in [64usize, 128, 256, 512] {
+        let a = rng.normal_mat(n, n, 1.0);
+        let b = rng.normal_mat(n, n, 1.0);
+        let st = h.bench(&format!("matmul {n}x{n}x{n}"), || {
+            black_box(matmul(&a, &b));
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / st.median_ns;
+        println!("{:>46} {:.2} GFLOP/s", "->", gflops);
+    }
+
+    // 2. structured ops at d = 256.
+    let d = 256;
+    let m = 64;
+    let a_rows = rng.normal_mat(m, d, 1.0);
+    let x = rng.normal_mat(16, d, 1.0);
+    for s in [
+        Structure::Dense,
+        Structure::BlockDiag { k: 32 },
+        Structure::Hierarchical { k1: 8, k2: 8 },
+        Structure::RankKTril { k: 1 },
+        Structure::TriuToeplitz,
+        Structure::Diagonal,
+    ] {
+        // Fully-populated factor (identity would hit the zero-skip fast
+        // paths and understate cost).
+        let sym = rng.normal_mat(d, d, 0.2).symmetrize();
+        let mut k = singd::structured::proj::proj(s, &sym);
+        k.axpy(1.0, &SMat::identity(s, d));
+        h.bench(&format!("gram_project {} d={d} m={m}", s.name()), || {
+            black_box(k.gram_project(&a_rows, 1.0));
+        });
+        h.bench(&format!("kkt_right {} d={d}", s.name()), || {
+            black_box(k.kkt_right(&x));
+        });
+        let k2 = SMat::identity(s, d);
+        h.bench(&format!("struct matmul {} d={d}", s.name()), || {
+            black_box(k.matmul(&k2));
+        });
+    }
+
+    // 3. full optimizer steps on a (256, 256) layer.
+    let shapes = [(d, d)];
+    let grads = [rng.normal_mat(d, d, 0.1)];
+    let stats = [KronStats { a: rng.normal_mat(m, d, 1.0), g: rng.normal_mat(m, d, 1.0) }];
+    for method in [
+        Method::AdamW,
+        Method::Kfac,
+        Method::Singd { structure: Structure::Dense },
+        Method::Singd { structure: Structure::Hierarchical { k1: 8, k2: 8 } },
+        Method::Singd { structure: Structure::Diagonal },
+    ] {
+        let hp = Hyper { t_update: 1, ..Hyper::default() };
+        let mut opt = method.build(&shapes, &hp);
+        let mut params = [rng.normal_mat(d, d, 0.1)];
+        let mut t = 0usize;
+        h.bench(&format!("optimizer step {} d={d} T=1", method.name()), || {
+            opt.step(t, &mut params, &grads, &stats);
+            t += 1;
+        });
+    }
+
+    // 4. PJRT call overhead (optional — needs `make artifacts`).
+    let smoke = singd::runtime::artifact_path("smoke.hlo.txt");
+    if std::path::Path::new(&smoke).exists() {
+        let eng = singd::runtime::Engine::load(&smoke).expect("load smoke artifact");
+        let x = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let y = Mat::ones(2, 2);
+        h.bench("pjrt roundtrip (2x2 smoke)", || {
+            black_box(
+                eng.run(&[singd::runtime::MatInput::new(&x), singd::runtime::MatInput::new(&y)])
+                    .unwrap(),
+            );
+        });
+    } else {
+        println!("(skipping PJRT bench — run `make artifacts`)");
+    }
+
+    h.finish();
+}

@@ -1,0 +1,76 @@
+//! Table 2 — iteration cost per structure.
+//!
+//! Measures, for each structure and a sweep of layer widths `d`, the two
+//! second-order cost centres of Fig. 4:
+//!
+//! 1. preconditioner refresh (`Π̂(H)`, `Π̂(KᵀK)`, multiplicative K update);
+//! 2. descent direction (`C Cᵀ ∇W K Kᵀ`);
+//!
+//! and fits the scaling exponent `t ∝ d^α` between successive sizes. The
+//! paper's claim is the *shape*: dense costs `O(d³)`-ish per refresh and
+//! `O(d²·d_o)` per direction, (block-)diag/rank-k/hierarchical drop to
+//! `O(k·m·d)` / `O(k d_i d_o)`, Toeplitz to quasi-linear in storage.
+//!
+//! Run: `cargo bench --bench tab2_iteration_cost`
+
+use singd::bench::{black_box, Harness};
+use singd::optim::{Hyper, KronStats, Method, Optimizer};
+use singd::proptest::Pcg;
+use singd::structured::Structure;
+
+fn main() {
+    let mut h = Harness::new("tab2_iteration_cost");
+    h.target_secs = 0.3;
+    let sizes = [64usize, 128, 256];
+    let m = 64; // batch rows
+    let structures: Vec<(&str, Method)> = vec![
+        ("kfac", Method::Kfac),
+        ("dense (INGD)", Method::Singd { structure: Structure::Dense }),
+        ("block k=32", Method::Singd { structure: Structure::BlockDiag { k: 32 } }),
+        ("hier k=16", Method::Singd { structure: Structure::Hierarchical { k1: 8, k2: 8 } }),
+        ("rankk k=1", Method::Singd { structure: Structure::RankKTril { k: 1 } }),
+        ("toeplitz", Method::Singd { structure: Structure::TriuToeplitz }),
+        ("diag", Method::Singd { structure: Structure::Diagonal }),
+        ("adamw", Method::AdamW),
+    ];
+
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    for (name, method) in &structures {
+        let mut times = Vec::new();
+        for &d in &sizes {
+            let mut rng = Pcg::new(7);
+            let shapes = [(d, d)];
+            let hp = Hyper { t_update: 1, ..Hyper::default() };
+            let mut opt = method.build(&shapes, &hp);
+            let mut params = [rng.normal_mat(d, d, 0.1)];
+            let grads = [rng.normal_mat(d, d, 0.1)];
+            let stats =
+                [KronStats { a: rng.normal_mat(m, d, 1.0), g: rng.normal_mat(m, d, 1.0) }];
+            let mut t = 0usize;
+            let st = h.bench(&format!("{name} d={d} (refresh+direction)"), || {
+                opt.step(t, &mut params, &grads, &stats);
+                t += 1;
+                black_box(params[0].at(0, 0));
+            });
+            times.push(st.median_ns);
+        }
+        rows.push((name.to_string(), times));
+    }
+
+    println!("\nScaling exponents t ∝ d^α (per doubling):");
+    println!("{:<18} {:>12} {:>12} {:>8}", "structure", "d=64→128", "d=128→256", "α(avg)");
+    for (name, times) in &rows {
+        let a1 = (times[1] / times[0]).log2();
+        let a2 = (times[2] / times[1]).log2();
+        println!("{:<18} {:>12.2} {:>12.2} {:>8.2}", name, a1, a2, (a1 + a2) / 2.0);
+    }
+    println!("\nExpected (Table 2): dense/kfac α≈2–3; block/hier/diag/rankk α≈1–2;");
+    println!("every structured variant strictly cheaper than dense at the same d.");
+
+    // Sanity checks on the shape of the result (who wins).
+    let get = |n: &str| rows.iter().find(|(name, _)| name.starts_with(n)).unwrap().1[2];
+    assert!(get("diag") < get("dense"), "diag must beat dense at d=256");
+    assert!(get("rankk") < get("dense"), "rank-1 must beat dense at d=256");
+    assert!(get("hier") < get("dense"), "hier must beat dense at d=256");
+    h.finish();
+}

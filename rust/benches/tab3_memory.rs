@@ -1,0 +1,89 @@
+//! Table 3 (additional storage) + Fig. 1 right (memory bars).
+//!
+//! Reports the optimizer-state bytes of every method over the layer-shape
+//! profiles of the experiment models (VGG and ViT), in fp32 and bf16, and
+//! checks the paper's ordering: SINGD-structured < AdamW < INGD ≈ KFAC,
+//! with SINGD-Diag in bf16 at or below AdamW-bf16 (Fig. 1 right's dashed
+//! line).
+//!
+//! Run: `cargo bench --bench tab3_memory`
+
+use singd::bench::Harness;
+use singd::config::Arch;
+use singd::exp::{build_model, default_hyper};
+use singd::model::cnn::ImgShape;
+use singd::numerics::Policy;
+use singd::optim::Method;
+use singd::proptest::Pcg;
+use singd::structured::Structure;
+
+fn main() {
+    let mut h = Harness::new("tab3_memory");
+    let shape = ImgShape { c: 3, h: 16, w: 16 };
+    let mut rng = Pcg::new(1);
+
+    let profiles = [
+        ("vgg(w=16)", Arch::Vgg { width: 16 }),
+        ("vit(d=64,L=4)", Arch::Vit { dim: 64, depth: 4, patch: 4 }),
+    ];
+    let methods = [
+        Method::Kfac,
+        Method::Singd { structure: Structure::Dense },
+        Method::Ikfac { structure: Structure::Dense },
+        Method::Singd { structure: Structure::BlockDiag { k: 32 } },
+        Method::Singd { structure: Structure::Hierarchical { k1: 8, k2: 8 } },
+        Method::Singd { structure: Structure::RankKTril { k: 1 } },
+        Method::Singd { structure: Structure::TriuToeplitz },
+        Method::Singd { structure: Structure::Diagonal },
+        Method::AdamW,
+        Method::Sgd,
+    ];
+
+    for (pname, arch) in &profiles {
+        let cfg = singd::config::JobConfig {
+            arch: arch.clone(),
+            dataset: "cifar100".into(),
+            classes: 100,
+            n_train: 1,
+            n_test: 1,
+            method: Method::Sgd,
+            hyper: default_hyper(&Method::Sgd, false),
+            schedule: singd::train::Schedule::Constant,
+            epochs: 1,
+            batch_size: 1,
+            seed: 0,
+            label: "mem".into(),
+        };
+        let model = build_model(&cfg, shape, 100, &mut rng);
+        let shapes = model.shapes();
+        let n_params: usize = shapes.iter().map(|&(o, i)| o * i).sum();
+        println!("\n-- {pname}: {} layers, {} params --", shapes.len(), n_params);
+        println!("{:<22} {:>14} {:>14}", "method", "fp32 bytes", "bf16 bytes");
+        let mut table = Vec::new();
+        for method in &methods {
+            let mut hp32 = default_hyper(method, false);
+            hp32.policy = Policy::fp32();
+            let mut hp16 = hp32.clone();
+            hp16.policy = Policy::bf16_mixed();
+            let b32 = method.build(&shapes, &hp32).state_bytes();
+            let b16 = method.build(&shapes, &hp16).state_bytes();
+            println!("{:<22} {:>14} {:>14}", method.name(), b32, b16);
+            h.record(&format!("{pname}/{}/fp32", method.name()), b32 as f64, "bytes");
+            h.record(&format!("{pname}/{}/bf16", method.name()), b16 as f64, "bytes");
+            table.push((method.name(), b32, b16));
+        }
+        let get = |n: &str| table.iter().find(|(name, _, _)| name == n).unwrap().1;
+        // Paper orderings (Table 3 / Fig. 1R).
+        assert!(get("singd:diag") < get("adamw"), "{pname}: diag < adamw");
+        assert!(get("singd:toeplitz") < get("adamw"), "{pname}: toeplitz < adamw");
+        assert!(get("adamw") < get("ingd"), "{pname}: adamw < ingd(dense)");
+        assert!(get("ikfac") < get("ingd"), "{pname}: ikfac (no Riemannian momentum) < ingd");
+        assert!(get("singd:block:32") < get("ingd"), "{pname}: block < dense");
+        // Fig. 1R dashed line: SINGD-Diag bf16 ≤ AdamW bf16.
+        let diag16 = table.iter().find(|(n, _, _)| n == "singd:diag").unwrap().2;
+        let adamw16 = table.iter().find(|(n, _, _)| n == "adamw").unwrap().2;
+        assert!(diag16 <= adamw16, "{pname}: diag-bf16 ≤ adamw-bf16");
+    }
+    println!("\nAll Table-3 orderings hold: structured SINGD ≤ AdamW < INGD/KFAC.");
+    h.finish();
+}

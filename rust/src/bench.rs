@@ -1,0 +1,151 @@
+//! A small statistics-reporting benchmark harness (criterion is not
+//! available offline; every `[[bench]]` target uses this).
+//!
+//! Usage inside a `harness = false` bench:
+//! ```no_run
+//! let mut h = singd::bench::Harness::new("tab2_iteration_cost");
+//! h.bench("dense d=256", || { /* work */ });
+//! h.finish();
+//! ```
+
+use std::time::Instant;
+
+/// Timing statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl Stats {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Collects and prints benchmark results; also dumps a CSV into `results/`.
+pub struct Harness {
+    label: String,
+    results: Vec<Stats>,
+    /// Target wall time per case (adaptive iteration count).
+    pub target_secs: f64,
+    /// Hard cap on iterations.
+    pub max_iters: usize,
+}
+
+impl Harness {
+    pub fn new(label: &str) -> Self {
+        println!("== bench: {label} ==");
+        Harness { label: label.to_string(), results: Vec::new(), target_secs: 0.5, max_iters: 1000 }
+    }
+
+    /// Time `f`, adaptively choosing the iteration count.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> Stats {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_secs / once) as usize).clamp(1, self.max_iters);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let median = samples[samples.len() / 2];
+        let stats = Stats {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            median_ns: median,
+            min_ns: samples[0],
+            max_ns: *samples.last().unwrap(),
+        };
+        println!(
+            "{:<44} {:>12} median {:>12} mean ({} iters)",
+            name,
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.mean_ns),
+            iters
+        );
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// Record an externally-measured value (e.g. bytes) as a result row.
+    pub fn record(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{name:<44} {value:>14.2} {unit}");
+        self.results.push(Stats {
+            name: format!("{name} [{unit}]"),
+            iters: 1,
+            mean_ns: value,
+            median_ns: value,
+            min_ns: value,
+            max_ns: value,
+        });
+    }
+
+    /// Print a summary and write `results/<label>.csv`.
+    pub fn finish(self) -> Vec<Stats> {
+        let mut csv = String::from("name,iters,median_ns,mean_ns,min_ns,max_ns\n");
+        for s in &self.results {
+            csv.push_str(&format!(
+                "{},{},{:.1},{:.1},{:.1},{:.1}\n",
+                s.name.replace(',', ";"),
+                s.iters,
+                s.median_ns,
+                s.mean_ns,
+                s.min_ns,
+                s.max_ns
+            ));
+        }
+        if let Ok(path) = crate::train::write_csv(&format!("{}.csv", self.label), &csv) {
+            println!("-- wrote {}", path.display());
+        }
+        self.results
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_measures_and_orders() {
+        let mut h = Harness::new("selftest");
+        h.target_secs = 0.02;
+        let fast = h.bench("fast", || {
+            black_box((0..100).sum::<usize>());
+        });
+        let slow = h.bench("slow", || {
+            black_box((0..100_000).map(|i| i * i).sum::<usize>());
+        });
+        assert!(slow.median_ns > fast.median_ns);
+        let results = h.finish();
+        assert_eq!(results.len(), 2);
+    }
+}

@@ -1,0 +1,282 @@
+//! Hand-rolled CLI (clap is unavailable offline).
+//!
+//! Subcommands:
+//! - `train --config <file.toml> [--out curves.csv]` — run one training job.
+//! - `sweep --config <file.toml> --trials N` — Table-4 random search.
+//! - `gcn --method <m> [--steps N]` — the Fig. 7 GCN job.
+//! - `inspect --structure <s> --dim <d>` — print a structure's pattern,
+//!   `K Kᵀ`, and memory (Figs. 5/8 in text form).
+//! - `bench-help` — how to regenerate every paper table/figure.
+
+use crate::config::JobConfig;
+use crate::exp;
+use crate::optim::Method;
+use crate::structured::{SMat, Structure};
+use std::collections::BTreeMap;
+
+/// Parsed `--key value` flags + positional args.
+pub struct Args {
+    pub cmd: String,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        if argv.is_empty() {
+            return Err("missing subcommand".into());
+        }
+        let cmd = argv[0].clone();
+        let mut flags = BTreeMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                return Err(format!("unexpected positional argument '{a}'"));
+            }
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+pub const USAGE: &str = "\
+singd — Structured Inverse-Free Natural Gradient Descent (paper reproduction)
+
+USAGE:
+  singd train   --config <file.toml> [--out <curves.csv>]
+  singd sweep   --config <file.toml> [--trials <N>] [--seed <S>]
+  singd gcn     [--method <sgd|adamw|kfac|ingd|singd:diag|...>] [--steps <N>]
+  singd inspect [--structure <dense|diag|block:k|tril|rankk:k|hier:k|toeplitz>] [--dim <d>]
+  singd help
+
+Regenerating the paper's tables/figures (see DESIGN.md §5):
+  cargo bench --bench fig1_vgg_cifar       # Fig. 1 left/center (+ stability)
+  cargo bench --bench fig6_transformers    # Fig. 6
+  cargo bench --bench fig7_cnn_gnn         # Fig. 7
+  cargo bench --bench tab2_iteration_cost  # Table 2
+  cargo bench --bench tab3_memory          # Table 3 + Fig. 1 right
+  cargo bench --bench hotpath              # §Perf microbenchmarks
+  cargo run --release --example train_transformer_e2e   # end-to-end PJRT run
+";
+
+/// Run the CLI; returns a process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return 2;
+        }
+    };
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            0
+        }
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "gcn" => cmd_gcn(&args),
+        "inspect" => cmd_inspect(&args),
+        other => {
+            eprintln!("unknown subcommand '{other}'\n\n{USAGE}");
+            2
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<JobConfig, String> {
+    let path = args.get("config").ok_or("missing --config".to_string())?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    JobConfig::from_str_toml(&text)
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "training {} / {} with {} ({}), {} epochs",
+        cfg.label,
+        cfg.dataset,
+        cfg.method.name(),
+        cfg.hyper.policy.name(),
+        cfg.epochs
+    );
+    let res = exp::run_job(&cfg);
+    for r in &res.rows {
+        println!(
+            "epoch {:>3} step {:>6}  train_loss {:.4}  test_err {:.4}{}",
+            r.epoch,
+            r.step,
+            r.train_loss,
+            r.test_err,
+            if r.diverged { "  DIVERGED" } else { "" }
+        );
+    }
+    println!(
+        "final_err {:.4}  best {:.4}  optimizer_state {} bytes  wall {:.1}s",
+        res.final_test_err, res.best_test_err, res.optimizer_bytes, res.wall_secs
+    );
+    if let Some(out) = args.get("out") {
+        let csv = res.to_csv(&cfg.label);
+        if let Err(e) = std::fs::write(out, csv) {
+            eprintln!("write {out}: {e}");
+            return 1;
+        }
+        println!("wrote {out}");
+    }
+    if res.diverged {
+        1
+    } else {
+        0
+    }
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let cfg = match load_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let trials = args.usize_or("trials", 10);
+    let seed = args.usize_or("seed", 0) as u64;
+    let results = crate::sweep::random_search(&cfg, &crate::sweep::Space::default(), trials, seed);
+    let best = &results[0];
+    println!(
+        "best: err {:.4} @ lr={:.3e} wd={:.3e} λ={:.3e} β₁={:.3e} α₁={:.1}",
+        best.final_err,
+        best.hyper.lr,
+        best.hyper.weight_decay,
+        best.hyper.damping,
+        best.hyper.precond_lr,
+        best.hyper.riem_momentum
+    );
+    0
+}
+
+fn cmd_gcn(args: &Args) -> i32 {
+    let method = Method::parse(args.get("method").unwrap_or("singd:diag"));
+    let Some(method) = method else {
+        eprintln!("unknown --method");
+        return 2;
+    };
+    let steps = args.usize_or("steps", 200);
+    let hp = exp::default_hyper(&method, false);
+    let (curve, diverged) = exp::run_gcn(&method, &hp, steps, 7);
+    for (t, loss, err) in &curve {
+        println!("step {t:>5}  test_loss {loss:.4}  test_err {err:.4}");
+    }
+    if diverged {
+        println!("DIVERGED");
+        1
+    } else {
+        0
+    }
+}
+
+fn cmd_inspect(args: &Args) -> i32 {
+    let s = Structure::parse(args.get("structure").unwrap_or("hier:6")).unwrap_or(Structure::Dense);
+    let d = args.usize_or("dim", 12);
+    print_structure(s, d);
+    0
+}
+
+/// Textual rendering of a structure's pattern, its self-outer product, and
+/// memory — Figs. 5/8 in terminal form (shared with the gallery example).
+pub fn print_structure(s: Structure, d: usize) {
+    let mut rng = crate::proptest::Pcg::new(7);
+    let m = rng.normal_mat(d, d, 0.5).symmetrize();
+    let mut k = crate::structured::proj::proj(s, &m);
+    k.axpy(1.0, &SMat::identity(s, d));
+    let dense = k.to_dense();
+    let kkt = crate::tensor::matmul_a_bt(&dense, &dense);
+    let inv = crate::linalg::lu_inverse(&kkt);
+    let pat = |m: &crate::tensor::Mat| -> String {
+        let mut out = String::new();
+        for r in 0..d {
+            out.push_str("    ");
+            for c in 0..d {
+                out.push(if m.at(r, c).abs() > 1e-5 { '■' } else { '·' });
+                out.push(' ');
+            }
+            out.push('\n');
+        }
+        out
+    };
+    println!("structure {} (d = {d})", s.name());
+    println!("  K pattern ({} stored params, {} bytes fp32):", k.nnz(), k.nnz() * 4);
+    println!("{}", pat(&dense));
+    println!("  K Kᵀ (approx. inverse Hessian factor) pattern:");
+    println!("{}", pat(&kkt));
+    if let Some(inv) = inv {
+        println!("  (K Kᵀ)⁻¹ (approx. Hessian factor) pattern:");
+        println!("{}", pat(&inv));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags() {
+        let a = Args::parse(&sv(&["train", "--config", "x.toml", "--out", "y.csv"])).unwrap();
+        assert_eq!(a.cmd, "train");
+        assert_eq!(a.get("config"), Some("x.toml"));
+        assert_eq!(a.get("out"), Some("y.csv"));
+    }
+
+    #[test]
+    fn parse_boolean_flag() {
+        let a = Args::parse(&sv(&["gcn", "--verbose"])).unwrap();
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn missing_subcommand_errors() {
+        assert!(Args::parse(&[]).is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_exits_2() {
+        assert_eq!(run(&sv(&["frobnicate"])), 2);
+    }
+
+    #[test]
+    fn help_exits_0() {
+        assert_eq!(run(&sv(&["help"])), 0);
+    }
+
+    #[test]
+    fn inspect_runs_for_every_structure() {
+        for s in ["dense", "diag", "block:3", "tril", "rankk:2", "hier:4", "toeplitz"] {
+            let code = run(&sv(&["inspect", "--structure", s, "--dim", "8"]));
+            assert_eq!(code, 0, "{s}");
+        }
+    }
+}

@@ -1,0 +1,360 @@
+//! Typed experiment configuration + a minimal TOML-subset parser.
+//!
+//! No serde offline, so we parse the subset of TOML the configs need:
+//! `[section]` headers, `key = value` with string / integer / float /
+//! boolean values, `#` comments. The typed layer ([`JobConfig`]) validates
+//! against the model zoo / optimizer registry and produces everything the
+//! trainer needs.
+//!
+//! Example (see `configs/` in the repo root):
+//!
+//! ```toml
+//! [model]
+//! arch = "vgg"        # mlp | vgg | convmixer | vit | gcn
+//! width = 8
+//!
+//! [data]
+//! dataset = "cifar100" # cifar100 | imagewoof | cora
+//! classes = 20
+//! n_train = 2000
+//!
+//! [optim]
+//! method = "singd:diag"
+//! lr = 0.1
+//! precision = "bf16"
+//!
+//! [train]
+//! epochs = 20
+//! batch_size = 64
+//! schedule = "cosine:600"
+//! seed = 7
+//! ```
+
+use crate::numerics::Policy;
+use crate::optim::{Hyper, Method};
+use crate::train::Schedule;
+use std::collections::BTreeMap;
+
+/// A parsed TOML-subset document: `section.key → value`.
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    values: BTreeMap<String, Value>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<f32> {
+        match self {
+            Value::Float(f) => Some(*f as f32),
+            Value::Int(i) => Some(*i as f32),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Error with line context.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Toml {
+    /// Parse a TOML-subset document.
+    pub fn parse(text: &str) -> Result<Toml, ParseError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or(ParseError { line: ln + 1, msg: "unterminated section".into() })?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(ParseError { line: ln + 1, msg: "empty section name".into() });
+                }
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or(ParseError { line: ln + 1, msg: "expected key = value".into() })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ParseError { line: ln + 1, msg: "empty key".into() });
+            }
+            let value = parse_value(val.trim())
+                .ok_or(ParseError { line: ln + 1, msg: format!("bad value: {}", val.trim()) })?;
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            values.insert(full, value);
+        }
+        Ok(Toml { values })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.as_f32()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(stripped) = s.strip_prefix('"') {
+        return stripped.strip_suffix('"').map(|inner| Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+/// Model architecture selector.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Arch {
+    Mlp { hidden: Vec<usize> },
+    Vgg { width: usize },
+    ConvMixer { patch: usize, width: usize, depth: usize },
+    Vit { dim: usize, depth: usize, patch: usize },
+    Gcn { hidden: usize },
+}
+
+/// Fully-resolved training job.
+#[derive(Clone, Debug)]
+pub struct JobConfig {
+    pub arch: Arch,
+    pub dataset: String,
+    pub classes: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub method: Method,
+    pub hyper: Hyper,
+    pub schedule: Schedule,
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub seed: u64,
+    pub label: String,
+}
+
+impl JobConfig {
+    /// Build from a parsed TOML document, validating every field.
+    pub fn from_toml(t: &Toml) -> Result<JobConfig, String> {
+        let arch = match t.str_or("model.arch", "mlp") {
+            "mlp" => Arch::Mlp {
+                hidden: vec![t.usize_or("model.width", 64), t.usize_or("model.width", 64) / 2],
+            },
+            "vgg" => Arch::Vgg { width: t.usize_or("model.width", 8) },
+            "convmixer" => Arch::ConvMixer {
+                patch: t.usize_or("model.patch", 4),
+                width: t.usize_or("model.width", 16),
+                depth: t.usize_or("model.depth", 3),
+            },
+            "vit" => Arch::Vit {
+                dim: t.usize_or("model.width", 24),
+                depth: t.usize_or("model.depth", 2),
+                patch: t.usize_or("model.patch", 4),
+            },
+            "gcn" => Arch::Gcn { hidden: t.usize_or("model.width", 16) },
+            other => return Err(format!("unknown model.arch '{other}'")),
+        };
+        let method = Method::parse(t.str_or("optim.method", "sgd"))
+            .ok_or_else(|| format!("unknown optim.method '{}'", t.str_or("optim.method", "")))?;
+        let policy = Policy::parse(t.str_or("optim.precision", "fp32"))
+            .ok_or_else(|| format!("unknown optim.precision '{}'", t.str_or("optim.precision", "")))?;
+        let hyper = Hyper {
+            lr: t.f32_or("optim.lr", 0.05),
+            momentum: t.f32_or("optim.momentum", 0.9),
+            weight_decay: t.f32_or("optim.weight_decay", 1e-4),
+            damping: t.f32_or("optim.damping", 1e-3),
+            precond_lr: t.f32_or("optim.precond_lr", 0.05),
+            riem_momentum: t.f32_or("optim.riem_momentum", 0.9),
+            t_update: t.usize_or("optim.t_update", 5),
+            policy,
+            eps: t.f32_or("optim.eps", 1e-8),
+            precond_clip: t.f32_or("optim.precond_clip", 1.0),
+            update_clip: t.f32_or("optim.update_clip", 0.1),
+        };
+        let schedule = Schedule::parse(t.str_or("train.schedule", "constant"))
+            .ok_or_else(|| format!("unknown train.schedule '{}'", t.str_or("train.schedule", "")))?;
+        Ok(JobConfig {
+            arch,
+            dataset: t.str_or("data.dataset", "cifar100").to_string(),
+            classes: t.usize_or("data.classes", 20),
+            n_train: t.usize_or("data.n_train", 1000),
+            n_test: t.usize_or("data.n_test", 200),
+            method,
+            hyper,
+            schedule,
+            epochs: t.usize_or("train.epochs", 10),
+            batch_size: t.usize_or("train.batch_size", 32),
+            seed: t.get("train.seed").and_then(|v| v.as_u64()).unwrap_or(0),
+            label: t.str_or("label", "job").to_string(),
+        })
+    }
+
+    pub fn from_str_toml(text: &str) -> Result<JobConfig, String> {
+        let t = Toml::parse(text).map_err(|e| e.to_string())?;
+        Self::from_toml(&t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EXAMPLE: &str = r#"
+# experiment config
+label = "fig1-vgg"
+
+[model]
+arch = "vgg"
+width = 8
+
+[data]
+dataset = "cifar100"
+classes = 20
+
+[optim]
+method = "singd:diag"
+lr = 0.1
+precision = "bf16"
+damping = 0.001
+
+[train]
+epochs = 20
+batch_size = 64
+schedule = "cosine:600"
+seed = 7
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = Toml::parse(EXAMPLE).unwrap();
+        assert_eq!(t.get("model.arch"), Some(&Value::Str("vgg".into())));
+        assert_eq!(t.get("model.width"), Some(&Value::Int(8)));
+        assert_eq!(t.get("optim.damping"), Some(&Value::Float(0.001)));
+        assert_eq!(t.get("label"), Some(&Value::Str("fig1-vgg".into())));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let t = Toml::parse("# only a comment\n\nx = 1 # trailing\n").unwrap();
+        assert_eq!(t.get("x"), Some(&Value::Int(1)));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let t = Toml::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(t.get("s"), Some(&Value::Str("a#b".into())));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Toml::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn job_config_resolves() {
+        let cfg = JobConfig::from_str_toml(EXAMPLE).unwrap();
+        assert_eq!(cfg.arch, Arch::Vgg { width: 8 });
+        assert_eq!(cfg.method.name(), "singd:diag");
+        assert_eq!(cfg.hyper.policy, Policy::bf16_mixed());
+        assert_eq!(cfg.epochs, 20);
+        assert!(matches!(cfg.schedule, Schedule::Cosine { total: 600 }));
+        assert_eq!(cfg.label, "fig1-vgg");
+    }
+
+    #[test]
+    fn job_config_rejects_unknown_method() {
+        let bad = EXAMPLE.replace("singd:diag", "frobnicate");
+        assert!(JobConfig::from_str_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let cfg = JobConfig::from_str_toml("[model]\narch = \"mlp\"\n").unwrap();
+        assert_eq!(cfg.batch_size, 32);
+        assert_eq!(cfg.method.name(), "sgd");
+    }
+}

@@ -1,0 +1,318 @@
+//! Synthetic datasets standing in for CIFAR-100 / ImageWoof-10 / Cora and
+//! a tiny-corpus token stream (DESIGN.md §3 documents each substitution).
+//!
+//! All generators are seeded through [`Pcg`] so every experiment is
+//! bit-reproducible from its config. Datasets are *learnable but not
+//! trivial*: class-prototype structure with controllable signal-to-noise
+//! plus nuisance transforms, so optimizer orderings (the quantity the
+//! paper's figures compare) are observable at CPU scale.
+
+use crate::model::cnn::ImgShape;
+use crate::model::gcn::Graph;
+use crate::model::Batch;
+use crate::proptest::Pcg;
+use crate::tensor::Mat;
+
+/// A fixed train/test image dataset in flattened `C×H×W` layout.
+#[derive(Clone)]
+pub struct Dataset {
+    pub shape: ImgShape,
+    pub classes: usize,
+    pub train_x: Mat,
+    pub train_y: Vec<usize>,
+    pub test_x: Mat,
+    pub test_y: Vec<usize>,
+}
+
+impl Dataset {
+    /// Iterate shuffled train minibatches for one epoch.
+    pub fn epoch_batches<'a>(&'a self, rng: &mut Pcg, batch: usize) -> Vec<Batch> {
+        let n = self.train_y.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        order
+            .chunks(batch)
+            .filter(|c| c.len() == batch)
+            .map(|chunk| Batch {
+                x: Mat::from_fn(chunk.len(), self.train_x.cols(), |r, c| {
+                    self.train_x.at(chunk[r], c)
+                }),
+                y: chunk.iter().map(|&i| self.train_y[i]).collect(),
+            })
+            .collect()
+    }
+
+    /// The whole test set as one batch.
+    pub fn test_batch(&self) -> Batch {
+        Batch { x: self.test_x.clone(), y: self.test_y.clone() }
+    }
+}
+
+/// Class-prototype image generator.
+///
+/// Each class has a random smooth prototype image; a sample is
+/// `signal·shift(prototype) + noise` with a random ±2px cyclic shift (the
+/// nuisance transform that makes convs/attention genuinely useful).
+pub fn prototype_images(
+    rng: &mut Pcg,
+    shape: ImgShape,
+    classes: usize,
+    n_train: usize,
+    n_test: usize,
+    signal: f32,
+) -> Dataset {
+    // Smooth prototypes: low-frequency cosine mixtures.
+    let protos: Vec<Mat> = (0..classes)
+        .map(|_| {
+            let mut img = Mat::zeros(1, shape.len());
+            for _ in 0..6 {
+                let (fy, fx) = (1.0 + rng.uniform() * 3.0, 1.0 + rng.uniform() * 3.0);
+                let (py, px) = (rng.uniform() * 6.28, rng.uniform() * 6.28);
+                let ch = rng.below(shape.c);
+                let amp = rng.normal();
+                for y in 0..shape.h {
+                    for x in 0..shape.w {
+                        *img.at_mut(0, (ch * shape.h + y) * shape.w + x) += amp
+                            * ((fy * y as f32 / shape.h as f32 * 6.28 + py).cos()
+                                * (fx * x as f32 / shape.w as f32 * 6.28 + px).cos());
+                    }
+                }
+            }
+            img
+        })
+        .collect();
+
+    let mut sample = |rng: &mut Pcg, y: usize| -> Vec<f32> {
+        let (dy, dx) = (rng.below(5) as isize - 2, rng.below(5) as isize - 2);
+        let mut v = vec![0.0f32; shape.len()];
+        for c in 0..shape.c {
+            for yy in 0..shape.h {
+                for xx in 0..shape.w {
+                    let sy = (yy as isize + dy).rem_euclid(shape.h as isize) as usize;
+                    let sx = (xx as isize + dx).rem_euclid(shape.w as isize) as usize;
+                    v[(c * shape.h + yy) * shape.w + xx] =
+                        signal * protos[y].at(0, (c * shape.h + sy) * shape.w + sx) + rng.normal();
+                }
+            }
+        }
+        v
+    };
+
+    let gen = |rng: &mut Pcg, n: usize, sample: &mut dyn FnMut(&mut Pcg, usize) -> Vec<f32>| {
+        let y: Vec<usize> = (0..n).map(|i| i % classes).collect();
+        let mut x = Mat::zeros(n, shape.len());
+        for (i, &yi) in y.iter().enumerate() {
+            let v = sample(rng, yi);
+            x.row_mut(i).copy_from_slice(&v);
+        }
+        (x, y)
+    };
+
+    let (train_x, train_y) = gen(rng, n_train, &mut sample);
+    let (test_x, test_y) = gen(rng, n_test, &mut sample);
+    Dataset { shape, classes, train_x, train_y, test_x, test_y }
+}
+
+/// Synthetic CIFAR-100 stand-in: 3×16×16, many classes, moderate SNR.
+pub fn cifar100(rng: &mut Pcg, classes: usize, n_train: usize, n_test: usize) -> Dataset {
+    prototype_images(rng, ImgShape { c: 3, h: 16, w: 16 }, classes, n_train, n_test, 1.2)
+}
+
+/// Synthetic ImageWoof-10 stand-in: 10 fine-grained (low-SNR) classes.
+pub fn imagewoof(rng: &mut Pcg, n_train: usize, n_test: usize) -> Dataset {
+    prototype_images(rng, ImgShape { c: 3, h: 16, w: 16 }, 10, n_train, n_test, 0.7)
+}
+
+/// Synthetic Cora stand-in: a stochastic-block-model citation graph with
+/// class-correlated bag-of-words features, symmetric-normalized adjacency
+/// with self-loops, and train/test node splits.
+pub fn cora(rng: &mut Pcg, n: usize, features: usize, classes: usize, homophily: f32) -> Graph {
+    let y: Vec<usize> = (0..n).map(|i| i % classes).collect();
+    // SBM edges: intra-class probability `homophily×` the inter-class one.
+    let p_inter = 2.0 / n as f32;
+    let p_intra = (p_inter * homophily).min(0.9);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let p = if y[i] == y[j] { p_intra } else { p_inter };
+            if rng.uniform() < p {
+                a.set(i, j, 1.0);
+                a.set(j, i, 1.0);
+            }
+        }
+    }
+    // Â = D^{-1/2} (A + I) D^{-1/2}.
+    a.add_diag(1.0);
+    let deg: Vec<f32> = (0..n).map(|i| a.row(i).iter().sum::<f32>()).collect();
+    let adj = Mat::from_fn(n, n, |i, j| a.at(i, j) / (deg[i] * deg[j]).sqrt());
+
+    // Features: class topic vector + noise (bag-of-words-ish, nonneg).
+    let topics: Vec<Vec<f32>> =
+        (0..classes).map(|_| (0..features).map(|_| rng.uniform() * 2.0).collect()).collect();
+    let x = Mat::from_fn(n, features, |i, f| {
+        (topics[y[i]][f] + 0.8 * rng.normal()).max(0.0)
+    });
+
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let n_train = (n as f32 * 0.3) as usize;
+    Graph {
+        adj,
+        x,
+        y,
+        train_mask: order[..n_train].to_vec(),
+        test_mask: order[n_train..].to_vec(),
+    }
+}
+
+/// Tiny-corpus token stream for the LM example: a second-order Markov
+/// chain over `vocab` tokens (deterministic-ish transitions + noise), so a
+/// causal transformer can reach low perplexity while an order-0 model
+/// cannot.
+pub struct TokenStream {
+    pub vocab: usize,
+    tokens: Vec<usize>,
+}
+
+impl TokenStream {
+    pub fn markov(rng: &mut Pcg, vocab: usize, len: usize, noise: f32) -> Self {
+        // Transition table: (prev2, prev1) → preferred next token.
+        let table: Vec<usize> = (0..vocab * vocab).map(|_| rng.below(vocab)).collect();
+        let mut tokens = vec![rng.below(vocab), rng.below(vocab)];
+        for _ in 2..len {
+            let (p2, p1) = (tokens[tokens.len() - 2], tokens[tokens.len() - 1]);
+            let next = if rng.uniform() < noise {
+                rng.below(vocab)
+            } else {
+                table[p2 * vocab + p1]
+            };
+            tokens.push(next);
+        }
+        TokenStream { vocab, tokens }
+    }
+
+    /// Sample `m` windows of length `seq`; `y[b]` is the continuation
+    /// token after the window (used as the final-position LM target).
+    pub fn batch(&self, rng: &mut Pcg, m: usize, seq: usize) -> Batch {
+        let mut x = Mat::zeros(m, seq);
+        let mut y = Vec::with_capacity(m);
+        for b in 0..m {
+            let start = rng.below(self.tokens.len() - seq - 1);
+            for t in 0..seq {
+                *x.at_mut(b, t) = self.tokens[start + t] as f32;
+            }
+            y.push(self.tokens[start + seq]);
+        }
+        Batch { x, y }
+    }
+
+    /// Sample `m` (tokens, next-tokens) window pairs of length `seq` for
+    /// per-position LM training (the e2e PJRT driver's input layout).
+    pub fn lm_batch(&self, rng: &mut Pcg, m: usize, seq: usize) -> (Mat, Mat) {
+        let mut x = Mat::zeros(m, seq);
+        let mut t = Mat::zeros(m, seq);
+        for b in 0..m {
+            let start = rng.below(self.tokens.len() - seq - 1);
+            for i in 0..seq {
+                *x.at_mut(b, i) = self.tokens[start + i] as f32;
+                *t.at_mut(b, i) = self.tokens[start + i + 1] as f32;
+            }
+        }
+        (x, t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_shapes_and_balance() {
+        let mut rng = Pcg::new(61);
+        let ds = cifar100(&mut rng, 20, 200, 60);
+        assert_eq!(ds.train_x.shape(), (200, 3 * 16 * 16));
+        assert_eq!(ds.test_y.len(), 60);
+        // Balanced classes.
+        let count0 = ds.train_y.iter().filter(|&&y| y == 0).count();
+        assert_eq!(count0, 10);
+    }
+
+    #[test]
+    fn epoch_batches_cover_and_shuffle() {
+        let mut rng = Pcg::new(62);
+        let ds = cifar100(&mut rng, 4, 64, 16);
+        let b1 = ds.epoch_batches(&mut rng, 16);
+        assert_eq!(b1.len(), 4);
+        let b2 = ds.epoch_batches(&mut rng, 16);
+        // Different shuffles with overwhelming probability.
+        assert!(b1[0].y != b2[0].y || b1[0].x != b2[0].x);
+    }
+
+    #[test]
+    fn prototype_signal_is_learnable() {
+        // Same-class samples must correlate more than cross-class ones.
+        let mut rng = Pcg::new(63);
+        let ds = prototype_images(&mut rng, ImgShape { c: 1, h: 8, w: 8 }, 2, 40, 2, 2.0);
+        let dot = |a: usize, b: usize| -> f32 {
+            ds.train_x.row(a).iter().zip(ds.train_x.row(b)).map(|(x, y)| x * y).sum()
+        };
+        // rows alternate classes (i % classes)
+        let same: f32 = (0..10).map(|i| dot(2 * i, 2 * i + 2)).sum::<f32>() / 10.0;
+        let cross: f32 = (0..10).map(|i| dot(2 * i, 2 * i + 1)).sum::<f32>() / 10.0;
+        assert!(same > cross, "same {same} cross {cross}");
+    }
+
+    #[test]
+    fn cora_adjacency_normalized_symmetric() {
+        let mut rng = Pcg::new(64);
+        let g = cora(&mut rng, 50, 12, 5, 5.0);
+        for i in 0..50 {
+            for j in 0..50 {
+                assert!((g.adj.at(i, j) - g.adj.at(j, i)).abs() < 1e-6);
+            }
+            assert!(g.adj.at(i, i) > 0.0, "self loop");
+        }
+        assert_eq!(g.train_mask.len() + g.test_mask.len(), 50);
+    }
+
+    #[test]
+    fn markov_stream_is_predictable() {
+        let mut rng = Pcg::new(65);
+        let ts = TokenStream::markov(&mut rng, 8, 5000, 0.1);
+        // Empirical check: the mode of next|{prev2,prev1} predicts ≈90%.
+        let mut counts = vec![[0usize; 8]; 64];
+        for w in ts.tokens.windows(3) {
+            counts[w[0] * 8 + w[1]][w[2]] += 1;
+        }
+        let (mut hit, mut tot) = (0usize, 0usize);
+        for w in ts.tokens.windows(3) {
+            let c = &counts[w[0] * 8 + w[1]];
+            let mode = (0..8).max_by_key(|&k| c[k]).unwrap();
+            hit += (mode == w[2]) as usize;
+            tot += 1;
+        }
+        assert!(hit as f32 / tot as f32 > 0.8, "predictability {}", hit as f32 / tot as f32);
+    }
+
+    #[test]
+    fn token_batch_windows_are_consistent() {
+        let mut rng = Pcg::new(66);
+        let ts = TokenStream::markov(&mut rng, 6, 500, 0.2);
+        let b = ts.batch(&mut rng, 4, 10);
+        assert_eq!(b.x.shape(), (4, 10));
+        for r in 0..4 {
+            for t in 0..10 {
+                let v = b.x.at(r, t);
+                assert!(v >= 0.0 && v < 6.0 && v.fract() == 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §5 maps each
+//! experiment id to the bench target that regenerates it).
+//!
+//! The drivers glue [`JobConfig`] → dataset → model → [`train_image_model`]
+//! and provide the comparison loops (method × precision grids) that the
+//! `rust/benches/fig*` targets print.
+
+use crate::config::{Arch, JobConfig};
+use crate::data::{self, Dataset};
+use crate::model::cnn::{Cnn, ImgShape};
+use crate::model::transformer::{Embed, Transformer, TransformerCfg};
+use crate::model::{Mlp, Model};
+use crate::optim::{Hyper, Method};
+use crate::proptest::Pcg;
+use crate::train::{train_image_model, RunResult, Schedule, TrainCfg};
+
+/// Instantiate the dataset a job asks for.
+pub fn build_dataset(cfg: &JobConfig, rng: &mut Pcg) -> Dataset {
+    match cfg.dataset.as_str() {
+        "imagewoof" => data::imagewoof(rng, cfg.n_train, cfg.n_test),
+        // default: synthetic CIFAR-100 stand-in
+        _ => data::cifar100(rng, cfg.classes, cfg.n_train, cfg.n_test),
+    }
+}
+
+/// Instantiate the model a job asks for (image models only; GCN has its own
+/// driver below).
+pub fn build_model(cfg: &JobConfig, shape: ImgShape, classes: usize, rng: &mut Pcg) -> Box<dyn Model> {
+    match &cfg.arch {
+        Arch::Mlp { hidden } => {
+            let mut dims = vec![shape.len()];
+            dims.extend_from_slice(hidden);
+            dims.push(classes);
+            Box::new(Mlp::new(rng, &dims))
+        }
+        Arch::Vgg { width } => Box::new(Cnn::vgg(rng, shape, *width, classes)),
+        Arch::ConvMixer { patch, width, depth } => {
+            Box::new(Cnn::convmixer(rng, shape, *patch, *width, *depth, classes))
+        }
+        Arch::Vit { dim, depth, patch } => Box::new(Transformer::new(
+            rng,
+            TransformerCfg {
+                embed: Embed::Patch { img: shape, patch: *patch },
+                dim: *dim,
+                depth: *depth,
+                mlp_ratio: 2,
+                out: classes,
+                causal_lm: false,
+            },
+        )),
+        Arch::Gcn { .. } => panic!("GCN uses run_gcn, not build_model"),
+    }
+}
+
+/// Run one image-classification job end to end.
+pub fn run_job(cfg: &JobConfig) -> RunResult {
+    let mut rng = Pcg::with_stream(cfg.seed, 0xda7a);
+    let ds = build_dataset(cfg, &mut rng);
+    let mut model = build_model(cfg, ds.shape, ds.classes, &mut rng);
+    let tc = TrainCfg {
+        method: cfg.method.clone(),
+        hyper: cfg.hyper.clone(),
+        schedule: cfg.schedule.clone(),
+        epochs: cfg.epochs,
+        batch_size: cfg.batch_size,
+        seed: cfg.seed,
+        eval_every: 0,
+        stop_on_divergence: true,
+    };
+    train_image_model(model.as_mut(), &ds, &tc)
+}
+
+/// A (method, precision) comparison grid over a shared dataset/model —
+/// the shape of Figs. 1, 6 and 7. Returns `(label, RunResult)` per cell.
+pub fn run_grid(
+    base: &JobConfig,
+    methods: &[(Method, Hyper)],
+    precisions: &[&str],
+) -> Vec<(String, RunResult)> {
+    let mut out = Vec::new();
+    for (method, hyper) in methods {
+        for prec in precisions {
+            let mut cfg = base.clone();
+            cfg.method = method.clone();
+            cfg.hyper = hyper.clone();
+            cfg.hyper.policy = crate::numerics::Policy::parse(prec).expect("precision");
+            let label = format!("{}-{}", method.name(), prec);
+            let res = run_job(&cfg);
+            println!(
+                "{label:<28} final_err={:.3} best={:.3} diverged={} bytes={} wall={:.1}s {}",
+                res.final_test_err,
+                res.best_test_err,
+                res.diverged,
+                res.optimizer_bytes,
+                res.wall_secs,
+                res.telemetry
+            );
+            out.push((label, res));
+        }
+    }
+    out
+}
+
+/// GCN node-classification driver (Fig. 7, right).
+pub fn run_gcn(
+    method: &Method,
+    hyper: &Hyper,
+    steps: usize,
+    seed: u64,
+) -> (Vec<(usize, f32, f32)>, bool) {
+    use crate::model::gcn::Gcn;
+    let mut rng = Pcg::with_stream(seed, 0xc04a);
+    let g = data::cora(&mut rng, 300, 32, 7, 8.0);
+    let mut net = Gcn::new(&mut rng, g.x.cols(), 16, 7);
+    let mut opt = method.build(&net.shapes(), hyper);
+    let mut curve = Vec::new();
+    let mut diverged = false;
+    for t in 0..steps {
+        let res = net.forward_backward_graph(&g, &g.train_mask);
+        opt.step(t, net.params_mut(), &res.grads, &res.stats);
+        diverged |= !res.loss.is_finite() || opt.diverged();
+        if t % 10 == 0 || t + 1 == steps {
+            let (test_loss, correct) = net.evaluate_graph(&g, &g.test_mask);
+            let err = 1.0 - correct as f32 / g.test_mask.len() as f32;
+            curve.push((t, test_loss, err));
+        }
+        if diverged {
+            curve.push((t, f32::NAN, 1.0));
+            break;
+        }
+    }
+    (curve, diverged)
+}
+
+/// Default hyper-parameters per method family, scaled for the synthetic
+/// workloads (stand-ins for the paper's random-search winners, Table 4).
+pub fn default_hyper(method: &Method, policy_eps_scale: bool) -> Hyper {
+    let mut hp = match method {
+        Method::Sgd => Hyper { lr: 0.05, momentum: 0.9, weight_decay: 1e-4, ..Hyper::default() },
+        Method::AdamW => Hyper {
+            lr: 3e-3,
+            momentum: 0.9,
+            precond_lr: 0.02,
+            weight_decay: 1e-4,
+            eps: 1e-8,
+            ..Hyper::default()
+        },
+        // Second-order defaults: the random-search winners on the synthetic
+        // workloads land at large damping (λ ≈ 0.1 is inside the paper's
+        // Table-4 search range) with a modest lr and an RMS update clip —
+        // see EXPERIMENTS.md §Tuning for the probe log.
+        Method::Kfac => Hyper {
+            lr: 0.01,
+            momentum: 0.9,
+            precond_lr: 0.1,
+            damping: 0.1,
+            weight_decay: 1e-2,
+            t_update: 5,
+            update_clip: 0.05,
+            ..Hyper::default()
+        },
+        Method::Ikfac { .. } => Hyper {
+            lr: 0.01,
+            momentum: 0.9,
+            precond_lr: 0.05,
+            damping: 0.1,
+            weight_decay: 1e-2,
+            t_update: 5,
+            update_clip: 0.05,
+            ..Hyper::default()
+        },
+        Method::Singd { .. } => Hyper {
+            lr: 0.01,
+            momentum: 0.9,
+            precond_lr: 0.05,
+            riem_momentum: 0.6,
+            damping: 0.1,
+            weight_decay: 1e-2,
+            t_update: 5,
+            update_clip: 0.05,
+            ..Hyper::default()
+        },
+    };
+    if policy_eps_scale {
+        // Half precision cannot resolve damping below the rounding scale.
+        hp.damping = hp.damping.max(1e-3);
+    }
+    hp
+}
+
+/// The standard figure schedule: cosine over the run.
+pub fn cosine_for(epochs: usize, n_train: usize, batch: usize) -> Schedule {
+    Schedule::Cosine { total: epochs * (n_train / batch.max(1)).max(1) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::structured::Structure;
+
+    fn tiny_job(method: Method) -> JobConfig {
+        JobConfig {
+            arch: Arch::Mlp { hidden: vec![24] },
+            dataset: "cifar100".into(),
+            classes: 4,
+            n_train: 160,
+            n_test: 48,
+            method: method.clone(),
+            hyper: default_hyper(&method, false),
+            schedule: Schedule::Constant,
+            epochs: 3,
+            batch_size: 32,
+            seed: 3,
+            label: "test".into(),
+        }
+    }
+
+    #[test]
+    fn run_job_mlp_improves() {
+        let res = run_job(&tiny_job(Method::Sgd));
+        assert!(!res.diverged);
+        assert!(res.rows.last().unwrap().test_err < 0.8);
+    }
+
+    #[test]
+    fn run_grid_produces_all_cells() {
+        let base = tiny_job(Method::Sgd);
+        let methods = vec![
+            (Method::Sgd, default_hyper(&Method::Sgd, false)),
+            (
+                Method::Singd { structure: Structure::Diagonal },
+                default_hyper(&Method::Singd { structure: Structure::Diagonal }, false),
+            ),
+        ];
+        let grid = run_grid(&base, &methods, &["fp32", "bf16"]);
+        assert_eq!(grid.len(), 4);
+        assert!(grid.iter().any(|(l, _)| l == "singd:diag-bf16"));
+    }
+
+    #[test]
+    fn run_gcn_learns() {
+        let m = Method::Sgd;
+        let hp = Hyper { lr: 0.3, momentum: 0.9, ..Hyper::default() };
+        let (curve, diverged) = run_gcn(&m, &hp, 120, 5);
+        assert!(!diverged);
+        let first = curve.first().unwrap().2;
+        let last = curve.last().unwrap().2;
+        assert!(last < first, "gcn err {first} -> {last}");
+    }
+}

@@ -1,0 +1,50 @@
+//! # SINGD — Structured Inverse-Free Natural Gradient Descent
+//!
+//! A Rust + JAX + Pallas reproduction of *"Structured Inverse-Free Natural
+//! Gradient: Memory-Efficient & Numerically-Stable KFAC for Large Neural
+//! Nets"* (Lin et al., 2023).
+//!
+//! The crate is organised as a small training framework (the Layer-3
+//! coordinator of the three-layer architecture):
+//!
+//! - [`tensor`] — dense `f32` matrix substrate (BLAS-free, blocked matmul).
+//! - [`numerics`] — software BF16/FP16 emulation and precision policies;
+//!   the numeric-format substrate that reproduces the paper's
+//!   half-precision (in)stability results.
+//! - [`linalg`] — Cholesky, triangular solves, inversion, truncated matrix
+//!   exponential (the KFAC baseline needs real inversion; SINGD does not).
+//! - [`structured`] — the paper's Lie-group structure classes for Kronecker
+//!   factors (Table 1, Figs. 5/8) and their subspace projection maps.
+//! - [`optim`] — SGD, AdamW, KFAC, IKFAC, INGD and SINGD (Figs. 3/4/9).
+//! - [`model`] — pure-Rust reference models (MLP, CNN, transformer, GCN)
+//!   whose backward pass also emits per-layer Kronecker factors `(U, G)`.
+//! - [`data`] — synthetic dataset generators (class-prototype images,
+//!   stochastic-block-model graphs, token streams) and a PCG RNG.
+//! - [`runtime`] — PJRT client wrapper that loads AOT-compiled HLO-text
+//!   artifacts (produced by `python/compile/aot.py`) and executes them.
+//! - [`train`] — training-loop driver, LR schedules, metrics, checkpoints,
+//!   memory accounting.
+//! - [`config`] — typed configuration + minimal TOML-subset parser.
+//! - [`sweep`] — random hyperparameter search (paper Table 4).
+//! - [`exp`] — one driver per paper table/figure.
+//! - [`bench`] — a small statistics-reporting benchmark harness (criterion
+//!   is unavailable offline).
+//! - [`proptest`] — seeded randomized property-testing helpers.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod exp;
+pub mod linalg;
+pub mod model;
+pub mod numerics;
+pub mod optim;
+pub mod proptest;
+pub mod runtime;
+pub mod structured;
+pub mod sweep;
+pub mod tensor;
+pub mod train;
+
+pub use tensor::Mat;

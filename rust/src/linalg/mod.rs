@@ -1,0 +1,356 @@
+//! Dense linear algebra: Cholesky, triangular solves, SPD inversion, and the
+//! truncated matrix exponential.
+//!
+//! The KFAC baseline (Fig. 3, left) requires a real matrix inversion of the
+//! damped Kronecker factors every preconditioner update. We implement it
+//! via Cholesky + two triangular solves. Crucially, [`cholesky_policy`]
+//! carries a [`Policy`] so every intermediate is rounded to the training
+//! format — this is the code path that becomes unstable in bf16 and
+//! motivates the paper. IKFAC/INGD/SINGD never call into this module on
+//! their hot paths (they are "inverse-free").
+
+use crate::numerics::Policy;
+use crate::tensor::{matmul, Mat};
+
+/// Cholesky factorization `S = L Lᵀ` in full f32 precision.
+///
+/// Returns `None` if `S` is not (numerically) positive definite.
+pub fn cholesky(s: &Mat) -> Option<Mat> {
+    cholesky_policy(s, &Policy::fp32())
+}
+
+/// Cholesky factorization under a precision policy.
+///
+/// Every arithmetic result is rounded to `policy.compute`, and each stored
+/// `L` entry is rounded to `policy.store` — mirroring what a half-precision
+/// kernel would do. With bf16's 8-bit mantissa, ill-conditioned inputs make
+/// the pivot `s_ii − Σ l_ik²` go non-positive and the factorization fails:
+/// this is the paper's KFAC-in-BFP16 instability.
+pub fn cholesky_policy(s: &Mat, policy: &Policy) -> Option<Mat> {
+    assert_eq!(s.rows(), s.cols(), "cholesky: not square");
+    let n = s.rows();
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut acc = 0.0f32;
+            for k in 0..j {
+                acc = policy.qc(acc + policy.qc(l.at(i, k) * l.at(j, k)));
+            }
+            if i == j {
+                let d = policy.qc(s.at(i, i) - acc);
+                if d <= 0.0 || !d.is_finite() {
+                    return None;
+                }
+                l.set(i, i, policy.q(d.sqrt()));
+            } else {
+                let ljj = l.at(j, j);
+                if ljj == 0.0 || !ljj.is_finite() {
+                    return None;
+                }
+                l.set(i, j, policy.q(policy.qc(s.at(i, j) - acc) / ljj));
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L x = b` for lower-triangular `L` (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in 0..n {
+        let mut acc = b[i];
+        for k in 0..i {
+            acc -= l.at(i, k) * x[k];
+        }
+        x[i] = acc / l.at(i, i);
+    }
+    x
+}
+
+/// Solve `Lᵀ x = b` for lower-triangular `L` (backward substitution).
+pub fn solve_lower_t(l: &Mat, b: &[f32]) -> Vec<f32> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut acc = b[i];
+        for k in (i + 1)..n {
+            acc -= l.at(k, i) * x[k];
+        }
+        x[i] = acc / l.at(i, i);
+    }
+    x
+}
+
+/// Invert an SPD matrix via Cholesky. Returns `None` if not SPD under the
+/// given policy. This is KFAC's `(S + λI)⁻¹` step.
+pub fn spd_inverse_policy(s: &Mat, policy: &Policy) -> Option<Mat> {
+    let l = cholesky_policy(s, policy)?;
+    let n = s.rows();
+    let mut inv = Mat::zeros(n, n);
+    // Solve S x = e_i column by column.
+    let mut e = vec![0.0f32; n];
+    for i in 0..n {
+        e[i] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for r in 0..n {
+            inv.set(r, i, policy.q(x[r]));
+        }
+        e[i] = 0.0;
+    }
+    Some(inv)
+}
+
+/// Full-precision SPD inverse.
+pub fn spd_inverse(s: &Mat) -> Option<Mat> {
+    spd_inverse_policy(s, &Policy::fp32())
+}
+
+/// Truncated matrix exponential `I + N + N²/2 + … + N^order/order!`.
+///
+/// `order = 1` is the first-order truncation the paper uses throughout
+/// (`Expm(N) ≈ I + N`); `order = 2` is the non-singularity-preserving
+/// variant mentioned in footnote 1.
+pub fn expm_truncated(n_mat: &Mat, order: usize) -> Mat {
+    assert_eq!(n_mat.rows(), n_mat.cols());
+    let d = n_mat.rows();
+    let mut out = Mat::eye(d);
+    let mut term = Mat::eye(d);
+    let mut fact = 1.0f32;
+    for k in 1..=order {
+        term = matmul(&term, n_mat);
+        fact *= k as f32;
+        out.axpy(1.0 / fact, &term);
+    }
+    out
+}
+
+/// General matrix inverse via LU with partial pivoting.
+///
+/// Used to emulate what `torch.linalg.inv` does when KFAC's damped factor
+/// has lost positive-definiteness to low-precision rounding: the inverse
+/// *succeeds* but has enormous / wrong-signed entries, which is precisely
+/// how KFAC destabilizes in bf16 (rather than erroring out cleanly).
+/// Returns `None` only for exactly-singular pivots.
+pub fn lu_inverse(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    let mut lu = a.clone();
+    let mut piv: Vec<usize> = (0..n).collect();
+    for k in 0..n {
+        // Partial pivoting.
+        let mut pmax = k;
+        let mut vmax = lu.at(k, k).abs();
+        for r in (k + 1)..n {
+            if lu.at(r, k).abs() > vmax {
+                vmax = lu.at(r, k).abs();
+                pmax = r;
+            }
+        }
+        if vmax == 0.0 || !vmax.is_finite() {
+            return None;
+        }
+        if pmax != k {
+            for c in 0..n {
+                let tmp = lu.at(k, c);
+                lu.set(k, c, lu.at(pmax, c));
+                lu.set(pmax, c, tmp);
+            }
+            piv.swap(k, pmax);
+        }
+        let inv_pivot = 1.0 / lu.at(k, k);
+        for r in (k + 1)..n {
+            let f = lu.at(r, k) * inv_pivot;
+            lu.set(r, k, f);
+            for c in (k + 1)..n {
+                *lu.at_mut(r, c) -= f * lu.at(k, c);
+            }
+        }
+    }
+    // Solve A X = I column by column.
+    let mut inv = Mat::zeros(n, n);
+    let mut b = vec![0.0f32; n];
+    for col in 0..n {
+        for (r, bv) in b.iter_mut().enumerate() {
+            *bv = if piv[r] == col { 1.0 } else { 0.0 };
+        }
+        // Forward (unit lower).
+        for i in 0..n {
+            let mut acc = b[i];
+            for k in 0..i {
+                acc -= lu.at(i, k) * b[k];
+            }
+            b[i] = acc;
+        }
+        // Backward (upper).
+        for i in (0..n).rev() {
+            let mut acc = b[i];
+            for k in (i + 1)..n {
+                acc -= lu.at(i, k) * b[k];
+            }
+            b[i] = acc / lu.at(i, i);
+        }
+        for r in 0..n {
+            inv.set(r, col, b[r]);
+        }
+    }
+    Some(inv)
+}
+
+/// Condition-number estimate via a few rounds of power iteration on `S` and
+/// `S⁻¹` (SPD input). Used to characterize Kronecker-factor conditioning in
+/// the stability experiments.
+pub fn spd_condition_estimate(s: &Mat, iters: usize) -> Option<f32> {
+    let inv = spd_inverse(s)?;
+    Some(power_iter_sym(s, iters) * power_iter_sym(&inv, iters))
+}
+
+/// Largest-eigenvalue estimate of a symmetric matrix by power iteration.
+pub fn power_iter_sym(s: &Mat, iters: usize) -> f32 {
+    let n = s.rows();
+    let mut v = vec![1.0f32; n];
+    let mut lambda = 0.0f32;
+    for _ in 0..iters {
+        let mut w = vec![0.0f32; n];
+        for i in 0..n {
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                acc += s.at(i, j) * v[j];
+            }
+            w[i] = acc;
+        }
+        lambda = (w.iter().map(|x| (x * x) as f64).sum::<f64>() as f32).sqrt();
+        if lambda == 0.0 {
+            return 0.0;
+        }
+        for (vi, wi) in v.iter_mut().zip(&w) {
+            *vi = wi / lambda;
+        }
+    }
+    lambda
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{assert_mat_close, forall, Pcg};
+
+    #[test]
+    fn cholesky_identity() {
+        let l = cholesky(&Mat::eye(4)).unwrap();
+        assert_mat_close(&l, &Mat::eye(4), 1e-6, "chol(I)");
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        forall(21, 20, |rng, _| {
+            let n = 2 + rng.below(12);
+            let s = rng.spd_mat(n, 0.5);
+            let l = cholesky(&s).expect("SPD input must factor");
+            let recon = matmul(&l, &l.transpose());
+            assert_mat_close(&recon, &s, 1e-4, "L Lᵀ = S");
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let s = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&s).is_none());
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        forall(22, 15, |rng, _| {
+            let n = 2 + rng.below(10);
+            let s = rng.spd_mat(n, 1.0);
+            let inv = spd_inverse(&s).unwrap();
+            assert_mat_close(&matmul(&s, &inv), &Mat::eye(n), 1e-3, "S S⁻¹ = I");
+        });
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let l = Mat::from_vec(2, 2, vec![2.0, 0.0, 1.0, 3.0]);
+        let x = solve_lower(&l, &[4.0, 10.0]);
+        assert_eq!(x, vec![2.0, 8.0 / 3.0]);
+        let y = solve_lower_t(&l, &[2.0, 3.0]);
+        // Lᵀ = [[2,1],[0,3]]; solve: y1=1, y0=(2-1)/2=0.5
+        assert!((y[1] - 1.0).abs() < 1e-6 && (y[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn expm_first_order_is_i_plus_n() {
+        let n = Mat::from_vec(2, 2, vec![0.0, 0.1, -0.1, 0.0]);
+        let e = expm_truncated(&n, 1);
+        assert_mat_close(&e, &Mat::eye(2).add(&n), 1e-7, "expm order 1");
+    }
+
+    #[test]
+    fn expm_converges_to_scalar_exp_on_diagonal() {
+        let n = Mat::diag(&[0.3, -0.2]);
+        let e = expm_truncated(&n, 12);
+        assert!((e.at(0, 0) - 0.3f32.exp()).abs() < 1e-6);
+        assert!((e.at(1, 1) - (-0.2f32).exp()).abs() < 1e-6);
+    }
+
+    /// The heart of the paper: bf16 Cholesky fails on SPD matrices whose
+    /// *correlation structure* is ill-conditioned (min eigenvalue below
+    /// bf16's ~2⁻⁸ entrywise rounding scale) while fp32 handles them fine.
+    /// This is the realistic NN case — strongly correlated activations.
+    #[test]
+    fn bf16_cholesky_fails_on_ill_conditioned() {
+        let mut rng = Pcg::new(5);
+        let n = 24;
+        let mut failures_bf16 = 0;
+        let mut failures_f32 = 0;
+        for _ in 0..8 {
+            // Condition ≈ 3000: min eig 1e-3, max 3. Entrywise bf16
+            // rounding perturbs eigenvalues by ~4e-3·‖S‖ ≫ 1e-3.
+            let s = rng.spd_with_spectrum(n, 1e-3, 3.0);
+            if cholesky_policy(&s, &Policy::fp32()).is_none() {
+                failures_f32 += 1;
+            }
+            if cholesky_policy(&s, &Policy::bf16_pure()).is_none() {
+                failures_bf16 += 1;
+            }
+        }
+        assert_eq!(failures_f32, 0, "fp32 should factor all trials");
+        assert!(failures_bf16 >= 4, "bf16 should fail most trials, failed {failures_bf16}/8");
+    }
+
+    #[test]
+    fn lu_inverse_matches_spd_inverse() {
+        forall(23, 12, |rng, _| {
+            let n = 2 + rng.below(10);
+            let s = rng.spd_mat(n, 1.0);
+            let a = spd_inverse(&s).unwrap();
+            let b = lu_inverse(&s).unwrap();
+            assert_mat_close(&a, &b, 1e-3, "spd vs lu inverse");
+        });
+    }
+
+    #[test]
+    fn lu_inverse_handles_indefinite() {
+        // Indefinite but nonsingular: Cholesky refuses, LU succeeds.
+        let s = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        assert!(cholesky(&s).is_none());
+        let inv = lu_inverse(&s).unwrap();
+        assert_mat_close(&matmul(&s, &inv), &Mat::eye(2), 1e-5, "indefinite inverse");
+    }
+
+    #[test]
+    fn lu_inverse_rejects_singular() {
+        let s = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(lu_inverse(&s).is_none());
+    }
+
+    #[test]
+    fn power_iteration_top_eigenvalue() {
+        let s = Mat::diag(&[5.0, 2.0, 1.0]);
+        let l = power_iter_sym(&s, 50);
+        assert!((l - 5.0).abs() < 1e-3, "{l}");
+    }
+}

@@ -1,0 +1,7 @@
+//! `singd` — launcher binary. See `singd help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let argv = if argv.is_empty() { vec!["help".to_string()] } else { argv };
+    std::process::exit(singd::cli::run(&argv));
+}

@@ -1,0 +1,474 @@
+//! Convolutional models on flattened `C×H×W` inputs, built on an im2col
+//! substrate so every conv is a (weight-shared) linear layer with proper
+//! KFAC-expand Kronecker statistics.
+//!
+//! Two architectures used by the Fig. 1 / Fig. 7 reproductions:
+//!
+//! - [`Cnn::vgg`] — a small VGG-style stack: 3×3 convs + ReLU + 2×2 average
+//!   pooling, then a linear classifier.
+//! - [`Cnn::convmixer`] — a ConvMixer-style stack: patch embedding followed
+//!   by 1×1 (pointwise) mixing convs, global average pool, classifier
+//!   (depthwise convs replaced by pointwise mixing — the structural point
+//!   is the patch-embed + isotropic-conv topology, see DESIGN.md §3).
+
+use super::{relu_bwd, softmax_xent, BackwardResult, Batch, Linear, Model};
+use crate::optim::KronStats;
+use crate::proptest::Pcg;
+use crate::tensor::Mat;
+
+/// Image geometry of a conv stage.
+#[derive(Clone, Copy, Debug)]
+pub struct ImgShape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl ImgShape {
+    pub fn len(&self) -> usize {
+        self.c * self.h * self.w
+    }
+}
+
+/// im2col: images `(m × C·H·W)` → patches `(m·H'·W' × C·k·k)`, stride `s`,
+/// zero padding `p`.
+pub fn im2col(x: &Mat, shape: ImgShape, k: usize, s: usize, p: usize) -> Mat {
+    let (ho, wo) = out_hw(shape, k, s, p);
+    let m = x.rows();
+    let mut out = Mat::zeros(m * ho * wo, shape.c * k * k);
+    for b in 0..m {
+        let row = x.row(b);
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let orow = out.row_mut((b * ho + oy) * wo + ox);
+                let mut idx = 0usize;
+                for c in 0..shape.c {
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = (oy * s + ky) as isize - p as isize;
+                            let ix = (ox * s + kx) as isize - p as isize;
+                            orow[idx] = if iy >= 0
+                                && ix >= 0
+                                && (iy as usize) < shape.h
+                                && (ix as usize) < shape.w
+                            {
+                                row[(c * shape.h + iy as usize) * shape.w + ix as usize]
+                            } else {
+                                0.0
+                            };
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// col2im: scatter-add patch gradients back to image gradients.
+pub fn col2im(dpatch: &Mat, m: usize, shape: ImgShape, k: usize, s: usize, p: usize) -> Mat {
+    let (ho, wo) = out_hw(shape, k, s, p);
+    let mut dx = Mat::zeros(m, shape.len());
+    for b in 0..m {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let prow = dpatch.row((b * ho + oy) * wo + ox);
+                let drow = dx.row_mut(b);
+                let mut idx = 0usize;
+                for c in 0..shape.c {
+                    for ky in 0..k {
+                        for kx in 0..k {
+                            let iy = (oy * s + ky) as isize - p as isize;
+                            let ix = (ox * s + kx) as isize - p as isize;
+                            if iy >= 0
+                                && ix >= 0
+                                && (iy as usize) < shape.h
+                                && (ix as usize) < shape.w
+                            {
+                                drow[(c * shape.h + iy as usize) * shape.w + ix as usize] +=
+                                    prow[idx];
+                            }
+                            idx += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+pub fn out_hw(shape: ImgShape, k: usize, s: usize, p: usize) -> (usize, usize) {
+    (((shape.h + 2 * p - k) / s) + 1, ((shape.w + 2 * p - k) / s) + 1)
+}
+
+/// Patch rows `(m·H·W × C_out)` → image layout `(m × C_out·H·W)`.
+fn rows_to_chw(y: &Mat, m: usize, c_out: usize, ho: usize, wo: usize) -> Mat {
+    let mut out = Mat::zeros(m, c_out * ho * wo);
+    for b in 0..m {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let src = y.row((b * ho + oy) * wo + ox);
+                for c in 0..c_out {
+                    *out.at_mut(b, (c * ho + oy) * wo + ox) = src[c];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Image layout gradient → patch-row layout.
+fn chw_to_rows(dy: &Mat, m: usize, c_out: usize, ho: usize, wo: usize) -> Mat {
+    let mut out = Mat::zeros(m * ho * wo, c_out);
+    for b in 0..m {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let dst = out.row_mut((b * ho + oy) * wo + ox);
+                for c in 0..c_out {
+                    dst[c] = dy.at(b, (c * ho + oy) * wo + ox);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 2×2 average pooling on `(m × C·H·W)` (H, W even).
+pub fn avgpool2(x: &Mat, shape: ImgShape) -> Mat {
+    let (h2, w2) = (shape.h / 2, shape.w / 2);
+    let m = x.rows();
+    let mut out = Mat::zeros(m, shape.c * h2 * w2);
+    for b in 0..m {
+        for c in 0..shape.c {
+            for y in 0..h2 {
+                for xx in 0..w2 {
+                    let mut acc = 0.0;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            acc += x.at(b, (c * shape.h + 2 * y + dy) * shape.w + 2 * xx + dx);
+                        }
+                    }
+                    *out.at_mut(b, (c * h2 + y) * w2 + xx) = acc * 0.25;
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn avgpool2_bwd(dout: &Mat, shape: ImgShape) -> Mat {
+    let (h2, w2) = (shape.h / 2, shape.w / 2);
+    let m = dout.rows();
+    let mut dx = Mat::zeros(m, shape.len());
+    for b in 0..m {
+        for c in 0..shape.c {
+            for y in 0..h2 {
+                for xx in 0..w2 {
+                    let g = dout.at(b, (c * h2 + y) * w2 + xx) * 0.25;
+                    for dy in 0..2 {
+                        for dxx in 0..2 {
+                            *dx.at_mut(b, (c * shape.h + 2 * y + dy) * shape.w + 2 * xx + dxx) = g;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    dx
+}
+
+/// One stage of the CNN.
+#[derive(Clone, Debug)]
+enum Stage {
+    /// 3×3 (or k×k) conv + ReLU; weight index into `params`.
+    Conv { k: usize, s: usize, p: usize, c_out: usize },
+    /// 2×2 average pool (no params).
+    Pool,
+    /// Global average pool over spatial dims (no params).
+    GlobalPool,
+}
+
+/// A conv net = conv/pool stages + linear classifier.
+pub struct Cnn {
+    input: ImgShape,
+    stages: Vec<Stage>,
+    #[allow(dead_code)]
+    classes: usize,
+    params: Vec<Mat>,
+    shapes: Vec<(usize, usize)>,
+}
+
+impl Cnn {
+    fn build(rng: &mut Pcg, input: ImgShape, stages: Vec<Stage>, classes: usize) -> Self {
+        let mut params = Vec::new();
+        let mut shapes = Vec::new();
+        let mut cur = input;
+        for st in &stages {
+            match *st {
+                Stage::Conv { k, s, p, c_out } => {
+                    let d_in = cur.c * k * k;
+                    params.push(Linear::init(rng, c_out, d_in));
+                    shapes.push((c_out, d_in + 1));
+                    let (ho, wo) = out_hw(cur, k, s, p);
+                    cur = ImgShape { c: c_out, h: ho, w: wo };
+                }
+                Stage::Pool => {
+                    cur = ImgShape { c: cur.c, h: cur.h / 2, w: cur.w / 2 };
+                }
+                Stage::GlobalPool => {
+                    cur = ImgShape { c: cur.c, h: 1, w: 1 };
+                }
+            }
+        }
+        let feat = cur.len();
+        params.push(Linear::init(rng, classes, feat));
+        shapes.push((classes, feat + 1));
+        Cnn { input, stages, classes, params, shapes }
+    }
+
+    /// Small VGG-style net for `input` images (e.g. 3×16×16, paper Fig. 1).
+    pub fn vgg(rng: &mut Pcg, input: ImgShape, width: usize, classes: usize) -> Self {
+        let stages = vec![
+            Stage::Conv { k: 3, s: 1, p: 1, c_out: width },
+            Stage::Conv { k: 3, s: 1, p: 1, c_out: width },
+            Stage::Pool,
+            Stage::Conv { k: 3, s: 1, p: 1, c_out: 2 * width },
+            Stage::Pool,
+            Stage::Conv { k: 3, s: 1, p: 1, c_out: 2 * width },
+            Stage::Pool,
+        ];
+        Self::build(rng, input, stages, classes)
+    }
+
+    /// ConvMixer-style: patch embed (k=s=patch) then pointwise convs, then
+    /// global average pooling.
+    pub fn convmixer(
+        rng: &mut Pcg,
+        input: ImgShape,
+        patch: usize,
+        width: usize,
+        depth: usize,
+        classes: usize,
+    ) -> Self {
+        let mut stages = vec![Stage::Conv { k: patch, s: patch, p: 0, c_out: width }];
+        for _ in 0..depth {
+            stages.push(Stage::Conv { k: 1, s: 1, p: 0, c_out: width });
+        }
+        stages.push(Stage::GlobalPool);
+        Self::build(rng, input, stages, classes)
+    }
+
+    /// Forward caching everything needed for backward.
+    #[allow(clippy::type_complexity)]
+    fn forward_cached(
+        &self,
+        x: &Mat,
+    ) -> (Vec<(Mat, Mat, ImgShape, usize)>, Vec<ImgShape>, Mat, Mat) {
+        // conv caches: (biased patch matrix, pre-activation rows, in-shape, param idx)
+        let m = x.rows();
+        let mut conv_caches = Vec::new();
+        let mut shapes_seen = Vec::new();
+        let mut cur = x.clone();
+        let mut cur_shape = self.input;
+        let mut pi = 0usize;
+        for st in &self.stages {
+            shapes_seen.push(cur_shape);
+            match *st {
+                Stage::Conv { k, s, p, c_out } => {
+                    let patches = im2col(&cur, cur_shape, k, s, p);
+                    let (z_rows, xb) = Linear::forward(&self.params[pi], &patches);
+                    let a_rows = super::relu(&z_rows);
+                    let (ho, wo) = out_hw(cur_shape, k, s, p);
+                    cur = rows_to_chw(&a_rows, m, c_out, ho, wo);
+                    conv_caches.push((xb, z_rows, cur_shape, pi));
+                    cur_shape = ImgShape { c: c_out, h: ho, w: wo };
+                    pi += 1;
+                }
+                Stage::Pool => {
+                    cur = avgpool2(&cur, cur_shape);
+                    cur_shape = ImgShape { c: cur_shape.c, h: cur_shape.h / 2, w: cur_shape.w / 2 };
+                }
+                Stage::GlobalPool => {
+                    let mut pooled = Mat::zeros(m, cur_shape.c);
+                    let inv = 1.0 / (cur_shape.h * cur_shape.w) as f32;
+                    for b in 0..m {
+                        for c in 0..cur_shape.c {
+                            let mut acc = 0.0;
+                            for i in 0..cur_shape.h * cur_shape.w {
+                                acc += cur.at(b, c * cur_shape.h * cur_shape.w + i);
+                            }
+                            *pooled.at_mut(b, c) = acc * inv;
+                        }
+                    }
+                    cur = pooled;
+                    cur_shape = ImgShape { c: cur_shape.c, h: 1, w: 1 };
+                }
+            }
+        }
+        // Classifier.
+        let (logits, head_xb) = Linear::forward(&self.params[pi], &cur);
+        (conv_caches, shapes_seen, head_xb, logits)
+    }
+}
+
+impl Model for Cnn {
+    fn shapes(&self) -> Vec<(usize, usize)> {
+        self.shapes.clone()
+    }
+
+    fn params_mut(&mut self) -> &mut Vec<Mat> {
+        &mut self.params
+    }
+
+    fn params(&self) -> &Vec<Mat> {
+        &self.params
+    }
+
+    fn forward_backward(&self, batch: &Batch) -> BackwardResult {
+        let m = batch.x.rows();
+        let (conv_caches, shapes_seen, head_xb, logits) = self.forward_cached(&batch.x);
+        let (loss, correct, dz) = softmax_xent(&logits, &batch.y);
+        let n = self.params.len();
+        let mut grads = vec![Mat::zeros(1, 1); n];
+        let mut stats: Vec<Option<KronStats>> = (0..n).map(|_| None).collect();
+
+        // Head backward.
+        let head_idx = n - 1;
+        let (g, mut dcur, st) = Linear::backward(&self.params[head_idx], &head_xb, &dz);
+        grads[head_idx] = g;
+        stats[head_idx] = Some(st);
+
+        // Walk stages in reverse.
+        let mut ci = conv_caches.len();
+        for (si, st) in self.stages.iter().enumerate().rev() {
+            let in_shape = shapes_seen[si];
+            match *st {
+                Stage::Conv { k, s, p, c_out } => {
+                    ci -= 1;
+                    let (ref xb, ref z_rows, cache_shape, pi) = conv_caches[ci];
+                    debug_assert_eq!(cache_shape.len(), in_shape.len());
+                    let (ho, wo) = out_hw(in_shape, k, s, p);
+                    let dy_rows = chw_to_rows(&dcur, m, c_out, ho, wo);
+                    let dz_rows = relu_bwd(z_rows, &dy_rows);
+                    let (g, dpatch, st) = Linear::backward(&self.params[pi], xb, &dz_rows);
+                    grads[pi] = g;
+                    stats[pi] = Some(st);
+                    dcur = col2im(&dpatch, m, in_shape, k, s, p);
+                }
+                Stage::Pool => {
+                    dcur = avgpool2_bwd(&dcur, in_shape);
+                }
+                Stage::GlobalPool => {
+                    let inv = 1.0 / (in_shape.h * in_shape.w) as f32;
+                    let mut dx = Mat::zeros(m, in_shape.len());
+                    for b in 0..m {
+                        for c in 0..in_shape.c {
+                            let g = dcur.at(b, c) * inv;
+                            for i in 0..in_shape.h * in_shape.w {
+                                *dx.at_mut(b, c * in_shape.h * in_shape.w + i) = g;
+                            }
+                        }
+                    }
+                    dcur = dx;
+                }
+            }
+        }
+
+        BackwardResult {
+            loss,
+            correct,
+            grads,
+            stats: stats.into_iter().map(|s| s.unwrap()).collect(),
+        }
+    }
+
+    fn evaluate(&self, batch: &Batch) -> (f32, usize) {
+        let (_, _, _, logits) = self.forward_cached(&batch.x);
+        let (loss, correct, _) = softmax_xent(&logits, &batch.y);
+        (loss, correct)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil;
+
+    #[test]
+    fn im2col_identity_kernel_roundtrip() {
+        // 1×1 conv with stride 1 and no padding is a permutation.
+        let shape = ImgShape { c: 2, h: 3, w: 3 };
+        let mut rng = Pcg::new(9);
+        let x = rng.normal_mat(2, shape.len(), 1.0);
+        let p = im2col(&x, shape, 1, 1, 0);
+        assert_eq!(p.shape(), (2 * 9, 2));
+        // patch row (b, y, x) column c == x[b][(c,y,x)]
+        assert_eq!(p.at(4, 1), x.at(0, 9 + 4));
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // ⟨im2col(x), P⟩ = ⟨x, col2im(P)⟩ — adjointness (required for
+        // correct conv backward).
+        let shape = ImgShape { c: 2, h: 4, w: 4 };
+        let mut rng = Pcg::new(10);
+        let x = rng.normal_mat(3, shape.len(), 1.0);
+        let fwd = im2col(&x, shape, 3, 1, 1);
+        let p = rng.normal_mat(fwd.rows(), fwd.cols(), 1.0);
+        let lhs: f64 = fwd.data().iter().zip(p.data()).map(|(&a, &b)| (a * b) as f64).sum();
+        let back = col2im(&p, 3, shape, 3, 1, 1);
+        let rhs: f64 = x.data().iter().zip(back.data()).map(|(&a, &b)| (a * b) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-2 * (1.0 + lhs.abs()), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn avgpool_roundtrip_shapes_and_values() {
+        let shape = ImgShape { c: 1, h: 4, w: 4 };
+        let x = Mat::from_fn(1, 16, |_, i| i as f32);
+        let p = avgpool2(&x, shape);
+        assert_eq!(p.cols(), 4);
+        // top-left 2×2 block of 0,1,4,5 → 2.5
+        assert_eq!(p.at(0, 0), 2.5);
+    }
+
+    #[test]
+    fn vgg_gradcheck() {
+        let mut rng = Pcg::new(11);
+        let shape = ImgShape { c: 2, h: 8, w: 8 };
+        let mut net = Cnn::vgg(&mut rng, shape, 4, 3);
+        let batch = Batch { x: rng.normal_mat(3, shape.len(), 1.0), y: vec![0, 1, 2] };
+        testutil::check_grads(&mut net, &batch, 25, 5e-2);
+    }
+
+    #[test]
+    fn vgg_stats_reproduce_grads() {
+        let mut rng = Pcg::new(12);
+        let shape = ImgShape { c: 2, h: 8, w: 8 };
+        let net = Cnn::vgg(&mut rng, shape, 4, 3);
+        let batch = Batch { x: rng.normal_mat(3, shape.len(), 1.0), y: vec![0, 1, 2] };
+        testutil::check_stats_consistency(&net, &batch, 1e-3);
+    }
+
+    #[test]
+    fn convmixer_gradcheck() {
+        let mut rng = Pcg::new(13);
+        let shape = ImgShape { c: 2, h: 8, w: 8 };
+        let mut net = Cnn::convmixer(&mut rng, shape, 4, 6, 2, 3);
+        let batch = Batch { x: rng.normal_mat(3, shape.len(), 1.0), y: vec![0, 1, 2] };
+        testutil::check_grads(&mut net, &batch, 25, 5e-2);
+    }
+
+    #[test]
+    fn conv_shapes_follow_stages() {
+        let mut rng = Pcg::new(14);
+        let shape = ImgShape { c: 3, h: 16, w: 16 };
+        let net = Cnn::vgg(&mut rng, shape, 8, 10);
+        let shapes = net.shapes();
+        assert_eq!(shapes[0], (8, 3 * 9 + 1));
+        assert_eq!(shapes[1], (8, 8 * 9 + 1));
+        // Classifier: 16 channels at 2×2 after three pools.
+        assert_eq!(*shapes.last().unwrap(), (10, 16 * 2 * 2 + 1));
+    }
+}

@@ -1,0 +1,150 @@
+//! Two-layer graph convolutional network (Kipf & Welling, 2016) for node
+//! classification — the paper's "GNN on Cora" model (Fig. 7, right).
+//!
+//! `Z₁ = Â X W₁ᵀ, H₁ = ReLU(Z₁), Z₂ = Â H₁ W₂ᵀ`, softmax-CE on the
+//! training-mask nodes. `Â = D^{-1/2}(A + I)D^{-1/2}` is precomputed by
+//! [`crate::data::cora`]. Nodes act as the batch dimension for the
+//! Kronecker statistics.
+
+use super::{relu, relu_bwd, softmax_xent, BackwardResult, Batch, Linear, Model};
+use crate::proptest::Pcg;
+use crate::tensor::{matmul, Mat};
+
+/// A node-classification graph dataset.
+#[derive(Clone)]
+pub struct Graph {
+    /// Symmetric-normalized adjacency with self loops, `n × n`.
+    pub adj: Mat,
+    /// Node features, `n × f`.
+    pub x: Mat,
+    /// Node labels, length `n`.
+    pub y: Vec<usize>,
+    /// Training node indices.
+    pub train_mask: Vec<usize>,
+    /// Test node indices.
+    pub test_mask: Vec<usize>,
+}
+
+pub struct Gcn {
+    params: Vec<Mat>,
+    shapes: Vec<(usize, usize)>,
+}
+
+impl Gcn {
+    pub fn new(rng: &mut Pcg, features: usize, hidden: usize, classes: usize) -> Self {
+        let params = vec![Linear::init(rng, hidden, features), Linear::init(rng, classes, hidden)];
+        let shapes = vec![(hidden, features + 1), (classes, hidden + 1)];
+        Gcn { params, shapes }
+    }
+
+    fn forward_cached(&self, g: &Graph) -> (Mat, Mat, Mat, Mat, Mat) {
+        // agg0 = Â X; Z1 = lin1(agg0); H1 = relu(Z1); agg1 = Â H1; Z2 = lin2(agg1)
+        let agg0 = matmul(&g.adj, &g.x);
+        let (z1, xb1) = Linear::forward(&self.params[0], &agg0);
+        let h1 = relu(&z1);
+        let agg1 = matmul(&g.adj, &h1);
+        let (z2, xb2) = Linear::forward(&self.params[1], &agg1);
+        (xb1, z1, xb2, z2, agg1)
+    }
+
+    /// Full-graph forward/backward with masked loss.
+    pub fn forward_backward_graph(&self, g: &Graph, mask: &[usize]) -> BackwardResult {
+        let (xb1, z1, xb2, z2, _agg1) = self.forward_cached(g);
+        // Masked CE: gather masked logits, scatter gradients back.
+        let mm = mask.len();
+        let logits = Mat::from_fn(mm, z2.cols(), |r, c| z2.at(mask[r], c));
+        let labels: Vec<usize> = mask.iter().map(|&i| g.y[i]).collect();
+        let (loss, correct, dmasked) = softmax_xent(&logits, &labels);
+        let mut dz2 = Mat::zeros(z2.rows(), z2.cols());
+        for (r, &node) in mask.iter().enumerate() {
+            for c in 0..z2.cols() {
+                *dz2.at_mut(node, c) = dmasked.at(r, c);
+            }
+        }
+        let (g2, dagg1, st2) = Linear::backward(&self.params[1], &xb2, &dz2);
+        // dH1 = Âᵀ dagg1 (Â symmetric).
+        let dh1 = matmul(&g.adj, &dagg1);
+        let dz1 = relu_bwd(&z1, &dh1);
+        let (g1, _dx, st1) = Linear::backward(&self.params[0], &xb1, &dz1);
+        BackwardResult { loss, correct, grads: vec![g1, g2], stats: vec![st1, st2] }
+    }
+
+    pub fn evaluate_graph(&self, g: &Graph, mask: &[usize]) -> (f32, usize) {
+        let (_, _, _, z2, _) = self.forward_cached(g);
+        let logits = Mat::from_fn(mask.len(), z2.cols(), |r, c| z2.at(mask[r], c));
+        let labels: Vec<usize> = mask.iter().map(|&i| g.y[i]).collect();
+        let (loss, correct, _) = softmax_xent(&logits, &labels);
+        (loss, correct)
+    }
+}
+
+impl Model for Gcn {
+    fn shapes(&self) -> Vec<(usize, usize)> {
+        self.shapes.clone()
+    }
+
+    fn params_mut(&mut self) -> &mut Vec<Mat> {
+        &mut self.params
+    }
+
+    fn params(&self) -> &Vec<Mat> {
+        &self.params
+    }
+
+    /// The generic [`Model`] entry points are not used for graphs (the
+    /// graph does not fit the flat [`Batch`] layout); the Fig. 7 driver
+    /// calls [`Gcn::forward_backward_graph`].
+    fn forward_backward(&self, _batch: &Batch) -> BackwardResult {
+        unimplemented!("use forward_backward_graph");
+    }
+
+    fn evaluate(&self, _batch: &Batch) -> (f32, usize) {
+        unimplemented!("use evaluate_graph");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_graph(rng: &mut Pcg) -> Graph {
+        crate::data::cora(rng, 90, 12, 3, 6.0)
+    }
+
+    #[test]
+    fn gcn_gradcheck_masked() {
+        let mut rng = Pcg::new(31);
+        let g = toy_graph(&mut rng);
+        let mut net = Gcn::new(&mut rng, g.x.cols(), 6, 3);
+        let res = net.forward_backward_graph(&g, &g.train_mask);
+        // FD check a few entries.
+        let eps = 1e-2f32;
+        for &(l, idx) in &[(0usize, 3usize), (0, 10), (1, 5), (1, 12)] {
+            let orig = net.params[l].data()[idx];
+            net.params[l].data_mut()[idx] = orig + eps;
+            let (lp, _) = net.evaluate_graph(&g, &g.train_mask);
+            net.params[l].data_mut()[idx] = orig - eps;
+            let (lm, _) = net.evaluate_graph(&g, &g.train_mask);
+            net.params[l].data_mut()[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = res.grads[l].data()[idx];
+            assert!((fd - an).abs() < 3e-2 * (1.0 + fd.abs()), "({l},{idx}): {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn gcn_trains_on_sbm() {
+        let mut rng = Pcg::new(32);
+        let g = toy_graph(&mut rng);
+        let mut net = Gcn::new(&mut rng, g.x.cols(), 8, 3);
+        let hp = crate::optim::Hyper { lr: 0.3, momentum: 0.9, weight_decay: 1e-4, ..Default::default() };
+        let mut opt = crate::optim::Method::Sgd.build(&net.shapes(), &hp);
+        for t in 0..150 {
+            let res = net.forward_backward_graph(&g, &g.train_mask);
+            opt.step(t, &mut net.params, &res.grads, &res.stats);
+        }
+        let (_, correct) = net.evaluate_graph(&g, &g.test_mask);
+        let acc = correct as f32 / g.test_mask.len() as f32;
+        assert!(acc > 0.6, "test acc {acc}");
+    }
+}

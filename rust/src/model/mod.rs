@@ -1,0 +1,332 @@
+//! Pure-Rust reference models whose backward pass emits per-layer
+//! Kronecker statistics.
+//!
+//! These models serve three roles:
+//!
+//! 1. **Experiment substrate** — the Fig. 1/6/7 reproductions train them
+//!    natively with every optimizer under every precision policy (fully
+//!    deterministic, no PJRT required).
+//! 2. **Oracle for the AOT path** — the JAX/Pallas models in
+//!    `python/compile/` implement the same architectures; the PJRT runtime
+//!    executes those, and the e2e example cross-checks losses.
+//! 3. **Stats provider** — every (generalized) linear layer reports
+//!    [`KronStats`] in KFAC-*expand* form: weight-sharing locations
+//!    (conv patches, tokens, graph nodes) are treated as extra batch rows
+//!    (Eschenhagen et al., 2023).
+//!
+//! Architectures: [`Mlp`], VGG-ish [`cnn::Cnn`], ConvMixer-ish pointwise
+//! CNN, ViT-ish [`transformer::Transformer`] (also a causal LM mode), and
+//! a 2-layer [`gcn::Gcn`].
+
+pub mod cnn;
+pub mod gcn;
+pub mod transformer;
+
+use crate::optim::KronStats;
+use crate::proptest::Pcg;
+use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Mat};
+
+/// A minibatch of flattened inputs with integer labels.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// `m × input_dim`.
+    pub x: Mat,
+    /// Length `m`.
+    pub y: Vec<usize>,
+}
+
+/// Output of one forward/backward pass.
+pub struct BackwardResult {
+    pub loss: f32,
+    pub correct: usize,
+    /// Per-trainable-layer gradient of the *mean* loss.
+    pub grads: Vec<Mat>,
+    /// Per-trainable-layer Kronecker statistics.
+    pub stats: Vec<KronStats>,
+}
+
+/// Common model interface consumed by [`crate::train::Trainer`].
+pub trait Model {
+    /// `(d_out, d_in)` of every trainable layer, in `params` order.
+    fn shapes(&self) -> Vec<(usize, usize)>;
+
+    /// Trainable weight matrices (optimizer mutates these in place).
+    fn params_mut(&mut self) -> &mut Vec<Mat>;
+
+    fn params(&self) -> &Vec<Mat>;
+
+    /// Forward + backward on a batch.
+    fn forward_backward(&self, batch: &Batch) -> BackwardResult;
+
+    /// Forward only: mean loss and #correct (eval).
+    fn evaluate(&self, batch: &Batch) -> (f32, usize);
+
+    /// Total parameter count.
+    fn num_params(&self) -> usize {
+        self.params().iter().map(|p| p.len()).sum()
+    }
+}
+
+/// Softmax cross-entropy over logits `z (m×C)`; returns
+/// `(mean loss, #correct, dL/dz of the mean loss)`.
+pub fn softmax_xent(z: &Mat, y: &[usize]) -> (f32, usize, Mat) {
+    let m = z.rows();
+    assert_eq!(y.len(), m);
+    let probs = z.softmax_rows();
+    let mut loss = 0.0f64;
+    let mut correct = 0usize;
+    let mut dz = probs.clone();
+    for r in 0..m {
+        let p = probs.at(r, y[r]).max(1e-12);
+        loss -= (p as f64).ln();
+        *dz.at_mut(r, y[r]) -= 1.0;
+        let argmax = (0..z.cols()).max_by(|&a, &b| {
+            probs.at(r, a).partial_cmp(&probs.at(r, b)).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        if argmax == Some(y[r]) {
+            correct += 1;
+        }
+    }
+    let dz = dz.scale(1.0 / m as f32);
+    ((loss / m as f64) as f32, correct, dz)
+}
+
+/// Append a constant-1 column (homogeneous bias coordinate).
+pub fn with_bias_col(x: &Mat) -> Mat {
+    let (m, d) = x.shape();
+    Mat::from_fn(m, d + 1, |r, c| if c < d { x.at(r, c) } else { 1.0 })
+}
+
+/// A trainable linear layer `y = [x, 1] Wᵀ` with the bias folded into the
+/// weight's last column (so optimizers see one matrix per layer).
+pub struct Linear;
+
+impl Linear {
+    /// Kaiming-ish init for a `(d_out, d_in+1)` weight (bias column zero).
+    pub fn init(rng: &mut Pcg, d_out: usize, d_in: usize) -> Mat {
+        let scale = (2.0 / d_in as f32).sqrt();
+        Mat::from_fn(d_out, d_in + 1, |_, c| if c < d_in { rng.normal() * scale } else { 0.0 })
+    }
+
+    /// Forward: returns `(output m×d_out, cached biased input)`.
+    pub fn forward(w: &Mat, x: &Mat) -> (Mat, Mat) {
+        let xb = with_bias_col(x);
+        (matmul_a_bt(&xb, w), xb)
+    }
+
+    /// Backward: given `dy = dL/dy (m×d_out)` and the cached biased input,
+    /// returns `(dL/dW, dL/dx, KronStats)`.
+    pub fn backward(w: &Mat, xb: &Mat, dy: &Mat) -> (Mat, Mat, KronStats) {
+        let m = xb.rows() as f32;
+        let grad = matmul_at_b(dy, xb); // d_out × (d_in+1)
+        let dxb = matmul(dy, w); // m × (d_in+1)
+        // Drop the bias column of dx.
+        let d_in = xb.cols() - 1;
+        let dx = Mat::from_fn(dxb.rows(), d_in, |r, c| dxb.at(r, c));
+        // Stats: inputs as-is; per-sample/location output grads (undo the
+        // 1/m of the mean loss so the scale matches classic KFAC).
+        let stats = KronStats { a: xb.clone(), g: dy.scale(m) };
+        (grad, dx, stats)
+    }
+}
+
+/// ReLU.
+pub fn relu(x: &Mat) -> Mat {
+    x.map(|v| v.max(0.0))
+}
+
+/// ReLU backward given the pre-activation and upstream gradient.
+pub fn relu_bwd(x: &Mat, dy: &Mat) -> Mat {
+    x.zip(dy, |xv, dv| if xv > 0.0 { dv } else { 0.0 })
+}
+
+/// A plain multilayer perceptron with ReLU activations.
+pub struct Mlp {
+    dims: Vec<usize>,
+    params: Vec<Mat>,
+}
+
+impl Mlp {
+    /// `dims = [input, hidden…, classes]`.
+    pub fn new(rng: &mut Pcg, dims: &[usize]) -> Self {
+        assert!(dims.len() >= 2);
+        let params = dims.windows(2).map(|w| Linear::init(rng, w[1], w[0])).collect();
+        Mlp { dims: dims.to_vec(), params }
+    }
+
+    fn forward_cached(&self, x: &Mat) -> (Vec<Mat>, Vec<Mat>, Mat) {
+        // (pre-activations per layer, biased inputs per layer, logits)
+        let mut pre = Vec::new();
+        let mut cached = Vec::new();
+        let mut cur = x.clone();
+        for (i, w) in self.params.iter().enumerate() {
+            let (z, xb) = Linear::forward(w, &cur);
+            cached.push(xb);
+            if i + 1 < self.params.len() {
+                cur = relu(&z);
+            }
+            pre.push(z);
+        }
+        let logits = pre.last().unwrap().clone();
+        (pre, cached, logits)
+    }
+}
+
+impl Model for Mlp {
+    fn shapes(&self) -> Vec<(usize, usize)> {
+        self.dims.windows(2).map(|w| (w[1], w[0] + 1)).collect()
+    }
+
+    fn params_mut(&mut self) -> &mut Vec<Mat> {
+        &mut self.params
+    }
+
+    fn params(&self) -> &Vec<Mat> {
+        &self.params
+    }
+
+    fn forward_backward(&self, batch: &Batch) -> BackwardResult {
+        let (pre, cached, logits) = self.forward_cached(&batch.x);
+        let (loss, correct, mut dz) = softmax_xent(&logits, &batch.y);
+        let n = self.params.len();
+        let mut grads = vec![Mat::zeros(1, 1); n];
+        let mut stats: Vec<Option<KronStats>> = (0..n).map(|_| None).collect();
+        for i in (0..n).rev() {
+            let (g, dx, st) = Linear::backward(&self.params[i], &cached[i], &dz);
+            grads[i] = g;
+            stats[i] = Some(st);
+            if i > 0 {
+                dz = relu_bwd(&pre[i - 1], &dx);
+            }
+        }
+        BackwardResult {
+            loss,
+            correct,
+            grads,
+            stats: stats.into_iter().map(|s| s.unwrap()).collect(),
+        }
+    }
+
+    fn evaluate(&self, batch: &Batch) -> (f32, usize) {
+        let (_, _, logits) = self.forward_cached(&batch.x);
+        let (loss, correct, _) = softmax_xent(&logits, &batch.y);
+        (loss, correct)
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+
+    /// Finite-difference check of `forward_backward` gradients.
+    pub fn check_grads<M: Model>(model: &mut M, batch: &Batch, n_checks: usize, tol: f32) {
+        let res = model.forward_backward(batch);
+        let mut rng = Pcg::new(777);
+        let eps = 1e-2f32;
+        let nl = model.params().len();
+        for _ in 0..n_checks {
+            let l = rng.below(nl);
+            let idx = rng.below(model.params()[l].len());
+            let orig = model.params()[l].data()[idx];
+            model.params_mut()[l].data_mut()[idx] = orig + eps;
+            let (lp, _) = model.evaluate(batch);
+            model.params_mut()[l].data_mut()[idx] = orig - eps;
+            let (lm, _) = model.evaluate(batch);
+            model.params_mut()[l].data_mut()[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = res.grads[l].data()[idx];
+            assert!(
+                (fd - an).abs() <= tol * (1.0 + fd.abs().max(an.abs())),
+                "layer {l} idx {idx}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    /// The stats outer product must reproduce the gradient:
+    /// `∇W = Gᵀ A / m` — the consistency KFAC assumes.
+    pub fn check_stats_consistency<M: Model>(model: &M, batch: &Batch, tol: f32) {
+        let res = model.forward_backward(batch);
+        for l in 0..res.grads.len() {
+            let st = &res.stats[l];
+            let m = st.a.rows() as f32;
+            let rebuilt = crate::tensor::matmul_at_b(&st.g, &st.a).scale(1.0 / m);
+            crate::proptest::assert_mat_close(&rebuilt, &res.grads[l], tol, &format!("layer {l}"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_batch(rng: &mut Pcg, m: usize, d: usize, c: usize) -> Batch {
+        Batch { x: rng.normal_mat(m, d, 1.0), y: (0..m).map(|i| i % c).collect() }
+    }
+
+    #[test]
+    fn softmax_xent_uniform_logits() {
+        let z = Mat::zeros(4, 10);
+        let y = vec![0, 1, 2, 3];
+        let (loss, _, dz) = softmax_xent(&z, &y);
+        assert!((loss - (10f32).ln()).abs() < 1e-5);
+        for r in 0..4 {
+            let s: f32 = dz.row(r).iter().sum();
+            assert!(s.abs() < 1e-6, "gradient rows must sum to zero");
+        }
+    }
+
+    #[test]
+    fn mlp_gradcheck() {
+        let mut rng = Pcg::new(1);
+        let mut mlp = Mlp::new(&mut rng, &[5, 7, 4]);
+        let batch = toy_batch(&mut rng, 6, 5, 4);
+        testutil::check_grads(&mut mlp, &batch, 30, 2e-2);
+    }
+
+    #[test]
+    fn mlp_stats_reproduce_grads() {
+        let mut rng = Pcg::new(2);
+        let mlp = Mlp::new(&mut rng, &[5, 8, 3]);
+        let batch = toy_batch(&mut rng, 9, 5, 3);
+        testutil::check_stats_consistency(&mlp, &batch, 1e-4);
+    }
+
+    #[test]
+    fn mlp_trains_on_separable_data() {
+        let mut rng = Pcg::new(3);
+        let mut mlp = Mlp::new(&mut rng, &[4, 16, 3]);
+        let make = |rng: &mut Pcg| -> Batch {
+            let m = 30;
+            let y: Vec<usize> = (0..m).map(|_| rng.below(3)).collect();
+            let x = Mat::from_fn(m, 4, |r, c| if c == y[r] { 4.0 } else { 0.0 } + rng.normal());
+            Batch { x, y }
+        };
+        let hp = crate::optim::Hyper { lr: 0.2, momentum: 0.9, ..Default::default() };
+        let mut opt = crate::optim::Method::Sgd.build(&mlp.shapes(), &hp);
+        for t in 0..100 {
+            let b = make(&mut rng);
+            let res = mlp.forward_backward(&b);
+            opt.step(t, &mut mlp.params, &res.grads, &res.stats);
+        }
+        let b = make(&mut rng);
+        let (_, correct) = mlp.evaluate(&b);
+        assert!(correct as f32 / b.y.len() as f32 > 0.8, "acc {correct}/30");
+    }
+
+    #[test]
+    fn bias_column_is_learnable() {
+        // A constant-label problem solvable only through the bias.
+        let mut rng = Pcg::new(4);
+        let mut mlp = Mlp::new(&mut rng, &[2, 2]);
+        let batch = Batch { x: Mat::zeros(8, 2), y: vec![1; 8] };
+        let hp = crate::optim::Hyper { lr: 0.5, momentum: 0.0, ..Default::default() };
+        let mut opt = crate::optim::Method::Sgd.build(&mlp.shapes(), &hp);
+        for t in 0..50 {
+            let res = mlp.forward_backward(&batch);
+            opt.step(t, &mut mlp.params, &res.grads, &res.stats);
+        }
+        let (loss, correct) = mlp.evaluate(&batch);
+        assert_eq!(correct, 8);
+        assert!(loss < 0.1, "loss {loss}");
+    }
+}

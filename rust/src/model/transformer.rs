@@ -1,0 +1,589 @@
+//! A ViT-style transformer (Fig. 6 models) that doubles as a causal
+//! language model (the end-to-end example).
+//!
+//! Architecture: embedding (patch-linear for images, one-hot-linear for
+//! tokens) → `depth` pre-LN blocks (LN → single-head self-attention →
+//! residual → LN → 2-layer MLP → residual) → final LN → head
+//! (mean-pool classifier, or per-token LM logits with causal masking).
+//!
+//! All trainable layers are generalized linear layers with bias folded in;
+//! tokens are treated as extra batch rows for the Kronecker statistics
+//! (KFAC-expand, Eschenhagen et al., 2023). LayerNorm carries no learnable
+//! affine so the optimizer interface stays uniform (see DESIGN.md §3).
+
+use super::cnn::ImgShape;
+use super::{relu, relu_bwd, softmax_xent, BackwardResult, Batch, Linear, Model};
+use crate::optim::KronStats;
+use crate::proptest::Pcg;
+use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Mat};
+
+/// Input embedding mode.
+#[derive(Clone, Debug)]
+pub enum Embed {
+    /// Non-overlapping `patch×patch` image patches, linearly projected.
+    Patch { img: ImgShape, patch: usize },
+    /// Token ids (stored as f32 in `Batch::x`, one row per sequence),
+    /// one-hot embedded through a linear layer.
+    Token { vocab: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct TransformerCfg {
+    pub embed: Embed,
+    /// Model width `d`.
+    pub dim: usize,
+    /// Number of blocks.
+    pub depth: usize,
+    /// MLP expansion factor.
+    pub mlp_ratio: usize,
+    /// Output classes (classifier) or vocabulary (LM).
+    pub out: usize,
+    /// Causal attention + per-token LM loss.
+    pub causal_lm: bool,
+}
+
+const LN_EPS: f32 = 1e-5;
+
+/// Row-wise LayerNorm (no affine). Returns (y, inv_std per row, centered x).
+fn layernorm(x: &Mat) -> (Mat, Vec<f32>, Mat) {
+    let (m, d) = x.shape();
+    let mut y = Mat::zeros(m, d);
+    let mut inv_std = vec![0.0f32; m];
+    let mut centered = Mat::zeros(m, d);
+    for r in 0..m {
+        let row = x.row(r);
+        let mean: f32 = row.iter().sum::<f32>() / d as f32;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let is = 1.0 / (var + LN_EPS).sqrt();
+        inv_std[r] = is;
+        for c in 0..d {
+            let cent = row[c] - mean;
+            *centered.at_mut(r, c) = cent;
+            *y.at_mut(r, c) = cent * is;
+        }
+    }
+    (y, inv_std, centered)
+}
+
+/// LayerNorm backward.
+fn layernorm_bwd(dy: &Mat, inv_std: &[f32], centered: &Mat) -> Mat {
+    let (m, d) = dy.shape();
+    let mut dx = Mat::zeros(m, d);
+    for r in 0..m {
+        let is = inv_std[r];
+        let dyr = dy.row(r);
+        let cr = centered.row(r);
+        let mean_dy: f32 = dyr.iter().sum::<f32>() / d as f32;
+        let mean_dy_xhat: f32 =
+            dyr.iter().zip(cr).map(|(g, c)| g * c * is).sum::<f32>() / d as f32;
+        for c in 0..d {
+            let xhat = cr[c] * is;
+            *dx.at_mut(r, c) = is * (dyr[c] - mean_dy - xhat * mean_dy_xhat);
+        }
+    }
+    dx
+}
+
+/// Per-layer parameter indices of one block.
+struct BlockIdx {
+    wq: usize,
+    wk: usize,
+    wv: usize,
+    wo: usize,
+    w1: usize,
+    w2: usize,
+}
+
+pub struct Transformer {
+    pub cfg: TransformerCfg,
+    params: Vec<Mat>,
+    shapes: Vec<(usize, usize)>,
+    blocks: Vec<BlockIdx>,
+    embed_idx: usize,
+    head_idx: usize,
+    /// Tokens per sequence.
+    seq: usize,
+    /// Embedding input dim (patch dim or vocab).
+    #[allow(dead_code)]
+    in_dim: usize,
+}
+
+struct BlockCache {
+    ln1: (Mat, Vec<f32>, Mat),
+    q_xb: Mat,
+    k_xb: Mat,
+    v_xb: Mat,
+    q: Mat,
+    k: Mat,
+    v: Mat,
+    /// Per-sample softmax attention probabilities.
+    probs: Vec<Mat>,
+    #[allow(dead_code)]
+    att_out: Mat,
+    o_xb: Mat,
+    after_att: Mat,
+    ln2: (Mat, Vec<f32>, Mat),
+    m1_xb: Mat,
+    m1_pre: Mat,
+    m2_xb: Mat,
+}
+
+struct Cache {
+    embed_xb: Mat,
+    blocks: Vec<BlockCache>,
+    final_ln: (Mat, Vec<f32>, Mat),
+    pooled: Option<Mat>,
+    head_xb: Mat,
+    logits: Mat,
+    m: usize,
+}
+
+impl Transformer {
+    pub fn new(rng: &mut Pcg, cfg: TransformerCfg) -> Self {
+        let (in_dim, seq) = match &cfg.embed {
+            Embed::Patch { img, patch } => {
+                assert!(img.h % patch == 0 && img.w % patch == 0, "patch must divide image");
+                (img.c * patch * patch, (img.h / patch) * (img.w / patch))
+            }
+            Embed::Token { vocab } => (*vocab, 0), // seq comes from the batch
+        };
+        let d = cfg.dim;
+        let mut params = Vec::new();
+        let mut shapes = Vec::new();
+        let push = |rng: &mut Pcg, o: usize, i: usize, params: &mut Vec<Mat>, shapes: &mut Vec<(usize, usize)>| -> usize {
+            params.push(Linear::init(rng, o, i));
+            shapes.push((o, i + 1));
+            params.len() - 1
+        };
+        let embed_idx = push(rng, d, in_dim, &mut params, &mut shapes);
+        let mut blocks = Vec::new();
+        for _ in 0..cfg.depth {
+            let wq = push(rng, d, d, &mut params, &mut shapes);
+            let wk = push(rng, d, d, &mut params, &mut shapes);
+            let wv = push(rng, d, d, &mut params, &mut shapes);
+            let wo = push(rng, d, d, &mut params, &mut shapes);
+            let w1 = push(rng, d * cfg.mlp_ratio, d, &mut params, &mut shapes);
+            let w2 = push(rng, d, d * cfg.mlp_ratio, &mut params, &mut shapes);
+            blocks.push(BlockIdx { wq, wk, wv, wo, w1, w2 });
+        }
+        let head_idx = push(rng, cfg.out, d, &mut params, &mut shapes);
+        Transformer { cfg, params, shapes, blocks, embed_idx, head_idx, seq, in_dim }
+    }
+
+    /// Sequence length for a given batch.
+    fn seq_len(&self, batch: &Batch) -> usize {
+        match &self.cfg.embed {
+            Embed::Patch { .. } => self.seq,
+            Embed::Token { .. } => batch.x.cols(),
+        }
+    }
+
+    /// Build the `(m·s) × in_dim` embedding input rows.
+    fn embed_rows(&self, batch: &Batch) -> Mat {
+        match &self.cfg.embed {
+            Embed::Patch { img, patch } => {
+                // Cut non-overlapping patches (a strided im2col).
+                super::cnn::im2col(&batch.x, *img, *patch, *patch, 0)
+            }
+            Embed::Token { vocab } => {
+                let (m, s) = batch.x.shape();
+                let mut rows = Mat::zeros(m * s, *vocab);
+                for b in 0..m {
+                    for t in 0..s {
+                        let tok = batch.x.at(b, t) as usize;
+                        assert!(tok < *vocab, "token id out of range");
+                        *rows.at_mut(b * s + t, tok) = 1.0;
+                    }
+                }
+                rows
+            }
+        }
+    }
+
+    fn forward_cached(&self, batch: &Batch) -> Cache {
+        let m = batch.x.rows();
+        let s = self.seq_len(batch);
+        let d = self.cfg.dim;
+        let scale = 1.0 / (d as f32).sqrt();
+
+        let emb_in = self.embed_rows(batch);
+        let (mut h, embed_xb) = Linear::forward(&self.params[self.embed_idx], &emb_in);
+
+        let mut block_caches = Vec::new();
+        for blk in &self.blocks {
+            let ln1 = layernorm(&h);
+            let (q, q_xb) = Linear::forward(&self.params[blk.wq], &ln1.0);
+            let (k, k_xb) = Linear::forward(&self.params[blk.wk], &ln1.0);
+            let (v, v_xb) = Linear::forward(&self.params[blk.wv], &ln1.0);
+            // Attention per sample.
+            let mut att = Mat::zeros(m * s, d);
+            let mut probs = Vec::with_capacity(m);
+            for b in 0..m {
+                let qb = Mat::from_fn(s, d, |r, c| q.at(b * s + r, c));
+                let kb = Mat::from_fn(s, d, |r, c| k.at(b * s + r, c));
+                let vb = Mat::from_fn(s, d, |r, c| v.at(b * s + r, c));
+                let mut scores = matmul_a_bt(&qb, &kb).scale(scale);
+                if self.cfg.causal_lm {
+                    for r in 0..s {
+                        for c in (r + 1)..s {
+                            scores.set(r, c, f32::NEG_INFINITY);
+                        }
+                    }
+                }
+                let p = scores.softmax_rows();
+                let ob = matmul(&p, &vb);
+                for r in 0..s {
+                    for c in 0..d {
+                        *att.at_mut(b * s + r, c) = ob.at(r, c);
+                    }
+                }
+                probs.push(p);
+            }
+            let (proj, o_xb) = Linear::forward(&self.params[blk.wo], &att);
+            let after_att = h.add(&proj); // residual
+            let ln2 = layernorm(&after_att);
+            let (m1_pre, m1_xb) = Linear::forward(&self.params[blk.w1], &ln2.0);
+            let m1_act = relu(&m1_pre);
+            let (m2, m2_xb) = Linear::forward(&self.params[blk.w2], &m1_act);
+            let out = after_att.add(&m2); // residual
+            block_caches.push(BlockCache {
+                ln1,
+                q_xb,
+                k_xb,
+                v_xb,
+                q,
+                k,
+                v,
+                probs,
+                att_out: att,
+                o_xb,
+                after_att,
+                ln2,
+                m1_xb,
+                m1_pre,
+                m2_xb,
+            });
+            h = out;
+        }
+
+        let final_ln = layernorm(&h);
+        let (pooled, head_in) = if self.cfg.causal_lm {
+            (None, final_ln.0.clone())
+        } else {
+            // Mean-pool tokens per sample.
+            let mut pooled = Mat::zeros(m, d);
+            for b in 0..m {
+                for t in 0..s {
+                    for c in 0..d {
+                        *pooled.at_mut(b, c) += final_ln.0.at(b * s + t, c);
+                    }
+                }
+            }
+            let pooled = pooled.scale(1.0 / s as f32);
+            (Some(pooled.clone()), pooled)
+        };
+        let (logits, head_xb) = Linear::forward(&self.params[self.head_idx], &head_in);
+        Cache { embed_xb, blocks: block_caches, final_ln, pooled, head_xb, logits, m }
+    }
+
+    /// LM targets: next-token labels, flattened `(m·s)`; the final position
+    /// of each sequence predicts `batch.y[b]` (continuation token).
+    fn lm_labels(&self, batch: &Batch) -> Vec<usize> {
+        let (m, s) = batch.x.shape();
+        let mut labels = Vec::with_capacity(m * s);
+        for b in 0..m {
+            for t in 0..s {
+                if t + 1 < s {
+                    labels.push(batch.x.at(b, t + 1) as usize);
+                } else {
+                    labels.push(batch.y[b]);
+                }
+            }
+        }
+        labels
+    }
+}
+
+impl Model for Transformer {
+    fn shapes(&self) -> Vec<(usize, usize)> {
+        self.shapes.clone()
+    }
+
+    fn params_mut(&mut self) -> &mut Vec<Mat> {
+        &mut self.params
+    }
+
+    fn params(&self) -> &Vec<Mat> {
+        &self.params
+    }
+
+    fn forward_backward(&self, batch: &Batch) -> BackwardResult {
+        let cache = self.forward_cached(batch);
+        let m = cache.m;
+        let s = self.seq_len(batch);
+        let d = self.cfg.dim;
+        let scale = 1.0 / (d as f32).sqrt();
+
+        let labels: Vec<usize> =
+            if self.cfg.causal_lm { self.lm_labels(batch) } else { batch.y.clone() };
+        let (loss, correct, dlogits) = softmax_xent(&cache.logits, &labels);
+
+        let n = self.params.len();
+        let mut grads = vec![Mat::zeros(1, 1); n];
+        let mut stats: Vec<Option<KronStats>> = (0..n).map(|_| None).collect();
+
+        // Head.
+        let (g, dhead_in, st) = Linear::backward(&self.params[self.head_idx], &cache.head_xb, &dlogits);
+        grads[self.head_idx] = g;
+        stats[self.head_idx] = Some(st);
+
+        // Un-pool.
+        let dln_final = if self.cfg.causal_lm {
+            dhead_in
+        } else {
+            let _ = cache.pooled;
+            let mut dtok = Mat::zeros(m * s, d);
+            let inv = 1.0 / s as f32;
+            for b in 0..m {
+                for t in 0..s {
+                    for c in 0..d {
+                        *dtok.at_mut(b * s + t, c) = dhead_in.at(b, c) * inv;
+                    }
+                }
+            }
+            dtok
+        };
+        let mut dh = layernorm_bwd(&dln_final, &cache.final_ln.1, &cache.final_ln.2);
+
+        // Blocks in reverse.
+        for (bi, blk) in self.blocks.iter().enumerate().rev() {
+            let bc = &cache.blocks[bi];
+            // out = after_att + mlp(ln2(after_att))
+            let dm2 = dh.clone();
+            let (g2, dm1_act, st2) = Linear::backward(&self.params[blk.w2], &bc.m2_xb, &dm2);
+            grads[blk.w2] = g2;
+            stats[blk.w2] = Some(st2);
+            let dm1_pre = relu_bwd(&bc.m1_pre, &dm1_act);
+            let (g1, dln2_out, st1) = Linear::backward(&self.params[blk.w1], &bc.m1_xb, &dm1_pre);
+            grads[blk.w1] = g1;
+            stats[blk.w1] = Some(st1);
+            let dafter_att_mlp = layernorm_bwd(&dln2_out, &bc.ln2.1, &bc.ln2.2);
+            let dafter_att = dh.add(&dafter_att_mlp);
+
+            // after_att = h + proj(att)
+            let (go, datt, sto) = Linear::backward(&self.params[blk.wo], &bc.o_xb, &dafter_att);
+            grads[blk.wo] = go;
+            stats[blk.wo] = Some(sto);
+
+            // Attention backward per sample.
+            let mut dq = Mat::zeros(m * s, d);
+            let mut dk = Mat::zeros(m * s, d);
+            let mut dv = Mat::zeros(m * s, d);
+            for b in 0..m {
+                let p = &bc.probs[b];
+                let vb = Mat::from_fn(s, d, |r, c| bc.v.at(b * s + r, c));
+                let qb = Mat::from_fn(s, d, |r, c| bc.q.at(b * s + r, c));
+                let kb = Mat::from_fn(s, d, |r, c| bc.k.at(b * s + r, c));
+                let dob = Mat::from_fn(s, d, |r, c| datt.at(b * s + r, c));
+                let dp = matmul_a_bt(&dob, &vb); // s×s
+                let dvb = matmul_at_b(p, &dob); // s×d
+                // Softmax backward row-wise: ds_ij = p_ij (dp_ij − Σ_k dp_ik p_ik)
+                let mut ds = Mat::zeros(s, s);
+                for r in 0..s {
+                    let dot: f32 = (0..s).map(|c| dp.at(r, c) * p.at(r, c)).sum();
+                    for c in 0..s {
+                        ds.set(r, c, p.at(r, c) * (dp.at(r, c) - dot));
+                    }
+                }
+                let dqb = matmul(&ds, &kb).scale(scale);
+                let dkb = matmul_at_b(&ds, &qb).scale(scale);
+                for r in 0..s {
+                    for c in 0..d {
+                        *dq.at_mut(b * s + r, c) = dqb.at(r, c);
+                        *dk.at_mut(b * s + r, c) = dkb.at(r, c);
+                        *dv.at_mut(b * s + r, c) = dvb.at(r, c);
+                    }
+                }
+            }
+            let _ = &bc.att_out;
+
+            let (gq, dln1_q, stq) = Linear::backward(&self.params[blk.wq], &bc.q_xb, &dq);
+            let (gk, dln1_k, stk) = Linear::backward(&self.params[blk.wk], &bc.k_xb, &dk);
+            let (gv, dln1_v, stv) = Linear::backward(&self.params[blk.wv], &bc.v_xb, &dv);
+            grads[blk.wq] = gq;
+            stats[blk.wq] = Some(stq);
+            grads[blk.wk] = gk;
+            stats[blk.wk] = Some(stk);
+            grads[blk.wv] = gv;
+            stats[blk.wv] = Some(stv);
+            let dln1_out = dln1_q.add(&dln1_k).add(&dln1_v);
+            let dh_ln = layernorm_bwd(&dln1_out, &bc.ln1.1, &bc.ln1.2);
+            dh = dafter_att.add(&dh_ln);
+        }
+
+        // Embedding.
+        let (ge, _demb, ste) = Linear::backward(&self.params[self.embed_idx], &cache.embed_xb, &dh);
+        grads[self.embed_idx] = ge;
+        stats[self.embed_idx] = Some(ste);
+
+        BackwardResult {
+            loss,
+            correct,
+            grads,
+            stats: stats.into_iter().map(|s| s.unwrap()).collect(),
+        }
+    }
+
+    fn evaluate(&self, batch: &Batch) -> (f32, usize) {
+        let cache = self.forward_cached(batch);
+        let labels: Vec<usize> =
+            if self.cfg.causal_lm { self.lm_labels(batch) } else { batch.y.clone() };
+        let (loss, correct, _) = softmax_xent(&cache.logits, &labels);
+        (loss, correct)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil;
+
+    fn vit(rng: &mut Pcg) -> Transformer {
+        Transformer::new(
+            rng,
+            TransformerCfg {
+                embed: Embed::Patch { img: ImgShape { c: 2, h: 8, w: 8 }, patch: 4 },
+                dim: 10,
+                depth: 2,
+                mlp_ratio: 2,
+                out: 3,
+                causal_lm: false,
+            },
+        )
+    }
+
+    #[test]
+    fn layernorm_rows_standardized() {
+        let mut rng = Pcg::new(21);
+        let x = rng.normal_mat(5, 16, 3.0);
+        let (y, _, _) = layernorm(&x);
+        for r in 0..5 {
+            let mean: f32 = y.row(r).iter().sum::<f32>() / 16.0;
+            let var: f32 = y.row(r).iter().map(|v| v * v).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn layernorm_bwd_fd() {
+        // Check d/dx of sum(w ⊙ LN(x)) against finite differences.
+        let mut rng = Pcg::new(22);
+        let x = rng.normal_mat(3, 8, 1.0);
+        let w = rng.normal_mat(3, 8, 1.0);
+        let (_, inv_std, centered) = layernorm(&x);
+        let dx = layernorm_bwd(&w, &inv_std, &centered);
+        let eps = 1e-2f32;
+        for idx in [0usize, 5, 13, 23] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += eps;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= eps;
+            let f = |m: &Mat| -> f32 {
+                layernorm(m).0.data().iter().zip(w.data()).map(|(a, b)| a * b).sum()
+            };
+            let fd = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!((fd - dx.data()[idx]).abs() < 2e-2 * (1.0 + fd.abs()), "idx {idx}: {fd} vs {}", dx.data()[idx]);
+        }
+    }
+
+    #[test]
+    fn vit_gradcheck() {
+        let mut rng = Pcg::new(23);
+        let mut t = vit(&mut rng);
+        let batch = Batch { x: rng.normal_mat(2, 2 * 8 * 8, 1.0), y: vec![0, 2] };
+        testutil::check_grads(&mut t, &batch, 30, 6e-2);
+    }
+
+    #[test]
+    fn vit_stats_reproduce_grads() {
+        let mut rng = Pcg::new(24);
+        let t = vit(&mut rng);
+        let batch = Batch { x: rng.normal_mat(2, 2 * 8 * 8, 1.0), y: vec![1, 2] };
+        testutil::check_stats_consistency(&t, &batch, 1e-3);
+    }
+
+    #[test]
+    fn causal_lm_gradcheck() {
+        let mut rng = Pcg::new(25);
+        let mut t = Transformer::new(
+            &mut rng,
+            TransformerCfg {
+                embed: Embed::Token { vocab: 7 },
+                dim: 8,
+                depth: 1,
+                mlp_ratio: 2,
+                out: 7,
+                causal_lm: true,
+            },
+        );
+        let x = Mat::from_fn(2, 5, |_, _| rng.below(7) as f32);
+        let batch = Batch { x, y: vec![3, 4] };
+        testutil::check_grads(&mut t, &batch, 20, 6e-2);
+    }
+
+    #[test]
+    fn causal_mask_blocks_future() {
+        // Changing a *future* token must not change the logits at an
+        // earlier position.
+        let mut rng = Pcg::new(26);
+        let t = Transformer::new(
+            &mut rng,
+            TransformerCfg {
+                embed: Embed::Token { vocab: 5 },
+                dim: 6,
+                depth: 2,
+                mlp_ratio: 2,
+                out: 5,
+                causal_lm: true,
+            },
+        );
+        let x1 = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let x2 = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 0.0]); // last token differs
+        let c1 = t.forward_cached(&Batch { x: x1, y: vec![0] });
+        let c2 = t.forward_cached(&Batch { x: x2, y: vec![0] });
+        for pos in 0..3 {
+            for c in 0..5 {
+                assert!(
+                    (c1.logits.at(pos, c) - c2.logits.at(pos, c)).abs() < 1e-5,
+                    "position {pos} saw the future"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vit_trains_on_prototype_images() {
+        let mut rng = Pcg::new(27);
+        let mut t = vit(&mut rng);
+        let protos: Vec<Mat> = (0..3).map(|_| rng.normal_mat(1, 2 * 8 * 8, 1.0)).collect();
+        let make = |rng: &mut Pcg| -> Batch {
+            let m = 12;
+            let y: Vec<usize> = (0..m).map(|_| rng.below(3)).collect();
+            let x = Mat::from_fn(m, 2 * 8 * 8, |r, c| protos[y[r]].at(0, c) * 2.0 + rng.normal() * 0.3);
+            Batch { x, y }
+        };
+        let hp = crate::optim::Hyper { lr: 0.1, momentum: 0.9, ..Default::default() };
+        let mut opt = crate::optim::Method::AdamW.build(&t.shapes(), &hp);
+        let hp2 = crate::optim::Hyper { lr: 0.01, ..hp };
+        let _ = hp2;
+        for step in 0..60 {
+            let b = make(&mut rng);
+            let res = t.forward_backward(&b);
+            opt.step(step, &mut t.params, &res.grads, &res.stats);
+        }
+        let b = make(&mut rng);
+        let (_, correct) = t.evaluate(&b);
+        assert!(correct >= 9, "acc {correct}/12");
+    }
+}

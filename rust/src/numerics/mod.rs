@@ -1,0 +1,361 @@
+//! Software low-precision numeric formats and precision policies.
+//!
+//! This is the numeric-format substrate of the reproduction. The paper's
+//! central systems claim is that KFAC's matrix inversion/decomposition is
+//! *numerically unstable in BFloat16*, while the inverse-free updates of
+//! IKFAC/INGD/SINGD — which consist only of matrix multiplications and
+//! subtractions — stay stable. The original experiments ran on CUDA GPUs
+//! with PyTorch bf16 tensors; here we reproduce the *format semantics* in
+//! software so every experiment is bit-deterministic on CPU:
+//!
+//! - [`Bf16`] / [`Fp16`]: storage-bit-exact scalar types (u16 payload) with
+//!   IEEE round-to-nearest-even conversion from `f32`, correct subnormal /
+//!   infinity / NaN behaviour.
+//! - [`Dtype`]: a runtime format tag.
+//! - [`Policy`]: a compute/storage precision policy matching PyTorch
+//!   autocast semantics — ops compute in `f32` and round results to the
+//!   storage format. `Policy::quantize_mat` is the single chokepoint all
+//!   optimizers route their state updates through.
+//! - [`QMat`]: a matrix tagged with a storage dtype whose contents are
+//!   always representable in that dtype.
+//!
+//! The KFAC baseline performs its Cholesky factorization under the same
+//! policy and fails in bf16 exactly the way Figure 1/6/7 of the paper
+//! report (negative pivots from 8-bit-mantissa rounding of an
+//! ill-conditioned `S + λI`).
+
+mod scalar;
+mod scaler;
+
+pub use scalar::{Bf16, Fp16};
+pub use scaler::GradScaler;
+
+use crate::tensor::Mat;
+
+/// Runtime numeric format tag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    /// IEEE-754 binary32.
+    F32,
+    /// bfloat16: 1 sign, 8 exponent, 7 mantissa bits.
+    Bf16,
+    /// IEEE-754 binary16: 1 sign, 5 exponent, 10 mantissa bits.
+    Fp16,
+}
+
+impl Dtype {
+    /// Bytes per element.
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::Bf16 | Dtype::Fp16 => 2,
+        }
+    }
+
+    /// Round an `f32` value to this format (and back to f32 for compute).
+    #[inline]
+    pub fn round(self, x: f32) -> f32 {
+        match self {
+            Dtype::F32 => x,
+            Dtype::Bf16 => Bf16::from_f32(x).to_f32(),
+            Dtype::Fp16 => Fp16::from_f32(x).to_f32(),
+        }
+    }
+
+    /// Machine epsilon of the format.
+    pub fn eps(self) -> f32 {
+        match self {
+            Dtype::F32 => f32::EPSILON,
+            Dtype::Bf16 => 0.0078125,  // 2^-7
+            Dtype::Fp16 => 0.00097656, // 2^-10
+        }
+    }
+
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(Dtype::F32),
+            "bf16" | "bfp16" | "bfloat16" => Some(Dtype::Bf16),
+            "f16" | "fp16" | "float16" | "half" => Some(Dtype::Fp16),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "fp32",
+            Dtype::Bf16 => "bf16",
+            Dtype::Fp16 => "fp16",
+        }
+    }
+}
+
+/// Rounding mode applied when quantizing to the storage format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rounding {
+    /// IEEE round-to-nearest-even (default; what PyTorch/JAX do).
+    NearestEven,
+    /// Stochastic rounding (ablation; seeded).
+    Stochastic { seed: u64 },
+}
+
+/// A compute/storage precision policy.
+///
+/// `compute` is the format intermediate arithmetic is carried out in
+/// (always at least as wide as `store` in our experiments); `store` is the
+/// format every persisted tensor (optimizer state, preconditioner factors,
+/// parameters) is rounded to after each op. `Policy::fp32()` is the
+/// reference; `Policy::bf16_mixed()` mirrors the paper's "BFP-16
+/// mixed-precision training" setup (f32 compute, bf16 storage).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Policy {
+    pub compute: Dtype,
+    pub store: Dtype,
+    pub rounding: Rounding,
+}
+
+impl Policy {
+    /// Full-precision reference policy.
+    pub fn fp32() -> Policy {
+        Policy { compute: Dtype::F32, store: Dtype::F32, rounding: Rounding::NearestEven }
+    }
+
+    /// Mixed-precision bf16: f32 accumulate, bf16 storage (paper's BFP-16).
+    pub fn bf16_mixed() -> Policy {
+        Policy { compute: Dtype::F32, store: Dtype::Bf16, rounding: Rounding::NearestEven }
+    }
+
+    /// Pure bf16: even intermediate results are rounded. The harshest
+    /// setting; used in the stability ablation.
+    pub fn bf16_pure() -> Policy {
+        Policy { compute: Dtype::Bf16, store: Dtype::Bf16, rounding: Rounding::NearestEven }
+    }
+
+    /// Mixed-precision fp16.
+    pub fn fp16_mixed() -> Policy {
+        Policy { compute: Dtype::F32, store: Dtype::Fp16, rounding: Rounding::NearestEven }
+    }
+
+    /// Parse `"fp32" | "bf16" | "bf16-pure" | "fp16"`.
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" | "f32" => Some(Policy::fp32()),
+            "bf16" | "bfp16" | "bf16-mixed" => Some(Policy::bf16_mixed()),
+            "bf16-pure" => Some(Policy::bf16_pure()),
+            "fp16" | "f16" => Some(Policy::fp16_mixed()),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        if self.compute == self.store {
+            format!("{}-pure", self.store.name())
+        } else if self.store == Dtype::F32 {
+            "fp32".to_string()
+        } else {
+            self.store.name().to_string()
+        }
+    }
+
+    /// Round a scalar to the storage format.
+    #[inline]
+    pub fn q(&self, x: f32) -> f32 {
+        match self.rounding {
+            Rounding::NearestEven => self.store.round(x),
+            Rounding::Stochastic { seed } => stochastic_round(self.store, x, seed),
+        }
+    }
+
+    /// Round a scalar to the *compute* format (used inside emulated
+    /// low-precision kernels when `compute != F32`).
+    #[inline]
+    pub fn qc(&self, x: f32) -> f32 {
+        self.compute.round(x)
+    }
+
+    /// Quantize every entry of a matrix to the storage format, in place.
+    pub fn quantize_mat(&self, m: &mut Mat) {
+        if self.store == Dtype::F32 && matches!(self.rounding, Rounding::NearestEven) {
+            return;
+        }
+        match self.rounding {
+            Rounding::NearestEven => {
+                let d = self.store;
+                m.map_inplace(|x| d.round(x));
+            }
+            Rounding::Stochastic { seed } => {
+                let d = self.store;
+                let mut ctr = seed;
+                for v in m.data_mut() {
+                    ctr = ctr.wrapping_add(0x9e3779b97f4a7c15);
+                    *v = stochastic_round_ctr(d, *v, ctr);
+                }
+            }
+        }
+    }
+
+    /// Return a quantized copy.
+    pub fn quantized(&self, m: &Mat) -> Mat {
+        let mut out = m.clone();
+        self.quantize_mat(&mut out);
+        out
+    }
+
+    /// Bytes needed to store a matrix under this policy.
+    pub fn stored_bytes(&self, rows: usize, cols: usize) -> usize {
+        rows * cols * self.store.bytes()
+    }
+}
+
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+fn stochastic_round(d: Dtype, x: f32, seed: u64) -> f32 {
+    stochastic_round_ctr(d, x, splitmix(seed ^ x.to_bits() as u64))
+}
+
+/// Stochastic rounding: round to one of the two neighbouring representable
+/// values with probability proportional to proximity.
+fn stochastic_round_ctr(d: Dtype, x: f32, ctr: u64) -> f32 {
+    if d == Dtype::F32 || !x.is_finite() {
+        return d.round(x);
+    }
+    let down = next_representable_toward(d, x, false);
+    let up = next_representable_toward(d, x, true);
+    if down == up {
+        return down;
+    }
+    let frac = (x - down) / (up - down);
+    let u = (splitmix(ctr) >> 40) as f32 / (1u64 << 24) as f32;
+    if u < frac {
+        up
+    } else {
+        down
+    }
+}
+
+/// The nearest representable value of `d` that is `>= x` (up) or `<= x`.
+fn next_representable_toward(d: Dtype, x: f32, up: bool) -> f32 {
+    let r = d.round(x);
+    if (up && r >= x) || (!up && r <= x) {
+        return r;
+    }
+    // Step one ulp of the target format in the needed direction.
+    let bits = match d {
+        Dtype::Bf16 => Bf16::from_f32(r).bits(),
+        Dtype::Fp16 => Fp16::from_f32(r).bits(),
+        Dtype::F32 => return r,
+    };
+    let stepped = step_u16(bits, up);
+    match d {
+        Dtype::Bf16 => Bf16::from_bits(stepped).to_f32(),
+        Dtype::Fp16 => Fp16::from_bits(stepped).to_f32(),
+        Dtype::F32 => r,
+    }
+}
+
+fn step_u16(bits: u16, up: bool) -> u16 {
+    let sign = bits & 0x8000;
+    let mag = bits & 0x7fff;
+    let toward_larger = (sign == 0) == up; // larger value == larger magnitude iff positive
+    if toward_larger {
+        if mag == 0 && !up {
+            return 0x8001; // cross zero downward
+        }
+        mag.wrapping_add(1) | sign
+    } else if mag == 0 {
+        if up {
+            1
+        } else {
+            0x8001
+        }
+    } else {
+        (mag - 1) | sign
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_round_identity_for_f32() {
+        assert_eq!(Dtype::F32.round(1.234567), 1.234567);
+    }
+
+    #[test]
+    fn bf16_round_drops_mantissa() {
+        // 1 + 2^-8 is not representable in bf16 (7 mantissa bits) and
+        // rounds to 1.0 under nearest-even.
+        let x = 1.0 + 2f32.powi(-8);
+        assert_eq!(Dtype::Bf16.round(x), 1.0);
+        // 1 + 2^-7 is exactly representable.
+        let y = 1.0 + 2f32.powi(-7);
+        assert_eq!(Dtype::Bf16.round(y), y);
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        assert_eq!(Policy::parse("fp32"), Some(Policy::fp32()));
+        assert_eq!(Policy::parse("BF16"), Some(Policy::bf16_mixed()));
+        assert_eq!(Policy::parse("bf16-pure"), Some(Policy::bf16_pure()));
+        assert_eq!(Policy::parse("nope"), None);
+    }
+
+    #[test]
+    fn quantize_mat_bf16_reduces_precision() {
+        let m = Mat::from_vec(1, 3, vec![1.0, 1.0 + 2f32.powi(-9), 3.141592653]);
+        let q = Policy::bf16_mixed().quantized(&m);
+        assert_eq!(q.at(0, 0), 1.0);
+        assert_eq!(q.at(0, 1), 1.0); // rounded away
+        assert!((q.at(0, 2) - 3.141592653).abs() < 0.02);
+    }
+
+    #[test]
+    fn fp32_quantize_is_noop() {
+        let m = Mat::from_vec(1, 2, vec![1.23456789, -9.87654321]);
+        assert_eq!(Policy::fp32().quantized(&m), m);
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased_ish() {
+        // Value exactly halfway between two bf16 neighbours: the mean of
+        // many stochastic roundings should approach the value itself.
+        let x = 1.0 + 0.5 * 2f32.powi(-7);
+        let mut acc = 0.0f64;
+        let n = 4000;
+        for i in 0..n {
+            acc += stochastic_round_ctr(Dtype::Bf16, x, i as u64) as f64;
+        }
+        let mean = acc / n as f64;
+        assert!((mean - x as f64).abs() < 2e-3, "mean {mean} vs {x}");
+    }
+
+    #[test]
+    fn stochastic_round_hits_only_neighbours() {
+        let x = 0.3f32;
+        let lo = next_representable_toward(Dtype::Bf16, x, false);
+        let hi = next_representable_toward(Dtype::Bf16, x, true);
+        assert!(lo <= x && x <= hi && lo < hi);
+        for i in 0..200u64 {
+            let r = stochastic_round_ctr(Dtype::Bf16, x, i);
+            assert!(r == lo || r == hi, "{r} not in {{{lo},{hi}}}");
+        }
+    }
+
+    #[test]
+    fn eps_ordering() {
+        assert!(Dtype::F32.eps() < Dtype::Fp16.eps());
+        assert!(Dtype::Fp16.eps() < Dtype::Bf16.eps());
+    }
+
+    #[test]
+    fn stored_bytes_accounting() {
+        assert_eq!(Policy::fp32().stored_bytes(10, 10), 400);
+        assert_eq!(Policy::bf16_mixed().stored_bytes(10, 10), 200);
+    }
+}

@@ -1,0 +1,303 @@
+//! Bit-exact software `bfloat16` and IEEE `binary16` scalars.
+//!
+//! Conversions implement round-to-nearest-even, matching hardware bf16/fp16
+//! units (and `torch.bfloat16` / `jnp.bfloat16` semantics), including
+//! subnormals, overflow-to-infinity, and NaN propagation.
+
+/// bfloat16: the top 16 bits of an IEEE binary32.
+#[derive(Clone, Copy, PartialEq, Debug, Default)]
+pub struct Bf16(u16);
+
+impl Bf16 {
+    pub const ZERO: Bf16 = Bf16(0);
+    pub const ONE: Bf16 = Bf16(0x3f80);
+    pub const INFINITY: Bf16 = Bf16(0x7f80);
+    pub const NEG_INFINITY: Bf16 = Bf16(0xff80);
+    /// Largest finite bf16 (≈ 3.3895e38).
+    pub const MAX: Bf16 = Bf16(0x7f7f);
+    /// Smallest positive normal (2^-126).
+    pub const MIN_POSITIVE: Bf16 = Bf16(0x0080);
+    /// Machine epsilon: 2^-7.
+    pub const EPSILON: Bf16 = Bf16(0x3c00);
+
+    /// Convert from f32 with round-to-nearest-even.
+    #[inline]
+    pub fn from_f32(x: f32) -> Bf16 {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Quiet NaN, preserve sign + payload top bits; ensure non-zero mantissa.
+            return Bf16(((bits >> 16) as u16) | 0x0040);
+        }
+        // Round to nearest even on the truncated 16 bits.
+        let round_bit = 0x8000u32;
+        let lower = bits & 0xffff;
+        let mut upper = (bits >> 16) as u16;
+        if lower > round_bit || (lower == round_bit && (upper & 1) == 1) {
+            upper = upper.wrapping_add(1); // may carry into exponent -> correct (rounds to inf)
+        }
+        Bf16(upper)
+    }
+
+    /// Widen to f32 (exact).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    #[inline]
+    pub fn bits(self) -> u16 {
+        self.0
+    }
+
+    #[inline]
+    pub fn from_bits(bits: u16) -> Bf16 {
+        Bf16(bits)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7f80) == 0x7f80 && (self.0 & 0x007f) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7fff) == 0x7f80
+    }
+
+    pub fn is_finite(self) -> bool {
+        (self.0 & 0x7f80) != 0x7f80
+    }
+}
+
+/// IEEE-754 binary16 (half precision).
+#[derive(Clone, Copy, PartialEq, Debug, Default)]
+pub struct Fp16(u16);
+
+impl Fp16 {
+    pub const ZERO: Fp16 = Fp16(0);
+    pub const ONE: Fp16 = Fp16(0x3c00);
+    pub const INFINITY: Fp16 = Fp16(0x7c00);
+    pub const NEG_INFINITY: Fp16 = Fp16(0xfc00);
+    /// Largest finite fp16 (= 65504).
+    pub const MAX: Fp16 = Fp16(0x7bff);
+    /// Machine epsilon: 2^-10.
+    pub const EPSILON: Fp16 = Fp16(0x1400);
+
+    /// Convert from f32 with round-to-nearest-even (handles subnormals,
+    /// overflow to infinity, NaN payloads).
+    pub fn from_f32(x: f32) -> Fp16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xff) as i32;
+        let man = bits & 0x007f_ffff;
+
+        if exp == 0xff {
+            // Inf or NaN.
+            if man == 0 {
+                return Fp16(sign | 0x7c00);
+            }
+            return Fp16(sign | 0x7c00 | ((man >> 13) as u16) | 1);
+        }
+
+        // Unbiased exponent.
+        let e = exp - 127;
+        if e > 15 {
+            // Overflow -> infinity.
+            return Fp16(sign | 0x7c00);
+        }
+        if e >= -14 {
+            // Normal range.
+            let half_exp = ((e + 15) as u32) << 10;
+            let half_man = man >> 13;
+            let rest = man & 0x1fff;
+            let mut h = sign as u32 | half_exp | half_man;
+            // Round to nearest even.
+            if rest > 0x1000 || (rest == 0x1000 && (h & 1) == 1) {
+                h += 1; // may carry into exponent; that is correct rounding
+            }
+            return Fp16(h as u16);
+        }
+        if e < -25 {
+            // Underflow to signed zero.
+            return Fp16(sign);
+        }
+        // Subnormal half: value = 1.man · 2^e = half_man · 2^-24 with
+        // half_man = full_man · 2^(e+1) and full_man holding 24 bits.
+        let full_man = man | 0x0080_0000; // implicit leading 1
+        let shift = (-e - 1) as u32; // e ∈ [-25, -15] → shift ∈ [14, 24]
+        let half_man = full_man >> shift;
+        let rest = full_man & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut h = sign as u32 | half_man;
+        if rest > halfway || (rest == halfway && (h & 1) == 1) {
+            h += 1;
+        }
+        Fp16(h as u16)
+    }
+
+    /// Widen to f32 (exact).
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 & 0x8000) as u32) << 16;
+        let exp = ((self.0 >> 10) & 0x1f) as u32;
+        let man = (self.0 & 0x03ff) as u32;
+        let bits = if exp == 0 {
+            if man == 0 {
+                sign // ±0
+            } else {
+                // Subnormal: value = man * 2^-24 (exact in f32).
+                let v = man as f32 * 2f32.powi(-24);
+                return if sign != 0 { -v } else { v };
+            }
+        } else if exp == 0x1f {
+            sign | 0x7f80_0000 | (man << 13)
+        } else {
+            sign | ((exp + 112) << 23) | (man << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    #[inline]
+    pub fn bits(self) -> u16 {
+        self.0
+    }
+
+    #[inline]
+    pub fn from_bits(bits: u16) -> Fp16 {
+        Fp16(bits)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7c00) == 0x7c00 && (self.0 & 0x03ff) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7fff) == 0x7c00
+    }
+
+    pub fn is_finite(self) -> bool {
+        (self.0 & 0x7c00) != 0x7c00
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_exact_values_roundtrip() {
+        // All exactly representable in bf16 (≤ 8 significant bits).
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1.5, 3.0, 256.0, 2f32.powi(100)] {
+            assert_eq!(Bf16::from_f32(v).to_f32(), v, "roundtrip {v}");
+        }
+        // Round-trip is idempotent for arbitrary values.
+        for &v in &[1e30f32, -1e-30, 3.14159, 0.1] {
+            let once = Bf16::from_f32(v).to_f32();
+            assert_eq!(Bf16::from_f32(once).to_f32(), once, "idempotent {v}");
+        }
+    }
+
+    #[test]
+    fn bf16_round_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between 1.0 and 1.0+2^-7.
+        // Nearest-even picks 1.0 (even mantissa).
+        assert_eq!(Bf16::from_f32(1.0 + 2f32.powi(-8)).to_f32(), 1.0);
+        // (1 + 2^-7) + 2^-8 is halfway; nearest-even picks 1+2^-6 side?
+        // mantissa of 1+2^-7 is odd (…0000001) so it rounds up.
+        let x = 1.0 + 2f32.powi(-7) + 2f32.powi(-8);
+        assert_eq!(Bf16::from_f32(x).to_f32(), 1.0 + 2f32.powi(-6));
+        // Slightly above halfway rounds up.
+        assert_eq!(Bf16::from_f32(1.0 + 2f32.powi(-8) + 1e-6).to_f32(), 1.0 + 2f32.powi(-7));
+    }
+
+    #[test]
+    fn bf16_overflow_to_infinity() {
+        // Largest finite bf16 is ≈3.39e38; nudging above must round to inf.
+        let b = Bf16::from_f32(f32::MAX);
+        assert!(b.is_infinite());
+    }
+
+    #[test]
+    fn bf16_nan_propagates() {
+        assert!(Bf16::from_f32(f32::NAN).is_nan());
+        assert!(Bf16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn bf16_matches_truncation_plus_rounding_model() {
+        // Against an independent reference: round by adding the rounding
+        // bias then truncating (the classic "round half to even" trick).
+        let reference = |x: f32| -> f32 {
+            if x.is_nan() {
+                return f32::NAN;
+            }
+            let bits = x.to_bits();
+            let bias = 0x7fffu32 + ((bits >> 16) & 1);
+            f32::from_bits(((bits + bias) >> 16) << 16)
+        };
+        let mut seed = 0x12345u32;
+        for _ in 0..10_000 {
+            seed = seed.wrapping_mul(1664525).wrapping_add(1013904223);
+            let x = f32::from_bits(seed & 0x7fff_ffff);
+            if !x.is_finite() {
+                continue;
+            }
+            let ours = Bf16::from_f32(x).to_f32();
+            let theirs = reference(x);
+            assert!(
+                ours == theirs || (ours.is_infinite() && theirs.is_infinite()),
+                "x={x:e}: ours={ours:e} ref={theirs:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn fp16_known_values() {
+        assert_eq!(Fp16::from_f32(1.0).bits(), 0x3c00);
+        assert_eq!(Fp16::from_f32(-2.0).bits(), 0xc000);
+        assert_eq!(Fp16::from_f32(65504.0).bits(), 0x7bff);
+        assert!(Fp16::from_f32(65520.0).is_infinite()); // rounds over MAX
+        assert_eq!(Fp16::from_f32(0.0).bits(), 0x0000);
+    }
+
+    #[test]
+    fn fp16_roundtrip_exact_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 1024.0, 0.09997559] {
+            let h = Fp16::from_f32(v);
+            let back = h.to_f32();
+            let again = Fp16::from_f32(back);
+            assert_eq!(h.bits(), again.bits(), "double-roundtrip {v}");
+        }
+    }
+
+    #[test]
+    fn fp16_subnormals() {
+        // Smallest positive subnormal: 2^-24.
+        let tiny = 2f32.powi(-24);
+        let h = Fp16::from_f32(tiny);
+        assert_eq!(h.bits(), 1);
+        assert_eq!(h.to_f32(), tiny);
+        // Underflow below half the smallest subnormal -> zero.
+        assert_eq!(Fp16::from_f32(2f32.powi(-26)).bits(), 0);
+    }
+
+    #[test]
+    fn fp16_roundtrip_is_idempotent_random() {
+        let mut seed = 0xdeadbeefu32;
+        for _ in 0..10_000 {
+            seed = seed.wrapping_mul(1664525).wrapping_add(1013904223);
+            let x = f32::from_bits(seed);
+            if x.is_nan() {
+                continue;
+            }
+            let once = Fp16::from_f32(x).to_f32();
+            let twice = Fp16::from_f32(once).to_f32();
+            assert!(once == twice || (once.is_nan() && twice.is_nan()), "x={x:e}");
+        }
+    }
+
+    #[test]
+    fn fp16_nan_and_inf() {
+        assert!(Fp16::from_f32(f32::NAN).is_nan());
+        assert!(Fp16::from_f32(f32::INFINITY).is_infinite());
+        assert!(Fp16::from_f32(f32::NEG_INFINITY).is_infinite());
+        assert!(Fp16::from_f32(1e10).is_infinite());
+    }
+}

@@ -1,0 +1,111 @@
+//! AdamW in the paper's notation (Fig. 9, right): EMA second moment with
+//! bias correction, momentum on the raw gradient, decoupled weight decay.
+
+use super::{Hyper, KronStats, Optimizer};
+use crate::tensor::Mat;
+
+pub struct AdamW {
+    hp: Hyper,
+    /// Second-moment EMA `m_s` (Fig. 9).
+    second: Vec<Mat>,
+    /// First-moment momentum buffer `m_μ`.
+    first: Vec<Mat>,
+    diverged: bool,
+}
+
+impl AdamW {
+    pub fn new(shapes: &[(usize, usize)], hp: &Hyper) -> Self {
+        AdamW {
+            hp: hp.clone(),
+            second: shapes.iter().map(|&(o, i)| Mat::zeros(o, i)).collect(),
+            first: shapes.iter().map(|&(o, i)| Mat::zeros(o, i)).collect(),
+            diverged: false,
+        }
+    }
+}
+
+impl Optimizer for AdamW {
+    fn name(&self) -> String {
+        "adamw".into()
+    }
+
+    fn step(&mut self, t: usize, params: &mut [Mat], grads: &[Mat], _stats: &[KronStats]) {
+        let p = self.hp.policy;
+        // Fig. 9 uses β₁ for the second-moment EMA and α₂ for momentum.
+        let b1 = self.hp.precond_lr.clamp(1e-4, 0.5); // 1−β₂ᴬᵈᵃᵐ, e.g. 0.01
+        let a2 = self.hp.momentum;
+        let t1 = (t + 1) as i32;
+        for l in 0..params.len() {
+            let g = &grads[l];
+            // m_s ← (1−b1) m_s + b1 g²
+            let g2 = g.hadamard(g);
+            self.second[l].ema(1.0 - b1, b1, &g2);
+            p.quantize_mat(&mut self.second[l]);
+            // m_μ ← a2 m_μ + (1−a2) g
+            self.first[l].ema(a2, 1.0 - a2, g);
+            p.quantize_mat(&mut self.first[l]);
+            // Bias corrections.
+            let bc2 = 1.0 - (1.0 - b1).powi(t1);
+            let bc1 = 1.0 - a2.powi(t1);
+            let damping = self.hp.eps.max(1e-12);
+            // w ← w − β₂ ( m̂ / (√v̂ + λ) + γ w )
+            let wmat = &mut params[l];
+            for i in 0..wmat.len() {
+                let v = (self.second[l].data()[i] / bc2).max(0.0);
+                let mhat = self.first[l].data()[i] / bc1;
+                let upd = mhat / (v.sqrt() + damping) + self.hp.weight_decay * wmat.data()[i];
+                wmat.data_mut()[i] -= self.hp.lr * upd;
+            }
+            p.quantize_mat(wmat);
+            self.diverged |= wmat.has_nonfinite();
+        }
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.hp.lr = lr;
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.second
+            .iter()
+            .chain(self.first.iter())
+            .map(|m| self.hp.policy.stored_bytes(m.rows(), m.cols()))
+            .sum()
+    }
+
+    fn diverged(&self) -> bool {
+        self.diverged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{testutil, Method};
+
+    #[test]
+    fn adamw_converges_on_quadratic() {
+        let hp = Hyper { lr: 0.05, precond_lr: 0.05, weight_decay: 0.0, ..Hyper::default() };
+        let (l0, ln) = testutil::run_quadratic(&Method::AdamW, &hp, 150, 11);
+        assert!(ln < 0.1 * l0, "{l0} -> {ln}");
+    }
+
+    #[test]
+    fn adamw_step_size_is_lr_bounded_early() {
+        // With bias correction, the very first step is ≈ lr·sign(g).
+        let hp = Hyper { lr: 0.1, momentum: 0.9, weight_decay: 0.0, eps: 1e-8, ..Hyper::default() };
+        let mut opt = AdamW::new(&[(1, 1)], &hp);
+        let mut params = [Mat::zeros(1, 1)];
+        let grads = [Mat::from_vec(1, 1, vec![3.0])];
+        let stats = [KronStats { a: Mat::zeros(1, 1), g: Mat::zeros(1, 1) }];
+        opt.step(0, &mut params, &grads, &stats);
+        assert!((params[0].at(0, 0) + 0.1).abs() < 1e-3, "{}", params[0].at(0, 0));
+    }
+
+    #[test]
+    fn state_is_two_buffers() {
+        let hp = Hyper::default();
+        let opt = AdamW::new(&[(8, 4)], &hp);
+        assert_eq!(opt.state_bytes(), 2 * 8 * 4 * 4);
+    }
+}

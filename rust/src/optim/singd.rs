@@ -1,0 +1,421 @@
+//! SINGD / INGD / IKFAC — the paper's contribution (Figs. 3-right & 4).
+//!
+//! One engine covers all three methods:
+//!
+//! - **SINGD** (Fig. 4, right): structured factors `K̂`, `Ĉ`, Riemannian
+//!   momentum `α₁`, adaptive curvature (`Tr(H_C)`, `Tr(H_K)`) and adaptive
+//!   damping (`c² = λ·Tr(CᵀC)`, `κ² = λ·Tr(KᵀK)`).
+//! - **INGD** = SINGD with `Structure::Dense`.
+//! - **IKFAC** (Fig. 3, right) = SINGD with `adaptive = false` and
+//!   `α₁ = 0`: the trace factors collapse to `Tr(I) = d`, recovering the
+//!   update `K ← K(I − β₁/2 (H_K + λKᵀK − I))` of Eq. (8), which tracks
+//!   `(S_K + λI)⁻¹` to `O(β₁²)` (Theorem 1 — tested below).
+//!
+//! The update is *inverse-free*: only matrix multiplications and
+//! subtractions, all performed in the structure class, all rounded through
+//! the precision policy — hence stable in bf16 where KFAC breaks.
+//!
+//! Per-layer curvature enters via [`KronStats`] as the raw matrices
+//! `A ∈ R^{m×d_i}`, `Gm ∈ R^{m×d_o}`. We never form dense `U`/`G`:
+//! `H_K = Kᵀ U K = (A K)ᵀ(A K)/m` is consumed through the structure's
+//! `gram_project`, and `Tr(H_K) = ‖A K‖²_F/m`.
+
+use super::{Hyper, KronStats, Optimizer};
+use crate::structured::{SMat, Structure};
+use crate::tensor::Mat;
+
+struct LayerState {
+    k: SMat,
+    c: SMat,
+    m_k: SMat,
+    m_c: SMat,
+    m_mu: Mat,
+}
+
+pub struct Singd {
+    hp: Hyper,
+    #[allow(dead_code)]
+    structure: Structure,
+    /// INGD-style adaptive curvature/damping traces (false → IKFAC).
+    adaptive: bool,
+    /// Riemannian momentum α₁ (forced to 0 for IKFAC).
+    alpha1: f32,
+    layers: Vec<LayerState>,
+    diverged: bool,
+    label: String,
+}
+
+impl Singd {
+    /// Full SINGD (INGD when `structure == Dense`).
+    pub fn new(shapes: &[(usize, usize)], hp: &Hyper, structure: Structure) -> Self {
+        Self::build(shapes, hp, structure, true, hp.riem_momentum, None)
+    }
+
+    /// IKFAC: non-adaptive, zero Riemannian momentum (Fig. 3, right).
+    /// A structured variant of IKFAC (SIKFAC) is obtained with a
+    /// non-dense structure.
+    pub fn ikfac(shapes: &[(usize, usize)], hp: &Hyper, structure: Structure) -> Self {
+        let label = if structure == Structure::Dense {
+            "ikfac".to_string()
+        } else {
+            format!("ikfac:{}", structure.name())
+        };
+        Self::build(shapes, hp, structure, false, 0.0, Some(label))
+    }
+
+    fn build(
+        shapes: &[(usize, usize)],
+        hp: &Hyper,
+        structure: Structure,
+        adaptive: bool,
+        alpha1: f32,
+        label: Option<String>,
+    ) -> Self {
+        let layers = shapes
+            .iter()
+            .map(|&(o, i)| LayerState {
+                k: SMat::identity(structure, i),
+                c: SMat::identity(structure, o),
+                m_k: SMat::zeros(structure, i),
+                m_c: SMat::zeros(structure, o),
+                m_mu: Mat::zeros(o, i),
+            })
+            .collect();
+        let label = label.unwrap_or_else(|| {
+            if structure == Structure::Dense {
+                if adaptive {
+                    "ingd".to_string()
+                } else {
+                    "ikfac".to_string()
+                }
+            } else {
+                format!("singd:{}", structure.name())
+            }
+        });
+        Singd { hp: hp.clone(), structure, adaptive, alpha1, layers, diverged: false, label }
+    }
+
+    /// Access a layer's `K` factor (tests / telemetry).
+    pub fn k_factor(&self, layer: usize) -> &SMat {
+        &self.layers[layer].k
+    }
+
+    pub fn c_factor(&self, layer: usize) -> &SMat {
+        &self.layers[layer].c
+    }
+
+    /// Refresh the preconditioner of one layer (Fig. 4 step 1).
+    fn refresh_layer(st: &mut LayerState, stats: &KronStats, hp: &Hyper, adaptive: bool, alpha1: f32) {
+        let policy = hp.policy;
+        let lambda = hp.damping;
+        let m = stats.a.rows().max(1) as f32;
+        let d_i = st.k.dim() as f32;
+        let d_o = st.c.dim() as f32;
+
+        // B_K = A K ∈ R^{m×d_i};  B_C = Gm C ∈ R^{m×d_o}.
+        let b_k = st.k.right_mul(&stats.a, false);
+        let b_c = st.c.right_mul(&stats.g, false);
+
+        // Tr(H_K) = ‖B_K‖²/m, Tr(H_C) = ‖B_C‖²/m.
+        let tr_h_k = b_k.fro_norm().powi(2) / m;
+        let tr_h_c = b_c.fro_norm().powi(2) / m;
+
+        // Adaptive vs IKFAC coefficients:
+        //   adaptive: Tr(H_C)·H_K + λ·Tr(CᵀC)·KᵀK − d_o·I   (scaled 1/(2d_o))
+        //   ikfac:    d_o·H_K    + λ·d_o·KᵀK     − d_o·I    (scaled 1/(2d_o))
+        let (w_h_k, w_damp_k) =
+            if adaptive { (tr_h_c, lambda * st.c.fro_sq()) } else { (d_o, lambda * d_o) };
+        let (w_h_c, w_damp_c) =
+            if adaptive { (tr_h_k, lambda * st.k.fro_sq()) } else { (d_i, lambda * d_i) };
+
+        // m_K ← α₁ m_K + 1/(2d_o) Π̂(w_h·H_K + w_damp·KᵀK − d_o·I)
+        let mut upd_k = st.k.gram_project(&b_k, w_h_k / (m * 2.0 * d_o));
+        upd_k.axpy(1.0, &st.k.self_gram_project(w_damp_k / (2.0 * d_o)));
+        upd_k.axpy(-0.5, &SMat::identity(st.k.structure(), st.k.dim()));
+        st.m_k.scale_inplace(alpha1);
+        st.m_k.axpy(1.0, &upd_k);
+        st.m_k.quantize(&policy);
+
+        let mut upd_c = st.c.gram_project(&b_c, w_h_c / (m * 2.0 * d_i));
+        upd_c.axpy(1.0, &st.c.self_gram_project(w_damp_c / (2.0 * d_i)));
+        upd_c.axpy(-0.5, &SMat::identity(st.c.structure(), st.c.dim()));
+        st.m_c.scale_inplace(alpha1);
+        st.m_c.axpy(1.0, &upd_c);
+        st.m_c.quantize(&policy);
+
+        // K ← K (I − β₁ m_K)  (truncated matrix exponential, Eq. 8),
+        // with a trust region keeping the truncation valid: rescale so
+        // β₁·‖m_K‖∞ ≤ precond_clip (see `Hyper::precond_clip`).
+        // Frobenius norm bounds the spectral norm for symmetric m; at the
+        // orthonormalized fixed point m → 0, so the clip never binds once
+        // the preconditioner has adapted.
+        let clip = |m: &SMat| -> f32 {
+            let norm = hp.precond_lr * m.fro_sq().sqrt();
+            if norm > hp.precond_clip && norm.is_finite() {
+                hp.precond_clip / norm
+            } else {
+                1.0
+            }
+        };
+        let mut step_k = SMat::identity(st.k.structure(), st.k.dim());
+        step_k.axpy(-hp.precond_lr * clip(&st.m_k), &st.m_k);
+        st.k = st.k.matmul(&step_k);
+        st.k.quantize(&policy);
+
+        let mut step_c = SMat::identity(st.c.structure(), st.c.dim());
+        step_c.axpy(-hp.precond_lr * clip(&st.m_c), &st.m_c);
+        st.c = st.c.matmul(&step_c);
+        st.c.quantize(&policy);
+    }
+}
+
+impl Optimizer for Singd {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn step(&mut self, t: usize, params: &mut [Mat], grads: &[Mat], stats: &[KronStats]) {
+        let policy = self.hp.policy;
+        if t % self.hp.t_update == 0 {
+            for l in 0..params.len() {
+                Self::refresh_layer(&mut self.layers[l], &stats[l], &self.hp, self.adaptive, self.alpha1);
+            }
+        }
+        for l in 0..params.len() {
+            let st = &mut self.layers[l];
+            // m_μ ← α₂ m_μ + C Cᵀ ∇W K Kᵀ + γ W   (Fig. 4, step 2)
+            let precond = st.c.kkt_left(&st.k.kkt_right(&grads[l], ));
+            st.m_mu.ema(self.hp.momentum, 1.0, &precond);
+            st.m_mu.axpy(self.hp.weight_decay, &params[l]);
+            policy.quantize_mat(&mut st.m_mu);
+            // μ ← μ − β₂ m_μ   (Fig. 4, step 3), with the KL-style RMS
+            // trust region every production KFAC applies.
+            let f = super::update_clip_factor(self.hp.lr, &st.m_mu, self.hp.update_clip);
+            params[l].axpy(-self.hp.lr * f, &st.m_mu);
+            policy.quantize_mat(&mut params[l]);
+            self.diverged |= params[l].has_nonfinite()
+                || st.m_mu.has_nonfinite()
+                || st.k.has_nonfinite()
+                || st.c.has_nonfinite();
+        }
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.hp.lr = lr;
+    }
+
+    fn state_bytes(&self) -> usize {
+        let p = &self.hp.policy;
+        self.layers
+            .iter()
+            .map(|st| {
+                let mut b = st.k.bytes(p) + st.c.bytes(p) + p.stored_bytes(st.m_mu.rows(), st.m_mu.cols());
+                // Riemannian momentum buffers only exist when α₁ ≠ 0
+                // (IKFAC drops them — Fig. 1 right).
+                if self.alpha1 != 0.0 {
+                    b += st.m_k.bytes(p) + st.m_c.bytes(p);
+                }
+                b
+            })
+            .sum()
+    }
+
+    fn diverged(&self) -> bool {
+        self.diverged
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numerics::Policy;
+    use crate::optim::{testutil, Method};
+    use crate::proptest::{assert_mat_close, Pcg};
+    use crate::structured::Structure;
+
+    #[test]
+    fn ingd_converges_on_quadratic() {
+        // α₁ = 0 for a clean convergence check: on square loss the
+        // empirical Fisher vanishes at the optimum, so Riemannian momentum
+        // produces a benign late-time oscillation that a pointwise loss
+        // assertion would flag (classification losses — used in the paper's
+        // experiments and the exp/ drivers — do not have this pathology).
+        let hp = Hyper {
+            lr: 0.5,
+            momentum: 0.0,
+            riem_momentum: 0.0,
+            t_update: 1,
+            damping: 1e-3,
+            weight_decay: 0.0,
+            ..Hyper::default()
+        };
+        let (l0, ln) =
+            testutil::run_quadratic(&Method::Singd { structure: Structure::Dense }, &hp, 120, 23);
+        assert!(ln < 0.1 * l0, "ingd {l0} -> {ln}");
+    }
+
+    #[test]
+    fn singd_all_structures_stable_in_pure_bf16() {
+        // The headline stability claim: even in *pure* bf16 (every op
+        // rounded) the inverse-free update keeps finite state.
+        let hp = Hyper {
+            lr: 0.05,
+            momentum: 0.0,
+            riem_momentum: 0.0,
+            t_update: 1,
+            damping: 1e-3,
+            policy: Policy::bf16_pure(),
+            ..Hyper::default()
+        };
+        for st in [
+            Structure::Dense,
+            Structure::Diagonal,
+            Structure::BlockDiag { k: 4 },
+            Structure::Hierarchical { k1: 2, k2: 2 },
+            Structure::TriuToeplitz,
+            Structure::RankKTril { k: 2 },
+        ] {
+            let (l0, ln) = testutil::run_quadratic(&Method::Singd { structure: st }, &hp, 60, 29);
+            assert!(ln.is_finite(), "singd:{} diverged in pure bf16", st.name());
+            assert!(ln < l0, "singd:{} did not improve: {l0} -> {ln}", st.name());
+        }
+    }
+
+    /// Theorem 1: with the same curvature sequence, IKFAC's `K Kᵀ` tracks
+    /// KFAC's `(S_K + λI)⁻¹` with error `O(β₁²)` — halving β₁ must shrink
+    /// the deviation ≈4×.
+    #[test]
+    fn theorem1_ikfac_tracks_kfac_inverse_second_order() {
+        let mut rng = Pcg::new(31);
+        let d = 8;
+        let lambda = 0.1f32;
+        let steps = 20;
+        // Shared curvature sequence U_t (well-conditioned SPD).
+        let us: Vec<Mat> = (0..steps).map(|_| rng.spd_mat(d, 0.2)).collect();
+
+        let error_for = |beta1: f32| -> f32 {
+            // KFAC side: S̄ ← (1−β₁)S̄ + β₁(U + λI), S̄₀ = (1+λ)I (so K₀ = I
+            // matches S̄₀ = K₀⁻ᵀK₀⁻¹ ... use S̄₀ = I and λ folded: the
+            // theorem needs S̄₀ = K₀⁻ᵀK₀⁻¹; K₀ = I → S̄₀ = I.)
+            let mut s_bar = Mat::eye(d);
+            let mut k = Mat::eye(d);
+            let mut err_max = 0.0f32;
+            for u in &us {
+                // KFAC update of the damped factor.
+                let mut u_damped = u.clone();
+                u_damped.add_diag(lambda);
+                s_bar = s_bar.scale(1.0 - beta1);
+                s_bar.axpy(beta1, &u_damped);
+                // IKFAC update (Eq. 8).
+                let ku = crate::tensor::matmul(&crate::tensor::matmul(&k.transpose(), u), &k);
+                let ktk = crate::tensor::matmul_at_b(&k, &k);
+                let mut m_k = ku;
+                m_k.axpy(lambda, &ktk);
+                m_k.add_diag(-1.0);
+                let mut step = Mat::eye(d);
+                step.axpy(-beta1 / 2.0, &m_k);
+                k = crate::tensor::matmul(&k, &step);
+                // Compare K Kᵀ with S̄⁻¹.
+                let kkt = crate::tensor::matmul_a_bt(&k, &k);
+                let inv = crate::linalg::spd_inverse(&s_bar).unwrap();
+                let diff = kkt.sub(&inv).fro_norm() / inv.fro_norm();
+                err_max = err_max.max(diff);
+            }
+            err_max
+        };
+
+        let e1 = error_for(0.2);
+        let e2 = error_for(0.1);
+        let e3 = error_for(0.05);
+        // O(β²): each halving should reduce the error by ~4; allow slack.
+        assert!(e2 < e1 / 2.5, "e(0.2)={e1}, e(0.1)={e2}");
+        assert!(e3 < e2 / 2.5, "e(0.1)={e2}, e(0.05)={e3}");
+    }
+
+    /// Appendix F: INGD/SINGD are invariant to the Kronecker rescaling
+    /// `U → αU, G → G/α`; IKFAC/KFAC are not.
+    #[test]
+    fn invariance_of_ingd_to_kronecker_rescaling() {
+        let mut rng = Pcg::new(37);
+        let (d_i, d_o, m) = (6, 5, 16);
+        let a = rng.normal_mat(m, d_i, 1.0);
+        let gm = rng.normal_mat(m, d_o, 1.0);
+        let grad = rng.normal_mat(d_o, d_i, 1.0);
+        let alpha = 3.0f32;
+
+        let run = |adaptive: bool, scale_a: f32, scale_g: f32| -> Mat {
+            let hp = Hyper { lr: 0.1, t_update: 1, momentum: 0.0, weight_decay: 0.0, ..Hyper::default() };
+            let mut opt = if adaptive {
+                Singd::new(&[(d_o, d_i)], &hp, Structure::Dense)
+            } else {
+                Singd::ikfac(&[(d_o, d_i)], &hp, Structure::Dense)
+            };
+            let mut params = [Mat::zeros(d_o, d_i)];
+            // U = (scale_a A)ᵀ(scale_a A)/m = scale_a² U₀ → pick scale_a = √α.
+            let stats = KronStats { a: a.scale(scale_a), g: gm.scale(scale_g) };
+            for t in 0..5 {
+                opt.step(t, &mut params, std::slice::from_ref(&grad), std::slice::from_ref(&stats));
+            }
+            params[0].clone()
+        };
+
+        let sqrt_a = alpha.sqrt();
+        // INGD: rescaled run must match the unscaled one.
+        let w_base = run(true, 1.0, 1.0);
+        let w_scaled = run(true, sqrt_a, 1.0 / sqrt_a);
+        assert_mat_close(&w_base, &w_scaled, 5e-3, "INGD invariance");
+
+        // IKFAC: rescaling must change the trajectory.
+        let w_base_ik = run(false, 1.0, 1.0);
+        let w_scaled_ik = run(false, sqrt_a, 1.0 / sqrt_a);
+        let diff = w_base_ik.sub(&w_scaled_ik).fro_norm() / (1e-9 + w_base_ik.fro_norm());
+        assert!(diff > 1e-2, "IKFAC unexpectedly invariant (diff {diff})");
+    }
+
+    #[test]
+    fn ikfac_without_momentum_uses_less_state_than_ingd() {
+        let hp = Hyper::default();
+        let shapes = [(64usize, 64usize)];
+        let ingd = Singd::new(&shapes, &hp, Structure::Dense).state_bytes();
+        let ikfac = Singd::ikfac(&shapes, &hp, Structure::Dense).state_bytes();
+        assert!(ikfac < ingd, "ikfac {ikfac} < ingd {ingd}");
+    }
+
+    #[test]
+    fn structured_and_dense_agree_when_projection_is_lossless() {
+        // If curvature is diagonal (uncorrelated features) and K starts at
+        // I, SINGD-Diag and SINGD-Dense produce identical K diagonals.
+        let mut rng = Pcg::new(41);
+        let (d_i, d_o, m) = (6, 4, 512);
+        // Diagonal-dominant statistics: independent features.
+        let mut a = Mat::zeros(m, d_i);
+        for r in 0..m {
+            for c in 0..d_i {
+                *a.at_mut(r, c) = if r % d_i == c { rng.normal() * (1.0 + c as f32) } else { 0.0 };
+            }
+        }
+        let mut gm = Mat::zeros(m, d_o);
+        for r in 0..m {
+            for c in 0..d_o {
+                *gm.at_mut(r, c) = if r % d_o == c { rng.normal() } else { 0.0 };
+            }
+        }
+        let grad = rng.normal_mat(d_o, d_i, 1.0);
+        let hp = Hyper { lr: 0.1, t_update: 1, momentum: 0.0, weight_decay: 0.0, ..Hyper::default() };
+        let run = |structure: Structure| -> Mat {
+            let mut opt = Singd::new(&[(d_o, d_i)], &hp, structure);
+            let mut params = [Mat::zeros(d_o, d_i)];
+            let stats = KronStats { a: a.clone(), g: gm.clone() };
+            for t in 0..4 {
+                opt.step(t, &mut params, std::slice::from_ref(&grad), std::slice::from_ref(&stats));
+            }
+            opt.k_factor(0).to_dense()
+        };
+        let k_dense = run(Structure::Dense);
+        let k_diag = run(Structure::Diagonal);
+        for i in 0..d_i {
+            let (x, y) = (k_dense.at(i, i), k_diag.at(i, i));
+            assert!((x - y).abs() < 5e-3 * (1.0 + x.abs()), "diag {i}: {x} vs {y}");
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Seeded randomized property-testing helpers.
+//!
+//! `proptest`/`quickcheck` are unavailable in this offline environment, so
+//! this module provides the small subset the test-suite needs: a fast,
+//! reproducible PCG-XSH-RR generator plus `forall`-style drivers that run a
+//! property over many random cases and report the failing seed.
+
+use crate::tensor::Mat;
+
+/// PCG-XSH-RR 64/32 pseudo-random generator (O'Neill 2014).
+///
+/// Deterministic, seedable, and good enough statistical quality for
+/// synthetic data generation and property tests. Also used by
+/// [`crate::data`] so whole training runs are reproducible from a config
+/// seed.
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg {
+    const MULT: u64 = 6364136223846793005;
+
+    /// Seeded generator (stream id fixed).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Seeded generator with an explicit stream id.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut pcg = Pcg { state: 0, inc: (stream << 1) | 1 };
+        pcg.state = pcg.state.wrapping_mul(Self::MULT).wrapping_add(pcg.inc);
+        pcg.state = pcg.state.wrapping_add(seed);
+        pcg.state = pcg.state.wrapping_mul(Self::MULT).wrapping_add(pcg.inc);
+        pcg
+    }
+
+    /// Next u32.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(Self::MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next u64.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn uniform(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1 << 24) as f32)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.uniform().max(1e-12);
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f32::consts::PI * u2).cos()
+    }
+
+    /// Random matrix with iid `N(0, scale²)` entries.
+    pub fn normal_mat(&mut self, rows: usize, cols: usize, scale: f32) -> Mat {
+        Mat::from_fn(rows, cols, |_, _| self.normal() * scale)
+    }
+
+    /// Random symmetric positive-definite matrix `c·(GᵀG/n) + jitter·I`.
+    pub fn spd_mat(&mut self, n: usize, jitter: f32) -> Mat {
+        let g = self.normal_mat(n.max(2), n, 1.0);
+        let mut s = crate::tensor::matmul_at_b(&g, &g).scale(1.0 / n as f32);
+        s.add_diag(jitter);
+        s.symmetrize()
+    }
+
+    /// Random orthonormal matrix via Gram–Schmidt on a Gaussian matrix.
+    pub fn orthonormal_mat(&mut self, n: usize) -> Mat {
+        let mut q = self.normal_mat(n, n, 1.0);
+        for i in 0..n {
+            // Orthogonalize row i against previous rows (twice for stability).
+            for _ in 0..2 {
+                for j in 0..i {
+                    let dot: f32 = (0..n).map(|c| q.at(i, c) * q.at(j, c)).sum();
+                    for c in 0..n {
+                        *q.at_mut(i, c) -= dot * q.at(j, c);
+                    }
+                }
+            }
+            let norm: f32 = (0..n).map(|c| q.at(i, c).powi(2)).sum::<f32>().sqrt().max(1e-12);
+            for c in 0..n {
+                *q.at_mut(i, c) /= norm;
+            }
+        }
+        q
+    }
+
+    /// Random SPD matrix with a prescribed eigenvalue range:
+    /// `S = Q diag(d) Qᵀ` with `d` log-uniform in `[lo, hi]`, `Q` orthonormal.
+    pub fn spd_with_spectrum(&mut self, n: usize, lo: f32, hi: f32) -> Mat {
+        let q = self.orthonormal_mat(n);
+        let d: Vec<f32> = (0..n)
+            .map(|i| {
+                if i == 0 {
+                    lo
+                } else if i == n - 1 {
+                    hi
+                } else {
+                    lo * (hi / lo).powf(self.uniform())
+                }
+            })
+            .collect();
+        let qd = Mat::from_fn(n, n, |r, c| q.at(c, r) * d[c]); // Qᵀ scaled → columns
+        crate::tensor::matmul(&qd, &q).symmetrize()
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Run `prop` on `cases` random instances; panic with the failing case index
+/// and seed so the case can be replayed.
+pub fn forall(seed: u64, cases: usize, mut prop: impl FnMut(&mut Pcg, usize)) {
+    for case in 0..cases {
+        let mut rng = Pcg::with_stream(seed, case as u64 + 1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            panic!("property failed at case {case} (seed {seed}): {:?}", e.downcast_ref::<String>());
+        }
+    }
+}
+
+/// Assert two matrices are elementwise close with mixed abs/rel tolerance.
+pub fn assert_mat_close(a: &Mat, b: &Mat, tol: f32, ctx: &str) {
+    assert_eq!(a.shape(), b.shape(), "{ctx}: shape mismatch");
+    for i in 0..a.len() {
+        let (x, y) = (a.data()[i], b.data()[i]);
+        let denom = 1.0 + x.abs().max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * denom,
+            "{ctx}: element {i} differs: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_is_deterministic() {
+        let mut a = Pcg::new(42);
+        let mut b = Pcg::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn pcg_streams_differ() {
+        let mut a = Pcg::with_stream(1, 1);
+        let mut b = Pcg::with_stream(1, 2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u32()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u32()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut rng = Pcg::new(3);
+        for _ in 0..1000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments_roughly_standard() {
+        let mut rng = Pcg::new(5);
+        let n = 20_000;
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn spd_mat_is_spd() {
+        let mut rng = Pcg::new(9);
+        let s = rng.spd_mat(8, 0.1);
+        // symmetric
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((s.at(i, j) - s.at(j, i)).abs() < 1e-6);
+            }
+        }
+        // positive definite: Cholesky succeeds
+        assert!(crate::linalg::cholesky(&s).is_some());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg::new(17);
+        let mut v: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,177 @@
+//! Block-diagonal Kronecker factor (Table 1, row 2).
+//!
+//! `K = blockdiag(A₁, …, A_q)` with `A_b ∈ R^{k×k}` (last block may be
+//! smaller when `k ∤ d`). Storage `O(kd)`; every op is per-block and costs
+//! `O(k)` per matrix element touched, which yields the `O(k m d)` iteration
+//! cost of paper Table 2.
+
+use crate::tensor::{matmul, Mat};
+
+#[derive(Clone, Debug)]
+pub struct BlockDiagF {
+    pub d: usize,
+    pub k: usize,
+    /// Diagonal blocks; `blocks[b]` covers rows/cols `[b*k, b*k + blocks[b].rows())`.
+    pub blocks: Vec<Mat>,
+}
+
+impl BlockDiagF {
+    pub fn identity(d: usize, k: usize) -> Self {
+        let k = k.max(1).min(d.max(1));
+        let mut blocks = Vec::new();
+        let mut off = 0;
+        while off < d {
+            let sz = k.min(d - off);
+            blocks.push(Mat::eye(sz));
+            off += sz;
+        }
+        BlockDiagF { d, k, blocks }
+    }
+
+    /// Block start offsets.
+    fn offsets(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let mut off = 0;
+        self.blocks.iter().map(move |b| {
+            let cur = off;
+            off += b.rows();
+            (cur, b.rows())
+        })
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.d, self.d);
+        let mut off = 0;
+        for b in &self.blocks {
+            for r in 0..b.rows() {
+                for c in 0..b.cols() {
+                    m.set(off + r, off + c, b.at(r, c));
+                }
+            }
+            off += b.rows();
+        }
+        m
+    }
+
+    pub fn axpy(&mut self, alpha: f32, other: &BlockDiagF) {
+        assert_eq!(self.d, other.d);
+        assert_eq!(self.k, other.k);
+        for (a, b) in self.blocks.iter_mut().zip(&other.blocks) {
+            a.axpy(alpha, b);
+        }
+    }
+
+    pub fn matmul(&self, other: &BlockDiagF) -> BlockDiagF {
+        assert_eq!(self.d, other.d);
+        assert_eq!(self.k, other.k);
+        BlockDiagF {
+            d: self.d,
+            k: self.k,
+            blocks: self.blocks.iter().zip(&other.blocks).map(|(a, b)| matmul(a, b)).collect(),
+        }
+    }
+
+    /// `X @ K` or `X @ Kᵀ`.
+    pub fn right_mul(&self, x: &Mat, transpose: bool) -> Mat {
+        let m = x.rows();
+        let mut out = Mat::zeros(m, self.d);
+        for (off, sz) in self.offsets() {
+            let blk = &self.blocks[off / self.k];
+            for r in 0..m {
+                let xr = &x.row(r)[off..off + sz];
+                let or = &mut out.row_mut(r)[off..off + sz];
+                for j in 0..sz {
+                    let mut acc = 0.0f32;
+                    for i in 0..sz {
+                        let kij = if transpose { blk.at(j, i) } else { blk.at(i, j) };
+                        acc += xr[i] * kij;
+                    }
+                    or[j] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    /// `K @ X` or `Kᵀ @ X`.
+    pub fn left_mul(&self, x: &Mat, transpose: bool) -> Mat {
+        let n = x.cols();
+        let mut out = Mat::zeros(self.d, n);
+        for (off, sz) in self.offsets() {
+            let blk = &self.blocks[off / self.k];
+            for i in 0..sz {
+                let orow = out.row_mut(off + i);
+                for p in 0..sz {
+                    let kip = if transpose { blk.at(p, i) } else { blk.at(i, p) };
+                    if kip == 0.0 {
+                        continue;
+                    }
+                    let xrow = x.row(off + p);
+                    for c in 0..n {
+                        orow[c] += kip * xrow[c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `Π̂(scale · BᵀB)`: extract each diagonal block of the Gram matrix,
+    /// computed blockwise from `B` in `O(m d k)`.
+    pub fn gram_project(&self, b: &Mat, scale: f32) -> BlockDiagF {
+        let m = b.rows();
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for (off, sz) in self.offsets() {
+            let mut g = Mat::zeros(sz, sz);
+            for r in 0..m {
+                let br = &b.row(r)[off..off + sz];
+                for i in 0..sz {
+                    let bi = br[i];
+                    if bi == 0.0 {
+                        continue;
+                    }
+                    for j in 0..sz {
+                        *g.at_mut(i, j) += bi * br[j];
+                    }
+                }
+            }
+            blocks.push(g.scale(scale));
+        }
+        BlockDiagF { d: self.d, k: self.k, blocks }
+    }
+
+    pub fn trace(&self) -> f32 {
+        self.blocks.iter().map(|b| b.trace()).sum()
+    }
+
+    pub fn for_each(&self, f: &mut impl FnMut(f32)) {
+        for b in &self.blocks {
+            b.data().iter().for_each(|&x| f(x));
+        }
+    }
+
+    pub fn for_each_mut(&mut self, f: &mut impl FnMut(&mut f32)) {
+        for b in &mut self.blocks {
+            b.data_mut().iter_mut().for_each(&mut *f);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_blocks() {
+        let b = BlockDiagF::identity(10, 4); // blocks 4,4,2
+        assert_eq!(b.blocks.len(), 3);
+        assert_eq!(b.blocks[2].rows(), 2);
+        assert_eq!(b.to_dense(), Mat::eye(10));
+    }
+
+    #[test]
+    fn k_larger_than_d_clamps() {
+        let b = BlockDiagF::identity(3, 100);
+        assert_eq!(b.blocks.len(), 1);
+        assert_eq!(b.blocks[0].rows(), 3);
+    }
+}

@@ -1,0 +1,307 @@
+//! Hierarchical Kronecker factor (Table 1, row 3).
+//!
+//! ```text
+//!     [ A11  A12  A13 ]     A11 ∈ R^{k1×k1},  A33 ∈ R^{k2×k2} dense,
+//! K = [  0   D22   0  ]     D22 ∈ R^{dm×dm} diagonal, dm = d - k1 - k2,
+//!     [  0   A32  A33 ]     A12 ∈ R^{k1×dm}, A13 ∈ R^{k1×k2}, A32 ∈ R^{k2×dm}.
+//! ```
+//!
+//! The paper constructs it from the rank-k triangular class by replacing
+//! the trailing diagonal with another rank-k triangular block (Table 1
+//! caption); storage is `O((k1+k2)·d)`. Closure under multiplication:
+//!
+//! ```text
+//! P11 = A11·B11            P12 = A11·B12 + A12·D22' + A13·B32   P13 = A11·B13 + A13·B33
+//! P22 = D22·D22' (diag)    P32 = A32·D22' + A33·B32             P33 = A33·B33
+//! ```
+
+use crate::tensor::{matmul, Mat};
+
+#[derive(Clone, Debug)]
+pub struct HierF {
+    pub d: usize,
+    pub k1: usize,
+    pub k2: usize,
+    pub a11: Mat,
+    /// `k1 × dm`
+    pub a12: Mat,
+    /// `k1 × k2`
+    pub a13: Mat,
+    /// diagonal, length `dm`
+    pub d22: Vec<f32>,
+    /// `k2 × dm`
+    pub a32: Mat,
+    pub a33: Mat,
+}
+
+impl HierF {
+    pub fn identity(d: usize, k1: usize, k2: usize) -> Self {
+        // Clamp so k1 + k2 <= d.
+        let k1 = k1.min(d);
+        let k2 = k2.min(d - k1);
+        let dm = d - k1 - k2;
+        HierF {
+            d,
+            k1,
+            k2,
+            a11: Mat::eye(k1),
+            a12: Mat::zeros(k1, dm),
+            a13: Mat::zeros(k1, k2),
+            d22: vec![1.0; dm],
+            a32: Mat::zeros(k2, dm),
+            a33: Mat::eye(k2),
+        }
+    }
+
+    #[inline]
+    pub fn dm(&self) -> usize {
+        self.d - self.k1 - self.k2
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let (k1, k2, dm) = (self.k1, self.k2, self.dm());
+        let mut m = Mat::zeros(self.d, self.d);
+        for r in 0..k1 {
+            for c in 0..k1 {
+                m.set(r, c, self.a11.at(r, c));
+            }
+            for c in 0..dm {
+                m.set(r, k1 + c, self.a12.at(r, c));
+            }
+            for c in 0..k2 {
+                m.set(r, k1 + dm + c, self.a13.at(r, c));
+            }
+        }
+        for i in 0..dm {
+            m.set(k1 + i, k1 + i, self.d22[i]);
+        }
+        for r in 0..k2 {
+            for c in 0..dm {
+                m.set(k1 + dm + r, k1 + c, self.a32.at(r, c));
+            }
+            for c in 0..k2 {
+                m.set(k1 + dm + r, k1 + dm + c, self.a33.at(r, c));
+            }
+        }
+        m
+    }
+
+    pub fn axpy(&mut self, alpha: f32, o: &HierF) {
+        assert_eq!((self.d, self.k1, self.k2), (o.d, o.k1, o.k2));
+        self.a11.axpy(alpha, &o.a11);
+        self.a12.axpy(alpha, &o.a12);
+        self.a13.axpy(alpha, &o.a13);
+        for (a, b) in self.d22.iter_mut().zip(&o.d22) {
+            *a += alpha * b;
+        }
+        self.a32.axpy(alpha, &o.a32);
+        self.a33.axpy(alpha, &o.a33);
+    }
+
+    pub fn matmul(&self, o: &HierF) -> HierF {
+        assert_eq!((self.d, self.k1, self.k2), (o.d, o.k1, o.k2));
+        let dm = self.dm();
+        let a11 = matmul(&self.a11, &o.a11);
+        // P12 = A11 B12 + A12 ⊙ d22' + A13 B32
+        let mut a12 = matmul(&self.a11, &o.a12);
+        for r in 0..self.k1 {
+            for c in 0..dm {
+                *a12.at_mut(r, c) += self.a12.at(r, c) * o.d22[c];
+            }
+        }
+        a12 = a12.add(&matmul(&self.a13, &o.a32));
+        // P13 = A11 B13 + A13 B33
+        let a13 = matmul(&self.a11, &o.a13).add(&matmul(&self.a13, &o.a33));
+        let d22 = self.d22.iter().zip(&o.d22).map(|(x, y)| x * y).collect();
+        // P32 = A32 ⊙ d22' + A33 B32
+        let mut a32 = matmul(&self.a33, &o.a32);
+        for r in 0..self.k2 {
+            for c in 0..dm {
+                *a32.at_mut(r, c) += self.a32.at(r, c) * o.d22[c];
+            }
+        }
+        let a33 = matmul(&self.a33, &o.a33);
+        HierF { d: self.d, k1: self.k1, k2: self.k2, a11, a12, a13, d22, a32, a33 }
+    }
+
+    /// Dense products via the block formulas, `O((k1+k2)·d·m)`.
+    pub fn right_mul(&self, x: &Mat, transpose: bool) -> Mat {
+        // Fall back to dense-block assembly for clarity; blocks are small
+        // (k1, k2 ≪ d) so this is still O(k·d·m).
+        let m = x.rows();
+        let (k1, k2, dm) = (self.k1, self.k2, self.dm());
+        let mut out = Mat::zeros(m, self.d);
+        for r in 0..m {
+            let xr = x.row(r);
+            let or = out.row_mut(r);
+            if !transpose {
+                // out1 = x1 A11; out2 = x1 A12 + x2 ⊙ d22 + x3 A32; out3 = x1 A13 + x3 A33
+                for i in 0..k1 {
+                    let xi = xr[i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    for j in 0..k1 {
+                        or[j] += xi * self.a11.at(i, j);
+                    }
+                    for j in 0..dm {
+                        or[k1 + j] += xi * self.a12.at(i, j);
+                    }
+                    for j in 0..k2 {
+                        or[k1 + dm + j] += xi * self.a13.at(i, j);
+                    }
+                }
+                for j in 0..dm {
+                    or[k1 + j] += xr[k1 + j] * self.d22[j];
+                }
+                for i in 0..k2 {
+                    let xi = xr[k1 + dm + i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    for j in 0..dm {
+                        or[k1 + j] += xi * self.a32.at(i, j);
+                    }
+                    for j in 0..k2 {
+                        or[k1 + dm + j] += xi * self.a33.at(i, j);
+                    }
+                }
+            } else {
+                // (X Kᵀ)[j] = Σ_i x[i] K[j][i] = dot(x, row j of K).
+                for j in 0..k1 {
+                    let mut acc = 0.0f32;
+                    for i in 0..k1 {
+                        acc += xr[i] * self.a11.at(j, i);
+                    }
+                    for i in 0..dm {
+                        acc += xr[k1 + i] * self.a12.at(j, i);
+                    }
+                    for i in 0..k2 {
+                        acc += xr[k1 + dm + i] * self.a13.at(j, i);
+                    }
+                    or[j] = acc;
+                }
+                // Row k1+j of K has only the diagonal entry d22[j].
+                for j in 0..dm {
+                    or[k1 + j] = xr[k1 + j] * self.d22[j];
+                }
+                // Row k1+dm+j of K = (0, A32[j,:], A33[j,:]).
+                for j in 0..k2 {
+                    let mut acc = 0.0f32;
+                    for i in 0..dm {
+                        acc += xr[k1 + i] * self.a32.at(j, i);
+                    }
+                    for i in 0..k2 {
+                        acc += xr[k1 + dm + i] * self.a33.at(j, i);
+                    }
+                    or[k1 + dm + j] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn left_mul(&self, x: &Mat, transpose: bool) -> Mat {
+        // K @ X = (Xᵀ @ Kᵀ)ᵀ — reuse right_mul with flipped transpose.
+        let xt = x.transpose();
+        self.right_mul(&xt, !transpose).transpose()
+    }
+
+    /// `Π̂(scale·BᵀB) = [[M11, 2M12, 2M13],[0, Diag(M22), 0],[0, 2M32, M33]]`
+    /// computed from `B` in `O(m (k1+k2) d)` (Table 1, row 3).
+    pub fn gram_project(&self, b: &Mat, scale: f32) -> HierF {
+        let m = b.rows();
+        let (k1, k2, dm) = (self.k1, self.k2, self.dm());
+        let mut out = HierF::identity(self.d, k1, k2);
+        out.a11 = Mat::zeros(k1, k1);
+        out.a12 = Mat::zeros(k1, dm);
+        out.a13 = Mat::zeros(k1, k2);
+        out.d22 = vec![0.0; dm];
+        out.a32 = Mat::zeros(k2, dm);
+        out.a33 = Mat::zeros(k2, k2);
+        for r in 0..m {
+            let br = b.row(r);
+            let (b1, rest) = br.split_at(k1);
+            let (b2, b3) = rest.split_at(dm);
+            for i in 0..k1 {
+                let bi = b1[i];
+                if bi == 0.0 {
+                    continue;
+                }
+                for j in 0..k1 {
+                    *out.a11.at_mut(i, j) += bi * b1[j];
+                }
+                for j in 0..dm {
+                    *out.a12.at_mut(i, j) += 2.0 * bi * b2[j];
+                }
+                for j in 0..k2 {
+                    *out.a13.at_mut(i, j) += 2.0 * bi * b3[j];
+                }
+            }
+            for j in 0..dm {
+                out.d22[j] += b2[j] * b2[j];
+            }
+            for i in 0..k2 {
+                let bi = b3[i];
+                if bi == 0.0 {
+                    continue;
+                }
+                for j in 0..dm {
+                    *out.a32.at_mut(i, j) += 2.0 * bi * b2[j];
+                }
+                for j in 0..k2 {
+                    *out.a33.at_mut(i, j) += bi * b3[j];
+                }
+            }
+        }
+        out.a11 = out.a11.scale(scale);
+        out.a12 = out.a12.scale(scale);
+        out.a13 = out.a13.scale(scale);
+        for v in &mut out.d22 {
+            *v *= scale;
+        }
+        out.a32 = out.a32.scale(scale);
+        out.a33 = out.a33.scale(scale);
+        out
+    }
+
+    pub fn trace(&self) -> f32 {
+        self.a11.trace() + self.d22.iter().sum::<f32>() + self.a33.trace()
+    }
+
+    pub fn for_each(&self, f: &mut impl FnMut(f32)) {
+        self.a11.data().iter().for_each(|&x| f(x));
+        self.a12.data().iter().for_each(|&x| f(x));
+        self.a13.data().iter().for_each(|&x| f(x));
+        self.d22.iter().for_each(|&x| f(x));
+        self.a32.data().iter().for_each(|&x| f(x));
+        self.a33.data().iter().for_each(|&x| f(x));
+    }
+
+    pub fn for_each_mut(&mut self, f: &mut impl FnMut(&mut f32)) {
+        self.a11.data_mut().iter_mut().for_each(&mut *f);
+        self.a12.data_mut().iter_mut().for_each(&mut *f);
+        self.a13.data_mut().iter_mut().for_each(&mut *f);
+        self.d22.iter_mut().for_each(&mut *f);
+        self.a32.data_mut().iter_mut().for_each(&mut *f);
+        self.a33.data_mut().iter_mut().for_each(&mut *f);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_identity() {
+        assert_eq!(HierF::identity(9, 3, 2).to_dense(), Mat::eye(9));
+    }
+
+    #[test]
+    fn degenerate_middle_block() {
+        // k1 + k2 == d leaves dm == 0.
+        let h = HierF::identity(5, 3, 2);
+        assert_eq!(h.dm(), 0);
+        assert_eq!(h.to_dense(), Mat::eye(5));
+    }
+}

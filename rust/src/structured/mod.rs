@@ -1,0 +1,650 @@
+//! Structured Kronecker factors — the paper's core contribution (§3.2).
+//!
+//! SINGD replaces the dense Kronecker factors `K ∈ R^{d×d}` of INGD with
+//! members of *matrix Lie (sub)groups* that are closed under the operations
+//! the update needs — matrix multiplication, subtraction, scalar
+//! multiplication — so the multiplicative update `K ← K(I − β/2 Π̂(m))`
+//! never leaves the class and the dense log-space matrix `m` is never
+//! materialized.
+//!
+//! Supported structures (paper Table 1 / Figs. 5, 8):
+//!
+//! | variant            | storage   | class                                |
+//! |--------------------|-----------|--------------------------------------|
+//! | [`SMat::Dense`]    | `O(d²)`   | general linear (INGD)                |
+//! | [`SMat::Diag`]     | `O(d)`    | diagonal                             |
+//! | [`SMat::Block`]    | `O(kd)`   | block-diagonal, block size `k`       |
+//! | [`SMat::Tril`]     | `O(d²/2)` | lower triangular                     |
+//! | [`SMat::RankK`]    | `O(kd)`   | rank-k triangular `[[A,B],[0,D]]`    |
+//! | [`SMat::Hier`]     | `O(kd)`   | hierarchical (Table 1, row 3)        |
+//! | [`SMat::Toep`]     | `O(d)`    | upper-triangular Toeplitz            |
+//!
+//! Each structure implements:
+//!
+//! - the **subspace projection map** `Π̂` (Table 1) via [`SMat::gram_project`]
+//!   (computing `Π̂(s·BᵀB)` *directly from* `B` without forming the dense
+//!   Gram matrix — this is where the memory/runtime win comes from) and the
+//!   dense-reference [`proj`] used in tests;
+//! - closed **structured × structured** multiplication ([`SMat::matmul`]);
+//! - **structured × dense** products ([`SMat::right_mul`], [`SMat::left_mul`])
+//!   for computing `B = A K` and the preconditioned gradient `C Cᵀ G K Kᵀ`;
+//! - elementwise log-space arithmetic (`scale`, `axpy`) for the Riemannian
+//!   momentum buffer;
+//! - memory accounting ([`SMat::bytes`], Table 3).
+
+mod blockdiag;
+mod hier;
+pub mod proj;
+mod rankk;
+mod toeplitz;
+mod tril;
+
+pub use blockdiag::BlockDiagF;
+pub use hier::HierF;
+pub use rankk::RankKF;
+pub use toeplitz::ToepF;
+pub use tril::TrilF;
+
+use crate::numerics::Policy;
+use crate::tensor::Mat;
+
+/// Structure class selector (config-level).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Structure {
+    /// Dense factors — SINGD-Dense ≡ INGD.
+    Dense,
+    /// Diagonal factors — SINGD-Diag.
+    Diagonal,
+    /// Block-diagonal with block size `k`.
+    BlockDiag { k: usize },
+    /// Lower triangular.
+    Tril,
+    /// Rank-k triangular `[[A11, A12], [0, D22]]`, `A11 ∈ R^{k×k}`, `D22` diagonal.
+    RankKTril { k: usize },
+    /// Hierarchical `[[A11, A12, A13], [0, D22, 0], [0, A32, A33]]`,
+    /// `A11 ∈ R^{k1×k1}`, `A33 ∈ R^{k2×k2}`, `D22` diagonal.
+    Hierarchical { k1: usize, k2: usize },
+    /// Upper-triangular Toeplitz.
+    TriuToeplitz,
+}
+
+impl Structure {
+    /// Parse a config string like `"dense"`, `"diag"`, `"block:32"`,
+    /// `"tril"`, `"rankk:8"`, `"hier:16"`, `"toeplitz"`.
+    pub fn parse(s: &str) -> Option<Structure> {
+        let s = s.to_ascii_lowercase();
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, a.parse::<usize>().ok()),
+            None => (s.as_str(), None),
+        };
+        match head {
+            "dense" | "ingd" => Some(Structure::Dense),
+            "diag" | "diagonal" => Some(Structure::Diagonal),
+            "block" | "blockdiag" | "block-diag" => Some(Structure::BlockDiag { k: arg.unwrap_or(32) }),
+            "tril" | "triangular" => Some(Structure::Tril),
+            "rankk" | "rank-k" | "rank1" => Some(Structure::RankKTril { k: arg.unwrap_or(1) }),
+            "hier" | "hierarchical" => {
+                let k = arg.unwrap_or(16);
+                Some(Structure::Hierarchical { k1: k / 2, k2: k - k / 2 })
+            }
+            "toeplitz" | "toepl" | "triu-toepl" => Some(Structure::TriuToeplitz),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Structure::Dense => "dense".into(),
+            Structure::Diagonal => "diag".into(),
+            Structure::BlockDiag { k } => format!("block:{k}"),
+            Structure::Tril => "tril".into(),
+            Structure::RankKTril { k } => format!("rankk:{k}"),
+            Structure::Hierarchical { k1, k2 } => format!("hier:{}", k1 + k2),
+            Structure::TriuToeplitz => "toeplitz".into(),
+        }
+    }
+}
+
+/// A structured square matrix (a Kronecker factor `K`/`C`, or a log-space
+/// momentum element `m_K`/`m_C` — both live in the same class).
+#[derive(Clone, Debug)]
+pub enum SMat {
+    Dense(Mat),
+    Diag(Vec<f32>),
+    Block(BlockDiagF),
+    Tril(TrilF),
+    RankK(RankKF),
+    Hier(HierF),
+    Toep(ToepF),
+}
+
+impl SMat {
+    /// The identity element of the class.
+    pub fn identity(s: Structure, d: usize) -> SMat {
+        match s {
+            Structure::Dense => SMat::Dense(Mat::eye(d)),
+            Structure::Diagonal => SMat::Diag(vec![1.0; d]),
+            Structure::BlockDiag { k } => SMat::Block(BlockDiagF::identity(d, k)),
+            Structure::Tril => SMat::Tril(TrilF::identity(d)),
+            Structure::RankKTril { k } => SMat::RankK(RankKF::identity(d, k)),
+            Structure::Hierarchical { k1, k2 } => SMat::Hier(HierF::identity(d, k1, k2)),
+            Structure::TriuToeplitz => SMat::Toep(ToepF::identity(d)),
+        }
+    }
+
+    /// The zero element of the class (additive identity of the log space).
+    pub fn zeros(s: Structure, d: usize) -> SMat {
+        let mut z = SMat::identity(s, d);
+        z.scale_inplace(0.0);
+        z
+    }
+
+    /// Which structure class this element belongs to.
+    pub fn structure(&self) -> Structure {
+        match self {
+            SMat::Dense(_) => Structure::Dense,
+            SMat::Diag(_) => Structure::Diagonal,
+            SMat::Block(b) => Structure::BlockDiag { k: b.k },
+            SMat::Tril(_) => Structure::Tril,
+            SMat::RankK(r) => Structure::RankKTril { k: r.k },
+            SMat::Hier(h) => Structure::Hierarchical { k1: h.k1, k2: h.k2 },
+            SMat::Toep(_) => Structure::TriuToeplitz,
+        }
+    }
+
+    /// Matrix dimension `d`.
+    pub fn dim(&self) -> usize {
+        match self {
+            SMat::Dense(m) => m.rows(),
+            SMat::Diag(d) => d.len(),
+            SMat::Block(b) => b.d,
+            SMat::Tril(t) => t.d,
+            SMat::RankK(r) => r.d,
+            SMat::Hier(h) => h.d,
+            SMat::Toep(t) => t.d,
+        }
+    }
+
+    /// Materialize as a dense matrix (tests, gallery, dense fallbacks).
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            SMat::Dense(m) => m.clone(),
+            SMat::Diag(d) => Mat::diag(d),
+            SMat::Block(b) => b.to_dense(),
+            SMat::Tril(t) => t.to_dense(),
+            SMat::RankK(r) => r.to_dense(),
+            SMat::Hier(h) => h.to_dense(),
+            SMat::Toep(t) => t.to_dense(),
+        }
+    }
+
+    /// Scale all stored entries in place.
+    pub fn scale_inplace(&mut self, s: f32) {
+        self.for_each_mut(|x| *x *= s);
+    }
+
+    /// `self += alpha * other` (same structure and dim required).
+    pub fn axpy(&mut self, alpha: f32, other: &SMat) {
+        match (self, other) {
+            (SMat::Dense(a), SMat::Dense(b)) => a.axpy(alpha, b),
+            (SMat::Diag(a), SMat::Diag(b)) => {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += alpha * y;
+                }
+            }
+            (SMat::Block(a), SMat::Block(b)) => a.axpy(alpha, b),
+            (SMat::Tril(a), SMat::Tril(b)) => a.axpy(alpha, b),
+            (SMat::RankK(a), SMat::RankK(b)) => a.axpy(alpha, b),
+            (SMat::Hier(a), SMat::Hier(b)) => a.axpy(alpha, b),
+            (SMat::Toep(a), SMat::Toep(b)) => a.axpy(alpha, b),
+            _ => panic!("axpy: structure mismatch"),
+        }
+    }
+
+    /// Closed structured multiplication `self @ other`.
+    pub fn matmul(&self, other: &SMat) -> SMat {
+        match (self, other) {
+            (SMat::Dense(a), SMat::Dense(b)) => SMat::Dense(crate::tensor::matmul(a, b)),
+            (SMat::Diag(a), SMat::Diag(b)) => {
+                SMat::Diag(a.iter().zip(b).map(|(x, y)| x * y).collect())
+            }
+            (SMat::Block(a), SMat::Block(b)) => SMat::Block(a.matmul(b)),
+            (SMat::Tril(a), SMat::Tril(b)) => SMat::Tril(a.matmul(b)),
+            (SMat::RankK(a), SMat::RankK(b)) => SMat::RankK(a.matmul(b)),
+            (SMat::Hier(a), SMat::Hier(b)) => SMat::Hier(a.matmul(b)),
+            (SMat::Toep(a), SMat::Toep(b)) => SMat::Toep(a.matmul(b)),
+            _ => panic!("matmul: structure mismatch"),
+        }
+    }
+
+    /// Dense product `X @ K` (or `X @ Kᵀ` when `transpose`).
+    pub fn right_mul(&self, x: &Mat, transpose: bool) -> Mat {
+        assert_eq!(x.cols(), self.dim(), "right_mul: dim mismatch");
+        match self {
+            SMat::Dense(k) => {
+                if transpose {
+                    crate::tensor::matmul_a_bt(x, k)
+                } else {
+                    crate::tensor::matmul(x, k)
+                }
+            }
+            SMat::Diag(d) => {
+                let mut out = x.clone();
+                for r in 0..out.rows() {
+                    for (v, s) in out.row_mut(r).iter_mut().zip(d.iter()) {
+                        *v *= s;
+                    }
+                }
+                out
+            }
+            SMat::Block(b) => b.right_mul(x, transpose),
+            SMat::Tril(t) => t.right_mul(x, transpose),
+            SMat::RankK(r) => r.right_mul(x, transpose),
+            SMat::Hier(h) => h.right_mul(x, transpose),
+            SMat::Toep(t) => t.right_mul(x, transpose),
+        }
+    }
+
+    /// Dense product `K @ X` (or `Kᵀ @ X` when `transpose`).
+    pub fn left_mul(&self, x: &Mat, transpose: bool) -> Mat {
+        assert_eq!(x.rows(), self.dim(), "left_mul: dim mismatch");
+        match self {
+            SMat::Dense(k) => {
+                if transpose {
+                    crate::tensor::matmul_at_b(k, x)
+                } else {
+                    crate::tensor::matmul(k, x)
+                }
+            }
+            SMat::Diag(d) => {
+                let mut out = x.clone();
+                for r in 0..out.rows() {
+                    let s = d[r];
+                    for v in out.row_mut(r) {
+                        *v *= s;
+                    }
+                }
+                out
+            }
+            SMat::Block(b) => b.left_mul(x, transpose),
+            SMat::Tril(t) => t.left_mul(x, transpose),
+            SMat::RankK(r) => r.left_mul(x, transpose),
+            SMat::Hier(h) => h.left_mul(x, transpose),
+            SMat::Toep(t) => t.left_mul(x, transpose),
+        }
+    }
+
+    /// `X @ K @ Kᵀ` — the K-side of the preconditioned gradient
+    /// `m_μ = C Cᵀ vec⁻¹(g) K Kᵀ` (Fig. 4 step 2).
+    pub fn kkt_right(&self, x: &Mat) -> Mat {
+        let xk = self.right_mul(x, false);
+        self.right_mul(&xk, true)
+    }
+
+    /// `K Kᵀ @ X` — the C-side of the preconditioned gradient.
+    pub fn kkt_left(&self, x: &Mat) -> Mat {
+        let ktx = self.left_mul(x, true);
+        self.left_mul(&ktx, false)
+    }
+
+    /// `Π̂(scale · BᵀB)` computed directly from `B ∈ R^{m×d}` without
+    /// forming the dense `d×d` Gram matrix (except for classes whose
+    /// support is `O(d²)` anyway).
+    ///
+    /// With `B = A K` this yields `Π̂(H_K)`; with `B = K` (densified) it
+    /// yields `Π̂(KᵀK)`.
+    pub fn gram_project(&self, b: &Mat, scale: f32) -> SMat {
+        assert_eq!(b.cols(), self.dim(), "gram_project: dim mismatch");
+        match self {
+            SMat::Dense(_) => {
+                SMat::Dense(crate::tensor::matmul_at_b(b, b).scale(scale))
+            }
+            SMat::Diag(_) => {
+                let d = self.dim();
+                let mut out = vec![0.0f32; d];
+                for r in 0..b.rows() {
+                    for (o, v) in out.iter_mut().zip(b.row(r)) {
+                        *o += v * v;
+                    }
+                }
+                for o in &mut out {
+                    *o *= scale;
+                }
+                SMat::Diag(out)
+            }
+            SMat::Block(bl) => SMat::Block(bl.gram_project(b, scale)),
+            SMat::Tril(t) => SMat::Tril(t.gram_project(b, scale)),
+            SMat::RankK(r) => SMat::RankK(r.gram_project(b, scale)),
+            SMat::Hier(h) => SMat::Hier(h.gram_project(b, scale)),
+            SMat::Toep(t) => SMat::Toep(t.gram_project(b, scale)),
+        }
+    }
+
+    /// `Π̂(scale · KᵀK)` for this factor itself (the damping term of
+    /// Fig. 4). Fast path for diagonal; dense-materialized otherwise for
+    /// classes that need cross terms.
+    pub fn self_gram_project(&self, scale: f32) -> SMat {
+        match self {
+            SMat::Diag(d) => SMat::Diag(d.iter().map(|x| scale * x * x).collect()),
+            _ => {
+                let dense = self.to_dense();
+                self.gram_project(&dense, scale)
+            }
+        }
+    }
+
+    /// `Tr(KᵀK) = ‖K‖²_F` over the stored support.
+    pub fn fro_sq(&self) -> f32 {
+        let mut acc = 0.0f64;
+        self.for_each(|x| acc += (x as f64) * (x as f64));
+        // Structured storage never aliases entries except Toeplitz, where a
+        // coefficient appears on a whole (shrinking) diagonal.
+        if let SMat::Toep(t) = self {
+            let mut s = 0.0f64;
+            for (j, &c) in t.coef.iter().enumerate() {
+                s += (t.d - j) as f64 * (c as f64) * (c as f64);
+            }
+            return s as f32;
+        }
+        acc as f32
+    }
+
+    /// Trace of the factor itself.
+    pub fn trace(&self) -> f32 {
+        match self {
+            SMat::Dense(m) => m.trace(),
+            SMat::Diag(d) => d.iter().sum(),
+            SMat::Block(b) => b.trace(),
+            SMat::Tril(t) => t.trace(),
+            SMat::RankK(r) => r.trace(),
+            SMat::Hier(h) => h.trace(),
+            SMat::Toep(t) => t.coef[0] * t.d as f32,
+        }
+    }
+
+    /// Number of stored parameters.
+    pub fn nnz(&self) -> usize {
+        let mut n = 0usize;
+        self.for_each(|_| n += 1);
+        n
+    }
+
+    /// Bytes of storage under a precision policy (paper Table 3 / Fig. 1R).
+    pub fn bytes(&self, policy: &Policy) -> usize {
+        self.nnz() * policy.store.bytes()
+    }
+
+    /// Round all stored entries to the policy's storage format.
+    pub fn quantize(&mut self, policy: &Policy) {
+        if policy.store == crate::numerics::Dtype::F32 {
+            return;
+        }
+        let p = *policy;
+        self.for_each_mut(|x| *x = p.q(*x));
+    }
+
+    /// Max absolute stored entry (∞-norm proxy used for the log-space
+    /// trust region in [`crate::optim::Singd`]).
+    pub fn max_abs(&self) -> f32 {
+        let mut m = 0.0f32;
+        self.for_each(|x| m = m.max(x.abs()));
+        m
+    }
+
+    /// True if any stored entry is NaN/Inf.
+    pub fn has_nonfinite(&self) -> bool {
+        let mut bad = false;
+        self.for_each(|x| bad |= !x.is_finite());
+        bad
+    }
+
+    fn for_each(&self, mut f: impl FnMut(f32)) {
+        match self {
+            SMat::Dense(m) => m.data().iter().for_each(|&x| f(x)),
+            SMat::Diag(d) => d.iter().for_each(|&x| f(x)),
+            SMat::Block(b) => b.for_each(&mut f),
+            SMat::Tril(t) => t.data.iter().for_each(|&x| f(x)),
+            SMat::RankK(r) => r.for_each(&mut f),
+            SMat::Hier(h) => h.for_each(&mut f),
+            SMat::Toep(t) => t.coef.iter().for_each(|&x| f(x)),
+        }
+    }
+
+    fn for_each_mut(&mut self, mut f: impl FnMut(&mut f32)) {
+        match self {
+            SMat::Dense(m) => m.data_mut().iter_mut().for_each(&mut f),
+            SMat::Diag(d) => d.iter_mut().for_each(&mut f),
+            SMat::Block(b) => b.for_each_mut(&mut f),
+            SMat::Tril(t) => t.data.iter_mut().for_each(&mut f),
+            SMat::RankK(r) => r.for_each_mut(&mut f),
+            SMat::Hier(h) => h.for_each_mut(&mut f),
+            SMat::Toep(t) => t.coef.iter_mut().for_each(&mut f),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{assert_mat_close, forall, Pcg};
+
+    pub(crate) const ALL: &[Structure] = &[
+        Structure::Dense,
+        Structure::Diagonal,
+        Structure::BlockDiag { k: 4 },
+        Structure::Tril,
+        Structure::RankKTril { k: 3 },
+        Structure::Hierarchical { k1: 3, k2: 2 },
+        Structure::TriuToeplitz,
+    ];
+
+    /// Random element of a structure class: project a random symmetric
+    /// matrix, then shift by identity to keep it well-conditioned.
+    pub(crate) fn random_smat(s: Structure, d: usize, rng: &mut Pcg) -> SMat {
+        let m = rng.normal_mat(d, d, 0.3).symmetrize();
+        let mut x = proj::proj(s, &m);
+        let id = SMat::identity(s, d);
+        x.axpy(1.0, &id);
+        x
+    }
+
+    #[test]
+    fn identity_is_dense_identity() {
+        for &s in ALL {
+            let id = SMat::identity(s, 13);
+            assert_mat_close(&id.to_dense(), &Mat::eye(13), 1e-7, &format!("{s:?}"));
+        }
+    }
+
+    #[test]
+    fn matmul_matches_dense_reference() {
+        forall(31, 12, |rng, case| {
+            let d = 6 + rng.below(14);
+            for &s in ALL {
+                let a = random_smat(s, d, rng);
+                let b = random_smat(s, d, rng);
+                let prod = a.matmul(&b);
+                // closure: result must be in the same class
+                assert_eq!(prod.structure(), a.structure(), "case {case} {s:?}");
+                let dense_ref = crate::tensor::matmul(&a.to_dense(), &b.to_dense());
+                assert_mat_close(&prod.to_dense(), &dense_ref, 1e-4, &format!("{s:?}"));
+            }
+        });
+    }
+
+    #[test]
+    fn right_left_mul_match_dense() {
+        forall(32, 10, |rng, _| {
+            let d = 5 + rng.below(12);
+            let m = 3 + rng.below(9);
+            let x_right = rng.normal_mat(m, d, 1.0);
+            let x_left = rng.normal_mat(d, m, 1.0);
+            for &s in ALL {
+                let k = random_smat(s, d, rng);
+                let kd = k.to_dense();
+                assert_mat_close(
+                    &k.right_mul(&x_right, false),
+                    &crate::tensor::matmul(&x_right, &kd),
+                    1e-4,
+                    &format!("{s:?} right"),
+                );
+                assert_mat_close(
+                    &k.right_mul(&x_right, true),
+                    &crate::tensor::matmul_a_bt(&x_right, &kd),
+                    1e-4,
+                    &format!("{s:?} right-T"),
+                );
+                assert_mat_close(
+                    &k.left_mul(&x_left, false),
+                    &crate::tensor::matmul(&kd, &x_left),
+                    1e-4,
+                    &format!("{s:?} left"),
+                );
+                assert_mat_close(
+                    &k.left_mul(&x_left, true),
+                    &crate::tensor::matmul_at_b(&kd, &x_left),
+                    1e-4,
+                    &format!("{s:?} left-T"),
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn kkt_products_match_dense() {
+        forall(33, 8, |rng, _| {
+            let d = 4 + rng.below(10);
+            let x = rng.normal_mat(3, d, 1.0);
+            let y = rng.normal_mat(d, 3, 1.0);
+            for &s in ALL {
+                let k = random_smat(s, d, rng);
+                let kd = k.to_dense();
+                let kkt = crate::tensor::matmul_a_bt(&kd, &kd);
+                assert_mat_close(
+                    &k.kkt_right(&x),
+                    &crate::tensor::matmul(&x, &kkt),
+                    1e-4,
+                    &format!("{s:?} X K Kᵀ"),
+                );
+                assert_mat_close(
+                    &k.kkt_left(&y),
+                    &crate::tensor::matmul(&kkt, &y),
+                    1e-4,
+                    &format!("{s:?} K Kᵀ Y"),
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn gram_project_matches_dense_proj() {
+        forall(34, 10, |rng, _| {
+            let d = 5 + rng.below(11);
+            let m = 4 + rng.below(8);
+            let b = rng.normal_mat(m, d, 1.0);
+            let gram = crate::tensor::matmul_at_b(&b, &b).scale(0.7);
+            for &s in ALL {
+                let k = SMat::identity(s, d);
+                let got = k.gram_project(&b, 0.7);
+                let want = proj::proj(s, &gram);
+                assert_mat_close(&got.to_dense(), &want.to_dense(), 1e-4, &format!("{s:?}"));
+            }
+        });
+    }
+
+    #[test]
+    fn self_gram_project_matches() {
+        forall(35, 8, |rng, _| {
+            let d = 5 + rng.below(9);
+            for &s in ALL {
+                let k = random_smat(s, d, rng);
+                let kd = k.to_dense();
+                let gram = crate::tensor::matmul_at_b(&kd, &kd).scale(1.3);
+                let want = proj::proj(s, &gram);
+                let got = k.self_gram_project(1.3);
+                assert_mat_close(&got.to_dense(), &want.to_dense(), 1e-4, &format!("{s:?}"));
+            }
+        });
+    }
+
+    #[test]
+    fn fro_sq_matches_dense() {
+        forall(36, 8, |rng, _| {
+            let d = 4 + rng.below(12);
+            for &s in ALL {
+                let k = random_smat(s, d, rng);
+                let dense = k.to_dense();
+                let want = dense.fro_norm().powi(2);
+                let got = k.fro_sq();
+                assert!((got - want).abs() <= 1e-3 * (1.0 + want), "{s:?}: {got} vs {want}");
+            }
+        });
+    }
+
+    #[test]
+    fn trace_matches_dense() {
+        forall(37, 8, |rng, _| {
+            let d = 4 + rng.below(12);
+            for &s in ALL {
+                let k = random_smat(s, d, rng);
+                let want = k.to_dense().trace();
+                assert!((k.trace() - want).abs() < 1e-4 * (1.0 + want.abs()), "{s:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn nnz_and_bytes_scaling() {
+        let d = 64;
+        let p = Policy::fp32();
+        let dense = SMat::identity(Structure::Dense, d).bytes(&p);
+        let diag = SMat::identity(Structure::Diagonal, d).bytes(&p);
+        let block = SMat::identity(Structure::BlockDiag { k: 8 }, d).bytes(&p);
+        let toep = SMat::identity(Structure::TriuToeplitz, d).bytes(&p);
+        assert_eq!(dense, d * d * 4);
+        assert_eq!(diag, d * 4);
+        assert_eq!(block, d * 8 * 4);
+        assert_eq!(toep, d * 4);
+        // bf16 halves everything
+        let pb = Policy::bf16_mixed();
+        assert_eq!(SMat::identity(Structure::Dense, d).bytes(&pb), d * d * 2);
+    }
+
+    #[test]
+    fn axpy_and_scale_match_dense() {
+        forall(38, 6, |rng, _| {
+            let d = 5 + rng.below(9);
+            for &s in ALL {
+                let mut a = random_smat(s, d, rng);
+                let b = random_smat(s, d, rng);
+                let want = a.to_dense().scale(0.5).add(&b.to_dense().scale(2.0));
+                a.scale_inplace(0.5);
+                a.axpy(2.0, &b);
+                assert_mat_close(&a.to_dense(), &want, 1e-5, &format!("{s:?}"));
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_bf16_changes_entries_representably() {
+        let mut rng = Pcg::new(40);
+        for &s in ALL {
+            let mut k = random_smat(s, 10, &mut rng);
+            k.quantize(&Policy::bf16_mixed());
+            k.for_each(|x| {
+                assert_eq!(x, crate::numerics::Dtype::Bf16.round(x), "{s:?} not bf16-representable");
+            });
+        }
+    }
+
+    #[test]
+    fn structure_parse_roundtrip() {
+        for &s in ALL {
+            let parsed = Structure::parse(&s.name()).unwrap();
+            // hier collapses k1/k2 to k1+k2; compare via name
+            assert_eq!(parsed.name(), s.name());
+        }
+        assert_eq!(Structure::parse("block:16"), Some(Structure::BlockDiag { k: 16 }));
+        assert!(Structure::parse("bogus").is_none());
+    }
+}

@@ -1,0 +1,262 @@
+//! Rank-k triangular Kronecker factor (Table 1, row 4; Fig. 8).
+//!
+//! ```text
+//! K = [ A11  A12 ]      A11 ∈ R^{k×k} dense,
+//!     [  0   D22 ]      D22 ∈ R^{(d-k)×(d-k)} diagonal.
+//! ```
+//!
+//! Storage `O(kd)`. The class is closed under multiplication:
+//! `[[A,B],[0,D]]·[[A',B'],[0,D']] = [[AA', AB' + BD'],[0, DD']]` and `DD'`
+//! stays diagonal. With `k = 1` this gives the diagonal-plus-rank-one
+//! structure of `K Kᵀ` shown in Fig. 8.
+
+use crate::tensor::{matmul, Mat};
+
+#[derive(Clone, Debug)]
+pub struct RankKF {
+    pub d: usize,
+    pub k: usize,
+    /// Top-left dense block, `k×k`.
+    pub a11: Mat,
+    /// Top-right dense block, `k×(d-k)`.
+    pub a12: Mat,
+    /// Trailing diagonal, length `d-k`.
+    pub d22: Vec<f32>,
+}
+
+impl RankKF {
+    pub fn identity(d: usize, k: usize) -> Self {
+        let k = k.min(d);
+        RankKF { d, k, a11: Mat::eye(k), a12: Mat::zeros(k, d - k), d22: vec![1.0; d - k] }
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.d, self.d);
+        for r in 0..self.k {
+            for c in 0..self.k {
+                m.set(r, c, self.a11.at(r, c));
+            }
+            for c in 0..self.d - self.k {
+                m.set(r, self.k + c, self.a12.at(r, c));
+            }
+        }
+        for i in 0..self.d - self.k {
+            m.set(self.k + i, self.k + i, self.d22[i]);
+        }
+        m
+    }
+
+    pub fn axpy(&mut self, alpha: f32, o: &RankKF) {
+        assert_eq!((self.d, self.k), (o.d, o.k));
+        self.a11.axpy(alpha, &o.a11);
+        self.a12.axpy(alpha, &o.a12);
+        for (a, b) in self.d22.iter_mut().zip(&o.d22) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn matmul(&self, o: &RankKF) -> RankKF {
+        assert_eq!((self.d, self.k), (o.d, o.k));
+        // [[A,B],[0,D]]·[[A',B'],[0,D']] = [[AA', AB' + B·D'],[0, DD']]
+        let a11 = matmul(&self.a11, &o.a11);
+        let mut a12 = matmul(&self.a11, &o.a12);
+        for r in 0..self.k {
+            for c in 0..self.d - self.k {
+                *a12.at_mut(r, c) += self.a12.at(r, c) * o.d22[c];
+            }
+        }
+        let d22 = self.d22.iter().zip(&o.d22).map(|(x, y)| x * y).collect();
+        RankKF { d: self.d, k: self.k, a11, a12, d22 }
+    }
+
+    /// `X @ K` / `X @ Kᵀ` in `O(m k d)`.
+    pub fn right_mul(&self, x: &Mat, transpose: bool) -> Mat {
+        let m = x.rows();
+        let (d, k) = (self.d, self.k);
+        let mut out = Mat::zeros(m, d);
+        for r in 0..m {
+            let xr = x.row(r);
+            let or = out.row_mut(r);
+            if !transpose {
+                // out[0..k] = x[0..k] @ A11 ; out[k..] = x[0..k] @ A12 + x[k..] ⊙ d22
+                for i in 0..k {
+                    let xi = xr[i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    for j in 0..k {
+                        or[j] += xi * self.a11.at(i, j);
+                    }
+                    for j in 0..d - k {
+                        or[k + j] += xi * self.a12.at(i, j);
+                    }
+                }
+                for j in 0..d - k {
+                    or[k + j] += xr[k + j] * self.d22[j];
+                }
+            } else {
+                // Kᵀ = [[A11ᵀ, 0],[A12ᵀ, D]]
+                // out[0..k] = x[0..k] @ A11ᵀ + x[k..] @ A12ᵀ ; out[k..] = x[k..] ⊙ d22
+                for j in 0..k {
+                    let mut acc = 0.0f32;
+                    for i in 0..k {
+                        acc += xr[i] * self.a11.at(j, i);
+                    }
+                    for i in 0..d - k {
+                        acc += xr[k + i] * self.a12.at(j, i);
+                    }
+                    or[j] = acc;
+                }
+                for j in 0..d - k {
+                    or[k + j] = xr[k + j] * self.d22[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `K @ X` / `Kᵀ @ X` in `O(k d n)`.
+    pub fn left_mul(&self, x: &Mat, transpose: bool) -> Mat {
+        let n = x.cols();
+        let (d, k) = (self.d, self.k);
+        let mut out = Mat::zeros(d, n);
+        if !transpose {
+            // rows 0..k: A11 x[0..k] + A12 x[k..]; rows k..: d22 ⊙ x[k..]
+            for r in 0..k {
+                let orow = out.row_mut(r);
+                for p in 0..k {
+                    let v = self.a11.at(r, p);
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let xrow = x.row(p);
+                    for c in 0..n {
+                        orow[c] += v * xrow[c];
+                    }
+                }
+                for p in 0..d - k {
+                    let v = self.a12.at(r, p);
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let xrow = x.row(k + p);
+                    for c in 0..n {
+                        orow[c] += v * xrow[c];
+                    }
+                }
+            }
+            for i in 0..d - k {
+                let v = self.d22[i];
+                let xrow = x.row(k + i);
+                let orow = out.row_mut(k + i);
+                for c in 0..n {
+                    orow[c] = v * xrow[c];
+                }
+            }
+        } else {
+            // Kᵀ rows 0..k: A11ᵀ x[0..k]; rows k..: A12ᵀ x[0..k] + d22 ⊙ x[k..]
+            for p in 0..k {
+                let xrow = x.row(p);
+                for r in 0..k {
+                    let v = self.a11.at(p, r);
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let orow = out.row_mut(r);
+                    for c in 0..n {
+                        orow[c] += v * xrow[c];
+                    }
+                }
+                for r in 0..d - k {
+                    let v = self.a12.at(p, r);
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let orow = out.row_mut(k + r);
+                    for c in 0..n {
+                        orow[c] += v * xrow[c];
+                    }
+                }
+            }
+            for i in 0..d - k {
+                let v = self.d22[i];
+                let xrow = x.row(k + i);
+                let orow = out.row_mut(k + i);
+                for c in 0..n {
+                    orow[c] += v * xrow[c];
+                }
+            }
+        }
+        out
+    }
+
+    /// `Π̂(scale · BᵀB) = [[M11, 2·M12],[0, Diag(M22)]]` computed from `B`
+    /// in `O(m k d)` (Table 1, row 4).
+    pub fn gram_project(&self, b: &Mat, scale: f32) -> RankKF {
+        let m = b.rows();
+        let (d, k) = (self.d, self.k);
+        let mut a11 = Mat::zeros(k, k);
+        let mut a12 = Mat::zeros(k, d - k);
+        let mut d22 = vec![0.0f32; d - k];
+        for r in 0..m {
+            let br = b.row(r);
+            for i in 0..k {
+                let bi = br[i];
+                if bi != 0.0 {
+                    for j in 0..k {
+                        *a11.at_mut(i, j) += bi * br[j];
+                    }
+                    for j in 0..d - k {
+                        *a12.at_mut(i, j) += 2.0 * bi * br[k + j];
+                    }
+                }
+            }
+            for j in 0..d - k {
+                d22[j] += br[k + j] * br[k + j];
+            }
+        }
+        a11 = a11.scale(scale);
+        a12 = a12.scale(scale);
+        for v in &mut d22 {
+            *v *= scale;
+        }
+        RankKF { d, k, a11, a12, d22 }
+    }
+
+    pub fn trace(&self) -> f32 {
+        self.a11.trace() + self.d22.iter().sum::<f32>()
+    }
+
+    pub fn for_each(&self, f: &mut impl FnMut(f32)) {
+        self.a11.data().iter().for_each(|&x| f(x));
+        self.a12.data().iter().for_each(|&x| f(x));
+        self.d22.iter().for_each(|&x| f(x));
+    }
+
+    pub fn for_each_mut(&mut self, f: &mut impl FnMut(&mut f32)) {
+        self.a11.data_mut().iter_mut().for_each(&mut *f);
+        self.a12.data_mut().iter_mut().for_each(&mut *f);
+        self.d22.iter_mut().for_each(&mut *f);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_is_identity() {
+        assert_eq!(RankKF::identity(6, 2).to_dense(), Mat::eye(6));
+    }
+
+    #[test]
+    fn closure_blocks() {
+        let mut a = RankKF::identity(5, 2);
+        a.a12.set(0, 1, 3.0);
+        a.d22[1] = 2.0;
+        let p = a.matmul(&a);
+        // (0, 2+1=3): A11·A12 + A12·D22 → 3 + 3·2 = 9
+        assert_eq!(p.to_dense().at(0, 3), 9.0);
+        assert_eq!(p.d22[1], 4.0);
+    }
+}

@@ -1,0 +1,190 @@
+//! Upper-triangular Toeplitz Kronecker factor (Table 1, row 5).
+//!
+//! `K[i][j] = coef[j - i]` for `j >= i`, zero below the diagonal. Storage
+//! `O(d)`. Upper-triangular Toeplitz matrices form a *commutative*
+//! subalgebra (they are polynomials in the shift matrix), so the class is
+//! closed under multiplication; the product is coefficient convolution.
+
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct ToepF {
+    pub d: usize,
+    /// `coef[j]` is the value of the j-th superdiagonal; `coef[0]` the diagonal.
+    pub coef: Vec<f32>,
+}
+
+impl ToepF {
+    pub fn identity(d: usize) -> Self {
+        let mut coef = vec![0.0; d];
+        if d > 0 {
+            coef[0] = 1.0;
+        }
+        ToepF { d, coef }
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        Mat::from_fn(self.d, self.d, |r, c| if c >= r { self.coef[c - r] } else { 0.0 })
+    }
+
+    pub fn axpy(&mut self, alpha: f32, o: &ToepF) {
+        assert_eq!(self.d, o.d);
+        for (a, b) in self.coef.iter_mut().zip(&o.coef) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Crossover below which the direct `O(d²)` path beats the FFT one
+    /// (measured in §Perf iteration 4).
+    const FFT_MIN_D: usize = 64;
+
+    /// Coefficient convolution truncated at `d`: the paper's `O(d log d)`
+    /// Toeplitz claim (Table 2). Direct `O(d²)` below the crossover.
+    pub fn matmul(&self, o: &ToepF) -> ToepF {
+        assert_eq!(self.d, o.d);
+        if self.d >= Self::FFT_MIN_D {
+            let coef = crate::tensor::fft::convolve_trunc(&self.coef, &o.coef, self.d);
+            return ToepF { d: self.d, coef };
+        }
+        let mut coef = vec![0.0f32; self.d];
+        for (j, c) in coef.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for i in 0..=j {
+                acc += self.coef[i] * o.coef[j - i];
+            }
+            *c = acc;
+        }
+        ToepF { d: self.d, coef }
+    }
+
+    /// `X @ K` / `X @ Kᵀ` in `O(m d²)` (each output entry touches a band).
+    pub fn right_mul(&self, x: &Mat, transpose: bool) -> Mat {
+        let m = x.rows();
+        let d = self.d;
+        let mut out = Mat::zeros(m, d);
+        for r in 0..m {
+            let xr = x.row(r);
+            let or = out.row_mut(r);
+            if !transpose {
+                // out[j] = Σ_{i<=j} x[i]·coef[j-i]
+                for j in 0..d {
+                    let mut acc = 0.0f32;
+                    for i in 0..=j {
+                        acc += xr[i] * self.coef[j - i];
+                    }
+                    or[j] = acc;
+                }
+            } else {
+                // Kᵀ[i][j] = coef[i-j] for i>=j: out[j] = Σ_{i>=j} x[i]·coef[i-j]
+                for j in 0..d {
+                    let mut acc = 0.0f32;
+                    for i in j..d {
+                        acc += xr[i] * self.coef[i - j];
+                    }
+                    or[j] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    /// `K @ X` / `Kᵀ @ X`.
+    pub fn left_mul(&self, x: &Mat, transpose: bool) -> Mat {
+        let n = x.cols();
+        let d = self.d;
+        let mut out = Mat::zeros(d, n);
+        for r in 0..d {
+            let orow_idx = r;
+            if !transpose {
+                // out[r] = Σ_{p>=r} coef[p-r]·x[p]
+                for p in r..d {
+                    let v = self.coef[p - r];
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let xrow = x.row(p);
+                    let orow = out.row_mut(orow_idx);
+                    for c in 0..n {
+                        orow[c] += v * xrow[c];
+                    }
+                }
+            } else {
+                // Kᵀ lower-Toeplitz: out[r] = Σ_{p<=r} coef[r-p]·x[p]
+                for p in 0..=r {
+                    let v = self.coef[r - p];
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let xrow = x.row(p);
+                    let orow = out.row_mut(orow_idx);
+                    for c in 0..n {
+                        orow[c] += v * xrow[c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `Π̂(scale·BᵀB)`: Toeplitz projection with diagonal averaging
+    /// (Table 1, row 5):
+    /// `b_j = (1/(d-j)) Σ_k G[k][k+j]`, stored as `coef[0] = b_0`,
+    /// `coef[j] = 2 b_j` for `j ≥ 1`.
+    pub fn gram_project(&self, b: &Mat, scale: f32) -> ToepF {
+        let d = self.d;
+        let m = b.rows();
+        // Diagonal-sum of the Gram matrix: Σ_k Σ_r B[r][k]·B[r][k+j] — a
+        // batched truncated autocorrelation. FFT path: one forward
+        // transform per row + one inverse for the whole batch,
+        // O(m d log d) (§Perf iteration 4); direct O(m d²) below the
+        // crossover.
+        let sums: Vec<f32> = if d >= Self::FFT_MIN_D {
+            crate::tensor::fft::batched_autocorr((0..m).map(|r| b.row(r)), d)
+        } else {
+            let mut s = vec![0.0f32; d];
+            for r in 0..m {
+                let br = b.row(r);
+                for (j, sj) in s.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for k in 0..d - j {
+                        acc += br[k] * br[k + j];
+                    }
+                    *sj += acc;
+                }
+            }
+            s
+        };
+        let mut coef = vec![0.0f32; d];
+        for j in 0..d {
+            let avg = sums[j] / (d - j) as f32;
+            coef[j] = scale * avg * if j == 0 { 1.0 } else { 2.0 };
+        }
+        ToepF { d, coef }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_dense() {
+        assert_eq!(ToepF::identity(4).to_dense(), Mat::eye(4));
+    }
+
+    #[test]
+    fn matmul_is_convolution() {
+        // K = I + N (N = shift), K² = I + 2N + N².
+        let mut k = ToepF::identity(4);
+        k.coef[1] = 1.0;
+        let sq = k.matmul(&k);
+        assert_eq!(sq.coef, vec![1.0, 2.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn commutes() {
+        let a = ToepF { d: 5, coef: vec![1.0, 0.5, 0.2, 0.0, 0.1] };
+        let b = ToepF { d: 5, coef: vec![2.0, -0.3, 0.0, 0.4, 0.0] };
+        assert_eq!(a.matmul(&b).coef, b.matmul(&a).coef);
+    }
+}

@@ -1,0 +1,194 @@
+//! Lower-triangular Kronecker factor (Table 1, row 1).
+//!
+//! Packed row-major storage of the lower triangle: `d(d+1)/2` floats —
+//! half the memory of the dense factor, and the class is closed under
+//! multiplication (triangular matrices form an associative subalgebra,
+//! paper footnote 4).
+
+use crate::tensor::Mat;
+
+#[derive(Clone, Debug)]
+pub struct TrilF {
+    pub d: usize,
+    /// Packed rows: row r contributes entries (r,0..=r).
+    pub data: Vec<f32>,
+}
+
+#[inline]
+fn idx(r: usize, c: usize) -> usize {
+    debug_assert!(c <= r);
+    r * (r + 1) / 2 + c
+}
+
+impl TrilF {
+    pub fn identity(d: usize) -> Self {
+        let mut t = TrilF { d, data: vec![0.0; d * (d + 1) / 2] };
+        for i in 0..d {
+            t.data[idx(i, i)] = 1.0;
+        }
+        t
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        if c > r {
+            0.0
+        } else {
+            self.data[idx(r, c)]
+        }
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.d, self.d);
+        for r in 0..self.d {
+            for c in 0..=r {
+                m.set(r, c, self.data[idx(r, c)]);
+            }
+        }
+        m
+    }
+
+    pub fn axpy(&mut self, alpha: f32, other: &TrilF) {
+        assert_eq!(self.d, other.d);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Triangular × triangular: result is triangular;
+    /// `(AB)[r][c] = Σ_{p=c..=r} A[r][p] B[p][c]`.
+    pub fn matmul(&self, other: &TrilF) -> TrilF {
+        assert_eq!(self.d, other.d);
+        let d = self.d;
+        let mut out = TrilF { d, data: vec![0.0; d * (d + 1) / 2] };
+        for r in 0..d {
+            for c in 0..=r {
+                let mut acc = 0.0f32;
+                for p in c..=r {
+                    acc += self.data[idx(r, p)] * other.data[idx(p, c)];
+                }
+                out.data[idx(r, c)] = acc;
+            }
+        }
+        out
+    }
+
+    /// `X @ K` / `X @ Kᵀ`.
+    pub fn right_mul(&self, x: &Mat, transpose: bool) -> Mat {
+        let m = x.rows();
+        let d = self.d;
+        let mut out = Mat::zeros(m, d);
+        for r in 0..m {
+            let xr = x.row(r);
+            let or = out.row_mut(r);
+            if !transpose {
+                // out[j] = Σ_i x[i] K[i][j], K lower: i >= j
+                for i in 0..d {
+                    let xi = xr[i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let row = &self.data[i * (i + 1) / 2..i * (i + 1) / 2 + i + 1];
+                    for (j, kij) in row.iter().enumerate() {
+                        or[j] += xi * kij;
+                    }
+                }
+            } else {
+                // out[j] = Σ_i x[i] K[j][i], K lower: i <= j
+                for j in 0..d {
+                    let row = &self.data[j * (j + 1) / 2..j * (j + 1) / 2 + j + 1];
+                    let mut acc = 0.0f32;
+                    for (i, kji) in row.iter().enumerate() {
+                        acc += xr[i] * kji;
+                    }
+                    or[j] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    /// `K @ X` / `Kᵀ @ X`.
+    pub fn left_mul(&self, x: &Mat, transpose: bool) -> Mat {
+        let n = x.cols();
+        let d = self.d;
+        let mut out = Mat::zeros(d, n);
+        if !transpose {
+            // out[r] = Σ_{p<=r} K[r][p] x[p]
+            for r in 0..d {
+                let krow = &self.data[r * (r + 1) / 2..r * (r + 1) / 2 + r + 1];
+                let orow = out.row_mut(r);
+                for (p, kv) in krow.iter().enumerate() {
+                    if *kv == 0.0 {
+                        continue;
+                    }
+                    let xrow = x.row(p);
+                    for c in 0..n {
+                        orow[c] += kv * xrow[c];
+                    }
+                }
+            }
+        } else {
+            // out[r] = Σ_{p>=r} K[p][r] x[p]
+            for p in 0..d {
+                let krow = &self.data[p * (p + 1) / 2..p * (p + 1) / 2 + p + 1];
+                let xrow = x.row(p);
+                for (r, kv) in krow.iter().enumerate() {
+                    if *kv == 0.0 {
+                        continue;
+                    }
+                    let orow = out.row_mut(r);
+                    for c in 0..n {
+                        orow[c] += kv * xrow[c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `Π̂(scale · BᵀB)`: lower triangle with sub-diagonal entries doubled
+    /// (Table 1, row 1 — the weighted extraction map).
+    pub fn gram_project(&self, b: &Mat, scale: f32) -> TrilF {
+        let gram = crate::tensor::matmul_at_b(b, b);
+        let d = self.d;
+        let mut out = TrilF { d, data: vec![0.0; d * (d + 1) / 2] };
+        for r in 0..d {
+            for c in 0..=r {
+                let w = if c == r { 1.0 } else { 2.0 };
+                out.data[idx(r, c)] = scale * w * gram.at(r, c);
+            }
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f32 {
+        (0..self.d).map(|i| self.data[idx(i, i)]).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_indexing() {
+        let mut t = TrilF::identity(3);
+        t.data[idx(2, 1)] = 5.0;
+        assert_eq!(t.at(2, 1), 5.0);
+        assert_eq!(t.at(1, 2), 0.0);
+        let d = t.to_dense();
+        assert_eq!(d.at(2, 1), 5.0);
+        assert_eq!(d.at(1, 2), 0.0);
+    }
+
+    #[test]
+    fn tril_matmul_is_tril() {
+        let mut a = TrilF::identity(4);
+        a.data[idx(3, 0)] = 2.0;
+        let b = a.clone();
+        let p = a.matmul(&b);
+        assert_eq!(p.at(3, 0), 4.0); // I·2 + 2·I
+        assert_eq!(p.at(0, 0), 1.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Random hyper-parameter search (paper Table 4 / Appendix C).
+//!
+//! Samples log-uniform / categorical values over the same search space the
+//! paper lists and runs each trial through the experiment driver, keeping
+//! the best configuration by final test error.
+
+use crate::config::JobConfig;
+use crate::exp::run_job;
+use crate::optim::{Hyper, Method};
+use crate::proptest::Pcg;
+
+/// Search-space specification for one hyper-parameter (log-uniform range).
+#[derive(Clone, Debug)]
+pub struct LogRange {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl LogRange {
+    pub fn sample(&self, rng: &mut Pcg) -> f32 {
+        (self.lo.ln() + (self.hi.ln() - self.lo.ln()) * rng.uniform()).exp()
+    }
+}
+
+/// The Table-4 search space: `β₂` (lr), `γ` (weight decay), `λ` (damping),
+/// `β₁` (preconditioner lr), `α₁` (Riemannian momentum, SINGD only);
+/// `α₂` fixed at 0.9 as in the paper.
+#[derive(Clone, Debug)]
+pub struct Space {
+    pub lr: LogRange,
+    pub weight_decay: LogRange,
+    pub damping: LogRange,
+    pub precond_lr: LogRange,
+    /// Candidate α₁ values (categorical, SINGD only).
+    pub riem_momentum: Vec<f32>,
+}
+
+impl Default for Space {
+    fn default() -> Self {
+        Space {
+            lr: LogRange { lo: 1e-4, hi: 0.3 },
+            weight_decay: LogRange { lo: 1e-6, hi: 1e-2 },
+            damping: LogRange { lo: 1e-5, hi: 1e-1 },
+            precond_lr: LogRange { lo: 1e-3, hi: 0.2 },
+            riem_momentum: vec![0.0, 0.3, 0.6, 0.9],
+        }
+    }
+}
+
+impl Space {
+    /// Draw a full hyper-parameter set for `method`.
+    pub fn sample(&self, method: &Method, base: &Hyper, rng: &mut Pcg) -> Hyper {
+        let mut hp = base.clone();
+        hp.lr = self.lr.sample(rng);
+        hp.weight_decay = self.weight_decay.sample(rng);
+        hp.damping = self.damping.sample(rng);
+        hp.precond_lr = self.precond_lr.sample(rng);
+        hp.momentum = 0.9; // fixed, as in the paper
+        hp.riem_momentum = match method {
+            Method::Singd { .. } => self.riem_momentum[rng.below(self.riem_momentum.len())],
+            _ => 0.0,
+        };
+        hp
+    }
+}
+
+/// Outcome of one trial.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    pub hyper: Hyper,
+    pub final_err: f32,
+    pub diverged: bool,
+}
+
+/// Run `n_trials` random-search trials of `base` (model/data/schedule kept
+/// fixed, optimizer hyper-parameters resampled). Returns all trials sorted
+/// best-first.
+pub fn random_search(base: &JobConfig, space: &Space, n_trials: usize, seed: u64) -> Vec<Trial> {
+    let mut rng = Pcg::with_stream(seed, 0x5eed);
+    let mut trials = Vec::with_capacity(n_trials);
+    for i in 0..n_trials {
+        let hyper = space.sample(&base.method, &base.hyper, &mut rng);
+        let mut cfg = base.clone();
+        cfg.hyper = hyper.clone();
+        cfg.seed = seed ^ (i as u64).wrapping_mul(0x9e37);
+        let res = run_job(&cfg);
+        println!(
+            "trial {i:>3}: lr={:.2e} wd={:.2e} λ={:.2e} β₁={:.2e} α₁={:.1} → err {:.3}{}",
+            hyper.lr,
+            hyper.weight_decay,
+            hyper.damping,
+            hyper.precond_lr,
+            hyper.riem_momentum,
+            res.final_test_err,
+            if res.diverged { " (diverged)" } else { "" },
+        );
+        trials.push(Trial { hyper, final_err: res.final_test_err, diverged: res.diverged });
+    }
+    trials.sort_by(|a, b| a.final_err.partial_cmp(&b.final_err).unwrap_or(std::cmp::Ordering::Equal));
+    trials
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Arch;
+    use crate::structured::Structure;
+    use crate::train::Schedule;
+
+    #[test]
+    fn log_range_within_bounds() {
+        let mut rng = Pcg::new(91);
+        let r = LogRange { lo: 1e-4, hi: 1e-1 };
+        for _ in 0..200 {
+            let v = r.sample(&mut rng);
+            assert!(v >= 1e-4 && v <= 1e-1);
+        }
+    }
+
+    #[test]
+    fn sample_respects_method_specific_fields() {
+        let mut rng = Pcg::new(92);
+        let space = Space::default();
+        let base = Hyper::default();
+        let sgd = space.sample(&Method::Sgd, &base, &mut rng);
+        assert_eq!(sgd.riem_momentum, 0.0);
+        let singd =
+            space.sample(&Method::Singd { structure: Structure::Diagonal }, &base, &mut rng);
+        assert!(space.riem_momentum.contains(&singd.riem_momentum));
+        assert_eq!(singd.momentum, 0.9);
+    }
+
+    #[test]
+    fn random_search_ranks_trials() {
+        let base = JobConfig {
+            arch: Arch::Mlp { hidden: vec![16] },
+            dataset: "cifar100".into(),
+            classes: 3,
+            n_train: 90,
+            n_test: 30,
+            method: Method::Sgd,
+            hyper: Hyper::default(),
+            schedule: Schedule::Constant,
+            epochs: 2,
+            batch_size: 30,
+            seed: 1,
+            label: "sweep-test".into(),
+        };
+        let trials = random_search(&base, &Space::default(), 3, 42);
+        assert_eq!(trials.len(), 3);
+        assert!(trials[0].final_err <= trials[2].final_err);
+    }
+}

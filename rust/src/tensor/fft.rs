@@ -1,0 +1,185 @@
+//! Radix-2 FFT substrate.
+//!
+//! Powers the `O(d log d)` Toeplitz-factor operations of paper Table 2:
+//! coefficient convolution (Toeplitz × Toeplitz) and batched
+//! autocorrelation (the Toeplitz `Π̂(BᵀB)` projection). §Perf iteration 4.
+
+/// In-place iterative radix-2 complex FFT (`invert` = inverse transform,
+/// including the 1/n scaling). `re.len()` must be a power of two.
+pub fn fft(re: &mut [f32], im: &mut [f32], invert: bool) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "fft: length must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let mut len = 2usize;
+    while len <= n {
+        let ang = 2.0 * std::f64::consts::PI / len as f64 * if invert { 1.0 } else { -1.0 };
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cur_r, mut cur_i) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k] as f64, im[i + k] as f64);
+                let (vr0, vi0) = (re[i + k + len / 2] as f64, im[i + k + len / 2] as f64);
+                let vr = vr0 * cur_r - vi0 * cur_i;
+                let vi = vr0 * cur_i + vi0 * cur_r;
+                re[i + k] = (ur + vr) as f32;
+                im[i + k] = (ui + vi) as f32;
+                re[i + k + len / 2] = (ur - vr) as f32;
+                im[i + k + len / 2] = (ui - vi) as f32;
+                let nr = cur_r * wr - cur_i * wi;
+                cur_i = cur_r * wi + cur_i * wr;
+                cur_r = nr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if invert {
+        let inv = 1.0 / n as f32;
+        for v in re.iter_mut() {
+            *v *= inv;
+        }
+        for v in im.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Truncated linear convolution: `out[j] = Σ_{i≤j} a[i] b[j−i]` for
+/// `j < d`, via FFT of size `≥ 2d`.
+pub fn convolve_trunc(a: &[f32], b: &[f32], d: usize) -> Vec<f32> {
+    let n = (2 * d).next_power_of_two();
+    let mut ar = vec![0.0f32; n];
+    let mut ai = vec![0.0f32; n];
+    let mut br = vec![0.0f32; n];
+    let mut bi = vec![0.0f32; n];
+    ar[..a.len().min(d)].copy_from_slice(&a[..a.len().min(d)]);
+    br[..b.len().min(d)].copy_from_slice(&b[..b.len().min(d)]);
+    fft(&mut ar, &mut ai, false);
+    fft(&mut br, &mut bi, false);
+    for i in 0..n {
+        let (x, y) = (ar[i], ai[i]);
+        ar[i] = x * br[i] - y * bi[i];
+        ai[i] = x * bi[i] + y * br[i];
+    }
+    fft(&mut ar, &mut ai, true);
+    ar.truncate(d);
+    ar
+}
+
+/// Batched autocorrelation: given rows `rows` (each of length `d`),
+/// returns `s[j] = Σ_rows Σ_k row[k]·row[k+j]` for `j = 0..d-1`,
+/// computed as `IFFT( Σ_rows |FFT(row)|² )` — one inverse transform for
+/// the whole batch.
+pub fn batched_autocorr(rows: impl Iterator<Item = impl AsRef<[f32]>>, d: usize) -> Vec<f32> {
+    let n = (2 * d).next_power_of_two();
+    let mut acc_r = vec![0.0f32; n];
+    let mut re = vec![0.0f32; n];
+    let mut im = vec![0.0f32; n];
+    let mut any = false;
+    for row in rows {
+        let row = row.as_ref();
+        any = true;
+        re[..d].copy_from_slice(&row[..d]);
+        re[d..].fill(0.0);
+        im.fill(0.0);
+        fft(&mut re, &mut im, false);
+        for i in 0..n {
+            acc_r[i] += re[i] * re[i] + im[i] * im[i];
+        }
+    }
+    if !any {
+        return vec![0.0; d];
+    }
+    let mut acc_i = vec![0.0f32; n];
+    fft(&mut acc_r, &mut acc_i, true);
+    acc_r.truncate(d);
+    acc_r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{forall, Pcg};
+
+    #[test]
+    fn fft_roundtrip() {
+        let mut rng = Pcg::new(91);
+        let n = 64;
+        let orig: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut re = orig.clone();
+        let mut im = vec![0.0f32; n];
+        fft(&mut re, &mut im, false);
+        fft(&mut re, &mut im, true);
+        for (a, b) in re.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        for v in &im {
+            assert!(v.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut re = vec![0.0f32; 8];
+        let mut im = vec![0.0f32; 8];
+        re[0] = 1.0;
+        fft(&mut re, &mut im, false);
+        for i in 0..8 {
+            assert!((re[i] - 1.0).abs() < 1e-6 && im[i].abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn convolve_matches_direct() {
+        forall(92, 10, |rng, _| {
+            let d = 1 + rng.below(40);
+            let a: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let got = convolve_trunc(&a, &b, d);
+            for j in 0..d {
+                let want: f32 = (0..=j).map(|i| a[i] * b[j - i]).sum();
+                assert!((got[j] - want).abs() < 1e-3 * (1.0 + want.abs()), "j={j}: {} vs {want}", got[j]);
+            }
+        });
+    }
+
+    #[test]
+    fn batched_autocorr_matches_direct() {
+        forall(93, 8, |rng, _| {
+            let d = 2 + rng.below(24);
+            let m = 1 + rng.below(6);
+            let rows: Vec<Vec<f32>> = (0..m).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+            let got = batched_autocorr(rows.iter(), d);
+            for j in 0..d {
+                let want: f32 = rows
+                    .iter()
+                    .map(|r| (0..d - j).map(|k| r[k] * r[k + j]).sum::<f32>())
+                    .sum();
+                assert!(
+                    (got[j] - want).abs() < 2e-3 * (1.0 + want.abs()),
+                    "j={j}: {} vs {want}",
+                    got[j]
+                );
+            }
+        });
+    }
+}

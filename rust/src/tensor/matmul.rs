@@ -1,0 +1,302 @@
+//! Matrix multiplication kernels.
+//!
+//! The framework's Rust-side hot path (model fwd/bwd for the native models,
+//! and every optimizer's preconditioner algebra) bottoms out here. We keep a
+//! simple, portable blocked kernel: pack-free, row-major, `i-k-j` loop order
+//! with a tiled outer structure so panels of `b` stay in L1/L2.
+//!
+//! Benchmarked in `rust/benches/hotpath.rs`; see EXPERIMENTS.md §Perf for
+//! the naive → blocked → parallel iteration log.
+
+use super::Mat;
+
+/// Tile sizes (empirically tuned on the target CPU; see §Perf).
+const MC: usize = 64; // rows of A per tile
+const KC: usize = 256; // inner dimension per tile
+const NC: usize = 256; // cols of B per tile
+
+/// FLOP threshold above which matmul fans out across threads (§Perf
+/// iteration 2: below this, thread spawn overhead dominates).
+const PAR_FLOPS: usize = 4 << 20;
+
+/// `C = A @ B`.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut c, false);
+    c
+}
+
+/// Worker count for parallel kernels (respects `SINGD_THREADS`).
+pub(crate) fn num_threads() -> usize {
+    static CACHED: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CACHED.get_or_init(|| {
+        if let Ok(v) = std::env::var("SINGD_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// `C (+)= A @ B`. If `accumulate` is false, `c` is overwritten.
+///
+/// Large products are sharded by row-blocks across `std::thread::scope`
+/// workers (each worker owns a disjoint slice of `C`, so no synchronization
+/// is needed); small products stay single-threaded.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {}x{} @ {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    if !accumulate {
+        c.data_mut().fill(0.0);
+    }
+    let nt = num_threads();
+    let flops = 2 * m * k * n;
+    if nt <= 1 || flops < PAR_FLOPS || m < 2 {
+        matmul_rows(a.data(), b.data(), c.data_mut(), 0, m, k, n);
+        return;
+    }
+    let nt = nt.min(m);
+    let rows_per = m.div_ceil(nt);
+    let ad = a.data();
+    let bd = b.data();
+    let chunks: Vec<&mut [f32]> = c.data_mut().chunks_mut(rows_per * n).collect();
+    std::thread::scope(|scope| {
+        for (ci, chunk) in chunks.into_iter().enumerate() {
+            let row0 = ci * rows_per;
+            let rows = chunk.len() / n;
+            scope.spawn(move || {
+                matmul_rows(ad, bd, chunk, row0, rows, k, n);
+            });
+        }
+    });
+}
+
+/// Serial blocked kernel over `rows` rows of `C` starting at `row0` (the
+/// `cd` slice holds exactly those rows).
+fn matmul_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], row0: usize, rows: usize, k: usize, n: usize) {
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for ib in (0..rows).step_by(MC) {
+            let iend = (ib + MC).min(rows);
+            for jb in (0..n).step_by(NC) {
+                let jend = (jb + NC).min(n);
+                let width = jend - jb;
+                // 2-row microkernel: each B panel load feeds two C rows
+                // (§Perf iteration 5: ~halves B-panel traffic).
+                let mut i = ib;
+                while i + 1 < iend {
+                    let a0 = &ad[(row0 + i) * k..(row0 + i + 1) * k];
+                    let a1 = &ad[(row0 + i + 1) * k..(row0 + i + 2) * k];
+                    let (c0, rest) = cd[i * n + jb..].split_at_mut(n);
+                    let c0 = &mut c0[..width];
+                    let c1 = &mut rest[..width];
+                    for p in kb..kend {
+                        let (v0, v1) = (a0[p], a1[p]);
+                        if v0 == 0.0 && v1 == 0.0 {
+                            continue;
+                        }
+                        let brow = &bd[p * n + jb..p * n + jend];
+                        for ((x0, x1), bv) in c0.iter_mut().zip(c1.iter_mut()).zip(brow.iter()) {
+                            *x0 += v0 * bv;
+                            *x1 += v1 * bv;
+                        }
+                    }
+                    i += 2;
+                }
+                if i < iend {
+                    let arow = &ad[(row0 + i) * k..(row0 + i + 1) * k];
+                    let crow = &mut cd[i * n + jb..i * n + jend];
+                    for p in kb..kend {
+                        let aval = arow[p];
+                        if aval == 0.0 {
+                            continue;
+                        }
+                        let brow = &bd[p * n + jb..p * n + jend];
+                        for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                            *cv += aval * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ @ B` without materializing the transpose.
+///
+/// Used for Kronecker-factor statistics `U = Xᵀ X / m` where `X` is a
+/// `(batch, d)` activation matrix.
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b: row mismatch");
+    let (m, ka) = (a.rows(), a.cols());
+    let n = b.cols();
+    let mut c = Mat::zeros(ka, n);
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    // c[i][j] = sum_p a[p][i] * b[p][j]; iterate p outer for contiguity.
+    for p in 0..m {
+        let arow = &ad[p * ka..(p + 1) * ka];
+        let brow = &bd[p * n..(p + 1) * n];
+        for i in 0..ka {
+            let aval = arow[i];
+            if aval == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..i * n + n];
+            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += aval * bv;
+            }
+        }
+    }
+    c
+}
+
+/// `C = A @ Bᵀ` without materializing the transpose.
+///
+/// Row-dot formulation with 4 independent accumulators per dot product so
+/// the FP adds pipeline (§Perf iteration 3), sharded across threads by rows
+/// of `A` when large.
+pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: col mismatch");
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.rows();
+    let mut c = Mat::zeros(m, n);
+    let ad = a.data();
+    let bd = b.data();
+    let nt = num_threads();
+    let flops = 2 * m * k * n;
+    if nt <= 1 || flops < PAR_FLOPS || m < 2 {
+        a_bt_rows(ad, bd, c.data_mut(), 0, m, k, n);
+        return c;
+    }
+    let nt = nt.min(m);
+    let rows_per = m.div_ceil(nt);
+    let chunks: Vec<&mut [f32]> = c.data_mut().chunks_mut(rows_per * n).collect();
+    std::thread::scope(|scope| {
+        for (ci, chunk) in chunks.into_iter().enumerate() {
+            let row0 = ci * rows_per;
+            let rows = chunk.len() / n;
+            scope.spawn(move || {
+                a_bt_rows(ad, bd, chunk, row0, rows, k, n);
+            });
+        }
+    });
+    c
+}
+
+fn a_bt_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], row0: usize, rows: usize, k: usize, n: usize) {
+    for i in 0..rows {
+        let arow = &ad[(row0 + i) * k..(row0 + i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            cd[i * n + j] = dot4(arow, brow);
+        }
+    }
+}
+
+/// Dot product with 4 independent accumulator lanes.
+#[inline]
+fn dot4(x: &[f32], y: &[f32]) -> f32 {
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = 4 * c;
+        a0 += x[i] * y[i];
+        a1 += x[i + 1] * y[i + 1];
+        a2 += x[i + 2] * y[i + 2];
+        a3 += x[i + 3] * y[i + 3];
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for i in 4 * chunks..n {
+        acc += x[i] * y[i];
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::Pcg;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for p in 0..a.cols() {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        for (x, y) in a.data().iter().zip(b.data().iter()) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::ones(2, 2);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_random_shapes() {
+        let mut rng = Pcg::new(7);
+        for _ in 0..10 {
+            let m = 1 + (rng.next_u32() % 70) as usize;
+            let k = 1 + (rng.next_u32() % 70) as usize;
+            let n = 1 + (rng.next_u32() % 70) as usize;
+            let a = Mat::from_fn(m, k, |_, _| rng.normal());
+            let b = Mat::from_fn(k, n, |_, _| rng.normal());
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_blocked_crosses_tile_boundaries() {
+        let mut rng = Pcg::new(3);
+        let a = Mat::from_fn(MC + 3, KC + 5, |_, _| rng.normal());
+        let b = Mat::from_fn(KC + 5, NC + 2, |_, _| rng.normal());
+        assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-4);
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        let mut rng = Pcg::new(11);
+        let a = Mat::from_fn(17, 9, |_, _| rng.normal());
+        let b = Mat::from_fn(17, 13, |_, _| rng.normal());
+        assert_close(&matmul_at_b(&a, &b), &matmul(&a.transpose(), &b), 1e-5);
+    }
+
+    #[test]
+    fn a_bt_matches_explicit_transpose() {
+        let mut rng = Pcg::new(13);
+        let a = Mat::from_fn(8, 21, |_, _| rng.normal());
+        let b = Mat::from_fn(5, 21, |_, _| rng.normal());
+        assert_close(&matmul_a_bt(&a, &b), &matmul(&a, &b.transpose()), 1e-5);
+    }
+
+    #[test]
+    fn matmul_into_accumulates() {
+        let a = Mat::eye(3);
+        let b = Mat::ones(3, 3);
+        let mut c = Mat::ones(3, 3);
+        matmul_into(&a, &b, &mut c, true);
+        assert_eq!(c.at(0, 0), 2.0);
+        matmul_into(&a, &b, &mut c, false);
+        assert_eq!(c.at(0, 0), 1.0);
+    }
+}

@@ -1,0 +1,250 @@
+//! Dense `f32` matrix substrate.
+//!
+//! The whole framework is built on this BLAS-free matrix type: row-major
+//! storage, blocked/tiled matmul for the hot path, and the handful of
+//! elementwise / reduction ops the optimizers and models need.
+//!
+//! The structured Kronecker-factor classes in [`crate::structured`] avoid
+//! materializing dense matrices; `Mat` is used for activations, gradients,
+//! dense factors, and as the interchange type at module boundaries.
+
+pub mod fft;
+mod matmul;
+mod ops;
+
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matmul_into};
+
+/// A dense row-major `f32` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Mat({}x{})", self.rows, self.cols)?;
+        let rmax = self.rows.min(6);
+        let cmax = self.cols.min(8);
+        for r in 0..rmax {
+            write!(f, "  [")?;
+            for c in 0..cmax {
+                write!(f, "{:9.4} ", self.at(r, c))?;
+            }
+            writeln!(f, "{}]", if cmax < self.cols { "…" } else { "" })?;
+        }
+        if rmax < self.rows {
+            writeln!(f, "  …")?;
+        }
+        Ok(())
+    }
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// All-ones matrix.
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![1.0; rows * cols] }
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Scaled identity `s * I`.
+    pub fn eye_scaled(n: usize, s: f32) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = s;
+        }
+        m
+    }
+
+    /// Build from a row-major `Vec` (length must equal `rows*cols`).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_vec: length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a function of `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f32]) -> Self {
+        let n = d.len();
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = d[i];
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)`.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Raw row-major data.
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// A row as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Consume into the backing vector.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape without copying (element count must match).
+    pub fn reshape(mut self, rows: usize, cols: usize) -> Self {
+        assert_eq!(rows * cols, self.data.len(), "reshape: element count mismatch");
+        self.rows = rows;
+        self.cols = cols;
+        self
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Bytes of backing storage (f32).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eye_and_at() {
+        let m = Mat::eye(3);
+        assert_eq!(m.at(0, 0), 1.0);
+        assert_eq!(m.at(0, 1), 0.0);
+        assert_eq!(m.shape(), (3, 3));
+    }
+
+    #[test]
+    fn from_fn_indexing() {
+        let m = Mat::from_fn(2, 3, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.at(1, 2), 12.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_fn(5, 7, |r, c| (r * 7 + c) as f32);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (7, 5));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let r = m.clone().reshape(3, 2);
+        assert_eq!(r.at(2, 1), 6.0);
+        assert_eq!(r.data(), m.data());
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_len_mismatch_panics() {
+        let _ = Mat::from_vec(2, 2, vec![1.0]);
+    }
+
+    #[test]
+    fn diag_constructor() {
+        let d = Mat::diag(&[1.0, 2.0, 3.0]);
+        assert_eq!(d.at(1, 1), 2.0);
+        assert_eq!(d.at(0, 1), 0.0);
+    }
+}

@@ -1,0 +1,245 @@
+//! Elementwise and reduction operations on [`Mat`].
+
+use super::Mat;
+
+impl Mat {
+    /// Elementwise map, returning a new matrix.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise map in place.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// Elementwise binary zip: `f(self[i], other[i])`.
+    pub fn zip(&self, other: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
+        assert_eq!(self.shape(), other.shape(), "zip: shape mismatch");
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a + b)
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a - b)
+    }
+
+    /// Hadamard (elementwise) product.
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        self.zip(other, |a, b| a * b)
+    }
+
+    /// `self * s` (scalar).
+    pub fn scale(&self, s: f32) -> Mat {
+        self.map(|x| x * s)
+    }
+
+    /// `self += alpha * other` in place (axpy).
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!(self.shape(), other.shape(), "axpy: shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self = beta*self + alpha*other` in place (scaled EMA step).
+    pub fn ema(&mut self, beta: f32, alpha: f32, other: &Mat) {
+        assert_eq!(self.shape(), other.shape(), "ema: shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = beta * *a + alpha * b;
+        }
+    }
+
+    /// Add `s` to each diagonal entry (square matrices).
+    pub fn add_diag(&mut self, s: f32) {
+        assert_eq!(self.rows, self.cols, "add_diag: not square");
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += s;
+        }
+    }
+
+    /// Trace (sum of diagonal).
+    pub fn trace(&self) -> f32 {
+        assert_eq!(self.rows, self.cols, "trace: not square");
+        (0..self.rows).map(|i| self.data[i * self.cols + i] as f64).sum::<f64>() as f32
+    }
+
+    /// Sum of all elements.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().map(|&x| x as f64).sum::<f64>() as f32
+    }
+
+    /// Mean of all elements.
+    pub fn mean(&self) -> f32 {
+        self.sum() / self.data.len() as f32
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        (self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()).sqrt() as f32
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// True if any entry is NaN or infinite.
+    pub fn has_nonfinite(&self) -> bool {
+        self.data.iter().any(|x| !x.is_finite())
+    }
+
+    /// Column means as a `1 x cols` matrix.
+    pub fn col_mean(&self) -> Mat {
+        let mut out = Mat::zeros(1, self.cols);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c] += self.data[r * self.cols + c];
+            }
+        }
+        let inv = 1.0 / self.rows as f32;
+        for v in &mut out.data {
+            *v *= inv;
+        }
+        out
+    }
+
+    /// Row-wise softmax (used by attention and classification losses).
+    pub fn softmax_rows(&self) -> Mat {
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            let row = out.row_mut(r);
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                z += *v;
+            }
+            let inv = 1.0 / z;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+        out
+    }
+
+    /// Broadcast-add a `1 x cols` row vector to every row.
+    pub fn add_row_broadcast(&self, row: &Mat) -> Mat {
+        assert_eq!(row.rows(), 1);
+        assert_eq!(row.cols(), self.cols);
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[r * self.cols + c] += row.data[c];
+            }
+        }
+        out
+    }
+
+    /// Extract the main diagonal.
+    pub fn diagonal(&self) -> Vec<f32> {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self.data[i * self.cols + i]).collect()
+    }
+
+    /// Symmetrize: `(A + Aᵀ)/2`.
+    pub fn symmetrize(&self) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            for c in (r + 1)..self.cols {
+                let v = 0.5 * (self.at(r, c) + self.at(c, r));
+                out.set(r, c, v);
+                out.set(c, r, v);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::eye(2);
+        assert_eq!(a.add(&b).at(0, 0), 2.0);
+        assert_eq!(a.sub(&b).at(1, 1), 3.0);
+        assert_eq!(a.hadamard(&a).at(1, 0), 9.0);
+        assert_eq!(a.scale(2.0).at(0, 1), 4.0);
+    }
+
+    #[test]
+    fn trace_and_norms() {
+        let a = Mat::from_vec(2, 2, vec![3., 0., 0., 4.]);
+        assert_eq!(a.trace(), 7.0);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-6);
+        assert_eq!(a.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn ema_step() {
+        let mut a = Mat::ones(1, 2);
+        let b = Mat::from_vec(1, 2, vec![3.0, 5.0]);
+        a.ema(0.5, 0.5, &b);
+        assert_eq!(a.data(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., -1., 0., 1.]);
+        let s = a.softmax_rows();
+        for r in 0..2 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        assert!(s.at(0, 2) > s.at(0, 1));
+    }
+
+    #[test]
+    fn symmetrize_is_symmetric() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 4., 3.]);
+        let s = a.symmetrize();
+        assert_eq!(s.at(0, 1), s.at(1, 0));
+        assert_eq!(s.at(0, 1), 3.0);
+    }
+
+    #[test]
+    fn nonfinite_detection() {
+        let mut a = Mat::ones(2, 2);
+        assert!(!a.has_nonfinite());
+        a.set(0, 1, f32::NAN);
+        assert!(a.has_nonfinite());
+    }
+
+    #[test]
+    fn add_diag_and_diagonal() {
+        let mut a = Mat::zeros(3, 3);
+        a.add_diag(2.5);
+        assert_eq!(a.diagonal(), vec![2.5, 2.5, 2.5]);
+    }
+
+    #[test]
+    fn col_mean_values() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let m = a.col_mean();
+        assert_eq!(m.data(), &[2.0, 3.0]);
+    }
+}

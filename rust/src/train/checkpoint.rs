@@ -1,0 +1,120 @@
+//! Minimal binary checkpoint format for model parameters.
+//!
+//! Layout (little-endian):
+//! `magic "SNGD" | u32 version | u32 n_layers | per layer: u32 rows, u32
+//! cols, rows·cols f32 | u64 fletcher-style checksum`.
+
+use crate::tensor::Mat;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"SNGD";
+const VERSION: u32 = 1;
+
+fn checksum(data: &[u8]) -> u64 {
+    // FNV-1a 64.
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Save parameter matrices to `path`.
+pub fn save_checkpoint(path: &Path, params: &[Mat]) -> std::io::Result<()> {
+    let mut body = Vec::new();
+    body.extend_from_slice(MAGIC);
+    body.extend_from_slice(&VERSION.to_le_bytes());
+    body.extend_from_slice(&(params.len() as u32).to_le_bytes());
+    for p in params {
+        body.extend_from_slice(&(p.rows() as u32).to_le_bytes());
+        body.extend_from_slice(&(p.cols() as u32).to_le_bytes());
+        for &v in p.data() {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let sum = checksum(&body);
+    body.extend_from_slice(&sum.to_le_bytes());
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::File::create(path)?.write_all(&body)
+}
+
+/// Load parameter matrices from `path` (validates magic + checksum).
+pub fn load_checkpoint(path: &Path) -> std::io::Result<Vec<Mat>> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut buf)?;
+    let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+    if buf.len() < 20 {
+        return Err(err("truncated checkpoint"));
+    }
+    let (body, sum_bytes) = buf.split_at(buf.len() - 8);
+    let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+    if checksum(body) != stored {
+        return Err(err("checksum mismatch"));
+    }
+    if &body[0..4] != MAGIC {
+        return Err(err("bad magic"));
+    }
+    let ver = u32::from_le_bytes(body[4..8].try_into().unwrap());
+    if ver != VERSION {
+        return Err(err("unsupported version"));
+    }
+    let n = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
+    let mut off = 12usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        if off + 8 > body.len() {
+            return Err(err("truncated layer header"));
+        }
+        let rows = u32::from_le_bytes(body[off..off + 4].try_into().unwrap()) as usize;
+        let cols = u32::from_le_bytes(body[off + 4..off + 8].try_into().unwrap()) as usize;
+        off += 8;
+        let need = rows * cols * 4;
+        if off + need > body.len() {
+            return Err(err("truncated layer data"));
+        }
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows * cols {
+            data.push(f32::from_le_bytes(body[off + 4 * i..off + 4 * i + 4].try_into().unwrap()));
+        }
+        off += need;
+        out.push(Mat::from_vec(rows, cols, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::Pcg;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg::new(81);
+        let params = vec![rng.normal_mat(3, 5, 1.0), rng.normal_mat(7, 2, 1.0)];
+        let path = std::env::temp_dir().join("singd_test_ckpt.bin");
+        save_checkpoint(&path, &params).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        for (a, b) in params.iter().zip(&loaded) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut rng = Pcg::new(82);
+        let params = vec![rng.normal_mat(4, 4, 1.0)];
+        let path = std::env::temp_dir().join("singd_test_ckpt_bad.bin");
+        save_checkpoint(&path, &params).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[20] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

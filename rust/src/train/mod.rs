@@ -1,0 +1,299 @@
+//! Training-loop driver: LR schedules, metric logging, checkpoints,
+//! divergence detection, and optimizer-state memory accounting.
+
+mod checkpoint;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint};
+
+use crate::data::Dataset;
+use crate::model::Model;
+use crate::optim::{Hyper, Method};
+use crate::proptest::Pcg;
+use std::io::Write;
+
+/// Learning-rate schedule (paper §4: cosine for transformers, step decay
+/// for VGG/ConvMixer, constant for the GNN).
+#[derive(Clone, Debug)]
+pub enum Schedule {
+    Constant,
+    /// Cosine decay to zero over `total` steps.
+    Cosine { total: usize },
+    /// Multiply by `gamma` every `every` steps.
+    Step { every: usize, gamma: f32 },
+}
+
+impl Schedule {
+    pub fn factor(&self, t: usize) -> f32 {
+        match self {
+            Schedule::Constant => 1.0,
+            Schedule::Cosine { total } => {
+                let p = (t as f32 / (*total).max(1) as f32).min(1.0);
+                0.5 * (1.0 + (std::f32::consts::PI * p).cos())
+            }
+            Schedule::Step { every, gamma } => gamma.powi((t / every.max(&1).clone()) as i32),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let low = s.to_ascii_lowercase();
+        if low == "constant" {
+            return Some(Schedule::Constant);
+        }
+        if let Some(rest) = low.strip_prefix("cosine:") {
+            return rest.parse().ok().map(|total| Schedule::Cosine { total });
+        }
+        if let Some(rest) = low.strip_prefix("step:") {
+            let (every, gamma) = rest.split_once(',')?;
+            return Some(Schedule::Step { every: every.parse().ok()?, gamma: gamma.parse().ok()? });
+        }
+        None
+    }
+}
+
+/// One row of the training log.
+#[derive(Clone, Debug)]
+pub struct LogRow {
+    pub step: usize,
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub test_loss: f32,
+    pub test_err: f32,
+    pub lr: f32,
+    pub diverged: bool,
+}
+
+/// Result of a full training run.
+pub struct RunResult {
+    pub rows: Vec<LogRow>,
+    pub final_test_err: f32,
+    pub best_test_err: f32,
+    pub diverged: bool,
+    pub optimizer_bytes: usize,
+    pub wall_secs: f64,
+    pub steps_run: usize,
+    /// Optimizer stability telemetry (e.g. KFAC Cholesky-failure count).
+    pub telemetry: String,
+}
+
+impl RunResult {
+    /// Serialize the loss/error curves as CSV.
+    pub fn to_csv(&self, label: &str) -> String {
+        let mut out = String::from("label,step,epoch,train_loss,test_loss,test_err,lr,diverged\n");
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{label},{},{},{:.6},{:.6},{:.6},{:.6},{}\n",
+                r.step, r.epoch, r.train_loss, r.test_loss, r.test_err, r.lr, r.diverged as u8
+            ));
+        }
+        out
+    }
+}
+
+/// Configuration of a single training run.
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub method: Method,
+    pub hyper: Hyper,
+    pub schedule: Schedule,
+    pub epochs: usize,
+    pub batch_size: usize,
+    pub seed: u64,
+    /// Evaluate on the test set every `eval_every` steps (0 = per epoch).
+    pub eval_every: usize,
+    /// Stop early when loss goes non-finite.
+    pub stop_on_divergence: bool,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            method: Method::Sgd,
+            hyper: Hyper::default(),
+            schedule: Schedule::Constant,
+            epochs: 5,
+            batch_size: 32,
+            seed: 0,
+            eval_every: 0,
+            stop_on_divergence: true,
+        }
+    }
+}
+
+/// Train `model` on `dataset`; returns loss/error curves + telemetry.
+pub fn train_image_model<M: Model + ?Sized>(
+    model: &mut M,
+    dataset: &Dataset,
+    cfg: &TrainCfg,
+) -> RunResult {
+    let mut rng = Pcg::with_stream(cfg.seed, 0x7261696e);
+    let mut opt = cfg.method.build(&model.shapes(), &cfg.hyper);
+    let base_lr = cfg.hyper.lr;
+    let start = std::time::Instant::now();
+
+    let mut rows = Vec::new();
+    let mut best = f32::INFINITY;
+    let mut step = 0usize;
+    let mut diverged = false;
+    'outer: for epoch in 0..cfg.epochs {
+        let batches = dataset.epoch_batches(&mut rng, cfg.batch_size);
+        let mut epoch_loss = 0.0f64;
+        let mut nb = 0usize;
+        for b in &batches {
+            let res = model.forward_backward(b);
+            epoch_loss += res.loss as f64;
+            nb += 1;
+            opt.set_lr(base_lr * cfg.schedule.factor(step));
+            opt.step(step, model.params_mut(), &res.grads, &res.stats);
+            step += 1;
+            diverged = diverged || !res.loss.is_finite() || opt.diverged();
+            if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
+                let row = eval_row(model, dataset, step, epoch, (epoch_loss / nb as f64) as f32, base_lr * cfg.schedule.factor(step), diverged);
+                best = best.min(row.test_err);
+                rows.push(row);
+            }
+            if diverged && cfg.stop_on_divergence {
+                rows.push(LogRow {
+                    step,
+                    epoch,
+                    train_loss: f32::NAN,
+                    test_loss: f32::NAN,
+                    test_err: 1.0,
+                    lr: base_lr,
+                    diverged: true,
+                });
+                break 'outer;
+            }
+        }
+        if cfg.eval_every == 0 {
+            let row = eval_row(model, dataset, step, epoch, (epoch_loss / nb.max(1) as f64) as f32, base_lr * cfg.schedule.factor(step), diverged);
+            best = best.min(row.test_err);
+            rows.push(row);
+        }
+    }
+    let final_err = rows.last().map(|r| r.test_err).unwrap_or(1.0);
+    let telemetry = opt.telemetry();
+    RunResult {
+        final_test_err: final_err,
+        best_test_err: best.min(final_err),
+        diverged,
+        optimizer_bytes: {
+            let opt2 = cfg.method.build(&model.shapes(), &cfg.hyper);
+            opt2.state_bytes()
+        },
+        wall_secs: start.elapsed().as_secs_f64(),
+        steps_run: step,
+        telemetry,
+        rows,
+    }
+}
+
+fn eval_row<M: Model + ?Sized>(
+    model: &M,
+    dataset: &Dataset,
+    step: usize,
+    epoch: usize,
+    train_loss: f32,
+    lr: f32,
+    diverged: bool,
+) -> LogRow {
+    let tb = dataset.test_batch();
+    let (test_loss, correct) = model.evaluate(&tb);
+    LogRow {
+        step,
+        epoch,
+        train_loss,
+        test_loss,
+        test_err: 1.0 - correct as f32 / tb.y.len() as f32,
+        lr,
+        diverged,
+    }
+}
+
+/// Write a CSV string into `results/` (created on demand).
+pub fn write_csv(name: &str, contents: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(contents.as_bytes())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Mlp;
+
+    #[test]
+    fn schedule_shapes() {
+        let c = Schedule::Cosine { total: 100 };
+        assert!((c.factor(0) - 1.0).abs() < 1e-6);
+        assert!(c.factor(50) < 0.51 && c.factor(50) > 0.49);
+        assert!(c.factor(100) < 1e-6);
+        let s = Schedule::Step { every: 10, gamma: 0.5 };
+        assert_eq!(s.factor(9), 1.0);
+        assert_eq!(s.factor(10), 0.5);
+        assert_eq!(s.factor(25), 0.25);
+    }
+
+    #[test]
+    fn schedule_parse() {
+        assert!(matches!(Schedule::parse("constant"), Some(Schedule::Constant)));
+        assert!(matches!(Schedule::parse("cosine:500"), Some(Schedule::Cosine { total: 500 })));
+        assert!(matches!(Schedule::parse("step:40,0.1"), Some(Schedule::Step { .. })));
+        assert!(Schedule::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn trainer_reduces_error_on_easy_data() {
+        let mut rng = Pcg::new(71);
+        let ds = crate::data::prototype_images(
+            &mut rng,
+            crate::model::cnn::ImgShape { c: 1, h: 8, w: 8 },
+            4,
+            120,
+            40,
+            2.0,
+        );
+        let mut mlp = Mlp::new(&mut rng, &[64, 32, 4]);
+        let cfg = TrainCfg {
+            method: Method::Sgd,
+            hyper: Hyper { lr: 0.1, momentum: 0.9, ..Default::default() },
+            epochs: 6,
+            batch_size: 30,
+            ..Default::default()
+        };
+        let res = train_image_model(&mut mlp, &ds, &cfg);
+        assert!(!res.diverged);
+        assert!(res.rows.len() == 6);
+        let first = res.rows.first().unwrap().test_err;
+        let last = res.final_test_err;
+        assert!(last < first, "err {first} -> {last}");
+        assert!(last < 0.4, "final err {last}");
+    }
+
+    #[test]
+    fn csv_roundtrip_format() {
+        let rr = RunResult {
+            rows: vec![LogRow {
+                step: 1,
+                epoch: 0,
+                train_loss: 0.5,
+                test_loss: 0.6,
+                test_err: 0.25,
+                lr: 0.1,
+                diverged: false,
+            }],
+            final_test_err: 0.25,
+            best_test_err: 0.25,
+            diverged: false,
+            optimizer_bytes: 1024,
+            wall_secs: 0.1,
+            steps_run: 1,
+            telemetry: String::new(),
+        };
+        let csv = rr.to_csv("sgd");
+        assert!(csv.starts_with("label,step"));
+        assert!(csv.contains("sgd,1,0,0.5"));
+    }
+}
