@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# CI gate for the SINGD reproduction.
+#
+#   ./ci.sh          — fmt check, clippy, release build, tests, smoke bench
+#   ./ci.sh quick    — skip the smoke bench
+#   ./ci.sh bench    — additionally run the full hotpath bench (perf log)
+#
+# The hotpath bench's --smoke mode runs one iteration per case so the
+# packed/pooled kernels stay exercised in CI without burning minutes; the
+# full run regenerates BENCH_hotpath.json for EXPERIMENTS.md §Perf.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+mode="${1:-full}"
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy (deny warnings) =="
+# Style lints that the pedagogical kernel/loop code intentionally trips
+# (index-heavy numeric loops) are allowed; everything else is denied.
+cargo clippy --all-targets -- -D warnings \
+    -A clippy::needless_range_loop \
+    -A clippy::too_many_arguments \
+    -A clippy::manual_memcpy \
+    -A clippy::op_ref
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [ "$mode" != "quick" ]; then
+    echo "== hotpath bench (smoke) =="
+    cargo bench --bench hotpath -- --smoke
+fi
+
+if [ "$mode" = "bench" ]; then
+    echo "== hotpath bench (full) =="
+    cargo bench --bench hotpath
+fi
+
+echo "CI OK"

@@ -28,15 +28,14 @@ use singd::structured::Structure;
 use singd::tensor::Mat;
 use singd::train::{save_checkpoint, Schedule};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let meta_path = artifact_path("meta.toml");
     let hlo_path = artifact_path("transformer_lm.hlo.txt");
     if !std::path::Path::new(&hlo_path).exists() {
         eprintln!("artifacts missing — run `make artifacts` first ({hlo_path})");
         std::process::exit(1);
     }
-    let meta = Toml::parse(&std::fs::read_to_string(&meta_path)?)
-        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let meta = Toml::parse(&std::fs::read_to_string(&meta_path)?)?;
     let vocab = meta.usize_or("lm.vocab", 32);
     let batch = meta.usize_or("lm.batch", 8);
     let seq = meta.usize_or("lm.seq", 16);

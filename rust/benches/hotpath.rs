@@ -1,27 +1,78 @@
 //! §Perf microbenchmarks — the L3 hot paths.
 //!
-//! 1. `tensor::matmul` (model fwd/bwd substrate) across sizes;
+//! 1. `tensor::matmul` (model fwd/bwd substrate) across sizes, plus the
+//!    per-step Kronecker-statistics products `matmul_at_b` / `matmul_a_bt`;
 //! 2. structured factor ops (`gram_project`, `matmul`, `kkt_right`);
 //! 3. full optimizer steps (KFAC vs INGD vs SINGD-Diag/Hier);
-//! 4. PJRT engine call overhead (when artifacts are built).
+//! 4. PJRT engine call overhead (when artifacts are built and the crate
+//!    is compiled with `--features pjrt`).
 //!
 //! Before/after numbers for each optimization iteration are logged in
-//! EXPERIMENTS.md §Perf.
+//! EXPERIMENTS.md §Perf; each run also dumps machine-readable results to
+//! `BENCH_hotpath.json` in the repo root.
 //!
 //! Run: `cargo bench --bench hotpath`
+//! CI:  `cargo bench --bench hotpath -- --smoke`   (one iteration per case)
 
-use singd::bench::{black_box, Harness};
+use singd::bench::{black_box, Harness, Stats};
 use singd::optim::{Hyper, KronStats, Method, Optimizer};
 use singd::proptest::Pcg;
 use singd::structured::{SMat, Structure};
-use singd::tensor::{matmul, Mat};
+use singd::tensor::{matmul, matmul_a_bt, matmul_at_b, pool};
+
+/// One JSON row: timing stats plus optional GFLOP/s.
+struct Row {
+    stats: Stats,
+    gflops: Option<f64>,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_json(rows: &[Row], smoke: bool) {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"hotpath\",\n");
+    out.push_str(&format!("  \"smoke\": {smoke},\n"));
+    out.push_str(&format!("  \"threads\": {},\n", pool::num_threads()));
+    out.push_str("  \"cases\": [\n");
+    for (i, row) in rows.iter().enumerate() {
+        let s = &row.stats;
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \"min_ns\": {:.1}, \"max_ns\": {:.1}",
+            json_escape(&s.name),
+            s.iters,
+            s.median_ns,
+            s.mean_ns,
+            s.min_ns,
+            s.max_ns
+        ));
+        match row.gflops {
+            Some(g) => out.push_str(&format!(", \"gflops\": {g:.3}}}")),
+            None => out.push('}'),
+        }
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_hotpath.json", &out) {
+        Ok(()) => println!("-- wrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("-- failed to write BENCH_hotpath.json: {e}"),
+    }
+}
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut h = Harness::new("hotpath");
-    h.target_secs = 0.4;
+    if smoke {
+        h.target_secs = 0.0;
+        h.max_iters = 1;
+    } else {
+        h.target_secs = 0.4;
+    }
+    let mut rows: Vec<Row> = Vec::new();
     let mut rng = Pcg::new(3);
 
-    // 1. matmul GFLOP/s.
+    // 1a. square matmul GFLOP/s.
     for n in [64usize, 128, 256, 512] {
         let a = rng.normal_mat(n, n, 1.0);
         let b = rng.normal_mat(n, n, 1.0);
@@ -30,6 +81,29 @@ fn main() {
         });
         let gflops = 2.0 * (n as f64).powi(3) / st.median_ns;
         println!("{:>46} {:.2} GFLOP/s", "->", gflops);
+        rows.push(Row { stats: st, gflops: Some(gflops) });
+    }
+
+    // 1b. Kronecker-statistics products at the paper's transformer-ish
+    // shape: X ∈ R^{4096×512} (batch·seq × width).
+    {
+        let (m, d) = (4096usize, 512usize);
+        let x = rng.normal_mat(m, d, 1.0);
+        let y = rng.normal_mat(m, d, 1.0);
+        let st = h.bench(&format!("matmul_at_b {m}x{d}"), || {
+            black_box(matmul_at_b(&x, &y));
+        });
+        let gflops = 2.0 * (m as f64) * (d as f64) * (d as f64) / st.median_ns;
+        println!("{:>46} {:.2} GFLOP/s", "->", gflops);
+        rows.push(Row { stats: st, gflops: Some(gflops) });
+
+        let w = rng.normal_mat(d, d, 1.0);
+        let st = h.bench(&format!("matmul_a_bt {m}x{d} @ {d}x{d}T"), || {
+            black_box(matmul_a_bt(&x, &w));
+        });
+        let gflops = 2.0 * (m as f64) * (d as f64) * (d as f64) / st.median_ns;
+        println!("{:>46} {:.2} GFLOP/s", "->", gflops);
+        rows.push(Row { stats: st, gflops: Some(gflops) });
     }
 
     // 2. structured ops at d = 256.
@@ -50,16 +124,19 @@ fn main() {
         let sym = rng.normal_mat(d, d, 0.2).symmetrize();
         let mut k = singd::structured::proj::proj(s, &sym);
         k.axpy(1.0, &SMat::identity(s, d));
-        h.bench(&format!("gram_project {} d={d} m={m}", s.name()), || {
+        let st = h.bench(&format!("gram_project {} d={d} m={m}", s.name()), || {
             black_box(k.gram_project(&a_rows, 1.0));
         });
-        h.bench(&format!("kkt_right {} d={d}", s.name()), || {
+        rows.push(Row { stats: st, gflops: None });
+        let st = h.bench(&format!("kkt_right {} d={d}", s.name()), || {
             black_box(k.kkt_right(&x));
         });
+        rows.push(Row { stats: st, gflops: None });
         let k2 = SMat::identity(s, d);
-        h.bench(&format!("struct matmul {} d={d}", s.name()), || {
+        let st = h.bench(&format!("struct matmul {} d={d}", s.name()), || {
             black_box(k.matmul(&k2));
         });
+        rows.push(Row { stats: st, gflops: None });
     }
 
     // 3. full optimizer steps on a (256, 256) layer.
@@ -77,27 +154,43 @@ fn main() {
         let mut opt = method.build(&shapes, &hp);
         let mut params = [rng.normal_mat(d, d, 0.1)];
         let mut t = 0usize;
-        h.bench(&format!("optimizer step {} d={d} T=1", method.name()), || {
+        let st = h.bench(&format!("optimizer step {} d={d} T=1", method.name()), || {
             opt.step(t, &mut params, &grads, &stats);
             t += 1;
         });
+        rows.push(Row { stats: st, gflops: None });
     }
 
-    // 4. PJRT call overhead (optional — needs `make artifacts`).
-    let smoke = singd::runtime::artifact_path("smoke.hlo.txt");
-    if std::path::Path::new(&smoke).exists() {
-        let eng = singd::runtime::Engine::load(&smoke).expect("load smoke artifact");
-        let x = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
-        let y = Mat::ones(2, 2);
-        h.bench("pjrt roundtrip (2x2 smoke)", || {
-            black_box(
-                eng.run(&[singd::runtime::MatInput::new(&x), singd::runtime::MatInput::new(&y)])
+    // 4. PJRT call overhead (needs `make artifacts` + `--features pjrt`).
+    if cfg!(feature = "pjrt") {
+        let smoke_artifact = singd::runtime::artifact_path("smoke.hlo.txt");
+        if std::path::Path::new(&smoke_artifact).exists() {
+            let eng = singd::runtime::Engine::load(&smoke_artifact).expect("load smoke artifact");
+            let x = singd::Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+            let y = singd::Mat::ones(2, 2);
+            let st = h.bench("pjrt roundtrip (2x2 smoke)", || {
+                black_box(
+                    eng.run(&[
+                        singd::runtime::MatInput::new(&x),
+                        singd::runtime::MatInput::new(&y),
+                    ])
                     .unwrap(),
-            );
-        });
+                );
+            });
+            rows.push(Row { stats: st, gflops: None });
+        } else {
+            println!("(skipping PJRT bench — run `make artifacts`)");
+        }
     } else {
-        println!("(skipping PJRT bench — run `make artifacts`)");
+        println!("(skipping PJRT bench — built without the `pjrt` feature)");
     }
 
+    if smoke {
+        // Don't clobber the committed full-run numbers with 1-iteration
+        // smoke noise (ci.sh runs --smoke on every pass).
+        println!("-- smoke mode: skipping BENCH_hotpath.json");
+    } else {
+        write_json(&rows, smoke);
+    }
     h.finish();
 }

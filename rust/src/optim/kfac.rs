@@ -14,10 +14,12 @@
 //! to a general LU inverse (mirroring `torch.linalg.inv` not raising), and
 //! training blows up — exactly the failure mode the paper reports.
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
 use super::{Hyper, KronStats, Optimizer};
 use crate::linalg::{lu_inverse, spd_inverse};
 use crate::numerics::Policy;
-use crate::tensor::Mat;
+use crate::tensor::{pool, Mat};
 
 struct LayerState {
     s_k: Mat,
@@ -25,6 +27,37 @@ struct LayerState {
     s_k_inv: Mat,
     s_c_inv: Mat,
     m_mu: Mat,
+}
+
+/// `(S + λI)⁻¹` with fp32 compute but storage-format rounding of the
+/// result — the paper's "transform into FP32, invert, transform back"
+/// recipe. A free function (with atomic failure telemetry) so per-layer
+/// refreshes can run concurrently on the worker pool.
+fn damped_inverse(
+    s: &Mat,
+    damping: f32,
+    policy: &Policy,
+    chol_failures: &AtomicUsize,
+    diverged: &AtomicBool,
+) -> Mat {
+    let mut damped = s.clone();
+    damped.add_diag(damping);
+    let mut inv = match spd_inverse(&damped) {
+        Some(inv) => inv,
+        None => {
+            chol_failures.fetch_add(1, Ordering::Relaxed);
+            match lu_inverse(&damped) {
+                Some(inv) => inv,
+                None => {
+                    // Exactly singular: real frameworks return inf/nan.
+                    diverged.store(true, Ordering::Relaxed);
+                    Mat::from_fn(damped.rows(), damped.cols(), |_, _| f32::NAN)
+                }
+            }
+        }
+    };
+    policy.quantize_mat(&mut inv);
+    inv
 }
 
 pub struct Kfac {
@@ -50,31 +83,6 @@ impl Kfac {
             .collect();
         Kfac { hp: hp.clone(), layers, diverged: false, chol_failures: 0 }
     }
-
-    /// `(S + λI)⁻¹` with fp32 compute but storage-format rounding of the
-    /// result — the paper's "transform into FP32, invert, transform back"
-    /// recipe.
-    fn damped_inverse(&mut self, s: &Mat, policy: &Policy) -> Mat {
-        let mut damped = s.clone();
-        damped.add_diag(self.hp.damping);
-        let inv = match spd_inverse(&damped) {
-            Some(inv) => inv,
-            None => {
-                self.chol_failures += 1;
-                match lu_inverse(&damped) {
-                    Some(inv) => inv,
-                    None => {
-                        // Exactly singular: real frameworks return inf/nan.
-                        self.diverged = true;
-                        Mat::from_fn(damped.rows(), damped.cols(), |_, _| f32::NAN)
-                    }
-                }
-            }
-        };
-        let mut inv = inv;
-        policy.quantize_mat(&mut inv);
-        inv
-    }
 }
 
 impl Optimizer for Kfac {
@@ -83,42 +91,69 @@ impl Optimizer for Kfac {
     }
 
     fn step(&mut self, t: usize, params: &mut [Mat], grads: &[Mat], stats: &[KronStats]) {
+        assert_eq!(params.len(), self.layers.len(), "kfac: params/layers mismatch");
+        assert_eq!(grads.len(), params.len(), "kfac: grads/params mismatch");
+        assert_eq!(stats.len(), params.len(), "kfac: stats/params mismatch");
         let policy = self.hp.policy;
         let b1 = self.hp.precond_lr;
+        let hp = &self.hp;
         if t % self.hp.t_update == 0 {
-            for l in 0..params.len() {
-                // EMA of the Kronecker factors, accumulated in the storage
-                // format (this is where bf16 hurts).
-                let u = stats[l].u_dense();
-                let g = stats[l].g_dense();
-                let (s_k, s_c) = {
-                    let st = &mut self.layers[l];
-                    st.s_k.ema(1.0 - b1, b1, &u);
-                    st.s_c.ema(1.0 - b1, b1, &g);
-                    policy.quantize_mat(&mut st.s_k);
-                    policy.quantize_mat(&mut st.s_c);
-                    (st.s_k.clone(), st.s_c.clone())
-                };
-                let k_inv = self.damped_inverse(&s_k, &policy);
-                let c_inv = self.damped_inverse(&s_c, &policy);
-                let st = &mut self.layers[l];
-                st.s_k_inv = k_inv;
-                st.s_c_inv = c_inv;
-            }
+            // Per-layer refresh — the `u_dense`/`g_dense` statistics
+            // products plus two inversions — fans out across the pool; the
+            // failure counters are the only shared state.
+            let chol_failures = AtomicUsize::new(0);
+            let diverged = AtomicBool::new(false);
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
+                .layers
+                .iter_mut()
+                .zip(stats.iter())
+                .map(|(st, stat)| {
+                    let cf = &chol_failures;
+                    let dv = &diverged;
+                    Box::new(move || {
+                        // EMA of the Kronecker factors, accumulated in the
+                        // storage format (this is where bf16 hurts).
+                        let u = stat.u_dense();
+                        let g = stat.g_dense();
+                        st.s_k.ema(1.0 - b1, b1, &u);
+                        st.s_c.ema(1.0 - b1, b1, &g);
+                        policy.quantize_mat(&mut st.s_k);
+                        policy.quantize_mat(&mut st.s_c);
+                        st.s_k_inv = damped_inverse(&st.s_k, hp.damping, &policy, cf, dv);
+                        st.s_c_inv = damped_inverse(&st.s_c, hp.damping, &policy, cf, dv);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool::run_jobs(jobs);
+            self.chol_failures += chol_failures.load(Ordering::Relaxed);
+            self.diverged |= diverged.load(Ordering::Relaxed);
         }
-        for l in 0..params.len() {
-            let st = &mut self.layers[l];
-            // m_μ ← α₂ m_μ + S_C⁻¹ ∇W S_K⁻¹ + γ W
-            let precond = crate::tensor::matmul(&st.s_c_inv, &crate::tensor::matmul(&grads[l], &st.s_k_inv));
-            st.m_mu.ema(self.hp.momentum, 1.0, &precond);
-            st.m_mu.axpy(self.hp.weight_decay, &params[l]);
-            policy.quantize_mat(&mut st.m_mu);
-            // KL-style RMS trust region on the preconditioned update.
-            let f = super::update_clip_factor(self.hp.lr, &st.m_mu, self.hp.update_clip);
-            params[l].axpy(-self.hp.lr * f, &st.m_mu);
-            policy.quantize_mat(&mut params[l]);
-            self.diverged |= params[l].has_nonfinite() || st.m_mu.has_nonfinite();
-        }
+        let diverged = AtomicBool::new(false);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
+            .layers
+            .iter_mut()
+            .zip(params.iter_mut().zip(grads.iter()))
+            .map(|(st, (p, g))| {
+                let dv = &diverged;
+                Box::new(move || {
+                    // m_μ ← α₂ m_μ + S_C⁻¹ ∇W S_K⁻¹ + γ W
+                    let precond =
+                        crate::tensor::matmul(&st.s_c_inv, &crate::tensor::matmul(g, &st.s_k_inv));
+                    st.m_mu.ema(hp.momentum, 1.0, &precond);
+                    st.m_mu.axpy(hp.weight_decay, p);
+                    policy.quantize_mat(&mut st.m_mu);
+                    // KL-style RMS trust region on the preconditioned update.
+                    let f = super::update_clip_factor(hp.lr, &st.m_mu, hp.update_clip);
+                    p.axpy(-hp.lr * f, &st.m_mu);
+                    policy.quantize_mat(p);
+                    if p.has_nonfinite() || st.m_mu.has_nonfinite() {
+                        dv.store(true, Ordering::Relaxed);
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::run_jobs(jobs);
+        self.diverged |= diverged.load(Ordering::Relaxed);
     }
 
     fn set_lr(&mut self, lr: f32) {

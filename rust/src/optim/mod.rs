@@ -17,6 +17,11 @@
 //! gradient every step. All state mutations are routed through a
 //! [`Policy`] so the whole optimizer runs in emulated bf16/fp16 when
 //! configured — reproducing the paper's mixed-precision results.
+//!
+//! Layers are independent, so the second-order methods (KFAC and the
+//! SINGD family) fan their per-layer refresh + update work out across the
+//! persistent worker pool in [`crate::tensor::pool`]; pooled and serial
+//! stepping produce identical trajectories (`rust/tests/parallel.rs`).
 
 mod adamw;
 mod kfac;

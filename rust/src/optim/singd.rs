@@ -20,9 +20,11 @@
 //! `H_K = Kᵀ U K = (A K)ᵀ(A K)/m` is consumed through the structure's
 //! `gram_project`, and `Tr(H_K) = ‖A K‖²_F/m`.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use super::{Hyper, KronStats, Optimizer};
 use crate::structured::{SMat, Structure};
-use crate::tensor::Mat;
+use crate::tensor::{pool, Mat};
 
 struct LayerState {
     k: SMat,
@@ -175,29 +177,53 @@ impl Optimizer for Singd {
     }
 
     fn step(&mut self, t: usize, params: &mut [Mat], grads: &[Mat], stats: &[KronStats]) {
+        // Layers are independent, so the whole per-layer pipeline —
+        // preconditioner refresh (Fig. 4 step 1) fused with the
+        // preconditioned update (steps 2–3) — fans out across the worker
+        // pool, one job per layer. Each job owns its layer's state and
+        // parameter matrix; divergence is the only shared output.
+        assert_eq!(params.len(), self.layers.len(), "singd: params/layers mismatch");
+        assert_eq!(grads.len(), params.len(), "singd: grads/params mismatch");
+        assert_eq!(stats.len(), params.len(), "singd: stats/params mismatch");
         let policy = self.hp.policy;
-        if t % self.hp.t_update == 0 {
-            for l in 0..params.len() {
-                Self::refresh_layer(&mut self.layers[l], &stats[l], &self.hp, self.adaptive, self.alpha1);
-            }
-        }
-        for l in 0..params.len() {
-            let st = &mut self.layers[l];
-            // m_μ ← α₂ m_μ + C Cᵀ ∇W K Kᵀ + γ W   (Fig. 4, step 2)
-            let precond = st.c.kkt_left(&st.k.kkt_right(&grads[l], ));
-            st.m_mu.ema(self.hp.momentum, 1.0, &precond);
-            st.m_mu.axpy(self.hp.weight_decay, &params[l]);
-            policy.quantize_mat(&mut st.m_mu);
-            // μ ← μ − β₂ m_μ   (Fig. 4, step 3), with the KL-style RMS
-            // trust region every production KFAC applies.
-            let f = super::update_clip_factor(self.hp.lr, &st.m_mu, self.hp.update_clip);
-            params[l].axpy(-self.hp.lr * f, &st.m_mu);
-            policy.quantize_mat(&mut params[l]);
-            self.diverged |= params[l].has_nonfinite()
-                || st.m_mu.has_nonfinite()
-                || st.k.has_nonfinite()
-                || st.c.has_nonfinite();
-        }
+        let refresh = t % self.hp.t_update == 0;
+        let hp = &self.hp;
+        let adaptive = self.adaptive;
+        let alpha1 = self.alpha1;
+        let diverged = AtomicBool::new(false);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
+            .layers
+            .iter_mut()
+            .zip(params.iter_mut())
+            .zip(grads.iter().zip(stats.iter()))
+            .map(|((st, p), (g, stat))| {
+                let dv = &diverged;
+                Box::new(move || {
+                    if refresh {
+                        Self::refresh_layer(st, stat, hp, adaptive, alpha1);
+                    }
+                    // m_μ ← α₂ m_μ + C Cᵀ ∇W K Kᵀ + γ W   (Fig. 4, step 2)
+                    let precond = st.c.kkt_left(&st.k.kkt_right(g));
+                    st.m_mu.ema(hp.momentum, 1.0, &precond);
+                    st.m_mu.axpy(hp.weight_decay, p);
+                    policy.quantize_mat(&mut st.m_mu);
+                    // μ ← μ − β₂ m_μ   (Fig. 4, step 3), with the KL-style
+                    // RMS trust region every production KFAC applies.
+                    let f = super::update_clip_factor(hp.lr, &st.m_mu, hp.update_clip);
+                    p.axpy(-hp.lr * f, &st.m_mu);
+                    policy.quantize_mat(p);
+                    if p.has_nonfinite()
+                        || st.m_mu.has_nonfinite()
+                        || st.k.has_nonfinite()
+                        || st.c.has_nonfinite()
+                    {
+                        dv.store(true, Ordering::Relaxed);
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::run_jobs(jobs);
+        self.diverged |= diverged.load(Ordering::Relaxed);
     }
 
     fn set_lr(&mut self, lr: f32) {

@@ -2,158 +2,30 @@
 //! `python/compile/aot.py`) and execute them from Rust — Python is never on
 //! the training path.
 //!
+//! The real backend lives in [`pjrt`] and needs the `xla` and `anyhow`
+//! crates, which are not available in offline/CI builds — so it is gated
+//! behind the (default-off) `pjrt` cargo feature, and the default build
+//! compiles a dependency-free stub with the same API whose `Engine::load`
+//! returns a descriptive error. Every caller already guards on the
+//! artifact file existing, so default builds and tests skip gracefully.
+//!
 //! Interchange format is HLO *text*: the image's xla_extension 0.5.1
 //! rejects jax≥0.5 serialized protos (64-bit instruction ids), while the
 //! text parser reassigns ids (see /opt/xla-example/README.md).
 
-use crate::tensor::Mat;
-use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Engine, MatInput};
 
-/// A compiled PJRT executable plus its client.
-pub struct Engine {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    path: String,
-}
-
-impl Engine {
-    /// Load an HLO-text artifact and compile it on the CPU PJRT client.
-    pub fn load(path: &str) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parse HLO text at {path}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).with_context(|| format!("compile {path}"))?;
-        Ok(Engine { client, exe, path: path.to_string() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn path(&self) -> &str {
-        &self.path
-    }
-
-    /// Execute with `Mat` inputs; outputs are the flattened elements of the
-    /// result tuple, one `Vec<f32>` per tuple element.
-    ///
-    /// The artifact must have been lowered with `return_tuple=True` (see
-    /// `python/compile/aot.py`).
-    pub fn run(&self, inputs: &[MatInput<'_>]) -> Result<Vec<Vec<f32>>> {
-        let mut lits = Vec::with_capacity(inputs.len());
-        for inp in inputs {
-            lits.push(inp.to_literal()?);
-        }
-        let mut result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        // Tuple outputs: decompose.
-        let elems = result.decompose_tuple().unwrap_or_else(|_| vec![]);
-        if elems.is_empty() {
-            return Ok(vec![result.to_vec::<f32>().unwrap_or_default()]);
-        }
-        let mut out = Vec::with_capacity(elems.len());
-        for e in elems {
-            out.push(e.to_vec::<f32>().context("tuple element to f32 vec")?);
-        }
-        Ok(out)
-    }
-}
-
-/// An input tensor: a matrix with an optional reshape to higher rank.
-pub struct MatInput<'a> {
-    pub mat: &'a Mat,
-    /// Target dims (defaults to `[rows, cols]`).
-    pub dims: Option<Vec<i64>>,
-}
-
-impl<'a> MatInput<'a> {
-    pub fn new(mat: &'a Mat) -> Self {
-        MatInput { mat, dims: None }
-    }
-
-    pub fn with_dims(mat: &'a Mat, dims: Vec<i64>) -> Self {
-        MatInput { mat, dims: Some(dims) }
-    }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::vec1(self.mat.data());
-        let dims = self
-            .dims
-            .clone()
-            .unwrap_or_else(|| vec![self.mat.rows() as i64, self.mat.cols() as i64]);
-        Ok(lit.reshape(&dims)?)
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Engine, MatInput, RuntimeError};
 
 /// Resolve an artifact path relative to the repo's `artifacts/` directory,
 /// honoring `SINGD_ARTIFACTS` when set.
 pub fn artifact_path(name: &str) -> String {
     let dir = std::env::var("SINGD_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
     format!("{dir}/{name}")
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    /// These tests need the artifacts built (`make artifacts`); they are
-    /// skipped gracefully otherwise so `cargo test` stays green pre-AOT.
-    fn engine(name: &str) -> Option<Engine> {
-        let p = artifact_path(name);
-        if !std::path::Path::new(&p).exists() {
-            eprintln!("skipping: {p} not built (run `make artifacts`)");
-            return None;
-        }
-        Some(Engine::load(&p).expect("load+compile artifact"))
-    }
-
-    #[test]
-    fn smoke_artifact_executes() {
-        let Some(eng) = engine("smoke.hlo.txt") else { return };
-        // smoke: f(x, y) = (x @ y + 2,) over f32[2,2].
-        let x = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
-        let y = Mat::ones(2, 2);
-        let out = eng.run(&[MatInput::new(&x), MatInput::new(&y)]).unwrap();
-        assert_eq!(out[0], vec![5.0, 5.0, 9.0, 9.0]);
-    }
-
-    #[test]
-    fn mlp_artifact_matches_native_model() {
-        let Some(eng) = engine("mlp_fwdbwd.hlo.txt") else { return };
-        // The artifact computes (loss, dW1, dW2) for a fixed-shape MLP —
-        // python/tests/test_model.py pins the same shapes.
-        let mut rng = crate::proptest::Pcg::new(5);
-        let x = rng.normal_mat(8, 16, 1.0);
-        let y_onehot = Mat::from_fn(8, 4, |r, c| if c == r % 4 { 1.0 } else { 0.0 });
-        let w1 = rng.normal_mat(32, 17, 0.3);
-        let w2 = rng.normal_mat(4, 33, 0.3);
-        let out = eng
-            .run(&[MatInput::new(&x), MatInput::new(&y_onehot), MatInput::new(&w1), MatInput::new(&w2)])
-            .unwrap();
-        assert!(out[0].len() == 1, "loss is a scalar");
-        let loss = out[0][0];
-        assert!(loss.is_finite() && loss > 0.0);
-
-        // Cross-check against the native Rust model: same weights → same loss.
-        let mut mlp = crate::model::Mlp::new(&mut crate::proptest::Pcg::new(1), &[16, 32, 4]);
-        mlp.params_mut()[0] = w1.clone();
-        mlp.params_mut()[1] = w2.clone();
-        use crate::model::Model;
-        let batch = crate::model::Batch { x: x.clone(), y: (0..8).map(|r| r % 4).collect() };
-        let (native_loss, _) = mlp.evaluate(&batch);
-        assert!(
-            (native_loss - loss).abs() < 1e-3 * (1.0 + native_loss.abs()),
-            "native {native_loss} vs pjrt {loss}"
-        );
-        // And the gradients must match shape & values.
-        let res = mlp.forward_backward(&batch);
-        let dw1 = &out[1];
-        assert_eq!(dw1.len(), 32 * 17);
-        let max_diff = dw1
-            .iter()
-            .zip(res.grads[0].data())
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0f32, f32::max);
-        assert!(max_diff < 1e-3, "grad mismatch {max_diff}");
-    }
 }

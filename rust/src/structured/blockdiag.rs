@@ -4,8 +4,16 @@
 //! smaller when `k ∤ d`). Storage `O(kd)`; every op is per-block and costs
 //! `O(k)` per matrix element touched, which yields the `O(k m d)` iteration
 //! cost of paper Table 2.
+//!
+//! Blocks are independent, so the expensive ops (`matmul`,
+//! `gram_project`, `left_mul`) fan their per-block work out across the
+//! persistent worker pool when the total work clears
+//! [`super::PAR_WORK`]; `right_mul` shards by rows of `X` instead (all
+//! blocks touch every row). Each parallel unit owns a disjoint slice of
+//! the output and per-element accumulation order is independent of the
+//! sharding, so pooled and serial results are bitwise identical.
 
-use crate::tensor::{matmul, Mat};
+use crate::tensor::{matmul_into, pool, Mat};
 
 #[derive(Clone, Debug)]
 pub struct BlockDiagF {
@@ -63,79 +71,146 @@ impl BlockDiagF {
     pub fn matmul(&self, other: &BlockDiagF) -> BlockDiagF {
         assert_eq!(self.d, other.d);
         assert_eq!(self.k, other.k);
-        BlockDiagF {
-            d: self.d,
-            k: self.k,
-            blocks: self.blocks.iter().zip(&other.blocks).map(|(a, b)| matmul(a, b)).collect(),
+        // 2k³ flops per block.
+        if 2 * self.k * self.k * self.d < super::PAR_WORK || self.blocks.len() < 2 {
+            return BlockDiagF {
+                d: self.d,
+                k: self.k,
+                blocks: self
+                    .blocks
+                    .iter()
+                    .zip(&other.blocks)
+                    .map(|(a, b)| crate::tensor::matmul(a, b))
+                    .collect(),
+            };
         }
+        let mut blocks: Vec<Mat> =
+            self.blocks.iter().map(|b| Mat::zeros(b.rows(), b.cols())).collect();
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = blocks
+            .iter_mut()
+            .zip(self.blocks.iter().zip(&other.blocks))
+            .map(|(dst, (a, b))| {
+                Box::new(move || matmul_into(a, b, dst, false)) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::run_jobs(jobs);
+        BlockDiagF { d: self.d, k: self.k, blocks }
     }
 
-    /// `X @ K` or `X @ Kᵀ`.
+    /// `X @ K` or `X @ Kᵀ`, sharded by rows of `X`.
     pub fn right_mul(&self, x: &Mat, transpose: bool) -> Mat {
         let m = x.rows();
         let mut out = Mat::zeros(m, self.d);
-        for (off, sz) in self.offsets() {
-            let blk = &self.blocks[off / self.k];
-            for r in 0..m {
-                let xr = &x.row(r)[off..off + sz];
-                let or = &mut out.row_mut(r)[off..off + sz];
-                for j in 0..sz {
-                    let mut acc = 0.0f32;
-                    for i in 0..sz {
-                        let kij = if transpose { blk.at(j, i) } else { blk.at(i, j) };
-                        acc += xr[i] * kij;
-                    }
-                    or[j] = acc;
-                }
-            }
+        if m == 0 || self.d == 0 {
+            return out;
         }
+        let d = self.d;
+        let xd = x.data();
+        let min_rows = if m * self.k * d < super::PAR_WORK { m } else { 1 };
+        pool::parallel_chunks_mut(out.data_mut(), d, min_rows, |row0, chunk| {
+            for (li, or) in chunk.chunks_mut(d).enumerate() {
+                let xr = &xd[(row0 + li) * d..(row0 + li + 1) * d];
+                self.right_mul_row(xr, or, transpose);
+            }
+        });
         out
     }
 
-    /// `K @ X` or `Kᵀ @ X`.
+    fn right_mul_row(&self, xr: &[f32], or: &mut [f32], transpose: bool) {
+        let mut off = 0;
+        for blk in &self.blocks {
+            let sz = blk.rows();
+            let xs = &xr[off..off + sz];
+            let os = &mut or[off..off + sz];
+            for (j, o) in os.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                for (i, &xv) in xs.iter().enumerate() {
+                    let kij = if transpose { blk.at(j, i) } else { blk.at(i, j) };
+                    acc += xv * kij;
+                }
+                *o = acc;
+            }
+            off += sz;
+        }
+    }
+
+    /// `K @ X` or `Kᵀ @ X`: block `b` owns the contiguous output rows
+    /// `[off_b, off_b + sz_b)`, so blocks fan out as independent jobs.
     pub fn left_mul(&self, x: &Mat, transpose: bool) -> Mat {
         let n = x.cols();
         let mut out = Mat::zeros(self.d, n);
-        for (off, sz) in self.offsets() {
-            let blk = &self.blocks[off / self.k];
-            for i in 0..sz {
-                let orow = out.row_mut(off + i);
-                for p in 0..sz {
-                    let kip = if transpose { blk.at(p, i) } else { blk.at(i, p) };
-                    if kip == 0.0 {
-                        continue;
-                    }
-                    let xrow = x.row(off + p);
-                    for c in 0..n {
-                        orow[c] += kip * xrow[c];
+        if n == 0 || self.d == 0 {
+            return out;
+        }
+        let parallel =
+            self.k * self.d * n >= super::PAR_WORK && self.blocks.len() >= 2;
+        let offsets: Vec<(usize, usize)> = self.offsets().collect();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(self.blocks.len());
+        let mut rest = out.data_mut();
+        for (bi, &(off, sz)) in offsets.iter().enumerate() {
+            let (chunk, tail) = rest.split_at_mut(sz * n);
+            rest = tail;
+            let blk = &self.blocks[bi];
+            let job = move || {
+                for i in 0..sz {
+                    let orow = &mut chunk[i * n..(i + 1) * n];
+                    for p in 0..sz {
+                        let kip = if transpose { blk.at(p, i) } else { blk.at(i, p) };
+                        if kip == 0.0 {
+                            continue;
+                        }
+                        let xrow = x.row(off + p);
+                        for (ov, &xv) in orow.iter_mut().zip(xrow.iter()) {
+                            *ov += kip * xv;
+                        }
                     }
                 }
+            };
+            if parallel {
+                jobs.push(Box::new(job));
+            } else {
+                job();
             }
         }
+        pool::run_jobs(jobs);
         out
     }
 
     /// `Π̂(scale · BᵀB)`: extract each diagonal block of the Gram matrix,
-    /// computed blockwise from `B` in `O(m d k)`.
+    /// computed blockwise from `B` in `O(m d k)`, one pool job per block.
     pub fn gram_project(&self, b: &Mat, scale: f32) -> BlockDiagF {
         let m = b.rows();
-        let mut blocks = Vec::with_capacity(self.blocks.len());
-        for (off, sz) in self.offsets() {
-            let mut g = Mat::zeros(sz, sz);
-            for r in 0..m {
-                let br = &b.row(r)[off..off + sz];
-                for i in 0..sz {
-                    let bi = br[i];
-                    if bi == 0.0 {
-                        continue;
-                    }
-                    for j in 0..sz {
-                        *g.at_mut(i, j) += bi * br[j];
+        let offsets: Vec<(usize, usize)> = self.offsets().collect();
+        let mut blocks: Vec<Mat> =
+            offsets.iter().map(|&(_, sz)| Mat::zeros(sz, sz)).collect();
+        let parallel = m * self.k * self.d >= super::PAR_WORK && blocks.len() >= 2;
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(blocks.len());
+        for (g, &(off, sz)) in blocks.iter_mut().zip(offsets.iter()) {
+            let job = move || {
+                for r in 0..m {
+                    let br = &b.row(r)[off..off + sz];
+                    for (i, &bi) in br.iter().enumerate() {
+                        if bi == 0.0 {
+                            continue;
+                        }
+                        for (j, &bj) in br.iter().enumerate() {
+                            *g.at_mut(i, j) += bi * bj;
+                        }
                     }
                 }
+                if scale != 1.0 {
+                    for v in g.data_mut() {
+                        *v *= scale;
+                    }
+                }
+            };
+            if parallel {
+                jobs.push(Box::new(job));
+            } else {
+                job();
             }
-            blocks.push(g.scale(scale));
         }
+        pool::run_jobs(jobs);
         BlockDiagF { d: self.d, k: self.k, blocks }
     }
 

@@ -15,7 +15,7 @@
 //! P22 = D22·D22' (diag)    P32 = A32·D22' + A33·B32             P33 = A33·B33
 //! ```
 
-use crate::tensor::{matmul, Mat};
+use crate::tensor::{matmul, pool, Mat};
 
 #[derive(Clone, Debug)]
 pub struct HierF {
@@ -124,16 +124,30 @@ impl HierF {
         HierF { d: self.d, k1: self.k1, k2: self.k2, a11, a12, a13, d22, a32, a33 }
     }
 
-    /// Dense products via the block formulas, `O((k1+k2)·d·m)`.
+    /// Dense products via the block formulas, `O((k1+k2)·d·m)`; rows of
+    /// `X` are independent and shard across the worker pool.
     pub fn right_mul(&self, x: &Mat, transpose: bool) -> Mat {
-        // Fall back to dense-block assembly for clarity; blocks are small
-        // (k1, k2 ≪ d) so this is still O(k·d·m).
         let m = x.rows();
+        let d = self.d;
+        let mut out = Mat::zeros(m, d);
+        if m == 0 || d == 0 {
+            return out;
+        }
+        let xd = x.data();
+        let min_rows =
+            if m * (self.k1 + self.k2 + 1) * d < super::PAR_WORK { m } else { 1 };
+        pool::parallel_chunks_mut(out.data_mut(), d, min_rows, |row0, chunk| {
+            for (li, or) in chunk.chunks_mut(d).enumerate() {
+                let xr = &xd[(row0 + li) * d..(row0 + li + 1) * d];
+                self.right_mul_row(xr, or, transpose);
+            }
+        });
+        out
+    }
+
+    fn right_mul_row(&self, xr: &[f32], or: &mut [f32], transpose: bool) {
         let (k1, k2, dm) = (self.k1, self.k2, self.dm());
-        let mut out = Mat::zeros(m, self.d);
-        for r in 0..m {
-            let xr = x.row(r);
-            let or = out.row_mut(r);
+        {
             if !transpose {
                 // out1 = x1 A11; out2 = x1 A12 + x2 ⊙ d22 + x3 A32; out3 = x1 A13 + x3 A33
                 for i in 0..k1 {
@@ -198,7 +212,6 @@ impl HierF {
                 }
             }
         }
-        out
     }
 
     pub fn left_mul(&self, x: &Mat, transpose: bool) -> Mat {
@@ -209,17 +222,60 @@ impl HierF {
 
     /// `Π̂(scale·BᵀB) = [[M11, 2M12, 2M13],[0, Diag(M22), 0],[0, 2M32, M33]]`
     /// computed from `B` in `O(m (k1+k2) d)` (Table 1, row 3).
+    ///
+    /// Large batches split into [`super::GRAM_SHARDS`] row shards whose
+    /// partial projections are reduced in shard order; the shard count
+    /// depends only on the problem size (never the thread count), so
+    /// pooled and serial runs produce identical results.
     pub fn gram_project(&self, b: &Mat, scale: f32) -> HierF {
         let m = b.rows();
-        let (k1, k2, dm) = (self.k1, self.k2, self.dm());
-        let mut out = HierF::identity(self.d, k1, k2);
-        out.a11 = Mat::zeros(k1, k1);
-        out.a12 = Mat::zeros(k1, dm);
-        out.a13 = Mat::zeros(k1, k2);
-        out.d22 = vec![0.0; dm];
-        out.a32 = Mat::zeros(k2, dm);
-        out.a33 = Mat::zeros(k2, k2);
-        for r in 0..m {
+        let (k1, k2) = (self.k1, self.k2);
+        let zeros_like = || {
+            let mut z = HierF::identity(self.d, k1, k2);
+            z.a11 = Mat::zeros(k1, k1);
+            z.a13 = Mat::zeros(k1, k2);
+            z.d22 = vec![0.0; z.dm()];
+            z.a33 = Mat::zeros(k2, k2);
+            z
+        };
+        let shards = if m * (k1 + k2 + 1) * self.d >= super::PAR_WORK {
+            super::GRAM_SHARDS.min(m.max(1))
+        } else {
+            1
+        };
+        if shards <= 1 {
+            let mut out = zeros_like();
+            Self::gram_accumulate(&mut out, b, 0, m);
+            out.for_each_mut(&mut |x| *x *= scale);
+            return out;
+        }
+        let rows_per = m.div_ceil(shards);
+        let mut partials: Vec<HierF> = (0..shards).map(|_| zeros_like()).collect();
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = partials
+            .iter_mut()
+            .enumerate()
+            .map(|(s, part)| {
+                Box::new(move || {
+                    let r0 = s * rows_per;
+                    let r1 = m.min(r0 + rows_per);
+                    Self::gram_accumulate(part, b, r0, r1);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::run_jobs(jobs);
+        let mut out = zeros_like();
+        for part in &partials {
+            out.axpy(1.0, part);
+        }
+        out.for_each_mut(&mut |x| *x *= scale);
+        out
+    }
+
+    /// Accumulate the unscaled projection of rows `[r0, r1)` of `B` into
+    /// `out` (the per-shard body of [`Self::gram_project`]).
+    fn gram_accumulate(out: &mut HierF, b: &Mat, r0: usize, r1: usize) {
+        let (k1, k2, dm) = (out.k1, out.k2, out.dm());
+        for r in r0..r1 {
             let br = b.row(r);
             let (b1, rest) = br.split_at(k1);
             let (b2, b3) = rest.split_at(dm);
@@ -254,15 +310,6 @@ impl HierF {
                 }
             }
         }
-        out.a11 = out.a11.scale(scale);
-        out.a12 = out.a12.scale(scale);
-        out.a13 = out.a13.scale(scale);
-        for v in &mut out.d22 {
-            *v *= scale;
-        }
-        out.a32 = out.a32.scale(scale);
-        out.a33 = out.a33.scale(scale);
-        out
     }
 
     pub fn trace(&self) -> f32 {

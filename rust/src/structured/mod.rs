@@ -31,6 +31,12 @@
 //! - elementwise log-space arithmetic (`scale`, `axpy`) for the Riemannian
 //!   momentum buffer;
 //! - memory accounting ([`SMat::bytes`], Table 3).
+//!
+//! The expensive structured ops (`gram_project`, `matmul`,
+//! `right_mul`/`left_mul` — and through them `kkt_left`/`kkt_right`) run
+//! on the persistent worker pool in [`crate::tensor::pool`] once their
+//! work clears [`PAR_WORK`]; sharding is arranged so pooled and serial
+//! runs produce identical results (see `rust/tests/parallel.rs`).
 
 mod blockdiag;
 mod hier;
@@ -47,6 +53,16 @@ pub use tril::TrilF;
 
 use crate::numerics::Policy;
 use crate::tensor::Mat;
+
+/// Approximate scalar-op threshold above which a structured op fans out
+/// across the worker pool (below it, sharding overhead dominates).
+pub(crate) const PAR_WORK: usize = 1 << 18;
+
+/// Fixed shard count for the batched `gram_project` reductions. Fixed —
+/// rather than derived from the thread count — so the floating-point
+/// reduction tree, and therefore the result, is a function of the problem
+/// alone; idle workers are the price of bitwise serial/pooled parity.
+pub(crate) const GRAM_SHARDS: usize = 4;
 
 /// Structure class selector (config-level).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -10,7 +10,7 @@
 //! stays diagonal. With `k = 1` this gives the diagonal-plus-rank-one
 //! structure of `K Kᵀ` shown in Fig. 8.
 
-use crate::tensor::{matmul, Mat};
+use crate::tensor::{matmul, pool, Mat};
 
 #[derive(Clone, Debug)]
 pub struct RankKF {
@@ -69,14 +69,29 @@ impl RankKF {
         RankKF { d: self.d, k: self.k, a11, a12, d22 }
     }
 
-    /// `X @ K` / `X @ Kᵀ` in `O(m k d)`.
+    /// `X @ K` / `X @ Kᵀ` in `O(m k d)`; rows of `X` are independent and
+    /// shard across the worker pool.
     pub fn right_mul(&self, x: &Mat, transpose: bool) -> Mat {
         let m = x.rows();
-        let (d, k) = (self.d, self.k);
+        let d = self.d;
         let mut out = Mat::zeros(m, d);
-        for r in 0..m {
-            let xr = x.row(r);
-            let or = out.row_mut(r);
+        if m == 0 || d == 0 {
+            return out;
+        }
+        let xd = x.data();
+        let min_rows = if m * (self.k + 1) * d < super::PAR_WORK { m } else { 1 };
+        pool::parallel_chunks_mut(out.data_mut(), d, min_rows, |row0, chunk| {
+            for (li, or) in chunk.chunks_mut(d).enumerate() {
+                let xr = &xd[(row0 + li) * d..(row0 + li + 1) * d];
+                self.right_mul_row(xr, or, transpose);
+            }
+        });
+        out
+    }
+
+    fn right_mul_row(&self, xr: &[f32], or: &mut [f32], transpose: bool) {
+        let (d, k) = (self.d, self.k);
+        {
             if !transpose {
                 // out[0..k] = x[0..k] @ A11 ; out[k..] = x[0..k] @ A12 + x[k..] ⊙ d22
                 for i in 0..k {
@@ -112,10 +127,11 @@ impl RankKF {
                 }
             }
         }
-        out
     }
 
-    /// `K @ X` / `Kᵀ @ X` in `O(k d n)`.
+    /// `K @ X` / `Kᵀ @ X` in `O(k d n)` — light enough (`k ≪ d`) that it
+    /// stays on the caller; the dominant per-step cost for this class is
+    /// `right_mul`/`gram_project`, which do shard.
     pub fn left_mul(&self, x: &Mat, transpose: bool) -> Mat {
         let n = x.cols();
         let (d, k) = (self.d, self.k);
@@ -192,35 +208,72 @@ impl RankKF {
 
     /// `Π̂(scale · BᵀB) = [[M11, 2·M12],[0, Diag(M22)]]` computed from `B`
     /// in `O(m k d)` (Table 1, row 4).
+    ///
+    /// Large batches split into [`super::GRAM_SHARDS`] row shards whose
+    /// partials are reduced in shard order; the shard count depends only
+    /// on the problem size, so pooled and serial runs match exactly.
     pub fn gram_project(&self, b: &Mat, scale: f32) -> RankKF {
         let m = b.rows();
         let (d, k) = (self.d, self.k);
-        let mut a11 = Mat::zeros(k, k);
-        let mut a12 = Mat::zeros(k, d - k);
-        let mut d22 = vec![0.0f32; d - k];
-        for r in 0..m {
+        let zeros_like = || RankKF {
+            d,
+            k,
+            a11: Mat::zeros(k, k),
+            a12: Mat::zeros(k, d - k),
+            d22: vec![0.0f32; d - k],
+        };
+        let shards = if m * (k + 1) * d >= super::PAR_WORK {
+            super::GRAM_SHARDS.min(m.max(1))
+        } else {
+            1
+        };
+        let mut out = zeros_like();
+        if shards <= 1 {
+            Self::gram_accumulate(&mut out, b, 0, m);
+        } else {
+            let rows_per = m.div_ceil(shards);
+            let mut partials: Vec<RankKF> = (0..shards).map(|_| zeros_like()).collect();
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = partials
+                .iter_mut()
+                .enumerate()
+                .map(|(s, part)| {
+                    Box::new(move || {
+                        let r0 = s * rows_per;
+                        let r1 = m.min(r0 + rows_per);
+                        Self::gram_accumulate(part, b, r0, r1);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool::run_jobs(jobs);
+            for part in &partials {
+                out.axpy(1.0, part);
+            }
+        }
+        out.for_each_mut(&mut |x| *x *= scale);
+        out
+    }
+
+    /// Accumulate the unscaled projection of rows `[r0, r1)` of `B` into
+    /// `out` (the per-shard body of [`Self::gram_project`]).
+    fn gram_accumulate(out: &mut RankKF, b: &Mat, r0: usize, r1: usize) {
+        let (d, k) = (out.d, out.k);
+        for r in r0..r1 {
             let br = b.row(r);
             for i in 0..k {
                 let bi = br[i];
                 if bi != 0.0 {
                     for j in 0..k {
-                        *a11.at_mut(i, j) += bi * br[j];
+                        *out.a11.at_mut(i, j) += bi * br[j];
                     }
                     for j in 0..d - k {
-                        *a12.at_mut(i, j) += 2.0 * bi * br[k + j];
+                        *out.a12.at_mut(i, j) += 2.0 * bi * br[k + j];
                     }
                 }
             }
             for j in 0..d - k {
-                d22[j] += br[k + j] * br[k + j];
+                out.d22[j] += br[k + j] * br[k + j];
             }
         }
-        a11 = a11.scale(scale);
-        a12 = a12.scale(scale);
-        for v in &mut d22 {
-            *v *= scale;
-        }
-        RankKF { d, k, a11, a12, d22 }
     }
 
     pub fn trace(&self) -> f32 {

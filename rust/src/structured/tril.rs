@@ -4,8 +4,14 @@
 //! half the memory of the dense factor, and the class is closed under
 //! multiplication (triangular matrices form an associative subalgebra,
 //! paper footnote 4).
+//!
+//! Output rows are independent in every op here, so the expensive ones
+//! (`matmul`, `right_mul`, `left_mul`) shard output rows across the
+//! persistent worker pool above [`super::PAR_WORK`]; per-row accumulation
+//! order is fixed (`p` ascending), so pooled and serial results are
+//! bitwise identical.
 
-use crate::tensor::Mat;
+use crate::tensor::{pool, Mat};
 
 #[derive(Clone, Debug)]
 pub struct TrilF {
@@ -56,94 +62,147 @@ impl TrilF {
     }
 
     /// Triangular × triangular: result is triangular;
-    /// `(AB)[r][c] = Σ_{p=c..=r} A[r][p] B[p][c]`.
+    /// `(AB)[r][c] = Σ_{p=c..=r} A[r][p] B[p][c]`. Output rows are
+    /// independent; large factors shard contiguous packed row ranges
+    /// across the pool.
     pub fn matmul(&self, other: &TrilF) -> TrilF {
         assert_eq!(self.d, other.d);
         let d = self.d;
         let mut out = TrilF { d, data: vec![0.0; d * (d + 1) / 2] };
-        for r in 0..d {
-            for c in 0..=r {
-                let mut acc = 0.0f32;
-                for p in c..=r {
-                    acc += self.data[idx(r, p)] * other.data[idx(p, c)];
+        let rows_fn = |r0: usize, r1: usize, dst: &mut [f32]| {
+            // dst holds packed rows [r0, r1).
+            let base = idx(r0, 0);
+            for r in r0..r1 {
+                for c in 0..=r {
+                    let mut acc = 0.0f32;
+                    for p in c..=r {
+                        acc += self.data[idx(r, p)] * other.data[idx(p, c)];
+                    }
+                    dst[idx(r, c) - base] = acc;
                 }
-                out.data[idx(r, c)] = acc;
             }
+        };
+        // ~d³/3 flops; row cost grows quadratically, so shard row *ranges*
+        // with balanced packed sizes rather than equal row counts.
+        if d * d * d / 3 < super::PAR_WORK || pool::current_threads() <= 1 {
+            rows_fn(0, d, &mut out.data);
+            return out;
         }
+        let nt = pool::current_threads().min(d);
+        let total = out.data.len();
+        let mut bounds = Vec::with_capacity(nt + 1);
+        bounds.push(0usize);
+        for t in 1..nt {
+            // Row r such that packed prefix ≈ t/nt of total.
+            let target = total * t / nt;
+            let mut r = *bounds.last().unwrap();
+            while r < d && idx(r, 0) < target {
+                r += 1;
+            }
+            bounds.push(r.min(d));
+        }
+        bounds.push(d);
+        let rf = &rows_fn;
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(nt);
+        let mut rest = out.data.as_mut_slice();
+        let mut consumed = 0usize;
+        for w in bounds.windows(2) {
+            let (r0, r1) = (w[0], w[1]);
+            if r0 == r1 {
+                continue;
+            }
+            let len = idx(r1, 0) - idx(r0, 0);
+            let (chunk, tail) = rest.split_at_mut(len);
+            rest = tail;
+            consumed += len;
+            jobs.push(Box::new(move || rf(r0, r1, chunk)));
+        }
+        debug_assert_eq!(consumed, total);
+        pool::run_jobs(jobs);
         out
     }
 
-    /// `X @ K` / `X @ Kᵀ`.
+    /// `X @ K` / `X @ Kᵀ`, sharded by rows of `X`.
     pub fn right_mul(&self, x: &Mat, transpose: bool) -> Mat {
         let m = x.rows();
         let d = self.d;
         let mut out = Mat::zeros(m, d);
-        for r in 0..m {
-            let xr = x.row(r);
-            let or = out.row_mut(r);
-            if !transpose {
-                // out[j] = Σ_i x[i] K[i][j], K lower: i >= j
-                for i in 0..d {
-                    let xi = xr[i];
-                    if xi == 0.0 {
-                        continue;
+        if m == 0 || d == 0 {
+            return out;
+        }
+        let xd = x.data();
+        let min_rows = if m * d * d / 2 < super::PAR_WORK { m } else { 1 };
+        pool::parallel_chunks_mut(out.data_mut(), d, min_rows, |row0, chunk| {
+            for (li, or) in chunk.chunks_mut(d).enumerate() {
+                let xr = &xd[(row0 + li) * d..(row0 + li + 1) * d];
+                if !transpose {
+                    // out[j] = Σ_i x[i] K[i][j], K lower: i >= j
+                    for (i, &xi) in xr.iter().enumerate() {
+                        if xi == 0.0 {
+                            continue;
+                        }
+                        let row = &self.data[i * (i + 1) / 2..i * (i + 1) / 2 + i + 1];
+                        for (o, kij) in or.iter_mut().zip(row.iter()) {
+                            *o += xi * kij;
+                        }
                     }
-                    let row = &self.data[i * (i + 1) / 2..i * (i + 1) / 2 + i + 1];
-                    for (j, kij) in row.iter().enumerate() {
-                        or[j] += xi * kij;
+                } else {
+                    // out[j] = Σ_i x[i] K[j][i], K lower: i <= j
+                    for (j, o) in or.iter_mut().enumerate() {
+                        let row = &self.data[j * (j + 1) / 2..j * (j + 1) / 2 + j + 1];
+                        let mut acc = 0.0f32;
+                        for (xv, kji) in xr.iter().zip(row.iter()) {
+                            acc += xv * kji;
+                        }
+                        *o = acc;
                     }
-                }
-            } else {
-                // out[j] = Σ_i x[i] K[j][i], K lower: i <= j
-                for j in 0..d {
-                    let row = &self.data[j * (j + 1) / 2..j * (j + 1) / 2 + j + 1];
-                    let mut acc = 0.0f32;
-                    for (i, kji) in row.iter().enumerate() {
-                        acc += xr[i] * kji;
-                    }
-                    or[j] = acc;
                 }
             }
-        }
+        });
         out
     }
 
-    /// `K @ X` / `Kᵀ @ X`.
+    /// `K @ X` / `Kᵀ @ X`, sharded by output rows (both orientations are
+    /// written row-at-a-time with `p` ascending, so sharding preserves the
+    /// serial accumulation order exactly).
     pub fn left_mul(&self, x: &Mat, transpose: bool) -> Mat {
         let n = x.cols();
         let d = self.d;
         let mut out = Mat::zeros(d, n);
-        if !transpose {
-            // out[r] = Σ_{p<=r} K[r][p] x[p]
-            for r in 0..d {
-                let krow = &self.data[r * (r + 1) / 2..r * (r + 1) / 2 + r + 1];
-                let orow = out.row_mut(r);
-                for (p, kv) in krow.iter().enumerate() {
-                    if *kv == 0.0 {
-                        continue;
-                    }
-                    let xrow = x.row(p);
-                    for c in 0..n {
-                        orow[c] += kv * xrow[c];
-                    }
-                }
-            }
-        } else {
-            // out[r] = Σ_{p>=r} K[p][r] x[p]
-            for p in 0..d {
-                let krow = &self.data[p * (p + 1) / 2..p * (p + 1) / 2 + p + 1];
-                let xrow = x.row(p);
-                for (r, kv) in krow.iter().enumerate() {
-                    if *kv == 0.0 {
-                        continue;
-                    }
-                    let orow = out.row_mut(r);
-                    for c in 0..n {
-                        orow[c] += kv * xrow[c];
-                    }
-                }
-            }
+        if n == 0 || d == 0 {
+            return out;
         }
+        let min_rows = if d * d * n / 2 < super::PAR_WORK { d } else { 1 };
+        pool::parallel_chunks_mut(out.data_mut(), n, min_rows, |row0, chunk| {
+            for (li, orow) in chunk.chunks_mut(n).enumerate() {
+                let r = row0 + li;
+                if !transpose {
+                    // out[r] = Σ_{p<=r} K[r][p] x[p]
+                    let krow = &self.data[r * (r + 1) / 2..r * (r + 1) / 2 + r + 1];
+                    for (p, kv) in krow.iter().enumerate() {
+                        if *kv == 0.0 {
+                            continue;
+                        }
+                        let xrow = x.row(p);
+                        for (ov, xv) in orow.iter_mut().zip(xrow.iter()) {
+                            *ov += kv * xv;
+                        }
+                    }
+                } else {
+                    // out[r] = Σ_{p>=r} K[p][r] x[p]
+                    for p in r..d {
+                        let kv = self.data[idx(p, r)];
+                        if kv == 0.0 {
+                            continue;
+                        }
+                        let xrow = x.row(p);
+                        for (ov, xv) in orow.iter_mut().zip(xrow.iter()) {
+                            *ov += kv * xv;
+                        }
+                    }
+                }
+            }
+        });
         out
     }
 

@@ -1,13 +1,36 @@
 //! Matrix multiplication kernels.
 //!
 //! The framework's Rust-side hot path (model fwd/bwd for the native models,
-//! and every optimizer's preconditioner algebra) bottoms out here. We keep a
-//! simple, portable blocked kernel: pack-free, row-major, `i-k-j` loop order
-//! with a tiled outer structure so panels of `b` stay in L1/L2.
+//! and every optimizer's preconditioner algebra) bottoms out here. The
+//! kernels are BLAS-free but shaped like a real BLAS:
+//!
+//! - **Panel packing + register tiling.** Tiles of `A` and panels of `B`
+//!   are repacked into contiguous, zero-padded strips ([`pack_a`] /
+//!   [`pack_b`]) and consumed by a fixed-width `4×16` microkernel
+//!   ([`microkernel_4x16`]) whose inner loops have compile-time trip
+//!   counts, so the autovectorizer keeps the 4×16 accumulator tile in
+//!   vector registers and emits FMA streams. Measured on the reference
+//!   machine this roughly doubles single-thread GFLOP/s over the previous
+//!   unpacked 2-row kernel (EXPERIMENTS.md §Perf, iterations 6–7).
+//! - **Persistent pool sharding.** Large products are sharded by row
+//!   blocks of `C` across the lazily-initialized worker pool in
+//!   [`super::pool`] — no per-call thread spawns anywhere in `tensor::`.
+//!   Sharding is over disjoint `C` row blocks and the per-element
+//!   accumulation order never depends on the partition, so pooled and
+//!   serial runs are bitwise identical (`rust/tests/parallel.rs`).
+//! - **`AᵀB` without the transpose.** [`matmul_at_b`] (the per-step
+//!   Kronecker-statistics product `Xᵀ X`) reuses the same blocked +
+//!   packed + pooled regime via a transposed `A`-packing ([`pack_at`]);
+//!   it is no longer a serial unblocked loop.
+//!
+//! Tile sizes: `MC×KC` tiles of `A` and `KC×NC` panels of `B` (L1/L2
+//! resident), strips of `MR = 4` rows × `NR = 16` columns for the
+//! microkernel. Tiny products (< [`TINY_FLOPS`]) skip packing entirely.
 //!
 //! Benchmarked in `rust/benches/hotpath.rs`; see EXPERIMENTS.md §Perf for
-//! the naive → blocked → parallel iteration log.
+//! the naive → blocked → packed → pooled iteration log.
 
+use super::pool;
 use super::Mat;
 
 /// Tile sizes (empirically tuned on the target CPU; see §Perf).
@@ -15,9 +38,19 @@ const MC: usize = 64; // rows of A per tile
 const KC: usize = 256; // inner dimension per tile
 const NC: usize = 256; // cols of B per tile
 
-/// FLOP threshold above which matmul fans out across threads (§Perf
-/// iteration 2: below this, thread spawn overhead dominates).
-const PAR_FLOPS: usize = 4 << 20;
+/// Microkernel register-tile shape: MR rows × NR columns of `C`.
+const MR: usize = 4;
+const NR: usize = 16;
+
+/// FLOP threshold above which matmul shards across the worker pool
+/// (§Perf iteration 2: below this, sharding overhead dominates — the
+/// persistent pool lowered the crossover vs. spawned threads, but small
+/// products still belong on the caller's core).
+const PAR_FLOPS: usize = 1 << 20;
+
+/// FLOP threshold below which the pack-free scalar loop wins (packing a
+/// panel costs more than the whole product for ~16³ and under).
+const TINY_FLOPS: usize = 8192;
 
 /// `C = A @ B`.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -26,24 +59,11 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// Worker count for parallel kernels (respects `SINGD_THREADS`).
-pub(crate) fn num_threads() -> usize {
-    static CACHED: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *CACHED.get_or_init(|| {
-        if let Ok(v) = std::env::var("SINGD_THREADS") {
-            if let Ok(n) = v.parse::<usize>() {
-                return n.max(1);
-            }
-        }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    })
-}
-
 /// `C (+)= A @ B`. If `accumulate` is false, `c` is overwritten.
 ///
-/// Large products are sharded by row-blocks across `std::thread::scope`
-/// workers (each worker owns a disjoint slice of `C`, so no synchronization
-/// is needed); small products stay single-threaded.
+/// Large products are sharded by row-blocks of `C` across the persistent
+/// worker pool (each shard owns a disjoint slice of `C`, so no
+/// synchronization is needed); small products stay on the caller.
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
     assert_eq!(a.cols(), b.rows(), "matmul: inner dims {}x{} @ {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
     assert_eq!(c.rows(), a.rows());
@@ -52,170 +72,307 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
     if !accumulate {
         c.data_mut().fill(0.0);
     }
-    let nt = num_threads();
-    let flops = 2 * m * k * n;
-    if nt <= 1 || flops < PAR_FLOPS || m < 2 {
-        matmul_rows(a.data(), b.data(), c.data_mut(), 0, m, k, n);
+    if m == 0 || k == 0 || n == 0 {
         return;
     }
-    let nt = nt.min(m);
-    let rows_per = m.div_ceil(nt);
     let ad = a.data();
     let bd = b.data();
-    let chunks: Vec<&mut [f32]> = c.data_mut().chunks_mut(rows_per * n).collect();
-    std::thread::scope(|scope| {
-        for (ci, chunk) in chunks.into_iter().enumerate() {
-            let row0 = ci * rows_per;
-            let rows = chunk.len() / n;
-            scope.spawn(move || {
-                matmul_rows(ad, bd, chunk, row0, rows, k, n);
-            });
-        }
-    });
-}
-
-/// Serial blocked kernel over `rows` rows of `C` starting at `row0` (the
-/// `cd` slice holds exactly those rows).
-fn matmul_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], row0: usize, rows: usize, k: usize, n: usize) {
-    for kb in (0..k).step_by(KC) {
-        let kend = (kb + KC).min(k);
-        for ib in (0..rows).step_by(MC) {
-            let iend = (ib + MC).min(rows);
-            for jb in (0..n).step_by(NC) {
-                let jend = (jb + NC).min(n);
-                let width = jend - jb;
-                // 2-row microkernel: each B panel load feeds two C rows
-                // (§Perf iteration 5: ~halves B-panel traffic).
-                let mut i = ib;
-                while i + 1 < iend {
-                    let a0 = &ad[(row0 + i) * k..(row0 + i + 1) * k];
-                    let a1 = &ad[(row0 + i + 1) * k..(row0 + i + 2) * k];
-                    let (c0, rest) = cd[i * n + jb..].split_at_mut(n);
-                    let c0 = &mut c0[..width];
-                    let c1 = &mut rest[..width];
-                    for p in kb..kend {
-                        let (v0, v1) = (a0[p], a1[p]);
-                        if v0 == 0.0 && v1 == 0.0 {
-                            continue;
-                        }
-                        let brow = &bd[p * n + jb..p * n + jend];
-                        for ((x0, x1), bv) in c0.iter_mut().zip(c1.iter_mut()).zip(brow.iter()) {
-                            *x0 += v0 * bv;
-                            *x1 += v1 * bv;
-                        }
-                    }
-                    i += 2;
-                }
-                if i < iend {
-                    let arow = &ad[(row0 + i) * k..(row0 + i + 1) * k];
-                    let crow = &mut cd[i * n + jb..i * n + jend];
-                    for p in kb..kend {
-                        let aval = arow[p];
-                        if aval == 0.0 {
-                            continue;
-                        }
-                        let brow = &bd[p * n + jb..p * n + jend];
-                        for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                            *cv += aval * bv;
-                        }
-                    }
-                }
-            }
-        }
+    let flops = 2 * m * k * n;
+    if flops < TINY_FLOPS {
+        matmul_tiny(ad, bd, c.data_mut(), m, k, n);
+        return;
     }
+    if flops < PAR_FLOPS {
+        gemm_rows(ad, bd, c.data_mut(), 0, m, k, n, k, false);
+        return;
+    }
+    pool::parallel_chunks_mut(c.data_mut(), n, MR, |row0, chunk| {
+        let rows = chunk.len() / n;
+        gemm_rows(ad, bd, chunk, row0, rows, k, n, k, false);
+    });
 }
 
 /// `C = Aᵀ @ B` without materializing the transpose.
 ///
 /// Used for Kronecker-factor statistics `U = Xᵀ X / m` where `X` is a
-/// `(batch, d)` activation matrix.
+/// `(batch, d)` activation matrix — a per-optimizer-step product, now under
+/// the same blocked + packed + pooled regime as [`matmul_into`] (rows of
+/// `C` index *columns* of `A`; [`pack_at`] reads them contiguously).
 pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b: row mismatch");
     let (m, ka) = (a.rows(), a.cols());
     let n = b.cols();
     let mut c = Mat::zeros(ka, n);
+    if m == 0 || ka == 0 || n == 0 {
+        return c;
+    }
     let ad = a.data();
     let bd = b.data();
-    let cd = c.data_mut();
-    // c[i][j] = sum_p a[p][i] * b[p][j]; iterate p outer for contiguity.
-    for p in 0..m {
-        let arow = &ad[p * ka..(p + 1) * ka];
-        let brow = &bd[p * n..(p + 1) * n];
-        for i in 0..ka {
-            let aval = arow[i];
-            if aval == 0.0 {
-                continue;
-            }
-            let crow = &mut cd[i * n..i * n + n];
-            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += aval * bv;
-            }
-        }
+    let flops = 2 * m * ka * n;
+    if flops < TINY_FLOPS {
+        at_b_tiny(ad, bd, c.data_mut(), m, ka, n);
+        return c;
     }
+    if flops < PAR_FLOPS {
+        gemm_rows(ad, bd, c.data_mut(), 0, ka, m, n, ka, true);
+        return c;
+    }
+    pool::parallel_chunks_mut(c.data_mut(), n, MR, |row0, chunk| {
+        let rows = chunk.len() / n;
+        gemm_rows(ad, bd, chunk, row0, rows, m, n, ka, true);
+    });
     c
 }
 
 /// `C = A @ Bᵀ` without materializing the transpose.
 ///
-/// Row-dot formulation with 4 independent accumulators per dot product so
-/// the FP adds pipeline (§Perf iteration 3), sharded across threads by rows
-/// of `A` when large.
+/// Row-dot formulation: both operands are traversed along contiguous rows,
+/// with an 8-lane accumulator dot product ([`dot8`]) so the FP adds
+/// pipeline and vectorize; sharded across the pool by rows of `A`.
 pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt: col mismatch");
     let (m, k) = (a.rows(), a.cols());
     let n = b.rows();
     let mut c = Mat::zeros(m, n);
+    if m == 0 || k == 0 || n == 0 {
+        return c;
+    }
     let ad = a.data();
     let bd = b.data();
-    let nt = num_threads();
     let flops = 2 * m * k * n;
-    if nt <= 1 || flops < PAR_FLOPS || m < 2 {
+    if flops < PAR_FLOPS {
         a_bt_rows(ad, bd, c.data_mut(), 0, m, k, n);
         return c;
     }
-    let nt = nt.min(m);
-    let rows_per = m.div_ceil(nt);
-    let chunks: Vec<&mut [f32]> = c.data_mut().chunks_mut(rows_per * n).collect();
-    std::thread::scope(|scope| {
-        for (ci, chunk) in chunks.into_iter().enumerate() {
-            let row0 = ci * rows_per;
-            let rows = chunk.len() / n;
-            scope.spawn(move || {
-                a_bt_rows(ad, bd, chunk, row0, rows, k, n);
-            });
-        }
+    pool::parallel_chunks_mut(c.data_mut(), n, 1, |row0, chunk| {
+        let rows = chunk.len() / n;
+        a_bt_rows(ad, bd, chunk, row0, rows, k, n);
     });
     c
 }
 
+/// Pack-free fallback for tiny products (`i-k-j` order, zero-skip).
+fn matmul_tiny(ad: &[f32], bd: &[f32], cd: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut cd[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Pack-free fallback for tiny `AᵀB` (`p`-outer order).
+fn at_b_tiny(ad: &[f32], bd: &[f32], cd: &mut [f32], m: usize, ka: usize, n: usize) {
+    for p in 0..m {
+        let arow = &ad[p * ka..(p + 1) * ka];
+        let brow = &bd[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut cd[i * n..i * n + n];
+            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// Blocked, panel-packed kernel over `rows` rows of `C` starting at
+/// absolute row `row0` (`cd` holds exactly those rows; `C` has `n` cols).
+///
+/// `k` is the shared inner dimension. When `transpose_a` is false, `A` is
+/// row-major with leading dimension `lda == k` and `C` rows index `A`
+/// rows; when true, `A` is `k × lda` row-major and `C` rows index `A`
+/// *columns* (computing `AᵀB`).
+///
+/// Determinism: for every `C` element the contribution order is `p`
+/// ascending (registers accumulate `p` within each `KC` block, blocks are
+/// visited in order), independent of `row0`/`rows` — so any row-sharding
+/// of `C` is bitwise identical to the serial pass.
+fn gemm_rows(
+    ad: &[f32],
+    bd: &[f32],
+    cd: &mut [f32],
+    row0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    lda: usize,
+    transpose_a: bool,
+) {
+    let kc_max = KC.min(k);
+    let mc_max = MC.min(rows);
+    let ncp = NC.min(n).next_multiple_of(NR);
+    let mcp = mc_max.next_multiple_of(MR);
+    let mut pb = vec![0.0f32; kc_max * ncp];
+    let mut pa = vec![0.0f32; mcp * kc_max];
+    for kb in (0..k).step_by(KC) {
+        let kc = kc_max.min(k - kb);
+        for jb in (0..n).step_by(NC) {
+            let nc = NC.min(n - jb);
+            pack_b(bd, &mut pb, kb, kc, jb, nc, n);
+            for ib in (0..rows).step_by(MC) {
+                let mc = mc_max.min(rows - ib);
+                if transpose_a {
+                    pack_at(ad, &mut pa, row0 + ib, mc, kb, kc, lda);
+                } else {
+                    pack_a(ad, &mut pa, row0 + ib, mc, kb, kc, lda);
+                }
+                let mut is = 0;
+                while is < mc {
+                    let mr = MR.min(mc - is);
+                    let pa_strip = &pa[(is / MR) * kc * MR..(is / MR + 1) * kc * MR];
+                    let mut js = 0;
+                    while js < nc {
+                        let nr = NR.min(nc - js);
+                        let pb_strip = &pb[(js / NR) * kc * NR..(js / NR + 1) * kc * NR];
+                        microkernel_4x16(
+                            pa_strip,
+                            pb_strip,
+                            &mut cd[(ib + is) * n + jb + js..],
+                            n,
+                            mr,
+                            nr,
+                        );
+                        js += NR;
+                    }
+                    is += MR;
+                }
+            }
+        }
+    }
+}
+
+/// Pack a `kc × nc` panel of `B` (row-major, `n` cols wide) into
+/// contiguous `NR`-wide column strips: strip `s` holds, for each `p`, the
+/// `NR` values `B[kb+p][jb + s·NR ..]`, zero-padded past the panel edge so
+/// the microkernel never needs a column-fringe path.
+fn pack_b(bd: &[f32], pb: &mut [f32], kb: usize, kc: usize, jb: usize, nc: usize, n: usize) {
+    for s in 0..nc.div_ceil(NR) {
+        let j0 = jb + s * NR;
+        let w = NR.min(jb + nc - j0);
+        let dst = &mut pb[s * kc * NR..(s + 1) * kc * NR];
+        for p in 0..kc {
+            let src = &bd[(kb + p) * n + j0..(kb + p) * n + j0 + w];
+            let drow = &mut dst[p * NR..(p + 1) * NR];
+            drow[..w].copy_from_slice(src);
+            for x in &mut drow[w..] {
+                *x = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack an `mc × kc` tile of row-major `A` (leading dim `lda`) into
+/// `MR`-high row strips: strip `s` holds, for each `p`, the `MR` values
+/// `A[r0 + s·MR ..][kb+p]`, zero-padded past the tile edge. Padded rows
+/// multiply real `B` values but land in accumulator rows that are never
+/// stored, so they cost nothing and corrupt nothing.
+fn pack_a(ad: &[f32], pa: &mut [f32], r0: usize, mc: usize, kb: usize, kc: usize, lda: usize) {
+    for s in 0..mc.div_ceil(MR) {
+        let base = r0 + s * MR;
+        let h = MR.min(mc - s * MR);
+        let dst = &mut pa[s * kc * MR..(s + 1) * kc * MR];
+        for p in 0..kc {
+            let drow = &mut dst[p * MR..(p + 1) * MR];
+            for (i, x) in drow.iter_mut().enumerate() {
+                *x = if i < h { ad[(base + i) * lda + kb + p] } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Like [`pack_a`] but for `AᵀB`: strip rows are *columns* of the
+/// `k × lda` row-major `A`, so for each `p` the `MR` values
+/// `A[kb+p][c0 + s·MR ..]` are a contiguous read.
+fn pack_at(ad: &[f32], pa: &mut [f32], c0: usize, mc: usize, kb: usize, kc: usize, lda: usize) {
+    for s in 0..mc.div_ceil(MR) {
+        let base = c0 + s * MR;
+        let h = MR.min(mc - s * MR);
+        let dst = &mut pa[s * kc * MR..(s + 1) * kc * MR];
+        for p in 0..kc {
+            let src = &ad[(kb + p) * lda + base..(kb + p) * lda + base + h];
+            let drow = &mut dst[p * MR..(p + 1) * MR];
+            drow[..h].copy_from_slice(src);
+            for x in &mut drow[h..] {
+                *x = 0.0;
+            }
+        }
+    }
+}
+
+/// The `MR×NR = 4×16` register-tile microkernel.
+///
+/// `pa` is one packed `A` strip (`kc·MR` values), `pb` one packed `B`
+/// strip (`kc·NR` values). Four separate fixed-width accumulator rows with
+/// compile-time trip counts are what the autovectorizer needs to keep the
+/// whole tile in vector registers (a 2-D `[[f32; NR]; MR]` array spills —
+/// §Perf iteration 6). Only the `mr × nr` in-bounds corner is added to
+/// `C`; the zero-padded lanes accumulate garbage-free zeros.
+#[inline]
+fn microkernel_4x16(pa: &[f32], pb: &[f32], cd: &mut [f32], ldc: usize, mr: usize, nr: usize) {
+    let mut acc0 = [0.0f32; NR];
+    let mut acc1 = [0.0f32; NR];
+    let mut acc2 = [0.0f32; NR];
+    let mut acc3 = [0.0f32; NR];
+    for (av, bv) in pa.chunks_exact(MR).zip(pb.chunks_exact(NR)) {
+        let (v0, v1, v2, v3) = (av[0], av[1], av[2], av[3]);
+        for j in 0..NR {
+            acc0[j] += v0 * bv[j];
+            acc1[j] += v1 * bv[j];
+            acc2[j] += v2 * bv[j];
+            acc3[j] += v3 * bv[j];
+        }
+    }
+    let accs: [&[f32; NR]; MR] = [&acc0, &acc1, &acc2, &acc3];
+    for (i, acc) in accs.iter().enumerate().take(mr) {
+        let crow = &mut cd[i * ldc..i * ldc + nr];
+        for (cv, &av) in crow.iter_mut().zip(acc.iter()) {
+            *cv += av;
+        }
+    }
+}
+
+/// Serial `A @ Bᵀ` over `rows` rows of `C` starting at `row0`.
 fn a_bt_rows(ad: &[f32], bd: &[f32], cd: &mut [f32], row0: usize, rows: usize, k: usize, n: usize) {
     for i in 0..rows {
         let arow = &ad[(row0 + i) * k..(row0 + i + 1) * k];
         for j in 0..n {
             let brow = &bd[j * k..(j + 1) * k];
-            cd[i * n + j] = dot4(arow, brow);
+            cd[i * n + j] = dot8(arow, brow);
         }
     }
 }
 
-/// Dot product with 4 independent accumulator lanes.
+/// Dot product with 8 independent accumulator lanes (one vector register
+/// at f32x8). Operand lengths must match — a silent truncation here would
+/// corrupt every `A Bᵀ` product downstream.
 #[inline]
-fn dot4(x: &[f32], y: &[f32]) -> f32 {
-    let n = x.len().min(y.len());
-    let chunks = n / 4;
-    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = 4 * c;
-        a0 += x[i] * y[i];
-        a1 += x[i + 1] * y[i + 1];
-        a2 += x[i + 2] * y[i + 2];
-        a3 += x[i + 3] * y[i + 3];
+fn dot8(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len(), "dot8: length mismatch");
+    let xc = x.chunks_exact(8);
+    let yc = y.chunks_exact(8);
+    let xr = xc.remainder();
+    let yr = yc.remainder();
+    let mut acc = [0.0f32; 8];
+    for (xs, ys) in xc.zip(yc) {
+        for j in 0..8 {
+            acc[j] += xs[j] * ys[j];
+        }
     }
-    let mut acc = (a0 + a1) + (a2 + a3);
-    for i in 4 * chunks..n {
-        acc += x[i] * y[i];
+    let mut tail = 0.0f32;
+    for (&xv, &yv) in xr.iter().zip(yr.iter()) {
+        tail += xv * yv;
     }
-    acc
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7])) + tail
 }
 
 #[cfg(test)]
@@ -274,11 +431,30 @@ mod tests {
     }
 
     #[test]
+    fn matmul_crosses_microkernel_fringes() {
+        // Shapes straddling every MR/NR strip boundary around one tile.
+        let mut rng = Pcg::new(19);
+        for (m, k, n) in [(MR + 1, 9, NR + 1), (2 * MR - 1, KC + 1, NR - 1), (1, 3, NR + 3)] {
+            let a = Mat::from_fn(m, k, |_, _| rng.normal());
+            let b = Mat::from_fn(k, n, |_, _| rng.normal());
+            assert_close(&matmul(&a, &b), &naive(&a, &b), 1e-4);
+        }
+    }
+
+    #[test]
     fn at_b_matches_explicit_transpose() {
         let mut rng = Pcg::new(11);
         let a = Mat::from_fn(17, 9, |_, _| rng.normal());
         let b = Mat::from_fn(17, 13, |_, _| rng.normal());
         assert_close(&matmul_at_b(&a, &b), &matmul(&a.transpose(), &b), 1e-5);
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose_blocked_sizes() {
+        let mut rng = Pcg::new(23);
+        let a = Mat::from_fn(KC + 9, MC + 5, |_, _| rng.normal());
+        let b = Mat::from_fn(KC + 9, NR * 3 + 2, |_, _| rng.normal());
+        assert_close(&matmul_at_b(&a, &b), &matmul(&a.transpose(), &b), 1e-4);
     }
 
     #[test]

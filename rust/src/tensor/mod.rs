@@ -1,8 +1,10 @@
 //! Dense `f32` matrix substrate.
 //!
 //! The whole framework is built on this BLAS-free matrix type: row-major
-//! storage, blocked/tiled matmul for the hot path, and the handful of
-//! elementwise / reduction ops the optimizers and models need.
+//! storage, packed/tiled matmul kernels for the hot path ([`matmul`]), a
+//! persistent worker pool that all parallel kernels share ([`pool`]), and
+//! the handful of elementwise / reduction ops the optimizers and models
+//! need.
 //!
 //! The structured Kronecker-factor classes in [`crate::structured`] avoid
 //! materializing dense matrices; `Mat` is used for activations, gradients,
@@ -11,6 +13,7 @@
 pub mod fft;
 mod matmul;
 mod ops;
+pub mod pool;
 
 pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matmul_into};
 
@@ -180,17 +183,27 @@ impl Mat {
     /// Transposed copy.
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
-        // Blocked transpose for cache friendliness on large matrices.
+        if self.data.is_empty() {
+            return t;
+        }
+        // Blocked for cache friendliness; large matrices shard the
+        // destination rows across the worker pool (disjoint writes, so the
+        // result is identical to the serial pass).
         const B: usize = 32;
-        for rb in (0..self.rows).step_by(B) {
-            for cb in (0..self.cols).step_by(B) {
-                for r in rb..(rb + B).min(self.rows) {
-                    for c in cb..(cb + B).min(self.cols) {
-                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+        let src = &self.data;
+        let (rows, cols) = (self.rows, self.cols);
+        pool::parallel_chunks_mut(&mut t.data, rows, 256, |c0, chunk| {
+            let h = chunk.len() / rows;
+            for rb in (0..rows).step_by(B) {
+                for cb in (0..h).step_by(B) {
+                    for r in rb..(rb + B).min(rows) {
+                        for c in cb..(cb + B).min(h) {
+                            chunk[c * rows + r] = src[r * cols + c0 + c];
+                        }
                     }
                 }
             }
-        }
+        });
         t
     }
 

@@ -120,21 +120,30 @@ impl Mat {
     }
 
     /// Row-wise softmax (used by attention and classification losses).
+    ///
+    /// Rows are independent, so large batches shard across the worker
+    /// pool; per-row arithmetic is unchanged, keeping results identical to
+    /// the serial pass.
     pub fn softmax_rows(&self) -> Mat {
         let mut out = self.clone();
-        for r in 0..self.rows {
-            let row = out.row_mut(r);
-            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut z = 0.0f32;
-            for v in row.iter_mut() {
-                *v = (*v - m).exp();
-                z += *v;
-            }
-            let inv = 1.0 / z;
-            for v in row.iter_mut() {
-                *v *= inv;
-            }
+        if out.data.is_empty() {
+            return out;
         }
+        let cols = self.cols;
+        super::pool::parallel_chunks_mut(&mut out.data, cols, 64, |_, chunk| {
+            for row in chunk.chunks_mut(cols) {
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0.0f32;
+                for v in row.iter_mut() {
+                    *v = (*v - m).exp();
+                    z += *v;
+                }
+                let inv = 1.0 / z;
+                for v in row.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        });
         out
     }
 

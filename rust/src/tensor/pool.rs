@@ -1,0 +1,368 @@
+//! Persistent worker pool for the compute hot path.
+//!
+//! Every parallel kernel in the crate (dense matmuls, structured factor
+//! ops, per-layer optimizer steps) runs on ONE lazily-initialized pool of
+//! channel-fed worker threads instead of spawning OS threads per call —
+//! thread spawn/join costs tens of microseconds, which used to dominate
+//! mid-sized products and made per-layer parallelism a net loss.
+//!
+//! # Lifecycle
+//!
+//! The pool is created on the first parallel submission
+//! ([`run_jobs`] / [`parallel_for_rows`] / [`parallel_chunks_mut`]) and
+//! lives for the rest of the process: workers block on a condvar-guarded
+//! queue when idle and are never joined (they are detached daemons; the
+//! queue and latches are the only synchronization). Worker count is fixed
+//! at creation time by [`num_threads`].
+//!
+//! # The `SINGD_THREADS` contract
+//!
+//! `SINGD_THREADS=<n>` caps the pool size and the default sharding factor;
+//! it is read ONCE, at first use, and cached. `SINGD_THREADS=1` disables
+//! parallelism entirely (no pool is ever created; all helpers run inline
+//! on the caller). Tests and embedders that need to vary parallelism at
+//! runtime use [`with_threads`], a thread-local override of the *sharding*
+//! factor — the pool itself keeps its size, idle workers just stay idle.
+//!
+//! # Scoped borrows & safety
+//!
+//! Jobs may borrow stack data (`&`/`&mut` slices of matrices). This is
+//! sound because [`run_jobs`] blocks on a completion latch until every
+//! submitted job has finished, so no borrow outlives the call — the same
+//! argument `std::thread::scope` makes, minus the per-call spawns. A panic
+//! inside a job is caught on the worker (keeping the pool alive), recorded
+//! on the latch, and re-raised as a panic in the submitting thread once
+//! the batch has drained.
+//!
+//! # Nesting & determinism
+//!
+//! A job that itself calls into the pool (e.g. a per-layer optimizer job
+//! whose matmuls are large enough to shard) runs the nested batch INLINE
+//! on its worker: this bounds worker usage, cannot deadlock, and keeps
+//! results identical — every kernel in `tensor::matmul` is written so that
+//! row-sharded and serial execution produce bitwise-identical output (the
+//! per-element floating-point accumulation order never depends on the
+//! partition; see the determinism tests in `rust/tests/parallel.rs`).
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A unit of work queued on the pool (lifetime-erased; see [`run_jobs`]).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<VecDeque<Job>>,
+    available: Condvar,
+}
+
+/// Batch-completion latch: (jobs remaining, any job panicked).
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    done: Condvar,
+}
+
+static POOL: OnceLock<Arc<Queue>> = OnceLock::new();
+
+thread_local! {
+    /// True on pool worker threads — nested submissions run inline.
+    static IS_WORKER: Cell<bool> = const { Cell::new(false) };
+    /// Per-thread sharding override set by [`with_threads`] (0 = none).
+    static THREAD_OVERRIDE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Worker count for parallel kernels (respects `SINGD_THREADS`; read once).
+pub fn num_threads() -> usize {
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        if let Ok(v) = std::env::var("SINGD_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Effective sharding factor for the current thread: the [`with_threads`]
+/// override when one is active, [`num_threads`] otherwise.
+pub fn current_threads() -> usize {
+    let o = THREAD_OVERRIDE.with(|c| c.get());
+    if o > 0 {
+        o
+    } else {
+        num_threads()
+    }
+}
+
+/// Run `f` with the sharding factor forced to `n` on this thread
+/// (`n = 1` forces fully serial execution). Restores the previous value on
+/// exit, including on panic. Used by the determinism tests to compare
+/// serial and pooled trajectories inside one process.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = THREAD_OVERRIDE.with(|c| {
+        let p = c.get();
+        c.set(n.max(1));
+        p
+    });
+    let _restore = Restore(prev);
+    f()
+}
+
+fn queue() -> &'static Arc<Queue> {
+    POOL.get_or_init(|| {
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+        });
+        for i in 0..num_threads() {
+            let q = Arc::clone(&queue);
+            std::thread::Builder::new()
+                .name(format!("singd-pool-{i}"))
+                .spawn(move || worker_loop(q))
+                .expect("spawn singd pool worker");
+        }
+        queue
+    })
+}
+
+fn worker_loop(q: Arc<Queue>) {
+    IS_WORKER.with(|c| c.set(true));
+    loop {
+        let job = {
+            let mut jobs = q.jobs.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if let Some(j) = jobs.pop_front() {
+                    break j;
+                }
+                jobs = q.available.wait(jobs).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // Jobs are wrapped with catch_unwind in run_jobs; this call does
+        // not unwind, so the worker survives any job.
+        job();
+    }
+}
+
+/// Execute a batch of jobs on the pool and block until all complete.
+///
+/// Jobs may borrow the caller's stack (the `'scope` lifetime): the call
+/// does not return until every job has run, which is what makes the
+/// lifetime erasure below sound. Runs inline (in submission order) when
+/// the batch is trivial, the effective thread count is 1, or the caller is
+/// itself a pool worker (nesting). Panics if any job panicked.
+pub fn run_jobs<'scope>(jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+    if jobs.len() <= 1 || current_threads() <= 1 || IS_WORKER.with(|c| c.get()) {
+        for job in jobs {
+            job();
+        }
+        return;
+    }
+    let q = queue();
+    let latch = Arc::new(Latch {
+        state: Mutex::new((jobs.len(), false)),
+        done: Condvar::new(),
+    });
+    {
+        let mut pending = q.jobs.lock().unwrap_or_else(|e| e.into_inner());
+        for job in jobs {
+            // SAFETY: this function blocks on `latch` until every job in
+            // the batch has finished executing, so all borrows captured by
+            // `job` strictly outlive its execution on the worker thread.
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+            };
+            let l = Arc::clone(&latch);
+            pending.push_back(Box::new(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                let mut st = l.state.lock().unwrap_or_else(|e| e.into_inner());
+                st.0 -= 1;
+                if result.is_err() {
+                    st.1 = true;
+                }
+                if st.0 == 0 {
+                    l.done.notify_all();
+                }
+            }));
+        }
+        q.available.notify_all();
+    }
+    let mut st = latch.state.lock().unwrap_or_else(|e| e.into_inner());
+    while st.0 > 0 {
+        st = latch.done.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+    if st.1 {
+        panic!("singd pool: a parallel job panicked");
+    }
+}
+
+/// Shard the half-open row range `0..rows` across the pool, calling
+/// `f(start, end)` once per shard. Shards have at least `min_rows` rows
+/// (the whole range runs inline when it is that small, the effective
+/// thread count is 1, or the caller is a pool worker). `f` only gets
+/// shared access — use [`parallel_chunks_mut`] when each shard owns a
+/// disjoint `&mut` slice of the output.
+pub fn parallel_for_rows<F>(rows: usize, min_rows: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if rows == 0 {
+        return;
+    }
+    let nt = current_threads();
+    if nt <= 1 || rows <= min_rows.max(1) || IS_WORKER.with(|c| c.get()) {
+        f(0, rows);
+        return;
+    }
+    let per = rows.div_ceil(nt).max(min_rows.max(1));
+    let fr = &f;
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..rows.div_ceil(per))
+        .map(|t| {
+            let start = t * per;
+            let end = (start + per).min(rows);
+            Box::new(move || fr(start, end)) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    run_jobs(jobs);
+}
+
+/// Shard a row-major buffer of `row_width`-wide rows into contiguous
+/// row-block chunks of at least `min_rows` rows and call
+/// `f(first_row, chunk)` per shard, each owning its disjoint `&mut` slice.
+/// The workhorse for "each worker owns a row-block of the output matrix"
+/// kernels (dense matmuls, structured right/left multiplies).
+pub fn parallel_chunks_mut<F>(data: &mut [f32], row_width: usize, min_rows: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_width > 0, "parallel_chunks_mut: zero row width");
+    let rows = data.len() / row_width;
+    let nt = current_threads();
+    if nt <= 1 || rows <= min_rows.max(1) || IS_WORKER.with(|c| c.get()) {
+        f(0, data);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(nt).max(min_rows.max(1));
+    let fr = &f;
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+        .chunks_mut(chunk_rows * row_width)
+        .enumerate()
+        .map(|(ci, chunk)| {
+            Box::new(move || fr(ci * chunk_rows, chunk)) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    run_jobs(jobs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_jobs_executes_every_job() {
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..17)
+            .map(|i| {
+                let c = &counter;
+                Box::new(move || {
+                    c.fetch_add(i, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_jobs(jobs);
+        assert_eq!(counter.load(Ordering::Relaxed), (0..17).sum::<usize>());
+    }
+
+    #[test]
+    fn parallel_for_rows_covers_range_exactly_once() {
+        for rows in [0usize, 1, 2, 7, 64, 1001] {
+            let hits: Vec<AtomicUsize> = (0..rows).map(|_| AtomicUsize::new(0)).collect();
+            parallel_for_rows(rows, 1, |s, e| {
+                for h in &hits[s..e] {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_mut_partitions_disjointly() {
+        let width = 3;
+        let rows = 101;
+        let mut data = vec![0.0f32; rows * width];
+        parallel_chunks_mut(&mut data, width, 2, |row0, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v += (row0 * width + i) as f32;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as f32, "row-major offset {i}");
+        }
+    }
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let outer = current_threads();
+        with_threads(3, || {
+            assert_eq!(current_threads(), 3);
+            with_threads(1, || assert_eq!(current_threads(), 1));
+            assert_eq!(current_threads(), 3);
+        });
+        assert_eq!(current_threads(), outer);
+    }
+
+    #[test]
+    fn nested_submission_runs_inline_without_deadlock() {
+        let total = AtomicUsize::new(0);
+        with_threads(4, || {
+            let t = &total;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                .map(|_| {
+                    Box::new(move || {
+                        // Nested batch from (potentially) a worker thread.
+                        parallel_for_rows(32, 1, |s, e| {
+                            t.fetch_add(e - s, Ordering::Relaxed);
+                        });
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            run_jobs(jobs);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 32);
+    }
+
+    #[test]
+    fn job_panic_propagates_to_submitter() {
+        let result = std::panic::catch_unwind(|| {
+            with_threads(4, || {
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                    .map(|i| {
+                        Box::new(move || {
+                            if i == 2 {
+                                panic!("boom");
+                            }
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                run_jobs(jobs);
+            });
+        });
+        assert!(result.is_err(), "panic must propagate");
+        // The pool must remain usable afterwards.
+        let counter = AtomicUsize::new(0);
+        with_threads(4, || {
+            parallel_for_rows(16, 1, |s, e| {
+                counter.fetch_add(e - s, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 16);
+    }
+}

@@ -1,0 +1,233 @@
+//! Determinism & parallel-correctness suite for the worker-pool compute
+//! substrate.
+//!
+//! Everything here pivots on one invariant: for every kernel in the crate,
+//! the floating-point accumulation order of each output element is a
+//! function of the problem shape alone — never of the thread count or the
+//! sharding. So pooled runs must be *bitwise* identical to serial runs,
+//! which is asserted with exact `data()` equality (not tolerances).
+//!
+//! The sharding factor is varied with `pool::with_threads` (the in-process
+//! override of the `SINGD_THREADS` contract — the env var itself is read
+//! once per process and can't be flipped inside a test binary).
+
+use singd::optim::{Hyper, KronStats, Method};
+use singd::proptest::Pcg;
+use singd::structured::{proj, SMat, Structure};
+use singd::tensor::{matmul, matmul_a_bt, matmul_at_b, pool, Mat};
+
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            let mut s = 0.0f64;
+            for p in 0..a.cols() {
+                s += (a.at(i, p) as f64) * (b.at(p, j) as f64);
+            }
+            c.set(i, j, s as f32);
+        }
+    }
+    c
+}
+
+fn assert_close(a: &Mat, b: &Mat, tol: f32, ctx: &str) {
+    assert_eq!(a.shape(), b.shape(), "{ctx}: shape");
+    for (x, y) in a.data().iter().zip(b.data().iter()) {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{ctx}: {x} vs {y}"
+        );
+    }
+}
+
+/// Shapes that straddle every blocking boundary: MC=64, KC=256, NC=256,
+/// MR=4, NR=16 — plus degenerate and skinny cases.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (65, 257, 259),
+    (64, 256, 256),
+    (1, 1, 1),
+    (5, 3, 7),
+    (63, 511, 33),
+    (3, 1000, 2),
+    (130, 70, 18),
+];
+
+#[test]
+fn matmul_matches_naive_across_thread_counts() {
+    let mut rng = Pcg::new(101);
+    for &(m, k, n) in SHAPES {
+        let a = rng.normal_mat(m, k, 1.0);
+        let b = rng.normal_mat(k, n, 1.0);
+        let reference = naive_matmul(&a, &b);
+        let serial = pool::with_threads(1, || matmul(&a, &b));
+        let pooled = pool::with_threads(4, || matmul(&a, &b));
+        assert_close(&serial, &reference, 1e-4, &format!("matmul {m}x{k}x{n} serial"));
+        assert_eq!(
+            serial.data(),
+            pooled.data(),
+            "matmul {m}x{k}x{n}: pooled result must be bitwise identical to serial"
+        );
+    }
+}
+
+#[test]
+fn matmul_at_b_matches_naive_across_thread_counts() {
+    let mut rng = Pcg::new(103);
+    for &(m, k, n) in SHAPES {
+        // A is (k x m): C = Aᵀ B with inner dim k.
+        let a = rng.normal_mat(k, m, 1.0);
+        let b = rng.normal_mat(k, n, 1.0);
+        let reference = naive_matmul(&a.transpose(), &b);
+        let serial = pool::with_threads(1, || matmul_at_b(&a, &b));
+        let pooled = pool::with_threads(4, || matmul_at_b(&a, &b));
+        assert_close(&serial, &reference, 1e-4, &format!("at_b {m}x{k}x{n} serial"));
+        assert_eq!(
+            serial.data(),
+            pooled.data(),
+            "at_b {m}x{k}x{n}: pooled result must be bitwise identical to serial"
+        );
+    }
+}
+
+#[test]
+fn matmul_a_bt_matches_naive_across_thread_counts() {
+    let mut rng = Pcg::new(107);
+    for &(m, k, n) in SHAPES {
+        let a = rng.normal_mat(m, k, 1.0);
+        let b = rng.normal_mat(n, k, 1.0);
+        let reference = naive_matmul(&a, &b.transpose());
+        let serial = pool::with_threads(1, || matmul_a_bt(&a, &b));
+        let pooled = pool::with_threads(4, || matmul_a_bt(&a, &b));
+        assert_close(&serial, &reference, 1e-4, &format!("a_bt {m}x{k}x{n} serial"));
+        assert_eq!(
+            serial.data(),
+            pooled.data(),
+            "a_bt {m}x{k}x{n}: pooled result must be bitwise identical to serial"
+        );
+    }
+}
+
+#[test]
+fn transpose_and_softmax_match_across_thread_counts() {
+    let mut rng = Pcg::new(109);
+    let x = rng.normal_mat(300, 257, 1.0);
+    let t1 = pool::with_threads(1, || x.transpose());
+    let t4 = pool::with_threads(4, || x.transpose());
+    assert_eq!(t1.data(), t4.data(), "transpose");
+    let s1 = pool::with_threads(1, || x.softmax_rows());
+    let s4 = pool::with_threads(4, || x.softmax_rows());
+    assert_eq!(s1.data(), s4.data(), "softmax_rows");
+}
+
+/// A well-conditioned random element of each structure class, at sizes
+/// large enough to clear the structured-op parallel thresholds.
+fn structured_cases(rng: &mut Pcg) -> Vec<(SMat, usize)> {
+    let mut cases = Vec::new();
+    for (s, d) in [
+        (Structure::Dense, 96),
+        (Structure::Diagonal, 256),
+        (Structure::BlockDiag { k: 32 }, 256),
+        (Structure::Tril, 128),
+        (Structure::RankKTril { k: 4 }, 128),
+        (Structure::Hierarchical { k1: 8, k2: 8 }, 128),
+        (Structure::TriuToeplitz, 128),
+    ] {
+        let sym = rng.normal_mat(d, d, 0.3).symmetrize();
+        let mut k = proj::proj(s, &sym);
+        k.axpy(1.0, &SMat::identity(s, d));
+        cases.push((k, d));
+    }
+    cases
+}
+
+#[test]
+fn structured_ops_bitwise_identical_serial_vs_pooled() {
+    let mut rng = Pcg::new(113);
+    for (k, d) in structured_cases(&mut rng) {
+        let name = k.structure().name();
+        let x = rng.normal_mat(512, d, 1.0);
+        let y = rng.normal_mat(d, 96, 1.0);
+        for transpose in [false, true] {
+            let r1 = pool::with_threads(1, || k.right_mul(&x, transpose));
+            let r4 = pool::with_threads(4, || k.right_mul(&x, transpose));
+            assert_eq!(r1.data(), r4.data(), "{name} right_mul t={transpose}");
+            let l1 = pool::with_threads(1, || k.left_mul(&y, transpose));
+            let l4 = pool::with_threads(4, || k.left_mul(&y, transpose));
+            assert_eq!(l1.data(), l4.data(), "{name} left_mul t={transpose}");
+        }
+        let g1 = pool::with_threads(1, || k.gram_project(&x, 0.35));
+        let g4 = pool::with_threads(4, || k.gram_project(&x, 0.35));
+        assert_eq!(
+            g1.to_dense().data(),
+            g4.to_dense().data(),
+            "{name} gram_project"
+        );
+        let other = SMat::identity(k.structure(), d);
+        let m1 = pool::with_threads(1, || k.matmul(&other));
+        let m4 = pool::with_threads(4, || k.matmul(&other));
+        assert_eq!(m1.to_dense().data(), m4.to_dense().data(), "{name} matmul");
+        let kk1 = pool::with_threads(1, || k.kkt_right(&x));
+        let kk4 = pool::with_threads(4, || k.kkt_right(&x));
+        assert_eq!(kk1.data(), kk4.data(), "{name} kkt_right");
+    }
+}
+
+/// Run `steps` SINGD steps on synthetic multi-layer data and return the
+/// final parameters plus densified preconditioner factors.
+fn singd_trajectory(method: &Method, steps: usize, seed: u64) -> Vec<Mat> {
+    let mut rng = Pcg::new(seed);
+    let shapes = [(48usize, 64usize), (64, 96), (32, 48)];
+    let m = 192;
+    let hp = Hyper { t_update: 1, riem_momentum: 0.6, ..Hyper::default() };
+    let mut opt = method.build(&shapes, &hp);
+    let mut params: Vec<Mat> =
+        shapes.iter().map(|&(o, i)| rng.normal_mat(o, i, 0.2)).collect();
+    // Fixed per-step data, regenerated identically per trajectory.
+    for t in 0..steps {
+        let mut data_rng = Pcg::with_stream(seed, t as u64 + 1);
+        let grads: Vec<Mat> =
+            shapes.iter().map(|&(o, i)| data_rng.normal_mat(o, i, 0.1)).collect();
+        let stats: Vec<KronStats> = shapes
+            .iter()
+            .map(|&(o, i)| KronStats {
+                a: data_rng.normal_mat(m, i, 1.0),
+                g: data_rng.normal_mat(m, o, 1.0),
+            })
+            .collect();
+        opt.step(t, &mut params, &grads, &stats);
+    }
+    params
+}
+
+#[test]
+fn singd_step_trajectory_identical_serial_vs_pooled() {
+    for method in [
+        Method::Singd { structure: Structure::Dense },
+        Method::Singd { structure: Structure::Hierarchical { k1: 8, k2: 8 } },
+        Method::Singd { structure: Structure::BlockDiag { k: 16 } },
+    ] {
+        let serial = pool::with_threads(1, || singd_trajectory(&method, 4, 131));
+        let pooled = pool::with_threads(4, || singd_trajectory(&method, 4, 131));
+        assert_eq!(serial.len(), pooled.len());
+        for (l, (ws, wp)) in serial.iter().zip(pooled.iter()).enumerate() {
+            assert!(
+                ws.data() == wp.data(),
+                "{} layer {l}: pooled trajectory diverged from serial",
+                method.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn kfac_step_trajectory_identical_serial_vs_pooled() {
+    let method = Method::Kfac;
+    let serial = pool::with_threads(1, || singd_trajectory(&method, 3, 137));
+    let pooled = pool::with_threads(4, || singd_trajectory(&method, 3, 137));
+    for (l, (ws, wp)) in serial.iter().zip(pooled.iter()).enumerate() {
+        assert!(
+            ws.data() == wp.data(),
+            "kfac layer {l}: pooled trajectory diverged from serial"
+        );
+    }
+}
