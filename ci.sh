@@ -31,14 +31,31 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== determinism suites (SINGD_THREADS x SINGD_RANKS matrix) =="
+# The bitwise contracts must hold at every pool size and world size:
+# serial vs pooled kernels (tests/parallel.rs) and serial vs distributed
+# training (tests/dist.rs, which also exercises the SINGD_RANKS default).
+for t in 1 4; do
+    echo "-- SINGD_THREADS=$t: parallel suite"
+    SINGD_THREADS=$t cargo test -q --test parallel
+    for r in 1 4; do
+        echo "-- SINGD_THREADS=$t SINGD_RANKS=$r: dist suite"
+        SINGD_THREADS=$t SINGD_RANKS=$r cargo test -q --test dist
+    done
+done
+
 if [ "$mode" != "quick" ]; then
     echo "== hotpath bench (smoke) =="
     cargo bench --bench hotpath -- --smoke
+    echo "== dist_scaling bench (smoke) =="
+    cargo bench --bench dist_scaling -- --smoke
 fi
 
 if [ "$mode" = "bench" ]; then
     echo "== hotpath bench (full) =="
     cargo bench --bench hotpath
+    echo "== dist_scaling bench (full) =="
+    cargo bench --bench dist_scaling
 fi
 
 echo "CI OK"

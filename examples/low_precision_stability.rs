@@ -32,6 +32,8 @@ fn main() {
         batch_size: 32,
         seed: 17,
         label: "stability".into(),
+        ranks: 1,
+        dist_strategy: singd::dist::DistStrategy::Replicated,
     };
 
     println!("{:<16} {:<10} {:>9} {:>9} {:>10}  {}", "method", "precision", "final", "best", "diverged", "telemetry");

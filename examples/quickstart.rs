@@ -25,6 +25,8 @@ fn main() {
         batch_size: 32,
         seed: 1,
         label: "quickstart".into(),
+        ranks: 1,
+        dist_strategy: singd::dist::DistStrategy::Replicated,
     };
 
     for method in [

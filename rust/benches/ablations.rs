@@ -34,6 +34,8 @@ fn base() -> JobConfig {
         batch_size: 32,
         seed: 77,
         label: "ablation".into(),
+        ranks: 1,
+        dist_strategy: singd::dist::DistStrategy::Replicated,
     }
 }
 

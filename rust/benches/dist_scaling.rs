@@ -1,0 +1,148 @@
+//! Distributed-scaling bench: step time and per-rank Kronecker-factor
+//! memory vs. world size, for both dist strategies.
+//!
+//! Same JSON shape as `BENCH_hotpath.json` (a `cases` array of timing
+//! stats), with per-case `ranks` / `strategy` / `per_rank_state_bytes`
+//! fields. The memory column is the paper's Table-3 story stretched
+//! across ranks: under `factor-sharded`, per-rank factor bytes drop
+//! ~1/R while the replicated strategy pays the full footprint on every
+//! rank.
+//!
+//! Run: `cargo bench --bench dist_scaling`
+//! CI:  `cargo bench --bench dist_scaling -- --smoke`
+
+use singd::bench::{Harness, Stats};
+use singd::data;
+use singd::dist::{DistCtx, DistStrategy};
+use singd::model::cnn::ImgShape;
+use singd::model::Mlp;
+use singd::optim::{Hyper, Method, Optimizer};
+use singd::proptest::Pcg;
+use singd::tensor::pool;
+use singd::train::{train_dist, DistCfg, TrainCfg};
+
+struct Row {
+    stats: Stats,
+    ranks: usize,
+    strategy: &'static str,
+    per_rank_state_bytes: usize,
+    steps: usize,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn write_json(rows: &[Row], smoke: bool) {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"dist_scaling\",\n");
+    out.push_str(&format!("  \"smoke\": {smoke},\n"));
+    out.push_str(&format!("  \"threads\": {},\n", pool::num_threads()));
+    out.push_str("  \"cases\": [\n");
+    for (i, row) in rows.iter().enumerate() {
+        let s = &row.stats;
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"iters\": {}, \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \"min_ns\": {:.1}, \"max_ns\": {:.1}, \"ranks\": {}, \"strategy\": \"{}\", \"steps\": {}, \"median_step_ns\": {:.1}, \"per_rank_state_bytes\": {}}}",
+            json_escape(&s.name),
+            s.iters,
+            s.median_ns,
+            s.mean_ns,
+            s.min_ns,
+            s.max_ns,
+            row.ranks,
+            row.strategy,
+            row.steps,
+            s.median_ns / row.steps.max(1) as f64,
+            row.per_rank_state_bytes,
+        ));
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_dist_scaling.json", &out) {
+        Ok(()) => println!("-- wrote BENCH_dist_scaling.json"),
+        Err(e) => eprintln!("-- failed to write BENCH_dist_scaling.json: {e}"),
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut h = Harness::new("dist_scaling");
+    if smoke {
+        h.target_secs = 0.0;
+        h.max_iters = 1;
+    } else {
+        h.target_secs = 1.0;
+        h.max_iters = 20;
+    }
+    let mut rows: Vec<Row> = Vec::new();
+
+    // A meaty INGD workload: eight near-equal dense-factor layers (so
+    // round-robin sharding splits state evenly and the 1/R memory story
+    // is visible) over an 8-batch epoch, preconditioner refreshed every
+    // step.
+    let mut rng = Pcg::new(5);
+    let ds = data::prototype_images(&mut rng, ImgShape { c: 1, h: 8, w: 8 }, 8, 256, 64, 2.0);
+    let dims = [64, 64, 64, 64, 64, 64, 64, 64, 8];
+    let method = Method::Singd { structure: singd::structured::Structure::Dense };
+    let cfg = TrainCfg {
+        method: method.clone(),
+        hyper: Hyper { lr: 0.02, t_update: 1, ..Hyper::default() },
+        epochs: 1,
+        batch_size: 32,
+        seed: 11,
+        ..TrainCfg::default()
+    };
+    let steps = cfg.epochs * (256 / cfg.batch_size);
+
+    for &ranks in &[1usize, 2, 4] {
+        for strategy in [DistStrategy::Replicated, DistStrategy::FactorSharded] {
+            if ranks == 1 && strategy == DistStrategy::FactorSharded {
+                continue; // degenerate: identical to replicated
+            }
+            let shapes: Vec<(usize, usize)> =
+                dims.windows(2).map(|w| (w[1], w[0] + 1)).collect();
+            let per_rank_state_bytes = method
+                .build_dist(&shapes, &cfg.hyper, DistCtx::new(strategy, 0, ranks))
+                .state_bytes();
+            let dc = DistCfg { ranks, strategy };
+            let name = format!("train step ranks={ranks} {}", strategy.name());
+            let st = h.bench(&name, || {
+                let mut mrng = Pcg::new(7);
+                let mut model = Mlp::new(&mut mrng, &dims);
+                let res = train_dist(&mut model, &ds, &cfg, &dc);
+                assert!(!res.diverged, "bench run diverged");
+            });
+            println!(
+                "{:>46} {:.2} ms/step, {} per-rank state bytes",
+                "->",
+                st.median_ns / steps as f64 / 1e6,
+                per_rank_state_bytes
+            );
+            rows.push(Row {
+                stats: st,
+                ranks,
+                strategy: strategy.name(),
+                per_rank_state_bytes,
+                steps,
+            });
+        }
+    }
+
+    // The headline memory claim in one line: sharded rank-0 bytes vs
+    // replicated, at the largest world size.
+    let rep = rows.iter().find(|r| r.ranks == 4 && r.strategy == "replicated").unwrap();
+    let sh = rows.iter().find(|r| r.ranks == 4 && r.strategy == "factor-sharded").unwrap();
+    println!(
+        "-- ranks=4 per-rank factor state: replicated {} B, factor-sharded {} B ({:.2}x)",
+        rep.per_rank_state_bytes,
+        sh.per_rank_state_bytes,
+        rep.per_rank_state_bytes as f64 / sh.per_rank_state_bytes.max(1) as f64
+    );
+
+    if smoke {
+        println!("-- smoke mode: skipping BENCH_dist_scaling.json");
+    } else {
+        write_json(&rows, smoke);
+    }
+    h.finish();
+}

@@ -30,6 +30,8 @@ fn main() {
         batch_size: 32,
         seed: 17,
         label: "fig1".into(),
+        ranks: 1,
+        dist_strategy: singd::dist::DistStrategy::Replicated,
     };
     // Theorem 1 is a statement about *matched* hyper-parameters: KFAC and
     // IKFAC get identical λ and β₁ so their preconditioners track. λ is

@@ -47,6 +47,8 @@ fn main() {
             batch_size: 32,
             seed: 23,
             label: format!("fig6-{ds}"),
+            ranks: 1,
+            dist_strategy: singd::dist::DistStrategy::Replicated,
         };
         let grid = run_grid(&base, &methods, &["bf16"]);
         for (label, res) in &grid {

@@ -46,6 +46,8 @@ fn main() {
             batch_size: 32,
             seed: 31,
             label: name.replace('/', "-"),
+            ranks: 1,
+            dist_strategy: singd::dist::DistStrategy::Replicated,
         };
         let grid = run_grid(&base, &methods, &["bf16"]);
         for (label, res) in &grid {

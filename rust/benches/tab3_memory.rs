@@ -53,6 +53,8 @@ fn main() {
             batch_size: 1,
             seed: 0,
             label: "mem".into(),
+            ranks: 1,
+            dist_strategy: singd::dist::DistStrategy::Replicated,
         };
         let model = build_model(&cfg, shape, 100, &mut rng);
         let shapes = model.shapes();

@@ -59,10 +59,17 @@ singd — Structured Inverse-Free Natural Gradient Descent (paper reproduction)
 
 USAGE:
   singd train   --config <file.toml> [--out <curves.csv>]
+                [--ranks <R>] [--strategy <replicated|factor-sharded>]
   singd sweep   --config <file.toml> [--trials <N>] [--seed <S>]
   singd gcn     [--method <sgd|adamw|kfac|ingd|singd:diag|...>] [--steps <N>]
   singd inspect [--structure <dense|diag|block:k|tril|rankk:k|hier:k|toeplitz>] [--dim <d>]
   singd help
+
+Distributed training: --ranks R (default: SINGD_RANKS env, else 1) runs R
+deterministic in-process data-parallel ranks; --strategy factor-sharded
+additionally shards the Kronecker factors (per-rank state ~1/R). Ranks=R
+training is bitwise identical to ranks=1 for power-of-two R dividing the
+batch size. SINGD_THREADS caps the worker pool both share.
 
 Regenerating the paper's tables/figures (see DESIGN.md §5):
   cargo bench --bench fig1_vgg_cifar       # Fig. 1 left/center (+ stability)
@@ -106,20 +113,49 @@ fn load_config(args: &Args) -> Result<JobConfig, String> {
 }
 
 fn cmd_train(args: &Args) -> i32 {
-    let cfg = match load_config(args) {
+    let mut cfg = match load_config(args) {
         Ok(c) => c,
         Err(e) => {
             eprintln!("error: {e}");
             return 2;
         }
     };
+    if let Some(r) = args.get("ranks") {
+        match r.parse::<usize>() {
+            Ok(n) if n >= 1 => cfg.ranks = n,
+            _ => {
+                eprintln!("error: bad --ranks '{r}'");
+                return 2;
+            }
+        }
+    }
+    if let Some(s) = args.get("strategy") {
+        match crate::dist::DistStrategy::parse(s) {
+            Some(st) => cfg.dist_strategy = st,
+            None => {
+                eprintln!("error: bad --strategy '{s}' (replicated | factor-sharded)");
+                return 2;
+            }
+        }
+    }
+    // Catch this here (covers --ranks, [dist] ranks and SINGD_RANKS alike)
+    // so a bad combination is a clean CLI error, not a driver panic.
+    if cfg.ranks > 1 && cfg.batch_size % cfg.ranks != 0 {
+        eprintln!(
+            "error: train.batch_size {} is not divisible by ranks {}",
+            cfg.batch_size, cfg.ranks
+        );
+        return 2;
+    }
     println!(
-        "training {} / {} with {} ({}), {} epochs",
+        "training {} / {} with {} ({}), {} epochs, ranks={} ({})",
         cfg.label,
         cfg.dataset,
         cfg.method.name(),
         cfg.hyper.policy.name(),
-        cfg.epochs
+        cfg.epochs,
+        cfg.ranks,
+        cfg.dist_strategy.name()
     );
     let res = exp::run_job(&cfg);
     for r in &res.rows {
@@ -270,6 +306,20 @@ mod tests {
     #[test]
     fn help_exits_0() {
         assert_eq!(run(&sv(&["help"])), 0);
+    }
+
+    #[test]
+    fn train_rejects_bad_dist_flags() {
+        let path = std::env::temp_dir().join("singd_cli_dist_test.toml");
+        std::fs::write(&path, "[model]\narch = \"mlp\"\n").unwrap();
+        let p = path.to_str().unwrap();
+        assert_eq!(run(&sv(&["train", "--config", p, "--strategy", "bogus"])), 2);
+        assert_eq!(run(&sv(&["train", "--config", p, "--ranks", "0"])), 2);
+        assert_eq!(run(&sv(&["train", "--config", p, "--ranks", "x"])), 2);
+        // batch_size 32 (default) is not divisible by 3 → clean error,
+        // not a driver assert.
+        assert_eq!(run(&sv(&["train", "--config", p, "--ranks", "3"])), 2);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -28,8 +28,13 @@
 //! batch_size = 64
 //! schedule = "cosine:600"
 //! seed = 7
+//!
+//! [dist]
+//! ranks = 4                    # default: SINGD_RANKS env, else 1
+//! strategy = "factor-sharded"  # replicated | factor-sharded
 //! ```
 
+use crate::dist::{self, DistStrategy};
 use crate::numerics::Policy;
 use crate::optim::{Hyper, Method};
 use crate::train::Schedule;
@@ -214,6 +219,11 @@ pub struct JobConfig {
     pub batch_size: usize,
     pub seed: u64,
     pub label: String,
+    /// Data-parallel world size (`[dist] ranks`; defaults to the
+    /// `SINGD_RANKS` env contract, else 1 = serial).
+    pub ranks: usize,
+    /// Optimizer-state layout across ranks (`[dist] strategy`).
+    pub dist_strategy: DistStrategy,
 }
 
 impl JobConfig {
@@ -256,6 +266,9 @@ impl JobConfig {
         };
         let schedule = Schedule::parse(t.str_or("train.schedule", "constant"))
             .ok_or_else(|| format!("unknown train.schedule '{}'", t.str_or("train.schedule", "")))?;
+        let ranks = t.usize_or("dist.ranks", dist::default_ranks()).max(1);
+        let dist_strategy = DistStrategy::parse(t.str_or("dist.strategy", "replicated"))
+            .ok_or_else(|| format!("unknown dist.strategy '{}'", t.str_or("dist.strategy", "")))?;
         Ok(JobConfig {
             arch,
             dataset: t.str_or("data.dataset", "cifar100").to_string(),
@@ -269,6 +282,8 @@ impl JobConfig {
             batch_size: t.usize_or("train.batch_size", 32),
             seed: t.get("train.seed").and_then(|v| v.as_u64()).unwrap_or(0),
             label: t.str_or("label", "job").to_string(),
+            ranks,
+            dist_strategy,
         })
     }
 
@@ -356,5 +371,18 @@ seed = 7
         let cfg = JobConfig::from_str_toml("[model]\narch = \"mlp\"\n").unwrap();
         assert_eq!(cfg.batch_size, 32);
         assert_eq!(cfg.method.name(), "sgd");
+        assert_eq!(cfg.dist_strategy, DistStrategy::Replicated);
+        assert!(cfg.ranks >= 1);
+    }
+
+    #[test]
+    fn dist_section_parses_ranks_and_strategy() {
+        let toml = "[dist]\nranks = 4\nstrategy = \"factor-sharded\"\n";
+        let cfg = JobConfig::from_str_toml(toml).unwrap();
+        assert_eq!(cfg.ranks, 4);
+        assert_eq!(cfg.dist_strategy, DistStrategy::FactorSharded);
+        // ranks = 0 is clamped to 1 (serial), bad strategies rejected.
+        assert_eq!(JobConfig::from_str_toml("[dist]\nranks = 0\n").unwrap().ranks, 1);
+        assert!(JobConfig::from_str_toml("[dist]\nstrategy = \"bogus\"\n").is_err());
     }
 }

@@ -1,0 +1,257 @@
+//! Deterministic collectives over [`Mat`] buffers.
+//!
+//! Every reducing collective combines rank contributions with one fixed
+//! balanced halving tree ([`tree_sum_f64`] / the private `tree_combine`),
+//! so the floating-point reduction order is a function of the world size
+//! alone — never of thread scheduling. This extends the crate's
+//! serial/pooled bitwise-parity contract (`rust/tests/parallel.rs`) to
+//! the distributed layer.
+//!
+//! # Rank-count invariance
+//!
+//! A tree-ordered reduction makes results reproducible *at a fixed world
+//! size*. Bitwise invariance *across* world sizes additionally needs the
+//! leaf partition to align with the tree: a sum over `m` items sharded
+//! contiguously across `R = 2^k` ranks (with `R | m`) reproduces the
+//! single-rank halving tree exactly, because each rank's local subtree is
+//! a complete subtree of the global one and the cross-rank combine is the
+//! tree's top `k` levels. The training driver relies on this for loss
+//! accumulation, and sidesteps the question entirely for gradients by
+//! gathering raw statistics rows (exact concatenation) and all-reducing
+//! zero-padded updates (one nonzero contributor per element — any tree
+//! gives the same bits).
+
+use super::Communicator;
+use crate::tensor::Mat;
+use std::sync::Arc;
+
+/// Balanced halving-tree sum: `tree(x) = tree(x[..⌈n/2⌉]) + tree(x[⌈n/2⌉..])`.
+///
+/// The reduction tree is a function of `n` alone. For `n` divisible by a
+/// power of two `R`, the first `log2(R)` split points land on multiples
+/// of `n/R`, so contiguous equal shards are complete subtrees — the
+/// alignment property the rank-invariance contract builds on.
+pub fn tree_sum_f64(xs: &[f64]) -> f64 {
+    match xs.len() {
+        0 => 0.0,
+        1 => xs[0],
+        n => {
+            let mid = n.div_ceil(2);
+            tree_sum_f64(&xs[..mid]) + tree_sum_f64(&xs[mid..])
+        }
+    }
+}
+
+/// Elementwise halving-tree sum of per-rank matrix lists.
+fn tree_combine(parts: &[Arc<Vec<Mat>>]) -> Vec<Mat> {
+    match parts.len() {
+        0 => Vec::new(),
+        1 => parts[0].as_ref().clone(),
+        n => {
+            let mid = n.div_ceil(2);
+            let mut acc = tree_combine(&parts[..mid]);
+            let hi = tree_combine(&parts[mid..]);
+            assert_eq!(acc.len(), hi.len(), "all_reduce: payload length mismatch");
+            for (a, b) in acc.iter_mut().zip(&hi) {
+                a.axpy(1.0, b);
+            }
+            acc
+        }
+    }
+}
+
+/// All-reduce (sum) a list of matrices: every rank contributes its list,
+/// every rank receives the elementwise tree-ordered sum. Shapes must
+/// agree across ranks.
+pub fn all_reduce_sum(comm: &dyn Communicator, mats: &[Mat]) -> Vec<Mat> {
+    if comm.world_size() == 1 {
+        return mats.to_vec();
+    }
+    let parts = comm.exchange_mats(mats.to_vec());
+    tree_combine(&parts)
+}
+
+/// Broadcast `root`'s matrices to every rank. Non-root contributions are
+/// ignored (ranks other than `root` may pass an empty list).
+pub fn broadcast(comm: &dyn Communicator, root: usize, mats: Vec<Mat>) -> Vec<Mat> {
+    assert!(root < comm.world_size(), "broadcast: bad root");
+    if comm.world_size() == 1 {
+        return mats;
+    }
+    let payload = if comm.rank() == root { mats } else { Vec::new() };
+    let parts = comm.exchange_mats(payload);
+    parts[root].as_ref().clone()
+}
+
+/// All-gather arbitrary per-rank matrix lists, returned in rank order.
+pub fn all_gather(comm: &dyn Communicator, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
+    comm.exchange_mats(mats)
+}
+
+/// All-gather by row concatenation: every rank contributes a
+/// `rows_r × cols` block; every rank receives the `Σ rows_r × cols`
+/// vertical stack in rank order. Pure data movement — no floating-point
+/// reduction — so the result is exact for any world size.
+pub fn all_gather_rows(comm: &dyn Communicator, m: &Mat) -> Mat {
+    if comm.world_size() == 1 {
+        return m.clone();
+    }
+    let parts = comm.exchange_mats(vec![m.clone()]);
+    concat_rows(&parts, 0)
+}
+
+/// Stack `parts[r][idx]` over ranks `r` (shared by `all_gather_rows` and
+/// the multi-matrix gathers in the training driver).
+pub fn concat_rows(parts: &[Arc<Vec<Mat>>], idx: usize) -> Mat {
+    let cols = parts[0][idx].cols();
+    let rows: usize = parts.iter().map(|p| p[idx].rows()).sum();
+    let mut out = Mat::zeros(rows, cols);
+    let mut r0 = 0usize;
+    for p in parts {
+        let blk = &p[idx];
+        assert_eq!(blk.cols(), cols, "concat_rows: column mismatch");
+        out.data_mut()[r0 * cols..(r0 + blk.rows()) * cols].copy_from_slice(blk.data());
+        r0 += blk.rows();
+    }
+    out
+}
+
+/// Reduce-scatter over rows: tree-sum every rank's `rows × cols`
+/// contribution, then hand rank `r` its contiguous `rows/world` row
+/// block. `rows` must be divisible by the world size.
+pub fn reduce_scatter_rows(comm: &dyn Communicator, m: &Mat) -> Mat {
+    let world = comm.world_size();
+    assert_eq!(m.rows() % world, 0, "reduce_scatter_rows: rows {} % world {world} != 0", m.rows());
+    if world == 1 {
+        return m.clone();
+    }
+    let summed = all_reduce_sum(comm, std::slice::from_ref(m));
+    let total = &summed[0];
+    let q = total.rows() / world;
+    let r0 = comm.rank() * q;
+    Mat::from_fn(q, total.cols(), |r, c| total.at(r0 + r, c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::run_ranks;
+    use crate::proptest::Pcg;
+
+    #[test]
+    fn tree_sum_uses_fixed_halving_order() {
+        let xs = [0.1f64, 0.2, 0.3, 0.4];
+        let want = (0.1 + 0.2) + (0.3 + 0.4);
+        assert_eq!(tree_sum_f64(&xs), want);
+        let xs5 = [0.1f64, 0.2, 0.3, 0.4, 0.5];
+        let want5 = ((0.1 + 0.2) + 0.3) + (0.4 + 0.5);
+        assert_eq!(tree_sum_f64(&xs5), want5);
+        assert_eq!(tree_sum_f64(&[]), 0.0);
+        assert_eq!(tree_sum_f64(&[7.0]), 7.0);
+    }
+
+    #[test]
+    fn shard_subtrees_compose_to_the_global_tree() {
+        // The alignment property: contiguous 2^k-way shards of a
+        // divisible length reduce to the same bits as the global tree.
+        let mut rng = Pcg::new(11);
+        let xs: Vec<f64> = (0..96).map(|_| rng.normal() as f64).collect();
+        let full = tree_sum_f64(&xs);
+        for shards in [2usize, 4, 8] {
+            let q = xs.len() / shards;
+            let partials: Vec<f64> =
+                (0..shards).map(|s| tree_sum_f64(&xs[s * q..(s + 1) * q])).collect();
+            assert_eq!(tree_sum_f64(&partials).to_bits(), full.to_bits(), "shards {shards}");
+        }
+    }
+
+    #[test]
+    fn all_reduce_sums_with_rank_order_tree() {
+        let mut rng = Pcg::new(13);
+        let world = 4;
+        let inputs: Vec<Mat> = (0..world).map(|_| rng.normal_mat(5, 3, 1.0)).collect();
+        let want = {
+            // Manual (r0+r1)+(r2+r3).
+            let mut a = inputs[0].clone();
+            a.axpy(1.0, &inputs[1]);
+            let mut b = inputs[2].clone();
+            b.axpy(1.0, &inputs[3]);
+            a.axpy(1.0, &b);
+            a
+        };
+        let inp = &inputs;
+        let outs = run_ranks(world, |c| all_reduce_sum(&c, std::slice::from_ref(&inp[c.rank()])));
+        for out in outs {
+            assert_eq!(out[0].data(), want.data(), "tree order must be rank-indexed");
+        }
+    }
+
+    #[test]
+    fn broadcast_delivers_root_payload() {
+        let m = Mat::from_fn(2, 2, |r, c| (r * 2 + c) as f32);
+        let mr = &m;
+        let outs = run_ranks(3, |c| {
+            let payload = if c.rank() == 1 { vec![mr.clone()] } else { Vec::new() };
+            broadcast(&c, 1, payload)
+        });
+        for out in outs {
+            assert_eq!(out.len(), 1);
+            assert_eq!(out[0].data(), m.data());
+        }
+    }
+
+    #[test]
+    fn all_gather_rows_stacks_in_rank_order() {
+        let outs = run_ranks(4, |c| {
+            let mine = Mat::from_fn(2, 3, |r, col| (c.rank() * 100 + r * 10 + col) as f32);
+            all_gather_rows(&c, &mine)
+        });
+        for out in outs {
+            assert_eq!(out.shape(), (8, 3));
+            for rank in 0..4 {
+                for r in 0..2 {
+                    for col in 0..3 {
+                        assert_eq!(out.at(rank * 2 + r, col), (rank * 100 + r * 10 + col) as f32);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_hands_out_summed_row_blocks() {
+        let world = 4;
+        let outs = run_ranks(world, |c| {
+            let mine = Mat::from_fn(8, 2, |r, col| (c.rank() + r + col) as f32);
+            reduce_scatter_rows(&c, &mine)
+        });
+        // Sum over ranks of (rank + r + col) = 6 + 4(r + col).
+        for (rank, out) in outs.iter().enumerate() {
+            assert_eq!(out.shape(), (2, 2));
+            for r in 0..2 {
+                for col in 0..2 {
+                    let gr = rank * 2 + r;
+                    assert_eq!(out.at(r, col), (6 + 4 * (gr + col)) as f32, "rank {rank}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn world1_collectives_are_identity() {
+        let mut rng = Pcg::new(17);
+        let m = rng.normal_mat(4, 4, 1.0);
+        let mr = &m;
+        let out = run_ranks(1, |c| {
+            (
+                all_reduce_sum(&c, std::slice::from_ref(mr)),
+                all_gather_rows(&c, mr),
+                broadcast(&c, 0, vec![mr.clone()]),
+            )
+        });
+        let (ar, ag, bc) = &out[0];
+        assert_eq!(ar[0].data(), m.data());
+        assert_eq!(ag.data(), m.data());
+        assert_eq!(bc[0].data(), m.data());
+    }
+}

@@ -1,0 +1,421 @@
+//! Distributed execution subsystem: deterministic in-process collectives
+//! and ZeRO-style sharded Kronecker-factor preconditioning.
+//!
+//! The subsystem simulates an `R`-rank data-parallel job inside one
+//! process: ranks are SPMD closures executed concurrently (on the
+//! persistent worker pool of [`crate::tensor::pool`] when it is large
+//! enough, on dedicated scoped threads otherwise) that communicate only
+//! through the [`Communicator`] rendezvous. Layer-wise decomposition is
+//! the natural parallel axis for Kronecker-factored methods (Koroko et
+//! al., 2023), and the inverse-free SINGD update is nothing but matrix
+//! multiplications and subtractions — exactly the ops that shard without
+//! any rank ever holding a full inverse.
+//!
+//! # Determinism contract
+//!
+//! This module extends the crate's serial/pooled bitwise-parity contract
+//! (`rust/tests/parallel.rs`) across world sizes:
+//!
+//! 1. **Collectives use a fixed reduction tree.** Every reducing
+//!    collective combines rank contributions with the balanced halving
+//!    tree of [`collectives::tree_sum_f64`] — the reduction order is a
+//!    function of the world size alone, never of scheduling.
+//! 2. **Rank-count invariance** is achieved by exchanging *exact* data:
+//!    the training driver ([`crate::train::train_dist`]) all-gathers raw
+//!    per-row Kronecker statistics (a concatenation, no floating-point
+//!    reduction) and recomputes contractions from the gathered
+//!    full-batch matrices with the standard kernels, and the sharded
+//!    optimizer path all-reduces zero-padded per-layer updates (each
+//!    element has exactly one nonzero contributor, so tree order cannot
+//!    change the result). Under this scheme `ranks = R` training is
+//!    bitwise identical to `ranks = 1` for any power-of-two `R` dividing
+//!    the batch size (see `rust/tests/dist.rs`).
+//! 3. A poisoned rendezvous (a rank panicking) wakes every peer so the
+//!    failure propagates instead of deadlocking the process.
+//!
+//! # The `SINGD_RANKS` contract
+//!
+//! `SINGD_RANKS=<n>` sets the *default* world size used by config-driven
+//! entry points ([`crate::config::JobConfig`]); explicit `[dist] ranks`
+//! config keys and `--ranks` CLI flags override it. Read once, cached.
+
+pub mod bucket;
+pub mod collectives;
+pub mod shard;
+
+use crate::tensor::{pool, Mat};
+use std::any::Any;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// How optimizer state is laid out across ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DistStrategy {
+    /// Every rank holds the full optimizer state and performs every
+    /// layer's update redundantly (classic data parallelism).
+    Replicated,
+    /// ZeRO-style layer sharding: each rank owns the Kronecker factors
+    /// (and momenta) of its layer shard only, updates them locally, and
+    /// the preconditioned updates are exchanged — per-rank factor memory
+    /// drops by roughly the world size.
+    FactorSharded,
+}
+
+impl DistStrategy {
+    /// Parse `"replicated"` / `"factor-sharded"` (aliases: `"sharded"`,
+    /// `"zero"`).
+    pub fn parse(s: &str) -> Option<DistStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "replicated" | "rep" | "ddp" => Some(DistStrategy::Replicated),
+            "factor-sharded" | "factor_sharded" | "sharded" | "zero" => {
+                Some(DistStrategy::FactorSharded)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DistStrategy::Replicated => "replicated",
+            DistStrategy::FactorSharded => "factor-sharded",
+        }
+    }
+}
+
+/// A rank's view of the distributed topology, handed to optimizers so
+/// their per-layer loops know which layers this rank owns.
+#[derive(Clone, Copy, Debug)]
+pub struct DistCtx {
+    pub strategy: DistStrategy,
+    pub rank: usize,
+    pub world: usize,
+}
+
+impl DistCtx {
+    /// The single-process topology: one rank, replicated.
+    pub fn single() -> DistCtx {
+        DistCtx { strategy: DistStrategy::Replicated, rank: 0, world: 1 }
+    }
+
+    pub fn new(strategy: DistStrategy, rank: usize, world: usize) -> DistCtx {
+        assert!(world >= 1, "dist: world size must be >= 1");
+        assert!(rank < world, "dist: rank {rank} out of range for world {world}");
+        DistCtx { strategy, rank, world }
+    }
+
+    /// Whether this rank owns layer `l` (always true when replicated).
+    /// The factor-sharded layout is the round-robin assignment of
+    /// [`shard::round_robin_owner`], shared with the training driver.
+    pub fn owns_layer(&self, l: usize) -> bool {
+        match self.strategy {
+            DistStrategy::Replicated => true,
+            DistStrategy::FactorSharded => shard::round_robin_owner(l, self.world) == self.rank,
+        }
+    }
+
+    /// The owned-layer set in the [`crate::optim::Optimizer::owned_layers`]
+    /// convention: `None` when every layer is owned (replicated or
+    /// single-rank), `Some(list)` under multi-rank factor sharding. The
+    /// single source of truth the optimizers and the training driver's
+    /// update exchange both delegate to.
+    pub fn owned_layers(&self, n_layers: usize) -> Option<Vec<usize>> {
+        if self.world > 1 && self.strategy == DistStrategy::FactorSharded {
+            Some((0..n_layers).filter(|&l| self.owns_layer(l)).collect())
+        } else {
+            None
+        }
+    }
+}
+
+/// Default world size: `SINGD_RANKS` (read once, cached), else 1.
+pub fn default_ranks() -> usize {
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::env::var("SINGD_RANKS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .map(|n| n.max(1))
+            .unwrap_or(1)
+    })
+}
+
+/// Rank/topology plus the SPMD exchange primitive every collective is
+/// built on: each rank contributes one payload per call and receives all
+/// ranks' payloads in rank order.
+///
+/// The exchange is a *barrier*: no rank returns before every rank has
+/// deposited, so collectives built on it are trivially synchronized. All
+/// ranks must issue the same sequence of calls (SPMD discipline).
+pub trait Communicator {
+    fn rank(&self) -> usize;
+    fn world_size(&self) -> usize;
+    /// Exchange a list of matrices; returns every rank's payload.
+    fn exchange_mats(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>>;
+    /// Exchange a list of f64 scalars (loss partials, counters).
+    fn exchange_f64(&self, vals: Vec<f64>) -> Vec<Arc<Vec<f64>>>;
+    /// Block until every rank reaches this point.
+    fn barrier(&self) {
+        let _ = self.exchange_f64(Vec::new());
+    }
+}
+
+/// Shared-memory rendezvous backing [`LocalComm`]: a slot per rank plus a
+/// two-phase (deposit → read) generation protocol.
+struct Rendezvous {
+    world: usize,
+    state: Mutex<RvState>,
+    cv: Condvar,
+}
+
+struct RvState {
+    slots: Vec<Option<Arc<dyn Any + Send + Sync>>>,
+    deposited: usize,
+    taken: usize,
+    /// Deposit phase (false) vs read phase (true).
+    reading: bool,
+    /// Set when a rank panicked; wakes and fails every peer.
+    poisoned: bool,
+}
+
+impl Rendezvous {
+    fn new(world: usize) -> Rendezvous {
+        Rendezvous {
+            world,
+            state: Mutex::new(RvState {
+                slots: (0..world).map(|_| None).collect(),
+                deposited: 0,
+                taken: 0,
+                reading: false,
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn poison(&self) {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.poisoned = true;
+        self.cv.notify_all();
+    }
+
+    fn exchange(
+        &self,
+        rank: usize,
+        payload: Arc<dyn Any + Send + Sync>,
+    ) -> Vec<Arc<dyn Any + Send + Sync>> {
+        if self.world == 1 {
+            return vec![payload];
+        }
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        // Deposit phase: wait for the previous exchange to fully drain.
+        loop {
+            assert!(!st.poisoned, "dist: a peer rank failed");
+            if !st.reading && st.slots[rank].is_none() {
+                break;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.slots[rank] = Some(payload);
+        st.deposited += 1;
+        if st.deposited == self.world {
+            st.reading = true;
+            self.cv.notify_all();
+        }
+        // Read phase: wait for every rank's deposit.
+        loop {
+            assert!(!st.poisoned, "dist: a peer rank failed");
+            if st.reading {
+                break;
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        let out: Vec<_> = st.slots.iter().map(|s| s.clone().expect("rendezvous slot")).collect();
+        st.taken += 1;
+        if st.taken == self.world {
+            // Last reader resets the rendezvous for the next exchange.
+            for s in &mut st.slots {
+                *s = None;
+            }
+            st.deposited = 0;
+            st.taken = 0;
+            st.reading = false;
+            self.cv.notify_all();
+        }
+        out
+    }
+}
+
+/// One rank's handle onto an in-process shared-memory world. Created by
+/// [`run_ranks`]; cheap to move into the rank closure.
+pub struct LocalComm {
+    rank: usize,
+    world: usize,
+    rv: Arc<Rendezvous>,
+}
+
+impl LocalComm {
+    fn exchange_any(&self, p: Arc<dyn Any + Send + Sync>) -> Vec<Arc<dyn Any + Send + Sync>> {
+        self.rv.exchange(self.rank, p)
+    }
+}
+
+impl Communicator for LocalComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    fn exchange_mats(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
+        self.exchange_any(Arc::new(mats))
+            .into_iter()
+            .map(|a| a.downcast::<Vec<Mat>>().expect("dist: SPMD call order violated (mats)"))
+            .collect()
+    }
+
+    fn exchange_f64(&self, vals: Vec<f64>) -> Vec<Arc<Vec<f64>>> {
+        self.exchange_any(Arc::new(vals))
+            .into_iter()
+            .map(|a| a.downcast::<Vec<f64>>().expect("dist: SPMD call order violated (f64)"))
+            .collect()
+    }
+}
+
+/// Run `world` SPMD rank bodies to completion and collect their results
+/// in rank order.
+///
+/// Ranks run on the persistent worker pool when it is safe to do so
+/// (caller is not itself a pool worker, parallelism is enabled, and the
+/// pool has at least `world` workers so no rank body can be queued behind
+/// a blocked peer — rank bodies block on collective rendezvous, unlike
+/// ordinary pool jobs); otherwise on dedicated scoped threads. Both paths
+/// produce identical results: collectives order floating-point reductions
+/// by rank index, never by scheduling.
+///
+/// A panicking rank poisons the rendezvous (waking every peer) and the
+/// panic propagates to the caller; the pool stays usable.
+pub fn run_ranks<T, F>(world: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(LocalComm) -> T + Sync,
+{
+    assert!(world >= 1, "run_ranks: world size must be >= 1");
+    let rv = Arc::new(Rendezvous::new(world));
+    if world == 1 {
+        return vec![f(LocalComm { rank: 0, world, rv })];
+    }
+    let results: Vec<Mutex<Option<T>>> = (0..world).map(|_| Mutex::new(None)).collect();
+    let fr = &f;
+    let rs = &results;
+    let make_body = |r: usize| {
+        let comm = LocalComm { rank: r, world, rv: Arc::clone(&rv) };
+        let rv = Arc::clone(&rv);
+        move || {
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fr(comm)));
+            match out {
+                Ok(v) => *rs[r].lock().unwrap_or_else(|e| e.into_inner()) = Some(v),
+                Err(e) => {
+                    rv.poison();
+                    std::panic::resume_unwind(e);
+                }
+            }
+        }
+    };
+    let pool_safe =
+        !pool::is_worker_thread() && pool::current_threads() > 1 && pool::num_threads() >= world;
+    if pool_safe {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            (0..world).map(|r| Box::new(make_body(r)) as Box<dyn FnOnce() + Send + '_>).collect();
+        pool::run_jobs(jobs);
+    } else {
+        std::thread::scope(|s| {
+            for r in 0..world {
+                s.spawn(make_body(r));
+            }
+        });
+    }
+    results
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(|e| e.into_inner())
+                .expect("run_ranks: rank produced no result")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_ranks_world1_runs_inline() {
+        let out = run_ranks(1, |c| {
+            assert_eq!(c.rank(), 0);
+            assert_eq!(c.world_size(), 1);
+            42usize
+        });
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn run_ranks_collects_in_rank_order() {
+        for world in [2usize, 3, 4, 7] {
+            let out = run_ranks(world, |c| c.rank() * 10);
+            assert_eq!(out, (0..world).map(|r| r * 10).collect::<Vec<_>>(), "world {world}");
+        }
+    }
+
+    #[test]
+    fn exchange_f64_delivers_all_payloads() {
+        let world = 4;
+        let out = run_ranks(world, |c| {
+            let parts = c.exchange_f64(vec![c.rank() as f64, 100.0 + c.rank() as f64]);
+            parts.iter().map(|p| p[0]).collect::<Vec<_>>()
+        });
+        for got in out {
+            assert_eq!(got, vec![0.0, 1.0, 2.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn repeated_exchanges_do_not_cross_phases() {
+        // Many back-to-back exchanges with asymmetric compute between
+        // them: the two-phase reset must keep rounds separated.
+        let world = 3;
+        let out = run_ranks(world, |c| {
+            let mut acc = 0.0f64;
+            for round in 0..50u32 {
+                if c.rank() == round as usize % world {
+                    std::hint::black_box((0..500).map(|i| i as f64).sum::<f64>());
+                }
+                let parts = c.exchange_f64(vec![(round as f64) * 10.0 + c.rank() as f64]);
+                for (r, p) in parts.iter().enumerate() {
+                    assert_eq!(p[0], (round as f64) * 10.0 + r as f64);
+                    acc += p[0];
+                }
+            }
+            acc
+        });
+        assert!(out.iter().all(|&x| x == out[0]));
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in [DistStrategy::Replicated, DistStrategy::FactorSharded] {
+            assert_eq!(DistStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(DistStrategy::parse("sharded"), Some(DistStrategy::FactorSharded));
+        assert!(DistStrategy::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn dist_ctx_ownership() {
+        let replicated = DistCtx::new(DistStrategy::Replicated, 1, 4);
+        assert!((0..8).all(|l| replicated.owns_layer(l)));
+        let sharded = DistCtx::new(DistStrategy::FactorSharded, 1, 4);
+        let owned: Vec<usize> = (0..8).filter(|&l| sharded.owns_layer(l)).collect();
+        assert_eq!(owned, vec![1, 5]);
+    }
+}

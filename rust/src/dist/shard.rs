@@ -1,0 +1,129 @@
+//! ZeRO-style layer sharding: which rank owns which layer's Kronecker
+//! factors.
+//!
+//! Layer-wise decomposition is the natural parallel axis for
+//! Kronecker-factored methods: each layer's `(K, C)` pair (or `(S_K,
+//! S_C)` for KFAC) is refreshed and applied independently, so ownership
+//! can be distributed with no cross-layer communication. Under
+//! [`crate::dist::DistStrategy::FactorSharded`], rank `r` allocates and
+//! updates only its owned layers' factors and momenta — per-rank factor
+//! memory drops by roughly the world size — and only the preconditioned
+//! *updates* are exchanged (zero-padded bucketed all-reduce, exact by
+//! construction).
+//!
+//! Two deterministic assignments are provided: the round-robin map used
+//! by the optimizers (a pure function of `(layer, world)`, so driver and
+//! optimizer never disagree), and a cost-balanced plan for telemetry and
+//! future schedulers.
+
+/// The canonical ownership map shared by optimizers and the training
+/// driver: layer `l` belongs to rank `l mod world`.
+pub fn round_robin_owner(layer: usize, world: usize) -> usize {
+    layer % world.max(1)
+}
+
+/// A materialized layer→rank assignment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    owner: Vec<usize>,
+    world: usize,
+}
+
+impl ShardPlan {
+    /// The round-robin plan ([`round_robin_owner`]).
+    pub fn round_robin(n_layers: usize, world: usize) -> ShardPlan {
+        let world = world.max(1);
+        ShardPlan { owner: (0..n_layers).map(|l| round_robin_owner(l, world)).collect(), world }
+    }
+
+    /// Greedy longest-processing-time balancing: layers are assigned in
+    /// decreasing cost order to the least-loaded rank (ties broken by
+    /// rank index, then by layer index — fully deterministic).
+    pub fn balanced(costs: &[usize], world: usize) -> ShardPlan {
+        let world = world.max(1);
+        let mut order: Vec<usize> = (0..costs.len()).collect();
+        order.sort_by_key(|&l| (std::cmp::Reverse(costs[l]), l));
+        let mut load = vec![0usize; world];
+        let mut owner = vec![0usize; costs.len()];
+        for l in order {
+            let r = (0..world).min_by_key(|&r| (load[r], r)).unwrap();
+            owner[l] = r;
+            load[r] += costs[l];
+        }
+        ShardPlan { owner, world }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.owner.len()
+    }
+
+    pub fn owner(&self, layer: usize) -> usize {
+        self.owner[layer]
+    }
+
+    pub fn owns(&self, rank: usize, layer: usize) -> bool {
+        self.owner[layer] == rank
+    }
+
+    /// Layers owned by `rank`, ascending.
+    pub fn owned(&self, rank: usize) -> Vec<usize> {
+        (0..self.owner.len()).filter(|&l| self.owner[l] == rank).collect()
+    }
+
+    /// Total cost assigned to `rank`.
+    pub fn load(&self, costs: &[usize], rank: usize) -> usize {
+        (0..self.owner.len()).filter(|&l| self.owner[l] == rank).map(|l| costs[l]).sum()
+    }
+}
+
+/// Per-layer dense Kronecker-factor element count `d_i² + d_o²` for
+/// layer shapes `(d_o, d_i)` — the cost model for balanced sharding and
+/// the per-rank memory telemetry of `benches/dist_scaling.rs`.
+pub fn factor_cost(shapes: &[(usize, usize)]) -> Vec<usize> {
+    shapes.iter().map(|&(o, i)| i * i + o * o).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_covers_all_ranks_evenly() {
+        let p = ShardPlan::round_robin(8, 4);
+        for r in 0..4 {
+            assert_eq!(p.owned(r), vec![r, r + 4]);
+        }
+        assert!(p.owns(1, 5));
+        assert!(!p.owns(1, 4));
+    }
+
+    #[test]
+    fn round_robin_world1_owns_everything() {
+        let p = ShardPlan::round_robin(5, 1);
+        assert_eq!(p.owned(0), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn balanced_beats_round_robin_on_skewed_costs() {
+        // One huge layer plus many small ones: round-robin piles the big
+        // layer onto rank 0 together with others; LPT isolates it.
+        let costs = [1000usize, 10, 10, 10, 10, 10, 10, 10];
+        let rr = ShardPlan::round_robin(costs.len(), 4);
+        let bal = ShardPlan::balanced(&costs, 4);
+        let max_rr = (0..4).map(|r| rr.load(&costs, r)).max().unwrap();
+        let max_bal = (0..4).map(|r| bal.load(&costs, r)).max().unwrap();
+        assert!(max_bal <= max_rr);
+        assert_eq!(max_bal, 1000, "LPT must isolate the dominant layer");
+        // Deterministic.
+        assert_eq!(bal, ShardPlan::balanced(&costs, 4));
+    }
+
+    #[test]
+    fn factor_cost_is_quadratic_in_dims() {
+        assert_eq!(factor_cost(&[(4, 8), (2, 2)]), vec![8 * 8 + 4 * 4, 2 * 2 + 2 * 2]);
+    }
+}

@@ -1,7 +1,7 @@
 //! Experiment drivers — one per paper table/figure (DESIGN.md §5 maps each
 //! experiment id to the bench target that regenerates it).
 //!
-//! The drivers glue [`JobConfig`] → dataset → model → [`train_image_model`]
+//! The drivers glue [`JobConfig`] → dataset → model → [`crate::train::train_dist`]
 //! and provide the comparison loops (method × precision grids) that the
 //! `rust/benches/fig*` targets print.
 
@@ -12,7 +12,7 @@ use crate::model::transformer::{Embed, Transformer, TransformerCfg};
 use crate::model::{Mlp, Model};
 use crate::optim::{Hyper, Method};
 use crate::proptest::Pcg;
-use crate::train::{train_image_model, RunResult, Schedule, TrainCfg};
+use crate::train::{train_dist, DistCfg, RunResult, Schedule, TrainCfg};
 
 /// Instantiate the dataset a job asks for.
 pub fn build_dataset(cfg: &JobConfig, rng: &mut Pcg) -> Dataset {
@@ -52,7 +52,9 @@ pub fn build_model(cfg: &JobConfig, shape: ImgShape, classes: usize, rng: &mut P
     }
 }
 
-/// Run one image-classification job end to end.
+/// Run one image-classification job end to end. Jobs with `ranks > 1`
+/// run under the deterministic data-parallel driver
+/// ([`crate::train::train_dist`]); `ranks = 1` is the serial path.
 pub fn run_job(cfg: &JobConfig) -> RunResult {
     let mut rng = Pcg::with_stream(cfg.seed, 0xda7a);
     let ds = build_dataset(cfg, &mut rng);
@@ -67,7 +69,8 @@ pub fn run_job(cfg: &JobConfig) -> RunResult {
         eval_every: 0,
         stop_on_divergence: true,
     };
-    train_image_model(model.as_mut(), &ds, &tc)
+    let dc = DistCfg { ranks: cfg.ranks, strategy: cfg.dist_strategy };
+    train_dist(model.as_mut(), &ds, &tc, &dc)
 }
 
 /// A (method, precision) comparison grid over a shared dataset/model —
@@ -212,6 +215,25 @@ mod tests {
             batch_size: 32,
             seed: 3,
             label: "test".into(),
+            ranks: 1,
+            dist_strategy: crate::dist::DistStrategy::Replicated,
+        }
+    }
+
+    #[test]
+    fn run_job_with_ranks_matches_serial_bitwise() {
+        // The exp-level rank-invariance check (full suite in
+        // rust/tests/dist.rs): same job, ranks 1 vs 4, identical curves.
+        let mut serial = tiny_job(Method::Singd { structure: Structure::Diagonal });
+        serial.epochs = 2;
+        let mut dist4 = serial.clone();
+        dist4.ranks = 4;
+        let a = run_job(&serial);
+        let b = run_job(&dist4);
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (ra, rb) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "step {}", ra.step);
+            assert_eq!(ra.test_err.to_bits(), rb.test_err.to_bits(), "step {}", ra.step);
         }
     }
 

@@ -20,6 +20,9 @@
 //!   whose backward pass also emits per-layer Kronecker factors `(U, G)`.
 //! - [`data`] — synthetic dataset generators (class-prototype images,
 //!   stochastic-block-model graphs, token streams) and a PCG RNG.
+//! - [`dist`] — deterministic in-process collectives (fixed reduction
+//!   trees, bitwise rank-invariance) and ZeRO-style sharding of the
+//!   Kronecker factors across ranks.
 //! - [`runtime`] — PJRT client wrapper that loads AOT-compiled HLO-text
 //!   artifacts (produced by `python/compile/aot.py`) and executes them.
 //! - [`train`] — training-loop driver, LR schedules, metrics, checkpoints,
@@ -35,6 +38,7 @@ pub mod bench;
 pub mod cli;
 pub mod config;
 pub mod data;
+pub mod dist;
 pub mod exp;
 pub mod linalg;
 pub mod model;

@@ -329,7 +329,7 @@ impl Model for Cnn {
     fn forward_backward(&self, batch: &Batch) -> BackwardResult {
         let m = batch.x.rows();
         let (conv_caches, shapes_seen, head_xb, logits) = self.forward_cached(&batch.x);
-        let (loss, correct, dz) = softmax_xent(&logits, &batch.y);
+        let (loss_sum, correct, dz) = super::softmax_xent_sum(&logits, &batch.y);
         let n = self.params.len();
         let mut grads = vec![Mat::zeros(1, 1); n];
         let mut stats: Vec<Option<KronStats>> = (0..n).map(|_| None).collect();
@@ -377,10 +377,12 @@ impl Model for Cnn {
         }
 
         BackwardResult {
-            loss,
+            loss: (loss_sum / batch.y.len().max(1) as f64) as f32,
             correct,
             grads,
             stats: stats.into_iter().map(|s| s.unwrap()).collect(),
+            loss_sum,
+            loss_rows: batch.y.len(),
         }
     }
 

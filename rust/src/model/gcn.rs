@@ -54,7 +54,8 @@ impl Gcn {
         let mm = mask.len();
         let logits = Mat::from_fn(mm, z2.cols(), |r, c| z2.at(mask[r], c));
         let labels: Vec<usize> = mask.iter().map(|&i| g.y[i]).collect();
-        let (loss, correct, dmasked) = softmax_xent(&logits, &labels);
+        let (loss_sum, correct, dmasked) = super::softmax_xent_sum(&logits, &labels);
+        let loss = (loss_sum / mm.max(1) as f64) as f32;
         let mut dz2 = Mat::zeros(z2.rows(), z2.cols());
         for (r, &node) in mask.iter().enumerate() {
             for c in 0..z2.cols() {
@@ -66,7 +67,14 @@ impl Gcn {
         let dh1 = matmul(&g.adj, &dagg1);
         let dz1 = relu_bwd(&z1, &dh1);
         let (g1, _dx, st1) = Linear::backward(&self.params[0], &xb1, &dz1);
-        BackwardResult { loss, correct, grads: vec![g1, g2], stats: vec![st1, st2] }
+        BackwardResult {
+            loss,
+            correct,
+            grads: vec![g1, g2],
+            stats: vec![st1, st2],
+            loss_sum,
+            loss_rows: mm,
+        }
     }
 
     pub fn evaluate_graph(&self, g: &Graph, mask: &[usize]) -> (f32, usize) {

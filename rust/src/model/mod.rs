@@ -43,10 +43,22 @@ pub struct BackwardResult {
     pub grads: Vec<Mat>,
     /// Per-trainable-layer Kronecker statistics.
     pub stats: Vec<KronStats>,
+    /// Tree-ordered f64 sum of per-row losses (`loss` = `loss_sum /
+    /// loss_rows`). The distributed driver combines shard partials with
+    /// the same halving tree, making the global loss bitwise independent
+    /// of the rank count (see [`crate::dist::collectives::tree_sum_f64`]).
+    pub loss_sum: f64,
+    /// Number of loss rows behind `loss_sum` (batch rows, or tokens for
+    /// a causal LM, or masked nodes for the GCN).
+    pub loss_rows: usize,
 }
 
 /// Common model interface consumed by [`crate::train::Trainer`].
-pub trait Model {
+///
+/// `Sync` so the distributed training driver can run its SPMD rank
+/// bodies against one shared model instance (`forward_backward` takes
+/// `&self`; parameters are only mutated between steps).
+pub trait Model: Sync {
     /// `(d_out, d_in)` of every trainable layer, in `params` order.
     fn shapes(&self) -> Vec<(usize, usize)>;
 
@@ -70,15 +82,25 @@ pub trait Model {
 /// Softmax cross-entropy over logits `z (m×C)`; returns
 /// `(mean loss, #correct, dL/dz of the mean loss)`.
 pub fn softmax_xent(z: &Mat, y: &[usize]) -> (f32, usize, Mat) {
+    let (loss_sum, correct, dz) = softmax_xent_sum(z, y);
+    ((loss_sum / z.rows().max(1) as f64) as f32, correct, dz)
+}
+
+/// [`softmax_xent`] exposing the raw f64 per-row loss *sum* (the mean is
+/// `loss_sum / m`). The sum is accumulated with the fixed halving tree of
+/// [`crate::dist::collectives::tree_sum_f64`], so contiguous batch shards
+/// produce exact subtrees of the full-batch reduction — the property the
+/// distributed driver's bitwise rank-invariance rests on.
+pub fn softmax_xent_sum(z: &Mat, y: &[usize]) -> (f64, usize, Mat) {
     let m = z.rows();
     assert_eq!(y.len(), m);
     let probs = z.softmax_rows();
-    let mut loss = 0.0f64;
+    let mut row_losses = Vec::with_capacity(m);
     let mut correct = 0usize;
     let mut dz = probs.clone();
     for r in 0..m {
         let p = probs.at(r, y[r]).max(1e-12);
-        loss -= (p as f64).ln();
+        row_losses.push(-(p as f64).ln());
         *dz.at_mut(r, y[r]) -= 1.0;
         let argmax = (0..z.cols()).max_by(|&a, &b| {
             probs.at(r, a).partial_cmp(&probs.at(r, b)).unwrap_or(std::cmp::Ordering::Equal)
@@ -88,7 +110,7 @@ pub fn softmax_xent(z: &Mat, y: &[usize]) -> (f32, usize, Mat) {
         }
     }
     let dz = dz.scale(1.0 / m as f32);
-    ((loss / m as f64) as f32, correct, dz)
+    (crate::dist::collectives::tree_sum_f64(&row_losses), correct, dz)
 }
 
 /// Append a constant-1 column (homogeneous bias coordinate).
@@ -187,7 +209,8 @@ impl Model for Mlp {
 
     fn forward_backward(&self, batch: &Batch) -> BackwardResult {
         let (pre, cached, logits) = self.forward_cached(&batch.x);
-        let (loss, correct, mut dz) = softmax_xent(&logits, &batch.y);
+        let (loss_sum, correct, mut dz) = softmax_xent_sum(&logits, &batch.y);
+        let loss_rows = batch.y.len();
         let n = self.params.len();
         let mut grads = vec![Mat::zeros(1, 1); n];
         let mut stats: Vec<Option<KronStats>> = (0..n).map(|_| None).collect();
@@ -200,10 +223,12 @@ impl Model for Mlp {
             }
         }
         BackwardResult {
-            loss,
+            loss: (loss_sum / loss_rows.max(1) as f64) as f32,
             correct,
             grads,
             stats: stats.into_iter().map(|s| s.unwrap()).collect(),
+            loss_sum,
+            loss_rows,
         }
     }
 

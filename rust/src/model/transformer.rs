@@ -326,7 +326,8 @@ impl Model for Transformer {
 
         let labels: Vec<usize> =
             if self.cfg.causal_lm { self.lm_labels(batch) } else { batch.y.clone() };
-        let (loss, correct, dlogits) = softmax_xent(&cache.logits, &labels);
+        let (loss_sum, correct, dlogits) = super::softmax_xent_sum(&cache.logits, &labels);
+        let loss_rows = labels.len();
 
         let n = self.params.len();
         let mut grads = vec![Mat::zeros(1, 1); n];
@@ -427,10 +428,12 @@ impl Model for Transformer {
         stats[self.embed_idx] = Some(ste);
 
         BackwardResult {
-            loss,
+            loss: (loss_sum / loss_rows.max(1) as f64) as f32,
             correct,
             grads,
             stats: stats.into_iter().map(|s| s.unwrap()).collect(),
+            loss_sum,
+            loss_rows,
         }
     }
 

@@ -112,6 +112,88 @@ mod tests {
     }
 
     #[test]
+    fn growth_interval_boundary_is_exact() {
+        // Growth happens on the Nth consecutive clean step, not before,
+        // and the streak counter resets so the next growth needs another
+        // full interval.
+        let mut s = GradScaler { growth_interval: 3, ..GradScaler::new(8.0) };
+        for i in 0..2 {
+            let mut g = [Mat::ones(1, 1)];
+            assert!(s.unscale_and_update(&mut g));
+            assert_eq!(s.scale(), 8.0, "no growth after {} clean steps", i + 1);
+        }
+        let mut g = [Mat::ones(1, 1)];
+        assert!(s.unscale_and_update(&mut g));
+        assert_eq!(s.scale(), 16.0, "growth exactly at the interval");
+        let mut g = [Mat::ones(1, 1)];
+        assert!(s.unscale_and_update(&mut g));
+        assert_eq!(s.scale(), 16.0, "streak must reset after growth");
+    }
+
+    #[test]
+    fn overflow_resets_the_clean_streak() {
+        let mut s = GradScaler { growth_interval: 3, ..GradScaler::new(8.0) };
+        for _ in 0..2 {
+            let mut g = [Mat::ones(1, 1)];
+            assert!(s.unscale_and_update(&mut g));
+        }
+        let mut bad = [Mat::from_vec(1, 1, vec![f32::NAN])];
+        assert!(!s.unscale_and_update(&mut bad));
+        assert_eq!(s.scale(), 4.0);
+        // Two clean steps after the overflow: still no growth (streak
+        // restarted at zero, interval is 3).
+        for _ in 0..2 {
+            let mut g = [Mat::ones(1, 1)];
+            assert!(s.unscale_and_update(&mut g));
+        }
+        assert_eq!(s.scale(), 4.0);
+        let mut g = [Mat::ones(1, 1)];
+        assert!(s.unscale_and_update(&mut g));
+        assert_eq!(s.scale(), 8.0);
+    }
+
+    #[test]
+    fn backoff_floors_at_one() {
+        let mut s = GradScaler::new(1.5);
+        for _ in 0..4 {
+            let mut bad = [Mat::from_vec(1, 1, vec![f32::INFINITY])];
+            assert!(!s.unscale_and_update(&mut bad));
+        }
+        assert_eq!(s.scale(), 1.0, "scale must never fall below 1");
+        assert_eq!(s.skipped, 4);
+    }
+
+    #[test]
+    fn skipped_step_leaves_optimizer_state_untouched() {
+        // The AMP contract: when unscale reports overflow the caller
+        // skips `opt.step`, so neither parameters nor momenta move and
+        // the next clean step proceeds from unchanged state.
+        use crate::optim::{Hyper, KronStats, Method, Optimizer};
+        let hp = Hyper { lr: 0.1, momentum: 0.9, weight_decay: 0.0, ..Hyper::default() };
+        let mut opt = Method::Sgd.build(&[(2, 3)], &hp);
+        let mut params = [Mat::ones(2, 3)];
+        let stats = [KronStats { a: Mat::zeros(1, 3), g: Mat::zeros(1, 2) }];
+        // One clean step to give the momentum buffer a nonzero value.
+        let mut scaler = GradScaler::new(1024.0);
+        let mut grads = [scaler.scale_mat(&Mat::ones(2, 3))];
+        assert!(scaler.unscale_and_update(&mut grads));
+        opt.step(0, &mut params, &grads, &stats);
+        let state_before = opt.state_vectors();
+        let params_before = params[0].clone();
+        // Overflowed step: unscale fails → the step is skipped.
+        let mut bad = [Mat::from_vec(2, 3, vec![f32::INFINITY; 6])];
+        assert!(!scaler.unscale_and_update(&mut bad));
+        assert_eq!(scaler.skipped, 1);
+        assert_eq!(opt.state_vectors(), state_before, "momentum must be untouched");
+        assert_eq!(params[0], params_before, "params must be untouched");
+        // Training resumes cleanly at the backed-off scale.
+        let mut grads = [scaler.scale_mat(&Mat::ones(2, 3))];
+        assert!(scaler.unscale_and_update(&mut grads));
+        opt.step(1, &mut params, &grads, &stats);
+        assert_ne!(opt.state_vectors(), state_before);
+    }
+
+    #[test]
     fn rescues_fp16_underflow() {
         // A gradient of 1e-7 lands deep in fp16's subnormal range (spacing
         // 2⁻²⁴ ≈ 6e-8: only ~1 significant bit); scaled by 65536 it moves

@@ -76,6 +76,27 @@ impl Optimizer for AdamW {
     fn diverged(&self) -> bool {
         self.diverged
     }
+
+    fn state_vectors(&self) -> Vec<Vec<f32>> {
+        // Two blobs per layer: second moment, then first moment.
+        self.second
+            .iter()
+            .zip(&self.first)
+            .flat_map(|(s, f)| [s.data().to_vec(), f.data().to_vec()])
+            .collect()
+    }
+
+    fn load_state_vectors(&mut self, blobs: &[Vec<f32>]) -> Result<(), String> {
+        let want: Vec<usize> =
+            self.second.iter().zip(&self.first).flat_map(|(s, f)| [s.len(), f.len()]).collect();
+        super::check_blob_lens("adamw", blobs, &want)?;
+        let mut it = blobs.iter();
+        for (s, f) in self.second.iter_mut().zip(self.first.iter_mut()) {
+            s.data_mut().copy_from_slice(it.next().unwrap());
+            f.data_mut().copy_from_slice(it.next().unwrap());
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

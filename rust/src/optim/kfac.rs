@@ -17,6 +17,7 @@
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 use super::{Hyper, KronStats, Optimizer};
+use crate::dist::DistCtx;
 use crate::linalg::{lu_inverse, spd_inverse};
 use crate::numerics::Policy;
 use crate::tensor::{pool, Mat};
@@ -62,7 +63,10 @@ fn damped_inverse(
 
 pub struct Kfac {
     hp: Hyper,
-    layers: Vec<LayerState>,
+    /// Per-layer factor state; `None` for layers this rank does not own
+    /// under [`DistCtx`] (factor-sharded).
+    layers: Vec<Option<LayerState>>,
+    dist: DistCtx,
     diverged: bool,
     /// Count of preconditioner refreshes where Cholesky failed (stability
     /// telemetry for the Fig. 1 experiment).
@@ -71,17 +75,26 @@ pub struct Kfac {
 
 impl Kfac {
     pub fn new(shapes: &[(usize, usize)], hp: &Hyper) -> Self {
+        Self::with_dist(shapes, hp, DistCtx::single())
+    }
+
+    /// One rank of a distributed topology: under the factor-sharded
+    /// strategy only owned layers allocate `S_K`/`S_C`/inverses.
+    pub fn with_dist(shapes: &[(usize, usize)], hp: &Hyper, dist: DistCtx) -> Self {
         let layers = shapes
             .iter()
-            .map(|&(o, i)| LayerState {
-                s_k: Mat::eye(i),
-                s_c: Mat::eye(o),
-                s_k_inv: Mat::eye(i),
-                s_c_inv: Mat::eye(o),
-                m_mu: Mat::zeros(o, i),
+            .enumerate()
+            .map(|(l, &(o, i))| {
+                dist.owns_layer(l).then(|| LayerState {
+                    s_k: Mat::eye(i),
+                    s_c: Mat::eye(o),
+                    s_k_inv: Mat::eye(i),
+                    s_c_inv: Mat::eye(o),
+                    m_mu: Mat::zeros(o, i),
+                })
             })
             .collect();
-        Kfac { hp: hp.clone(), layers, diverged: false, chol_failures: 0 }
+        Kfac { hp: hp.clone(), layers, dist, diverged: false, chol_failures: 0 }
     }
 }
 
@@ -107,6 +120,7 @@ impl Optimizer for Kfac {
                 .layers
                 .iter_mut()
                 .zip(stats.iter())
+                .filter_map(|(st, stat)| st.as_mut().map(|st| (st, stat)))
                 .map(|(st, stat)| {
                     let cf = &chol_failures;
                     let dv = &diverged;
@@ -133,7 +147,8 @@ impl Optimizer for Kfac {
             .layers
             .iter_mut()
             .zip(params.iter_mut().zip(grads.iter()))
-            .map(|(st, (p, g))| {
+            .filter_map(|(st, (p, g))| st.as_mut().map(|st| (st, p, g)))
+            .map(|(st, p, g)| {
                 let dv = &diverged;
                 Box::new(move || {
                     // m_μ ← α₂ m_μ + S_C⁻¹ ∇W S_K⁻¹ + γ W
@@ -161,9 +176,11 @@ impl Optimizer for Kfac {
     }
 
     fn state_bytes(&self) -> usize {
-        // S_K, S_C, their inverses, and the momentum buffer.
+        // S_K, S_C, their inverses, and the momentum buffer — owned
+        // layers only (per-rank bytes under factor sharding).
         self.layers
             .iter()
+            .flatten()
             .map(|st| {
                 self.hp.policy.stored_bytes(st.s_k.rows(), st.s_k.cols()) * 2
                     + self.hp.policy.stored_bytes(st.s_c.rows(), st.s_c.cols()) * 2
@@ -182,6 +199,44 @@ impl Optimizer for Kfac {
         } else {
             String::new()
         }
+    }
+
+    fn owned_layers(&self) -> Option<Vec<usize>> {
+        self.dist.owned_layers(self.layers.len())
+    }
+
+    fn state_vectors(&self) -> Vec<Vec<f32>> {
+        // Five blobs per owned layer: S_K, S_C, S_K⁻¹, S_C⁻¹, m_μ.
+        let mut out = Vec::new();
+        for st in self.layers.iter().flatten() {
+            out.push(st.s_k.data().to_vec());
+            out.push(st.s_c.data().to_vec());
+            out.push(st.s_k_inv.data().to_vec());
+            out.push(st.s_c_inv.data().to_vec());
+            out.push(st.m_mu.data().to_vec());
+        }
+        out
+    }
+
+    fn load_state_vectors(&mut self, blobs: &[Vec<f32>]) -> Result<(), String> {
+        let want: Vec<usize> = self
+            .layers
+            .iter()
+            .flatten()
+            .flat_map(|st| {
+                [st.s_k.len(), st.s_c.len(), st.s_k_inv.len(), st.s_c_inv.len(), st.m_mu.len()]
+            })
+            .collect();
+        super::check_blob_lens("kfac", blobs, &want)?;
+        let mut it = blobs.iter();
+        for st in self.layers.iter_mut().flatten() {
+            st.s_k.data_mut().copy_from_slice(it.next().unwrap());
+            st.s_c.data_mut().copy_from_slice(it.next().unwrap());
+            st.s_k_inv.data_mut().copy_from_slice(it.next().unwrap());
+            st.s_c_inv.data_mut().copy_from_slice(it.next().unwrap());
+            st.m_mu.data_mut().copy_from_slice(it.next().unwrap());
+        }
+        Ok(())
     }
 }
 
@@ -242,6 +297,29 @@ mod tests {
         );
         let got_dir = w0.sub(&params[0]); // lr = 1
         crate::proptest::assert_mat_close(&got_dir, &want_dir, 1e-3, "kfac direction");
+    }
+
+    #[test]
+    fn kfac_state_vectors_roundtrip_bitwise() {
+        let mut rng = Pcg::new(61);
+        let shapes = [(5usize, 4usize), (3, 5)];
+        let hp = Hyper { t_update: 1, ..Hyper::default() };
+        let mut opt = Kfac::new(&shapes, &hp);
+        let mut params = vec![rng.normal_mat(5, 4, 0.2), rng.normal_mat(3, 5, 0.2)];
+        for t in 0..2 {
+            let grads = vec![rng.normal_mat(5, 4, 0.1), rng.normal_mat(3, 5, 0.1)];
+            let stats = vec![
+                KronStats { a: rng.normal_mat(12, 4, 1.0), g: rng.normal_mat(12, 5, 1.0) },
+                KronStats { a: rng.normal_mat(12, 5, 1.0), g: rng.normal_mat(12, 3, 1.0) },
+            ];
+            opt.step(t, &mut params, &grads, &stats);
+        }
+        let snap = opt.state_vectors();
+        assert_eq!(snap.len(), 2 * 5);
+        let mut fresh = Kfac::new(&shapes, &hp);
+        fresh.load_state_vectors(&snap).unwrap();
+        assert_eq!(fresh.state_vectors(), snap);
+        assert!(fresh.load_state_vectors(&snap[..4]).is_err());
     }
 
     #[test]

@@ -113,6 +113,21 @@ impl Default for Hyper {
     }
 }
 
+/// Validate that checkpoint blobs match the expected lengths exactly
+/// (count and per-blob size) before any state is overwritten, so a
+/// failed [`Optimizer::load_state_vectors`] never leaves partial state.
+pub(crate) fn check_blob_lens(name: &str, blobs: &[Vec<f32>], want: &[usize]) -> Result<(), String> {
+    if blobs.len() != want.len() {
+        return Err(format!("{name}: {} state blobs, expected {}", blobs.len(), want.len()));
+    }
+    for (i, (b, &w)) in blobs.iter().zip(want).enumerate() {
+        if b.len() != w {
+            return Err(format!("{name}: blob {i} has {} floats, expected {w}", b.len()));
+        }
+    }
+    Ok(())
+}
+
 /// Per-layer update trust region: scale factor keeping the RMS of
 /// `lr · update` at or below `clip` (1.0 when `clip == 0`).
 pub(crate) fn update_clip_factor(lr: f32, update: &Mat, clip: f32) -> f32 {
@@ -128,7 +143,10 @@ pub(crate) fn update_clip_factor(lr: f32, update: &Mat, clip: f32) -> f32 {
 }
 
 /// Common optimizer interface.
-pub trait Optimizer {
+///
+/// `Send` so per-rank optimizer replicas can live behind the distributed
+/// training driver's rank threads ([`crate::train::train_dist`]).
+pub trait Optimizer: Send {
     /// Human-readable method name (used in logs / CSV headers).
     fn name(&self) -> String;
 
@@ -152,6 +170,33 @@ pub trait Optimizer {
     /// Free-form stability telemetry (e.g. KFAC's Cholesky-failure count).
     fn telemetry(&self) -> String {
         String::new()
+    }
+
+    /// Layers whose state this instance owns under its
+    /// [`crate::dist::DistStrategy`]; `None` means "all layers"
+    /// (replicated / non-distributed). The distributed driver uses this
+    /// to decide whether a post-step parameter exchange is needed.
+    fn owned_layers(&self) -> Option<Vec<usize>> {
+        None
+    }
+
+    /// Flat snapshot of the optimizer state (momenta, Kronecker/
+    /// structured factors) for checkpoint v2. The blob order is an
+    /// implementation contract of each optimizer; `state_vectors` and
+    /// [`Optimizer::load_state_vectors`] must round-trip bitwise.
+    fn state_vectors(&self) -> Vec<Vec<f32>> {
+        Vec::new()
+    }
+
+    /// Restore state captured by [`Optimizer::state_vectors`] from an
+    /// identically-configured optimizer. Errors on any count/length
+    /// mismatch without modifying state.
+    fn load_state_vectors(&mut self, blobs: &[Vec<f32>]) -> Result<(), String> {
+        if blobs.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("{}: optimizer has no loadable state", self.name()))
+        }
     }
 }
 
@@ -213,12 +258,26 @@ impl Method {
 
     /// Instantiate for a set of layer shapes `(d_out, d_in)`.
     pub fn build(&self, shapes: &[(usize, usize)], hp: &Hyper) -> Box<dyn Optimizer> {
+        self.build_dist(shapes, hp, crate::dist::DistCtx::single())
+    }
+
+    /// Instantiate one rank's optimizer under a distributed topology.
+    /// The second-order methods (KFAC and the SINGD family) honour
+    /// [`crate::dist::DistStrategy::FactorSharded`] by allocating only
+    /// their owned layers' factor state; the first-order baselines have
+    /// no factors to shard and always run replicated.
+    pub fn build_dist(
+        &self,
+        shapes: &[(usize, usize)],
+        hp: &Hyper,
+        dist: crate::dist::DistCtx,
+    ) -> Box<dyn Optimizer> {
         match self {
             Method::Sgd => Box::new(Sgd::new(shapes, hp)),
             Method::AdamW => Box::new(AdamW::new(shapes, hp)),
-            Method::Kfac => Box::new(Kfac::new(shapes, hp)),
-            Method::Ikfac { structure } => Box::new(Singd::ikfac(shapes, hp, *structure)),
-            Method::Singd { structure } => Box::new(Singd::new(shapes, hp, *structure)),
+            Method::Kfac => Box::new(Kfac::with_dist(shapes, hp, dist)),
+            Method::Ikfac { structure } => Box::new(Singd::ikfac_dist(shapes, hp, *structure, dist)),
+            Method::Singd { structure } => Box::new(Singd::with_dist(shapes, hp, *structure, dist)),
         }
     }
 }

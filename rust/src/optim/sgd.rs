@@ -51,6 +51,19 @@ impl Optimizer for Sgd {
     fn diverged(&self) -> bool {
         self.diverged
     }
+
+    fn state_vectors(&self) -> Vec<Vec<f32>> {
+        self.momentum.iter().map(|m| m.data().to_vec()).collect()
+    }
+
+    fn load_state_vectors(&mut self, blobs: &[Vec<f32>]) -> Result<(), String> {
+        let want: Vec<usize> = self.momentum.iter().map(|m| m.len()).collect();
+        super::check_blob_lens("sgd", blobs, &want)?;
+        for (m, b) in self.momentum.iter_mut().zip(blobs) {
+            m.data_mut().copy_from_slice(b);
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -23,6 +23,7 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 
 use super::{Hyper, KronStats, Optimizer};
+use crate::dist::DistCtx;
 use crate::structured::{SMat, Structure};
 use crate::tensor::{pool, Mat};
 
@@ -42,7 +43,11 @@ pub struct Singd {
     adaptive: bool,
     /// Riemannian momentum α₁ (forced to 0 for IKFAC).
     alpha1: f32,
-    layers: Vec<LayerState>,
+    /// Per-layer preconditioner state; `None` for layers this rank does
+    /// not own under [`DistCtx`] (factor-sharded) — unowned layers cost
+    /// no factor memory and are skipped by `step`.
+    layers: Vec<Option<LayerState>>,
+    dist: DistCtx,
     diverged: bool,
     label: String,
 }
@@ -50,19 +55,39 @@ pub struct Singd {
 impl Singd {
     /// Full SINGD (INGD when `structure == Dense`).
     pub fn new(shapes: &[(usize, usize)], hp: &Hyper, structure: Structure) -> Self {
-        Self::build(shapes, hp, structure, true, hp.riem_momentum, None)
+        Self::with_dist(shapes, hp, structure, DistCtx::single())
+    }
+
+    /// Full SINGD as one rank of a distributed topology.
+    pub fn with_dist(
+        shapes: &[(usize, usize)],
+        hp: &Hyper,
+        structure: Structure,
+        dist: DistCtx,
+    ) -> Self {
+        Self::build(shapes, hp, structure, true, hp.riem_momentum, None, dist)
     }
 
     /// IKFAC: non-adaptive, zero Riemannian momentum (Fig. 3, right).
     /// A structured variant of IKFAC (SIKFAC) is obtained with a
     /// non-dense structure.
     pub fn ikfac(shapes: &[(usize, usize)], hp: &Hyper, structure: Structure) -> Self {
+        Self::ikfac_dist(shapes, hp, structure, DistCtx::single())
+    }
+
+    /// IKFAC as one rank of a distributed topology.
+    pub fn ikfac_dist(
+        shapes: &[(usize, usize)],
+        hp: &Hyper,
+        structure: Structure,
+        dist: DistCtx,
+    ) -> Self {
         let label = if structure == Structure::Dense {
             "ikfac".to_string()
         } else {
             format!("ikfac:{}", structure.name())
         };
-        Self::build(shapes, hp, structure, false, 0.0, Some(label))
+        Self::build(shapes, hp, structure, false, 0.0, Some(label), dist)
     }
 
     fn build(
@@ -72,15 +97,19 @@ impl Singd {
         adaptive: bool,
         alpha1: f32,
         label: Option<String>,
+        dist: DistCtx,
     ) -> Self {
         let layers = shapes
             .iter()
-            .map(|&(o, i)| LayerState {
-                k: SMat::identity(structure, i),
-                c: SMat::identity(structure, o),
-                m_k: SMat::zeros(structure, i),
-                m_c: SMat::zeros(structure, o),
-                m_mu: Mat::zeros(o, i),
+            .enumerate()
+            .map(|(l, &(o, i))| {
+                dist.owns_layer(l).then(|| LayerState {
+                    k: SMat::identity(structure, i),
+                    c: SMat::identity(structure, o),
+                    m_k: SMat::zeros(structure, i),
+                    m_c: SMat::zeros(structure, o),
+                    m_mu: Mat::zeros(o, i),
+                })
             })
             .collect();
         let label = label.unwrap_or_else(|| {
@@ -94,16 +123,17 @@ impl Singd {
                 format!("singd:{}", structure.name())
             }
         });
-        Singd { hp: hp.clone(), structure, adaptive, alpha1, layers, diverged: false, label }
+        Singd { hp: hp.clone(), structure, adaptive, alpha1, layers, dist, diverged: false, label }
     }
 
-    /// Access a layer's `K` factor (tests / telemetry).
+    /// Access a layer's `K` factor (tests / telemetry). Panics for a
+    /// layer this rank does not own.
     pub fn k_factor(&self, layer: usize) -> &SMat {
-        &self.layers[layer].k
+        &self.layers[layer].as_ref().expect("k_factor: layer not owned by this rank").k
     }
 
     pub fn c_factor(&self, layer: usize) -> &SMat {
-        &self.layers[layer].c
+        &self.layers[layer].as_ref().expect("c_factor: layer not owned by this rank").c
     }
 
     /// Refresh the preconditioner of one layer (Fig. 4 step 1).
@@ -196,7 +226,8 @@ impl Optimizer for Singd {
             .iter_mut()
             .zip(params.iter_mut())
             .zip(grads.iter().zip(stats.iter()))
-            .map(|((st, p), (g, stat))| {
+            .filter_map(|((st, p), (g, stat))| st.as_mut().map(|st| (st, p, g, stat)))
+            .map(|(st, p, g, stat)| {
                 let dv = &diverged;
                 Box::new(move || {
                     if refresh {
@@ -231,9 +262,13 @@ impl Optimizer for Singd {
     }
 
     fn state_bytes(&self) -> usize {
+        // Per-rank bytes: only owned layers allocate state, so the
+        // factor-sharded strategy reports ~1/world of the replicated
+        // footprint (Table 3 × the dist_scaling bench).
         let p = &self.hp.policy;
         self.layers
             .iter()
+            .flatten()
             .map(|st| {
                 let mut b = st.k.bytes(p) + st.c.bytes(p) + p.stored_bytes(st.m_mu.rows(), st.m_mu.cols());
                 // Riemannian momentum buffers only exist when α₁ ≠ 0
@@ -248,6 +283,45 @@ impl Optimizer for Singd {
 
     fn diverged(&self) -> bool {
         self.diverged
+    }
+
+    fn owned_layers(&self) -> Option<Vec<usize>> {
+        self.dist.owned_layers(self.layers.len())
+    }
+
+    fn state_vectors(&self) -> Vec<Vec<f32>> {
+        // Five blobs per owned layer: K, C, m_K, m_C (structured
+        // coefficient order), then m_μ (row-major).
+        let mut out = Vec::new();
+        for st in self.layers.iter().flatten() {
+            out.push(st.k.coeffs());
+            out.push(st.c.coeffs());
+            out.push(st.m_k.coeffs());
+            out.push(st.m_c.coeffs());
+            out.push(st.m_mu.data().to_vec());
+        }
+        out
+    }
+
+    fn load_state_vectors(&mut self, blobs: &[Vec<f32>]) -> Result<(), String> {
+        let want: Vec<usize> = self
+            .layers
+            .iter()
+            .flatten()
+            .flat_map(|st| {
+                [st.k.nnz(), st.c.nnz(), st.m_k.nnz(), st.m_c.nnz(), st.m_mu.len()]
+            })
+            .collect();
+        super::check_blob_lens(&self.label, blobs, &want)?;
+        let mut it = blobs.iter();
+        for st in self.layers.iter_mut().flatten() {
+            st.k.set_coeffs(it.next().unwrap());
+            st.c.set_coeffs(it.next().unwrap());
+            st.m_k.set_coeffs(it.next().unwrap());
+            st.m_c.set_coeffs(it.next().unwrap());
+            st.m_mu.data_mut().copy_from_slice(it.next().unwrap());
+        }
+        Ok(())
     }
 }
 
@@ -396,6 +470,47 @@ mod tests {
         let w_scaled_ik = run(false, sqrt_a, 1.0 / sqrt_a);
         let diff = w_base_ik.sub(&w_scaled_ik).fro_norm() / (1e-9 + w_base_ik.fro_norm());
         assert!(diff > 1e-2, "IKFAC unexpectedly invariant (diff {diff})");
+    }
+
+    #[test]
+    fn factor_sharded_rank_allocates_only_owned_layers() {
+        use crate::dist::{DistCtx, DistStrategy};
+        let hp = Hyper::default();
+        let shapes: Vec<(usize, usize)> = vec![(32, 32); 8];
+        let full = Singd::new(&shapes, &hp, Structure::Dense);
+        let ctx = DistCtx::new(DistStrategy::FactorSharded, 0, 4);
+        let rank0 = Singd::with_dist(&shapes, &hp, Structure::Dense, ctx);
+        assert_eq!(rank0.owned_layers(), Some(vec![0, 4]));
+        // 2 of 8 equal layers → exactly 1/4 of the replicated state.
+        assert_eq!(rank0.state_bytes() * 4, full.state_bytes());
+        assert_eq!(rank0.state_vectors().len(), 2 * 5);
+    }
+
+    #[test]
+    fn state_vectors_roundtrip_bitwise() {
+        let hp = Hyper { t_update: 1, ..Hyper::default() };
+        let mut rng = Pcg::new(51);
+        let shapes = [(6usize, 5usize), (4, 6)];
+        let mut opt = Singd::new(&shapes, &hp, Structure::BlockDiag { k: 2 });
+        let mut params = vec![rng.normal_mat(6, 5, 0.2), rng.normal_mat(4, 6, 0.2)];
+        for t in 0..3 {
+            let grads = vec![rng.normal_mat(6, 5, 0.1), rng.normal_mat(4, 6, 0.1)];
+            let stats = vec![
+                KronStats { a: rng.normal_mat(16, 5, 1.0), g: rng.normal_mat(16, 6, 1.0) },
+                KronStats { a: rng.normal_mat(16, 6, 1.0), g: rng.normal_mat(16, 4, 1.0) },
+            ];
+            opt.step(t, &mut params, &grads, &stats);
+        }
+        let snap = opt.state_vectors();
+        let mut fresh = Singd::new(&shapes, &hp, Structure::BlockDiag { k: 2 });
+        fresh.load_state_vectors(&snap).unwrap();
+        assert_eq!(fresh.state_vectors(), snap);
+        // Mismatched blob lengths are rejected without touching state.
+        let mut bad = snap.clone();
+        bad[0].pop();
+        assert!(fresh.load_state_vectors(&bad).is_err());
+        assert!(fresh.load_state_vectors(&snap[1..]).is_err());
+        assert_eq!(fresh.state_vectors(), snap);
     }
 
     #[test]

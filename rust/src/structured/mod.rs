@@ -399,6 +399,22 @@ impl SMat {
         self.for_each_mut(|x| *x = p.q(*x));
     }
 
+    /// Stored coefficients in the deterministic `for_each` iteration
+    /// order — the flat wire format used by checkpoint v2.
+    pub fn coeffs(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.nnz());
+        self.for_each(|x| v.push(x));
+        v
+    }
+
+    /// Overwrite the stored coefficients from [`SMat::coeffs`] order.
+    /// Panics on a length mismatch (the caller validates blob sizes).
+    pub fn set_coeffs(&mut self, coeffs: &[f32]) {
+        let mut it = coeffs.iter();
+        self.for_each_mut(|x| *x = *it.next().expect("set_coeffs: too few coefficients"));
+        assert!(it.next().is_none(), "set_coeffs: too many coefficients");
+    }
+
     /// Max absolute stored entry (∞-norm proxy used for the log-space
     /// trust region in [`crate::optim::Singd`]).
     pub fn max_abs(&self) -> f32 {
@@ -650,6 +666,19 @@ mod tests {
             k.for_each(|x| {
                 assert_eq!(x, crate::numerics::Dtype::Bf16.round(x), "{s:?} not bf16-representable");
             });
+        }
+    }
+
+    #[test]
+    fn coeffs_roundtrip_every_structure() {
+        let mut rng = Pcg::new(42);
+        for &s in ALL {
+            let k = random_smat(s, 11, &mut rng);
+            let mut z = SMat::zeros(s, 11);
+            let c = k.coeffs();
+            assert_eq!(c.len(), k.nnz(), "{s:?}");
+            z.set_coeffs(&c);
+            assert_eq!(z.to_dense().data(), k.to_dense().data(), "{s:?}");
         }
     }
 

@@ -145,6 +145,8 @@ mod tests {
             batch_size: 30,
             seed: 1,
             label: "sweep-test".into(),
+            ranks: 1,
+            dist_strategy: crate::dist::DistStrategy::Replicated,
         };
         let trials = random_search(&base, &Space::default(), 3, 42);
         assert_eq!(trials.len(), 3);

@@ -84,6 +84,15 @@ pub fn num_threads() -> usize {
     })
 }
 
+/// True when the calling thread is a pool worker. Long-blocking work
+/// (e.g. the rank bodies of [`crate::dist::run_ranks`], which wait on each
+/// other at collective rendezvous points) must NOT be enqueued from — or
+/// sized beyond — the pool in ways that could leave a queued job behind a
+/// blocked worker; callers use this to fall back to dedicated threads.
+pub fn is_worker_thread() -> bool {
+    IS_WORKER.with(|c| c.get())
+}
+
 /// Effective sharding factor for the current thread: the [`with_threads`]
 /// override when one is active, [`num_threads`] otherwise.
 pub fn current_threads() -> usize {

@@ -1,15 +1,26 @@
-//! Minimal binary checkpoint format for model parameters.
+//! Minimal binary checkpoint format for model parameters and optimizer
+//! state.
 //!
 //! Layout (little-endian):
-//! `magic "SNGD" | u32 version | u32 n_layers | per layer: u32 rows, u32
-//! cols, rows·cols f32 | u64 fletcher-style checksum`.
+//!
+//! - v1: `magic "SNGD" | u32 version=1 | u32 n_layers | per layer: u32
+//!   rows, u32 cols, rows·cols f32 | u64 FNV-1a checksum`.
+//! - v2 (current): the v1 parameter section, followed by `u32 n_blobs |
+//!   per blob: u32 len, len f32` — the optimizer's
+//!   [`crate::optim::Optimizer::state_vectors`] snapshot (momenta,
+//!   Kronecker/structured factors in coefficient order) — before the
+//!   checksum. `n_blobs = 0` is a pure-parameter checkpoint.
+//!
+//! Readers accept both versions (v1 loads with empty optimizer state);
+//! the writer always emits v2. The checksum covers everything before it,
+//! so truncation and bit corruption are both rejected.
 
 use crate::tensor::Mat;
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"SNGD";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 fn checksum(data: &[u8]) -> u64 {
     // FNV-1a 64.
@@ -21,8 +32,18 @@ fn checksum(data: &[u8]) -> u64 {
     h
 }
 
-/// Save parameter matrices to `path`.
+/// Save parameter matrices to `path` (no optimizer state).
 pub fn save_checkpoint(path: &Path, params: &[Mat]) -> std::io::Result<()> {
+    save_checkpoint_full(path, params, &[])
+}
+
+/// Save parameters plus an optimizer-state snapshot
+/// ([`crate::optim::Optimizer::state_vectors`]) to `path`.
+pub fn save_checkpoint_full(
+    path: &Path,
+    params: &[Mat],
+    state: &[Vec<f32>],
+) -> std::io::Result<()> {
     let mut body = Vec::new();
     body.extend_from_slice(MAGIC);
     body.extend_from_slice(&VERSION.to_le_bytes());
@@ -34,6 +55,13 @@ pub fn save_checkpoint(path: &Path, params: &[Mat]) -> std::io::Result<()> {
             body.extend_from_slice(&v.to_le_bytes());
         }
     }
+    body.extend_from_slice(&(state.len() as u32).to_le_bytes());
+    for blob in state {
+        body.extend_from_slice(&(blob.len() as u32).to_le_bytes());
+        for &v in blob {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+    }
     let sum = checksum(&body);
     body.extend_from_slice(&sum.to_le_bytes());
     if let Some(dir) = path.parent() {
@@ -42,8 +70,15 @@ pub fn save_checkpoint(path: &Path, params: &[Mat]) -> std::io::Result<()> {
     std::fs::File::create(path)?.write_all(&body)
 }
 
-/// Load parameter matrices from `path` (validates magic + checksum).
+/// Load parameter matrices from `path` (v1 or v2; any optimizer state is
+/// validated but dropped).
 pub fn load_checkpoint(path: &Path) -> std::io::Result<Vec<Mat>> {
+    load_checkpoint_full(path).map(|(params, _)| params)
+}
+
+/// Load parameters and optimizer-state blobs from `path` (validates
+/// magic, version and checksum; v1 files yield empty state).
+pub fn load_checkpoint_full(path: &Path) -> std::io::Result<(Vec<Mat>, Vec<Vec<f32>>)> {
     let mut buf = Vec::new();
     std::fs::File::open(path)?.read_to_end(&mut buf)?;
     let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
@@ -59,12 +94,12 @@ pub fn load_checkpoint(path: &Path) -> std::io::Result<Vec<Mat>> {
         return Err(err("bad magic"));
     }
     let ver = u32::from_le_bytes(body[4..8].try_into().unwrap());
-    if ver != VERSION {
+    if ver == 0 || ver > VERSION {
         return Err(err("unsupported version"));
     }
     let n = u32::from_le_bytes(body[8..12].try_into().unwrap()) as usize;
     let mut off = 12usize;
-    let mut out = Vec::with_capacity(n);
+    let mut params = Vec::with_capacity(n);
     for _ in 0..n {
         if off + 8 > body.len() {
             return Err(err("truncated layer header"));
@@ -81,15 +116,65 @@ pub fn load_checkpoint(path: &Path) -> std::io::Result<Vec<Mat>> {
             data.push(f32::from_le_bytes(body[off + 4 * i..off + 4 * i + 4].try_into().unwrap()));
         }
         off += need;
-        out.push(Mat::from_vec(rows, cols, data));
+        params.push(Mat::from_vec(rows, cols, data));
     }
-    Ok(out)
+    let mut state = Vec::new();
+    if ver >= 2 {
+        if off + 4 > body.len() {
+            return Err(err("truncated state header"));
+        }
+        let n_blobs = u32::from_le_bytes(body[off..off + 4].try_into().unwrap()) as usize;
+        off += 4;
+        for _ in 0..n_blobs {
+            if off + 4 > body.len() {
+                return Err(err("truncated blob header"));
+            }
+            let len = u32::from_le_bytes(body[off..off + 4].try_into().unwrap()) as usize;
+            off += 4;
+            let need = len * 4;
+            if off + need > body.len() {
+                return Err(err("truncated blob data"));
+            }
+            let mut blob = Vec::with_capacity(len);
+            for i in 0..len {
+                blob.push(f32::from_le_bytes(
+                    body[off + 4 * i..off + 4 * i + 4].try_into().unwrap(),
+                ));
+            }
+            off += need;
+            state.push(blob);
+        }
+    }
+    if off != body.len() {
+        return Err(err("trailing bytes after checkpoint payload"));
+    }
+    Ok((params, state))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::{Hyper, KronStats, Method, Optimizer};
     use crate::proptest::Pcg;
+    use crate::structured::Structure;
+
+    /// Write a v1-format file (no state section) for back-compat tests.
+    fn write_v1(path: &Path, params: &[Mat]) {
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC);
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&(params.len() as u32).to_le_bytes());
+        for p in params {
+            body.extend_from_slice(&(p.rows() as u32).to_le_bytes());
+            body.extend_from_slice(&(p.cols() as u32).to_le_bytes());
+            for &v in p.data() {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let sum = checksum(&body);
+        body.extend_from_slice(&sum.to_le_bytes());
+        std::fs::write(path, &body).unwrap();
+    }
 
     #[test]
     fn roundtrip() {
@@ -106,14 +191,89 @@ mod tests {
     }
 
     #[test]
+    fn v2_roundtrips_optimizer_state_bitwise() {
+        // Train a SINGD optimizer a few steps so momenta and structured
+        // factors are all non-trivial, then save → load → bitwise-equal.
+        let mut rng = Pcg::new(83);
+        let shapes = [(6usize, 5usize), (4, 6)];
+        let method = Method::Singd { structure: Structure::BlockDiag { k: 2 } };
+        let hp = Hyper { t_update: 1, ..Hyper::default() };
+        let mut opt = method.build(&shapes, &hp);
+        let mut params = vec![rng.normal_mat(6, 5, 0.2), rng.normal_mat(4, 6, 0.2)];
+        for t in 0..3 {
+            let grads = vec![rng.normal_mat(6, 5, 0.1), rng.normal_mat(4, 6, 0.1)];
+            let stats = vec![
+                KronStats { a: rng.normal_mat(16, 5, 1.0), g: rng.normal_mat(16, 6, 1.0) },
+                KronStats { a: rng.normal_mat(16, 6, 1.0), g: rng.normal_mat(16, 4, 1.0) },
+            ];
+            opt.step(t, &mut params, &grads, &stats);
+        }
+        let state = opt.state_vectors();
+        assert!(!state.is_empty());
+        let path = std::env::temp_dir().join("singd_test_ckpt_v2.bin");
+        save_checkpoint_full(&path, &params, &state).unwrap();
+        let (lp, ls) = load_checkpoint_full(&path).unwrap();
+        assert_eq!(lp, params);
+        assert_eq!(ls, state, "state blobs must round-trip bitwise");
+        // Restoring into a freshly-built optimizer reproduces the state.
+        let mut fresh = method.build(&shapes, &hp);
+        fresh.load_state_vectors(&ls).unwrap();
+        assert_eq!(fresh.state_vectors(), state);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_files_still_load_with_empty_state() {
+        let mut rng = Pcg::new(84);
+        let params = vec![rng.normal_mat(4, 3, 1.0)];
+        let path = std::env::temp_dir().join("singd_test_ckpt_v1.bin");
+        write_v1(&path, &params);
+        let (lp, ls) = load_checkpoint_full(&path).unwrap();
+        assert_eq!(lp, params);
+        assert!(ls.is_empty());
+        assert_eq!(load_checkpoint(&path).unwrap(), params);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn corruption_detected() {
         let mut rng = Pcg::new(82);
         let params = vec![rng.normal_mat(4, 4, 1.0)];
         let path = std::env::temp_dir().join("singd_test_ckpt_bad.bin");
-        save_checkpoint(&path, &params).unwrap();
+        save_checkpoint_full(&path, &params, &[vec![1.0, 2.0]]).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         bytes[20] ^= 0xff;
         std::fs::write(&path, &bytes).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_checkpoint_rejected() {
+        let mut rng = Pcg::new(85);
+        let params = vec![rng.normal_mat(4, 4, 1.0)];
+        let path = std::env::temp_dir().join("singd_test_ckpt_trunc.bin");
+        save_checkpoint_full(&path, &params, &[vec![1.0; 8]]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Chop mid-file: the checksum (over a shorter body) cannot match.
+        std::fs::write(&path, &bytes[..bytes.len() - 13]).unwrap();
+        assert!(load_checkpoint_full(&path).is_err());
+        // Shorter than any valid header.
+        std::fs::write(&path, &bytes[..10]).unwrap();
+        assert!(load_checkpoint_full(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn future_version_rejected() {
+        let path = std::env::temp_dir().join("singd_test_ckpt_future.bin");
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC);
+        body.extend_from_slice(&99u32.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes());
+        let sum = checksum(&body);
+        body.extend_from_slice(&sum.to_le_bytes());
+        std::fs::write(&path, &body).unwrap();
         assert!(load_checkpoint(&path).is_err());
         std::fs::remove_file(&path).ok();
     }

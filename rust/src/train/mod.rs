@@ -1,15 +1,21 @@
 //! Training-loop driver: LR schedules, metric logging, checkpoints,
-//! divergence detection, and optimizer-state memory accounting.
+//! divergence detection, optimizer-state memory accounting, and the
+//! deterministic data-parallel driver ([`train_dist`]).
 
 mod checkpoint;
 
-pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use checkpoint::{
+    load_checkpoint, load_checkpoint_full, save_checkpoint, save_checkpoint_full,
+};
 
 use crate::data::Dataset;
-use crate::model::Model;
-use crate::optim::{Hyper, Method};
+use crate::dist::{self, bucket, collectives, Communicator, DistCtx, DistStrategy, LocalComm};
+use crate::model::{BackwardResult, Batch, Model};
+use crate::optim::{Hyper, KronStats, Method, Optimizer};
 use crate::proptest::Pcg;
+use crate::tensor::Mat;
 use std::io::Write;
+use std::sync::Mutex;
 
 /// Learning-rate schedule (paper §4: cosine for transformers, step decay
 /// for VGG/ConvMixer, constant for the GNN).
@@ -30,7 +36,12 @@ impl Schedule {
                 let p = (t as f32 / (*total).max(1) as f32).min(1.0);
                 0.5 * (1.0 + (std::f32::consts::PI * p).cos())
             }
-            Schedule::Step { every, gamma } => gamma.powi((t / every.max(&1).clone()) as i32),
+            Schedule::Step { every, gamma } => {
+                // Guard `every == 0` (a config typo) as "decay every step"
+                // rather than dividing by zero.
+                let every = (*every).max(1);
+                gamma.powi((t / every) as i32)
+            }
         }
     }
 
@@ -119,14 +130,19 @@ impl Default for TrainCfg {
     }
 }
 
-/// Train `model` on `dataset`; returns loss/error curves + telemetry.
-pub fn train_image_model<M: Model + ?Sized>(
+/// The epoch/eval/divergence bookkeeping shared by the serial and
+/// distributed drivers: batch sampling, LR scheduling, loss accounting,
+/// eval cadence, and the divergence stop. `step_fn` performs one
+/// optimization step on a batch and returns `(batch loss, diverged)`.
+/// Keeping this loop single-sourced is part of the rank-invariance
+/// contract — both drivers see identical batches, schedules and rows.
+fn train_loop<M: Model + ?Sized>(
     model: &mut M,
     dataset: &Dataset,
     cfg: &TrainCfg,
-) -> RunResult {
+    mut step_fn: impl FnMut(&mut M, &Batch, usize, f32) -> (f32, bool),
+) -> (Vec<LogRow>, f32, usize, bool, f64) {
     let mut rng = Pcg::with_stream(cfg.seed, 0x7261696e);
-    let mut opt = cfg.method.build(&model.shapes(), &cfg.hyper);
     let base_lr = cfg.hyper.lr;
     let start = std::time::Instant::now();
 
@@ -139,13 +155,12 @@ pub fn train_image_model<M: Model + ?Sized>(
         let mut epoch_loss = 0.0f64;
         let mut nb = 0usize;
         for b in &batches {
-            let res = model.forward_backward(b);
-            epoch_loss += res.loss as f64;
+            let lr = base_lr * cfg.schedule.factor(step);
+            let (loss, div) = step_fn(model, b, step, lr);
+            epoch_loss += loss as f64;
             nb += 1;
-            opt.set_lr(base_lr * cfg.schedule.factor(step));
-            opt.step(step, model.params_mut(), &res.grads, &res.stats);
             step += 1;
-            diverged = diverged || !res.loss.is_finite() || opt.diverged();
+            diverged = diverged || !loss.is_finite() || div;
             if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
                 let row = eval_row(model, dataset, step, epoch, (epoch_loss / nb as f64) as f32, base_lr * cfg.schedule.factor(step), diverged);
                 best = best.min(row.test_err);
@@ -170,8 +185,24 @@ pub fn train_image_model<M: Model + ?Sized>(
             rows.push(row);
         }
     }
+    (rows, best, step, diverged, start.elapsed().as_secs_f64())
+}
+
+/// Train `model` on `dataset`; returns loss/error curves + telemetry.
+pub fn train_image_model<M: Model + ?Sized>(
+    model: &mut M,
+    dataset: &Dataset,
+    cfg: &TrainCfg,
+) -> RunResult {
+    let mut opt = cfg.method.build(&model.shapes(), &cfg.hyper);
+    let (rows, best, steps_run, diverged, wall_secs) =
+        train_loop(model, dataset, cfg, |model, b, step, lr| {
+            let res = model.forward_backward(b);
+            opt.set_lr(lr);
+            opt.step(step, model.params_mut(), &res.grads, &res.stats);
+            (res.loss, opt.diverged())
+        });
     let final_err = rows.last().map(|r| r.test_err).unwrap_or(1.0);
-    let telemetry = opt.telemetry();
     RunResult {
         final_test_err: final_err,
         best_test_err: best.min(final_err),
@@ -180,11 +211,233 @@ pub fn train_image_model<M: Model + ?Sized>(
             let opt2 = cfg.method.build(&model.shapes(), &cfg.hyper);
             opt2.state_bytes()
         },
-        wall_secs: start.elapsed().as_secs_f64(),
-        steps_run: step,
+        wall_secs,
+        steps_run,
+        telemetry: opt.telemetry(),
+        rows,
+    }
+}
+
+/// Distributed topology of a training run (the `[dist]` config section /
+/// `--ranks` CLI knob / `SINGD_RANKS` env default).
+#[derive(Clone, Debug)]
+pub struct DistCfg {
+    /// World size; `1` falls back to the serial driver.
+    pub ranks: usize,
+    /// Optimizer state layout across ranks.
+    pub strategy: DistStrategy,
+}
+
+impl Default for DistCfg {
+    fn default() -> Self {
+        DistCfg { ranks: dist::default_ranks(), strategy: DistStrategy::Replicated }
+    }
+}
+
+/// Deterministic data-parallel training driver.
+///
+/// Each global batch is split into `ranks` contiguous row shards; every
+/// rank runs forward/backward on its shard only, then the ranks exchange
+/// *exact* data — per-row Kronecker statistics (all-gather by row
+/// concatenation, no floating-point reduction) and f64 loss partials
+/// (fixed halving tree) — so every rank reconstructs the identical
+/// full-batch gradient `∇W = (Gᵀ A)/m` with the standard kernels. Under
+/// [`DistStrategy::Replicated`] every rank then steps an identical
+/// optimizer replica; under [`DistStrategy::FactorSharded`] each rank
+/// steps only its owned layers (per-rank factor memory ≈ 1/ranks) and
+/// the preconditioned parameter updates are completed with a zero-padded
+/// bucketed all-reduce (exact: one nonzero contributor per element).
+///
+/// # Determinism contract
+///
+/// `ranks = 1` delegates to [`train_image_model`] and is bitwise
+/// identical to it by construction. `ranks = R` is bitwise identical to
+/// `ranks = 1` — same per-step losses, same final parameters — when:
+///
+/// - `R` is a power of two and divides the batch size (the per-shard
+///   `1/m` loss scaling then differs from the full-batch one by an exact
+///   exponent shift that commutes with the row-local backward pass), and
+/// - every layer's per-batch statistics row count is a power of two
+///   (gradient reconstruction commutes with the `1/m` scale), which
+///   holds for power-of-two batch sizes and weight-sharing expansion
+///   factors — all the shapes the experiment configs use.
+///
+/// The batch size must be divisible by `ranks` (asserted; the CLI
+/// rejects bad combinations up front). Rank counts that divide the
+/// batch without being powers of two still train correctly (the
+/// reconstruction is the same gradient up to rounding); they just lose
+/// the bitwise guarantee. `rust/tests/dist.rs` asserts the contract end
+/// to end.
+pub fn train_dist<M: Model + ?Sized>(
+    model: &mut M,
+    dataset: &Dataset,
+    cfg: &TrainCfg,
+    dcfg: &DistCfg,
+) -> RunResult {
+    if dcfg.ranks <= 1 {
+        return train_image_model(model, dataset, cfg);
+    }
+    let world = dcfg.ranks;
+    assert_eq!(
+        cfg.batch_size % world,
+        0,
+        "train_dist: batch_size {} must be divisible by ranks {world}",
+        cfg.batch_size
+    );
+    let shapes = model.shapes();
+    // One optimizer replica per rank, alive across the whole run.
+    let opts: Vec<Mutex<Box<dyn Optimizer>>> = (0..world)
+        .map(|r| {
+            let ctx = DistCtx::new(dcfg.strategy, r, world);
+            Mutex::new(cfg.method.build_dist(&shapes, &cfg.hyper, ctx))
+        })
+        .collect();
+    let (rows, best, steps_run, diverged, wall_secs) =
+        train_loop(model, dataset, cfg, |model, b, step, lr| {
+            let model_ref = &*model;
+            let outs =
+                dist::run_ranks(world, |comm| rank_step(&comm, model_ref, b, &opts, step, lr));
+            let any_div = outs.iter().any(|o| o.diverged);
+            let first = outs.into_iter().next().unwrap();
+            // All ranks hold bitwise-identical post-step parameters
+            // (redundantly for replicated, via the exact zero-padded
+            // all-reduce for factor-sharded); rank 0's become canonical.
+            *model.params_mut() = first.params;
+            (first.loss, any_div)
+        });
+    let final_err = rows.last().map(|r| r.test_err).unwrap_or(1.0);
+    // Telemetry lives on whichever rank owns the layer that produced it,
+    // so aggregate across ranks: identical reports (replicated) collapse
+    // to one, distinct reports (factor-sharded) are labelled per rank.
+    let telemetry = {
+        let per_rank: Vec<String> = opts
+            .iter()
+            .map(|o| o.lock().unwrap_or_else(|e| e.into_inner()).telemetry())
+            .collect();
+        let nonempty: Vec<(usize, String)> =
+            per_rank.into_iter().enumerate().filter(|(_, t)| !t.is_empty()).collect();
+        if nonempty.windows(2).all(|w| w[0].1 == w[1].1) {
+            nonempty.first().map(|(_, t)| t.clone()).unwrap_or_default()
+        } else {
+            let parts: Vec<String> =
+                nonempty.iter().map(|(r, t)| format!("rank{r}:{t}")).collect();
+            parts.join(" ")
+        }
+    };
+    RunResult {
+        final_test_err: final_err,
+        best_test_err: best.min(final_err),
+        diverged,
+        // Per-rank state bytes (rank 0): under factor sharding this is
+        // the ~1/ranks footprint the dist_scaling bench reports.
+        optimizer_bytes: {
+            let ctx = DistCtx::new(dcfg.strategy, 0, world);
+            cfg.method.build_dist(&shapes, &cfg.hyper, ctx).state_bytes()
+        },
+        wall_secs,
+        steps_run,
         telemetry,
         rows,
     }
+}
+
+/// One rank's work for one global batch: shard forward/backward, exact
+/// gather, full-batch gradient reconstruction, optimizer step, and (for
+/// factor sharding) the parameter-update exchange.
+struct RankStepOut {
+    params: Vec<Mat>,
+    loss: f32,
+    diverged: bool,
+}
+
+fn rank_step<M: Model + ?Sized>(
+    comm: &LocalComm,
+    model: &M,
+    batch: &Batch,
+    opts: &[Mutex<Box<dyn Optimizer>>],
+    step: usize,
+    lr: f32,
+) -> RankStepOut {
+    let world = comm.world_size();
+    let rank = comm.rank();
+    let m_total = batch.y.len();
+    let q = m_total / world;
+    let shard = Batch {
+        x: Mat::from_fn(q, batch.x.cols(), |r, c| batch.x.at(rank * q + r, c)),
+        y: batch.y[rank * q..(rank + 1) * q].to_vec(),
+    };
+    let res: BackwardResult = model.forward_backward(&shard);
+
+    // Global loss: tree-combine the shard f64 partials. Contiguous equal
+    // shards are complete subtrees of the full-batch halving tree, so
+    // this reproduces the serial loss bit for bit.
+    let scal = comm.exchange_f64(vec![res.loss_sum, res.loss_rows as f64]);
+    let sums: Vec<f64> = scal.iter().map(|v| v[0]).collect();
+    let total_rows: f64 = scal.iter().map(|v| v[1]).sum();
+    let loss = (collectives::tree_sum_f64(&sums) / total_rows.max(1.0)) as f32;
+
+    // Gather full-batch statistics rows (exact concatenation in rank
+    // order; `g = dy·m` is scale-free across shard sizes) and recompute
+    // each layer's gradient from them with the standard kernel. Every
+    // rank must *contribute* all layers' shard rows (their owners need
+    // them), but only reconstructs the layers its own optimizer will
+    // actually step — under factor sharding that skips (R−1)/R of the
+    // gradient contractions, the heaviest op in the step.
+    let n = res.stats.len();
+    let owned_mask: Option<Vec<bool>> =
+        opts[rank].lock().unwrap_or_else(|e| e.into_inner()).owned_layers().map(|owned| {
+            let mut mask = vec![false; n];
+            for l in owned {
+                mask[l] = true;
+            }
+            mask
+        });
+    let mut payload = Vec::with_capacity(2 * n);
+    for st in &res.stats {
+        payload.push(st.a.clone());
+        payload.push(st.g.clone());
+    }
+    let parts = comm.exchange_mats(payload);
+    let mut grads = Vec::with_capacity(n);
+    let mut stats = Vec::with_capacity(n);
+    for l in 0..n {
+        if let Some(mask) = &owned_mask {
+            if !mask[l] {
+                // Unowned layer: the optimizer skips it and its update
+                // arrives via the exchange below — placeholders only.
+                grads.push(Mat::zeros(0, 0));
+                stats.push(KronStats { a: Mat::zeros(0, 0), g: Mat::zeros(0, 0) });
+                continue;
+            }
+        }
+        let a = collectives::concat_rows(&parts, 2 * l);
+        let g = collectives::concat_rows(&parts, 2 * l + 1);
+        let m_l = a.rows().max(1) as f32;
+        grads.push(crate::tensor::matmul_at_b(&g, &a).scale(1.0 / m_l));
+        stats.push(KronStats { a, g });
+    }
+
+    // Step this rank's optimizer replica on a scratch parameter copy.
+    let mut params: Vec<Mat> = model.params().clone();
+    let diverged = {
+        let mut opt = opts[rank].lock().unwrap_or_else(|e| e.into_inner());
+        opt.set_lr(lr);
+        opt.step(step, &mut params, &grads, &stats);
+        opt.diverged()
+    };
+    if let Some(mask) = &owned_mask {
+        // Factor-sharded: this rank only updated its owned layers. Zero
+        // the rest and all-reduce — every element has exactly one
+        // nonzero contributor (its owner), so the tree-ordered sum is
+        // exact and all ranks converge on identical parameters.
+        for (p, &own) in params.iter_mut().zip(mask) {
+            if !own {
+                p.map_inplace(|_| 0.0);
+            }
+        }
+        bucket::all_reduce_sum_bucketed(comm, &mut params, bucket::DEFAULT_BUCKET_ELEMS);
+    }
+    RankStepOut { params, loss, diverged }
 }
 
 fn eval_row<M: Model + ?Sized>(
@@ -237,11 +490,63 @@ mod tests {
     }
 
     #[test]
+    fn constant_schedule_is_flat() {
+        for t in [0usize, 1, 10, 1_000_000] {
+            assert_eq!(Schedule::Constant.factor(t), 1.0);
+        }
+    }
+
+    #[test]
+    fn cosine_schedule_clamps_past_total_and_guards_zero() {
+        let c = Schedule::Cosine { total: 10 };
+        assert!(c.factor(10_000) < 1e-6, "past-total must stay at the floor");
+        // total = 0 must not divide by zero; t ≥ total ⇒ factor 0.
+        let z = Schedule::Cosine { total: 0 };
+        assert!(z.factor(5).is_finite());
+        assert!(z.factor(5) < 1e-6);
+    }
+
+    #[test]
+    fn step_schedule_boundaries_and_zero_every_guard() {
+        let s = Schedule::Step { every: 10, gamma: 0.5 };
+        assert_eq!(s.factor(0), 1.0);
+        assert_eq!(s.factor(19), 0.5);
+        assert_eq!(s.factor(20), 0.25);
+        // every = 0 is guarded as "decay every step", never a panic.
+        let z = Schedule::Step { every: 0, gamma: 0.5 };
+        assert_eq!(z.factor(0), 1.0);
+        assert_eq!(z.factor(1), 0.5);
+        assert_eq!(z.factor(3), 0.125);
+        assert!(z.factor(100).is_finite());
+    }
+
+    #[test]
     fn schedule_parse() {
         assert!(matches!(Schedule::parse("constant"), Some(Schedule::Constant)));
         assert!(matches!(Schedule::parse("cosine:500"), Some(Schedule::Cosine { total: 500 })));
         assert!(matches!(Schedule::parse("step:40,0.1"), Some(Schedule::Step { .. })));
         assert!(Schedule::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn schedule_parse_all_three_with_values() {
+        assert!(matches!(Schedule::parse("CONSTANT"), Some(Schedule::Constant)));
+        let Some(Schedule::Cosine { total }) = Schedule::parse("cosine:123") else {
+            panic!("cosine parse")
+        };
+        assert_eq!(total, 123);
+        let Some(Schedule::Step { every, gamma }) = Schedule::parse("step:7,0.25") else {
+            panic!("step parse")
+        };
+        assert_eq!(every, 7);
+        assert_eq!(gamma, 0.25);
+        // A parsed every = 0 is accepted and guarded at use.
+        let Some(z) = Schedule::parse("step:0,0.5") else { panic!("step:0 parse") };
+        assert_eq!(z.factor(2), 0.25);
+        // Malformed inputs.
+        assert!(Schedule::parse("cosine:").is_none());
+        assert!(Schedule::parse("step:10").is_none());
+        assert!(Schedule::parse("step:x,0.5").is_none());
     }
 
     #[test]

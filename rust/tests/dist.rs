@@ -1,0 +1,246 @@
+//! Rank-invariance determinism suite for the distributed subsystem.
+//!
+//! Extends the serial/pooled bitwise-parity contract of
+//! `rust/tests/parallel.rs` across world sizes: for power-of-two rank
+//! counts dividing the batch size, the data-parallel driver must produce
+//! *bitwise* identical losses and parameters to the serial path — under
+//! both the replicated and factor-sharded strategies, on both rank
+//! execution paths (pool workers and dedicated scoped threads).
+
+use singd::data;
+use singd::dist::{self, bucket, collectives, DistCtx, DistStrategy};
+use singd::model::cnn::ImgShape;
+use singd::model::{Mlp, Model};
+use singd::optim::{Hyper, Method, Optimizer};
+use singd::proptest::Pcg;
+use singd::structured::Structure;
+use singd::tensor::{pool, Mat};
+use singd::train::{train_dist, train_image_model, DistCfg, RunResult, TrainCfg};
+
+/// A 4-layer MLP job whose shapes satisfy the bitwise contract: batch 32
+/// (power of two, divisible by 4 ranks), per-layer stats rows = 32.
+fn fixture() -> (singd::data::Dataset, TrainCfg) {
+    let mut rng = Pcg::new(2024);
+    let ds = data::prototype_images(&mut rng, ImgShape { c: 1, h: 8, w: 8 }, 4, 128, 32, 2.0);
+    let cfg = TrainCfg {
+        method: Method::Singd { structure: Structure::Dense },
+        hyper: Hyper { lr: 0.05, t_update: 1, riem_momentum: 0.6, ..Hyper::default() },
+        epochs: 2,
+        batch_size: 32,
+        seed: 9,
+        ..TrainCfg::default()
+    };
+    (ds, cfg)
+}
+
+fn fresh_model() -> Mlp {
+    let mut rng = Pcg::new(77);
+    Mlp::new(&mut rng, &[64, 48, 32, 16, 4])
+}
+
+/// Train from the fixed init; return the result and final parameters.
+fn run(cfg: &TrainCfg, ds: &singd::data::Dataset, dc: Option<&DistCfg>) -> (RunResult, Vec<Mat>) {
+    let mut model = fresh_model();
+    let res = match dc {
+        None => train_image_model(&mut model, ds, cfg),
+        Some(dc) => train_dist(&mut model, ds, cfg, dc),
+    };
+    let params = model.params().clone();
+    (res, params)
+}
+
+fn assert_bitwise_equal(a: &(RunResult, Vec<Mat>), b: &(RunResult, Vec<Mat>), ctx: &str) {
+    assert_eq!(a.0.rows.len(), b.0.rows.len(), "{ctx}: row count");
+    for (ra, rb) in a.0.rows.iter().zip(&b.0.rows) {
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{ctx}: train_loss at step {}",
+            ra.step
+        );
+        assert_eq!(
+            ra.test_loss.to_bits(),
+            rb.test_loss.to_bits(),
+            "{ctx}: test_loss at step {}",
+            ra.step
+        );
+        assert_eq!(ra.test_err.to_bits(), rb.test_err.to_bits(), "{ctx}: test_err");
+    }
+    assert_eq!(a.1.len(), b.1.len(), "{ctx}: layer count");
+    for (l, (pa, pb)) in a.1.iter().zip(&b.1).enumerate() {
+        assert!(pa.data() == pb.data(), "{ctx}: params of layer {l} diverged");
+    }
+}
+
+#[test]
+fn ranks1_is_bitwise_identical_to_serial() {
+    let (ds, cfg) = fixture();
+    let serial = run(&cfg, &ds, None);
+    let d1 = run(&cfg, &ds, Some(&DistCfg { ranks: 1, strategy: DistStrategy::Replicated }));
+    assert_bitwise_equal(&serial, &d1, "serial vs ranks=1");
+}
+
+#[test]
+fn ranks4_replicated_matches_ranks1_bitwise() {
+    let (ds, cfg) = fixture();
+    let d1 = run(&cfg, &ds, Some(&DistCfg { ranks: 1, strategy: DistStrategy::Replicated }));
+    let d4 = run(&cfg, &ds, Some(&DistCfg { ranks: 4, strategy: DistStrategy::Replicated }));
+    assert_bitwise_equal(&d1, &d4, "ranks=1 vs ranks=4 replicated");
+}
+
+#[test]
+fn ranks4_factor_sharded_matches_ranks1_bitwise() {
+    let (ds, cfg) = fixture();
+    let d1 = run(&cfg, &ds, Some(&DistCfg { ranks: 1, strategy: DistStrategy::Replicated }));
+    let d4 = run(&cfg, &ds, Some(&DistCfg { ranks: 4, strategy: DistStrategy::FactorSharded }));
+    assert_bitwise_equal(&d1, &d4, "ranks=1 vs ranks=4 factor-sharded");
+}
+
+#[test]
+fn ranks2_matches_ranks1_bitwise() {
+    let (ds, cfg) = fixture();
+    let d1 = run(&cfg, &ds, Some(&DistCfg { ranks: 1, strategy: DistStrategy::Replicated }));
+    for strategy in [DistStrategy::Replicated, DistStrategy::FactorSharded] {
+        let d2 = run(&cfg, &ds, Some(&DistCfg { ranks: 2, strategy }));
+        assert_bitwise_equal(&d1, &d2, &format!("ranks=2 {}", strategy.name()));
+    }
+}
+
+#[test]
+fn singd_ranks_env_default_drives_dist_cfg_and_keeps_the_contract() {
+    // ci.sh runs this suite under SINGD_RANKS ∈ {1, 4}: the env value
+    // must flow into DistCfg::default() and the resulting world size
+    // must uphold the bitwise contract against an explicit ranks=1 run.
+    let dc = DistCfg::default();
+    assert_eq!(dc.ranks, dist::default_ranks());
+    let (ds, mut cfg) = fixture();
+    cfg.epochs = 1;
+    if dc.ranks.is_power_of_two() && cfg.batch_size % dc.ranks == 0 {
+        let d1 = run(&cfg, &ds, Some(&DistCfg { ranks: 1, strategy: DistStrategy::Replicated }));
+        let denv = run(&cfg, &ds, Some(&dc));
+        assert_bitwise_equal(&d1, &denv, &format!("SINGD_RANKS={} default", dc.ranks));
+    }
+}
+
+#[test]
+fn kfac_rank_invariance() {
+    let (ds, mut cfg) = fixture();
+    cfg.method = Method::Kfac;
+    cfg.hyper = Hyper { lr: 0.01, damping: 0.1, t_update: 1, update_clip: 0.05, ..Hyper::default() };
+    cfg.epochs = 1;
+    let d1 = run(&cfg, &ds, Some(&DistCfg { ranks: 1, strategy: DistStrategy::Replicated }));
+    for strategy in [DistStrategy::Replicated, DistStrategy::FactorSharded] {
+        let d4 = run(&cfg, &ds, Some(&DistCfg { ranks: 4, strategy }));
+        assert_bitwise_equal(&d1, &d4, &format!("kfac ranks=4 {}", strategy.name()));
+    }
+}
+
+#[test]
+fn rank_execution_path_does_not_change_results() {
+    // with_threads(4): ranks run on pool workers (when the pool is large
+    // enough); with_threads(1): ranks run on dedicated scoped threads.
+    // The collectives order reductions by rank index, so both paths must
+    // be bitwise identical.
+    let (ds, mut cfg) = fixture();
+    cfg.epochs = 1;
+    let dc = DistCfg { ranks: 4, strategy: DistStrategy::FactorSharded };
+    let pooled = pool::with_threads(4, || run(&cfg, &ds, Some(&dc)));
+    let threaded = pool::with_threads(1, || run(&cfg, &ds, Some(&dc)));
+    assert_bitwise_equal(&pooled, &threaded, "pool vs scoped-thread ranks");
+}
+
+#[test]
+fn factor_sharded_per_rank_state_shrinks_with_world_size() {
+    let hp = Hyper::default();
+    let method = Method::Singd { structure: Structure::Dense };
+    // Heterogeneous layers: ranks partition the replicated state exactly.
+    let mixed: Vec<(usize, usize)> = vec![(48, 64), (64, 96), (32, 48), (16, 32)];
+    let full_mixed = method.build(&mixed, &hp).state_bytes();
+    for world in [2usize, 4] {
+        let per_rank: Vec<usize> = (0..world)
+            .map(|r| {
+                method
+                    .build_dist(&mixed, &hp, DistCtx::new(DistStrategy::FactorSharded, r, world))
+                    .state_bytes()
+            })
+            .collect();
+        assert_eq!(per_rank.iter().sum::<usize>(), full_mixed, "world {world}");
+    }
+    // Equal layers: every rank holds exactly 1/world of the state.
+    let equal: Vec<(usize, usize)> = vec![(32, 32); 8];
+    let full_equal = method.build(&equal, &hp).state_bytes();
+    for world in [2usize, 4, 8] {
+        for r in 0..world {
+            let b = method
+                .build_dist(&equal, &hp, DistCtx::new(DistStrategy::FactorSharded, r, world))
+                .state_bytes();
+            assert_eq!(b * world, full_equal, "world {world} rank {r}");
+        }
+    }
+}
+
+#[test]
+fn replicated_strategy_keeps_full_state_on_every_rank() {
+    let shapes: Vec<(usize, usize)> = vec![(16, 16); 4];
+    let hp = Hyper::default();
+    let method = Method::Kfac;
+    let full = method.build(&shapes, &hp).state_bytes();
+    let r0 = method
+        .build_dist(&shapes, &hp, DistCtx::new(DistStrategy::Replicated, 0, 4))
+        .state_bytes();
+    assert_eq!(r0, full);
+}
+
+#[test]
+fn run_ranks_panic_propagates_and_pool_survives() {
+    let out = std::panic::catch_unwind(|| {
+        dist::run_ranks(4, |comm| {
+            if comm.rank() == 2 {
+                panic!("rank 2 exploded");
+            }
+            // Peers block on a collective; the poison must wake them.
+            let _ = comm.exchange_f64(vec![comm.rank() as f64]);
+        });
+    });
+    assert!(out.is_err(), "panic must propagate to the caller");
+    // The pool and a fresh rendezvous must remain fully usable.
+    let again = dist::run_ranks(4, |comm| {
+        let parts = comm.exchange_f64(vec![comm.rank() as f64]);
+        parts.iter().map(|p| p[0]).sum::<f64>()
+    });
+    assert_eq!(again, vec![6.0; 4]);
+}
+
+#[test]
+fn bucketed_exchange_equals_per_layer_exchange_under_training_shapes() {
+    // The exact shapes the factor-sharded driver exchanges: zero-padded
+    // per-layer parameter updates of a 4-layer MLP.
+    let mut rng = Pcg::new(31);
+    let shapes = [(48usize, 65usize), (32, 49), (16, 33), (4, 17)];
+    let world = 4;
+    let values: Vec<Mat> = shapes.iter().map(|&(o, i)| rng.normal_mat(o, i, 0.1)).collect();
+    let vals = &values;
+    let outs = dist::run_ranks(world, |comm| {
+        let mine: Vec<Mat> = vals
+            .iter()
+            .enumerate()
+            .map(|(l, v)| {
+                if dist::shard::round_robin_owner(l, world) == comm.rank() {
+                    v.clone()
+                } else {
+                    Mat::zeros(v.rows(), v.cols())
+                }
+            })
+            .collect();
+        let mut bucketed = mine.clone();
+        bucket::all_reduce_sum_bucketed(&comm, &mut bucketed, 1000);
+        let plain = collectives::all_reduce_sum(&comm, &mine);
+        (bucketed, plain)
+    });
+    for (bucketed, plain) in outs {
+        for (l, ((b, p), want)) in bucketed.iter().zip(&plain).zip(vals).enumerate() {
+            assert!(b.data() == p.data(), "layer {l}: bucketing changed bits");
+            assert!(b.data() == want.data(), "layer {l}: zero-padded exchange not exact");
+        }
+    }
+}
