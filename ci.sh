@@ -28,21 +28,41 @@ cargo clippy --all-targets -- -D warnings \
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test -q =="
-cargo test -q
+# Hard per-suite timeout for anything that exercises a rendezvous
+# (in-process or socket): a hung rendezvous must fail fast, never stall
+# the suite. Also applied to the tier-1 test run below, which includes
+# the dist and dist_proc suites.
+DIST_TIMEOUT="${SINGD_CI_DIST_TIMEOUT:-900}"
 
-echo "== determinism suites (SINGD_THREADS x SINGD_RANKS matrix) =="
-# The bitwise contracts must hold at every pool size and world size:
-# serial vs pooled kernels (tests/parallel.rs) and serial vs distributed
-# training (tests/dist.rs, which also exercises the SINGD_RANKS default).
+echo "== cargo test -q =="
+timeout "$((2 * DIST_TIMEOUT))" cargo test -q
+
+echo "== determinism suites (SINGD_THREADS x SINGD_RANKS x SINGD_TRANSPORT matrix) =="
+# The bitwise contracts must hold at every pool size, world size and
+# transport: serial vs pooled kernels (tests/parallel.rs) and serial vs
+# distributed training (tests/dist.rs, which also exercises the
+# SINGD_RANKS / SINGD_TRANSPORT env defaults). Every dist leg runs under
+# a hard timeout so a hung rendezvous fails fast instead of stalling the
+# suite; the ranks=4 leg fans out over both transports.
 for t in 1 4; do
     echo "-- SINGD_THREADS=$t: parallel suite"
     SINGD_THREADS=$t cargo test -q --test parallel
     for r in 1 4; do
-        echo "-- SINGD_THREADS=$t SINGD_RANKS=$r: dist suite"
-        SINGD_THREADS=$t SINGD_RANKS=$r cargo test -q --test dist
+        transports="local"
+        if [ "$r" = 4 ]; then transports="local socket"; fi
+        for tr in $transports; do
+            echo "-- SINGD_THREADS=$t SINGD_RANKS=$r SINGD_TRANSPORT=$tr: dist suite"
+            SINGD_THREADS=$t SINGD_RANKS=$r SINGD_TRANSPORT=$tr \
+                timeout "$DIST_TIMEOUT" cargo test -q --test dist
+        done
     done
 done
+
+echo "== multi-process transport suite (separate OS processes) =="
+# tests/dist_proc.rs drives the singd binary: --transport socket at
+# ranks=4 must be bitwise identical (param_digest) to --transport local
+# and to serial ranks=1, for SINGD and KFAC, under both strategies.
+timeout "$DIST_TIMEOUT" cargo test -q --test dist_proc
 
 if [ "$mode" != "quick" ]; then
     echo "== hotpath bench (smoke) =="

@@ -34,6 +34,7 @@ fn main() {
         label: "stability".into(),
         ranks: 1,
         dist_strategy: singd::dist::DistStrategy::Replicated,
+        transport: singd::dist::Transport::Local,
     };
 
     println!("{:<16} {:<10} {:>9} {:>9} {:>10}  {}", "method", "precision", "final", "best", "diverged", "telemetry");

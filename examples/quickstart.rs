@@ -27,6 +27,7 @@ fn main() {
         label: "quickstart".into(),
         ranks: 1,
         dist_strategy: singd::dist::DistStrategy::Replicated,
+        transport: singd::dist::Transport::Local,
     };
 
     for method in [

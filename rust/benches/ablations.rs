@@ -36,6 +36,7 @@ fn base() -> JobConfig {
         label: "ablation".into(),
         ranks: 1,
         dist_strategy: singd::dist::DistStrategy::Replicated,
+        transport: singd::dist::Transport::Local,
     }
 }
 

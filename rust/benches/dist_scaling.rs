@@ -104,7 +104,7 @@ fn main() {
             let per_rank_state_bytes = method
                 .build_dist(&shapes, &cfg.hyper, DistCtx::new(strategy, 0, ranks))
                 .state_bytes();
-            let dc = DistCfg { ranks, strategy };
+            let dc = DistCfg::local(ranks, strategy);
             let name = format!("train step ranks={ranks} {}", strategy.name());
             let st = h.bench(&name, || {
                 let mut mrng = Pcg::new(7);

@@ -32,6 +32,7 @@ fn main() {
         label: "fig1".into(),
         ranks: 1,
         dist_strategy: singd::dist::DistStrategy::Replicated,
+        transport: singd::dist::Transport::Local,
     };
     // Theorem 1 is a statement about *matched* hyper-parameters: KFAC and
     // IKFAC get identical λ and β₁ so their preconditioners track. λ is

@@ -48,6 +48,7 @@ fn main() {
             label: name.replace('/', "-"),
             ranks: 1,
             dist_strategy: singd::dist::DistStrategy::Replicated,
+            transport: singd::dist::Transport::Local,
         };
         let grid = run_grid(&base, &methods, &["bf16"]);
         for (label, res) in &grid {

@@ -55,6 +55,7 @@ fn main() {
             label: "mem".into(),
             ranks: 1,
             dist_strategy: singd::dist::DistStrategy::Replicated,
+            transport: singd::dist::Transport::Local,
         };
         let model = build_model(&cfg, shape, 100, &mut rng);
         let shapes = model.shapes();

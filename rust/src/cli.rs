@@ -60,16 +60,22 @@ singd — Structured Inverse-Free Natural Gradient Descent (paper reproduction)
 USAGE:
   singd train   --config <file.toml> [--out <curves.csv>]
                 [--ranks <R>] [--strategy <replicated|factor-sharded>]
+                [--transport <local|socket>]
   singd sweep   --config <file.toml> [--trials <N>] [--seed <S>]
   singd gcn     [--method <sgd|adamw|kfac|ingd|singd:diag|...>] [--steps <N>]
   singd inspect [--structure <dense|diag|block:k|tril|rankk:k|hier:k|toeplitz>] [--dim <d>]
   singd help
 
 Distributed training: --ranks R (default: SINGD_RANKS env, else 1) runs R
-deterministic in-process data-parallel ranks; --strategy factor-sharded
-additionally shards the Kronecker factors (per-rank state ~1/R). Ranks=R
-training is bitwise identical to ranks=1 for power-of-two R dividing the
-batch size. SINGD_THREADS caps the worker pool both share.
+deterministic data-parallel ranks; --strategy factor-sharded additionally
+shards the Kronecker factors (per-rank state ~1/R). --transport local
+(default; SINGD_TRANSPORT env overrides) runs the ranks as threads of
+this process; --transport socket re-execs this binary as R-1 worker
+processes joined over a Unix-socket rendezvous (SINGD_RANK/SINGD_WORLD/
+SINGD_RENDEZVOUS env contract). Either transport at ranks=R is bitwise
+identical to ranks=1 for power-of-two R dividing the batch size;
+non-dividing R <= batch still train deterministically via the balanced
+padding rule. SINGD_THREADS caps the worker pool all ranks share.
 
 Regenerating the paper's tables/figures (see DESIGN.md §5):
   cargo bench --bench fig1_vgg_cifar       # Fig. 1 left/center (+ stability)
@@ -138,24 +144,50 @@ fn cmd_train(args: &Args) -> i32 {
             }
         }
     }
+    if let Some(tr) = args.get("transport") {
+        match crate::dist::Transport::parse(tr) {
+            Some(t) => cfg.transport = t,
+            None => {
+                eprintln!("error: bad --transport '{tr}' (local | socket)");
+                return 2;
+            }
+        }
+    }
     // Catch this here (covers --ranks, [dist] ranks and SINGD_RANKS alike)
     // so a bad combination is a clean CLI error, not a driver panic.
-    if cfg.ranks > 1 && cfg.batch_size % cfg.ranks != 0 {
+    if cfg.ranks > 1 && cfg.batch_size < cfg.ranks {
         eprintln!(
-            "error: train.batch_size {} is not divisible by ranks {}",
+            "error: train.batch_size {} is smaller than ranks {}",
             cfg.batch_size, cfg.ranks
         );
         return 2;
     }
+    if cfg.ranks > 1 && cfg.batch_size % cfg.ranks != 0 {
+        eprintln!(
+            "warning: train.batch_size {} is not divisible by ranks {}: shards follow \
+             the balanced padding rule; training stays deterministic at this world \
+             size but forfeits the bitwise rank-invariance guarantee",
+            cfg.batch_size, cfg.ranks
+        );
+    }
+    // A worker rank re-exec'd by the socket launcher (SINGD_RANK env
+    // contract): run the identical job silently and join the rendezvous
+    // inside train_dist; rank 0 — the launching process — owns all
+    // reporting and file output. The exit status is the failure channel.
+    if crate::dist::transport::worker_env().is_some() {
+        let res = exp::run_job(&cfg);
+        return if res.diverged { 1 } else { 0 };
+    }
     println!(
-        "training {} / {} with {} ({}), {} epochs, ranks={} ({})",
+        "training {} / {} with {} ({}), {} epochs, ranks={} ({}, {})",
         cfg.label,
         cfg.dataset,
         cfg.method.name(),
         cfg.hyper.policy.name(),
         cfg.epochs,
         cfg.ranks,
-        cfg.dist_strategy.name()
+        cfg.dist_strategy.name(),
+        cfg.transport.name()
     );
     let res = exp::run_job(&cfg);
     for r in &res.rows {
@@ -169,8 +201,8 @@ fn cmd_train(args: &Args) -> i32 {
         );
     }
     println!(
-        "final_err {:.4}  best {:.4}  optimizer_state {} bytes  wall {:.1}s",
-        res.final_test_err, res.best_test_err, res.optimizer_bytes, res.wall_secs
+        "final_err {:.4}  best {:.4}  optimizer_state {} bytes  wall {:.1}s  param_digest {:016x}",
+        res.final_test_err, res.best_test_err, res.optimizer_bytes, res.wall_secs, res.param_digest
     );
     if let Some(out) = args.get("out") {
         let csv = res.to_csv(&cfg.label);
@@ -316,9 +348,11 @@ mod tests {
         assert_eq!(run(&sv(&["train", "--config", p, "--strategy", "bogus"])), 2);
         assert_eq!(run(&sv(&["train", "--config", p, "--ranks", "0"])), 2);
         assert_eq!(run(&sv(&["train", "--config", p, "--ranks", "x"])), 2);
-        // batch_size 32 (default) is not divisible by 3 → clean error,
-        // not a driver assert.
-        assert_eq!(run(&sv(&["train", "--config", p, "--ranks", "3"])), 2);
+        assert_eq!(run(&sv(&["train", "--config", p, "--transport", "pigeon"])), 2);
+        // batch_size 32 (default) smaller than the world size → clean
+        // error, not a driver assert. (Non-dividing ranks <= batch are
+        // allowed: they shard via the balanced padding rule.)
+        assert_eq!(run(&sv(&["train", "--config", p, "--ranks", "33"])), 2);
         std::fs::remove_file(&path).ok();
     }
 

@@ -32,9 +32,10 @@
 //! [dist]
 //! ranks = 4                    # default: SINGD_RANKS env, else 1
 //! strategy = "factor-sharded"  # replicated | factor-sharded
+//! transport = "socket"         # local | socket (default: SINGD_TRANSPORT env, else local)
 //! ```
 
-use crate::dist::{self, DistStrategy};
+use crate::dist::{self, DistStrategy, Transport};
 use crate::numerics::Policy;
 use crate::optim::{Hyper, Method};
 use crate::train::Schedule;
@@ -224,6 +225,9 @@ pub struct JobConfig {
     pub ranks: usize,
     /// Optimizer-state layout across ranks (`[dist] strategy`).
     pub dist_strategy: DistStrategy,
+    /// Communicator backend (`[dist] transport`; defaults to the
+    /// `SINGD_TRANSPORT` env contract, else in-process `local`).
+    pub transport: Transport,
 }
 
 impl JobConfig {
@@ -269,6 +273,9 @@ impl JobConfig {
         let ranks = t.usize_or("dist.ranks", dist::default_ranks()).max(1);
         let dist_strategy = DistStrategy::parse(t.str_or("dist.strategy", "replicated"))
             .ok_or_else(|| format!("unknown dist.strategy '{}'", t.str_or("dist.strategy", "")))?;
+        let default_tr = dist::default_transport();
+        let transport = Transport::parse(t.str_or("dist.transport", default_tr.name()))
+            .ok_or_else(|| format!("unknown dist.transport '{}'", t.str_or("dist.transport", "")))?;
         Ok(JobConfig {
             arch,
             dataset: t.str_or("data.dataset", "cifar100").to_string(),
@@ -284,6 +291,7 @@ impl JobConfig {
             label: t.str_or("label", "job").to_string(),
             ranks,
             dist_strategy,
+            transport,
         })
     }
 
@@ -384,5 +392,17 @@ seed = 7
         // ranks = 0 is clamped to 1 (serial), bad strategies rejected.
         assert_eq!(JobConfig::from_str_toml("[dist]\nranks = 0\n").unwrap().ranks, 1);
         assert!(JobConfig::from_str_toml("[dist]\nstrategy = \"bogus\"\n").is_err());
+    }
+
+    #[test]
+    fn dist_section_parses_transport() {
+        let cfg = JobConfig::from_str_toml("[dist]\ntransport = \"socket\"\n").unwrap();
+        assert_eq!(cfg.transport, Transport::Socket);
+        let cfg = JobConfig::from_str_toml("[dist]\ntransport = \"local\"\n").unwrap();
+        assert_eq!(cfg.transport, Transport::Local);
+        // Default follows the SINGD_TRANSPORT env contract.
+        let cfg = JobConfig::from_str_toml("[model]\narch = \"mlp\"\n").unwrap();
+        assert_eq!(cfg.transport, dist::default_transport());
+        assert!(JobConfig::from_str_toml("[dist]\ntransport = \"pigeon\"\n").is_err());
     }
 }

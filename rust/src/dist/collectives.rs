@@ -117,19 +117,21 @@ pub fn concat_rows(parts: &[Arc<Vec<Mat>>], idx: usize) -> Mat {
 }
 
 /// Reduce-scatter over rows: tree-sum every rank's `rows × cols`
-/// contribution, then hand rank `r` its contiguous `rows/world` row
-/// block. `rows` must be divisible by the world size.
+/// contribution, then hand rank `r` its contiguous row block under the
+/// canonical shard plan of [`super::shard::row_shard_range`]. World
+/// sizes that do not divide the row count follow that padding rule
+/// (shard heights differ by at most one; a block is empty only when
+/// `rows < world`); when `world` divides `rows` every rank receives
+/// exactly `rows/world` rows.
 pub fn reduce_scatter_rows(comm: &dyn Communicator, m: &Mat) -> Mat {
     let world = comm.world_size();
-    assert_eq!(m.rows() % world, 0, "reduce_scatter_rows: rows {} % world {world} != 0", m.rows());
     if world == 1 {
         return m.clone();
     }
     let summed = all_reduce_sum(comm, std::slice::from_ref(m));
     let total = &summed[0];
-    let q = total.rows() / world;
-    let r0 = comm.rank() * q;
-    Mat::from_fn(q, total.cols(), |r, c| total.at(r0 + r, c))
+    let block = super::shard::row_shard_range(total.rows(), world, comm.rank());
+    Mat::from_fn(block.len(), total.cols(), |r, c| total.at(block.start + r, c))
 }
 
 #[cfg(test)]
@@ -234,6 +236,44 @@ mod tests {
                     assert_eq!(out.at(r, col), (6 + 4 * (gr + col)) as f32, "rank {rank}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_padding_rule_for_non_dividing_world() {
+        // rows = 10, world = 4 → blocks 3, 3, 2, 2 of the summed matrix
+        // (the row_shard_range padding rule).
+        let world = 4;
+        let outs = run_ranks(world, |c| {
+            let mine = Mat::from_fn(10, 2, |r, col| (c.rank() + r + col) as f32);
+            reduce_scatter_rows(&c, &mine)
+        });
+        let heights = [3usize, 3, 2, 2];
+        let starts = [0usize, 3, 6, 8];
+        for (rank, out) in outs.iter().enumerate() {
+            assert_eq!(out.shape(), (heights[rank], 2), "rank {rank}");
+            for r in 0..heights[rank] {
+                for col in 0..2 {
+                    let gr = starts[rank] + r;
+                    // Sum over ranks of (rank + r + col) = 6 + 4(r + col).
+                    assert_eq!(out.at(r, col), (6 + 4 * (gr + col)) as f32, "rank {rank}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_single_row_goes_to_rank0() {
+        // 1×1 input, world 4: rank 0 receives the summed row, the rest
+        // receive empty 0×1 blocks.
+        let outs = run_ranks(4, |c| {
+            let mine = Mat::from_vec(1, 1, vec![(c.rank() + 1) as f32]);
+            reduce_scatter_rows(&c, &mine)
+        });
+        assert_eq!(outs[0].shape(), (1, 1));
+        assert_eq!(outs[0].at(0, 0), 10.0);
+        for out in &outs[1..] {
+            assert_eq!(out.shape(), (0, 1));
         }
     }
 

@@ -1,13 +1,22 @@
-//! Distributed execution subsystem: deterministic in-process collectives
-//! and ZeRO-style sharded Kronecker-factor preconditioning.
+//! Distributed execution subsystem: deterministic collectives over
+//! pluggable transports and ZeRO-style sharded Kronecker-factor
+//! preconditioning.
 //!
-//! The subsystem simulates an `R`-rank data-parallel job inside one
-//! process: ranks are SPMD closures executed concurrently (on the
-//! persistent worker pool of [`crate::tensor::pool`] when it is large
-//! enough, on dedicated scoped threads otherwise) that communicate only
-//! through the [`Communicator`] rendezvous. Layer-wise decomposition is
-//! the natural parallel axis for Kronecker-factored methods (Koroko et
-//! al., 2023), and the inverse-free SINGD update is nothing but matrix
+//! Two transports implement the [`Communicator`] exchange primitive:
+//!
+//! - [`Transport::Local`] ([`LocalComm`]) runs an `R`-rank data-parallel
+//!   job inside one process: ranks are SPMD closures executed
+//!   concurrently (on the persistent worker pool of
+//!   [`crate::tensor::pool`] when it is large enough, on dedicated
+//!   scoped threads otherwise) over a shared-memory rendezvous.
+//! - [`Transport::Socket`] ([`SocketComm`], [`transport`]) joins `R`
+//!   separate OS processes over Unix-domain sockets (TCP fallback) with
+//!   a length-prefixed wire format; byte-exact payload images keep every
+//!   collective bitwise identical to the local transport.
+//!
+//! Layer-wise decomposition is the natural parallel axis for
+//! Kronecker-factored methods (Koroko et al., 2023), and the
+//! inverse-free SINGD update is nothing but matrix
 //! multiplications and subtractions — exactly the ops that shard without
 //! any rank ever holding a full inverse.
 //!
@@ -33,15 +42,20 @@
 //! 3. A poisoned rendezvous (a rank panicking) wakes every peer so the
 //!    failure propagates instead of deadlocking the process.
 //!
-//! # The `SINGD_RANKS` contract
+//! # The `SINGD_RANKS` / `SINGD_TRANSPORT` contract
 //!
-//! `SINGD_RANKS=<n>` sets the *default* world size used by config-driven
-//! entry points ([`crate::config::JobConfig`]); explicit `[dist] ranks`
-//! config keys and `--ranks` CLI flags override it. Read once, cached.
+//! `SINGD_RANKS=<n>` sets the *default* world size and
+//! `SINGD_TRANSPORT=<local|socket>` the *default* transport used by
+//! config-driven entry points ([`crate::config::JobConfig`]); explicit
+//! `[dist]` config keys and `--ranks` / `--transport` CLI flags
+//! override them. Read once, cached.
 
 pub mod bucket;
 pub mod collectives;
 pub mod shard;
+pub mod transport;
+
+pub use transport::{SocketComm, Transport};
 
 use crate::tensor::{pool, Mat};
 use std::any::Any;
@@ -135,6 +149,20 @@ pub fn default_ranks() -> usize {
             .and_then(|v| v.parse::<usize>().ok())
             .map(|n| n.max(1))
             .unwrap_or(1)
+    })
+}
+
+/// Default transport: `SINGD_TRANSPORT` (read once, cached), else
+/// [`Transport::Local`]. Explicit `[dist] transport` config keys and
+/// `--transport` CLI flags override it, mirroring the `SINGD_RANKS`
+/// contract.
+pub fn default_transport() -> Transport {
+    static CACHED: OnceLock<Transport> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::env::var("SINGD_TRANSPORT")
+            .ok()
+            .and_then(|v| Transport::parse(&v))
+            .unwrap_or(Transport::Local)
     })
 }
 

@@ -22,6 +22,27 @@ pub fn round_robin_owner(layer: usize, world: usize) -> usize {
     layer % world.max(1)
 }
 
+/// The canonical contiguous row-shard plan, shared by the training
+/// driver's batch split and [`crate::dist::collectives::reduce_scatter_rows`].
+///
+/// This is the *padding rule* for world sizes that do not divide the row
+/// count: the first `rows mod world` ranks take `⌈rows/world⌉` rows, the
+/// rest `⌊rows/world⌋` — equivalently, pad the trailing shards up to the
+/// ceiling block and drop the padding, so shard heights differ by at
+/// most one and concatenated ranges cover `0..rows` exactly. When
+/// `world` divides `rows` every shard is `rows/world`, which is the
+/// alignment the bitwise rank-invariance contract builds on; a shard is
+/// empty only when `rows < world`.
+pub fn row_shard_range(rows: usize, world: usize, rank: usize) -> std::ops::Range<usize> {
+    let world = world.max(1);
+    assert!(rank < world, "row_shard_range: rank {rank} out of range for world {world}");
+    let q = rows / world;
+    let rem = rows % world;
+    let start = rank * q + rank.min(rem);
+    let end = start + q + usize::from(rank < rem);
+    start..end
+}
+
 /// A materialized layer→rank assignment.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ShardPlan {
@@ -125,5 +146,39 @@ mod tests {
     #[test]
     fn factor_cost_is_quadratic_in_dims() {
         assert_eq!(factor_cost(&[(4, 8), (2, 2)]), vec![8 * 8 + 4 * 4, 2 * 2 + 2 * 2]);
+    }
+
+    #[test]
+    fn row_shard_ranges_cover_and_balance() {
+        for (rows, world) in [(32usize, 4usize), (33, 4), (7, 4), (8, 3), (1, 4), (0, 3), (5, 1)] {
+            let mut next = 0usize;
+            let mut sizes = Vec::new();
+            for r in 0..world {
+                let rg = row_shard_range(rows, world, r);
+                assert_eq!(rg.start, next, "rows {rows} world {world} rank {r}");
+                assert!(rg.end >= rg.start);
+                sizes.push(rg.len());
+                next = rg.end;
+            }
+            assert_eq!(next, rows, "rows {rows} world {world}: coverage");
+            let (lo, hi) =
+                (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "rows {rows} world {world}: balance {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn row_shard_divisible_case_is_equal_blocks() {
+        for r in 0..4 {
+            assert_eq!(row_shard_range(32, 4, r), r * 8..(r + 1) * 8);
+        }
+        // Non-divisible: first `rem` ranks absorb the remainder.
+        assert_eq!(row_shard_range(10, 4, 0), 0..3);
+        assert_eq!(row_shard_range(10, 4, 1), 3..6);
+        assert_eq!(row_shard_range(10, 4, 2), 6..8);
+        assert_eq!(row_shard_range(10, 4, 3), 8..10);
+        // Fewer rows than ranks: trailing shards are empty.
+        assert_eq!(row_shard_range(1, 4, 0), 0..1);
+        assert!(row_shard_range(1, 4, 3).is_empty());
     }
 }

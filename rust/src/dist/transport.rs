@@ -1,0 +1,1032 @@
+//! Multi-process socket transport behind [`Communicator`].
+//!
+//! [`SocketComm`] runs the same SPMD exchange primitive as [`LocalComm`]
+//! over Unix-domain sockets (TCP fallback), so every collective in
+//! [`crate::dist::collectives`] — and therefore the whole
+//! [`crate::train::train_dist`] driver — routes over it unchanged. The
+//! transport moves *bytes*, never floats: payloads are bit-exact f32/f64
+//! little-endian images of the matrices each rank deposits, so the
+//! determinism contract of [`crate::dist`] (tree-ordered reductions over
+//! rank-indexed payloads) is transport-invariant by construction. The
+//! cross-transport conformance suite in `rust/tests/dist.rs` asserts
+//! bitwise equality against [`LocalComm`] for every collective.
+//!
+//! # Topology and wire format
+//!
+//! Rank 0 is the rendezvous server: it binds the rendezvous endpoint,
+//! accepts `world − 1` connections, and validates a fixed-size hello
+//! (magic, protocol version, run id, world size, rank) from each peer —
+//! stale peers from a dead run (wrong run id), mis-sized worlds and
+//! duplicate ranks are rejected at handshake time. After rendezvous every
+//! exchange is a gather + fan-out star over length-prefixed frames:
+//!
+//! ```text
+//! frame   := kind:u8 | seq:u64 | len:u64 | payload[len]      (LE)
+//! mats    := count:u32 | (rows:u32 | cols:u32 | f32[rows*cols])*
+//! f64s    := count:u32 | f64[count]
+//! gathered:= count:u32 | (len:u64 | payload[len])*           (rank order)
+//! ```
+//!
+//! `seq` is the per-communicator exchange counter and `kind` the payload
+//! type; both are checked on every frame, so an SPMD call-order violation
+//! fails loudly instead of decoding garbage.
+//!
+//! # Failure semantics
+//!
+//! The socket transport maps peer failure onto the same panic-poisoning
+//! contract as [`LocalComm`]'s rendezvous: a rank that panics drops its
+//! `SocketComm`, which closes its sockets; every peer blocked in a
+//! collective then observes EOF (or a goodbye frame where a contribution
+//! was due) and panics in turn, so failures propagate instead of
+//! deadlocking the world. Clean shutdown sends a goodbye frame first,
+//! letting peers distinguish "finished early (SPMD violation)" from
+//! "died". `SINGD_SOCK_TIMEOUT_SECS` bounds rendezvous (and, when set,
+//! per-read) waits.
+//!
+//! # The `SINGD_RANK` / `SINGD_WORLD` / `SINGD_RENDEZVOUS` contract
+//!
+//! A multi-process world is assembled torchrun-style by re-exec'ing the
+//! current binary: [`launch_workers`] spawns ranks `1..world` with the
+//! same argv plus `SINGD_RANK=<r>`, `SINGD_WORLD=<w>`,
+//! `SINGD_RENDEZVOUS=<endpoint>` and `SINGD_RUN_ID=<id>` in the
+//! environment, while the launching process itself becomes rank 0. A
+//! worker detects its role with [`worker_env`] and joins the rendezvous
+//! instead of spawning further workers.
+
+use super::Communicator;
+use crate::tensor::Mat;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which transport backs the [`Communicator`] of a distributed run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// In-process shared-memory rendezvous ([`LocalComm`]): ranks are
+    /// threads of one process.
+    Local,
+    /// Multi-process socket transport ([`SocketComm`]): ranks are
+    /// separate OS processes joined over a rendezvous endpoint.
+    Socket,
+}
+
+impl Transport {
+    /// Parse `"local"` / `"socket"` (aliases: `"inproc"`, `"uds"`).
+    pub fn parse(s: &str) -> Option<Transport> {
+        match s.to_ascii_lowercase().as_str() {
+            "local" | "inproc" | "shm" => Some(Transport::Local),
+            "socket" | "uds" | "sock" => Some(Transport::Socket),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::Local => "local",
+            Transport::Socket => "socket",
+        }
+    }
+}
+
+/// Environment key: this process's rank in a multi-process world.
+pub const ENV_RANK: &str = "SINGD_RANK";
+/// Environment key: the multi-process world size.
+pub const ENV_WORLD: &str = "SINGD_WORLD";
+/// Environment key: the rendezvous endpoint (`unix:<path>` or
+/// `tcp:<host>:<port>`; a bare string is a Unix path).
+pub const ENV_RENDEZVOUS: &str = "SINGD_RENDEZVOUS";
+/// Environment key: the run id tag peers must echo at handshake.
+pub const ENV_RUN_ID: &str = "SINGD_RUN_ID";
+/// Environment key: rendezvous deadline and (when set) per-read timeout
+/// in seconds. Default: 30 s rendezvous deadline, no read timeout.
+pub const ENV_TIMEOUT: &str = "SINGD_SOCK_TIMEOUT_SECS";
+
+const MAGIC: u64 = 0x5349_4e47_4456_0001; // "SINGDV" tag + wire rev
+const PROTO_VERSION: u32 = 1;
+/// Sanity bound on a single frame (guards a garbled length prefix from
+/// triggering an absurd allocation).
+const MAX_FRAME: u64 = 1 << 36;
+
+const KIND_MATS: u8 = 1;
+const KIND_F64: u8 = 2;
+const KIND_GATHERED_MATS: u8 = 3;
+const KIND_GATHERED_F64: u8 = 4;
+const KIND_GOODBYE: u8 = 5;
+
+// Handshake status codes in the welcome reply.
+const ST_OK: u32 = 0;
+const ST_BAD_RUN_ID: u32 = 2;
+const ST_BAD_WORLD: u32 = 3;
+const ST_BAD_RANK: u32 = 4;
+const ST_DUP_RANK: u32 = 5;
+
+fn status_msg(st: u32) -> &'static str {
+    match st {
+        ST_BAD_RUN_ID => "stale peer: run id does not match this world",
+        ST_BAD_WORLD => "world size mismatch",
+        ST_BAD_RANK => "rank out of range",
+        ST_DUP_RANK => "duplicate rank",
+        _ => "unknown handshake failure",
+    }
+}
+
+/// Rendezvous endpoint: `unix:<path>`, `tcp:<host>:<port>`, or a bare
+/// Unix socket path.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    Unix(String),
+    Tcp(String),
+}
+
+impl Endpoint {
+    pub fn parse(s: &str) -> Endpoint {
+        if let Some(rest) = s.strip_prefix("unix:") {
+            Endpoint::Unix(rest.to_string())
+        } else if let Some(rest) = s.strip_prefix("tcp:") {
+            Endpoint::Tcp(rest.to_string())
+        } else {
+            Endpoint::Unix(s.to_string())
+        }
+    }
+}
+
+/// A connected stream of either family.
+enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_read_timeout(d),
+            Stream::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_nonblocking(nb),
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    fn shutdown(&self) {
+        let _ = match self {
+            Stream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            Listener::Unix(l) => l.set_nonblocking(nb),
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    fn accept(&self) -> io::Result<Stream> {
+        match self {
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+        }
+    }
+}
+
+fn timeout_secs() -> Option<u64> {
+    std::env::var(ENV_TIMEOUT).ok().and_then(|v| v.parse::<u64>().ok())
+}
+
+/// Deadline for assembling the world (accept/connect retries).
+fn rendezvous_timeout() -> Duration {
+    Duration::from_secs(timeout_secs().unwrap_or(30).max(1))
+}
+
+/// Per-read timeout on established links; `None` (the default) blocks
+/// indefinitely — peer death is detected by EOF, hangs by the CI-level
+/// test timeout.
+fn read_timeout() -> Option<Duration> {
+    timeout_secs().map(|s| Duration::from_secs(s.max(1)))
+}
+
+// ---------------------------------------------------------------------
+// Payload encoding (pure byte images; no floating-point work).
+
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len()).ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidData, "payload truncated")
+        })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> io::Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(io::Error::new(io::ErrorKind::InvalidData, "trailing bytes in payload"))
+        }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+fn encode_mats(mats: &[Mat]) -> Vec<u8> {
+    let total: usize = 4 + mats.iter().map(|m| 8 + 4 * m.len()).sum::<usize>();
+    let mut buf = Vec::with_capacity(total);
+    buf.extend_from_slice(&(mats.len() as u32).to_le_bytes());
+    for m in mats {
+        buf.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+        buf.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+        for &v in m.data() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    buf
+}
+
+fn decode_mats(buf: &[u8]) -> io::Result<Vec<Mat>> {
+    let mut cur = Cur::new(buf);
+    let n = cur.u32()? as usize;
+    // Clamp the pre-allocation: every entry needs an 8-byte shape header,
+    // so a garbled count fails at the truncation check instead of
+    // attempting an absurd up-front allocation.
+    let mut out = Vec::with_capacity(n.min(cur.remaining() / 8));
+    for _ in 0..n {
+        let rows = cur.u32()? as usize;
+        let cols = cur.u32()? as usize;
+        let nbytes = rows
+            .checked_mul(cols)
+            .and_then(|e| e.checked_mul(4))
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "matrix shape overflow"))?;
+        let bytes = cur.take(nbytes)?;
+        let data: Vec<f32> =
+            bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        out.push(Mat::from_vec(rows, cols, data));
+    }
+    cur.done()?;
+    Ok(out)
+}
+
+fn encode_f64s(vals: &[f64]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(4 + 8 * vals.len());
+    buf.extend_from_slice(&(vals.len() as u32).to_le_bytes());
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    buf
+}
+
+fn decode_f64s(buf: &[u8]) -> io::Result<Vec<f64>> {
+    let mut cur = Cur::new(buf);
+    let n = cur.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(cur.remaining() / 8));
+    for _ in 0..n {
+        out.push(f64::from_le_bytes(cur.take(8)?.try_into().unwrap()));
+    }
+    cur.done()?;
+    Ok(out)
+}
+
+fn encode_gathered(parts: &[Vec<u8>]) -> Vec<u8> {
+    let total: usize = 4 + parts.iter().map(|p| 8 + p.len()).sum::<usize>();
+    let mut buf = Vec::with_capacity(total);
+    buf.extend_from_slice(&(parts.len() as u32).to_le_bytes());
+    for p in parts {
+        buf.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        buf.extend_from_slice(p);
+    }
+    buf
+}
+
+fn decode_gathered(buf: &[u8]) -> io::Result<Vec<Vec<u8>>> {
+    let mut cur = Cur::new(buf);
+    let n = cur.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(cur.remaining() / 8));
+    for _ in 0..n {
+        let len = cur.u64()? as usize;
+        out.push(cur.take(len)?.to_vec());
+    }
+    cur.done()?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Framing.
+
+fn write_frame(s: &mut Stream, kind: u8, seq: u64, payload: &[u8]) -> io::Result<()> {
+    let mut hdr = [0u8; 17];
+    hdr[0] = kind;
+    hdr[1..9].copy_from_slice(&seq.to_le_bytes());
+    hdr[9..17].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    s.write_all(&hdr)?;
+    s.write_all(payload)?;
+    s.flush()
+}
+
+fn read_frame(s: &mut Stream) -> io::Result<(u8, u64, Vec<u8>)> {
+    let mut hdr = [0u8; 17];
+    s.read_exact(&mut hdr)?;
+    let kind = hdr[0];
+    let seq = u64::from_le_bytes(hdr[1..9].try_into().unwrap());
+    let len = u64::from_le_bytes(hdr[9..17].try_into().unwrap());
+    if len > MAX_FRAME {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "oversized frame"));
+    }
+    let mut payload = vec![0u8; len as usize];
+    s.read_exact(&mut payload)?;
+    Ok((kind, seq, payload))
+}
+
+// ---------------------------------------------------------------------
+// Handshake.
+
+fn write_hello(s: &mut Stream, run_id: u64, world: usize, rank: usize) -> io::Result<()> {
+    let mut hello = [0u8; 28];
+    hello[0..8].copy_from_slice(&MAGIC.to_le_bytes());
+    hello[8..12].copy_from_slice(&PROTO_VERSION.to_le_bytes());
+    hello[12..20].copy_from_slice(&run_id.to_le_bytes());
+    hello[20..24].copy_from_slice(&(world as u32).to_le_bytes());
+    hello[24..28].copy_from_slice(&(rank as u32).to_le_bytes());
+    s.write_all(&hello)?;
+    s.flush()
+}
+
+fn write_welcome(s: &mut Stream, status: u32) -> io::Result<()> {
+    let mut w = [0u8; 12];
+    w[0..8].copy_from_slice(&MAGIC.to_le_bytes());
+    w[8..12].copy_from_slice(&status.to_le_bytes());
+    s.write_all(&w)?;
+    s.flush()
+}
+
+/// Server side: read and validate one peer's hello; reply with a status.
+/// Returns the peer's rank on success.
+fn handshake_server(
+    s: &mut Stream,
+    world: usize,
+    run_id: u64,
+    taken: &[bool],
+) -> io::Result<usize> {
+    let mut hello = [0u8; 28];
+    s.read_exact(&mut hello)?;
+    let magic = u64::from_le_bytes(hello[0..8].try_into().unwrap());
+    let version = u32::from_le_bytes(hello[8..12].try_into().unwrap());
+    if magic != MAGIC || version != PROTO_VERSION {
+        // Not even speaking our protocol: drop without a reply.
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic/version"));
+    }
+    let peer_run = u64::from_le_bytes(hello[12..20].try_into().unwrap());
+    let peer_world = u32::from_le_bytes(hello[20..24].try_into().unwrap()) as usize;
+    let peer_rank = u32::from_le_bytes(hello[24..28].try_into().unwrap()) as usize;
+    let status = if peer_run != run_id {
+        ST_BAD_RUN_ID
+    } else if peer_world != world {
+        ST_BAD_WORLD
+    } else if peer_rank == 0 || peer_rank >= world {
+        ST_BAD_RANK
+    } else if taken[peer_rank] {
+        ST_DUP_RANK
+    } else {
+        ST_OK
+    };
+    write_welcome(s, status)?;
+    if status == ST_OK {
+        Ok(peer_rank)
+    } else {
+        Err(io::Error::new(io::ErrorKind::InvalidData, status_msg(status)))
+    }
+}
+
+/// Rank 0: bind the endpoint and accept + validate `world − 1` peers.
+/// Returns streams indexed by `peer rank − 1`.
+fn accept_peers(ep: &Endpoint, world: usize, run_id: u64) -> io::Result<Vec<Stream>> {
+    let listener = match ep {
+        Endpoint::Unix(path) => {
+            // A stale socket file from a dead run blocks bind; remove it.
+            let _ = std::fs::remove_file(path);
+            Listener::Unix(UnixListener::bind(path)?)
+        }
+        Endpoint::Tcp(addr) => Listener::Tcp(TcpListener::bind(addr)?),
+    };
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + rendezvous_timeout();
+    let mut slots: Vec<Option<Stream>> = (1..world).map(|_| None).collect();
+    let mut taken = vec![false; world];
+    let mut pending = world - 1;
+    while pending > 0 {
+        // Enforce the deadline on every iteration — including after a
+        // rejected handshake — so junk connections cannot extend it.
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(io::Error::new(
+                io::ErrorKind::TimedOut,
+                format!("rendezvous timed out with {pending} peer(s) missing"),
+            ));
+        }
+        let budget = deadline.saturating_duration_since(now).max(Duration::from_millis(1));
+        match listener.accept() {
+            Ok(mut s) => {
+                s.set_nonblocking(false)?;
+                // Bound the handshake read by the *remaining* rendezvous
+                // budget so a connected-but-silent peer cannot stall past
+                // the deadline.
+                s.set_read_timeout(Some(budget))?;
+                match handshake_server(&mut s, world, run_id, &taken) {
+                    Ok(r) => {
+                        taken[r] = true;
+                        slots[r - 1] = Some(s);
+                        pending -= 1;
+                    }
+                    Err(_) => {
+                        // Rejected (stale run id, bad world, dup rank) or
+                        // garbled: drop the connection, keep listening.
+                        s.shutdown();
+                    }
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    if let Endpoint::Unix(path) = ep {
+        // World assembled: the socket file has served its purpose (the
+        // established connections outlive the unlink).
+        let _ = std::fs::remove_file(path);
+    }
+    let links: Vec<Stream> = slots.into_iter().map(|s| s.expect("accepted peer")).collect();
+    for l in &links {
+        l.set_read_timeout(read_timeout())?;
+    }
+    Ok(links)
+}
+
+/// Rank > 0: dial the rendezvous endpoint (retrying until the server
+/// binds) and run the hello/welcome handshake.
+fn dial_root(ep: &Endpoint, rank: usize, world: usize, run_id: u64) -> io::Result<Stream> {
+    let deadline = Instant::now() + rendezvous_timeout();
+    loop {
+        let attempt = match ep {
+            Endpoint::Unix(path) => UnixStream::connect(path).map(Stream::Unix),
+            Endpoint::Tcp(addr) => TcpStream::connect(addr).map(Stream::Tcp),
+        };
+        match attempt {
+            Ok(mut s) => {
+                s.set_read_timeout(Some(rendezvous_timeout()))?;
+                write_hello(&mut s, run_id, world, rank)?;
+                let mut w = [0u8; 12];
+                s.read_exact(&mut w)?;
+                let magic = u64::from_le_bytes(w[0..8].try_into().unwrap());
+                let status = u32::from_le_bytes(w[8..12].try_into().unwrap());
+                if magic != MAGIC {
+                    return Err(io::Error::new(io::ErrorKind::InvalidData, "bad welcome"));
+                }
+                if status != ST_OK {
+                    return Err(io::Error::new(
+                        io::ErrorKind::ConnectionRefused,
+                        format!("handshake rejected: {}", status_msg(status)),
+                    ));
+                }
+                s.set_read_timeout(read_timeout())?;
+                return Ok(s);
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::NotFound
+                        | io::ErrorKind::ConnectionRefused
+                        | io::ErrorKind::ConnectionReset
+                        | io::ErrorKind::AddrNotAvailable
+                ) && Instant::now() < deadline =>
+            {
+                // Server not up yet; retry until the rendezvous deadline.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The communicator.
+
+struct Inner {
+    /// Rank 0: `world − 1` streams, index `r − 1` ↔ peer rank `r`.
+    /// Rank > 0: a single stream to rank 0.
+    links: Vec<Stream>,
+    /// Exchange counter; stamped into every frame (SPMD order check).
+    seq: u64,
+}
+
+/// One process's handle onto a socket-transport world. Implements the
+/// same barrier-exchange [`Communicator`] contract as [`LocalComm`]; see
+/// the module docs for topology, wire format and failure semantics.
+///
+/// [`LocalComm`]: crate::dist::LocalComm
+pub struct SocketComm {
+    rank: usize,
+    world: usize,
+    inner: Mutex<Inner>,
+}
+
+impl SocketComm {
+    /// Join (rank > 0) or assemble (rank 0) a `world`-process rendezvous
+    /// at `rendezvous`. Blocks until every rank has handshaken or the
+    /// `SINGD_SOCK_TIMEOUT_SECS` deadline (default 30 s) expires.
+    pub fn connect(
+        rank: usize,
+        world: usize,
+        rendezvous: &str,
+        run_id: u64,
+    ) -> io::Result<SocketComm> {
+        assert!(world >= 1, "dist[socket]: world size must be >= 1");
+        assert!(rank < world, "dist[socket]: rank {rank} out of range for world {world}");
+        let links = if world == 1 {
+            Vec::new()
+        } else {
+            let ep = Endpoint::parse(rendezvous);
+            if rank == 0 {
+                accept_peers(&ep, world, run_id)?
+            } else {
+                vec![dial_root(&ep, rank, world, run_id)?]
+            }
+        };
+        Ok(SocketComm { rank, world, inner: Mutex::new(Inner { links, seq: 0 }) })
+    }
+
+    /// Abruptly close every link *without* the goodbye frame — simulates
+    /// process death for the fault-injection tests: peers observe EOF
+    /// mid-collective instead of a clean shutdown.
+    pub fn sever(&self) {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        for link in &inner.links {
+            link.shutdown();
+        }
+    }
+
+    /// The star exchange over raw payload bytes: every rank deposits one
+    /// payload, every rank receives all `world` payloads in rank order.
+    /// Panics (poisoning the world) on peer death, clean-but-early peer
+    /// shutdown, or any SPMD call-order violation.
+    fn exchange_bytes(&self, kind: u8, mine: Vec<u8>) -> Vec<Vec<u8>> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let seq = inner.seq;
+        inner.seq += 1;
+        if self.world == 1 {
+            return vec![mine];
+        }
+        let gathered_kind = match kind {
+            KIND_MATS => KIND_GATHERED_MATS,
+            _ => KIND_GATHERED_F64,
+        };
+        if self.rank == 0 {
+            let mut parts: Vec<Vec<u8>> = Vec::with_capacity(self.world);
+            parts.push(mine);
+            for r in 1..self.world {
+                let (k, s, payload) = read_frame(&mut inner.links[r - 1])
+                    .unwrap_or_else(|e| peer_failed(r, &e));
+                check_frame(k, kind, s, seq, r);
+                parts.push(payload);
+            }
+            let blob = encode_gathered(&parts);
+            for r in 1..self.world {
+                write_frame(&mut inner.links[r - 1], gathered_kind, seq, &blob)
+                    .unwrap_or_else(|e| peer_failed(r, &e));
+            }
+            parts
+        } else {
+            write_frame(&mut inner.links[0], kind, seq, &mine)
+                .unwrap_or_else(|e| peer_failed(0, &e));
+            let (k, s, blob) =
+                read_frame(&mut inner.links[0]).unwrap_or_else(|e| peer_failed(0, &e));
+            check_frame(k, gathered_kind, s, seq, 0);
+            decode_gathered(&blob)
+                .unwrap_or_else(|e| panic!("dist[socket]: corrupt gathered frame: {e}"))
+        }
+    }
+}
+
+/// A peer's link failed mid-collective: poison this rank too.
+fn peer_failed(rank: usize, e: &io::Error) -> ! {
+    if e.kind() == io::ErrorKind::UnexpectedEof {
+        panic!("dist[socket]: peer rank {rank} died (connection closed mid-collective)");
+    }
+    panic!("dist[socket]: link to rank {rank} failed: {e}");
+}
+
+fn check_frame(got_kind: u8, want_kind: u8, got_seq: u64, want_seq: u64, peer: usize) {
+    if got_kind == KIND_GOODBYE {
+        panic!(
+            "dist[socket]: peer rank {peer} shut down while a collective was pending \
+             (SPMD call-order violation or early exit)"
+        );
+    }
+    assert_eq!(
+        got_kind, want_kind,
+        "dist[socket]: SPMD call order violated with rank {peer} (payload kind mismatch)"
+    );
+    assert_eq!(
+        got_seq, want_seq,
+        "dist[socket]: SPMD call order violated with rank {peer} (exchange seq mismatch)"
+    );
+}
+
+impl Communicator for SocketComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    fn exchange_mats(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
+        let parts = self.exchange_bytes(KIND_MATS, encode_mats(&mats));
+        parts
+            .iter()
+            .map(|p| {
+                Arc::new(decode_mats(p).unwrap_or_else(|e| {
+                    panic!("dist[socket]: corrupt mats payload: {e}")
+                }))
+            })
+            .collect()
+    }
+
+    fn exchange_f64(&self, vals: Vec<f64>) -> Vec<Arc<Vec<f64>>> {
+        let parts = self.exchange_bytes(KIND_F64, encode_f64s(&vals));
+        parts
+            .iter()
+            .map(|p| {
+                Arc::new(decode_f64s(p).unwrap_or_else(|e| {
+                    panic!("dist[socket]: corrupt f64 payload: {e}")
+                }))
+            })
+            .collect()
+    }
+}
+
+impl Drop for SocketComm {
+    fn drop(&mut self) {
+        // Clean shutdown: best-effort goodbye so peers can tell an early
+        // (SPMD-violating) exit from a crash; then close the links.
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let seq = inner.seq;
+        for link in &mut inner.links {
+            let _ = write_frame(link, KIND_GOODBYE, seq, &[]);
+            link.shutdown();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// World assembly: env contract, launcher, in-process test harness.
+
+/// A worker rank's identity, read from the `SINGD_RANK` / `SINGD_WORLD` /
+/// `SINGD_RENDEZVOUS` / `SINGD_RUN_ID` environment set by
+/// [`launch_workers`].
+#[derive(Clone, Debug)]
+pub struct WorkerEnv {
+    pub rank: usize,
+    pub world: usize,
+    pub rendezvous: String,
+    pub run_id: u64,
+}
+
+/// `Some` iff this process was launched as a worker rank (the
+/// `SINGD_RANK` env contract). Read fresh on every call — launchers and
+/// tests manipulate these variables.
+pub fn worker_env() -> Option<WorkerEnv> {
+    let rank = std::env::var(ENV_RANK).ok()?.parse::<usize>().ok()?;
+    let world = std::env::var(ENV_WORLD).ok()?.parse::<usize>().ok()?;
+    let rendezvous = std::env::var(ENV_RENDEZVOUS).ok()?;
+    let run_id =
+        std::env::var(ENV_RUN_ID).ok().and_then(|v| v.parse::<u64>().ok()).unwrap_or(0);
+    if rank >= world {
+        return None;
+    }
+    Some(WorkerEnv { rank, world, rendezvous, run_id })
+}
+
+/// A process-unique Unix rendezvous endpoint under the temp dir.
+pub fn fresh_rendezvous() -> String {
+    static CTR: AtomicU64 = AtomicU64::new(0);
+    let n = CTR.fetch_add(1, Ordering::Relaxed);
+    let path = std::env::temp_dir().join(format!("singd-rv-{}-{n}.sock", std::process::id()));
+    format!("unix:{}", path.display())
+}
+
+/// A run id tag that differs across launches, so peers of a dead run
+/// cannot join a new world at a reused endpoint.
+pub fn fresh_run_id() -> u64 {
+    static CTR: AtomicU64 = AtomicU64::new(0);
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    ((std::process::id() as u64) << 40) ^ t ^ CTR.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Re-exec this binary as worker ranks `1..world` (torchrun-style): same
+/// argv, plus the `SINGD_RANK`/`SINGD_WORLD`/`SINGD_RENDEZVOUS`/
+/// `SINGD_RUN_ID` env contract. The calling process is rank 0. Worker
+/// stdout is discarded (rank 0 owns reporting); stderr is inherited so
+/// worker panics stay visible.
+pub fn launch_workers(
+    world: usize,
+    rendezvous: &str,
+    run_id: u64,
+) -> io::Result<Vec<std::process::Child>> {
+    assert!(
+        worker_env().is_none(),
+        "dist[socket]: a worker rank must not launch further workers"
+    );
+    let exe = std::env::current_exe()?;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut children = Vec::with_capacity(world.saturating_sub(1));
+    for r in 1..world {
+        let child = std::process::Command::new(&exe)
+            .args(&args)
+            .env(ENV_RANK, r.to_string())
+            .env(ENV_WORLD, world.to_string())
+            .env(ENV_RENDEZVOUS, rendezvous)
+            .env(ENV_RUN_ID, run_id.to_string())
+            .stdout(std::process::Stdio::null())
+            .spawn()?;
+        children.push(child);
+    }
+    Ok(children)
+}
+
+/// Reap worker processes; an error names every rank that failed.
+pub fn wait_workers(children: &mut Vec<std::process::Child>) -> Result<(), String> {
+    let mut errs = Vec::new();
+    for (i, c) in children.iter_mut().enumerate() {
+        match c.wait() {
+            Ok(st) if st.success() => {}
+            Ok(st) => errs.push(format!("worker rank {} exited with {st}", i + 1)),
+            Err(e) => errs.push(format!("worker rank {}: wait failed: {e}", i + 1)),
+        }
+    }
+    children.clear();
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs.join("; "))
+    }
+}
+
+/// Run `world` SPMD rank bodies over a real socket world inside this
+/// process (one thread per rank, a fresh Unix endpoint) and collect
+/// results in rank order — the socket-transport analogue of
+/// [`crate::dist::run_ranks`], used by the cross-transport conformance
+/// and fault-injection suites. Every byte still travels through the
+/// kernel socket layer, so the wire path is exactly the multi-process
+/// one; only process isolation is mocked.
+pub fn run_ranks_socket<T, F>(world: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(SocketComm) -> T + Sync,
+{
+    assert!(world >= 1, "run_ranks_socket: world size must be >= 1");
+    let rendezvous = fresh_rendezvous();
+    let run_id = fresh_run_id();
+    let results: Vec<Mutex<Option<T>>> = (0..world).map(|_| Mutex::new(None)).collect();
+    let (fr, rs, rv) = (&f, &results, &rendezvous);
+    std::thread::scope(|s| {
+        for r in 0..world {
+            s.spawn(move || {
+                let comm = SocketComm::connect(r, world, rv, run_id)
+                    .unwrap_or_else(|e| panic!("dist[socket]: rank {r} rendezvous: {e}"));
+                *rs[r].lock().unwrap_or_else(|e| e.into_inner()) = Some(fr(comm));
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(|e| e.into_inner())
+                .expect("run_ranks_socket: rank produced no result")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::Pcg;
+
+    #[test]
+    fn transport_parse_roundtrip() {
+        for t in [Transport::Local, Transport::Socket] {
+            assert_eq!(Transport::parse(t.name()), Some(t));
+        }
+        assert_eq!(Transport::parse("uds"), Some(Transport::Socket));
+        assert!(Transport::parse("carrier-pigeon").is_none());
+    }
+
+    #[test]
+    fn endpoint_parse_families() {
+        assert_eq!(Endpoint::parse("unix:/tmp/x.sock"), Endpoint::Unix("/tmp/x.sock".into()));
+        assert_eq!(Endpoint::parse("tcp:127.0.0.1:4000"), Endpoint::Tcp("127.0.0.1:4000".into()));
+        assert_eq!(Endpoint::parse("/tmp/bare.sock"), Endpoint::Unix("/tmp/bare.sock".into()));
+    }
+
+    #[test]
+    fn mats_payload_roundtrips_bitwise() {
+        let mut rng = Pcg::new(41);
+        let mats = vec![
+            rng.normal_mat(3, 5, 1.0),
+            Mat::zeros(0, 7),
+            Mat::from_vec(1, 1, vec![f32::MIN_POSITIVE]),
+            rng.normal_mat(8, 2, 1e-8),
+        ];
+        let decoded = decode_mats(&encode_mats(&mats)).unwrap();
+        assert_eq!(decoded.len(), mats.len());
+        for (d, m) in decoded.iter().zip(&mats) {
+            assert_eq!(d.shape(), m.shape());
+            assert_eq!(d.data(), m.data());
+        }
+        // Empty list.
+        assert!(decode_mats(&encode_mats(&[])).unwrap().is_empty());
+    }
+
+    #[test]
+    fn f64_payload_roundtrips_bitwise() {
+        let vals = vec![0.1f64, -3.5e300, f64::MIN_POSITIVE, 0.0];
+        let decoded = decode_f64s(&encode_f64s(&vals)).unwrap();
+        assert_eq!(decoded.len(), vals.len());
+        for (d, v) in decoded.iter().zip(&vals) {
+            assert_eq!(d.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn corrupt_payloads_are_rejected() {
+        let good = encode_mats(&[Mat::zeros(2, 2)]);
+        assert!(decode_mats(&good[..good.len() - 1]).is_err(), "truncation");
+        let mut extra = good.clone();
+        extra.push(0);
+        assert!(decode_mats(&extra).is_err(), "trailing bytes");
+        assert!(decode_f64s(&encode_mats(&[Mat::zeros(1, 1)])).is_err(), "type confusion");
+    }
+
+    #[test]
+    fn gathered_roundtrip() {
+        let parts = vec![vec![1u8, 2, 3], Vec::new(), vec![9u8; 100]];
+        assert_eq!(decode_gathered(&encode_gathered(&parts)).unwrap(), parts);
+    }
+
+    #[test]
+    fn socket_world_exchanges_in_rank_order() {
+        for world in [1usize, 2, 4] {
+            let outs = run_ranks_socket(world, |c| {
+                assert_eq!(c.world_size(), world);
+                let parts = c.exchange_f64(vec![c.rank() as f64 * 10.0]);
+                parts.iter().map(|p| p[0]).collect::<Vec<_>>()
+            });
+            for got in outs {
+                assert_eq!(got, (0..world).map(|r| r as f64 * 10.0).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn socket_repeated_exchanges_keep_rounds_separated() {
+        let world = 3;
+        let outs = run_ranks_socket(world, |c| {
+            let mut acc = Vec::new();
+            for round in 0..20u32 {
+                if c.rank() == round as usize % world {
+                    std::hint::black_box((0..500).map(|i| i as f64).sum::<f64>());
+                }
+                let parts = c.exchange_f64(vec![round as f64 * 100.0 + c.rank() as f64]);
+                for (r, p) in parts.iter().enumerate() {
+                    assert_eq!(p[0], round as f64 * 100.0 + r as f64);
+                }
+                acc.push(parts[2][0]);
+            }
+            acc
+        });
+        assert!(outs.iter().all(|v| v == &outs[0]));
+    }
+
+    #[test]
+    fn stale_run_id_is_rejected_at_handshake() {
+        let rendezvous = fresh_rendezvous();
+        let run_id = fresh_run_id();
+        let rv = &rendezvous;
+        std::thread::scope(|s| {
+            let server = s.spawn(move || SocketComm::connect(0, 2, rv, run_id));
+            // A peer from a previous (dead) run: wrong run id.
+            let stale = s.spawn(move || SocketComm::connect(1, 2, rv, run_id ^ 0xdead));
+            let err = stale.join().unwrap();
+            assert!(err.is_err(), "stale peer must be rejected");
+            let msg = err.err().unwrap().to_string();
+            assert!(msg.contains("stale peer"), "unexpected rejection reason: {msg}");
+            // The real peer still assembles the world.
+            let fresh = s.spawn(move || SocketComm::connect(1, 2, rv, run_id));
+            let c0 = server.join().unwrap().expect("server");
+            let c1 = fresh.join().unwrap().expect("fresh peer");
+            let h = s.spawn(move || {
+                let parts = c1.exchange_f64(vec![4.0]);
+                (parts[0][0], parts[1][0])
+            });
+            let parts = c0.exchange_f64(vec![3.0]);
+            assert_eq!((parts[0][0], parts[1][0]), (3.0, 4.0));
+            assert_eq!(h.join().unwrap(), (3.0, 4.0));
+        });
+    }
+
+    #[test]
+    fn world_size_mismatch_is_rejected_at_handshake() {
+        let rendezvous = fresh_rendezvous();
+        let run_id = fresh_run_id();
+        let rv = &rendezvous;
+        std::thread::scope(|s| {
+            let server = s.spawn(move || SocketComm::connect(0, 2, rv, run_id));
+            let wrong = s.spawn(move || {
+                // Dials claiming a 4-rank world against a 2-rank server.
+                let ep = Endpoint::parse(rv);
+                dial_root(&ep, 1, 4, run_id)
+            });
+            assert!(wrong.join().unwrap().is_err(), "world mismatch must be rejected");
+            let ok = s.spawn(move || SocketComm::connect(1, 2, rv, run_id));
+            assert!(server.join().unwrap().is_ok());
+            assert!(ok.join().unwrap().is_ok());
+        });
+    }
+
+    #[test]
+    fn worker_env_requires_rank_below_world() {
+        // Pure parsing logic (no env mutation — tests run concurrently):
+        // rank >= world yields None via the guard.
+        assert!(worker_env().is_none() || worker_env().unwrap().rank < worker_env().unwrap().world);
+    }
+
+    #[test]
+    fn fresh_rendezvous_is_unique() {
+        let a = fresh_rendezvous();
+        let b = fresh_rendezvous();
+        assert_ne!(a, b);
+        assert!(a.starts_with("unix:"));
+    }
+}

@@ -54,7 +54,9 @@ pub fn build_model(cfg: &JobConfig, shape: ImgShape, classes: usize, rng: &mut P
 
 /// Run one image-classification job end to end. Jobs with `ranks > 1`
 /// run under the deterministic data-parallel driver
-/// ([`crate::train::train_dist`]); `ranks = 1` is the serial path.
+/// ([`crate::train::train_dist`]) over the configured transport
+/// (in-process `local` or multi-process `socket`); `ranks = 1` is the
+/// serial path.
 pub fn run_job(cfg: &JobConfig) -> RunResult {
     let mut rng = Pcg::with_stream(cfg.seed, 0xda7a);
     let ds = build_dataset(cfg, &mut rng);
@@ -69,7 +71,7 @@ pub fn run_job(cfg: &JobConfig) -> RunResult {
         eval_every: 0,
         stop_on_divergence: true,
     };
-    let dc = DistCfg { ranks: cfg.ranks, strategy: cfg.dist_strategy };
+    let dc = DistCfg { ranks: cfg.ranks, strategy: cfg.dist_strategy, transport: cfg.transport };
     train_dist(model.as_mut(), &ds, &tc, &dc)
 }
 
@@ -217,6 +219,7 @@ mod tests {
             label: "test".into(),
             ranks: 1,
             dist_strategy: crate::dist::DistStrategy::Replicated,
+            transport: crate::dist::Transport::Local,
         }
     }
 

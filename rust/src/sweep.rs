@@ -147,6 +147,7 @@ mod tests {
             label: "sweep-test".into(),
             ranks: 1,
             dist_strategy: crate::dist::DistStrategy::Replicated,
+            transport: crate::dist::Transport::Local,
         };
         let trials = random_search(&base, &Space::default(), 3, 42);
         assert_eq!(trials.len(), 3);

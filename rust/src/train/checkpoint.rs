@@ -22,8 +22,9 @@ use std::path::Path;
 const MAGIC: &[u8; 4] = b"SNGD";
 const VERSION: u32 = 2;
 
-fn checksum(data: &[u8]) -> u64 {
-    // FNV-1a 64.
+/// FNV-1a 64 over a byte image — shared by the checkpoint framing and
+/// the run digest of [`super::run_digest`].
+pub(super) fn checksum(data: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in data {
         h ^= b as u64;

@@ -9,7 +9,10 @@ pub use checkpoint::{
 };
 
 use crate::data::Dataset;
-use crate::dist::{self, bucket, collectives, Communicator, DistCtx, DistStrategy, LocalComm};
+use crate::dist::{
+    self, bucket, collectives, shard, transport, Communicator, DistCtx, DistStrategy, SocketComm,
+    Transport,
+};
 use crate::model::{BackwardResult, Batch, Model};
 use crate::optim::{Hyper, KronStats, Method, Optimizer};
 use crate::proptest::Pcg;
@@ -84,6 +87,31 @@ pub struct RunResult {
     pub steps_run: usize,
     /// Optimizer stability telemetry (e.g. KFAC Cholesky-failure count).
     pub telemetry: String,
+    /// FNV-1a digest over the run's loss-curve bits and final parameter
+    /// bits ([`run_digest`]) — the cross-process handle the determinism
+    /// suites compare, since formatted CSV output rounds away the bits.
+    pub param_digest: u64,
+}
+
+/// FNV-1a 64 digest ([`checkpoint::checksum`], the checkpoint framing
+/// hash) over each log row's loss bits and every parameter's f32 bits.
+/// Two runs digest equal iff their curves and final parameters are
+/// bitwise identical — the transport/rank-invariance contracts in
+/// `rust/tests/dist_proc.rs` compare these across OS processes.
+pub fn run_digest(rows: &[LogRow], params: &[Mat]) -> u64 {
+    let bytes = 12 * rows.len() + params.iter().map(|p| 4 * p.len()).sum::<usize>();
+    let mut body = Vec::with_capacity(bytes);
+    for r in rows {
+        for bits in [r.train_loss.to_bits(), r.test_loss.to_bits(), r.test_err.to_bits()] {
+            body.extend_from_slice(&bits.to_le_bytes());
+        }
+    }
+    for p in params {
+        for &v in p.data() {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    checkpoint::checksum(&body)
 }
 
 impl RunResult {
@@ -214,23 +242,38 @@ pub fn train_image_model<M: Model + ?Sized>(
         wall_secs,
         steps_run,
         telemetry: opt.telemetry(),
+        param_digest: run_digest(&rows, model.params()),
         rows,
     }
 }
 
 /// Distributed topology of a training run (the `[dist]` config section /
-/// `--ranks` CLI knob / `SINGD_RANKS` env default).
+/// `--ranks` + `--transport` CLI knobs / `SINGD_RANKS` +
+/// `SINGD_TRANSPORT` env defaults).
 #[derive(Clone, Debug)]
 pub struct DistCfg {
     /// World size; `1` falls back to the serial driver.
     pub ranks: usize,
     /// Optimizer state layout across ranks.
     pub strategy: DistStrategy,
+    /// Communicator backend: in-process threads or multi-process sockets.
+    pub transport: Transport,
 }
 
 impl Default for DistCfg {
     fn default() -> Self {
-        DistCfg { ranks: dist::default_ranks(), strategy: DistStrategy::Replicated }
+        DistCfg {
+            ranks: dist::default_ranks(),
+            strategy: DistStrategy::Replicated,
+            transport: dist::default_transport(),
+        }
+    }
+}
+
+impl DistCfg {
+    /// An explicit in-process topology (the common test fixture).
+    pub fn local(ranks: usize, strategy: DistStrategy) -> DistCfg {
+        DistCfg { ranks, strategy, transport: Transport::Local }
     }
 }
 
@@ -262,12 +305,27 @@ impl Default for DistCfg {
 ///   holds for power-of-two batch sizes and weight-sharing expansion
 ///   factors — all the shapes the experiment configs use.
 ///
-/// The batch size must be divisible by `ranks` (asserted; the CLI
-/// rejects bad combinations up front). Rank counts that divide the
-/// batch without being powers of two still train correctly (the
-/// reconstruction is the same gradient up to rounding); they just lose
-/// the bitwise guarantee. `rust/tests/dist.rs` asserts the contract end
-/// to end.
+/// The batch size must be at least `ranks` (asserted; the CLI rejects
+/// worse combinations up front). Rank counts that do not divide the
+/// batch shard it with the balanced padding rule of
+/// [`shard::row_shard_range`]: such runs are still deterministic at a
+/// fixed world size and track the serial trajectory to rounding, but
+/// odd shard row counts make the per-shard `1/m` scaling inexact, so
+/// they forfeit the bitwise guarantee. `rust/tests/dist.rs` asserts
+/// the contract end to end.
+///
+/// # Transports
+///
+/// [`Transport::Local`] runs the ranks as threads of this process over
+/// the shared-memory rendezvous. [`Transport::Socket`] runs them as
+/// separate OS processes over [`SocketComm`]: if the
+/// `SINGD_RANK`/`SINGD_WORLD`/`SINGD_RENDEZVOUS` env contract is set,
+/// this process joins the world as that rank; otherwise it re-execs
+/// itself as ranks `1..R` ([`transport::launch_workers`]) and becomes
+/// rank 0. The collectives route over either transport unchanged and
+/// exchange byte-exact payloads, so `--transport socket` is bitwise
+/// identical to `--transport local` and to serial `ranks = 1`
+/// (`rust/tests/dist_proc.rs` asserts this across real processes).
 pub fn train_dist<M: Model + ?Sized>(
     model: &mut M,
     dataset: &Dataset,
@@ -278,12 +336,26 @@ pub fn train_dist<M: Model + ?Sized>(
         return train_image_model(model, dataset, cfg);
     }
     let world = dcfg.ranks;
-    assert_eq!(
-        cfg.batch_size % world,
-        0,
-        "train_dist: batch_size {} must be divisible by ranks {world}",
+    assert!(
+        cfg.batch_size >= world,
+        "train_dist: batch_size {} must be >= ranks {world}",
         cfg.batch_size
     );
+    match dcfg.transport {
+        Transport::Local => train_dist_local(model, dataset, cfg, dcfg),
+        Transport::Socket => train_dist_socket(model, dataset, cfg, dcfg),
+    }
+}
+
+/// In-process data-parallel driver: SPMD rank closures over the
+/// shared-memory rendezvous of [`dist::run_ranks`].
+fn train_dist_local<M: Model + ?Sized>(
+    model: &mut M,
+    dataset: &Dataset,
+    cfg: &TrainCfg,
+    dcfg: &DistCfg,
+) -> RunResult {
+    let world = dcfg.ranks;
     let shapes = model.shapes();
     // One optimizer replica per rank, alive across the whole run.
     let opts: Vec<Mutex<Box<dyn Optimizer>>> = (0..world)
@@ -295,15 +367,17 @@ pub fn train_dist<M: Model + ?Sized>(
     let (rows, best, steps_run, diverged, wall_secs) =
         train_loop(model, dataset, cfg, |model, b, step, lr| {
             let model_ref = &*model;
-            let outs =
-                dist::run_ranks(world, |comm| rank_step(&comm, model_ref, b, &opts, step, lr));
-            let any_div = outs.iter().any(|o| o.diverged);
+            let outs = dist::run_ranks(world, |comm| {
+                rank_step(&comm, model_ref, b, &opts[comm.rank()], step, lr)
+            });
             let first = outs.into_iter().next().unwrap();
             // All ranks hold bitwise-identical post-step parameters
             // (redundantly for replicated, via the exact zero-padded
             // all-reduce for factor-sharded); rank 0's become canonical.
+            // The diverged flag is already OR-reduced across ranks
+            // inside rank_step, so every rank agrees on it.
             *model.params_mut() = first.params;
-            (first.loss, any_div)
+            (first.loss, first.diverged)
         });
     let final_err = rows.last().map(|r| r.test_err).unwrap_or(1.0);
     // Telemetry lives on whichever rank owns the layer that produced it,
@@ -337,6 +411,72 @@ pub fn train_dist<M: Model + ?Sized>(
         wall_secs,
         steps_run,
         telemetry,
+        param_digest: run_digest(&rows, model.params()),
+        rows,
+    }
+}
+
+/// Multi-process data-parallel driver: this process is exactly one rank
+/// of a [`SocketComm`] world (see [`train_dist`] §Transports). Every
+/// rank runs the same `train_loop` on the same seeded dataset/model and
+/// converges on identical parameters; rank 0 (the launcher) additionally
+/// reaps its workers and owns the returned [`RunResult`].
+fn train_dist_socket<M: Model + ?Sized>(
+    model: &mut M,
+    dataset: &Dataset,
+    cfg: &TrainCfg,
+    dcfg: &DistCfg,
+) -> RunResult {
+    let world = dcfg.ranks;
+    let (rank, rendezvous, run_id, mut workers) = match transport::worker_env() {
+        Some(we) => {
+            assert_eq!(
+                we.world, world,
+                "train_dist[socket]: SINGD_WORLD {} != configured ranks {world}",
+                we.world
+            );
+            (we.rank, we.rendezvous, we.run_id, Vec::new())
+        }
+        None => {
+            let rendezvous = transport::fresh_rendezvous();
+            let run_id = transport::fresh_run_id();
+            let workers = transport::launch_workers(world, &rendezvous, run_id)
+                .unwrap_or_else(|e| panic!("train_dist[socket]: launching workers: {e}"));
+            (0, rendezvous, run_id, workers)
+        }
+    };
+    let comm = SocketComm::connect(rank, world, &rendezvous, run_id)
+        .unwrap_or_else(|e| panic!("train_dist[socket]: rank {rank} rendezvous: {e}"));
+    let shapes = model.shapes();
+    let ctx = DistCtx::new(dcfg.strategy, rank, world);
+    let opt = Mutex::new(cfg.method.build_dist(&shapes, &cfg.hyper, ctx));
+    let (rows, best, steps_run, diverged, wall_secs) =
+        train_loop(model, dataset, cfg, |model, b, step, lr| {
+            let out = rank_step(&comm, &*model, b, &opt, step, lr);
+            *model.params_mut() = out.params;
+            (out.loss, out.diverged)
+        });
+    // Clean shutdown (goodbye frames) before reaping the workers.
+    drop(comm);
+    if let Err(e) = transport::wait_workers(&mut workers) {
+        panic!("train_dist[socket]: {e}");
+    }
+    let final_err = rows.last().map(|r| r.test_err).unwrap_or(1.0);
+    RunResult {
+        final_test_err: final_err,
+        best_test_err: best.min(final_err),
+        diverged,
+        optimizer_bytes: {
+            let ctx0 = DistCtx::new(dcfg.strategy, 0, world);
+            cfg.method.build_dist(&shapes, &cfg.hyper, ctx0).state_bytes()
+        },
+        wall_secs,
+        steps_run,
+        // This rank's telemetry only; under factor sharding each process
+        // sees just its owned layers (workers report via their exit
+        // status, not strings).
+        telemetry: opt.lock().unwrap_or_else(|e| e.into_inner()).telemetry(),
+        param_digest: run_digest(&rows, model.params()),
         rows,
     }
 }
@@ -351,20 +491,22 @@ struct RankStepOut {
 }
 
 fn rank_step<M: Model + ?Sized>(
-    comm: &LocalComm,
+    comm: &dyn Communicator,
     model: &M,
     batch: &Batch,
-    opts: &[Mutex<Box<dyn Optimizer>>],
+    opt: &Mutex<Box<dyn Optimizer>>,
     step: usize,
     lr: f32,
 ) -> RankStepOut {
     let world = comm.world_size();
     let rank = comm.rank();
     let m_total = batch.y.len();
-    let q = m_total / world;
+    // Contiguous balanced shard (the padding rule for non-dividing
+    // world sizes; equal blocks whenever world | rows).
+    let block = shard::row_shard_range(m_total, world, rank);
     let shard = Batch {
-        x: Mat::from_fn(q, batch.x.cols(), |r, c| batch.x.at(rank * q + r, c)),
-        y: batch.y[rank * q..(rank + 1) * q].to_vec(),
+        x: Mat::from_fn(block.len(), batch.x.cols(), |r, c| batch.x.at(block.start + r, c)),
+        y: batch.y[block.clone()].to_vec(),
     };
     let res: BackwardResult = model.forward_backward(&shard);
 
@@ -385,7 +527,7 @@ fn rank_step<M: Model + ?Sized>(
     // gradient contractions, the heaviest op in the step.
     let n = res.stats.len();
     let owned_mask: Option<Vec<bool>> =
-        opts[rank].lock().unwrap_or_else(|e| e.into_inner()).owned_layers().map(|owned| {
+        opt.lock().unwrap_or_else(|e| e.into_inner()).owned_layers().map(|owned| {
             let mut mask = vec![false; n];
             for l in owned {
                 mask[l] = true;
@@ -420,7 +562,7 @@ fn rank_step<M: Model + ?Sized>(
     // Step this rank's optimizer replica on a scratch parameter copy.
     let mut params: Vec<Mat> = model.params().clone();
     let diverged = {
-        let mut opt = opts[rank].lock().unwrap_or_else(|e| e.into_inner());
+        let mut opt = opt.lock().unwrap_or_else(|e| e.into_inner());
         opt.set_lr(lr);
         opt.step(step, &mut params, &grads, &stats);
         opt.diverged()
@@ -437,7 +579,13 @@ fn rank_step<M: Model + ?Sized>(
         }
         bucket::all_reduce_sum_bucketed(comm, &mut params, bucket::DEFAULT_BUCKET_ELEMS);
     }
-    RankStepOut { params, loss, diverged }
+    // OR-reduce the divergence flag so every rank stops at the same step
+    // — under factor sharding only the owner of a sick layer sees it,
+    // and a one-sided early stop would desynchronize the SPMD loop
+    // (fatal for the socket transport, wasteful for the local one).
+    let flags = comm.exchange_f64(vec![if diverged { 1.0 } else { 0.0 }]);
+    let any_diverged = flags.iter().any(|p| p[0] != 0.0);
+    RankStepOut { params, loss, diverged: any_diverged }
 }
 
 fn eval_row<M: Model + ?Sized>(
@@ -596,6 +744,7 @@ mod tests {
             wall_secs: 0.1,
             steps_run: 1,
             telemetry: String::new(),
+            param_digest: 0,
         };
         let csv = rr.to_csv("sgd");
         assert!(csv.starts_with("label,step"));

@@ -1,0 +1,117 @@
+//! Multi-process transport acceptance suite (ISSUE 3).
+//!
+//! Drives the actual `singd` binary (`CARGO_BIN_EXE_singd`) end to end:
+//! `train --transport socket --ranks 4` makes the launched process rank 0
+//! of a real 4-OS-process world (ranks 1–3 are re-exec'd workers joined
+//! over a Unix-socket rendezvous). The run's `param_digest` — an FNV-1a
+//! digest over every logged loss bit and every final parameter bit —
+//! must be identical to `--transport local` and to serial `--ranks 1`,
+//! for SINGD and KFAC, under both the replicated and factor-sharded
+//! strategies. ci.sh runs this suite under a hard timeout so a hung
+//! rendezvous fails fast instead of stalling CI.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_singd")
+}
+
+/// A tiny deterministic job: 4-batch MLP epoch over the synthetic
+/// CIFAR stand-in (seconds per run, exercises the full dist stack).
+fn write_job(name: &str, method: &str) -> PathBuf {
+    let toml = format!(
+        "label = \"dist-proc\"\n\
+         [model]\narch = \"mlp\"\nwidth = 32\n\
+         [data]\nclasses = 4\nn_train = 128\nn_test = 32\n\
+         [optim]\nmethod = \"{method}\"\nlr = 0.01\ndamping = 0.1\nt_update = 1\n\
+         [train]\nepochs = 1\nbatch_size = 32\nseed = 11\n"
+    );
+    let path = std::env::temp_dir()
+        .join(format!("singd-dist-proc-{}-{name}.toml", std::process::id()));
+    std::fs::write(&path, toml).expect("write job config");
+    path
+}
+
+/// Run `singd train` with the given extra flags; return its param digest.
+/// The parent env's SINGD_* knobs are cleared so the CI matrix cannot
+/// leak a world size or transport into the child.
+fn digest_of(config: &std::path::Path, extra: &[&str]) -> String {
+    let mut cmd = Command::new(bin());
+    cmd.arg("train").arg("--config").arg(config).args(extra);
+    for k in ["SINGD_RANKS", "SINGD_TRANSPORT", "SINGD_RANK", "SINGD_WORLD", "SINGD_RENDEZVOUS"] {
+        cmd.env_remove(k);
+    }
+    let out = cmd.output().expect("spawn singd");
+    let stdout = String::from_utf8_lossy(&out.stdout).to_string();
+    assert!(
+        out.status.success(),
+        "singd train {extra:?} failed ({}):\nstdout: {stdout}\nstderr: {}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let tok = stdout
+        .split_whitespace()
+        .skip_while(|t| *t != "param_digest")
+        .nth(1)
+        .unwrap_or_else(|| panic!("no param_digest in output:\n{stdout}"))
+        .to_string();
+    assert_eq!(tok.len(), 16, "malformed digest '{tok}'");
+    tok
+}
+
+#[test]
+fn socket_ranks4_bitwise_matches_local_and_serial_for_singd_and_kfac() {
+    for method in ["singd:diag", "kfac"] {
+        let cfg = write_job(&method.replace(':', "-"), method);
+        let serial = digest_of(&cfg, &["--ranks", "1"]);
+        for strategy in ["replicated", "factor-sharded"] {
+            let local = digest_of(
+                &cfg,
+                &["--ranks", "4", "--strategy", strategy, "--transport", "local"],
+            );
+            let socket = digest_of(
+                &cfg,
+                &["--ranks", "4", "--strategy", strategy, "--transport", "socket"],
+            );
+            assert_eq!(
+                serial, local,
+                "{method}/{strategy}: local ranks=4 diverged from serial"
+            );
+            assert_eq!(
+                serial, socket,
+                "{method}/{strategy}: socket ranks=4 (separate processes) diverged from serial"
+            );
+        }
+        std::fs::remove_file(&cfg).ok();
+    }
+}
+
+#[test]
+fn socket_ranks2_smoke_with_csv_output() {
+    // The multi-process smoke documented in README §Distributed: socket
+    // transport also writes the rank-0 CSV, and workers stay silent.
+    let cfg = write_job("smoke", "sgd");
+    let out_csv = std::env::temp_dir()
+        .join(format!("singd-dist-proc-smoke-{}.csv", std::process::id()));
+    let mut cmd = Command::new(bin());
+    cmd.arg("train")
+        .arg("--config")
+        .arg(&cfg)
+        .args(["--ranks", "2", "--transport", "socket", "--out"])
+        .arg(&out_csv);
+    for k in ["SINGD_RANKS", "SINGD_TRANSPORT", "SINGD_RANK", "SINGD_WORLD", "SINGD_RENDEZVOUS"] {
+        cmd.env_remove(k);
+    }
+    let out = cmd.output().expect("spawn singd");
+    assert!(
+        out.status.success(),
+        "socket smoke failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let csv = std::fs::read_to_string(&out_csv).expect("rank 0 must write the CSV");
+    assert!(csv.starts_with("label,step"), "csv header");
+    assert!(csv.lines().count() >= 2, "csv rows");
+    std::fs::remove_file(&cfg).ok();
+    std::fs::remove_file(&out_csv).ok();
+}
