@@ -28,6 +28,14 @@ cargo clippy --all-targets -- -D warnings \
 echo "== cargo build --release =="
 cargo build --release
 
+echo "== cargo doc --no-deps (rustdoc warnings are errors) =="
+# rust/src/dist carries #![deny(missing_docs)]; this leg additionally
+# fails on broken intra-doc links anywhere in the crate.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -q
+
+echo "== docs link check (relative paths + file:line anchors) =="
+python3 tools/check_links.py ARCHITECTURE.md PROTOCOL.md README.md EXPERIMENTS.md ROADMAP.md
+
 # Hard per-suite timeout for anything that exercises a rendezvous
 # (in-process or socket): a hung rendezvous must fail fast, never stall
 # the suite. Also applied to the tier-1 test run below, which includes
@@ -37,23 +45,28 @@ DIST_TIMEOUT="${SINGD_CI_DIST_TIMEOUT:-900}"
 echo "== cargo test -q =="
 timeout "$((2 * DIST_TIMEOUT))" cargo test -q
 
-echo "== determinism suites (SINGD_THREADS x SINGD_RANKS x SINGD_TRANSPORT matrix) =="
-# The bitwise contracts must hold at every pool size, world size and
-# transport: serial vs pooled kernels (tests/parallel.rs) and serial vs
-# distributed training (tests/dist.rs, which also exercises the
-# SINGD_RANKS / SINGD_TRANSPORT env defaults). Every dist leg runs under
-# a hard timeout so a hung rendezvous fails fast instead of stalling the
-# suite; the ranks=4 leg fans out over both transports.
+echo "== determinism suites (SINGD_THREADS x SINGD_RANKS x SINGD_TRANSPORT x SINGD_ALGO matrix) =="
+# The bitwise contracts must hold at every pool size, world size,
+# transport and collective algorithm: serial vs pooled kernels
+# (tests/parallel.rs) and serial vs distributed training (tests/dist.rs,
+# which also exercises the SINGD_RANKS / SINGD_TRANSPORT / SINGD_ALGO
+# env defaults — DistCfg::local follows SINGD_ALGO, so the whole dist
+# suite trains through both schedules). Every dist leg runs under a hard
+# timeout so a hung rendezvous fails fast instead of stalling the suite;
+# the ranks=4 leg fans out over both transports and both algorithms.
 for t in 1 4; do
     echo "-- SINGD_THREADS=$t: parallel suite"
     SINGD_THREADS=$t cargo test -q --test parallel
     for r in 1 4; do
         transports="local"
-        if [ "$r" = 4 ]; then transports="local socket"; fi
+        algos="ring"
+        if [ "$r" = 4 ]; then transports="local socket"; algos="star ring"; fi
         for tr in $transports; do
-            echo "-- SINGD_THREADS=$t SINGD_RANKS=$r SINGD_TRANSPORT=$tr: dist suite"
-            SINGD_THREADS=$t SINGD_RANKS=$r SINGD_TRANSPORT=$tr \
-                timeout "$DIST_TIMEOUT" cargo test -q --test dist
+            for al in $algos; do
+                echo "-- SINGD_THREADS=$t SINGD_RANKS=$r SINGD_TRANSPORT=$tr SINGD_ALGO=$al: dist suite"
+                SINGD_THREADS=$t SINGD_RANKS=$r SINGD_TRANSPORT=$tr SINGD_ALGO=$al \
+                    timeout "$DIST_TIMEOUT" cargo test -q --test dist
+            done
         done
     done
 done

@@ -1,39 +1,57 @@
-//! Distributed-scaling bench: step time and per-rank Kronecker-factor
-//! memory vs. world size, for both dist strategies.
+//! Distributed-scaling bench: step time, per-rank Kronecker-factor
+//! memory, and per-rank bytes-on-wire vs. world size — for both dist
+//! strategies and both collective algorithms (star vs ring).
 //!
 //! Same JSON shape as `BENCH_hotpath.json` (a `cases` array of timing
-//! stats), with per-case `ranks` / `strategy` / `per_rank_state_bytes`
-//! fields. The memory column is the paper's Table-3 story stretched
-//! across ranks: under `factor-sharded`, per-rank factor bytes drop
-//! ~1/R while the replicated strategy pays the full footprint on every
-//! rank.
+//! stats) with per-case `ranks` / `strategy` / `algo` /
+//! `per_rank_state_bytes` / `wire_bytes_by_rank` fields, plus a
+//! `collectives` array that isolates the bandwidth story: one all-reduce
+//! of a fixed payload, measured through `singd::dist::traffic`. The
+//! memory column is the paper's Table-3 story stretched across ranks;
+//! the wire column is the ISSUE-4 story — the star's rank-0 fan-in sends
+//! `~(R−1)·R·N` bytes from rank 0 while the ring sends a balanced
+//! `~2·(R−1)/R·N` from every rank.
 //!
 //! Run: `cargo bench --bench dist_scaling`
 //! CI:  `cargo bench --bench dist_scaling -- --smoke`
 
 use singd::bench::{Harness, Stats};
 use singd::data;
-use singd::dist::{DistCtx, DistStrategy};
+use singd::dist::{self, collectives, traffic, Algo, DistCtx, DistStrategy};
 use singd::model::cnn::ImgShape;
 use singd::model::Mlp;
 use singd::optim::{Hyper, Method, Optimizer};
 use singd::proptest::Pcg;
-use singd::tensor::pool;
+use singd::tensor::{pool, Mat};
 use singd::train::{train_dist, DistCfg, TrainCfg};
 
 struct Row {
     stats: Stats,
     ranks: usize,
     strategy: &'static str,
+    algo: &'static str,
     per_rank_state_bytes: usize,
+    wire_bytes_by_rank: Vec<u64>,
     steps: usize,
+}
+
+struct CollectiveRow {
+    algo: &'static str,
+    world: usize,
+    payload_bytes: usize,
+    sent_by_rank: Vec<u64>,
 }
 
 fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
-fn write_json(rows: &[Row], smoke: bool) {
+fn json_u64_array(xs: &[u64]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(", "))
+}
+
+fn write_json(rows: &[Row], colls: &[CollectiveRow], smoke: bool) {
     let mut out = String::from("{\n");
     out.push_str("  \"bench\": \"dist_scaling\",\n");
     out.push_str(&format!("  \"smoke\": {smoke},\n"));
@@ -42,7 +60,7 @@ fn write_json(rows: &[Row], smoke: bool) {
     for (i, row) in rows.iter().enumerate() {
         let s = &row.stats;
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"iters\": {}, \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \"min_ns\": {:.1}, \"max_ns\": {:.1}, \"ranks\": {}, \"strategy\": \"{}\", \"steps\": {}, \"median_step_ns\": {:.1}, \"per_rank_state_bytes\": {}}}",
+            "    {{\"name\": \"{}\", \"iters\": {}, \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \"min_ns\": {:.1}, \"max_ns\": {:.1}, \"ranks\": {}, \"strategy\": \"{}\", \"algo\": \"{}\", \"steps\": {}, \"median_step_ns\": {:.1}, \"per_rank_state_bytes\": {}, \"wire_bytes_by_rank\": {}, \"max_rank_wire_bytes\": {}}}",
             json_escape(&s.name),
             s.iters,
             s.median_ns,
@@ -51,16 +69,54 @@ fn write_json(rows: &[Row], smoke: bool) {
             s.max_ns,
             row.ranks,
             row.strategy,
+            row.algo,
             row.steps,
             s.median_ns / row.steps.max(1) as f64,
             row.per_rank_state_bytes,
+            json_u64_array(&row.wire_bytes_by_rank),
+            row.wire_bytes_by_rank.iter().max().copied().unwrap_or(0),
         ));
         out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"collectives\": [\n");
+    for (i, c) in colls.iter().enumerate() {
+        let max = c.sent_by_rank.iter().max().copied().unwrap_or(0);
+        let ring_optimal =
+            2 * (c.world as u64 - 1) * c.payload_bytes as u64 / c.world as u64;
+        out.push_str(&format!(
+            "    {{\"op\": \"all_reduce\", \"algo\": \"{}\", \"world\": {}, \"payload_bytes\": {}, \"sent_by_rank\": {}, \"max_rank_sent_bytes\": {}, \"ring_optimal_per_rank_bytes\": {}}}",
+            c.algo,
+            c.world,
+            c.payload_bytes,
+            json_u64_array(&c.sent_by_rank),
+            max,
+            ring_optimal,
+        ));
+        out.push_str(if i + 1 < colls.len() { ",\n" } else { "\n" });
     }
     out.push_str("  ]\n}\n");
     match std::fs::write("BENCH_dist_scaling.json", &out) {
         Ok(()) => println!("-- wrote BENCH_dist_scaling.json"),
         Err(e) => eprintln!("-- failed to write BENCH_dist_scaling.json: {e}"),
+    }
+}
+
+/// Per-rank payload-frame bytes of one `all_reduce_sum` of `payload`
+/// under `algo` at `world` ranks (in-process transport; the byte model
+/// is the socket frame layout either way).
+fn measure_collective(world: usize, algo: Algo, payload: &Mat) -> CollectiveRow {
+    traffic::reset();
+    let outs = dist::run_ranks_algo(world, algo, |c| {
+        let red = collectives::all_reduce_sum(&c, std::slice::from_ref(payload));
+        red[0].at(0, 0)
+    });
+    assert!(outs.iter().all(|&x| x == outs[0]));
+    CollectiveRow {
+        algo: algo.name(),
+        world,
+        payload_bytes: 4 * payload.len(),
+        sent_by_rank: traffic::sent_by_rank(world),
     }
 }
 
@@ -99,39 +155,83 @@ fn main() {
             if ranks == 1 && strategy == DistStrategy::FactorSharded {
                 continue; // degenerate: identical to replicated
             }
-            let shapes: Vec<(usize, usize)> =
-                dims.windows(2).map(|w| (w[1], w[0] + 1)).collect();
-            let per_rank_state_bytes = method
-                .build_dist(&shapes, &cfg.hyper, DistCtx::new(strategy, 0, ranks))
-                .state_bytes();
-            let dc = DistCfg::local(ranks, strategy);
-            let name = format!("train step ranks={ranks} {}", strategy.name());
-            let st = h.bench(&name, || {
-                let mut mrng = Pcg::new(7);
-                let mut model = Mlp::new(&mut mrng, &dims);
-                let res = train_dist(&mut model, &ds, &cfg, &dc);
-                assert!(!res.diverged, "bench run diverged");
-            });
-            println!(
-                "{:>46} {:.2} ms/step, {} per-rank state bytes",
-                "->",
-                st.median_ns / steps as f64 / 1e6,
-                per_rank_state_bytes
-            );
-            rows.push(Row {
-                stats: st,
-                ranks,
-                strategy: strategy.name(),
-                per_rank_state_bytes,
-                steps,
-            });
+            for algo in [Algo::Star, Algo::Ring] {
+                if ranks == 1 && algo == Algo::Star {
+                    continue; // no collectives at world 1: one baseline row
+                }
+                let shapes: Vec<(usize, usize)> =
+                    dims.windows(2).map(|w| (w[1], w[0] + 1)).collect();
+                let per_rank_state_bytes = method
+                    .build_dist(&shapes, &cfg.hyper, DistCtx::new(strategy, 0, ranks))
+                    .state_bytes();
+                let mut dc = DistCfg::local(ranks, strategy);
+                dc.algo = algo;
+                // One traffic-accounted run before timing: per-rank
+                // payload-frame bytes for the whole 8-step epoch.
+                traffic::reset();
+                {
+                    let mut mrng = Pcg::new(7);
+                    let mut model = Mlp::new(&mut mrng, &dims);
+                    let res = train_dist(&mut model, &ds, &cfg, &dc);
+                    assert!(!res.diverged, "bench run diverged");
+                }
+                let wire_bytes_by_rank = traffic::sent_by_rank(ranks);
+                let name =
+                    format!("train step ranks={ranks} {} {}", strategy.name(), algo.name());
+                let st = h.bench(&name, || {
+                    let mut mrng = Pcg::new(7);
+                    let mut model = Mlp::new(&mut mrng, &dims);
+                    let res = train_dist(&mut model, &ds, &cfg, &dc);
+                    assert!(!res.diverged, "bench run diverged");
+                });
+                println!(
+                    "{:>46} {:.2} ms/step, {} per-rank state bytes, wire max {} B/rank",
+                    "->",
+                    st.median_ns / steps as f64 / 1e6,
+                    per_rank_state_bytes,
+                    wire_bytes_by_rank.iter().max().copied().unwrap_or(0),
+                );
+                rows.push(Row {
+                    stats: st,
+                    ranks,
+                    strategy: strategy.name(),
+                    algo: algo.name(),
+                    per_rank_state_bytes,
+                    wire_bytes_by_rank,
+                    steps,
+                });
+            }
         }
     }
 
+    // The bandwidth story isolated: one 1-MiB all-reduce at world 4.
+    // Star: rank 0 sends (R−1)·(gathered blob ≈ R·N); ring: every rank
+    // sends 2·(R−1)/R·N.
+    let payload = Mat::from_fn(512, 512, |r, c| (r * 31 + c) as f32 * 1e-3);
+    let colls: Vec<CollectiveRow> = [Algo::Star, Algo::Ring]
+        .iter()
+        .map(|&algo| {
+            let c = measure_collective(4, algo, &payload);
+            println!(
+                "-- all_reduce 1 MiB world=4 {}: sent/rank {:?} (max {} B)",
+                c.algo,
+                c.sent_by_rank,
+                c.sent_by_rank.iter().max().copied().unwrap_or(0),
+            );
+            c
+        })
+        .collect();
+
     // The headline memory claim in one line: sharded rank-0 bytes vs
     // replicated, at the largest world size.
-    let rep = rows.iter().find(|r| r.ranks == 4 && r.strategy == "replicated").unwrap();
-    let sh = rows.iter().find(|r| r.ranks == 4 && r.strategy == "factor-sharded").unwrap();
+    let rep = rows
+        .iter()
+        .find(|r| r.ranks == 4 && r.strategy == "replicated" && r.algo == "ring")
+        .unwrap();
+    let sh = rows
+        .iter()
+        .find(|r| r.ranks == 4 && r.strategy == "factor-sharded" && r.algo == "ring")
+        .unwrap();
     println!(
         "-- ranks=4 per-rank factor state: replicated {} B, factor-sharded {} B ({:.2}x)",
         rep.per_rank_state_bytes,
@@ -142,7 +242,7 @@ fn main() {
     if smoke {
         println!("-- smoke mode: skipping BENCH_dist_scaling.json");
     } else {
-        write_json(&rows, smoke);
+        write_json(&rows, &colls, smoke);
     }
     h.finish();
 }

@@ -60,7 +60,7 @@ singd — Structured Inverse-Free Natural Gradient Descent (paper reproduction)
 USAGE:
   singd train   --config <file.toml> [--out <curves.csv>]
                 [--ranks <R>] [--strategy <replicated|factor-sharded>]
-                [--transport <local|socket>]
+                [--transport <local|socket>] [--algo <star|ring>]
   singd sweep   --config <file.toml> [--trials <N>] [--seed <S>]
   singd gcn     [--method <sgd|adamw|kfac|ingd|singd:diag|...>] [--steps <N>]
   singd inspect [--structure <dense|diag|block:k|tril|rankk:k|hier:k|toeplitz>] [--dim <d>]
@@ -72,8 +72,11 @@ shards the Kronecker factors (per-rank state ~1/R). --transport local
 (default; SINGD_TRANSPORT env overrides) runs the ranks as threads of
 this process; --transport socket re-execs this binary as R-1 worker
 processes joined over a Unix-socket rendezvous (SINGD_RANK/SINGD_WORLD/
-SINGD_RENDEZVOUS env contract). Either transport at ranks=R is bitwise
-identical to ranks=1 for power-of-two R dividing the batch size;
+SINGD_RENDEZVOUS env contract). --algo ring (default; SINGD_ALGO env
+overrides) runs the collectives as bandwidth-balanced ring schedules
+over a full peer mesh; --algo star funnels them through rank 0 — both
+are bitwise identical. Either transport and either algo at ranks=R is
+bitwise identical to ranks=1 for power-of-two R dividing the batch size;
 non-dividing R <= batch still train deterministically via the balanced
 padding rule. SINGD_THREADS caps the worker pool all ranks share.
 
@@ -153,6 +156,15 @@ fn cmd_train(args: &Args) -> i32 {
             }
         }
     }
+    if let Some(al) = args.get("algo") {
+        match crate::dist::Algo::parse(al) {
+            Some(a) => cfg.algo = a,
+            None => {
+                eprintln!("error: bad --algo '{al}' (star | ring)");
+                return 2;
+            }
+        }
+    }
     // Catch this here (covers --ranks, [dist] ranks and SINGD_RANKS alike)
     // so a bad combination is a clean CLI error, not a driver panic.
     if cfg.ranks > 1 && cfg.batch_size < cfg.ranks {
@@ -179,7 +191,7 @@ fn cmd_train(args: &Args) -> i32 {
         return if res.diverged { 1 } else { 0 };
     }
     println!(
-        "training {} / {} with {} ({}), {} epochs, ranks={} ({}, {})",
+        "training {} / {} with {} ({}), {} epochs, ranks={} ({}, {}, {})",
         cfg.label,
         cfg.dataset,
         cfg.method.name(),
@@ -187,7 +199,8 @@ fn cmd_train(args: &Args) -> i32 {
         cfg.epochs,
         cfg.ranks,
         cfg.dist_strategy.name(),
-        cfg.transport.name()
+        cfg.transport.name(),
+        cfg.algo.name()
     );
     let res = exp::run_job(&cfg);
     for r in &res.rows {
@@ -349,6 +362,7 @@ mod tests {
         assert_eq!(run(&sv(&["train", "--config", p, "--ranks", "0"])), 2);
         assert_eq!(run(&sv(&["train", "--config", p, "--ranks", "x"])), 2);
         assert_eq!(run(&sv(&["train", "--config", p, "--transport", "pigeon"])), 2);
+        assert_eq!(run(&sv(&["train", "--config", p, "--algo", "mesh"])), 2);
         // batch_size 32 (default) smaller than the world size → clean
         // error, not a driver assert. (Non-dividing ranks <= batch are
         // allowed: they shard via the balanced padding rule.)

@@ -33,9 +33,10 @@
 //! ranks = 4                    # default: SINGD_RANKS env, else 1
 //! strategy = "factor-sharded"  # replicated | factor-sharded
 //! transport = "socket"         # local | socket (default: SINGD_TRANSPORT env, else local)
+//! algo = "ring"                # star | ring (default: SINGD_ALGO env, else ring)
 //! ```
 
-use crate::dist::{self, DistStrategy, Transport};
+use crate::dist::{self, Algo, DistStrategy, Transport};
 use crate::numerics::Policy;
 use crate::optim::{Hyper, Method};
 use crate::train::Schedule;
@@ -228,6 +229,9 @@ pub struct JobConfig {
     /// Communicator backend (`[dist] transport`; defaults to the
     /// `SINGD_TRANSPORT` env contract, else in-process `local`).
     pub transport: Transport,
+    /// Collective algorithm (`[dist] algo`; defaults to the `SINGD_ALGO`
+    /// env contract, else the bandwidth-optimal `ring`).
+    pub algo: Algo,
 }
 
 impl JobConfig {
@@ -276,6 +280,9 @@ impl JobConfig {
         let default_tr = dist::default_transport();
         let transport = Transport::parse(t.str_or("dist.transport", default_tr.name()))
             .ok_or_else(|| format!("unknown dist.transport '{}'", t.str_or("dist.transport", "")))?;
+        let default_algo = dist::default_algo();
+        let algo = Algo::parse(t.str_or("dist.algo", default_algo.name()))
+            .ok_or_else(|| format!("unknown dist.algo '{}'", t.str_or("dist.algo", "")))?;
         Ok(JobConfig {
             arch,
             dataset: t.str_or("data.dataset", "cifar100").to_string(),
@@ -292,6 +299,7 @@ impl JobConfig {
             ranks,
             dist_strategy,
             transport,
+            algo,
         })
     }
 
@@ -404,5 +412,17 @@ seed = 7
         let cfg = JobConfig::from_str_toml("[model]\narch = \"mlp\"\n").unwrap();
         assert_eq!(cfg.transport, dist::default_transport());
         assert!(JobConfig::from_str_toml("[dist]\ntransport = \"pigeon\"\n").is_err());
+    }
+
+    #[test]
+    fn dist_section_parses_algo() {
+        let cfg = JobConfig::from_str_toml("[dist]\nalgo = \"star\"\n").unwrap();
+        assert_eq!(cfg.algo, Algo::Star);
+        let cfg = JobConfig::from_str_toml("[dist]\nalgo = \"ring\"\n").unwrap();
+        assert_eq!(cfg.algo, Algo::Ring);
+        // Default follows the SINGD_ALGO env contract (ring when unset).
+        let cfg = JobConfig::from_str_toml("[model]\narch = \"mlp\"\n").unwrap();
+        assert_eq!(cfg.algo, dist::default_algo());
+        assert!(JobConfig::from_str_toml("[dist]\nalgo = \"mesh\"\n").is_err());
     }
 }

@@ -1,15 +1,43 @@
-//! Deterministic collectives over [`Mat`] buffers.
+//! Deterministic collectives over [`Mat`] buffers, in two
+//! interchangeable algorithms ([`Algo`]).
 //!
 //! Every reducing collective combines rank contributions with one fixed
 //! balanced halving tree ([`tree_sum_f64`] / the private `tree_combine`),
 //! so the floating-point reduction order is a function of the world size
-//! alone — never of thread scheduling. This extends the crate's
-//! serial/pooled bitwise-parity contract (`rust/tests/parallel.rs`) to
-//! the distributed layer.
+//! alone — never of thread scheduling, transport, *or algorithm*. This
+//! extends the crate's serial/pooled bitwise-parity contract
+//! (`rust/tests/parallel.rs`) to the distributed layer; the star/ring ×
+//! local/socket conformance suite in `rust/tests/dist.rs` asserts it on
+//! randomized shapes.
+//!
+//! # The two algorithms
+//!
+//! - [`Algo::Star`] routes every collective through the
+//!   barrier-exchange primitive ([`Communicator::exchange_mats`]): each
+//!   rank deposits its payload, receives all `R` payloads, and reduces
+//!   locally. On the socket transport this is a rank-0 fan-in — rank 0
+//!   moves `O(R²·N)` bytes per all-reduce, the bottleneck at larger
+//!   worlds.
+//! - [`Algo::Ring`] (the default, [`super::default_algo`]) is built on
+//!   the point-to-point seam ([`Communicator::send_recv_bytes`]):
+//!   a **pairwise-exchange reduce-scatter** followed by a **ring
+//!   all-gather**. The payload is chunked by the canonical shard plan
+//!   ([`super::shard::row_shard_range`], so the chunk schedule is a pure
+//!   function of `(len, world)`); at step `s ∈ 1..R` rank `r` sends its
+//!   contribution for chunk `(r+s) mod R` to that chunk's owner and
+//!   receives rank `(r−s) mod R`'s contribution for its own chunk. After
+//!   `R−1` steps the owner holds all `R` raw contributions and reduces
+//!   them **with the same halving tree the star uses** — in-transit
+//!   accumulation would force a sequential fold and break star/ring
+//!   bitwise parity, so the reduction happens at the destination. The
+//!   reduced chunks then circulate around the ring (`R−1` neighbor hops,
+//!   pure data movement). Every rank sends `2·(R−1)/R·N` bytes per
+//!   all-reduce — balanced, no hotspot (`rust/src/dist/traffic.rs`
+//!   measures exactly this in `benches/dist_scaling.rs`).
 //!
 //! # Rank-count invariance
 //!
-//! A tree-ordered reduction makes results reproducible *at a fixed world
+//! A fixed-order reduction makes results reproducible *at a fixed world
 //! size*. Bitwise invariance *across* world sizes additionally needs the
 //! leaf partition to align with the tree: a sum over `m` items sharded
 //! contiguously across `R = 2^k` ranks (with `R | m`) reproduces the
@@ -18,12 +46,47 @@
 //! tree's top `k` levels. The training driver relies on this for loss
 //! accumulation, and sidesteps the question entirely for gradients by
 //! gathering raw statistics rows (exact concatenation) and all-reducing
-//! zero-padded updates (one nonzero contributor per element — any tree
-//! gives the same bits).
+//! zero-padded updates (one nonzero contributor per element — any
+//! reduction order gives the same bits).
 
+use super::transport::{decode_mats, encode_mats};
 use super::Communicator;
 use crate::tensor::Mat;
 use std::sync::Arc;
+
+/// Collective algorithm selector: rank-0 fan-in star vs bandwidth-optimal
+/// ring (see the module docs for schedules and byte counts). Both are
+/// bitwise identical on any input; the knob is purely about where the
+/// bytes flow.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Gather every payload at every rank through the rank-0 barrier
+    /// exchange and reduce locally.
+    Star,
+    /// Pairwise-exchange reduce-scatter + ring all-gather over the
+    /// point-to-point seam; `~2·(R−1)/R·N` bytes per rank.
+    Ring,
+}
+
+impl Algo {
+    /// Parse `"star"` / `"ring"` (aliases: `"fanin"`, `"tree"` for star;
+    /// `"pairwise"` for ring).
+    pub fn parse(s: &str) -> Option<Algo> {
+        match s.to_ascii_lowercase().as_str() {
+            "star" | "fanin" | "fan-in" | "tree" => Some(Algo::Star),
+            "ring" | "pairwise" => Some(Algo::Ring),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (the string [`Algo::parse`] round-trips).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Star => "star",
+            Algo::Ring => "ring",
+        }
+    }
+}
 
 /// Balanced halving-tree sum: `tree(x) = tree(x[..⌈n/2⌉]) + tree(x[⌈n/2⌉..])`.
 ///
@@ -60,32 +123,139 @@ fn tree_combine(parts: &[Arc<Vec<Mat>>]) -> Vec<Mat> {
     }
 }
 
+/// Elementwise halving-tree sum of per-rank f32 chunks — the same
+/// association order as `tree_combine` (`x + 1.0·y` and `x + y` are the
+/// same operation bit for bit), so the ring's destination reduction is
+/// bitwise identical to the star path. Consumes the contributions (the
+/// callers build them for this call alone), so leaves move instead of
+/// copying. The `split_off` point equals the slice split of
+/// `tree_combine`, so the association order is identical.
+fn tree_combine_f32(mut parts: Vec<Vec<f32>>) -> Vec<f32> {
+    match parts.len() {
+        0 => Vec::new(),
+        1 => parts.pop().unwrap(),
+        n => {
+            let hi_parts = parts.split_off(n.div_ceil(2));
+            let mut acc = tree_combine_f32(parts);
+            let hi = tree_combine_f32(hi_parts);
+            assert_eq!(acc.len(), hi.len(), "ring reduce: chunk length mismatch");
+            for (a, b) in acc.iter_mut().zip(&hi) {
+                *a += *b;
+            }
+            acc
+        }
+    }
+}
+
+/// The pairwise-exchange reduce-scatter phase shared by every ring
+/// reducing collective: `range_of(c)` is chunk `c`'s contiguous element
+/// range of `flat`; at step `s ∈ 1..R` this rank sends its elements for
+/// chunk `(rank+s) mod R` to that chunk's owner and receives rank
+/// `(rank−s) mod R`'s contribution for its own chunk, then reduces all
+/// `R` raw contributions with the canonical halving tree (no in-transit
+/// accumulation — the destination owns the reduction order). Returns
+/// this rank's reduced chunk.
+fn ring_reduce_phase(
+    comm: &dyn Communicator,
+    flat: &[f32],
+    range_of: impl Fn(usize) -> std::ops::Range<usize>,
+) -> Vec<f32> {
+    let world = comm.world_size();
+    let rank = comm.rank();
+    let my = range_of(rank);
+    let mut contrib: Vec<Vec<f32>> = vec![Vec::new(); world];
+    contrib[rank] = flat[my.clone()].to_vec();
+    for s in 1..world {
+        let to = (rank + s) % world;
+        let from = (rank + world - s) % world;
+        let got = comm.send_recv_bytes(to, &f32s_to_bytes(&flat[range_of(to)]), from);
+        contrib[from] = bytes_to_f32s(&got, my.len());
+    }
+    tree_combine_f32(contrib)
+}
+
+/// Bit-exact f32 → LE-byte image of a chunk (the p2p payload format;
+/// `PROTOCOL.md` §Ring chunks).
+fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(4 * xs.len());
+    for v in xs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    buf
+}
+
+/// Decode a chunk, checking the element count the schedule prescribes —
+/// a mismatch is an SPMD call-order violation, not data to interpret.
+fn bytes_to_f32s(bytes: &[u8], expect: usize) -> Vec<f32> {
+    assert_eq!(
+        bytes.len(),
+        4 * expect,
+        "dist: ring chunk size mismatch (SPMD call order violated?)"
+    );
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
 /// All-reduce (sum) a list of matrices: every rank contributes its list,
-/// every rank receives the elementwise tree-ordered sum. Shapes must
-/// agree across ranks.
+/// every rank receives the elementwise halving-tree sum. Shapes must
+/// agree across ranks. Dispatches on [`Communicator::algo`]; both
+/// algorithms produce identical bits.
 pub fn all_reduce_sum(comm: &dyn Communicator, mats: &[Mat]) -> Vec<Mat> {
     if comm.world_size() == 1 {
         return mats.to_vec();
     }
-    let parts = comm.exchange_mats(mats.to_vec());
-    tree_combine(&parts)
+    match comm.algo() {
+        Algo::Star => {
+            let parts = comm.exchange_mats(mats.to_vec());
+            tree_combine(&parts)
+        }
+        Algo::Ring => ring_all_reduce(comm, mats),
+    }
 }
 
 /// Broadcast `root`'s matrices to every rank. Non-root contributions are
-/// ignored (ranks other than `root` may pass an empty list).
+/// ignored (ranks other than `root` may pass an empty list). Under
+/// [`Algo::Ring`] the payload is store-and-forwarded around the ring
+/// from the root — each rank fully receives, then forwards the identical
+/// bytes once, so the farthest rank waits `R−1` sequential hops. That
+/// trades latency for the star's rank-0 byte hotspot; broadcast is not
+/// on the training path (chunk the forward into a true pipeline before
+/// reaching for it with large payloads there).
 pub fn broadcast(comm: &dyn Communicator, root: usize, mats: Vec<Mat>) -> Vec<Mat> {
     assert!(root < comm.world_size(), "broadcast: bad root");
     if comm.world_size() == 1 {
         return mats;
     }
-    let payload = if comm.rank() == root { mats } else { Vec::new() };
-    let parts = comm.exchange_mats(payload);
-    parts[root].as_ref().clone()
+    match comm.algo() {
+        Algo::Star => {
+            let payload = if comm.rank() == root { mats } else { Vec::new() };
+            let parts = comm.exchange_mats(payload);
+            parts[root].as_ref().clone()
+        }
+        Algo::Ring => ring_broadcast(comm, root, mats),
+    }
 }
 
 /// All-gather arbitrary per-rank matrix lists, returned in rank order.
+/// Pure data movement — exact on any algorithm/transport. Under
+/// [`Algo::Ring`] the encoded lists circulate over neighbor links
+/// (`R−1` hops, forwarded byte-identically), replacing the star's rank-0
+/// fan-in; this is the collective behind the training driver's
+/// statistics gather.
 pub fn all_gather(comm: &dyn Communicator, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
-    comm.exchange_mats(mats)
+    if comm.world_size() == 1 {
+        return vec![Arc::new(mats)];
+    }
+    match comm.algo() {
+        Algo::Star => comm.exchange_mats(mats),
+        // A gather is pure data movement: a zero-copy transport returns
+        // the identical bits without the ring's encode/forward/decode
+        // hops (see [`Communicator::gather_zero_copy`]); wire transports
+        // fall through to the real ring.
+        Algo::Ring => match comm.gather_zero_copy(mats) {
+            Ok(parts) => parts,
+            Err(mats) => ring_all_gather_lists(comm, mats),
+        },
+    }
 }
 
 /// All-gather by row concatenation: every rank contributes a
@@ -96,7 +266,7 @@ pub fn all_gather_rows(comm: &dyn Communicator, m: &Mat) -> Mat {
     if comm.world_size() == 1 {
         return m.clone();
     }
-    let parts = comm.exchange_mats(vec![m.clone()]);
+    let parts = all_gather(comm, vec![m.clone()]);
     concat_rows(&parts, 0)
 }
 
@@ -116,29 +286,162 @@ pub fn concat_rows(parts: &[Arc<Vec<Mat>>], idx: usize) -> Mat {
     out
 }
 
-/// Reduce-scatter over rows: tree-sum every rank's `rows × cols`
+/// Reduce-scatter over rows: halving-tree-sum every rank's `rows × cols`
 /// contribution, then hand rank `r` its contiguous row block under the
 /// canonical shard plan of [`super::shard::row_shard_range`]. World
 /// sizes that do not divide the row count follow that padding rule
 /// (shard heights differ by at most one; a block is empty only when
 /// `rows < world`); when `world` divides `rows` every rank receives
-/// exactly `rows/world` rows.
+/// exactly `rows/world` rows. Under [`Algo::Ring`] this is the
+/// pairwise-exchange phase alone (`(R−1)/R·N` bytes per rank) — the row
+/// blocks are already at their owners, so no all-gather follows.
 pub fn reduce_scatter_rows(comm: &dyn Communicator, m: &Mat) -> Mat {
     let world = comm.world_size();
     if world == 1 {
         return m.clone();
     }
-    let summed = all_reduce_sum(comm, std::slice::from_ref(m));
-    let total = &summed[0];
-    let block = super::shard::row_shard_range(total.rows(), world, comm.rank());
-    Mat::from_fn(block.len(), total.cols(), |r, c| total.at(block.start + r, c))
+    match comm.algo() {
+        Algo::Star => {
+            let summed = all_reduce_sum(comm, std::slice::from_ref(m));
+            let total = &summed[0];
+            let block = super::shard::row_shard_range(total.rows(), world, comm.rank());
+            Mat::from_fn(block.len(), total.cols(), |r, c| total.at(block.start + r, c))
+        }
+        Algo::Ring => ring_reduce_scatter_rows(comm, m),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Ring implementations (over the point-to-point seam).
+
+/// Ring all-reduce of a matrix list: flatten, pairwise-exchange
+/// reduce-scatter over the element space, halving-tree reduce each chunk
+/// at its destination, ring all-gather, unflatten.
+fn ring_all_reduce(comm: &dyn Communicator, mats: &[Mat]) -> Vec<Mat> {
+    let mut flat: Vec<f32> = Vec::with_capacity(mats.iter().map(|m| m.len()).sum());
+    for m in mats {
+        flat.extend_from_slice(m.data());
+    }
+    let reduced = ring_all_reduce_flat(comm, &flat);
+    let mut out = Vec::with_capacity(mats.len());
+    let mut off = 0usize;
+    for m in mats {
+        let n = m.len();
+        out.push(Mat::from_vec(m.rows(), m.cols(), reduced[off..off + n].to_vec()));
+        off += n;
+    }
+    out
+}
+
+/// The flat-element-space ring all-reduce both `ring_all_reduce` and the
+/// bucketed path reduce to. Chunk `c` is
+/// `row_shard_range(len, world, c)` of the flattened payload; empty
+/// chunks (len < world) travel as empty frames so the schedule stays
+/// symmetric.
+fn ring_all_reduce_flat(comm: &dyn Communicator, flat: &[f32]) -> Vec<f32> {
+    let world = comm.world_size();
+    let rank = comm.rank();
+    let total = flat.len();
+    let chunk = |c: usize| super::shard::row_shard_range(total, world, c);
+    let my = chunk(rank);
+
+    // Phase 1 — pairwise-exchange reduce-scatter.
+    let reduced = ring_reduce_phase(comm, flat, &chunk);
+
+    // Phase 2 — ring all-gather: circulate the reduced chunks clockwise;
+    // at step s this rank forwards chunk (rank − s) mod world and
+    // receives chunk (rank − s − 1) mod world from its left neighbor.
+    let mut out = vec![0f32; total];
+    out[my.clone()].copy_from_slice(&reduced);
+    let right = (rank + 1) % world;
+    let left = (rank + world - 1) % world;
+    let mut cursor = reduced;
+    for s in 0..world - 1 {
+        let recv_idx = (rank + world - s - 1) % world;
+        let got = comm.send_recv_bytes(right, &f32s_to_bytes(&cursor), left);
+        cursor = bytes_to_f32s(&got, chunk(recv_idx).len());
+        out[chunk(recv_idx)].copy_from_slice(&cursor);
+    }
+    out
+}
+
+/// Ring reduce-scatter over rows: the pairwise-exchange phase with row
+/// blocks as chunks; the destination halving-tree matches the star
+/// path's `tree_combine` bit for bit.
+fn ring_reduce_scatter_rows(comm: &dyn Communicator, m: &Mat) -> Mat {
+    let world = comm.world_size();
+    let rank = comm.rank();
+    let (rows, cols) = m.shape();
+    // Row blocks are contiguous element ranges of the row-major data, so
+    // the shared phase applies directly with a row→element range map.
+    let erange = |c: usize| {
+        let r = super::shard::row_shard_range(rows, world, c);
+        r.start * cols..r.end * cols
+    };
+    let my_rows = super::shard::row_shard_range(rows, world, rank).len();
+    Mat::from_vec(my_rows, cols, ring_reduce_phase(comm, m.data(), erange))
+}
+
+/// Ring all-gather of per-rank matrix lists: the encoded list circulates
+/// over neighbor links and is forwarded byte-identically, so every rank
+/// decodes the exact bytes the originator produced.
+fn ring_all_gather_lists(comm: &dyn Communicator, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
+    let world = comm.world_size();
+    let rank = comm.rank();
+    let right = (rank + 1) % world;
+    let left = (rank + world - 1) % world;
+    let mut out: Vec<Option<Arc<Vec<Mat>>>> = (0..world).map(|_| None).collect();
+    let mut cursor = encode_mats(&mats);
+    out[rank] = Some(Arc::new(mats));
+    for s in 0..world - 1 {
+        let recv_idx = (rank + world - s - 1) % world;
+        let got = comm.send_recv_bytes(right, &cursor, left);
+        let decoded = decode_mats(&got)
+            .unwrap_or_else(|e| panic!("dist: corrupt ring all-gather payload: {e}"));
+        out[recv_idx] = Some(Arc::new(decoded));
+        cursor = got;
+    }
+    out.into_iter().map(|o| o.expect("ring all-gather slot")).collect()
+}
+
+/// Ring broadcast (store-and-forward): the root sends its encoded
+/// payload to its right neighbor; each rank fully receives from its left
+/// and forwards the identical bytes until the ring closes (the rank
+/// whose right neighbor is the root does not forward).
+fn ring_broadcast(comm: &dyn Communicator, root: usize, mats: Vec<Mat>) -> Vec<Mat> {
+    let world = comm.world_size();
+    let rank = comm.rank();
+    let right = (rank + 1) % world;
+    let left = (rank + world - 1) % world;
+    let (bytes, payload) = if rank == root {
+        (encode_mats(&mats), mats)
+    } else {
+        let got = comm.recv_bytes(left);
+        let decoded = decode_mats(&got)
+            .unwrap_or_else(|e| panic!("dist: corrupt ring broadcast payload: {e}"));
+        (got, decoded)
+    };
+    if right != root {
+        comm.send_bytes(right, &bytes);
+    }
+    payload
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dist::run_ranks;
+    use crate::dist::{run_ranks, run_ranks_algo};
     use crate::proptest::Pcg;
+
+    #[test]
+    fn algo_parse_roundtrip() {
+        for a in [Algo::Star, Algo::Ring] {
+            assert_eq!(Algo::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algo::parse("pairwise"), Some(Algo::Ring));
+        assert_eq!(Algo::parse("fanin"), Some(Algo::Star));
+        assert!(Algo::parse("mesh").is_none());
+    }
 
     #[test]
     fn tree_sum_uses_fixed_halving_order() {
@@ -169,11 +472,12 @@ mod tests {
 
     #[test]
     fn all_reduce_sums_with_rank_order_tree() {
+        // Both algorithms must produce the same rank-indexed halving
+        // tree: (r0+r1)+(r2+r3) at world 4.
         let mut rng = Pcg::new(13);
         let world = 4;
         let inputs: Vec<Mat> = (0..world).map(|_| rng.normal_mat(5, 3, 1.0)).collect();
         let want = {
-            // Manual (r0+r1)+(r2+r3).
             let mut a = inputs[0].clone();
             a.axpy(1.0, &inputs[1]);
             let mut b = inputs[2].clone();
@@ -182,9 +486,18 @@ mod tests {
             a
         };
         let inp = &inputs;
-        let outs = run_ranks(world, |c| all_reduce_sum(&c, std::slice::from_ref(&inp[c.rank()])));
-        for out in outs {
-            assert_eq!(out[0].data(), want.data(), "tree order must be rank-indexed");
+        for algo in [Algo::Star, Algo::Ring] {
+            let outs = run_ranks_algo(world, algo, |c| {
+                all_reduce_sum(&c, std::slice::from_ref(&inp[c.rank()]))
+            });
+            for out in outs {
+                assert_eq!(
+                    out[0].data(),
+                    want.data(),
+                    "{}: tree order must be rank-indexed",
+                    algo.name()
+                );
+            }
         }
     }
 
@@ -192,28 +505,37 @@ mod tests {
     fn broadcast_delivers_root_payload() {
         let m = Mat::from_fn(2, 2, |r, c| (r * 2 + c) as f32);
         let mr = &m;
-        let outs = run_ranks(3, |c| {
-            let payload = if c.rank() == 1 { vec![mr.clone()] } else { Vec::new() };
-            broadcast(&c, 1, payload)
-        });
-        for out in outs {
-            assert_eq!(out.len(), 1);
-            assert_eq!(out[0].data(), m.data());
+        for algo in [Algo::Star, Algo::Ring] {
+            let outs = run_ranks_algo(3, algo, |c| {
+                let payload = if c.rank() == 1 { vec![mr.clone()] } else { Vec::new() };
+                broadcast(&c, 1, payload)
+            });
+            for out in outs {
+                assert_eq!(out.len(), 1, "{}", algo.name());
+                assert_eq!(out[0].data(), m.data(), "{}", algo.name());
+            }
         }
     }
 
     #[test]
     fn all_gather_rows_stacks_in_rank_order() {
-        let outs = run_ranks(4, |c| {
-            let mine = Mat::from_fn(2, 3, |r, col| (c.rank() * 100 + r * 10 + col) as f32);
-            all_gather_rows(&c, &mine)
-        });
-        for out in outs {
-            assert_eq!(out.shape(), (8, 3));
-            for rank in 0..4 {
-                for r in 0..2 {
-                    for col in 0..3 {
-                        assert_eq!(out.at(rank * 2 + r, col), (rank * 100 + r * 10 + col) as f32);
+        for algo in [Algo::Star, Algo::Ring] {
+            let outs = run_ranks_algo(4, algo, |c| {
+                let mine = Mat::from_fn(2, 3, |r, col| (c.rank() * 100 + r * 10 + col) as f32);
+                all_gather_rows(&c, &mine)
+            });
+            for out in outs {
+                assert_eq!(out.shape(), (8, 3));
+                for rank in 0..4 {
+                    for r in 0..2 {
+                        for col in 0..3 {
+                            assert_eq!(
+                                out.at(rank * 2 + r, col),
+                                (rank * 100 + r * 10 + col) as f32,
+                                "{}",
+                                algo.name()
+                            );
+                        }
                     }
                 }
             }
@@ -223,17 +545,24 @@ mod tests {
     #[test]
     fn reduce_scatter_hands_out_summed_row_blocks() {
         let world = 4;
-        let outs = run_ranks(world, |c| {
-            let mine = Mat::from_fn(8, 2, |r, col| (c.rank() + r + col) as f32);
-            reduce_scatter_rows(&c, &mine)
-        });
-        // Sum over ranks of (rank + r + col) = 6 + 4(r + col).
-        for (rank, out) in outs.iter().enumerate() {
-            assert_eq!(out.shape(), (2, 2));
-            for r in 0..2 {
-                for col in 0..2 {
-                    let gr = rank * 2 + r;
-                    assert_eq!(out.at(r, col), (6 + 4 * (gr + col)) as f32, "rank {rank}");
+        for algo in [Algo::Star, Algo::Ring] {
+            let outs = run_ranks_algo(world, algo, |c| {
+                let mine = Mat::from_fn(8, 2, |r, col| (c.rank() + r + col) as f32);
+                reduce_scatter_rows(&c, &mine)
+            });
+            // Sum over ranks of (rank + r + col) = 6 + 4(r + col).
+            for (rank, out) in outs.iter().enumerate() {
+                assert_eq!(out.shape(), (2, 2));
+                for r in 0..2 {
+                    for col in 0..2 {
+                        let gr = rank * 2 + r;
+                        assert_eq!(
+                            out.at(r, col),
+                            (6 + 4 * (gr + col)) as f32,
+                            "{} rank {rank}",
+                            algo.name()
+                        );
+                    }
                 }
             }
         }
@@ -244,19 +573,21 @@ mod tests {
         // rows = 10, world = 4 → blocks 3, 3, 2, 2 of the summed matrix
         // (the row_shard_range padding rule).
         let world = 4;
-        let outs = run_ranks(world, |c| {
-            let mine = Mat::from_fn(10, 2, |r, col| (c.rank() + r + col) as f32);
-            reduce_scatter_rows(&c, &mine)
-        });
-        let heights = [3usize, 3, 2, 2];
-        let starts = [0usize, 3, 6, 8];
-        for (rank, out) in outs.iter().enumerate() {
-            assert_eq!(out.shape(), (heights[rank], 2), "rank {rank}");
-            for r in 0..heights[rank] {
-                for col in 0..2 {
-                    let gr = starts[rank] + r;
-                    // Sum over ranks of (rank + r + col) = 6 + 4(r + col).
-                    assert_eq!(out.at(r, col), (6 + 4 * (gr + col)) as f32, "rank {rank}");
+        for algo in [Algo::Star, Algo::Ring] {
+            let outs = run_ranks_algo(world, algo, |c| {
+                let mine = Mat::from_fn(10, 2, |r, col| (c.rank() + r + col) as f32);
+                reduce_scatter_rows(&c, &mine)
+            });
+            let heights = [3usize, 3, 2, 2];
+            let starts = [0usize, 3, 6, 8];
+            for (rank, out) in outs.iter().enumerate() {
+                assert_eq!(out.shape(), (heights[rank], 2), "{} rank {rank}", algo.name());
+                for r in 0..heights[rank] {
+                    for col in 0..2 {
+                        let gr = starts[rank] + r;
+                        // Sum over ranks of (rank + r + col) = 6 + 4(r + col).
+                        assert_eq!(out.at(r, col), (6 + 4 * (gr + col)) as f32, "rank {rank}");
+                    }
                 }
             }
         }
@@ -265,15 +596,32 @@ mod tests {
     #[test]
     fn reduce_scatter_single_row_goes_to_rank0() {
         // 1×1 input, world 4: rank 0 receives the summed row, the rest
-        // receive empty 0×1 blocks.
-        let outs = run_ranks(4, |c| {
-            let mine = Mat::from_vec(1, 1, vec![(c.rank() + 1) as f32]);
-            reduce_scatter_rows(&c, &mine)
+        // receive empty 0×1 blocks — the zero-row shard edge the ring
+        // exercises per chunk.
+        for algo in [Algo::Star, Algo::Ring] {
+            let outs = run_ranks_algo(4, algo, |c| {
+                let mine = Mat::from_vec(1, 1, vec![(c.rank() + 1) as f32]);
+                reduce_scatter_rows(&c, &mine)
+            });
+            assert_eq!(outs[0].shape(), (1, 1), "{}", algo.name());
+            assert_eq!(outs[0].at(0, 0), 10.0, "{}", algo.name());
+            for out in &outs[1..] {
+                assert_eq!(out.shape(), (0, 1), "{}", algo.name());
+            }
+        }
+    }
+
+    #[test]
+    fn ring_handles_payloads_smaller_than_world() {
+        // 3 elements across 4 ranks: chunk 3 is empty; empty frames keep
+        // the schedule symmetric and the result exact.
+        let outs = run_ranks_algo(4, Algo::Ring, |c| {
+            let mine = Mat::from_vec(1, 3, vec![1.0, 2.0, c.rank() as f32]);
+            all_reduce_sum(&c, std::slice::from_ref(&mine))
         });
-        assert_eq!(outs[0].shape(), (1, 1));
-        assert_eq!(outs[0].at(0, 0), 10.0);
-        for out in &outs[1..] {
-            assert_eq!(out.shape(), (0, 1));
+        let want: [f32; 3] = [4.0, 8.0, (0.0 + 1.0) + (2.0 + 3.0)];
+        for out in &outs {
+            assert_eq!(out[0].data(), want.as_slice());
         }
     }
 

@@ -2,17 +2,34 @@
 //! pluggable transports and ZeRO-style sharded Kronecker-factor
 //! preconditioning.
 //!
-//! Two transports implement the [`Communicator`] exchange primitive:
+//! The full design — layer diagram, wire protocol, and the reasoning
+//! behind every invariant below — lives in `ARCHITECTURE.md` and
+//! `PROTOCOL.md` at the repository root.
+//!
+//! Two transports implement the [`Communicator`] primitives:
 //!
 //! - [`Transport::Local`] ([`LocalComm`]) runs an `R`-rank data-parallel
 //!   job inside one process: ranks are SPMD closures executed
 //!   concurrently (on the persistent worker pool of
 //!   [`crate::tensor::pool`] when it is large enough, on dedicated
-//!   scoped threads otherwise) over a shared-memory rendezvous.
+//!   scoped threads otherwise) over a shared-memory rendezvous plus
+//!   per-pair point-to-point mailboxes.
 //! - [`Transport::Socket`] ([`SocketComm`], [`transport`]) joins `R`
 //!   separate OS processes over Unix-domain sockets (TCP fallback) with
-//!   a length-prefixed wire format; byte-exact payload images keep every
-//!   collective bitwise identical to the local transport.
+//!   a length-prefixed wire format: a rank-0 star for barrier exchanges
+//!   and a full peer mesh (established at rendezvous) for point-to-point
+//!   sends. Byte-exact payload images keep every collective bitwise
+//!   identical to the local transport.
+//!
+//! On top of the primitives, [`collectives`] offers two interchangeable
+//! collective algorithms ([`Algo`]): the rank-0 fan-in **star** and the
+//! bandwidth-optimal **ring** (pairwise-exchange reduce-scatter + ring
+//! all-gather, `~2·(R−1)/R·N` bytes per rank instead of the star's
+//! rank-0 hotspot). Both produce bitwise-identical results because the
+//! ring reduces every chunk at its destination with the same fixed
+//! halving tree the star uses — see [`collectives`] for the schedule.
+//! Ring is the default ([`default_algo`]); `SINGD_ALGO`, `[dist] algo`
+//! and `--algo` select explicitly.
 //!
 //! Layer-wise decomposition is the natural parallel axis for
 //! Kronecker-factored methods (Koroko et al., 2023), and the
@@ -25,40 +42,55 @@
 //! This module extends the crate's serial/pooled bitwise-parity contract
 //! (`rust/tests/parallel.rs`) across world sizes:
 //!
-//! 1. **Collectives use a fixed reduction tree.** Every reducing
+//! 1. **Collectives use a fixed reduction order.** Every reducing
 //!    collective combines rank contributions with the balanced halving
-//!    tree of [`collectives::tree_sum_f64`] — the reduction order is a
-//!    function of the world size alone, never of scheduling.
+//!    tree of [`collectives::tree_sum_f64`] — under *both* algorithms
+//!    and on *both* transports, the floating-point reduction order is a
+//!    function of the world size alone, never of scheduling
+//!    (`rust/tests/dist.rs` asserts star/ring × local/socket bitwise
+//!    conformance on randomized shapes).
 //! 2. **Rank-count invariance** is achieved by exchanging *exact* data:
 //!    the training driver ([`crate::train::train_dist`]) all-gathers raw
 //!    per-row Kronecker statistics (a concatenation, no floating-point
 //!    reduction) and recomputes contractions from the gathered
 //!    full-batch matrices with the standard kernels, and the sharded
 //!    optimizer path all-reduces zero-padded per-layer updates (each
-//!    element has exactly one nonzero contributor, so tree order cannot
-//!    change the result). Under this scheme `ranks = R` training is
-//!    bitwise identical to `ranks = 1` for any power-of-two `R` dividing
-//!    the batch size (see `rust/tests/dist.rs`).
-//! 3. A poisoned rendezvous (a rank panicking) wakes every peer so the
+//!    element has exactly one nonzero contributor, so reduction order
+//!    cannot change the result). Under this scheme `ranks = R` training
+//!    is bitwise identical to `ranks = 1` for any power-of-two `R`
+//!    dividing the batch size (see `rust/tests/dist.rs`).
+//! 3. A poisoned rendezvous (a rank panicking) wakes every peer —
+//!    including peers blocked in point-to-point receives — so the
 //!    failure propagates instead of deadlocking the process.
 //!
-//! # The `SINGD_RANKS` / `SINGD_TRANSPORT` contract
+//! Scalar exchanges ([`Communicator::exchange_f64`]: loss partials,
+//! divergence flags) always ride the barrier-exchange star regardless of
+//! [`Algo`] — they are a few bytes per step and double as the SPMD
+//! heartbeat.
 //!
-//! `SINGD_RANKS=<n>` sets the *default* world size and
-//! `SINGD_TRANSPORT=<local|socket>` the *default* transport used by
+//! # The `SINGD_RANKS` / `SINGD_TRANSPORT` / `SINGD_ALGO` contract
+//!
+//! `SINGD_RANKS=<n>` sets the *default* world size,
+//! `SINGD_TRANSPORT=<local|socket>` the *default* transport and
+//! `SINGD_ALGO=<star|ring>` the *default* collective algorithm used by
 //! config-driven entry points ([`crate::config::JobConfig`]); explicit
-//! `[dist]` config keys and `--ranks` / `--transport` CLI flags
-//! override them. Read once, cached.
+//! `[dist]` config keys and `--ranks` / `--transport` / `--algo` CLI
+//! flags override them. Read once, cached.
+#![deny(missing_docs)]
 
 pub mod bucket;
 pub mod collectives;
 pub mod shard;
+pub mod traffic;
 pub mod transport;
 
+pub use collectives::Algo;
 pub use transport::{SocketComm, Transport};
 
 use crate::tensor::{pool, Mat};
 use std::any::Any;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// How optimizer state is laid out across ranks.
@@ -87,6 +119,7 @@ impl DistStrategy {
         }
     }
 
+    /// Canonical name (the string [`DistStrategy::parse`] round-trips).
     pub fn name(&self) -> &'static str {
         match self {
             DistStrategy::Replicated => "replicated",
@@ -99,8 +132,11 @@ impl DistStrategy {
 /// their per-layer loops know which layers this rank owns.
 #[derive(Clone, Copy, Debug)]
 pub struct DistCtx {
+    /// Optimizer-state layout across ranks.
     pub strategy: DistStrategy,
+    /// This rank's index in `0..world`.
     pub rank: usize,
+    /// World size.
     pub world: usize,
 }
 
@@ -110,6 +146,7 @@ impl DistCtx {
         DistCtx { strategy: DistStrategy::Replicated, rank: 0, world: 1 }
     }
 
+    /// A validated topology handle (`rank < world`, `world >= 1`).
     pub fn new(strategy: DistStrategy, rank: usize, world: usize) -> DistCtx {
         assert!(world >= 1, "dist: world size must be >= 1");
         assert!(rank < world, "dist: rank {rank} out of range for world {world}");
@@ -166,32 +203,127 @@ pub fn default_transport() -> Transport {
     })
 }
 
-/// Rank/topology plus the SPMD exchange primitive every collective is
-/// built on: each rank contributes one payload per call and receives all
-/// ranks' payloads in rank order.
+/// Default collective algorithm: `SINGD_ALGO` (read once, cached), else
+/// [`Algo::Ring`] — the bandwidth-optimal schedule is the default for
+/// every multi-rank world (world 1 short-circuits every collective, so
+/// the knob is moot there). Explicit `[dist] algo` config keys and
+/// `--algo` CLI flags override it.
+pub fn default_algo() -> Algo {
+    static CACHED: OnceLock<Algo> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::env::var("SINGD_ALGO").ok().and_then(|v| Algo::parse(&v)).unwrap_or(Algo::Ring)
+    })
+}
+
+/// Rank/topology plus the communication primitives every collective is
+/// built on: a barrier exchange (each rank contributes one payload per
+/// call and receives all ranks' payloads in rank order) and point-to-point
+/// byte transfers (the seam the ring schedules — and any future
+/// NCCL-style backend — plug into).
 ///
-/// The exchange is a *barrier*: no rank returns before every rank has
-/// deposited, so collectives built on it are trivially synchronized. All
-/// ranks must issue the same sequence of calls (SPMD discipline).
+/// # SPMD call-order obligations
+///
+/// All ranks must issue the same global sequence of *collective
+/// operations*; within one operation, the per-rank primitive calls may
+/// differ only in the pattern the operation prescribes (e.g. a ring step
+/// sends to `(r+s) % R` while receiving from `(r−s) % R`). Concretely:
+///
+/// - every [`exchange_mats`](Communicator::exchange_mats) /
+///   [`exchange_f64`](Communicator::exchange_f64) /
+///   [`barrier`](Communicator::barrier) must be issued by **every** rank,
+///   in the same order;
+/// - every [`send_bytes`](Communicator::send_bytes) to rank `p` must be
+///   matched by exactly one [`recv_bytes`](Communicator::recv_bytes)
+///   from this rank on `p`, in the same per-link order (both transports
+///   stamp and check a per-direction sequence number, so violations fail
+///   loudly instead of delivering garbage);
+/// - a rank must never `send`/`recv` with itself.
+///
+/// Violations panic (poisoning the world) rather than misdeliver.
 pub trait Communicator {
+    /// This rank's index in `0..world_size()`.
     fn rank(&self) -> usize;
+
+    /// Number of ranks in the world.
     fn world_size(&self) -> usize;
-    /// Exchange a list of matrices; returns every rank's payload.
+
+    /// The collective algorithm the [`collectives`] dispatchers use on
+    /// this communicator (a run-level constant: every rank of a world
+    /// must be constructed with the same value).
+    fn algo(&self) -> Algo;
+
+    /// Exchange a list of matrices; returns every rank's payload in rank
+    /// order. A *barrier*: no rank returns before every rank has
+    /// deposited. Every rank must call it, in the same global order.
     fn exchange_mats(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>>;
-    /// Exchange a list of f64 scalars (loss partials, counters).
+
+    /// Exchange a list of f64 scalars (loss partials, divergence flags);
+    /// same barrier/call-order obligations as
+    /// [`exchange_mats`](Communicator::exchange_mats).
     fn exchange_f64(&self, vals: Vec<f64>) -> Vec<Arc<Vec<f64>>>;
-    /// Block until every rank reaches this point.
+
+    /// Block until every rank reaches this point (an empty exchange).
     fn barrier(&self) {
         let _ = self.exchange_f64(Vec::new());
+    }
+
+    /// Point-to-point: send `payload` to rank `to` (`to != rank()`).
+    /// May block until the peer's matching
+    /// [`recv_bytes`](Communicator::recv_bytes) drains the link, so a
+    /// symmetric schedule where every rank sends before receiving must
+    /// use [`send_recv_bytes`](Communicator::send_recv_bytes) instead.
+    /// Delivery is FIFO per `(sender, receiver)` pair.
+    fn send_bytes(&self, to: usize, payload: &[u8]);
+
+    /// Point-to-point: receive the next payload from rank `from`
+    /// (`from != rank()`). Blocks until the peer's matching
+    /// [`send_bytes`](Communicator::send_bytes) arrives; panics if the
+    /// peer died or shut down with this receive pending.
+    fn recv_bytes(&self, from: usize) -> Vec<u8>;
+
+    /// Combined send-to-`to` + receive-from-`from`, progressing both
+    /// directions concurrently — the deadlock-free primitive for
+    /// symmetric schedules (every ring step is one `send_recv_bytes`).
+    /// Equivalent to a [`send_bytes`](Communicator::send_bytes) and a
+    /// [`recv_bytes`](Communicator::recv_bytes) whose relative order the
+    /// transport may interleave.
+    fn send_recv_bytes(&self, to: usize, payload: &[u8], from: usize) -> Vec<u8> {
+        self.send_bytes(to, payload);
+        self.recv_bytes(from)
+    }
+
+    /// Zero-copy barrier gather, or `Err(mats)` (the default) when this
+    /// transport moves real bytes. [`collectives::all_gather`] consults
+    /// it under [`Algo::Ring`]: a gather is pure data movement, so on a
+    /// shared-memory transport the ring's encode/forward/decode hops are
+    /// pure overhead — the pointer-sharing exchange returns identical
+    /// bits for free. An implementation must record the *ring* schedule's
+    /// wire-byte model, so traffic accounting stays algorithm-faithful.
+    /// Reducing collectives never use this — their ring path is also
+    /// cheaper in compute (`O(N)` adds per rank vs the star's `O(R·N)`).
+    fn gather_zero_copy(&self, mats: Vec<Mat>) -> Result<Vec<Arc<Vec<Mat>>>, Vec<Mat>> {
+        Err(mats)
     }
 }
 
 /// Shared-memory rendezvous backing [`LocalComm`]: a slot per rank plus a
-/// two-phase (deposit → read) generation protocol.
+/// two-phase (deposit → read) generation protocol for barrier exchanges,
+/// and a per-`(from, to)` FIFO mailbox matrix for point-to-point sends.
 struct Rendezvous {
     world: usize,
     state: Mutex<RvState>,
     cv: Condvar,
+    /// Mailbox `from * world + to`: FIFO of pending `(seq, payload)`
+    /// p2p frames. The per-direction sequence number mirrors the socket
+    /// transport's `KIND_P2P` seq field: the sender stamps its send
+    /// count for that link, the receiver checks it against its receive
+    /// count, so SPMD call-order violations fail loudly on this
+    /// transport too instead of misdelivering a stale payload.
+    mail: Mutex<Vec<VecDeque<(u64, Vec<u8>)>>>,
+    mail_cv: Condvar,
+    /// Set when a rank panicked; wakes and fails every peer (both the
+    /// barrier waiters and the mailbox waiters).
+    poisoned: AtomicBool,
 }
 
 struct RvState {
@@ -200,8 +332,6 @@ struct RvState {
     taken: usize,
     /// Deposit phase (false) vs read phase (true).
     reading: bool,
-    /// Set when a rank panicked; wakes and fails every peer.
-    poisoned: bool,
 }
 
 impl Rendezvous {
@@ -213,16 +343,30 @@ impl Rendezvous {
                 deposited: 0,
                 taken: 0,
                 reading: false,
-                poisoned: false,
             }),
             cv: Condvar::new(),
+            mail: Mutex::new((0..world * world).map(|_| VecDeque::new()).collect()),
+            mail_cv: Condvar::new(),
+            poisoned: AtomicBool::new(false),
         }
     }
 
     fn poison(&self) {
-        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
-        st.poisoned = true;
-        self.cv.notify_all();
+        self.poisoned.store(true, Ordering::SeqCst);
+        // Notify under each lock so a waiter cannot check the flag and
+        // park between our store and the notification.
+        {
+            let _g = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            self.cv.notify_all();
+        }
+        {
+            let _g = self.mail.lock().unwrap_or_else(|e| e.into_inner());
+            self.mail_cv.notify_all();
+        }
+    }
+
+    fn check_poison(&self) {
+        assert!(!self.poisoned.load(Ordering::SeqCst), "dist: a peer rank failed");
     }
 
     fn exchange(
@@ -236,7 +380,7 @@ impl Rendezvous {
         let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
         // Deposit phase: wait for the previous exchange to fully drain.
         loop {
-            assert!(!st.poisoned, "dist: a peer rank failed");
+            self.check_poison();
             if !st.reading && st.slots[rank].is_none() {
                 break;
             }
@@ -250,7 +394,7 @@ impl Rendezvous {
         }
         // Read phase: wait for every rank's deposit.
         loop {
-            assert!(!st.poisoned, "dist: a peer rank failed");
+            self.check_poison();
             if st.reading {
                 break;
             }
@@ -270,19 +414,71 @@ impl Rendezvous {
         }
         out
     }
+
+    /// Deposit a p2p frame into the `(from, to)` mailbox. Never blocks
+    /// (the mailboxes are unbounded), so symmetric schedules cannot
+    /// deadlock on the local transport.
+    fn send(&self, from: usize, to: usize, seq: u64, payload: Vec<u8>) {
+        assert!(to < self.world && to != from, "dist: bad p2p target {to} (rank {from})");
+        self.check_poison();
+        let mut mail = self.mail.lock().unwrap_or_else(|e| e.into_inner());
+        mail[from * self.world + to].push_back((seq, payload));
+        self.mail_cv.notify_all();
+    }
+
+    /// Pop the next `(from, to)` frame, blocking until one arrives or
+    /// the world is poisoned; its seq must be exactly `want`.
+    fn recv(&self, to: usize, from: usize, want: u64) -> Vec<u8> {
+        assert!(from < self.world && from != to, "dist: bad p2p source {from} (rank {to})");
+        let mut mail = self.mail.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            self.check_poison();
+            if let Some((seq, p)) = mail[from * self.world + to].pop_front() {
+                assert_eq!(
+                    seq, want,
+                    "dist: SPMD call order violated with rank {from} (p2p seq mismatch)"
+                );
+                return p;
+            }
+            mail = self.mail_cv.wait(mail).unwrap_or_else(|e| e.into_inner());
+        }
+    }
 }
 
 /// One rank's handle onto an in-process shared-memory world. Created by
-/// [`run_ranks`]; cheap to move into the rank closure.
+/// [`run_ranks`] / [`run_ranks_algo`]; cheap to move into the rank
+/// closure.
 pub struct LocalComm {
     rank: usize,
     world: usize,
+    algo: Algo,
     rv: Arc<Rendezvous>,
+    /// Per-direction p2p frame counters (`[to]` on send, `[from]` on
+    /// receive), mirroring the socket transport's link seq checking.
+    p2p_sent: Mutex<Vec<u64>>,
+    p2p_rcvd: Mutex<Vec<u64>>,
 }
 
 impl LocalComm {
     fn exchange_any(&self, p: Arc<dyn Any + Send + Sync>) -> Vec<Arc<dyn Any + Send + Sync>> {
         self.rv.exchange(self.rank, p)
+    }
+
+    /// Record the wire bytes this rank *would* send for a star exchange
+    /// (the socket transport's exact frame model): a worker sends its
+    /// own payload frame to rank 0, rank 0 fans the gathered blob out to
+    /// every worker. `own` / `parts` are encoded payload lengths.
+    fn record_star_traffic(&self, own: usize, parts: &[usize]) {
+        if self.world == 1 {
+            return;
+        }
+        let frame = |len: usize| (transport::FRAME_HEADER_BYTES + len) as u64;
+        if self.rank == 0 {
+            let gathered = transport::encoded_len_gathered(parts);
+            traffic::record_sent(0, (self.world as u64 - 1) * frame(gathered));
+        } else {
+            traffic::record_sent(self.rank, frame(own));
+        }
     }
 }
 
@@ -295,23 +491,91 @@ impl Communicator for LocalComm {
         self.world
     }
 
+    fn algo(&self) -> Algo {
+        self.algo
+    }
+
     fn exchange_mats(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
-        self.exchange_any(Arc::new(mats))
+        let own = transport::encoded_len_mats(&mats);
+        let parts: Vec<Arc<Vec<Mat>>> = self
+            .exchange_any(Arc::new(mats))
             .into_iter()
             .map(|a| a.downcast::<Vec<Mat>>().expect("dist: SPMD call order violated (mats)"))
-            .collect()
+            .collect();
+        let lens: Vec<usize> = parts.iter().map(|p| transport::encoded_len_mats(p)).collect();
+        self.record_star_traffic(own, &lens);
+        parts
     }
 
     fn exchange_f64(&self, vals: Vec<f64>) -> Vec<Arc<Vec<f64>>> {
-        self.exchange_any(Arc::new(vals))
+        let own = transport::encoded_len_f64s(vals.len());
+        let parts: Vec<Arc<Vec<f64>>> = self
+            .exchange_any(Arc::new(vals))
             .into_iter()
             .map(|a| a.downcast::<Vec<f64>>().expect("dist: SPMD call order violated (f64)"))
-            .collect()
+            .collect();
+        let lens: Vec<usize> = parts.iter().map(|p| transport::encoded_len_f64s(p.len())).collect();
+        self.record_star_traffic(own, &lens);
+        parts
+    }
+
+    fn send_bytes(&self, to: usize, payload: &[u8]) {
+        traffic::record_sent(self.rank, (transport::FRAME_HEADER_BYTES + payload.len()) as u64);
+        let seq = {
+            let mut sent = self.p2p_sent.lock().unwrap_or_else(|e| e.into_inner());
+            let s = sent[to];
+            sent[to] += 1;
+            s
+        };
+        self.rv.send(self.rank, to, seq, payload.to_vec());
+    }
+
+    fn recv_bytes(&self, from: usize) -> Vec<u8> {
+        let want = {
+            let mut rcvd = self.p2p_rcvd.lock().unwrap_or_else(|e| e.into_inner());
+            let w = rcvd[from];
+            rcvd[from] += 1;
+            w
+        };
+        self.rv.recv(self.rank, from, want)
+    }
+
+    fn gather_zero_copy(&self, mats: Vec<Mat>) -> Result<Vec<Arc<Vec<Mat>>>, Vec<Mat>> {
+        // Share pointers through the rendezvous, but account the bytes
+        // the *ring* schedule would put on a wire (this rank forwards
+        // its own list, then each list received from its left neighbor,
+        // once each — frames of ranks `rank`, `rank−1`, …).
+        let parts: Vec<Arc<Vec<Mat>>> = self
+            .exchange_any(Arc::new(mats))
+            .into_iter()
+            .map(|a| a.downcast::<Vec<Mat>>().expect("dist: SPMD call order violated (mats)"))
+            .collect();
+        if self.world > 1 {
+            let lens: Vec<usize> = parts.iter().map(|p| transport::encoded_len_mats(p)).collect();
+            let mut sent = 0u64;
+            for k in 0..self.world - 1 {
+                let idx = (self.rank + self.world - k) % self.world;
+                sent += (transport::FRAME_HEADER_BYTES + lens[idx]) as u64;
+            }
+            traffic::record_sent(self.rank, sent);
+        }
+        Ok(parts)
     }
 }
 
+/// Run `world` SPMD rank bodies to completion under the default
+/// collective algorithm ([`default_algo`]) and collect their results in
+/// rank order. See [`run_ranks_algo`].
+pub fn run_ranks<T, F>(world: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(LocalComm) -> T + Sync,
+{
+    run_ranks_algo(world, default_algo(), f)
+}
+
 /// Run `world` SPMD rank bodies to completion and collect their results
-/// in rank order.
+/// in rank order, with collectives dispatched to `algo`.
 ///
 /// Ranks run on the persistent worker pool when it is safe to do so
 /// (caller is not itself a pool worker, parallelism is enabled, and the
@@ -321,23 +585,32 @@ impl Communicator for LocalComm {
 /// produce identical results: collectives order floating-point reductions
 /// by rank index, never by scheduling.
 ///
-/// A panicking rank poisons the rendezvous (waking every peer) and the
-/// panic propagates to the caller; the pool stays usable.
-pub fn run_ranks<T, F>(world: usize, f: F) -> Vec<T>
+/// A panicking rank poisons the rendezvous (waking every peer, including
+/// peers blocked in point-to-point receives) and the panic propagates to
+/// the caller; the pool stays usable.
+pub fn run_ranks_algo<T, F>(world: usize, algo: Algo, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(LocalComm) -> T + Sync,
 {
     assert!(world >= 1, "run_ranks: world size must be >= 1");
     let rv = Arc::new(Rendezvous::new(world));
+    let mk_comm = |rank: usize, rv: Arc<Rendezvous>| LocalComm {
+        rank,
+        world,
+        algo,
+        rv,
+        p2p_sent: Mutex::new(vec![0; world]),
+        p2p_rcvd: Mutex::new(vec![0; world]),
+    };
     if world == 1 {
-        return vec![f(LocalComm { rank: 0, world, rv })];
+        return vec![f(mk_comm(0, rv))];
     }
     let results: Vec<Mutex<Option<T>>> = (0..world).map(|_| Mutex::new(None)).collect();
     let fr = &f;
     let rs = &results;
     let make_body = |r: usize| {
-        let comm = LocalComm { rank: r, world, rv: Arc::clone(&rv) };
+        let comm = mk_comm(r, Arc::clone(&rv));
         let rv = Arc::clone(&rv);
         move || {
             let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fr(comm)));
@@ -430,6 +703,63 @@ mod tests {
     }
 
     #[test]
+    fn p2p_mailboxes_deliver_fifo_per_pair() {
+        let world = 3;
+        let out = run_ranks(world, |c| {
+            let right = (c.rank() + 1) % world;
+            let left = (c.rank() + world - 1) % world;
+            // Two pipelined sends, then two receives: FIFO per pair.
+            c.send_bytes(right, &[c.rank() as u8, 1]);
+            c.send_bytes(right, &[c.rank() as u8, 2]);
+            let a = c.recv_bytes(left);
+            let b = c.recv_bytes(left);
+            (a, b)
+        });
+        for (r, (a, b)) in out.iter().enumerate() {
+            let left = (r + world - 1) % world;
+            assert_eq!(a, &vec![left as u8, 1]);
+            assert_eq!(b, &vec![left as u8, 2]);
+        }
+    }
+
+    #[test]
+    fn p2p_send_recv_pairs_symmetric_schedule() {
+        // Every rank sends to its right and receives from its left in
+        // one combined call — the ring step shape.
+        let world = 4;
+        let out = run_ranks(world, |c| {
+            let right = (c.rank() + 1) % world;
+            let left = (c.rank() + world - 1) % world;
+            let payload = vec![c.rank() as u8; 8];
+            c.send_recv_bytes(right, &payload, left)
+        });
+        for (r, got) in out.iter().enumerate() {
+            let left = (r + world - 1) % world;
+            assert_eq!(got, &vec![left as u8; 8]);
+        }
+    }
+
+    #[test]
+    fn p2p_seq_mismatch_is_flagged_as_spmd_violation() {
+        // A stale frame (sender's link counter ahead of the receiver's)
+        // must panic — the local transport checks the same per-direction
+        // seq the socket transport stamps into KIND_P2P frames.
+        let rv = Rendezvous::new(2);
+        rv.send(0, 1, 5, vec![1, 2, 3]);
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| rv.recv(1, 0, 0)));
+        assert!(out.is_err(), "seq mismatch must fail loudly, not deliver");
+    }
+
+    #[test]
+    fn p2p_empty_payload_roundtrips() {
+        let out = run_ranks(2, |c| {
+            let other = 1 - c.rank();
+            c.send_recv_bytes(other, &[], other)
+        });
+        assert_eq!(out, vec![Vec::<u8>::new(), Vec::new()]);
+    }
+
+    #[test]
     fn strategy_parse_roundtrip() {
         for s in [DistStrategy::Replicated, DistStrategy::FactorSharded] {
             assert_eq!(DistStrategy::parse(s.name()), Some(s));
@@ -445,5 +775,14 @@ mod tests {
         let sharded = DistCtx::new(DistStrategy::FactorSharded, 1, 4);
         let owned: Vec<usize> = (0..8).filter(|&l| sharded.owns_layer(l)).collect();
         assert_eq!(owned, vec![1, 5]);
+    }
+
+    #[test]
+    fn default_algo_follows_env_or_ring() {
+        let want = std::env::var("SINGD_ALGO")
+            .ok()
+            .and_then(|v| Algo::parse(&v))
+            .unwrap_or(Algo::Ring);
+        assert_eq!(default_algo(), want);
     }
 }

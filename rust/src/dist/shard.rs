@@ -23,7 +23,10 @@ pub fn round_robin_owner(layer: usize, world: usize) -> usize {
 }
 
 /// The canonical contiguous row-shard plan, shared by the training
-/// driver's batch split and [`crate::dist::collectives::reduce_scatter_rows`].
+/// driver's batch split, [`crate::dist::collectives::reduce_scatter_rows`],
+/// and the ring collectives' chunk schedule (chunk `c` of a ring
+/// all-reduce is `row_shard_range(len, world, c)` of the flattened
+/// payload, so the schedule is a pure function of `(len, world)`).
 ///
 /// This is the *padding rule* for world sizes that do not divide the row
 /// count: the first `rows mod world` ranks take `⌈rows/world⌉` rows, the
@@ -33,6 +36,14 @@ pub fn round_robin_owner(layer: usize, world: usize) -> usize {
 /// `world` divides `rows` every shard is `rows/world`, which is the
 /// alignment the bitwise rank-invariance contract builds on; a shard is
 /// empty only when `rows < world`.
+///
+/// The zero-row edge (`rows < world`, which every ring collective now
+/// exercises per chunk): `q = 0`, `rem = rows`, so rank `r` gets
+/// `min(r, rows)..min(r, rows) + (r < rows)` — the first `rows` ranks
+/// take one row each, the rest take the empty range starting exactly at
+/// `rows`. Coverage and balance hold with no off-by-one; the
+/// `tiny_row_counts_*` regression tests below pin this for world ∈
+/// {3, 5, 7}.
 pub fn row_shard_range(rows: usize, world: usize, rank: usize) -> std::ops::Range<usize> {
     let world = world.max(1);
     assert!(rank < world, "row_shard_range: rank {rank} out of range for world {world}");
@@ -74,18 +85,22 @@ impl ShardPlan {
         ShardPlan { owner, world }
     }
 
+    /// World size this plan was built for.
     pub fn world(&self) -> usize {
         self.world
     }
 
+    /// Number of layers covered by the plan.
     pub fn n_layers(&self) -> usize {
         self.owner.len()
     }
 
+    /// The rank that owns `layer`.
     pub fn owner(&self, layer: usize) -> usize {
         self.owner[layer]
     }
 
+    /// Whether `rank` owns `layer`.
     pub fn owns(&self, rank: usize, layer: usize) -> bool {
         self.owner[layer] == rank
     }
@@ -180,5 +195,53 @@ mod tests {
         // Fewer rows than ranks: trailing shards are empty.
         assert_eq!(row_shard_range(1, 4, 0), 0..1);
         assert!(row_shard_range(1, 4, 3).is_empty());
+    }
+
+    #[test]
+    fn tiny_row_counts_cover_exactly_for_odd_worlds() {
+        // The zero-row-rank edge the ring collectives exercise per
+        // chunk: every (rows < world) combination must cover 0..rows
+        // contiguously, hand one row each to the first `rows` ranks, and
+        // start every empty trailing shard exactly at `rows`.
+        for world in [3usize, 5, 7] {
+            for rows in 0..world {
+                let mut next = 0usize;
+                for r in 0..world {
+                    let rg = row_shard_range(rows, world, r);
+                    assert_eq!(rg.start, next, "rows {rows} world {world} rank {r}: start");
+                    assert_eq!(
+                        rg.len(),
+                        usize::from(r < rows),
+                        "rows {rows} world {world} rank {r}: len"
+                    );
+                    if rg.is_empty() {
+                        assert_eq!(rg.start, rows, "empty shard must start at rows");
+                    }
+                    next = rg.end;
+                }
+                assert_eq!(next, rows, "rows {rows} world {world}: coverage");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_row_counts_just_above_world_stay_balanced() {
+        // rows slightly above world (world + 1 .. world + 2): heights
+        // differ by at most one and the remainder lands on the leading
+        // ranks.
+        for world in [3usize, 5, 7] {
+            for extra in 1..=2usize {
+                let rows = world + extra;
+                let mut next = 0usize;
+                for r in 0..world {
+                    let rg = row_shard_range(rows, world, r);
+                    assert_eq!(rg.start, next, "rows {rows} world {world} rank {r}");
+                    let want = 1 + usize::from(r < extra);
+                    assert_eq!(rg.len(), want, "rows {rows} world {world} rank {r}: len");
+                    next = rg.end;
+                }
+                assert_eq!(next, rows);
+            }
+        }
     }
 }

@@ -1,0 +1,71 @@
+//! Per-rank bytes-on-wire accounting for the collective layer.
+//!
+//! Every collective payload frame a rank sends is recorded here —
+//! actual frame bytes on the socket transport, the identical modeled
+//! frame bytes on the local transport (which moves pointers, not bytes,
+//! but would put exactly these frames on a wire). The counters are what
+//! `benches/dist_scaling.rs` reads to compare the star exchange's rank-0
+//! fan-in (`~(R−1)·R·N` sent by rank 0 per all-reduce) against the ring
+//! schedule's balanced `~2·(R−1)/R·N` per rank.
+//!
+//! Counters are process-wide atomics: under the local transport all
+//! ranks live in one process and each increments its own slot; under the
+//! socket transport each OS process tracks the one rank it hosts.
+//! Handshake and goodbye frames are *not* counted — only collective
+//! payload traffic, so the numbers are a pure function of the algorithm
+//! and payload sizes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Number of per-rank counter slots; ranks at or above this fold into
+/// the last slot (worlds that large are far beyond the tracked range).
+pub const MAX_TRACKED_RANKS: usize = 64;
+
+fn slots() -> &'static [AtomicU64] {
+    static SLOTS: OnceLock<Vec<AtomicU64>> = OnceLock::new();
+    SLOTS.get_or_init(|| (0..MAX_TRACKED_RANKS).map(|_| AtomicU64::new(0)).collect())
+}
+
+/// Record `bytes` of collective payload frames sent by `rank`.
+pub(crate) fn record_sent(rank: usize, bytes: u64) {
+    slots()[rank.min(MAX_TRACKED_RANKS - 1)].fetch_add(bytes, Ordering::Relaxed);
+}
+
+/// Zero every per-rank counter (bench hygiene between measured runs).
+pub fn reset() {
+    for s in slots() {
+        s.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Bytes sent per rank, for ranks `0..world` (clamped to the tracked
+/// range). Relaxed snapshots: call when no collective is in flight.
+pub fn sent_by_rank(world: usize) -> Vec<u64> {
+    (0..world.min(MAX_TRACKED_RANKS)).map(|r| slots()[r].load(Ordering::Relaxed)).collect()
+}
+
+/// Total bytes sent across all ranks since the last [`reset`].
+pub fn total_sent() -> u64 {
+    slots().iter().map(|s| s.load(Ordering::Relaxed)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_accumulates_and_folds_out_of_range_ranks() {
+        // Other dist tests may record concurrently, so assert deltas on
+        // our own contributions only (the counters are monotone between
+        // resets).
+        let before = sent_by_rank(MAX_TRACKED_RANKS);
+        record_sent(1, 100);
+        record_sent(1, 50);
+        record_sent(MAX_TRACKED_RANKS + 7, 8); // folds into the last slot
+        let after = sent_by_rank(MAX_TRACKED_RANKS);
+        assert!(after[1] - before[1] >= 150);
+        assert!(after[MAX_TRACKED_RANKS - 1] - before[MAX_TRACKED_RANKS - 1] >= 8);
+        assert!(total_sent() >= after.iter().sum::<u64>() - before.iter().sum::<u64>());
+    }
+}

@@ -13,23 +13,35 @@
 //!
 //! # Topology and wire format
 //!
+//! The full byte-level specification (every frame layout, handshake
+//! field, and failure rule) lives in `PROTOCOL.md` at the repository
+//! root; this is the summary.
+//!
 //! Rank 0 is the rendezvous server: it binds the rendezvous endpoint,
 //! accepts `world − 1` connections, and validates a fixed-size hello
 //! (magic, protocol version, run id, world size, rank) from each peer —
 //! stale peers from a dead run (wrong run id), mis-sized worlds and
-//! duplicate ranks are rejected at handshake time. After rendezvous every
-//! exchange is a gather + fan-out star over length-prefixed frames:
+//! duplicate ranks are rejected at handshake time. After the star is up,
+//! the world assembles a **full peer mesh** for point-to-point traffic:
+//! every rank binds a mesh listener (a per-rank socket derived from the
+//! rendezvous endpoint), the listener addresses are exchanged over the
+//! star, and each rank dials every lower-ranked peer (a 20-byte mesh
+//! hello carrying magic/run-id/rank identifies the dialer). The star
+//! carries barrier exchanges; the mesh carries the ring collectives'
+//! [`Communicator::send_recv_bytes`] steps. All frames share one layout:
 //!
 //! ```text
 //! frame   := kind:u8 | seq:u64 | len:u64 | payload[len]      (LE)
 //! mats    := count:u32 | (rows:u32 | cols:u32 | f32[rows*cols])*
 //! f64s    := count:u32 | f64[count]
 //! gathered:= count:u32 | (len:u64 | payload[len])*           (rank order)
+//! chunk   := f32[len/4]                                      (ring chunks)
 //! ```
 //!
-//! `seq` is the per-communicator exchange counter and `kind` the payload
-//! type; both are checked on every frame, so an SPMD call-order violation
-//! fails loudly instead of decoding garbage.
+//! `seq` is the per-communicator exchange counter on star frames and the
+//! per-direction link counter on mesh frames; together with `kind` it is
+//! checked on every frame, so an SPMD call-order violation fails loudly
+//! instead of decoding garbage.
 //!
 //! # Failure semantics
 //!
@@ -53,7 +65,7 @@
 //! worker detects its role with [`worker_env`] and joins the rendezvous
 //! instead of spawning further workers.
 
-use super::Communicator;
+use super::{traffic, Algo, Communicator};
 use crate::tensor::Mat;
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -83,6 +95,7 @@ impl Transport {
         }
     }
 
+    /// Canonical name (the string [`Transport::parse`] round-trips).
     pub fn name(&self) -> &'static str {
         match self {
             Transport::Local => "local",
@@ -109,12 +122,22 @@ const PROTO_VERSION: u32 = 1;
 /// Sanity bound on a single frame (guards a garbled length prefix from
 /// triggering an absurd allocation).
 const MAX_FRAME: u64 = 1 << 36;
+/// Frame header size: `kind:u8 | seq:u64 | len:u64` (PROTOCOL.md §Framing).
+/// Shared with the local transport's wire-byte model in
+/// [`crate::dist::traffic`].
+pub(crate) const FRAME_HEADER_BYTES: usize = 17;
 
 const KIND_MATS: u8 = 1;
 const KIND_F64: u8 = 2;
 const KIND_GATHERED_MATS: u8 = 3;
 const KIND_GATHERED_F64: u8 = 4;
 const KIND_GOODBYE: u8 = 5;
+/// Point-to-point mesh frame (ring chunks); `seq` is the per-direction
+/// link counter.
+const KIND_P2P: u8 = 6;
+/// Mesh-listener address advertisement (rendezvous-time star exchange).
+const KIND_MESH: u8 = 7;
+const KIND_GATHERED_MESH: u8 = 8;
 
 // Handshake status codes in the welcome reply.
 const ST_OK: u32 = 0;
@@ -137,11 +160,14 @@ fn status_msg(st: u32) -> &'static str {
 /// Unix socket path.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Endpoint {
+    /// A Unix-domain socket path.
     Unix(String),
+    /// A TCP `host:port` address.
     Tcp(String),
 }
 
 impl Endpoint {
+    /// Parse an endpoint string (a bare string is a Unix path).
     pub fn parse(s: &str) -> Endpoint {
         if let Some(rest) = s.strip_prefix("unix:") {
             Endpoint::Unix(rest.to_string())
@@ -179,6 +205,15 @@ impl Stream {
             Stream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
             Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
         };
+    }
+
+    /// This is a frame-per-round-trip protocol (a ring step cannot
+    /// proceed until its frame lands), so Nagle + delayed ACK would
+    /// stall every step on TCP links; no-op for Unix sockets.
+    fn set_nodelay(&self) {
+        if let Stream::Tcp(s) = self {
+            let _ = s.set_nodelay(true);
+        }
     }
 }
 
@@ -287,8 +322,26 @@ impl<'a> Cur<'a> {
     }
 }
 
-fn encode_mats(mats: &[Mat]) -> Vec<u8> {
-    let total: usize = 4 + mats.iter().map(|m| 8 + 4 * m.len()).sum::<usize>();
+/// Encoded byte length of a matrix-list payload (the star/ring wire
+/// image) without materializing it — the local transport's traffic model.
+pub(crate) fn encoded_len_mats(mats: &[Mat]) -> usize {
+    4 + mats.iter().map(|m| 8 + 4 * m.len()).sum::<usize>()
+}
+
+/// Encoded byte length of an `n`-scalar f64 payload.
+pub(crate) fn encoded_len_f64s(n: usize) -> usize {
+    4 + 8 * n
+}
+
+/// Encoded byte length of a gathered blob over per-rank payload lengths
+/// — the single formula shared by `encode_gathered` (checked there) and
+/// the local transport's wire-byte model, so the two cannot drift.
+pub(crate) fn encoded_len_gathered(lens: &[usize]) -> usize {
+    4 + lens.iter().map(|l| 8 + l).sum::<usize>()
+}
+
+pub(crate) fn encode_mats(mats: &[Mat]) -> Vec<u8> {
+    let total: usize = encoded_len_mats(mats);
     let mut buf = Vec::with_capacity(total);
     buf.extend_from_slice(&(mats.len() as u32).to_le_bytes());
     for m in mats {
@@ -301,7 +354,7 @@ fn encode_mats(mats: &[Mat]) -> Vec<u8> {
     buf
 }
 
-fn decode_mats(buf: &[u8]) -> io::Result<Vec<Mat>> {
+pub(crate) fn decode_mats(buf: &[u8]) -> io::Result<Vec<Mat>> {
     let mut cur = Cur::new(buf);
     let n = cur.u32()? as usize;
     // Clamp the pre-allocation: every entry needs an 8-byte shape header,
@@ -325,7 +378,7 @@ fn decode_mats(buf: &[u8]) -> io::Result<Vec<Mat>> {
 }
 
 fn encode_f64s(vals: &[f64]) -> Vec<u8> {
-    let mut buf = Vec::with_capacity(4 + 8 * vals.len());
+    let mut buf = Vec::with_capacity(encoded_len_f64s(vals.len()));
     buf.extend_from_slice(&(vals.len() as u32).to_le_bytes());
     for v in vals {
         buf.extend_from_slice(&v.to_le_bytes());
@@ -345,13 +398,15 @@ fn decode_f64s(buf: &[u8]) -> io::Result<Vec<f64>> {
 }
 
 fn encode_gathered(parts: &[Vec<u8>]) -> Vec<u8> {
-    let total: usize = 4 + parts.iter().map(|p| 8 + p.len()).sum::<usize>();
+    let lens: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+    let total = encoded_len_gathered(&lens);
     let mut buf = Vec::with_capacity(total);
     buf.extend_from_slice(&(parts.len() as u32).to_le_bytes());
     for p in parts {
         buf.extend_from_slice(&(p.len() as u64).to_le_bytes());
         buf.extend_from_slice(p);
     }
+    debug_assert_eq!(buf.len(), total, "encoded_len_gathered drifted from encode_gathered");
     buf
 }
 
@@ -370,18 +425,22 @@ fn decode_gathered(buf: &[u8]) -> io::Result<Vec<Vec<u8>>> {
 // ---------------------------------------------------------------------
 // Framing.
 
-fn write_frame(s: &mut Stream, kind: u8, seq: u64, payload: &[u8]) -> io::Result<()> {
-    let mut hdr = [0u8; 17];
+fn frame_header(kind: u8, seq: u64, len: usize) -> [u8; FRAME_HEADER_BYTES] {
+    let mut hdr = [0u8; FRAME_HEADER_BYTES];
     hdr[0] = kind;
     hdr[1..9].copy_from_slice(&seq.to_le_bytes());
-    hdr[9..17].copy_from_slice(&(payload.len() as u64).to_le_bytes());
-    s.write_all(&hdr)?;
+    hdr[9..17].copy_from_slice(&(len as u64).to_le_bytes());
+    hdr
+}
+
+fn write_frame(s: &mut Stream, kind: u8, seq: u64, payload: &[u8]) -> io::Result<()> {
+    s.write_all(&frame_header(kind, seq, payload.len()))?;
     s.write_all(payload)?;
     s.flush()
 }
 
 fn read_frame(s: &mut Stream) -> io::Result<(u8, u64, Vec<u8>)> {
-    let mut hdr = [0u8; 17];
+    let mut hdr = [0u8; FRAME_HEADER_BYTES];
     s.read_exact(&mut hdr)?;
     let kind = hdr[0];
     let seq = u64::from_le_bytes(hdr[1..9].try_into().unwrap());
@@ -484,6 +543,7 @@ fn accept_peers(ep: &Endpoint, world: usize, run_id: u64) -> io::Result<Vec<Stre
         match listener.accept() {
             Ok(mut s) => {
                 s.set_nonblocking(false)?;
+                s.set_nodelay();
                 // Bound the handshake read by the *remaining* rendezvous
                 // budget so a connected-but-silent peer cannot stall past
                 // the deadline.
@@ -530,6 +590,7 @@ fn dial_root(ep: &Endpoint, rank: usize, world: usize, run_id: u64) -> io::Resul
         };
         match attempt {
             Ok(mut s) => {
+                s.set_nodelay();
                 s.set_read_timeout(Some(rendezvous_timeout()))?;
                 write_hello(&mut s, run_id, world, rank)?;
                 let mut w = [0u8; 12];
@@ -566,14 +627,153 @@ fn dial_root(ep: &Endpoint, rank: usize, world: usize, run_id: u64) -> io::Resul
 }
 
 // ---------------------------------------------------------------------
+// Peer mesh assembly (PROTOCOL.md §Peer mesh).
+
+/// Bind this rank's mesh listener and return it with its advertised
+/// address. Unix rendezvous endpoints derive per-rank sibling paths
+/// (`<path>.m<rank>`); TCP binds an ephemeral port on the interface the
+/// star link uses (loopback falls out naturally in tests).
+fn mesh_listener(ep: &Endpoint, rank: usize, links: &[Stream]) -> io::Result<(Listener, String)> {
+    match ep {
+        Endpoint::Unix(path) => {
+            let p = format!("{path}.m{rank}");
+            // A stale mesh socket from a dead run blocks bind; remove it.
+            let _ = std::fs::remove_file(&p);
+            Ok((Listener::Unix(UnixListener::bind(&p)?), format!("unix:{p}")))
+        }
+        Endpoint::Tcp(_) => {
+            let host = match links.first() {
+                Some(Stream::Tcp(s)) => s.local_addr()?.ip().to_string(),
+                _ => "127.0.0.1".to_string(),
+            };
+            let l = TcpListener::bind((host.as_str(), 0))?;
+            let port = l.local_addr()?.port();
+            Ok((Listener::Tcp(l), format!("tcp:{host}:{port}")))
+        }
+    }
+}
+
+/// Dial a peer's mesh listener (retrying until the rendezvous deadline —
+/// the listener is guaranteed bound, but the accept loop may lag) and
+/// identify ourselves with the 20-byte mesh hello.
+fn dial_mesh_peer(addr: &str, my_rank: usize, run_id: u64) -> io::Result<Stream> {
+    let ep = Endpoint::parse(addr);
+    let deadline = Instant::now() + rendezvous_timeout();
+    loop {
+        let attempt = match &ep {
+            Endpoint::Unix(path) => UnixStream::connect(path).map(Stream::Unix),
+            Endpoint::Tcp(a) => TcpStream::connect(a).map(Stream::Tcp),
+        };
+        match attempt {
+            Ok(mut s) => {
+                s.set_nodelay();
+                let mut hello = [0u8; 20];
+                hello[0..8].copy_from_slice(&MAGIC.to_le_bytes());
+                hello[8..16].copy_from_slice(&run_id.to_le_bytes());
+                hello[16..20].copy_from_slice(&(my_rank as u32).to_le_bytes());
+                s.write_all(&hello)?;
+                s.flush()?;
+                s.set_read_timeout(read_timeout())?;
+                return Ok(s);
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    io::ErrorKind::NotFound
+                        | io::ErrorKind::ConnectionRefused
+                        | io::ErrorKind::ConnectionReset
+                        | io::ErrorKind::AddrNotAvailable
+                ) && Instant::now() < deadline =>
+            {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Accept mesh connections from every higher-ranked peer, validating the
+/// mesh hello (magic, run id, rank in range, no duplicates). Invalid
+/// dialers — stale runs sharing a reused endpoint — are dropped and the
+/// accept loop continues until the rendezvous deadline.
+fn accept_mesh_peers(
+    listener: &Listener,
+    my_rank: usize,
+    world: usize,
+    run_id: u64,
+    mesh: &mut [Option<Stream>],
+) -> io::Result<()> {
+    listener.set_nonblocking(true)?;
+    let deadline = Instant::now() + rendezvous_timeout();
+    let mut pending = world - 1 - my_rank;
+    while pending > 0 {
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(io::Error::new(
+                io::ErrorKind::TimedOut,
+                format!("mesh rendezvous timed out with {pending} peer(s) missing"),
+            ));
+        }
+        let budget = deadline.saturating_duration_since(now).max(Duration::from_millis(1));
+        match listener.accept() {
+            Ok(mut s) => {
+                s.set_nonblocking(false)?;
+                s.set_nodelay();
+                s.set_read_timeout(Some(budget))?;
+                let mut hello = [0u8; 20];
+                let ok = s.read_exact(&mut hello).is_ok()
+                    && u64::from_le_bytes(hello[0..8].try_into().unwrap()) == MAGIC
+                    && u64::from_le_bytes(hello[8..16].try_into().unwrap()) == run_id;
+                let peer = u32::from_le_bytes(hello[16..20].try_into().unwrap()) as usize;
+                if ok && peer > my_rank && peer < world && mesh[peer].is_none() {
+                    s.set_read_timeout(read_timeout())?;
+                    mesh[peer] = Some(s);
+                    pending -= 1;
+                } else {
+                    s.shutdown();
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// Borrow two distinct mesh links mutably (`i != j`).
+fn two_links(mesh: &mut [Option<Stream>], i: usize, j: usize) -> (&mut Stream, &mut Stream) {
+    assert_ne!(i, j);
+    let (lo, hi) = (i.min(j), i.max(j));
+    let (a, b) = mesh.split_at_mut(hi);
+    let lo_link = a[lo].as_mut().expect("dist[socket]: mesh link missing");
+    let hi_link = b[0].as_mut().expect("dist[socket]: mesh link missing");
+    if i < j {
+        (lo_link, hi_link)
+    } else {
+        (hi_link, lo_link)
+    }
+}
+
+// ---------------------------------------------------------------------
 // The communicator.
 
 struct Inner {
     /// Rank 0: `world − 1` streams, index `r − 1` ↔ peer rank `r`.
     /// Rank > 0: a single stream to rank 0.
     links: Vec<Stream>,
-    /// Exchange counter; stamped into every frame (SPMD order check).
+    /// Exchange counter; stamped into every star frame (SPMD order check).
     seq: u64,
+    /// Full peer mesh for point-to-point frames, indexed by peer rank
+    /// (`None` at this rank's own slot; empty world-1 worlds never
+    /// populate it).
+    mesh: Vec<Option<Stream>>,
+    /// Per-direction p2p frame counters: `p2p_sent[r]` stamps the next
+    /// frame to rank `r`, `p2p_rcvd[r]` is the seq expected from rank
+    /// `r` (SPMD order check on every mesh frame).
+    p2p_sent: Vec<u64>,
+    p2p_rcvd: Vec<u64>,
 }
 
 /// One process's handle onto a socket-transport world. Implements the
@@ -584,12 +784,15 @@ struct Inner {
 pub struct SocketComm {
     rank: usize,
     world: usize,
+    algo: Algo,
     inner: Mutex<Inner>,
 }
 
 impl SocketComm {
     /// Join (rank > 0) or assemble (rank 0) a `world`-process rendezvous
-    /// at `rendezvous`. Blocks until every rank has handshaken or the
+    /// at `rendezvous` under the default collective algorithm
+    /// ([`crate::dist::default_algo`]). Blocks until every rank has
+    /// handshaken — star and peer mesh — or the
     /// `SINGD_SOCK_TIMEOUT_SECS` deadline (default 30 s) expires.
     pub fn connect(
         rank: usize,
@@ -597,27 +800,86 @@ impl SocketComm {
         rendezvous: &str,
         run_id: u64,
     ) -> io::Result<SocketComm> {
-        assert!(world >= 1, "dist[socket]: world size must be >= 1");
-        assert!(rank < world, "dist[socket]: rank {rank} out of range for world {world}");
-        let links = if world == 1 {
-            Vec::new()
-        } else {
-            let ep = Endpoint::parse(rendezvous);
-            if rank == 0 {
-                accept_peers(&ep, world, run_id)?
-            } else {
-                vec![dial_root(&ep, rank, world, run_id)?]
-            }
-        };
-        Ok(SocketComm { rank, world, inner: Mutex::new(Inner { links, seq: 0 }) })
+        Self::connect_with(rank, world, rendezvous, run_id, crate::dist::default_algo())
     }
 
-    /// Abruptly close every link *without* the goodbye frame — simulates
-    /// process death for the fault-injection tests: peers observe EOF
-    /// mid-collective instead of a clean shutdown.
+    /// [`SocketComm::connect`] with an explicit collective algorithm.
+    /// Every rank of a world must pass the same `algo`.
+    pub fn connect_with(
+        rank: usize,
+        world: usize,
+        rendezvous: &str,
+        run_id: u64,
+        algo: Algo,
+    ) -> io::Result<SocketComm> {
+        assert!(world >= 1, "dist[socket]: world size must be >= 1");
+        assert!(rank < world, "dist[socket]: rank {rank} out of range for world {world}");
+        let ep = Endpoint::parse(rendezvous);
+        let links = if world == 1 {
+            Vec::new()
+        } else if rank == 0 {
+            accept_peers(&ep, world, run_id)?
+        } else {
+            vec![dial_root(&ep, rank, world, run_id)?]
+        };
+        let comm = SocketComm {
+            rank,
+            world,
+            algo,
+            inner: Mutex::new(Inner {
+                links,
+                seq: 0,
+                mesh: (0..world).map(|_| None).collect(),
+                p2p_sent: vec![0; world],
+                p2p_rcvd: vec![0; world],
+            }),
+        };
+        if world > 1 {
+            comm.build_mesh(&ep, run_id)?;
+        }
+        Ok(comm)
+    }
+
+    /// Assemble the full peer mesh: bind this rank's listener, advertise
+    /// its address over the star (a barrier, so every listener is bound
+    /// before anyone dials), dial every lower rank, accept every higher
+    /// rank. See PROTOCOL.md §Peer mesh.
+    fn build_mesh(&self, ep: &Endpoint, run_id: u64) -> io::Result<()> {
+        let (listener, addr) = {
+            let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+            mesh_listener(ep, self.rank, &inner.links)?
+        };
+        let addrs: Vec<String> = self
+            .exchange_bytes(KIND_MESH, addr.into_bytes())
+            .into_iter()
+            .map(|b| {
+                String::from_utf8(b).map_err(|_| {
+                    io::Error::new(io::ErrorKind::InvalidData, "bad mesh address advertisement")
+                })
+            })
+            .collect::<io::Result<_>>()?;
+        let mut mesh: Vec<Option<Stream>> = (0..self.world).map(|_| None).collect();
+        for (j, peer_addr) in addrs.iter().enumerate().take(self.rank) {
+            mesh[j] = Some(dial_mesh_peer(peer_addr, self.rank, run_id)?);
+        }
+        accept_mesh_peers(&listener, self.rank, self.world, run_id, &mut mesh)?;
+        if let Endpoint::Unix(path) = ep {
+            // Mesh assembled: the listener path has served its purpose.
+            let _ = std::fs::remove_file(format!("{path}.m{}", self.rank));
+        }
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).mesh = mesh;
+        Ok(())
+    }
+
+    /// Abruptly close every link — star and mesh — *without* the goodbye
+    /// frame: simulates process death for the fault-injection tests;
+    /// peers observe EOF mid-collective instead of a clean shutdown.
     pub fn sever(&self) {
         let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         for link in &inner.links {
+            link.shutdown();
+        }
+        for link in inner.mesh.iter().flatten() {
             link.shutdown();
         }
     }
@@ -635,8 +897,12 @@ impl SocketComm {
         }
         let gathered_kind = match kind {
             KIND_MATS => KIND_GATHERED_MATS,
+            KIND_MESH => KIND_GATHERED_MESH,
             _ => KIND_GATHERED_F64,
         };
+        // Mesh-address advertisements are rendezvous overhead, not
+        // collective traffic; everything else is accounted per rank.
+        let count = kind != KIND_MESH;
         if self.rank == 0 {
             let mut parts: Vec<Vec<u8>> = Vec::with_capacity(self.world);
             parts.push(mine);
@@ -647,12 +913,21 @@ impl SocketComm {
                 parts.push(payload);
             }
             let blob = encode_gathered(&parts);
+            if count {
+                traffic::record_sent(
+                    0,
+                    (self.world as u64 - 1) * (FRAME_HEADER_BYTES + blob.len()) as u64,
+                );
+            }
             for r in 1..self.world {
                 write_frame(&mut inner.links[r - 1], gathered_kind, seq, &blob)
                     .unwrap_or_else(|e| peer_failed(r, &e));
             }
             parts
         } else {
+            if count {
+                traffic::record_sent(self.rank, (FRAME_HEADER_BYTES + mine.len()) as u64);
+            }
             write_frame(&mut inner.links[0], kind, seq, &mine)
                 .unwrap_or_else(|e| peer_failed(0, &e));
             let (k, s, blob) =
@@ -662,6 +937,122 @@ impl SocketComm {
                 .unwrap_or_else(|e| panic!("dist[socket]: corrupt gathered frame: {e}"))
         }
     }
+}
+
+/// Interleaved nonblocking send + receive over mesh links — the
+/// deadlock-free engine behind [`Communicator::send_recv_bytes`]: both
+/// directions progress in one loop, so a cycle of ranks all sending
+/// chunks larger than the kernel socket buffers still drains. `recv` is
+/// `None` when the peer is the same for both directions (world 2: one
+/// full-duplex stream).
+fn duplex_exchange(
+    send: &mut Stream,
+    mut recv: Option<&mut Stream>,
+    sbuf: &[u8],
+    to: usize,
+    from: usize,
+    want_seq: u64,
+) -> Vec<u8> {
+    send.set_nonblocking(true).unwrap_or_else(|e| peer_failed(to, &e));
+    if let Some(r) = recv.as_deref() {
+        r.set_nonblocking(true).unwrap_or_else(|e| peer_failed(from, &e));
+    }
+    // Nonblocking mode disables the per-link read timeout, so the
+    // SINGD_SOCK_TIMEOUT_SECS knob is honoured here as a stall deadline:
+    // no progress in either direction for that long fails the step (the
+    // default — no timeout — matches blocking reads, which also wait
+    // indefinitely and rely on EOF for peer death).
+    let stall_limit = read_timeout();
+    let mut last_progress = Instant::now();
+    let mut sent = 0usize;
+    let mut hdr = [0u8; FRAME_HEADER_BYTES];
+    let mut got_hdr = 0usize;
+    let mut body: Vec<u8> = Vec::new();
+    let mut got_body = 0usize;
+    let mut body_len: Option<usize> = None;
+    loop {
+        let mut progressed = false;
+        if sent < sbuf.len() {
+            match send.write(&sbuf[sent..]) {
+                Ok(0) => peer_failed(
+                    to,
+                    &io::Error::new(io::ErrorKind::WriteZero, "connection closed"),
+                ),
+                Ok(n) => {
+                    sent += n;
+                    progressed = true;
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => peer_failed(to, &e),
+            }
+        }
+        if !body_len.is_some_and(|l| got_body == l) {
+            let r: &mut Stream = match recv.as_mut() {
+                Some(r) => &mut **r,
+                None => &mut *send,
+            };
+            let res = if body_len.is_none() {
+                r.read(&mut hdr[got_hdr..])
+            } else {
+                r.read(&mut body[got_body..])
+            };
+            match res {
+                Ok(0) => peer_failed(
+                    from,
+                    &io::Error::new(io::ErrorKind::UnexpectedEof, "connection closed"),
+                ),
+                Ok(n) => {
+                    progressed = true;
+                    if body_len.is_none() {
+                        got_hdr += n;
+                        if got_hdr == FRAME_HEADER_BYTES {
+                            let kind = hdr[0];
+                            let seq = u64::from_le_bytes(hdr[1..9].try_into().unwrap());
+                            let len = u64::from_le_bytes(hdr[9..17].try_into().unwrap());
+                            assert!(len <= MAX_FRAME, "dist[socket]: oversized p2p frame");
+                            check_frame(kind, KIND_P2P, seq, want_seq, from);
+                            body = vec![0u8; len as usize];
+                            body_len = Some(len as usize);
+                        }
+                    } else {
+                        got_body += n;
+                    }
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => peer_failed(from, &e),
+            }
+        }
+        if sent == sbuf.len() && body_len.is_some_and(|l| got_body == l) {
+            break;
+        }
+        if progressed {
+            last_progress = Instant::now();
+        } else {
+            if stall_limit.is_some_and(|t| last_progress.elapsed() >= t) {
+                peer_failed(
+                    from,
+                    &io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "ring step stalled past SINGD_SOCK_TIMEOUT_SECS",
+                    ),
+                );
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    send.set_nonblocking(false).unwrap_or_else(|e| peer_failed(to, &e));
+    if let Some(r) = recv.as_deref() {
+        r.set_nonblocking(false).unwrap_or_else(|e| peer_failed(from, &e));
+    }
+    body
 }
 
 /// A peer's link failed mid-collective: poison this rank too.
@@ -698,6 +1089,55 @@ impl Communicator for SocketComm {
         self.world
     }
 
+    fn algo(&self) -> Algo {
+        self.algo
+    }
+
+    fn send_bytes(&self, to: usize, payload: &[u8]) {
+        assert!(to != self.rank && to < self.world, "dist[socket]: bad p2p target {to}");
+        let mut guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let inner = &mut *guard;
+        let seq = inner.p2p_sent[to];
+        inner.p2p_sent[to] += 1;
+        traffic::record_sent(self.rank, (FRAME_HEADER_BYTES + payload.len()) as u64);
+        let link = inner.mesh[to].as_mut().expect("dist[socket]: mesh link missing");
+        write_frame(link, KIND_P2P, seq, payload).unwrap_or_else(|e| peer_failed(to, &e));
+    }
+
+    fn recv_bytes(&self, from: usize) -> Vec<u8> {
+        assert!(from != self.rank && from < self.world, "dist[socket]: bad p2p source {from}");
+        let mut guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let inner = &mut *guard;
+        let want = inner.p2p_rcvd[from];
+        inner.p2p_rcvd[from] += 1;
+        let link = inner.mesh[from].as_mut().expect("dist[socket]: mesh link missing");
+        let (k, s, payload) = read_frame(link).unwrap_or_else(|e| peer_failed(from, &e));
+        check_frame(k, KIND_P2P, s, want, from);
+        payload
+    }
+
+    fn send_recv_bytes(&self, to: usize, payload: &[u8], from: usize) -> Vec<u8> {
+        assert!(to != self.rank && to < self.world, "dist[socket]: bad p2p target {to}");
+        assert!(from != self.rank && from < self.world, "dist[socket]: bad p2p source {from}");
+        let mut guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let inner = &mut *guard;
+        let sseq = inner.p2p_sent[to];
+        inner.p2p_sent[to] += 1;
+        let rseq = inner.p2p_rcvd[from];
+        inner.p2p_rcvd[from] += 1;
+        traffic::record_sent(self.rank, (FRAME_HEADER_BYTES + payload.len()) as u64);
+        let mut sbuf = Vec::with_capacity(FRAME_HEADER_BYTES + payload.len());
+        sbuf.extend_from_slice(&frame_header(KIND_P2P, sseq, payload.len()));
+        sbuf.extend_from_slice(payload);
+        if to == from {
+            let link = inner.mesh[to].as_mut().expect("dist[socket]: mesh link missing");
+            duplex_exchange(link, None, &sbuf, to, from, rseq)
+        } else {
+            let (slink, rlink) = two_links(&mut inner.mesh, to, from);
+            duplex_exchange(slink, Some(rlink), &sbuf, to, from, rseq)
+        }
+    }
+
     fn exchange_mats(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
         let parts = self.exchange_bytes(KIND_MATS, encode_mats(&mats));
         parts
@@ -725,13 +1165,21 @@ impl Communicator for SocketComm {
 
 impl Drop for SocketComm {
     fn drop(&mut self) {
-        // Clean shutdown: best-effort goodbye so peers can tell an early
-        // (SPMD-violating) exit from a crash; then close the links.
-        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        // Clean shutdown: best-effort goodbye on every link — star and
+        // mesh — so peers can tell an early (SPMD-violating) exit from a
+        // crash; then close the links.
+        let mut guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let inner = &mut *guard;
         let seq = inner.seq;
         for link in &mut inner.links {
             let _ = write_frame(link, KIND_GOODBYE, seq, &[]);
             link.shutdown();
+        }
+        for (r, link) in inner.mesh.iter_mut().enumerate() {
+            if let Some(link) = link {
+                let _ = write_frame(link, KIND_GOODBYE, inner.p2p_sent[r], &[]);
+                link.shutdown();
+            }
         }
     }
 }
@@ -744,9 +1192,13 @@ impl Drop for SocketComm {
 /// [`launch_workers`].
 #[derive(Clone, Debug)]
 pub struct WorkerEnv {
+    /// This process's rank (`SINGD_RANK`).
     pub rank: usize,
+    /// The world size (`SINGD_WORLD`).
     pub world: usize,
+    /// The rendezvous endpoint (`SINGD_RENDEZVOUS`).
     pub rendezvous: String,
+    /// The launch's run-id tag (`SINGD_RUN_ID`).
     pub run_id: u64,
 }
 
@@ -786,13 +1238,17 @@ pub fn fresh_run_id() -> u64 {
 
 /// Re-exec this binary as worker ranks `1..world` (torchrun-style): same
 /// argv, plus the `SINGD_RANK`/`SINGD_WORLD`/`SINGD_RENDEZVOUS`/
-/// `SINGD_RUN_ID` env contract. The calling process is rank 0. Worker
-/// stdout is discarded (rank 0 owns reporting); stderr is inherited so
-/// worker panics stay visible.
+/// `SINGD_RUN_ID` env contract. `SINGD_ALGO` is pinned to the launcher's
+/// resolved collective algorithm so a programmatically-set
+/// [`crate::train::DistCfg::algo`] reaches workers whose argv/config do
+/// not carry it (every rank of a world must agree on the algorithm).
+/// The calling process is rank 0. Worker stdout is discarded (rank 0
+/// owns reporting); stderr is inherited so worker panics stay visible.
 pub fn launch_workers(
     world: usize,
     rendezvous: &str,
     run_id: u64,
+    algo: Algo,
 ) -> io::Result<Vec<std::process::Child>> {
     assert!(
         worker_env().is_none(),
@@ -808,6 +1264,7 @@ pub fn launch_workers(
             .env(ENV_WORLD, world.to_string())
             .env(ENV_RENDEZVOUS, rendezvous)
             .env(ENV_RUN_ID, run_id.to_string())
+            .env("SINGD_ALGO", algo.name())
             .stdout(std::process::Stdio::null())
             .spawn()?;
         children.push(child);
@@ -834,13 +1291,24 @@ pub fn wait_workers(children: &mut Vec<std::process::Child>) -> Result<(), Strin
 }
 
 /// Run `world` SPMD rank bodies over a real socket world inside this
+/// process under the default collective algorithm; see
+/// [`run_ranks_socket_algo`].
+pub fn run_ranks_socket<T, F>(world: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(SocketComm) -> T + Sync,
+{
+    run_ranks_socket_algo(world, crate::dist::default_algo(), f)
+}
+
+/// Run `world` SPMD rank bodies over a real socket world inside this
 /// process (one thread per rank, a fresh Unix endpoint) and collect
 /// results in rank order — the socket-transport analogue of
-/// [`crate::dist::run_ranks`], used by the cross-transport conformance
-/// and fault-injection suites. Every byte still travels through the
-/// kernel socket layer, so the wire path is exactly the multi-process
-/// one; only process isolation is mocked.
-pub fn run_ranks_socket<T, F>(world: usize, f: F) -> Vec<T>
+/// [`crate::dist::run_ranks_algo`], used by the cross-transport
+/// conformance and fault-injection suites. Every byte still travels
+/// through the kernel socket layer, so the wire path is exactly the
+/// multi-process one; only process isolation is mocked.
+pub fn run_ranks_socket_algo<T, F>(world: usize, algo: Algo, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(SocketComm) -> T + Sync,
@@ -853,7 +1321,7 @@ where
     std::thread::scope(|s| {
         for r in 0..world {
             s.spawn(move || {
-                let comm = SocketComm::connect(r, world, rv, run_id)
+                let comm = SocketComm::connect_with(r, world, rv, run_id, algo)
                     .unwrap_or_else(|e| panic!("dist[socket]: rank {r} rendezvous: {e}"));
                 *rs[r].lock().unwrap_or_else(|e| e.into_inner()) = Some(fr(comm));
             });
@@ -967,6 +1435,64 @@ mod tests {
             acc
         });
         assert!(outs.iter().all(|v| v == &outs[0]));
+    }
+
+    #[test]
+    fn mesh_p2p_roundtrips_in_ring_order() {
+        for world in [2usize, 3, 4] {
+            let outs = run_ranks_socket(world, |c| {
+                let right = (c.rank() + 1) % world;
+                let left = (c.rank() + world - 1) % world;
+                let payload = vec![c.rank() as u8; 8];
+                c.send_recv_bytes(right, &payload, left)
+            });
+            for (r, got) in outs.iter().enumerate() {
+                let left = (r + world - 1) % world;
+                assert_eq!(got, &vec![left as u8; 8], "world {world} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_p2p_fifo_and_empty_payloads() {
+        let outs = run_ranks_socket(2, |c| {
+            let other = 1 - c.rank();
+            // Asymmetric-by-rank but SPMD-paired: rank 0 sends two frames
+            // first (they fit in the socket buffer), rank 1 receives then
+            // replies with an empty frame.
+            if c.rank() == 0 {
+                c.send_bytes(other, &[1, 2, 3]);
+                c.send_bytes(other, &[]);
+                c.recv_bytes(other)
+            } else {
+                let a = c.recv_bytes(other);
+                let b = c.recv_bytes(other);
+                assert_eq!(a, vec![1, 2, 3]);
+                assert_eq!(b, Vec::<u8>::new());
+                c.send_bytes(other, &[9]);
+                vec![0]
+            }
+        });
+        assert_eq!(outs[0], vec![9]);
+    }
+
+    #[test]
+    fn duplex_survives_payloads_larger_than_socket_buffers() {
+        // Both ranks send 2 MiB to each other simultaneously — far past
+        // the kernel's socket buffers, so a blocking send-then-recv
+        // schedule would deadlock. The duplex progress loop must drain
+        // both directions.
+        let n = 2 << 20;
+        let outs = run_ranks_socket(2, |c| {
+            let other = 1 - c.rank();
+            let payload = vec![c.rank() as u8 + 1; n];
+            let got = c.send_recv_bytes(other, &payload, other);
+            (got.len(), got.iter().all(|&b| b == other as u8 + 1))
+        });
+        for (r, (len, ok)) in outs.iter().enumerate() {
+            assert_eq!(*len, n, "rank {r}");
+            assert!(ok, "rank {r}: payload corrupted");
+        }
     }
 
     #[test]

@@ -71,7 +71,12 @@ pub fn run_job(cfg: &JobConfig) -> RunResult {
         eval_every: 0,
         stop_on_divergence: true,
     };
-    let dc = DistCfg { ranks: cfg.ranks, strategy: cfg.dist_strategy, transport: cfg.transport };
+    let dc = DistCfg {
+        ranks: cfg.ranks,
+        strategy: cfg.dist_strategy,
+        transport: cfg.transport,
+        algo: cfg.algo,
+    };
     train_dist(model.as_mut(), &ds, &tc, &dc)
 }
 

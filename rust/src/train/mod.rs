@@ -10,8 +10,8 @@ pub use checkpoint::{
 
 use crate::data::Dataset;
 use crate::dist::{
-    self, bucket, collectives, shard, transport, Communicator, DistCtx, DistStrategy, SocketComm,
-    Transport,
+    self, bucket, collectives, shard, transport, Algo, Communicator, DistCtx, DistStrategy,
+    SocketComm, Transport,
 };
 use crate::model::{BackwardResult, Batch, Model};
 use crate::optim::{Hyper, KronStats, Method, Optimizer};
@@ -248,8 +248,8 @@ pub fn train_image_model<M: Model + ?Sized>(
 }
 
 /// Distributed topology of a training run (the `[dist]` config section /
-/// `--ranks` + `--transport` CLI knobs / `SINGD_RANKS` +
-/// `SINGD_TRANSPORT` env defaults).
+/// `--ranks` + `--transport` + `--algo` CLI knobs / `SINGD_RANKS` +
+/// `SINGD_TRANSPORT` + `SINGD_ALGO` env defaults).
 #[derive(Clone, Debug)]
 pub struct DistCfg {
     /// World size; `1` falls back to the serial driver.
@@ -258,6 +258,9 @@ pub struct DistCfg {
     pub strategy: DistStrategy,
     /// Communicator backend: in-process threads or multi-process sockets.
     pub transport: Transport,
+    /// Collective algorithm: rank-0 fan-in star or bandwidth-optimal
+    /// ring (the default; bitwise identical either way).
+    pub algo: Algo,
 }
 
 impl Default for DistCfg {
@@ -266,14 +269,17 @@ impl Default for DistCfg {
             ranks: dist::default_ranks(),
             strategy: DistStrategy::Replicated,
             transport: dist::default_transport(),
+            algo: dist::default_algo(),
         }
     }
 }
 
 impl DistCfg {
-    /// An explicit in-process topology (the common test fixture).
+    /// An explicit in-process topology (the common test fixture); the
+    /// collective algorithm follows the `SINGD_ALGO` env default so the
+    /// ci.sh matrix drives the whole dist suite through both schedules.
     pub fn local(ranks: usize, strategy: DistStrategy) -> DistCfg {
-        DistCfg { ranks, strategy, transport: Transport::Local }
+        DistCfg { ranks, strategy, transport: Transport::Local, algo: dist::default_algo() }
     }
 }
 
@@ -326,6 +332,17 @@ impl DistCfg {
 /// exchange byte-exact payloads, so `--transport socket` is bitwise
 /// identical to `--transport local` and to serial `ranks = 1`
 /// (`rust/tests/dist_proc.rs` asserts this across real processes).
+///
+/// # Collective algorithm
+///
+/// [`DistCfg::algo`] picks where the bytes flow: [`Algo::Ring`] (the
+/// default) runs the statistics gather and update all-reduce as
+/// bandwidth-balanced ring schedules over the point-to-point seam
+/// (`~2·(R−1)/R·N` bytes per rank); [`Algo::Star`] funnels them through
+/// the rank-0 exchange. The ring reduces every chunk with the same
+/// halving tree the star uses, so `--algo ring` and `--algo star` are
+/// bitwise identical — the knob is purely about bandwidth
+/// (`benches/dist_scaling.rs` measures both).
 pub fn train_dist<M: Model + ?Sized>(
     model: &mut M,
     dataset: &Dataset,
@@ -367,7 +384,7 @@ fn train_dist_local<M: Model + ?Sized>(
     let (rows, best, steps_run, diverged, wall_secs) =
         train_loop(model, dataset, cfg, |model, b, step, lr| {
             let model_ref = &*model;
-            let outs = dist::run_ranks(world, |comm| {
+            let outs = dist::run_ranks_algo(world, dcfg.algo, |comm| {
                 rank_step(&comm, model_ref, b, &opts[comm.rank()], step, lr)
             });
             let first = outs.into_iter().next().unwrap();
@@ -440,12 +457,12 @@ fn train_dist_socket<M: Model + ?Sized>(
         None => {
             let rendezvous = transport::fresh_rendezvous();
             let run_id = transport::fresh_run_id();
-            let workers = transport::launch_workers(world, &rendezvous, run_id)
+            let workers = transport::launch_workers(world, &rendezvous, run_id, dcfg.algo)
                 .unwrap_or_else(|e| panic!("train_dist[socket]: launching workers: {e}"));
             (0, rendezvous, run_id, workers)
         }
     };
-    let comm = SocketComm::connect(rank, world, &rendezvous, run_id)
+    let comm = SocketComm::connect_with(rank, world, &rendezvous, run_id, dcfg.algo)
         .unwrap_or_else(|e| panic!("train_dist[socket]: rank {rank} rendezvous: {e}"));
     let shapes = model.shapes();
     let ctx = DistCtx::new(dcfg.strategy, rank, world);
@@ -539,7 +556,11 @@ fn rank_step<M: Model + ?Sized>(
         payload.push(st.a.clone());
         payload.push(st.g.clone());
     }
-    let parts = comm.exchange_mats(payload);
+    // Route the gather through the algo-dispatched collective: under the
+    // ring it circulates over neighbor links instead of fanning in at
+    // rank 0 — this is the heaviest exchange of the step. Pure data
+    // movement either way, so the reconstruction below is exact.
+    let parts = collectives::all_gather(comm, payload);
     let mut grads = Vec::with_capacity(n);
     let mut stats = Vec::with_capacity(n);
     for l in 0..n {

@@ -9,7 +9,7 @@
 
 use singd::data;
 use singd::dist::{
-    self, bucket, collectives, transport, Communicator, DistCtx, DistStrategy, Transport,
+    self, bucket, collectives, transport, Algo, Communicator, DistCtx, DistStrategy, Transport,
 };
 use singd::model::cnn::ImgShape;
 use singd::model::{Mlp, Model};
@@ -116,6 +116,7 @@ fn singd_ranks_env_default_drives_dist_cfg_and_keeps_the_contract() {
     let mut dc = DistCfg::default();
     assert_eq!(dc.ranks, dist::default_ranks());
     assert_eq!(dc.transport, dist::default_transport());
+    assert_eq!(dc.algo, dist::default_algo());
     // Under SINGD_TRANSPORT=socket the default would re-exec this test
     // binary as worker ranks; the multi-process leg lives in
     // rust/tests/dist_proc.rs (driving the singd binary), so this test
@@ -354,6 +355,110 @@ fn socket_bucketed_all_reduce_bitwise_matches_local() {
 }
 
 // =====================================================================
+// Ring-vs-star conformance (ISSUE 4): the ring schedules reduce every
+// chunk at its destination with the same halving tree the star uses, so
+// every collective must be bitwise identical across algo ∈ {star, ring}
+// × transport ∈ {local, socket} — on randomized shapes including empty
+// matrices, 1×1 buffers, and row/element counts the chunk plan does not
+// divide evenly (and worlds larger than the payload, where trailing
+// chunks are empty).
+
+/// One rank's outputs from every algo-dispatched collective on seeded
+/// per-rank random inputs of the given shapes.
+#[allow(clippy::type_complexity)]
+fn algo_collectives(
+    comm: &dyn Communicator,
+    seed: u64,
+    shapes: &[(usize, usize)],
+) -> (Vec<Mat>, Vec<Mat>, Mat, Mat, Vec<Mat>) {
+    let mut rng = Pcg::with_stream(seed, comm.rank() as u64);
+    let mats: Vec<Mat> = shapes.iter().map(|&(r, c)| rng.normal_mat(r, c, 1.0)).collect();
+    let reduced = collectives::all_reduce_sum(comm, &mats);
+    let mut bucketed = mats.clone();
+    bucket::all_reduce_sum_bucketed(comm, &mut bucketed, 1 + seed as usize % 37);
+    // A second matrix with a row count the world rarely divides.
+    let tall = rng.normal_mat(1 + seed as usize % 9, 1 + seed as usize % 4, 1.0);
+    let gathered = collectives::all_gather_rows(comm, &tall);
+    let scattered = collectives::reduce_scatter_rows(comm, &tall);
+    let root = (seed as usize) % comm.world_size();
+    let payload = if comm.rank() == root { mats.clone() } else { Vec::new() };
+    let bcast = collectives::broadcast(comm, root, payload);
+    (reduced, bucketed, gathered, scattered, bcast)
+}
+
+#[test]
+fn ring_and_star_agree_bitwise_across_transports_on_randomized_shapes() {
+    let mut shape_rng = Pcg::new(0xa190);
+    for world in [2usize, 3, 4] {
+        for trial in 0..4 {
+            // Random shape lists seeded per (world, trial): include the
+            // degenerate shapes (0×k rows, k×0 cols, 1×1) by sampling
+            // dims in 0..=6 and forcing a 1×1 and a 0-row entry.
+            let mut shapes: Vec<(usize, usize)> = (0..2 + shape_rng.below(3))
+                .map(|_| (shape_rng.below(7), shape_rng.below(7)))
+                .collect();
+            shapes.push((1, 1));
+            shapes.push((0, 3));
+            let seed = 7000 + (world * 100 + trial) as u64;
+            let sh = &shapes;
+            let star_local =
+                dist::run_ranks_algo(world, Algo::Star, |c| algo_collectives(&c, seed, sh));
+            let ring_local =
+                dist::run_ranks_algo(world, Algo::Ring, |c| algo_collectives(&c, seed, sh));
+            let star_socket = transport::run_ranks_socket_algo(world, Algo::Star, |c| {
+                algo_collectives(&c, seed, sh)
+            });
+            let ring_socket = transport::run_ranks_socket_algo(world, Algo::Ring, |c| {
+                algo_collectives(&c, seed, sh)
+            });
+            let variants = [
+                ("ring-local", &ring_local),
+                ("star-socket", &star_socket),
+                ("ring-socket", &ring_socket),
+            ];
+            for (name, variant) in variants {
+                for (rank, (a, b)) in star_local.iter().zip(variant.iter()).enumerate() {
+                    let ctx = format!("world {world} trial {trial} rank {rank} {name}");
+                    assert_mats_bitwise(&a.0, &b.0, &format!("{ctx}: all_reduce"));
+                    assert_mats_bitwise(&a.1, &b.1, &format!("{ctx}: bucketed all_reduce"));
+                    assert_mats_bitwise(
+                        std::slice::from_ref(&a.2),
+                        std::slice::from_ref(&b.2),
+                        &format!("{ctx}: all_gather_rows"),
+                    );
+                    assert_mats_bitwise(
+                        std::slice::from_ref(&a.3),
+                        std::slice::from_ref(&b.3),
+                        &format!("{ctx}: reduce_scatter_rows"),
+                    );
+                    assert_mats_bitwise(&a.4, &b.4, &format!("{ctx}: broadcast"));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ring_training_is_bitwise_identical_to_star_and_serial() {
+    // The end-to-end acceptance: the same fixture trained under
+    // --algo ring matches --algo star and the serial path bit for bit,
+    // for both strategies.
+    let (ds, mut cfg) = fixture();
+    cfg.epochs = 1;
+    let serial = run(&cfg, &ds, None);
+    for strategy in [DistStrategy::Replicated, DistStrategy::FactorSharded] {
+        let mut star = DistCfg::local(4, strategy);
+        star.algo = Algo::Star;
+        let mut ring = DistCfg::local(4, strategy);
+        ring.algo = Algo::Ring;
+        let star_run = run(&cfg, &ds, Some(&star));
+        let ring_run = run(&cfg, &ds, Some(&ring));
+        assert_bitwise_equal(&serial, &star_run, &format!("star {}", strategy.name()));
+        assert_bitwise_equal(&serial, &ring_run, &format!("ring {}", strategy.name()));
+    }
+}
+
+// =====================================================================
 // Property-style randomized bucket tests (seeded Pcg, no wall clock).
 
 #[test]
@@ -473,6 +578,41 @@ fn socket_peer_death_mid_collective_wakes_peers() {
                 panic!("injected fault: rank 2 socket closed");
             }
             let _ = comm.exchange_f64(vec![comm.rank() as f64]);
+        });
+    });
+    assert_eq!(verdict, Some(true), "peers must error out, not deadlock");
+}
+
+#[test]
+fn local_rank_panic_mid_ring_collective_wakes_peers() {
+    // Peers sit in p2p mailbox receives (the ring schedule), not the
+    // barrier exchange: the poison must wake those too.
+    let verdict = finishes_within(60, || {
+        dist::run_ranks_algo(4, Algo::Ring, |comm| {
+            if comm.rank() == 2 {
+                panic!("injected fault: rank 2");
+            }
+            let m = Mat::from_fn(32, 4, |r, c| (r + c) as f32);
+            let _ = collectives::all_reduce_sum(&comm, &[m]);
+        });
+    });
+    assert_eq!(verdict, Some(true), "peers must error out, not deadlock");
+}
+
+#[test]
+fn socket_peer_death_mid_ring_propagates() {
+    // Rank 2's sockets — star and mesh — close abruptly while its peers
+    // run a ring all-reduce: every peer must observe the dead link
+    // (directly, or transitively when its own neighbor panics and drops
+    // out) and fail instead of hanging in the ring.
+    let verdict = finishes_within(60, || {
+        transport::run_ranks_socket_algo(4, Algo::Ring, |comm| {
+            if comm.rank() == 2 {
+                comm.sever();
+                panic!("injected fault: rank 2 socket closed");
+            }
+            let m = Mat::from_fn(64, 4, |r, c| (r * 7 + c) as f32);
+            let _ = collectives::all_reduce_sum(&comm, &[m]);
         });
     });
     assert_eq!(verdict, Some(true), "peers must error out, not deadlock");

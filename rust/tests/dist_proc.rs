@@ -39,7 +39,14 @@ fn write_job(name: &str, method: &str) -> PathBuf {
 fn digest_of(config: &std::path::Path, extra: &[&str]) -> String {
     let mut cmd = Command::new(bin());
     cmd.arg("train").arg("--config").arg(config).args(extra);
-    for k in ["SINGD_RANKS", "SINGD_TRANSPORT", "SINGD_RANK", "SINGD_WORLD", "SINGD_RENDEZVOUS"] {
+    for k in [
+        "SINGD_RANKS",
+        "SINGD_TRANSPORT",
+        "SINGD_ALGO",
+        "SINGD_RANK",
+        "SINGD_WORLD",
+        "SINGD_RENDEZVOUS",
+    ] {
         cmd.env_remove(k);
     }
     let out = cmd.output().expect("spawn singd");
@@ -66,25 +73,51 @@ fn socket_ranks4_bitwise_matches_local_and_serial_for_singd_and_kfac() {
         let cfg = write_job(&method.replace(':', "-"), method);
         let serial = digest_of(&cfg, &["--ranks", "1"]);
         for strategy in ["replicated", "factor-sharded"] {
-            let local = digest_of(
-                &cfg,
-                &["--ranks", "4", "--strategy", strategy, "--transport", "local"],
-            );
-            let socket = digest_of(
-                &cfg,
-                &["--ranks", "4", "--strategy", strategy, "--transport", "socket"],
-            );
+            // The default algo is ring; these two legs are the headline
+            // "--algo ring on both transports" acceptance.
+            let ring: &[&str] = &["--ranks", "4", "--strategy", strategy, "--algo", "ring"];
+            let local = digest_of(&cfg, &[ring, &["--transport", "local"][..]].concat());
+            let socket = digest_of(&cfg, &[ring, &["--transport", "socket"][..]].concat());
             assert_eq!(
                 serial, local,
-                "{method}/{strategy}: local ranks=4 diverged from serial"
+                "{method}/{strategy}: local ring ranks=4 diverged from serial"
             );
             assert_eq!(
                 serial, socket,
-                "{method}/{strategy}: socket ranks=4 (separate processes) diverged from serial"
+                "{method}/{strategy}: socket ring ranks=4 (separate processes) diverged from serial"
             );
         }
         std::fs::remove_file(&cfg).ok();
     }
+}
+
+#[test]
+fn star_and_ring_digests_match_across_transports() {
+    // The algo axis end to end over real OS processes: star and ring
+    // must produce identical param digests on both transports (one
+    // method/strategy cell keeps the process count bounded; the full
+    // shape grid lives in the in-process conformance suite).
+    let cfg = write_job("algo-axis", "singd:diag");
+    let serial = digest_of(&cfg, &["--ranks", "1"]);
+    for transport in ["local", "socket"] {
+        for algo in ["star", "ring"] {
+            let digest = digest_of(
+                &cfg,
+                &[
+                    "--ranks",
+                    "4",
+                    "--strategy",
+                    "factor-sharded",
+                    "--transport",
+                    transport,
+                    "--algo",
+                    algo,
+                ],
+            );
+            assert_eq!(serial, digest, "{transport}/{algo}: diverged from serial");
+        }
+    }
+    std::fs::remove_file(&cfg).ok();
 }
 
 #[test]
@@ -100,7 +133,14 @@ fn socket_ranks2_smoke_with_csv_output() {
         .arg(&cfg)
         .args(["--ranks", "2", "--transport", "socket", "--out"])
         .arg(&out_csv);
-    for k in ["SINGD_RANKS", "SINGD_TRANSPORT", "SINGD_RANK", "SINGD_WORLD", "SINGD_RENDEZVOUS"] {
+    for k in [
+        "SINGD_RANKS",
+        "SINGD_TRANSPORT",
+        "SINGD_ALGO",
+        "SINGD_RANK",
+        "SINGD_WORLD",
+        "SINGD_RENDEZVOUS",
+    ] {
         cmd.env_remove(k);
     }
     let out = cmd.output().expect("spawn singd");

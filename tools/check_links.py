@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Link checker for the repo's markdown docs (ci.sh leg).
+
+Verifies, for every file passed on the command line:
+
+1. **Relative markdown links** `[text](path)` resolve to an existing
+   file or directory (external schemes and pure `#anchor` links are
+   skipped; a `path#fragment` is checked for the file part only).
+2. **file:line anchors** like `rust/src/dist/mod.rs:123` (backtick-code
+   or bare) name an existing file with at least that many lines, so the
+   architecture book's pointers into the source cannot rot silently.
+3. **Bare code-span file references** like `rust/tests/dist.rs` exist.
+
+Exit status 0 when every reference resolves; 1 otherwise, listing every
+failure. Paths are resolved relative to the repository root (the parent
+of this script's directory).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# path.ext:123 anchors, in or out of backticks (extensions we track).
+FILE_LINE = re.compile(r"`?([A-Za-z0-9_./-]+\.(?:rs|md|sh|py|toml|json)):(\d+)`?")
+# `path/to/file.ext` code spans (no :line).
+CODE_FILE = re.compile(r"`([A-Za-z0-9_][A-Za-z0-9_./-]*\.(?:rs|md|sh|py|toml|json))`")
+
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def line_count(path: Path) -> int:
+    with open(path, "rb") as f:
+        return sum(1 for _ in f)
+
+
+def check_file(md: Path) -> list:
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    counted = {}
+
+    def exists(rel: str) -> bool:
+        return (ROOT / rel).exists()
+
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if rel and not exists(rel):
+            errors.append(f"{md.name}: broken link -> {target}")
+
+    for m in FILE_LINE.finditer(text):
+        rel, line = m.group(1), int(m.group(2))
+        p = ROOT / rel
+        if not p.is_file():
+            errors.append(f"{md.name}: file:line anchor to missing file -> {rel}:{line}")
+            continue
+        if rel not in counted:
+            counted[rel] = line_count(p)
+        if line > counted[rel]:
+            errors.append(
+                f"{md.name}: stale anchor {rel}:{line} (file has {counted[rel]} lines)"
+            )
+
+    for m in CODE_FILE.finditer(text):
+        rel = m.group(1)
+        # Skip things that are clearly not repo paths (no directory part
+        # and not present at the root — e.g. generic example names).
+        if "/" not in rel and not exists(rel):
+            continue
+        if not exists(rel):
+            errors.append(f"{md.name}: code-span path does not exist -> {rel}")
+
+    return errors
+
+
+def main() -> int:
+    targets = [Path(a) for a in sys.argv[1:]]
+    if not targets:
+        print("usage: check_links.py <file.md> [...]", file=sys.stderr)
+        return 2
+    all_errors = []
+    for t in targets:
+        p = t if t.is_absolute() else ROOT / t
+        if not p.is_file():
+            all_errors.append(f"{t}: document missing")
+            continue
+        all_errors.extend(check_file(p))
+    if all_errors:
+        for e in all_errors:
+            print(f"LINKCHECK FAIL  {e}", file=sys.stderr)
+        return 1
+    print(f"link check OK ({len(targets)} document(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
