@@ -45,31 +45,50 @@ DIST_TIMEOUT="${SINGD_CI_DIST_TIMEOUT:-900}"
 echo "== cargo test -q =="
 timeout "$((2 * DIST_TIMEOUT))" cargo test -q
 
-echo "== determinism suites (SINGD_THREADS x SINGD_RANKS x SINGD_TRANSPORT x SINGD_ALGO matrix) =="
+echo "== determinism suites (SINGD_THREADS x SINGD_RANKS x SINGD_TRANSPORT x SINGD_ALGO x SINGD_OVERLAP matrix) =="
 # The bitwise contracts must hold at every pool size, world size,
-# transport and collective algorithm: serial vs pooled kernels
-# (tests/parallel.rs) and serial vs distributed training (tests/dist.rs,
-# which also exercises the SINGD_RANKS / SINGD_TRANSPORT / SINGD_ALGO
-# env defaults — DistCfg::local follows SINGD_ALGO, so the whole dist
-# suite trains through both schedules). Every dist leg runs under a hard
-# timeout so a hung rendezvous fails fast instead of stalling the suite;
-# the ranks=4 leg fans out over both transports and both algorithms.
+# transport, collective algorithm and overlap mode: serial vs pooled
+# kernels (tests/parallel.rs) and serial vs distributed training
+# (tests/dist.rs, which also exercises the SINGD_RANKS / SINGD_TRANSPORT
+# / SINGD_ALGO / SINGD_OVERLAP env defaults — DistCfg::local follows
+# SINGD_ALGO and SINGD_OVERLAP, so the whole dist suite trains through
+# both schedules and both overlap modes). Every dist leg runs under a
+# hard timeout so a hung rendezvous fails fast instead of stalling the
+# suite. The full 2×2×2 transport × algo × overlap cube at ranks=4 would
+# be 8 cells per pool size; redundant cells are pruned while keeping
+# every axis pair covered somewhere: ring (whose pipelined schedule is
+# what overlap changes most) runs both overlap modes on both
+# transports, and star — also overlap-sensitive end-to-end, since the
+# driver's per-layer pending gathers ride it too — runs overlap=1 on
+# local and overlap=0 on socket. The unpruned shape/stage grid runs
+# in-process inside tests/dist.rs itself.
+run_dist_leg() { # t r transport algo overlap
+    echo "-- SINGD_THREADS=$1 SINGD_RANKS=$2 SINGD_TRANSPORT=$3 SINGD_ALGO=$4 SINGD_OVERLAP=$5: dist suite"
+    SINGD_THREADS=$1 SINGD_RANKS=$2 SINGD_TRANSPORT=$3 SINGD_ALGO=$4 SINGD_OVERLAP=$5 \
+        timeout "$DIST_TIMEOUT" cargo test -q --test dist
+}
 for t in 1 4; do
     echo "-- SINGD_THREADS=$t: parallel suite"
     SINGD_THREADS=$t cargo test -q --test parallel
-    for r in 1 4; do
-        transports="local"
-        algos="ring"
-        if [ "$r" = 4 ]; then transports="local socket"; algos="star ring"; fi
-        for tr in $transports; do
-            for al in $algos; do
-                echo "-- SINGD_THREADS=$t SINGD_RANKS=$r SINGD_TRANSPORT=$tr SINGD_ALGO=$al: dist suite"
-                SINGD_THREADS=$t SINGD_RANKS=$r SINGD_TRANSPORT=$tr SINGD_ALGO=$al \
-                    timeout "$DIST_TIMEOUT" cargo test -q --test dist
-            done
-        done
-    done
+    # ranks=1: the serial-delegation cell (transport/algo/overlap moot).
+    run_dist_leg "$t" 1 local ring 1
 done
+# ranks=4 at the realistic pool size: ring × both transports × both
+# overlap modes; star covers one overlap mode per transport (both modes
+# across the pair).
+for tr in local socket; do
+    run_dist_leg 4 4 "$tr" ring 0
+    run_dist_leg 4 4 "$tr" ring 1
+done
+run_dist_leg 4 4 local star 1
+run_dist_leg 4 4 socket star 0
+# ranks=4 at SINGD_THREADS=1 (scoped-thread rank bodies): the overlap
+# axis interacts with rank scheduling here, so keep ring 0/1 on the
+# local transport plus a socket ring cell (ring is the algorithm the
+# overlap axis actually changes; socket star is covered at t=4).
+run_dist_leg 1 4 local ring 0
+run_dist_leg 1 4 local ring 1
+run_dist_leg 1 4 socket ring 1
 
 echo "== multi-process transport suite (separate OS processes) =="
 # tests/dist_proc.rs drives the singd binary: --transport socket at

@@ -1,16 +1,21 @@
 //! Distributed-scaling bench: step time, per-rank Kronecker-factor
 //! memory, and per-rank bytes-on-wire vs. world size — for both dist
-//! strategies and both collective algorithms (star vs ring).
+//! strategies, both collective algorithms (star vs ring) and both
+//! overlap modes (blocking vs nonblocking/chunk-pipelined).
 //!
 //! Same JSON shape as `BENCH_hotpath.json` (a `cases` array of timing
-//! stats) with per-case `ranks` / `strategy` / `algo` /
+//! stats) with per-case `ranks` / `strategy` / `algo` / `overlap` /
 //! `per_rank_state_bytes` / `wire_bytes_by_rank` fields, plus a
 //! `collectives` array that isolates the bandwidth story: one all-reduce
 //! of a fixed payload, measured through `singd::dist::traffic`. The
 //! memory column is the paper's Table-3 story stretched across ranks;
 //! the wire column is the ISSUE-4 story — the star's rank-0 fan-in sends
 //! `~(R−1)·R·N` bytes from rank 0 while the ring sends a balanced
-//! `~2·(R−1)/R·N` from every rank.
+//! `~2·(R−1)/R·N` from every rank. The overlap axis is the ISSUE-5
+//! story: ring rows appear as a blocking-vs-pipelined series (overlap 0
+//! vs 1 — same bits, the knob only moves wall-clock), and the isolated
+//! `all_reduce` timing rows compare the blocking ring against the
+//! chunk-pipelined ring on a multi-stage payload at world 4.
 //!
 //! Run: `cargo bench --bench dist_scaling`
 //! CI:  `cargo bench --bench dist_scaling -- --smoke`
@@ -30,6 +35,7 @@ struct Row {
     ranks: usize,
     strategy: &'static str,
     algo: &'static str,
+    overlap: bool,
     per_rank_state_bytes: usize,
     wire_bytes_by_rank: Vec<u64>,
     steps: usize,
@@ -37,6 +43,9 @@ struct Row {
 
 struct CollectiveRow {
     algo: &'static str,
+    /// Whether the overlapped (chunk-pipelined, for the ring) schedule
+    /// produced these bytes.
+    overlap: bool,
     world: usize,
     payload_bytes: usize,
     sent_by_rank: Vec<u64>,
@@ -60,7 +69,7 @@ fn write_json(rows: &[Row], colls: &[CollectiveRow], smoke: bool) {
     for (i, row) in rows.iter().enumerate() {
         let s = &row.stats;
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"iters\": {}, \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \"min_ns\": {:.1}, \"max_ns\": {:.1}, \"ranks\": {}, \"strategy\": \"{}\", \"algo\": \"{}\", \"steps\": {}, \"median_step_ns\": {:.1}, \"per_rank_state_bytes\": {}, \"wire_bytes_by_rank\": {}, \"max_rank_wire_bytes\": {}}}",
+            "    {{\"name\": \"{}\", \"iters\": {}, \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \"min_ns\": {:.1}, \"max_ns\": {:.1}, \"ranks\": {}, \"strategy\": \"{}\", \"algo\": \"{}\", \"overlap\": {}, \"steps\": {}, \"median_step_ns\": {:.1}, \"per_rank_state_bytes\": {}, \"wire_bytes_by_rank\": {}, \"max_rank_wire_bytes\": {}}}",
             json_escape(&s.name),
             s.iters,
             s.median_ns,
@@ -70,6 +79,7 @@ fn write_json(rows: &[Row], colls: &[CollectiveRow], smoke: bool) {
             row.ranks,
             row.strategy,
             row.algo,
+            row.overlap,
             row.steps,
             s.median_ns / row.steps.max(1) as f64,
             row.per_rank_state_bytes,
@@ -85,8 +95,9 @@ fn write_json(rows: &[Row], colls: &[CollectiveRow], smoke: bool) {
         let ring_optimal =
             2 * (c.world as u64 - 1) * c.payload_bytes as u64 / c.world as u64;
         out.push_str(&format!(
-            "    {{\"op\": \"all_reduce\", \"algo\": \"{}\", \"world\": {}, \"payload_bytes\": {}, \"sent_by_rank\": {}, \"max_rank_sent_bytes\": {}, \"ring_optimal_per_rank_bytes\": {}}}",
+            "    {{\"op\": \"all_reduce\", \"algo\": \"{}\", \"overlap\": {}, \"world\": {}, \"payload_bytes\": {}, \"sent_by_rank\": {}, \"max_rank_sent_bytes\": {}, \"ring_optimal_per_rank_bytes\": {}}}",
             c.algo,
+            c.overlap,
             c.world,
             c.payload_bytes,
             json_u64_array(&c.sent_by_rank),
@@ -103,17 +114,20 @@ fn write_json(rows: &[Row], colls: &[CollectiveRow], smoke: bool) {
 }
 
 /// Per-rank payload-frame bytes of one `all_reduce_sum` of `payload`
-/// under `algo` at `world` ranks (in-process transport; the byte model
-/// is the socket frame layout either way).
-fn measure_collective(world: usize, algo: Algo, payload: &Mat) -> CollectiveRow {
+/// under `algo` at `world` ranks with the given overlap mode
+/// (in-process transport; the byte model is the socket frame layout
+/// either way — under overlap the ring runs chunk-pipelined, paying one
+/// extra frame header per additional pipeline stage round).
+fn measure_collective(world: usize, algo: Algo, overlap: bool, payload: &Mat) -> CollectiveRow {
     traffic::reset();
-    let outs = dist::run_ranks_algo(world, algo, |c| {
+    let outs = dist::run_ranks_with(world, algo, overlap, |c| {
         let red = collectives::all_reduce_sum(&c, std::slice::from_ref(payload));
         red[0].at(0, 0)
     });
     assert!(outs.iter().all(|&x| x == outs[0]));
     CollectiveRow {
         algo: algo.name(),
+        overlap,
         world,
         payload_bytes: 4 * payload.len(),
         sent_by_rank: traffic::sent_by_rank(world),
@@ -159,78 +173,123 @@ fn main() {
                 if ranks == 1 && algo == Algo::Star {
                     continue; // no collectives at world 1: one baseline row
                 }
-                let shapes: Vec<(usize, usize)> =
-                    dims.windows(2).map(|w| (w[1], w[0] + 1)).collect();
-                let per_rank_state_bytes = method
-                    .build_dist(&shapes, &cfg.hyper, DistCtx::new(strategy, 0, ranks))
-                    .state_bytes();
-                let mut dc = DistCfg::local(ranks, strategy);
-                dc.algo = algo;
-                // One traffic-accounted run before timing: per-rank
-                // payload-frame bytes for the whole 8-step epoch.
-                traffic::reset();
-                {
-                    let mut mrng = Pcg::new(7);
-                    let mut model = Mlp::new(&mut mrng, &dims);
-                    let res = train_dist(&mut model, &ds, &cfg, &dc);
-                    assert!(!res.diverged, "bench run diverged");
+                // The blocking-vs-pipelined series: ring rows at every
+                // multi-rank world run both overlap modes (same bits by
+                // contract 4 — the axis only moves wall-clock); star and
+                // the world-1 baseline are pinned to the default.
+                let overlaps: &[bool] =
+                    if algo == Algo::Ring && ranks > 1 { &[false, true] } else { &[true] };
+                for &overlap in overlaps {
+                    let shapes: Vec<(usize, usize)> =
+                        dims.windows(2).map(|w| (w[1], w[0] + 1)).collect();
+                    let per_rank_state_bytes = method
+                        .build_dist(&shapes, &cfg.hyper, DistCtx::new(strategy, 0, ranks))
+                        .state_bytes();
+                    let mut dc = DistCfg::local(ranks, strategy);
+                    dc.algo = algo;
+                    dc.overlap = overlap;
+                    // One traffic-accounted run before timing: per-rank
+                    // payload-frame bytes for the whole 8-step epoch.
+                    traffic::reset();
+                    {
+                        let mut mrng = Pcg::new(7);
+                        let mut model = Mlp::new(&mut mrng, &dims);
+                        let res = train_dist(&mut model, &ds, &cfg, &dc);
+                        assert!(!res.diverged, "bench run diverged");
+                    }
+                    let wire_bytes_by_rank = traffic::sent_by_rank(ranks);
+                    let name = format!(
+                        "train step ranks={ranks} {} {} overlap={}",
+                        strategy.name(),
+                        algo.name(),
+                        overlap as u8
+                    );
+                    let st = h.bench(&name, || {
+                        let mut mrng = Pcg::new(7);
+                        let mut model = Mlp::new(&mut mrng, &dims);
+                        let res = train_dist(&mut model, &ds, &cfg, &dc);
+                        assert!(!res.diverged, "bench run diverged");
+                    });
+                    println!(
+                        "{:>46} {:.2} ms/step, {} per-rank state bytes, wire max {} B/rank",
+                        "->",
+                        st.median_ns / steps as f64 / 1e6,
+                        per_rank_state_bytes,
+                        wire_bytes_by_rank.iter().max().copied().unwrap_or(0),
+                    );
+                    rows.push(Row {
+                        stats: st,
+                        ranks,
+                        strategy: strategy.name(),
+                        algo: algo.name(),
+                        overlap,
+                        per_rank_state_bytes,
+                        wire_bytes_by_rank,
+                        steps,
+                    });
                 }
-                let wire_bytes_by_rank = traffic::sent_by_rank(ranks);
-                let name =
-                    format!("train step ranks={ranks} {} {}", strategy.name(), algo.name());
-                let st = h.bench(&name, || {
-                    let mut mrng = Pcg::new(7);
-                    let mut model = Mlp::new(&mut mrng, &dims);
-                    let res = train_dist(&mut model, &ds, &cfg, &dc);
-                    assert!(!res.diverged, "bench run diverged");
-                });
-                println!(
-                    "{:>46} {:.2} ms/step, {} per-rank state bytes, wire max {} B/rank",
-                    "->",
-                    st.median_ns / steps as f64 / 1e6,
-                    per_rank_state_bytes,
-                    wire_bytes_by_rank.iter().max().copied().unwrap_or(0),
-                );
-                rows.push(Row {
-                    stats: st,
-                    ranks,
-                    strategy: strategy.name(),
-                    algo: algo.name(),
-                    per_rank_state_bytes,
-                    wire_bytes_by_rank,
-                    steps,
-                });
             }
         }
     }
 
     // The bandwidth story isolated: one 1-MiB all-reduce at world 4.
     // Star: rank 0 sends (R−1)·(gathered blob ≈ R·N); ring: every rank
-    // sends 2·(R−1)/R·N.
+    // sends 2·(R−1)/R·N; the pipelined ring moves the same payload with
+    // one extra header per additional stage round.
     let payload = Mat::from_fn(512, 512, |r, c| (r * 31 + c) as f32 * 1e-3);
-    let colls: Vec<CollectiveRow> = [Algo::Star, Algo::Ring]
-        .iter()
-        .map(|&algo| {
-            let c = measure_collective(4, algo, &payload);
-            println!(
-                "-- all_reduce 1 MiB world=4 {}: sent/rank {:?} (max {} B)",
-                c.algo,
-                c.sent_by_rank,
-                c.sent_by_rank.iter().max().copied().unwrap_or(0),
-            );
-            c
-        })
-        .collect();
+    let colls: Vec<CollectiveRow> = [
+        (Algo::Star, false),
+        (Algo::Ring, false),
+        (Algo::Ring, true),
+    ]
+    .iter()
+    .map(|&(algo, overlap)| {
+        let c = measure_collective(4, algo, overlap, &payload);
+        println!(
+            "-- all_reduce 1 MiB world=4 {} overlap={}: sent/rank {:?} (max {} B)",
+            c.algo,
+            c.overlap as u8,
+            c.sent_by_rank,
+            c.sent_by_rank.iter().max().copied().unwrap_or(0),
+        );
+        c
+    })
+    .collect();
+
+    // The blocking-vs-pipelined wall-clock story isolated: the same
+    // 1-MiB (8-stage under the auto plan) ring all-reduce, timed.
+    for overlap in [false, true] {
+        let pl = &payload;
+        let st = h.bench(
+            &format!("all_reduce 1MiB world=4 ring overlap={}", overlap as u8),
+            || {
+                let outs = dist::run_ranks_with(4, Algo::Ring, overlap, |c| {
+                    collectives::all_reduce_sum(&c, std::slice::from_ref(pl))[0].at(0, 0)
+                });
+                std::hint::black_box(outs);
+            },
+        );
+        rows.push(Row {
+            stats: st,
+            ranks: 4,
+            strategy: "collective",
+            algo: "ring",
+            overlap,
+            per_rank_state_bytes: 0,
+            wire_bytes_by_rank: Vec::new(),
+            steps: 1,
+        });
+    }
 
     // The headline memory claim in one line: sharded rank-0 bytes vs
     // replicated, at the largest world size.
     let rep = rows
         .iter()
-        .find(|r| r.ranks == 4 && r.strategy == "replicated" && r.algo == "ring")
+        .find(|r| r.ranks == 4 && r.strategy == "replicated" && r.algo == "ring" && r.overlap)
         .unwrap();
     let sh = rows
         .iter()
-        .find(|r| r.ranks == 4 && r.strategy == "factor-sharded" && r.algo == "ring")
+        .find(|r| r.ranks == 4 && r.strategy == "factor-sharded" && r.algo == "ring" && r.overlap)
         .unwrap();
     println!(
         "-- ranks=4 per-rank factor state: replicated {} B, factor-sharded {} B ({:.2}x)",

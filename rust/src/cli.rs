@@ -61,6 +61,7 @@ USAGE:
   singd train   --config <file.toml> [--out <curves.csv>]
                 [--ranks <R>] [--strategy <replicated|factor-sharded>]
                 [--transport <local|socket>] [--algo <star|ring>]
+                [--overlap <0|1>]
   singd sweep   --config <file.toml> [--trials <N>] [--seed <S>]
   singd gcn     [--method <sgd|adamw|kfac|ingd|singd:diag|...>] [--steps <N>]
   singd inspect [--structure <dense|diag|block:k|tril|rankk:k|hier:k|toeplitz>] [--dim <d>]
@@ -75,10 +76,15 @@ processes joined over a Unix-socket rendezvous (SINGD_RANK/SINGD_WORLD/
 SINGD_RENDEZVOUS env contract). --algo ring (default; SINGD_ALGO env
 overrides) runs the collectives as bandwidth-balanced ring schedules
 over a full peer mesh; --algo star funnels them through rank 0 — both
-are bitwise identical. Either transport and either algo at ranks=R is
-bitwise identical to ranks=1 for power-of-two R dividing the batch size;
-non-dividing R <= batch still train deterministically via the balanced
-padding rule. SINGD_THREADS caps the worker pool all ranks share.
+are bitwise identical. --overlap 1 (default; SINGD_OVERLAP env
+overrides) hides collective latency behind compute: nonblocking stats
+gathers, a chunk-pipelined ring all-reduce, and bucketed update
+exchanges issued ahead of their waits — bitwise identical to
+--overlap 0 by the overlap-invariance contract. Either transport,
+either algo, either overlap mode at ranks=R is bitwise identical to
+ranks=1 for power-of-two R dividing the batch size; non-dividing
+R <= batch still train deterministically via the balanced padding
+rule. SINGD_THREADS caps the worker pool all ranks share.
 
 Regenerating the paper's tables/figures (see DESIGN.md §5):
   cargo bench --bench fig1_vgg_cifar       # Fig. 1 left/center (+ stability)
@@ -165,6 +171,15 @@ fn cmd_train(args: &Args) -> i32 {
             }
         }
     }
+    if let Some(ov) = args.get("overlap") {
+        match crate::dist::parse_overlap(ov) {
+            Some(o) => cfg.overlap = o,
+            None => {
+                eprintln!("error: bad --overlap '{ov}' (0 | 1 | on | off)");
+                return 2;
+            }
+        }
+    }
     // Catch this here (covers --ranks, [dist] ranks and SINGD_RANKS alike)
     // so a bad combination is a clean CLI error, not a driver panic.
     if cfg.ranks > 1 && cfg.batch_size < cfg.ranks {
@@ -191,7 +206,7 @@ fn cmd_train(args: &Args) -> i32 {
         return if res.diverged { 1 } else { 0 };
     }
     println!(
-        "training {} / {} with {} ({}), {} epochs, ranks={} ({}, {}, {})",
+        "training {} / {} with {} ({}), {} epochs, ranks={} ({}, {}, {}, overlap={})",
         cfg.label,
         cfg.dataset,
         cfg.method.name(),
@@ -200,7 +215,8 @@ fn cmd_train(args: &Args) -> i32 {
         cfg.ranks,
         cfg.dist_strategy.name(),
         cfg.transport.name(),
-        cfg.algo.name()
+        cfg.algo.name(),
+        if cfg.overlap { 1 } else { 0 }
     );
     let res = exp::run_job(&cfg);
     for r in &res.rows {
@@ -363,6 +379,7 @@ mod tests {
         assert_eq!(run(&sv(&["train", "--config", p, "--ranks", "x"])), 2);
         assert_eq!(run(&sv(&["train", "--config", p, "--transport", "pigeon"])), 2);
         assert_eq!(run(&sv(&["train", "--config", p, "--algo", "mesh"])), 2);
+        assert_eq!(run(&sv(&["train", "--config", p, "--overlap", "sideways"])), 2);
         // batch_size 32 (default) smaller than the world size → clean
         // error, not a driver assert. (Non-dividing ranks <= batch are
         // allowed: they shard via the balanced padding rule.)

@@ -34,6 +34,7 @@
 //! strategy = "factor-sharded"  # replicated | factor-sharded
 //! transport = "socket"         # local | socket (default: SINGD_TRANSPORT env, else local)
 //! algo = "ring"                # star | ring (default: SINGD_ALGO env, else ring)
+//! overlap = true               # comm/compute overlap (default: SINGD_OVERLAP env, else on)
 //! ```
 
 use crate::dist::{self, Algo, DistStrategy, Transport};
@@ -232,6 +233,11 @@ pub struct JobConfig {
     /// Collective algorithm (`[dist] algo`; defaults to the `SINGD_ALGO`
     /// env contract, else the bandwidth-optimal `ring`).
     pub algo: Algo,
+    /// Comm/compute overlap (`[dist] overlap`; defaults to the
+    /// `SINGD_OVERLAP` env contract, else on). Bitwise-neutral by the
+    /// overlap-invariance contract; the knob trades progress-engine
+    /// overhead for hidden collective latency.
+    pub overlap: bool,
 }
 
 impl JobConfig {
@@ -283,6 +289,16 @@ impl JobConfig {
         let default_algo = dist::default_algo();
         let algo = Algo::parse(t.str_or("dist.algo", default_algo.name()))
             .ok_or_else(|| format!("unknown dist.algo '{}'", t.str_or("dist.algo", "")))?;
+        // `overlap = true|false` (TOML bool) or a string form accepted by
+        // dist::parse_overlap; anything else is rejected, not ignored.
+        let overlap = match t.get("dist.overlap") {
+            None => dist::default_overlap(),
+            Some(Value::Bool(b)) => *b,
+            Some(v) => v
+                .as_str()
+                .and_then(dist::parse_overlap)
+                .ok_or_else(|| format!("bad dist.overlap value {v:?} (true | false)"))?,
+        };
         Ok(JobConfig {
             arch,
             dataset: t.str_or("data.dataset", "cifar100").to_string(),
@@ -300,6 +316,7 @@ impl JobConfig {
             dist_strategy,
             transport,
             algo,
+            overlap,
         })
     }
 
@@ -412,6 +429,22 @@ seed = 7
         let cfg = JobConfig::from_str_toml("[model]\narch = \"mlp\"\n").unwrap();
         assert_eq!(cfg.transport, dist::default_transport());
         assert!(JobConfig::from_str_toml("[dist]\ntransport = \"pigeon\"\n").is_err());
+    }
+
+    #[test]
+    fn dist_section_parses_overlap() {
+        let cfg = JobConfig::from_str_toml("[dist]\noverlap = false\n").unwrap();
+        assert!(!cfg.overlap);
+        let cfg = JobConfig::from_str_toml("[dist]\noverlap = true\n").unwrap();
+        assert!(cfg.overlap);
+        // String forms ride the shared parser.
+        let cfg = JobConfig::from_str_toml("[dist]\noverlap = \"off\"\n").unwrap();
+        assert!(!cfg.overlap);
+        // Default follows the SINGD_OVERLAP env contract (on when unset).
+        let cfg = JobConfig::from_str_toml("[model]\narch = \"mlp\"\n").unwrap();
+        assert_eq!(cfg.overlap, dist::default_overlap());
+        assert!(JobConfig::from_str_toml("[dist]\noverlap = \"sideways\"\n").is_err());
+        assert!(JobConfig::from_str_toml("[dist]\noverlap = 2\n").is_err());
     }
 
     #[test]

@@ -20,6 +20,12 @@ use std::ops::Range;
 /// Default bucket capacity in f32 elements (1 MiB of f32s).
 pub const DEFAULT_BUCKET_ELEMS: usize = 1 << 18;
 
+/// In-flight bound for the overlapped bucketed all-reduce: at most this
+/// many packed buckets ahead of the drain cursor, so overlap costs
+/// `O(depth · bucket)` extra memory instead of a packed copy of the
+/// whole layer list (mirrors the pipelined ring's issue depth).
+const BUCKET_PIPELINE_DEPTH: usize = 2;
+
 /// A partition of a layer list into contiguous, size-bounded buckets.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct BucketPlan {
@@ -60,29 +66,73 @@ impl BucketPlan {
 /// All-reduce (sum) `mats` in place, coalescing them into buckets of at
 /// most `max_elems` f32s. Bitwise identical to all-reducing each matrix
 /// individually; one collective round per bucket.
+///
+/// With overlap enabled ([`Communicator::overlap`]) buckets are issued
+/// as nonblocking ops ([`Communicator::istart_all_reduce_sum`]) a
+/// bounded window ahead of the drain — bucket `k+1`'s flatten overlaps
+/// bucket `k`'s wire time at `O(window · bucket)` extra memory — and
+/// the results are waited and scattered in issue order. Same
+/// [`BucketPlan`], same per-bucket reduction, so the overlapped path is
+/// bitwise identical to the blocking one (contract 4 of
+/// [`crate::dist`]).
 pub fn all_reduce_sum_bucketed(comm: &dyn Communicator, mats: &mut [Mat], max_elems: usize) {
     if comm.world_size() == 1 || mats.is_empty() {
         return;
     }
     let sizes: Vec<usize> = mats.iter().map(|m| m.len()).collect();
     let plan = BucketPlan::new(&sizes, max_elems);
-    for b in &plan.buckets {
-        let total: usize = sizes[b.clone()].iter().sum();
+    let pack = |mats: &[Mat], b: &Range<usize>, total: usize| -> Mat {
         let mut flat = Vec::with_capacity(total);
         for m in &mats[b.clone()] {
             flat.extend_from_slice(m.data());
         }
-        let packed = Mat::from_vec(1, total.max(1), if total == 0 { vec![0.0] } else { flat });
-        let reduced = collectives::all_reduce_sum(comm, std::slice::from_ref(&packed));
-        if total == 0 {
-            continue;
-        }
-        let red = reduced[0].data();
+        Mat::from_vec(1, total.max(1), if total == 0 { vec![0.0] } else { flat })
+    };
+    let scatter = |mats: &mut [Mat], b: &Range<usize>, red: &[f32]| {
         let mut off = 0usize;
         for m in &mut mats[b.clone()] {
             let n = m.len();
             m.data_mut().copy_from_slice(&red[off..off + n]);
             off += n;
+        }
+    };
+    if comm.overlap() {
+        // Bounded pipeline: at most BUCKET_PIPELINE_DEPTH buckets are
+        // packed and in flight ahead of the drain cursor, so the engine
+        // reduces bucket k while this thread packs bucket k+1 — the
+        // same overlap as issuing everything up front, without holding
+        // a packed copy of the whole parameter set. Issue order (and
+        // therefore the wire order, contract 4) is the plain bucket
+        // order either way.
+        let mut in_flight = std::collections::VecDeque::new();
+        let issue = |mats: &[Mat], b: &Range<usize>| {
+            let total: usize = sizes[b.clone()].iter().sum();
+            let packed = pack(mats, b, total);
+            (b.clone(), total, comm.istart_all_reduce_sum(vec![packed]))
+        };
+        for m in 0..BUCKET_PIPELINE_DEPTH.min(plan.buckets.len()) {
+            in_flight.push_back(issue(mats, &plan.buckets[m]));
+        }
+        for m in 0..plan.buckets.len() {
+            if m + BUCKET_PIPELINE_DEPTH < plan.buckets.len() {
+                in_flight.push_back(issue(mats, &plan.buckets[m + BUCKET_PIPELINE_DEPTH]));
+            }
+            let (b, total, op) = in_flight.pop_front().expect("bucket op issued");
+            let reduced = op.wait();
+            if total == 0 {
+                continue;
+            }
+            scatter(mats, &b, reduced[0].data());
+        }
+    } else {
+        for b in &plan.buckets {
+            let total: usize = sizes[b.clone()].iter().sum();
+            let packed = pack(mats, b, total);
+            let reduced = collectives::all_reduce_sum(comm, std::slice::from_ref(&packed));
+            if total == 0 {
+                continue;
+            }
+            scatter(mats, &b, reduced[0].data());
         }
     }
 }
@@ -141,6 +191,43 @@ mod tests {
             for (bucketed, plain) in outs {
                 for (b, p) in bucketed.iter().zip(&plain) {
                     assert_eq!(b.data(), p.data(), "cap {cap}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlapped_bucketed_all_reduce_bitwise_matches_blocking() {
+        // Same plan, same per-bucket reduction — issuing buckets as
+        // pending ops must not change a bit, under either algorithm.
+        let mut rng = Pcg::new(0x0b0c);
+        let world = 4;
+        let shapes = [(3usize, 4usize), (1, 1), (0, 5), (8, 2), (2, 2)];
+        let inputs: Vec<Vec<Mat>> = (0..world)
+            .map(|_| shapes.iter().map(|&(r, c)| rng.normal_mat(r, c, 1.0)).collect())
+            .collect();
+        let inp = &inputs;
+        for algo in [crate::dist::Algo::Star, crate::dist::Algo::Ring] {
+            for cap in [1usize, 10, 1 << 20] {
+                let blocking = crate::dist::run_ranks_with(world, algo, false, |comm| {
+                    let mut mats = inp[comm.rank()].clone();
+                    all_reduce_sum_bucketed(&comm, &mut mats, cap);
+                    mats
+                });
+                let overlapped = crate::dist::run_ranks_with(world, algo, true, |comm| {
+                    let mut mats = inp[comm.rank()].clone();
+                    all_reduce_sum_bucketed(&comm, &mut mats, cap);
+                    mats
+                });
+                for (rank, (b, o)) in blocking.iter().zip(&overlapped).enumerate() {
+                    for (l, (mb, mo)) in b.iter().zip(o).enumerate() {
+                        assert_eq!(
+                            mb.data(),
+                            mo.data(),
+                            "{} cap {cap} rank {rank} layer {l}",
+                            algo.name()
+                        );
+                    }
                 }
             }
         }

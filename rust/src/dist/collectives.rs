@@ -35,6 +35,26 @@
 //!   all-reduce — balanced, no hotspot (`rust/src/dist/traffic.rs`
 //!   measures exactly this in `benches/dist_scaling.rs`).
 //!
+//! # The chunk-pipelined ring
+//!
+//! With overlap enabled ([`Communicator::overlap`], the default) the
+//! ring all-reduce runs **chunk-pipelined**
+//! ([`all_reduce_sum_pipelined`]): the flattened payload is split into
+//! pipeline stages by the same canonical plan
+//! ([`super::shard::row_shard_range`] at the stage level, then per rank
+//! within each stage), every stage's reduce-scatter rounds are issued as
+//! nonblocking ops ([`Communicator::istart_send_recv_bytes`]) a fixed
+//! depth ahead, and the issuing thread reduces and all-gathers stage `m`
+//! while the progress engine moves stage `m+1`'s bytes — the
+//! destination tree reduction and the encode/decode work hide behind
+//! the wire, and in steady state both directions of every link stay
+//! busy. The schedule (stage count, issue order, chunk ranges) is a pure
+//! function of `(len, world)` and identical on every rank, and each
+//! element is still reduced at its destination with the same rank-
+//! indexed halving tree, so the pipelined ring is **bitwise identical**
+//! to the blocking ring and the star on any input — asserted across
+//! transports, world sizes and stage counts in `rust/tests/dist.rs`.
+//!
 //! # Rank-count invariance
 //!
 //! A fixed-order reduction makes results reproducible *at a fixed world
@@ -50,8 +70,9 @@
 //! reduction order gives the same bits).
 
 use super::transport::{decode_mats, encode_mats};
-use super::Communicator;
+use super::{Communicator, PendingOp};
 use crate::tensor::Mat;
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 /// Collective algorithm selector: rank-0 fan-in star vs bandwidth-optimal
@@ -197,8 +218,10 @@ fn bytes_to_f32s(bytes: &[u8], expect: usize) -> Vec<f32> {
 
 /// All-reduce (sum) a list of matrices: every rank contributes its list,
 /// every rank receives the elementwise halving-tree sum. Shapes must
-/// agree across ranks. Dispatches on [`Communicator::algo`]; both
-/// algorithms produce identical bits.
+/// agree across ranks. Dispatches on [`Communicator::algo`] — and, under
+/// [`Algo::Ring`], on [`Communicator::overlap`]: the chunk-pipelined
+/// schedule ([`all_reduce_sum_pipelined`]) when overlap is enabled, the
+/// blocking ring otherwise. All paths produce identical bits.
 pub fn all_reduce_sum(comm: &dyn Communicator, mats: &[Mat]) -> Vec<Mat> {
     if comm.world_size() == 1 {
         return mats.to_vec();
@@ -208,8 +231,68 @@ pub fn all_reduce_sum(comm: &dyn Communicator, mats: &[Mat]) -> Vec<Mat> {
             let parts = comm.exchange_mats(mats.to_vec());
             tree_combine(&parts)
         }
-        Algo::Ring => ring_all_reduce(comm, mats),
+        Algo::Ring => {
+            if comm.overlap() {
+                all_reduce_sum_pipelined(comm, mats)
+            } else {
+                ring_all_reduce(comm, mats)
+            }
+        }
     }
+}
+
+/// Number of pipeline stages the auto-chunked pipelined ring uses for a
+/// `total_elems` payload: one stage per [`PIPELINE_CHUNK_ELEMS`] elements,
+/// clamped to `1..=`[`MAX_PIPELINE_STAGES`]. A pure function of the
+/// payload size (and trivially 1 at world 1), so the stage plan is SPMD-
+/// identical on every rank.
+pub fn pipeline_stages(total_elems: usize, world: usize) -> usize {
+    if world <= 1 {
+        return 1;
+    }
+    (total_elems / PIPELINE_CHUNK_ELEMS).clamp(1, MAX_PIPELINE_STAGES)
+}
+
+/// Elements per pipeline stage the auto plan targets (128 KiB of f32s —
+/// big enough that per-stage frame headers are noise, small enough that
+/// several stages fit in flight for the payloads the training driver
+/// reduces).
+pub const PIPELINE_CHUNK_ELEMS: usize = 1 << 15;
+
+/// Upper bound on auto-chunked pipeline stages (beyond a handful of
+/// stages in flight the overlap is already saturated; more stages only
+/// add header and scheduling overhead).
+pub const MAX_PIPELINE_STAGES: usize = 8;
+
+/// How many stages ahead the pipelined ring issues reduce-scatter
+/// rounds: enough that the engine always has wire work queued while this
+/// thread reduces, without buffering the whole payload twice.
+const PIPELINE_DEPTH: usize = 2;
+
+/// Chunk-pipelined ring all-reduce with the auto stage plan
+/// ([`pipeline_stages`]); see [`all_reduce_sum_pipelined_stages`].
+pub fn all_reduce_sum_pipelined(comm: &dyn Communicator, mats: &[Mat]) -> Vec<Mat> {
+    let total: usize = mats.iter().map(|m| m.len()).sum();
+    all_reduce_sum_pipelined_stages(comm, mats, pipeline_stages(total, comm.world_size()))
+}
+
+/// Chunk-pipelined ring all-reduce with an explicit stage count
+/// (clamped to at least 1): the overlapped schedule described in the
+/// module docs, bitwise identical to [`all_reduce_sum`] under either
+/// algorithm on any input and any stage count — the conformance suite
+/// in `rust/tests/dist.rs` sweeps `stages ∈ {1, 2, 3}` against the
+/// blocking ring and the star across transports.
+pub fn all_reduce_sum_pipelined_stages(
+    comm: &dyn Communicator,
+    mats: &[Mat],
+    stages: usize,
+) -> Vec<Mat> {
+    if comm.world_size() == 1 {
+        return mats.to_vec();
+    }
+    let flat = flatten(mats);
+    let reduced = ring_all_reduce_flat_pipelined(comm, &flat, stages);
+    unflatten(mats, &reduced)
 }
 
 /// Broadcast `root`'s matrices to every rank. Non-root contributions are
@@ -314,21 +397,111 @@ pub fn reduce_scatter_rows(comm: &dyn Communicator, m: &Mat) -> Mat {
 // ---------------------------------------------------------------------
 // Ring implementations (over the point-to-point seam).
 
-/// Ring all-reduce of a matrix list: flatten, pairwise-exchange
-/// reduce-scatter over the element space, halving-tree reduce each chunk
-/// at its destination, ring all-gather, unflatten.
-fn ring_all_reduce(comm: &dyn Communicator, mats: &[Mat]) -> Vec<Mat> {
+/// Concatenate a matrix list's elements into one flat buffer (the ring
+/// all-reduce element space).
+fn flatten(mats: &[Mat]) -> Vec<f32> {
     let mut flat: Vec<f32> = Vec::with_capacity(mats.iter().map(|m| m.len()).sum());
     for m in mats {
         flat.extend_from_slice(m.data());
     }
-    let reduced = ring_all_reduce_flat(comm, &flat);
+    flat
+}
+
+/// Rebuild a matrix list with `mats`' shapes from a flat element buffer.
+fn unflatten(mats: &[Mat], flat: &[f32]) -> Vec<Mat> {
     let mut out = Vec::with_capacity(mats.len());
     let mut off = 0usize;
     for m in mats {
         let n = m.len();
-        out.push(Mat::from_vec(m.rows(), m.cols(), reduced[off..off + n].to_vec()));
+        out.push(Mat::from_vec(m.rows(), m.cols(), flat[off..off + n].to_vec()));
         off += n;
+    }
+    out
+}
+
+/// Ring all-reduce of a matrix list: flatten, pairwise-exchange
+/// reduce-scatter over the element space, halving-tree reduce each chunk
+/// at its destination, ring all-gather, unflatten.
+fn ring_all_reduce(comm: &dyn Communicator, mats: &[Mat]) -> Vec<Mat> {
+    let flat = flatten(mats);
+    let reduced = ring_all_reduce_flat(comm, &flat);
+    unflatten(mats, &reduced)
+}
+
+/// The chunk-pipelined flat ring all-reduce behind
+/// [`all_reduce_sum_pipelined_stages`]. Stage `m` covers element range
+/// `row_shard_range(len, stages, m)`; within a stage, rank `c`'s chunk
+/// is `row_shard_range(stage_len, world, c)` offset into the stage — so
+/// for `stages = 1` the chunk plan is exactly the blocking ring's.
+/// Reduce-scatter rounds carry data straight from the *input* buffer, so
+/// they are issued [`PIPELINE_DEPTH`] stages ahead as nonblocking ops;
+/// each stage's destination tree reduction and dependent all-gather
+/// chain then run while the engine moves later stages' rounds. The issue
+/// order is a pure function of `(len, world, stages)` — identical on
+/// every rank — so the per-link wire order equals the blocking order and
+/// the result is bitwise identical (contract 4).
+fn ring_all_reduce_flat_pipelined(
+    comm: &dyn Communicator,
+    flat: &[f32],
+    stages: usize,
+) -> Vec<f32> {
+    let world = comm.world_size();
+    let rank = comm.rank();
+    let total = flat.len();
+    let stages = stages.max(1);
+    let right = (rank + 1) % world;
+    let left = (rank + world - 1) % world;
+    let stage_rg = |m: usize| super::shard::row_shard_range(total, stages, m);
+    let chunk = |m: usize, c: usize| {
+        let mr = stage_rg(m);
+        let r = super::shard::row_shard_range(mr.len(), world, c);
+        mr.start + r.start..mr.start + r.end
+    };
+    // Phase 1 of stage m: the pairwise-exchange rounds, payloads sliced
+    // from the input — independent of every other stage, so issueable
+    // ahead of time.
+    let issue_phase1 = |m: usize| -> Vec<PendingOp<Vec<u8>>> {
+        (1..world)
+            .map(|s| {
+                let to = (rank + s) % world;
+                let from = (rank + world - s) % world;
+                comm.istart_send_recv_bytes(to, f32s_to_bytes(&flat[chunk(m, to)]), from)
+            })
+            .collect()
+    };
+    let mut out = vec![0f32; total];
+    let mut in_flight: VecDeque<Vec<PendingOp<Vec<u8>>>> = VecDeque::new();
+    for m in 0..PIPELINE_DEPTH.min(stages) {
+        in_flight.push_back(issue_phase1(m));
+    }
+    for m in 0..stages {
+        if m + PIPELINE_DEPTH < stages {
+            in_flight.push_back(issue_phase1(m + PIPELINE_DEPTH));
+        }
+        let my = chunk(m, rank);
+        let mut contrib: Vec<Vec<f32>> = vec![Vec::new(); world];
+        contrib[rank] = flat[my.clone()].to_vec();
+        let ops = in_flight.pop_front().expect("pipelined ring: missing phase-1 ops");
+        for (s, op) in (1..world).zip(ops) {
+            let from = (rank + world - s) % world;
+            contrib[from] = bytes_to_f32s(&op.wait(), my.len());
+        }
+        // Destination reduction: the same rank-indexed halving tree as
+        // the blocking ring and the star — this compute overlaps the
+        // engine's transfers for stages m+1..m+PIPELINE_DEPTH.
+        let reduced = tree_combine_f32(contrib);
+        out[my.clone()].copy_from_slice(&reduced);
+        // Phase 2 of stage m: circulate the reduced chunks. Each hop's
+        // payload is the previous hop's receipt, so the chain is issued
+        // hop by hop; later stages' phase-1 rounds are already queued
+        // behind it, keeping the links busy between hops.
+        let mut cursor = reduced;
+        for s in 0..world - 1 {
+            let recv_idx = (rank + world - s - 1) % world;
+            let got = comm.istart_send_recv_bytes(right, f32s_to_bytes(&cursor), left).wait();
+            cursor = bytes_to_f32s(&got, chunk(m, recv_idx).len());
+            out[chunk(m, recv_idx)].copy_from_slice(&cursor);
+        }
     }
     out
 }
@@ -623,6 +796,74 @@ mod tests {
         for out in &outs {
             assert_eq!(out[0].data(), want.as_slice());
         }
+    }
+
+    #[test]
+    fn pipelined_ring_matches_blocking_ring_bitwise() {
+        // Stage counts from degenerate (1 = the blocking chunk plan) to
+        // more stages than elements; payloads from empty to multi-stage.
+        let mut rng = Pcg::new(0x9157);
+        for world in [2usize, 3, 4] {
+            for total in [0usize, 1, 3, 17, 12 * world] {
+                let inputs: Vec<Mat> =
+                    (0..world).map(|_| rng.normal_mat(1, total.max(1), 1.0)).collect();
+                let inputs: Vec<Mat> = if total == 0 {
+                    (0..world).map(|_| Mat::zeros(0, 4)).collect()
+                } else {
+                    inputs
+                };
+                let inp = &inputs;
+                let blocking = crate::dist::run_ranks_with(world, Algo::Ring, false, |c| {
+                    all_reduce_sum(&c, std::slice::from_ref(&inp[c.rank()]))
+                });
+                for stages in [1usize, 2, 3, 7] {
+                    let pipelined = crate::dist::run_ranks_with(world, Algo::Ring, true, |c| {
+                        all_reduce_sum_pipelined_stages(
+                            &c,
+                            std::slice::from_ref(&inp[c.rank()]),
+                            stages,
+                        )
+                    });
+                    for (b, p) in blocking.iter().zip(&pipelined) {
+                        assert_eq!(
+                            b[0].data(),
+                            p[0].data(),
+                            "world {world} total {total} stages {stages}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_dispatch_of_ring_all_reduce_is_bitwise_neutral() {
+        // all_reduce_sum with overlap on (auto-pipelined) vs off
+        // (blocking ring) vs star: identical bits.
+        let mut rng = Pcg::new(0x0b5e);
+        let world = 4;
+        let inputs: Vec<Mat> = (0..world).map(|_| rng.normal_mat(9, 5, 1.0)).collect();
+        let inp = &inputs;
+        let star = crate::dist::run_ranks_with(world, Algo::Star, false, |c| {
+            all_reduce_sum(&c, std::slice::from_ref(&inp[c.rank()]))
+        });
+        for overlap in [false, true] {
+            let ring = crate::dist::run_ranks_with(world, Algo::Ring, overlap, |c| {
+                all_reduce_sum(&c, std::slice::from_ref(&inp[c.rank()]))
+            });
+            for (s, r) in star.iter().zip(&ring) {
+                assert_eq!(s[0].data(), r[0].data(), "overlap {overlap}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_stage_plan_is_clamped_and_deterministic() {
+        assert_eq!(pipeline_stages(0, 4), 1);
+        assert_eq!(pipeline_stages(100, 4), 1);
+        assert_eq!(pipeline_stages(PIPELINE_CHUNK_ELEMS * 3, 4), 3);
+        assert_eq!(pipeline_stages(PIPELINE_CHUNK_ELEMS * 100, 4), MAX_PIPELINE_STAGES);
+        assert_eq!(pipeline_stages(1 << 30, 1), 1, "world 1 needs no stages");
     }
 
     #[test]

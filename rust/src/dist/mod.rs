@@ -31,6 +31,18 @@
 //! Ring is the default ([`default_algo`]); `SINGD_ALGO`, `[dist] algo`
 //! and `--algo` select explicitly.
 //!
+//! Every collective also exists in **nonblocking** form: the
+//! `istart_*` methods on [`Communicator`] return a [`PendingOp`] handle
+//! serviced by a per-communicator FIFO progress engine
+//! ([`pending`]), so callers overlap compute with communication and
+//! block only at [`PendingOp::wait`]. With overlap enabled
+//! ([`default_overlap`]; `SINGD_OVERLAP`, `[dist] overlap`,
+//! `--overlap`, on by default) the ring all-reduce additionally runs
+//! **chunk-pipelined** ([`collectives::all_reduce_sum_pipelined`]) and
+//! the training driver issues its statistics gather and update
+//! all-reduce as pending ops. None of this can change a single bit —
+//! see contract 4 below.
+//!
 //! Layer-wise decomposition is the natural parallel axis for
 //! Kronecker-factored methods (Koroko et al., 2023), and the
 //! inverse-free SINGD update is nothing but matrix
@@ -62,32 +74,47 @@
 //! 3. A poisoned rendezvous (a rank panicking) wakes every peer —
 //!    including peers blocked in point-to-point receives — so the
 //!    failure propagates instead of deadlocking the process.
+//! 4. **Overlap invariance.** Nonblocking and pipelined schedules are
+//!    bitwise identical to their blocking counterparts, because the
+//!    progress engine executes operations strictly in issue order (an
+//!    SPMD-identical sequence), so the per-link wire order and every
+//!    destination reduction tree are exactly those of the blocking
+//!    schedule — overlap reorders *time*, never *reduction order*. The
+//!    `SINGD_OVERLAP ∈ {0,1}` digest suites in `rust/tests/dist.rs` and
+//!    `rust/tests/dist_proc.rs` enforce this end to end.
 //!
 //! Scalar exchanges ([`Communicator::exchange_f64`]: loss partials,
 //! divergence flags) always ride the barrier-exchange star regardless of
 //! [`Algo`] — they are a few bytes per step and double as the SPMD
 //! heartbeat.
 //!
-//! # The `SINGD_RANKS` / `SINGD_TRANSPORT` / `SINGD_ALGO` contract
+//! # The `SINGD_RANKS` / `SINGD_TRANSPORT` / `SINGD_ALGO` / `SINGD_OVERLAP` contract
 //!
 //! `SINGD_RANKS=<n>` sets the *default* world size,
-//! `SINGD_TRANSPORT=<local|socket>` the *default* transport and
-//! `SINGD_ALGO=<star|ring>` the *default* collective algorithm used by
+//! `SINGD_TRANSPORT=<local|socket>` the *default* transport,
+//! `SINGD_ALGO=<star|ring>` the *default* collective algorithm and
+//! `SINGD_OVERLAP=<0|1>` the *default* overlap mode used by
 //! config-driven entry points ([`crate::config::JobConfig`]); explicit
-//! `[dist]` config keys and `--ranks` / `--transport` / `--algo` CLI
-//! flags override them. Read once, cached.
+//! `[dist]` config keys and `--ranks` / `--transport` / `--algo` /
+//! `--overlap` CLI flags override them. Read once, cached. Like the
+//! algorithm, the overlap mode is a run-level constant: every rank of a
+//! world must be constructed with the same value (the socket launcher
+//! pins it into workers' environments).
 #![deny(missing_docs)]
 
 pub mod bucket;
 pub mod collectives;
+pub mod pending;
 pub mod shard;
 pub mod traffic;
 pub mod transport;
 
 pub use collectives::Algo;
+pub use pending::PendingOp;
 pub use transport::{SocketComm, Transport};
 
 use crate::tensor::{pool, Mat};
+use pending::Engine;
 use std::any::Any;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -215,11 +242,38 @@ pub fn default_algo() -> Algo {
     })
 }
 
+/// Parse an overlap-mode string: `"1"` / `"true"` / `"on"` / `"yes"` ⇒
+/// overlap, `"0"` / `"false"` / `"off"` / `"no"` ⇒ blocking. The single
+/// parser behind `SINGD_OVERLAP`, `[dist] overlap` string forms and the
+/// `--overlap` CLI flag.
+pub fn parse_overlap(s: &str) -> Option<bool> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "1" | "true" | "on" | "yes" => Some(true),
+        "0" | "false" | "off" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+/// Default overlap mode: `SINGD_OVERLAP` (read once, cached), else `true`
+/// — nonblocking handles, the chunk-pipelined ring and the training
+/// driver's comm/compute overlap are on by default (bitwise identical to
+/// blocking by contract 4; the knob exists for the determinism suites
+/// and for perf A/B runs). Explicit `[dist] overlap` config keys and
+/// `--overlap` CLI flags override it.
+pub fn default_overlap() -> bool {
+    static CACHED: OnceLock<bool> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::env::var("SINGD_OVERLAP").ok().and_then(|v| parse_overlap(&v)).unwrap_or(true)
+    })
+}
+
 /// Rank/topology plus the communication primitives every collective is
 /// built on: a barrier exchange (each rank contributes one payload per
-/// call and receives all ranks' payloads in rank order) and point-to-point
+/// call and receives all ranks' payloads in rank order), point-to-point
 /// byte transfers (the seam the ring schedules — and any future
-/// NCCL-style backend — plug into).
+/// NCCL-style backend — plug into), and nonblocking `istart_*` variants
+/// returning [`PendingOp`] handles serviced by the communicator's
+/// progress engine ([`pending`]).
 ///
 /// # SPMD call-order obligations
 ///
@@ -237,7 +291,13 @@ pub fn default_algo() -> Algo {
 ///   from this rank on `p`, in the same per-link order (both transports
 ///   stamp and check a per-direction sequence number, so violations fail
 ///   loudly instead of delivering garbage);
-/// - a rank must never `send`/`recv` with itself.
+/// - a rank must never `send`/`recv` with itself;
+/// - an `istart_*` call *issues* its operation at the call site: the
+///   issue point — not the `wait` — is the operation's position in the
+///   global SPMD sequence. Issuing is therefore obligatory on every
+///   rank in the same order, while `wait`/`poll`/drop are local actions
+///   with no cross-rank meaning. A dropped [`PendingOp`] still executes
+///   (peers depend on it); see [`pending`] for the exact semantics.
 ///
 /// Violations panic (poisoning the world) rather than misdeliver.
 pub trait Communicator {
@@ -251,6 +311,13 @@ pub trait Communicator {
     /// this communicator (a run-level constant: every rank of a world
     /// must be constructed with the same value).
     fn algo(&self) -> Algo;
+
+    /// Whether overlapped schedules are enabled on this communicator (a
+    /// run-level constant, like [`algo`](Communicator::algo)): the
+    /// chunk-pipelined ring all-reduce and the training driver's
+    /// comm/compute overlap dispatch on it. Bitwise-neutral by contract
+    /// 4 — the knob trades progress-engine overhead for overlap.
+    fn overlap(&self) -> bool;
 
     /// Exchange a list of matrices; returns every rank's payload in rank
     /// order. A *barrier*: no rank returns before every rank has
@@ -291,6 +358,48 @@ pub trait Communicator {
         self.send_bytes(to, payload);
         self.recv_bytes(from)
     }
+
+    /// Nonblocking [`exchange_mats`](Communicator::exchange_mats): the
+    /// exchange is issued here (taking its place in the SPMD order) and
+    /// serviced by the progress engine; the result arrives at
+    /// [`PendingOp::wait`]. The default is the degenerate
+    /// already-completed form — correct, but with no overlap; engine-
+    /// backed transports override it.
+    fn istart_exchange_mats(&self, mats: Vec<Mat>) -> PendingOp<Vec<Arc<Vec<Mat>>>> {
+        PendingOp::ready(self.exchange_mats(mats))
+    }
+
+    /// Nonblocking [`exchange_f64`](Communicator::exchange_f64); same
+    /// issue-order semantics as
+    /// [`istart_exchange_mats`](Communicator::istart_exchange_mats).
+    fn istart_exchange_f64(&self, vals: Vec<f64>) -> PendingOp<Vec<Arc<Vec<f64>>>> {
+        PendingOp::ready(self.exchange_f64(vals))
+    }
+
+    /// Nonblocking [`send_recv_bytes`](Communicator::send_recv_bytes)
+    /// (owned payload, since the transfer may outlive the call site) —
+    /// the micro-op the chunk-pipelined ring schedules with. Same
+    /// issue-order semantics as the other `istart_*` methods.
+    fn istart_send_recv_bytes(
+        &self,
+        to: usize,
+        payload: Vec<u8>,
+        from: usize,
+    ) -> PendingOp<Vec<u8>> {
+        PendingOp::ready(self.send_recv_bytes(to, &payload, from))
+    }
+
+    /// Nonblocking [`collectives::all_gather`]: issued here, serviced by
+    /// the progress engine (no default — each transport submits the
+    /// whole gather as one engine op over its shareable core, so the
+    /// issuing thread overlaps compute with the transfer).
+    fn istart_all_gather(&self, mats: Vec<Mat>) -> PendingOp<Vec<Arc<Vec<Mat>>>>;
+
+    /// Nonblocking [`collectives::all_reduce_sum`]; same contract as
+    /// [`istart_all_gather`](Communicator::istart_all_gather). The
+    /// bucketed update exchange of the training driver issues one of
+    /// these per bucket and packs the next bucket while it flies.
+    fn istart_all_reduce_sum(&self, mats: Vec<Mat>) -> PendingOp<Vec<Mat>>;
 
     /// Zero-copy barrier gather, or `Err(mats)` (the default) when this
     /// transport moves real bytes. [`collectives::all_gather`] consults
@@ -445,13 +554,15 @@ impl Rendezvous {
     }
 }
 
-/// One rank's handle onto an in-process shared-memory world. Created by
-/// [`run_ranks`] / [`run_ranks_algo`]; cheap to move into the rank
-/// closure.
-pub struct LocalComm {
+/// The shareable state behind a [`LocalComm`]: everything an in-flight
+/// engine op needs, behind one `Arc` so the op's closure can own it.
+/// Implements the inline (immediate-execution) [`Communicator`] — the
+/// engine jobs of [`LocalComm`] run collectives over this type directly.
+struct LocalCore {
     rank: usize,
     world: usize,
     algo: Algo,
+    overlap: bool,
     rv: Arc<Rendezvous>,
     /// Per-direction p2p frame counters (`[to]` on send, `[from]` on
     /// receive), mirroring the socket transport's link seq checking.
@@ -459,7 +570,7 @@ pub struct LocalComm {
     p2p_rcvd: Mutex<Vec<u64>>,
 }
 
-impl LocalComm {
+impl LocalCore {
     fn exchange_any(&self, p: Arc<dyn Any + Send + Sync>) -> Vec<Arc<dyn Any + Send + Sync>> {
         self.rv.exchange(self.rank, p)
     }
@@ -482,7 +593,7 @@ impl LocalComm {
     }
 }
 
-impl Communicator for LocalComm {
+impl Communicator for LocalCore {
     fn rank(&self) -> usize {
         self.rank
     }
@@ -493,6 +604,10 @@ impl Communicator for LocalComm {
 
     fn algo(&self) -> Algo {
         self.algo
+    }
+
+    fn overlap(&self) -> bool {
+        self.overlap
     }
 
     fn exchange_mats(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
@@ -540,6 +655,16 @@ impl Communicator for LocalComm {
         self.rv.recv(self.rank, from, want)
     }
 
+    fn istart_all_gather(&self, mats: Vec<Mat>) -> PendingOp<Vec<Arc<Vec<Mat>>>> {
+        // Inline core: already executing on the engine (or in a blocking
+        // context) — run to completion immediately.
+        PendingOp::ready(collectives::all_gather(self, mats))
+    }
+
+    fn istart_all_reduce_sum(&self, mats: Vec<Mat>) -> PendingOp<Vec<Mat>> {
+        PendingOp::ready(collectives::all_reduce_sum(self, &mats))
+    }
+
     fn gather_zero_copy(&self, mats: Vec<Mat>) -> Result<Vec<Arc<Vec<Mat>>>, Vec<Mat>> {
         // Share pointers through the rendezvous, but account the bytes
         // the *ring* schedule would put on a wire (this rank forwards
@@ -563,19 +688,166 @@ impl Communicator for LocalComm {
     }
 }
 
+/// One rank's handle onto an in-process shared-memory world. Created by
+/// [`run_ranks`] / [`run_ranks_algo`] / [`run_ranks_with`]; cheap to
+/// move into the rank closure.
+///
+/// Nonblocking `istart_*` calls lazily spawn this communicator's
+/// progress engine ([`pending`]); once it is active, blocking calls are
+/// reimplemented as `istart + wait` through the same FIFO queue, so a
+/// blocking collective issued between two pending ops takes its place in
+/// the issue order instead of racing the engine for the rendezvous.
+pub struct LocalComm {
+    core: Arc<LocalCore>,
+    engine: OnceLock<Engine>,
+}
+
+impl LocalComm {
+    fn engine(&self) -> &Engine {
+        self.engine
+            .get_or_init(|| Engine::new(&format!("singd-dist-eng-r{}", self.core.rank)))
+    }
+}
+
+impl Communicator for LocalComm {
+    fn rank(&self) -> usize {
+        self.core.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.core.world
+    }
+
+    fn algo(&self) -> Algo {
+        self.core.algo
+    }
+
+    fn overlap(&self) -> bool {
+        self.core.overlap
+    }
+
+    fn exchange_mats(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
+        if let Some(eng) = self.engine.get() {
+            let core = Arc::clone(&self.core);
+            return eng.submit(self.core.rank, move || core.exchange_mats(mats)).wait();
+        }
+        self.core.exchange_mats(mats)
+    }
+
+    fn exchange_f64(&self, vals: Vec<f64>) -> Vec<Arc<Vec<f64>>> {
+        if let Some(eng) = self.engine.get() {
+            let core = Arc::clone(&self.core);
+            return eng.submit(self.core.rank, move || core.exchange_f64(vals)).wait();
+        }
+        self.core.exchange_f64(vals)
+    }
+
+    fn send_bytes(&self, to: usize, payload: &[u8]) {
+        if let Some(eng) = self.engine.get() {
+            let core = Arc::clone(&self.core);
+            let payload = payload.to_vec();
+            eng.submit(self.core.rank, move || core.send_bytes(to, &payload)).wait();
+            return;
+        }
+        self.core.send_bytes(to, payload)
+    }
+
+    fn recv_bytes(&self, from: usize) -> Vec<u8> {
+        if let Some(eng) = self.engine.get() {
+            let core = Arc::clone(&self.core);
+            return eng.submit(self.core.rank, move || core.recv_bytes(from)).wait();
+        }
+        self.core.recv_bytes(from)
+    }
+
+    fn send_recv_bytes(&self, to: usize, payload: &[u8], from: usize) -> Vec<u8> {
+        if let Some(eng) = self.engine.get() {
+            let core = Arc::clone(&self.core);
+            let payload = payload.to_vec();
+            return eng
+                .submit(self.core.rank, move || core.send_recv_bytes(to, &payload, from))
+                .wait();
+        }
+        self.core.send_recv_bytes(to, payload, from)
+    }
+
+    fn istart_exchange_mats(&self, mats: Vec<Mat>) -> PendingOp<Vec<Arc<Vec<Mat>>>> {
+        if self.core.world == 1 {
+            return PendingOp::ready(self.core.exchange_mats(mats));
+        }
+        let core = Arc::clone(&self.core);
+        self.engine().submit(self.core.rank, move || core.exchange_mats(mats))
+    }
+
+    fn istart_exchange_f64(&self, vals: Vec<f64>) -> PendingOp<Vec<Arc<Vec<f64>>>> {
+        if self.core.world == 1 {
+            return PendingOp::ready(self.core.exchange_f64(vals));
+        }
+        let core = Arc::clone(&self.core);
+        self.engine().submit(self.core.rank, move || core.exchange_f64(vals))
+    }
+
+    fn istart_send_recv_bytes(
+        &self,
+        to: usize,
+        payload: Vec<u8>,
+        from: usize,
+    ) -> PendingOp<Vec<u8>> {
+        let core = Arc::clone(&self.core);
+        self.engine().submit(self.core.rank, move || core.send_recv_bytes(to, &payload, from))
+    }
+
+    fn istart_all_gather(&self, mats: Vec<Mat>) -> PendingOp<Vec<Arc<Vec<Mat>>>> {
+        if self.core.world == 1 {
+            return PendingOp::ready(vec![Arc::new(mats)]);
+        }
+        let core = Arc::clone(&self.core);
+        self.engine().submit(self.core.rank, move || collectives::all_gather(&*core, mats))
+    }
+
+    fn istart_all_reduce_sum(&self, mats: Vec<Mat>) -> PendingOp<Vec<Mat>> {
+        if self.core.world == 1 {
+            return PendingOp::ready(mats);
+        }
+        let core = Arc::clone(&self.core);
+        self.engine().submit(self.core.rank, move || collectives::all_reduce_sum(&*core, &mats))
+    }
+
+    fn gather_zero_copy(&self, mats: Vec<Mat>) -> Result<Vec<Arc<Vec<Mat>>>, Vec<Mat>> {
+        if let Some(eng) = self.engine.get() {
+            let core = Arc::clone(&self.core);
+            return eng.submit(self.core.rank, move || core.gather_zero_copy(mats)).wait();
+        }
+        self.core.gather_zero_copy(mats)
+    }
+}
+
 /// Run `world` SPMD rank bodies to completion under the default
-/// collective algorithm ([`default_algo`]) and collect their results in
-/// rank order. See [`run_ranks_algo`].
+/// collective algorithm ([`default_algo`]) and overlap mode
+/// ([`default_overlap`]) and collect their results in rank order. See
+/// [`run_ranks_with`].
 pub fn run_ranks<T, F>(world: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(LocalComm) -> T + Sync,
 {
-    run_ranks_algo(world, default_algo(), f)
+    run_ranks_with(world, default_algo(), default_overlap(), f)
+}
+
+/// [`run_ranks`] with an explicit collective algorithm (overlap mode
+/// stays the [`default_overlap`] env default, so the ci.sh matrix drives
+/// existing suites through both modes).
+pub fn run_ranks_algo<T, F>(world: usize, algo: Algo, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(LocalComm) -> T + Sync,
+{
+    run_ranks_with(world, algo, default_overlap(), f)
 }
 
 /// Run `world` SPMD rank bodies to completion and collect their results
-/// in rank order, with collectives dispatched to `algo`.
+/// in rank order, with collectives dispatched to `algo` and overlapped
+/// schedules enabled iff `overlap`.
 ///
 /// Ranks run on the persistent worker pool when it is safe to do so
 /// (caller is not itself a pool worker, parallelism is enabled, and the
@@ -586,34 +858,50 @@ where
 /// by rank index, never by scheduling.
 ///
 /// A panicking rank poisons the rendezvous (waking every peer, including
-/// peers blocked in point-to-point receives) and the panic propagates to
-/// the caller; the pool stays usable.
-pub fn run_ranks_algo<T, F>(world: usize, algo: Algo, f: F) -> Vec<T>
+/// peers blocked in point-to-point receives and peers waiting on pending
+/// nonblocking ops) and the panic propagates to the caller; the pool
+/// stays usable.
+pub fn run_ranks_with<T, F>(world: usize, algo: Algo, overlap: bool, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(LocalComm) -> T + Sync,
 {
     assert!(world >= 1, "run_ranks: world size must be >= 1");
     let rv = Arc::new(Rendezvous::new(world));
-    let mk_comm = |rank: usize, rv: Arc<Rendezvous>| LocalComm {
-        rank,
-        world,
-        algo,
-        rv,
-        p2p_sent: Mutex::new(vec![0; world]),
-        p2p_rcvd: Mutex::new(vec![0; world]),
+    let mk_comm = |rank: usize| LocalComm {
+        core: Arc::new(LocalCore {
+            rank,
+            world,
+            algo,
+            overlap,
+            rv: Arc::clone(&rv),
+            p2p_sent: Mutex::new(vec![0; world]),
+            p2p_rcvd: Mutex::new(vec![0; world]),
+        }),
+        engine: OnceLock::new(),
     };
     if world == 1 {
-        return vec![f(mk_comm(0, rv))];
+        return vec![f(mk_comm(0))];
     }
+    run_rank_bodies(world, &rv, |r| f(mk_comm(r)))
+}
+
+/// The SPMD scheduling shared by [`run_ranks_with`] and
+/// [`LocalWorld::run`]: execute `f(rank)` for every rank concurrently
+/// (pool workers when safe, scoped threads otherwise — see
+/// [`run_ranks_with`]) and collect results in rank order. A panicking
+/// body poisons `rv` (waking every blocked peer) and re-raises.
+fn run_rank_bodies<T, F>(world: usize, rv: &Rendezvous, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
     let results: Vec<Mutex<Option<T>>> = (0..world).map(|_| Mutex::new(None)).collect();
     let fr = &f;
     let rs = &results;
     let make_body = |r: usize| {
-        let comm = mk_comm(r, Arc::clone(&rv));
-        let rv = Arc::clone(&rv);
         move || {
-            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fr(comm)));
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| fr(r)));
             match out {
                 Ok(v) => *rs[r].lock().unwrap_or_else(|e| e.into_inner()) = Some(v),
                 Err(e) => {
@@ -644,6 +932,66 @@ where
                 .expect("run_ranks: rank produced no result")
         })
         .collect()
+}
+
+/// A reusable in-process SPMD world: the rendezvous, the communicators
+/// and their (lazily spawned) progress engines persist across
+/// [`LocalWorld::run`] rounds. A driver that runs one collective round
+/// per training step — [`crate::train::train_dist`]'s local path — pays
+/// the per-rank engine thread spawn once per run instead of once per
+/// step, and its per-link p2p sequence counters continue across steps,
+/// exactly like a long-lived [`SocketComm`] world's. Results are
+/// bitwise identical to per-round [`run_ranks_with`] worlds either way
+/// (collectives order reductions by rank index, never by lifecycle).
+pub struct LocalWorld {
+    rv: Arc<Rendezvous>,
+    comms: Vec<LocalComm>,
+}
+
+impl LocalWorld {
+    /// Build a `world`-rank shared-memory world with the given
+    /// collective algorithm and overlap mode (run-level constants, as
+    /// everywhere).
+    pub fn new(world: usize, algo: Algo, overlap: bool) -> LocalWorld {
+        assert!(world >= 1, "LocalWorld: world size must be >= 1");
+        let rv = Arc::new(Rendezvous::new(world));
+        let comms = (0..world)
+            .map(|rank| LocalComm {
+                core: Arc::new(LocalCore {
+                    rank,
+                    world,
+                    algo,
+                    overlap,
+                    rv: Arc::clone(&rv),
+                    p2p_sent: Mutex::new(vec![0; world]),
+                    p2p_rcvd: Mutex::new(vec![0; world]),
+                }),
+                engine: OnceLock::new(),
+            })
+            .collect();
+        LocalWorld { rv, comms }
+    }
+
+    /// World size of this persistent world.
+    pub fn world_size(&self) -> usize {
+        self.comms.len()
+    }
+
+    /// Run one SPMD round over the persistent communicators and collect
+    /// the per-rank results in rank order. Scheduling and failure
+    /// semantics match [`run_ranks_with`]: a panicking rank poisons the
+    /// rendezvous — waking every blocked peer — and the panic
+    /// propagates; the world is not reusable after a poisoned round.
+    pub fn run<T, F>(&self, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(&LocalComm) -> T + Sync,
+    {
+        if self.comms.len() == 1 {
+            return vec![f(&self.comms[0])];
+        }
+        run_rank_bodies(self.comms.len(), &self.rv, |r| f(&self.comms[r]))
+    }
 }
 
 #[cfg(test)]
@@ -760,6 +1108,86 @@ mod tests {
     }
 
     #[test]
+    fn istart_exchange_overlaps_and_delivers_rank_order() {
+        // Issue, compute, then wait: results identical to the blocking
+        // exchange, and the issue point (not the wait) is the SPMD slot.
+        let world = 4;
+        let out = run_ranks(world, |c| {
+            let op = c.istart_exchange_f64(vec![c.rank() as f64 * 2.0]);
+            // Overlapped "compute" while the engine services the op.
+            let busy: f64 = (0..100).map(|i| i as f64).sum();
+            std::hint::black_box(busy);
+            let parts = op.wait();
+            parts.iter().map(|p| p[0]).collect::<Vec<_>>()
+        });
+        for got in out {
+            assert_eq!(got, vec![0.0, 2.0, 4.0, 6.0]);
+        }
+    }
+
+    #[test]
+    fn blocking_calls_queue_behind_pending_ops_in_issue_order() {
+        // A blocking exchange issued after an unwaited istart must land
+        // after it on every rank (FIFO through the engine) — the
+        // issue-order guarantee contract 4 rests on.
+        let world = 3;
+        let out = run_ranks(world, |c| {
+            let op = c.istart_exchange_f64(vec![1.0 + c.rank() as f64]);
+            let second = c.exchange_f64(vec![10.0 + c.rank() as f64]);
+            let first = op.wait();
+            let sum1: f64 = first.iter().map(|p| p[0]).sum();
+            let sum2: f64 = second.iter().map(|p| p[0]).sum();
+            (sum1, sum2)
+        });
+        for (s1, s2) in out {
+            assert_eq!(s1, 6.0);
+            assert_eq!(s2, 33.0);
+        }
+    }
+
+    #[test]
+    fn istart_send_recv_ring_step_matches_blocking() {
+        let world = 4;
+        let out = run_ranks(world, |c| {
+            let right = (c.rank() + 1) % world;
+            let left = (c.rank() + world - 1) % world;
+            let op = c.istart_send_recv_bytes(right, vec![c.rank() as u8; 4], left);
+            op.wait()
+        });
+        for (r, got) in out.iter().enumerate() {
+            let left = (r + world - 1) % world;
+            assert_eq!(got, &vec![left as u8; 4]);
+        }
+    }
+
+    #[test]
+    fn local_world_reuses_comms_across_rounds() {
+        // The persistent world the local training driver runs on: the
+        // same communicators (and engines) serve many rounds, and the
+        // per-link p2p counters continue across rounds like a long-lived
+        // socket world's.
+        let w = LocalWorld::new(3, Algo::Ring, true);
+        assert_eq!(w.world_size(), 3);
+        for round in 0..5u32 {
+            let outs = w.run(|c| {
+                let op = c.istart_exchange_f64(vec![c.rank() as f64 + round as f64]);
+                op.wait().iter().map(|p| p[0]).sum::<f64>()
+            });
+            assert_eq!(outs, vec![3.0 + 3.0 * round as f64; 3], "round {round}");
+        }
+        for _ in 0..2 {
+            let outs = w.run(|c| {
+                let right = (c.rank() + 1) % 3;
+                let left = (c.rank() + 2) % 3;
+                c.send_recv_bytes(right, &[c.rank() as u8], left)
+            });
+            for (r, got) in outs.iter().enumerate() {
+                assert_eq!(got, &vec![((r + 2) % 3) as u8]);
+            }
+        }
+    }
+
+    #[test]
     fn strategy_parse_roundtrip() {
         for s in [DistStrategy::Replicated, DistStrategy::FactorSharded] {
             assert_eq!(DistStrategy::parse(s.name()), Some(s));
@@ -784,5 +1212,21 @@ mod tests {
             .and_then(|v| Algo::parse(&v))
             .unwrap_or(Algo::Ring);
         assert_eq!(default_algo(), want);
+    }
+
+    #[test]
+    fn overlap_parse_and_env_default() {
+        for on in ["1", "true", "on", "yes", " ON "] {
+            assert_eq!(parse_overlap(on), Some(true), "{on}");
+        }
+        for off in ["0", "false", "off", "no"] {
+            assert_eq!(parse_overlap(off), Some(false), "{off}");
+        }
+        assert_eq!(parse_overlap("sideways"), None);
+        let want = std::env::var("SINGD_OVERLAP")
+            .ok()
+            .and_then(|v| parse_overlap(&v))
+            .unwrap_or(true);
+        assert_eq!(default_overlap(), want);
     }
 }

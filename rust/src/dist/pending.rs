@@ -1,0 +1,314 @@
+//! Nonblocking collective handles: [`PendingOp`] results serviced by a
+//! per-communicator FIFO progress engine.
+//!
+//! # The model
+//!
+//! Every `istart_*` method on [`crate::dist::Communicator`] captures its
+//! inputs, enqueues the operation on the communicator's progress engine,
+//! and returns a [`PendingOp`] immediately; the caller overlaps its own
+//! compute with the transfer and blocks only at [`PendingOp::wait`] — the
+//! true data dependency. The engine is one dedicated thread per
+//! communicator (spawned lazily on the first `istart`, via
+//! [`crate::tensor::pool::spawn_blocking`]; the shared worker pool is
+//! unsuitable because collective progress blocks on peers, and a blocked
+//! progress job queued behind a busy worker would deadlock the world).
+//!
+//! # Why overlap cannot change results
+//!
+//! The engine executes operations **in issue order**, one at a time. The
+//! issue sequence is part of the SPMD program, so it is identical on
+//! every rank; therefore the per-link wire order under overlap is exactly
+//! the wire order of the blocking schedule, and the destination reduction
+//! trees are untouched. Overlap reorders *time*, never *reduction order*
+//! — the fourth determinism contract (`ARCHITECTURE.md §Contract 4`),
+//! enforced by the `SINGD_OVERLAP ∈ {0,1}` digest suites in
+//! `rust/tests/dist.rs` and `rust/tests/dist_proc.rs`. For the same
+//! reason, once a communicator's engine is active its *blocking*
+//! collectives are reimplemented as `istart + wait` (routed through the
+//! same queue): a blocking call issued between two pending ops must take
+//! its place in the issue order, not race the engine for the transport.
+//!
+//! # Failure semantics
+//!
+//! A panic inside an operation (peer death, severed socket, poisoned
+//! rendezvous, SPMD violation) is caught on the engine thread, recorded,
+//! and re-raised from [`PendingOp::wait`] on the issuing thread; the
+//! engine is then poisoned, so later `istart`s fail fast instead of
+//! queueing doomed work. Dropping a [`PendingOp`] without waiting
+//! *detaches* it: the operation still executes (its peers depend on it —
+//! skipping it would be an SPMD call-order violation), its result is
+//! discarded, and a failure surfaces through the engine poison instead of
+//! a panic. Dropping the communicator drains every queued operation
+//! before the transport shuts down.
+//!
+//! # Traffic attribution
+//!
+//! Bytes sent while an operation executes accumulate on a per-op counter
+//! ([`PendingOp::bytes_sent`]) and are merged into the global per-rank
+//! counters of [`crate::dist::traffic`] when the operation completes, so
+//! concurrently in-flight ops attribute bytes-on-wire atomically — a
+//! snapshot never observes a half-accounted collective.
+
+use crate::dist::traffic;
+use crate::tensor::pool;
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A queued unit of engine work (type-erased; the closure owns its
+/// inputs and its result slot).
+///
+/// Re-entrancy is avoided *structurally*, not by thread checks: engine
+/// jobs run collectives over a communicator's inline core (whose
+/// `istart_*` methods execute immediately and return
+/// [`PendingOp::ready`]), never over the engine-backed wrapper — so a
+/// job can never enqueue on the engine that is executing it.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion slot of one pending operation.
+enum Slot<T> {
+    /// Still queued or executing.
+    Pending,
+    /// Finished; result ready for [`PendingOp::wait`].
+    Done(T),
+    /// The operation panicked; the payload re-raises at `wait`.
+    Panicked(Box<dyn Any + Send>),
+    /// Result already consumed by `wait`.
+    Taken,
+}
+
+struct Shared<T> {
+    slot: Mutex<Slot<T>>,
+    cv: Condvar,
+    /// Payload-frame bytes this op put on the wire (final once complete).
+    bytes: AtomicU64,
+}
+
+/// Handle to a nonblocking collective in flight: poll with
+/// [`PendingOp::poll`], block with [`PendingOp::wait`] (which re-raises
+/// any failure of the operation), or drop to detach (the operation still
+/// executes — see the module docs for the exact semantics).
+pub struct PendingOp<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> PendingOp<T> {
+    /// An already-completed handle. Used for world-size-1 short circuits
+    /// and by inline transports whose `istart_*` has nothing to defer;
+    /// also the constructor an external [`crate::dist::Communicator`]
+    /// backend without a progress engine would use.
+    pub fn ready(value: T) -> PendingOp<T> {
+        PendingOp {
+            shared: Arc::new(Shared {
+                slot: Mutex::new(Slot::Done(value)),
+                cv: Condvar::new(),
+                bytes: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    fn fresh() -> (PendingOp<T>, Arc<Shared<T>>) {
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot::Pending),
+            cv: Condvar::new(),
+            bytes: AtomicU64::new(0),
+        });
+        (PendingOp { shared: Arc::clone(&shared) }, shared)
+    }
+
+    /// Whether the operation has completed (successfully or not).
+    /// Nonblocking; `wait` will not block once this returns true.
+    pub fn poll(&self) -> bool {
+        !matches!(
+            *self.shared.slot.lock().unwrap_or_else(|e| e.into_inner()),
+            Slot::Pending
+        )
+    }
+
+    /// Block until the operation completes, without consuming the handle
+    /// or re-raising failures (those surface at [`PendingOp::wait`]).
+    /// After `join`, [`PendingOp::bytes_sent`] is final.
+    pub fn join(&self) {
+        let mut slot = self.shared.slot.lock().unwrap_or_else(|e| e.into_inner());
+        while matches!(*slot, Slot::Pending) {
+            slot = self.shared.cv.wait(slot).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Payload-frame bytes this operation has sent so far (final once the
+    /// op completes — the per-op counter the traffic accounting merges
+    /// into the global per-rank totals at completion).
+    pub fn bytes_sent(&self) -> u64 {
+        self.shared.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Block until the operation completes and return its result. If the
+    /// operation panicked (peer death, severed link, SPMD violation), the
+    /// panic is re-raised here — on the issuing thread — so failures of
+    /// in-flight ops propagate exactly like failures of blocking
+    /// collectives.
+    pub fn wait(self) -> T {
+        let mut slot = self.shared.slot.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            match std::mem::replace(&mut *slot, Slot::Taken) {
+                Slot::Pending => {
+                    *slot = Slot::Pending;
+                    slot = self.shared.cv.wait(slot).unwrap_or_else(|e| e.into_inner());
+                }
+                Slot::Done(v) => return v,
+                Slot::Panicked(p) => {
+                    drop(slot);
+                    resume_unwind(p);
+                }
+                Slot::Taken => unreachable!("PendingOp::wait consumed twice"),
+            }
+        }
+    }
+}
+
+/// A communicator's progress engine: one dedicated thread draining a
+/// FIFO of operation closures. Created lazily on the first `istart`;
+/// dropping it closes the queue, drains every remaining operation, and
+/// joins the thread — so a communicator never shuts its transport down
+/// under an op still in flight.
+pub(crate) struct Engine {
+    tx: Option<Sender<Job>>,
+    join: Option<std::thread::JoinHandle<()>>,
+    poisoned: Arc<AtomicBool>,
+}
+
+impl Engine {
+    /// Spawn the progress thread (named for debuggability).
+    pub(crate) fn new(name: &str) -> Engine {
+        let (tx, rx) = channel::<Job>();
+        let join = pool::spawn_blocking(name, move || {
+            // Jobs wrap their body in catch_unwind, so this loop never
+            // unwinds; it ends when the sender side is dropped.
+            while let Ok(job) = rx.recv() {
+                job();
+            }
+        });
+        Engine { tx: Some(tx), join: Some(join), poisoned: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// Enqueue `f` as the next operation in issue order; returns its
+    /// handle. `rank` attributes the op's wire bytes. Panics if an
+    /// earlier operation on this engine failed (the world is poisoned —
+    /// queueing more work could only deadlock or mislead).
+    pub(crate) fn submit<T, F>(&self, rank: usize, f: F) -> PendingOp<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        assert!(
+            !self.poisoned.load(Ordering::SeqCst),
+            "dist: an earlier nonblocking collective on this communicator failed"
+        );
+        let (op, shared) = PendingOp::fresh();
+        let poisoned = Arc::clone(&self.poisoned);
+        let job: Job = Box::new(move || {
+            traffic::op_begin(rank, Arc::clone(&shared));
+            let out = catch_unwind(AssertUnwindSafe(f));
+            traffic::op_end();
+            let mut slot = shared.slot.lock().unwrap_or_else(|e| e.into_inner());
+            *slot = match out {
+                Ok(v) => Slot::Done(v),
+                Err(p) => {
+                    poisoned.store(true, Ordering::SeqCst);
+                    Slot::Panicked(p)
+                }
+            };
+            shared.cv.notify_all();
+        });
+        self.tx
+            .as_ref()
+            .expect("engine queue closed")
+            .send(job)
+            .expect("dist: progress engine thread died");
+        op
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // Close the queue; the thread drains every already-issued op
+        // (peers depend on them) and exits. Join so the transport the
+        // ops borrow provably outlives them.
+        drop(self.tx.take());
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The per-op byte-counter hook [`crate::dist::traffic`] uses without
+/// knowing `T`: just the atomic the engine job registered.
+pub(crate) trait OpBytes: Send + Sync {
+    /// Add `bytes` to the op's counter; returns the new total.
+    fn add(&self, bytes: u64) -> u64;
+}
+
+impl<T: Send> OpBytes for Shared<T> {
+    fn add(&self, bytes: u64) -> u64 {
+        self.bytes.fetch_add(bytes, Ordering::Relaxed) + bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ready_op_polls_complete_and_waits_immediately() {
+        let op = PendingOp::ready(42usize);
+        assert!(op.poll());
+        op.join();
+        assert_eq!(op.bytes_sent(), 0);
+        assert_eq!(op.wait(), 42);
+    }
+
+    #[test]
+    fn engine_runs_ops_in_issue_order() {
+        let engine = Engine::new("pending-test-fifo");
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let ops: Vec<PendingOp<usize>> = (0..8)
+            .map(|i| {
+                let log = Arc::clone(&log);
+                engine.submit(0, move || {
+                    log.lock().unwrap().push(i);
+                    i
+                })
+            })
+            .collect();
+        for (i, op) in ops.into_iter().enumerate() {
+            assert_eq!(op.wait(), i);
+        }
+        assert_eq!(*log.lock().unwrap(), (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicked_op_reraises_at_wait_and_poisons_engine() {
+        let engine = Engine::new("pending-test-panic");
+        let bad: PendingOp<()> = engine.submit(0, || panic!("injected op failure"));
+        let err = catch_unwind(AssertUnwindSafe(|| bad.wait()));
+        assert!(err.is_err(), "op panic must re-raise at wait()");
+        let refused = catch_unwind(AssertUnwindSafe(|| {
+            let _ = engine.submit(0, || ());
+        }));
+        assert!(refused.is_err(), "poisoned engine must refuse new ops");
+    }
+
+    #[test]
+    fn dropped_op_still_executes_before_engine_shutdown() {
+        let ran = Arc::new(AtomicBool::new(false));
+        {
+            let engine = Engine::new("pending-test-drop");
+            let flag = Arc::clone(&ran);
+            let op = engine.submit(0, move || flag.store(true, Ordering::SeqCst));
+            drop(op); // detach: the op must still run
+        } // engine drop drains the queue
+        assert!(ran.load(Ordering::SeqCst), "detached op must execute");
+    }
+}

@@ -14,9 +14,24 @@
 //! Handshake and goodbye frames are *not* counted — only collective
 //! payload traffic, so the numbers are a pure function of the algorithm
 //! and payload sizes.
+//!
+//! # Per-op attribution under concurrent in-flight ops
+//!
+//! Nonblocking collectives ([`crate::dist::pending`]) execute on a
+//! communicator's progress engine while the issuing thread computes, so
+//! a global-counter snapshot taken mid-flight could otherwise observe a
+//! half-accounted collective. Bytes sent while an engine op executes
+//! therefore accumulate on that op's own counter
+//! ([`crate::dist::pending::PendingOp::bytes_sent`]) and are **merged
+//! into the global per-rank slots only when the op completes** — global
+//! totals move in whole-collective increments, and per-op byte counts
+//! are exact regardless of what else is in flight (the property the
+//! ring-bandwidth pinning test in `rust/tests/dist.rs` relies on).
 
+use super::pending::OpBytes;
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
 /// Number of per-rank counter slots; ranks at or above this fold into
 /// the last slot (worlds that large are far beyond the tracked range).
@@ -27,9 +42,57 @@ fn slots() -> &'static [AtomicU64] {
     SLOTS.get_or_init(|| (0..MAX_TRACKED_RANKS).map(|_| AtomicU64::new(0)).collect())
 }
 
-/// Record `bytes` of collective payload frames sent by `rank`.
+/// The engine-thread op context: bytes recorded while set go to the op's
+/// counter and are merged into `rank`'s global slot at [`op_end`].
+struct OpCtx {
+    rank: usize,
+    op: Arc<dyn OpBytes>,
+    total: u64,
+}
+
+thread_local! {
+    static OP_CTX: RefCell<Option<OpCtx>> = const { RefCell::new(None) };
+}
+
+/// Enter per-op accounting on this (engine) thread: subsequent
+/// [`record_sent`] calls accumulate on `op` until [`op_end`].
+pub(crate) fn op_begin(rank: usize, op: Arc<dyn OpBytes>) {
+    OP_CTX.with(|c| {
+        let prev = c.borrow_mut().replace(OpCtx { rank, op, total: 0 });
+        debug_assert!(prev.is_none(), "traffic: nested op contexts");
+    });
+}
+
+/// Leave per-op accounting and merge the op's bytes into its rank's
+/// global slot (one atomic increment per completed op).
+pub(crate) fn op_end() {
+    OP_CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().take() {
+            if ctx.total > 0 {
+                slots()[ctx.rank.min(MAX_TRACKED_RANKS - 1)]
+                    .fetch_add(ctx.total, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+/// Record `bytes` of collective payload frames sent by `rank`: onto the
+/// current op's counter inside an engine op, directly onto the global
+/// slot otherwise (blocking inline collectives).
 pub(crate) fn record_sent(rank: usize, bytes: u64) {
-    slots()[rank.min(MAX_TRACKED_RANKS - 1)].fetch_add(bytes, Ordering::Relaxed);
+    let deferred = OP_CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            debug_assert_eq!(ctx.rank, rank, "traffic: op recorded a foreign rank");
+            ctx.op.add(bytes);
+            ctx.total += bytes;
+            true
+        } else {
+            false
+        }
+    });
+    if !deferred {
+        slots()[rank.min(MAX_TRACKED_RANKS - 1)].fetch_add(bytes, Ordering::Relaxed);
+    }
 }
 
 /// Zero every per-rank counter (bench hygiene between measured runs).
@@ -40,7 +103,8 @@ pub fn reset() {
 }
 
 /// Bytes sent per rank, for ranks `0..world` (clamped to the tracked
-/// range). Relaxed snapshots: call when no collective is in flight.
+/// range). Relaxed snapshots that move in whole-op increments: call when
+/// no collective is in flight for exact totals.
 pub fn sent_by_rank(world: usize) -> Vec<u64> {
     (0..world.min(MAX_TRACKED_RANKS)).map(|r| slots()[r].load(Ordering::Relaxed)).collect()
 }
@@ -67,5 +131,27 @@ mod tests {
         assert!(after[1] - before[1] >= 150);
         assert!(after[MAX_TRACKED_RANKS - 1] - before[MAX_TRACKED_RANKS - 1] >= 8);
         assert!(total_sent() >= after.iter().sum::<u64>() - before.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn op_context_defers_bytes_until_op_end() {
+        struct Probe(AtomicU64);
+        impl OpBytes for Probe {
+            fn add(&self, b: u64) -> u64 {
+                self.0.fetch_add(b, Ordering::Relaxed) + b
+            }
+        }
+        let probe = Arc::new(Probe(AtomicU64::new(0)));
+        let before = sent_by_rank(4);
+        op_begin(3, Arc::clone(&probe) as Arc<dyn OpBytes>);
+        record_sent(3, 500);
+        record_sent(3, 11);
+        // Mid-op: the op counter sees the bytes, the global slot does not
+        // (concurrent tests only ever *add*, and nothing else records for
+        // an op context on this thread).
+        assert_eq!(probe.0.load(Ordering::Relaxed), 511);
+        op_end();
+        let after = sent_by_rank(4);
+        assert!(after[3] - before[3] >= 511, "merge at op_end must land on rank 3");
     }
 }

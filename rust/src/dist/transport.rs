@@ -65,13 +65,14 @@
 //! worker detects its role with [`worker_env`] and joins the rendezvous
 //! instead of spawning further workers.
 
-use super::{traffic, Algo, Communicator};
+use super::pending::Engine;
+use super::{collectives, traffic, Algo, Communicator, PendingOp};
 use crate::tensor::Mat;
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Which transport backs the [`Communicator`] of a distributed run.
@@ -776,16 +777,35 @@ struct Inner {
     p2p_rcvd: Vec<u64>,
 }
 
+/// The shareable state behind a [`SocketComm`]: rank identity plus the
+/// lock-guarded link set, behind one `Arc` so an in-flight engine op can
+/// own it. Implements the inline (immediate-execution) `Communicator` —
+/// the engine jobs of [`SocketComm`] run collectives over this type.
+struct SocketCore {
+    rank: usize,
+    world: usize,
+    algo: Algo,
+    overlap: bool,
+    inner: Mutex<Inner>,
+}
+
 /// One process's handle onto a socket-transport world. Implements the
 /// same barrier-exchange [`Communicator`] contract as [`LocalComm`]; see
 /// the module docs for topology, wire format and failure semantics.
 ///
+/// Nonblocking `istart_*` calls lazily spawn this communicator's
+/// progress engine ([`crate::dist::pending`]), which services one
+/// operation at a time through the nonblocking duplex loop below; once
+/// the engine is active, blocking calls are reimplemented as
+/// `istart + wait` through the same FIFO queue, so a blocking collective
+/// issued between two pending ops takes its place in the issue order
+/// instead of racing the engine for the links. Dropping the communicator
+/// drains every pending op before the goodbye frames go out.
+///
 /// [`LocalComm`]: crate::dist::LocalComm
 pub struct SocketComm {
-    rank: usize,
-    world: usize,
-    algo: Algo,
-    inner: Mutex<Inner>,
+    core: Arc<SocketCore>,
+    engine: OnceLock<Engine>,
 }
 
 impl SocketComm {
@@ -803,14 +823,30 @@ impl SocketComm {
         Self::connect_with(rank, world, rendezvous, run_id, crate::dist::default_algo())
     }
 
-    /// [`SocketComm::connect`] with an explicit collective algorithm.
-    /// Every rank of a world must pass the same `algo`.
+    /// [`SocketComm::connect`] with an explicit collective algorithm
+    /// (overlap mode stays the [`crate::dist::default_overlap`] env
+    /// default). Every rank of a world must pass the same `algo`.
     pub fn connect_with(
         rank: usize,
         world: usize,
         rendezvous: &str,
         run_id: u64,
         algo: Algo,
+    ) -> io::Result<SocketComm> {
+        Self::connect_opts(rank, world, rendezvous, run_id, algo, crate::dist::default_overlap())
+    }
+
+    /// [`SocketComm::connect`] with explicit collective algorithm *and*
+    /// overlap mode. Every rank of a world must pass the same values for
+    /// both (the launcher pins `SINGD_ALGO` / `SINGD_OVERLAP` into
+    /// worker environments for exactly this reason).
+    pub fn connect_opts(
+        rank: usize,
+        world: usize,
+        rendezvous: &str,
+        run_id: u64,
+        algo: Algo,
+        overlap: bool,
     ) -> io::Result<SocketComm> {
         assert!(world >= 1, "dist[socket]: world size must be >= 1");
         assert!(rank < world, "dist[socket]: rank {rank} out of range for world {world}");
@@ -822,10 +858,11 @@ impl SocketComm {
         } else {
             vec![dial_root(&ep, rank, world, run_id)?]
         };
-        let comm = SocketComm {
+        let core = SocketCore {
             rank,
             world,
             algo,
+            overlap,
             inner: Mutex::new(Inner {
                 links,
                 seq: 0,
@@ -835,11 +872,26 @@ impl SocketComm {
             }),
         };
         if world > 1 {
-            comm.build_mesh(&ep, run_id)?;
+            core.build_mesh(&ep, run_id)?;
         }
-        Ok(comm)
+        Ok(SocketComm { core: Arc::new(core), engine: OnceLock::new() })
     }
 
+    fn engine(&self) -> &Engine {
+        self.engine
+            .get_or_init(|| Engine::new(&format!("singd-sock-eng-r{}", self.core.rank)))
+    }
+
+    /// Abruptly close every link — star and mesh — *without* the goodbye
+    /// frame: simulates process death for the fault-injection tests;
+    /// peers observe EOF mid-collective (including mid-pending-op)
+    /// instead of a clean shutdown.
+    pub fn sever(&self) {
+        self.core.sever();
+    }
+}
+
+impl SocketCore {
     /// Assemble the full peer mesh: bind this rank's listener, advertise
     /// its address over the star (a barrier, so every listener is bound
     /// before anyone dials), dial every lower rank, accept every higher
@@ -871,16 +923,34 @@ impl SocketComm {
         Ok(())
     }
 
-    /// Abruptly close every link — star and mesh — *without* the goodbye
-    /// frame: simulates process death for the fault-injection tests;
-    /// peers observe EOF mid-collective instead of a clean shutdown.
-    pub fn sever(&self) {
+    /// See [`SocketComm::sever`].
+    fn sever(&self) {
         let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         for link in &inner.links {
             link.shutdown();
         }
         for link in inner.mesh.iter().flatten() {
             link.shutdown();
+        }
+    }
+
+    /// Clean shutdown: best-effort goodbye on every link — star and
+    /// mesh — so peers can tell an early (SPMD-violating) exit from a
+    /// crash; then close the links. Called from [`SocketComm`]'s drop,
+    /// *after* the progress engine has drained every pending op.
+    fn close(&self) {
+        let mut guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let inner = &mut *guard;
+        let seq = inner.seq;
+        for link in &mut inner.links {
+            let _ = write_frame(link, KIND_GOODBYE, seq, &[]);
+            link.shutdown();
+        }
+        for (r, link) in inner.mesh.iter_mut().enumerate() {
+            if let Some(link) = link {
+                let _ = write_frame(link, KIND_GOODBYE, inner.p2p_sent[r], &[]);
+                link.shutdown();
+            }
         }
     }
 
@@ -1080,7 +1150,7 @@ fn check_frame(got_kind: u8, want_kind: u8, got_seq: u64, want_seq: u64, peer: u
     );
 }
 
-impl Communicator for SocketComm {
+impl Communicator for SocketCore {
     fn rank(&self) -> usize {
         self.rank
     }
@@ -1091,6 +1161,10 @@ impl Communicator for SocketComm {
 
     fn algo(&self) -> Algo {
         self.algo
+    }
+
+    fn overlap(&self) -> bool {
+        self.overlap
     }
 
     fn send_bytes(&self, to: usize, payload: &[u8]) {
@@ -1161,26 +1235,132 @@ impl Communicator for SocketComm {
             })
             .collect()
     }
+
+    fn istart_all_gather(&self, mats: Vec<Mat>) -> PendingOp<Vec<Arc<Vec<Mat>>>> {
+        // Inline core: already executing on the engine (or in a blocking
+        // context) — run to completion immediately.
+        PendingOp::ready(collectives::all_gather(self, mats))
+    }
+
+    fn istart_all_reduce_sum(&self, mats: Vec<Mat>) -> PendingOp<Vec<Mat>> {
+        PendingOp::ready(collectives::all_reduce_sum(self, &mats))
+    }
+}
+
+impl Communicator for SocketComm {
+    fn rank(&self) -> usize {
+        self.core.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.core.world
+    }
+
+    fn algo(&self) -> Algo {
+        self.core.algo
+    }
+
+    fn overlap(&self) -> bool {
+        self.core.overlap
+    }
+
+    fn send_bytes(&self, to: usize, payload: &[u8]) {
+        if let Some(eng) = self.engine.get() {
+            let core = Arc::clone(&self.core);
+            let payload = payload.to_vec();
+            eng.submit(self.core.rank, move || core.send_bytes(to, &payload)).wait();
+            return;
+        }
+        self.core.send_bytes(to, payload)
+    }
+
+    fn recv_bytes(&self, from: usize) -> Vec<u8> {
+        if let Some(eng) = self.engine.get() {
+            let core = Arc::clone(&self.core);
+            return eng.submit(self.core.rank, move || core.recv_bytes(from)).wait();
+        }
+        self.core.recv_bytes(from)
+    }
+
+    fn send_recv_bytes(&self, to: usize, payload: &[u8], from: usize) -> Vec<u8> {
+        if let Some(eng) = self.engine.get() {
+            let core = Arc::clone(&self.core);
+            let payload = payload.to_vec();
+            return eng
+                .submit(self.core.rank, move || core.send_recv_bytes(to, &payload, from))
+                .wait();
+        }
+        self.core.send_recv_bytes(to, payload, from)
+    }
+
+    fn exchange_mats(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
+        if let Some(eng) = self.engine.get() {
+            let core = Arc::clone(&self.core);
+            return eng.submit(self.core.rank, move || core.exchange_mats(mats)).wait();
+        }
+        self.core.exchange_mats(mats)
+    }
+
+    fn exchange_f64(&self, vals: Vec<f64>) -> Vec<Arc<Vec<f64>>> {
+        if let Some(eng) = self.engine.get() {
+            let core = Arc::clone(&self.core);
+            return eng.submit(self.core.rank, move || core.exchange_f64(vals)).wait();
+        }
+        self.core.exchange_f64(vals)
+    }
+
+    fn istart_exchange_mats(&self, mats: Vec<Mat>) -> PendingOp<Vec<Arc<Vec<Mat>>>> {
+        if self.core.world == 1 {
+            return PendingOp::ready(self.core.exchange_mats(mats));
+        }
+        let core = Arc::clone(&self.core);
+        self.engine().submit(self.core.rank, move || core.exchange_mats(mats))
+    }
+
+    fn istart_exchange_f64(&self, vals: Vec<f64>) -> PendingOp<Vec<Arc<Vec<f64>>>> {
+        if self.core.world == 1 {
+            return PendingOp::ready(self.core.exchange_f64(vals));
+        }
+        let core = Arc::clone(&self.core);
+        self.engine().submit(self.core.rank, move || core.exchange_f64(vals))
+    }
+
+    fn istart_send_recv_bytes(
+        &self,
+        to: usize,
+        payload: Vec<u8>,
+        from: usize,
+    ) -> PendingOp<Vec<u8>> {
+        let core = Arc::clone(&self.core);
+        self.engine().submit(self.core.rank, move || core.send_recv_bytes(to, &payload, from))
+    }
+
+    fn istart_all_gather(&self, mats: Vec<Mat>) -> PendingOp<Vec<Arc<Vec<Mat>>>> {
+        if self.core.world == 1 {
+            return PendingOp::ready(vec![Arc::new(mats)]);
+        }
+        let core = Arc::clone(&self.core);
+        self.engine().submit(self.core.rank, move || collectives::all_gather(&*core, mats))
+    }
+
+    fn istart_all_reduce_sum(&self, mats: Vec<Mat>) -> PendingOp<Vec<Mat>> {
+        if self.core.world == 1 {
+            return PendingOp::ready(mats);
+        }
+        let core = Arc::clone(&self.core);
+        self.engine().submit(self.core.rank, move || collectives::all_reduce_sum(&*core, &mats))
+    }
 }
 
 impl Drop for SocketComm {
     fn drop(&mut self) {
-        // Clean shutdown: best-effort goodbye on every link — star and
-        // mesh — so peers can tell an early (SPMD-violating) exit from a
-        // crash; then close the links.
-        let mut guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
-        let inner = &mut *guard;
-        let seq = inner.seq;
-        for link in &mut inner.links {
-            let _ = write_frame(link, KIND_GOODBYE, seq, &[]);
-            link.shutdown();
+        // Drain the progress engine first: every issued op executes
+        // before the links close (peers depend on them; a goodbye under
+        // an op still in flight would read as an SPMD violation).
+        if let Some(engine) = self.engine.take() {
+            drop(engine);
         }
-        for (r, link) in inner.mesh.iter_mut().enumerate() {
-            if let Some(link) = link {
-                let _ = write_frame(link, KIND_GOODBYE, inner.p2p_sent[r], &[]);
-                link.shutdown();
-            }
-        }
+        self.core.close();
     }
 }
 
@@ -1238,17 +1418,19 @@ pub fn fresh_run_id() -> u64 {
 
 /// Re-exec this binary as worker ranks `1..world` (torchrun-style): same
 /// argv, plus the `SINGD_RANK`/`SINGD_WORLD`/`SINGD_RENDEZVOUS`/
-/// `SINGD_RUN_ID` env contract. `SINGD_ALGO` is pinned to the launcher's
-/// resolved collective algorithm so a programmatically-set
-/// [`crate::train::DistCfg::algo`] reaches workers whose argv/config do
-/// not carry it (every rank of a world must agree on the algorithm).
-/// The calling process is rank 0. Worker stdout is discarded (rank 0
-/// owns reporting); stderr is inherited so worker panics stay visible.
+/// `SINGD_RUN_ID` env contract. `SINGD_ALGO` and `SINGD_OVERLAP` are
+/// pinned to the launcher's resolved collective algorithm and overlap
+/// mode so a programmatically-set [`crate::train::DistCfg`] reaches
+/// workers whose argv/config do not carry them (every rank of a world
+/// must agree on both run-level constants). The calling process is rank
+/// 0. Worker stdout is discarded (rank 0 owns reporting); stderr is
+/// inherited so worker panics stay visible.
 pub fn launch_workers(
     world: usize,
     rendezvous: &str,
     run_id: u64,
     algo: Algo,
+    overlap: bool,
 ) -> io::Result<Vec<std::process::Child>> {
     assert!(
         worker_env().is_none(),
@@ -1265,6 +1447,7 @@ pub fn launch_workers(
             .env(ENV_RENDEZVOUS, rendezvous)
             .env(ENV_RUN_ID, run_id.to_string())
             .env("SINGD_ALGO", algo.name())
+            .env("SINGD_OVERLAP", if overlap { "1" } else { "0" })
             .stdout(std::process::Stdio::null())
             .spawn()?;
         children.push(child);
@@ -1291,24 +1474,35 @@ pub fn wait_workers(children: &mut Vec<std::process::Child>) -> Result<(), Strin
 }
 
 /// Run `world` SPMD rank bodies over a real socket world inside this
-/// process under the default collective algorithm; see
-/// [`run_ranks_socket_algo`].
+/// process under the default collective algorithm and overlap mode; see
+/// [`run_ranks_socket_with`].
 pub fn run_ranks_socket<T, F>(world: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(SocketComm) -> T + Sync,
 {
-    run_ranks_socket_algo(world, crate::dist::default_algo(), f)
+    run_ranks_socket_with(world, crate::dist::default_algo(), crate::dist::default_overlap(), f)
+}
+
+/// [`run_ranks_socket_with`] with the overlap mode left at the
+/// [`crate::dist::default_overlap`] env default (so the ci.sh matrix
+/// drives existing suites through both modes).
+pub fn run_ranks_socket_algo<T, F>(world: usize, algo: Algo, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(SocketComm) -> T + Sync,
+{
+    run_ranks_socket_with(world, algo, crate::dist::default_overlap(), f)
 }
 
 /// Run `world` SPMD rank bodies over a real socket world inside this
 /// process (one thread per rank, a fresh Unix endpoint) and collect
 /// results in rank order — the socket-transport analogue of
-/// [`crate::dist::run_ranks_algo`], used by the cross-transport
+/// [`crate::dist::run_ranks_with`], used by the cross-transport
 /// conformance and fault-injection suites. Every byte still travels
 /// through the kernel socket layer, so the wire path is exactly the
 /// multi-process one; only process isolation is mocked.
-pub fn run_ranks_socket_algo<T, F>(world: usize, algo: Algo, f: F) -> Vec<T>
+pub fn run_ranks_socket_with<T, F>(world: usize, algo: Algo, overlap: bool, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(SocketComm) -> T + Sync,
@@ -1321,7 +1515,7 @@ where
     std::thread::scope(|s| {
         for r in 0..world {
             s.spawn(move || {
-                let comm = SocketComm::connect_with(r, world, rv, run_id, algo)
+                let comm = SocketComm::connect_opts(r, world, rv, run_id, algo, overlap)
                     .unwrap_or_else(|e| panic!("dist[socket]: rank {r} rendezvous: {e}"));
                 *rs[r].lock().unwrap_or_else(|e| e.into_inner()) = Some(fr(comm));
             });

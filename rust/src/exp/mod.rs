@@ -76,6 +76,7 @@ pub fn run_job(cfg: &JobConfig) -> RunResult {
         strategy: cfg.dist_strategy,
         transport: cfg.transport,
         algo: cfg.algo,
+        overlap: cfg.overlap,
     };
     train_dist(model.as_mut(), &ds, &tc, &dc)
 }

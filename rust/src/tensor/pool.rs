@@ -211,6 +211,25 @@ pub fn run_jobs<'scope>(jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
     }
 }
 
+/// Spawn a dedicated named thread for long-**blocking** work (collective
+/// progress engines, transport listeners) and return its join handle.
+///
+/// Such work must NOT ride the pool queue: the rank bodies of
+/// [`crate::dist::run_ranks`] may occupy every worker, and a blocking
+/// progress job queued behind a blocked worker would deadlock the world —
+/// the same hazard [`is_worker_thread`] exists to sidestep. A dedicated
+/// thread costs one spawn (~tens of µs) and is immune to pool pressure;
+/// the pool stays reserved for short compute-bound jobs.
+pub fn spawn_blocking<F>(name: &str, f: F) -> std::thread::JoinHandle<()>
+where
+    F: FnOnce() + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .expect("pool: spawn blocking thread")
+}
+
 /// Shard the half-open row range `0..rows` across the pool, calling
 /// `f(start, end)` once per shard. Shards have at least `min_rows` rows
 /// (the whole range runs inline when it is that small, the effective

@@ -18,7 +18,7 @@ use crate::optim::{Hyper, KronStats, Method, Optimizer};
 use crate::proptest::Pcg;
 use crate::tensor::Mat;
 use std::io::Write;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Learning-rate schedule (paper §4: cosine for transformers, step decay
 /// for VGG/ConvMixer, constant for the GNN).
@@ -248,8 +248,9 @@ pub fn train_image_model<M: Model + ?Sized>(
 }
 
 /// Distributed topology of a training run (the `[dist]` config section /
-/// `--ranks` + `--transport` + `--algo` CLI knobs / `SINGD_RANKS` +
-/// `SINGD_TRANSPORT` + `SINGD_ALGO` env defaults).
+/// `--ranks` + `--transport` + `--algo` + `--overlap` CLI knobs /
+/// `SINGD_RANKS` + `SINGD_TRANSPORT` + `SINGD_ALGO` + `SINGD_OVERLAP`
+/// env defaults).
 #[derive(Clone, Debug)]
 pub struct DistCfg {
     /// World size; `1` falls back to the serial driver.
@@ -261,6 +262,11 @@ pub struct DistCfg {
     /// Collective algorithm: rank-0 fan-in star or bandwidth-optimal
     /// ring (the default; bitwise identical either way).
     pub algo: Algo,
+    /// Comm/compute overlap: nonblocking stats gather + bucketed update
+    /// all-reduce in `rank_step` and the chunk-pipelined ring (the
+    /// default; bitwise identical either way — contract 4 of
+    /// [`crate::dist`]).
+    pub overlap: bool,
 }
 
 impl Default for DistCfg {
@@ -270,16 +276,24 @@ impl Default for DistCfg {
             strategy: DistStrategy::Replicated,
             transport: dist::default_transport(),
             algo: dist::default_algo(),
+            overlap: dist::default_overlap(),
         }
     }
 }
 
 impl DistCfg {
     /// An explicit in-process topology (the common test fixture); the
-    /// collective algorithm follows the `SINGD_ALGO` env default so the
-    /// ci.sh matrix drives the whole dist suite through both schedules.
+    /// collective algorithm and overlap mode follow the `SINGD_ALGO` /
+    /// `SINGD_OVERLAP` env defaults so the ci.sh matrix drives the whole
+    /// dist suite through both schedules and both overlap modes.
     pub fn local(ranks: usize, strategy: DistStrategy) -> DistCfg {
-        DistCfg { ranks, strategy, transport: Transport::Local, algo: dist::default_algo() }
+        DistCfg {
+            ranks,
+            strategy,
+            transport: Transport::Local,
+            algo: dist::default_algo(),
+            overlap: dist::default_overlap(),
+        }
     }
 }
 
@@ -343,6 +357,24 @@ impl DistCfg {
 /// halving tree the star uses, so `--algo ring` and `--algo star` are
 /// bitwise identical — the knob is purely about bandwidth
 /// (`benches/dist_scaling.rs` measures both).
+///
+/// # Comm/compute overlap
+///
+/// [`DistCfg::overlap`] (default on; `SINGD_OVERLAP` / `[dist] overlap`
+/// / `--overlap`) hides collective latency behind compute: `rank_step`
+/// issues the loss exchange and every layer's statistics gather as
+/// nonblocking ops ([`Communicator::istart_all_gather`]) and waits each
+/// one only at its true data dependency (layer `l`'s gradient
+/// reconstruction overlaps layer `l+1`'s transfer), the factor-sharded
+/// update exchange issues every bucket before draining
+/// ([`crate::dist::bucket::all_reduce_sum_bucketed`]), and ring
+/// all-reduces run chunk-pipelined
+/// ([`crate::dist::collectives::all_reduce_sum_pipelined`]). By the
+/// overlap-invariance contract (contract 4 of [`crate::dist`]) the run
+/// is bitwise identical with the knob on or off — `rust/tests/dist.rs`
+/// and `rust/tests/dist_proc.rs` compare the digests across
+/// `SINGD_OVERLAP ∈ {0,1}` × transport × algo; the knob is purely about
+/// wall-clock (`benches/dist_scaling.rs` measures the difference).
 pub fn train_dist<M: Model + ?Sized>(
     model: &mut M,
     dataset: &Dataset,
@@ -381,11 +413,16 @@ fn train_dist_local<M: Model + ?Sized>(
             Mutex::new(cfg.method.build_dist(&shapes, &cfg.hyper, ctx))
         })
         .collect();
+    // One persistent world for the whole run: the communicators (p2p
+    // sequence counters, lazily spawned progress engines) live across
+    // steps, exactly like a SocketComm world — with overlap on, the
+    // per-rank engine thread is spawned once per run, not once per step.
+    let local_world = dist::LocalWorld::new(world, dcfg.algo, dcfg.overlap);
     let (rows, best, steps_run, diverged, wall_secs) =
         train_loop(model, dataset, cfg, |model, b, step, lr| {
             let model_ref = &*model;
-            let outs = dist::run_ranks_algo(world, dcfg.algo, |comm| {
-                rank_step(&comm, model_ref, b, &opts[comm.rank()], step, lr)
+            let outs = local_world.run(|comm| {
+                rank_step(comm, model_ref, b, &opts[comm.rank()], step, lr)
             });
             let first = outs.into_iter().next().unwrap();
             // All ranks hold bitwise-identical post-step parameters
@@ -457,13 +494,15 @@ fn train_dist_socket<M: Model + ?Sized>(
         None => {
             let rendezvous = transport::fresh_rendezvous();
             let run_id = transport::fresh_run_id();
-            let workers = transport::launch_workers(world, &rendezvous, run_id, dcfg.algo)
-                .unwrap_or_else(|e| panic!("train_dist[socket]: launching workers: {e}"));
+            let workers =
+                transport::launch_workers(world, &rendezvous, run_id, dcfg.algo, dcfg.overlap)
+                    .unwrap_or_else(|e| panic!("train_dist[socket]: launching workers: {e}"));
             (0, rendezvous, run_id, workers)
         }
     };
-    let comm = SocketComm::connect_with(rank, world, &rendezvous, run_id, dcfg.algo)
-        .unwrap_or_else(|e| panic!("train_dist[socket]: rank {rank} rendezvous: {e}"));
+    let comm =
+        SocketComm::connect_opts(rank, world, &rendezvous, run_id, dcfg.algo, dcfg.overlap)
+            .unwrap_or_else(|e| panic!("train_dist[socket]: rank {rank} rendezvous: {e}"));
     let shapes = model.shapes();
     let ctx = DistCtx::new(dcfg.strategy, rank, world);
     let opt = Mutex::new(cfg.method.build_dist(&shapes, &cfg.hyper, ctx));
@@ -517,6 +556,7 @@ fn rank_step<M: Model + ?Sized>(
 ) -> RankStepOut {
     let world = comm.world_size();
     let rank = comm.rank();
+    let overlap = comm.overlap() && world > 1;
     let m_total = batch.y.len();
     // Contiguous balanced shard (the padding rule for non-dividing
     // world sizes; equal blocks whenever world | rows).
@@ -527,21 +567,6 @@ fn rank_step<M: Model + ?Sized>(
     };
     let res: BackwardResult = model.forward_backward(&shard);
 
-    // Global loss: tree-combine the shard f64 partials. Contiguous equal
-    // shards are complete subtrees of the full-batch halving tree, so
-    // this reproduces the serial loss bit for bit.
-    let scal = comm.exchange_f64(vec![res.loss_sum, res.loss_rows as f64]);
-    let sums: Vec<f64> = scal.iter().map(|v| v[0]).collect();
-    let total_rows: f64 = scal.iter().map(|v| v[1]).sum();
-    let loss = (collectives::tree_sum_f64(&sums) / total_rows.max(1.0)) as f32;
-
-    // Gather full-batch statistics rows (exact concatenation in rank
-    // order; `g = dy·m` is scale-free across shard sizes) and recompute
-    // each layer's gradient from them with the standard kernel. Every
-    // rank must *contribute* all layers' shard rows (their owners need
-    // them), but only reconstructs the layers its own optimizer will
-    // actually step — under factor sharding that skips (R−1)/R of the
-    // gradient contractions, the heaviest op in the step.
     let n = res.stats.len();
     let owned_mask: Option<Vec<bool>> =
         opt.lock().unwrap_or_else(|e| e.into_inner()).owned_layers().map(|owned| {
@@ -551,16 +576,63 @@ fn rank_step<M: Model + ?Sized>(
             }
             mask
         });
-    let mut payload = Vec::with_capacity(2 * n);
-    for st in &res.stats {
-        payload.push(st.a.clone());
-        payload.push(st.g.clone());
+
+    // The statistics gather arrives in one of two SPMD-equivalent forms:
+    // one batched all-gather of every layer's `(A, G)` rows (blocking
+    // path), or one pending per-layer gather (overlap path) — the same
+    // bytes either way, so reconstruction below is identical bit for
+    // bit. The loss exchange is issued first in both forms.
+    #[allow(clippy::type_complexity)]
+    enum Gathered {
+        /// `parts[r]` holds `[a_0, g_0, a_1, g_1, …]` of rank `r`.
+        Batched(Vec<Arc<Vec<Mat>>>),
+        /// One pending `[a_l, g_l]` gather per layer, waited in order.
+        PerLayer(Vec<Option<dist::PendingOp<Vec<Arc<Vec<Mat>>>>>>),
     }
-    // Route the gather through the algo-dispatched collective: under the
-    // ring it circulates over neighbor links instead of fanning in at
-    // rank 0 — this is the heaviest exchange of the step. Pure data
-    // movement either way, so the reconstruction below is exact.
-    let parts = collectives::all_gather(comm, payload);
+
+    // Global loss: tree-combine the shard f64 partials. Contiguous equal
+    // shards are complete subtrees of the full-batch halving tree, so
+    // this reproduces the serial loss bit for bit.
+    let (loss, mut gathered) = if overlap {
+        // Issue the loss exchange and every layer's statistics gather as
+        // pending ops up front; the engine moves layer l+1's rows while
+        // this thread reconstructs layer l's gradient below — waiting
+        // only at each layer's true data dependency.
+        let loss_op = comm.istart_exchange_f64(vec![res.loss_sum, res.loss_rows as f64]);
+        let gather_ops: Vec<_> = res
+            .stats
+            .iter()
+            .map(|st| Some(comm.istart_all_gather(vec![st.a.clone(), st.g.clone()])))
+            .collect();
+        let scal = loss_op.wait();
+        let sums: Vec<f64> = scal.iter().map(|v| v[0]).collect();
+        let total_rows: f64 = scal.iter().map(|v| v[1]).sum();
+        let loss = (collectives::tree_sum_f64(&sums) / total_rows.max(1.0)) as f32;
+        (loss, Gathered::PerLayer(gather_ops))
+    } else {
+        let scal = comm.exchange_f64(vec![res.loss_sum, res.loss_rows as f64]);
+        let sums: Vec<f64> = scal.iter().map(|v| v[0]).collect();
+        let total_rows: f64 = scal.iter().map(|v| v[1]).sum();
+        let loss = (collectives::tree_sum_f64(&sums) / total_rows.max(1.0)) as f32;
+        let mut payload = Vec::with_capacity(2 * n);
+        for st in &res.stats {
+            payload.push(st.a.clone());
+            payload.push(st.g.clone());
+        }
+        // Route the gather through the algo-dispatched collective: under
+        // the ring it circulates over neighbor links instead of fanning
+        // in at rank 0 — this is the heaviest exchange of the step. Pure
+        // data movement either way, so the reconstruction below is exact.
+        (loss, Gathered::Batched(collectives::all_gather(comm, payload)))
+    };
+
+    // Gather full-batch statistics rows (exact concatenation in rank
+    // order; `g = dy·m` is scale-free across shard sizes) and recompute
+    // each layer's gradient from them with the standard kernel. Every
+    // rank must *contribute* all layers' shard rows (their owners need
+    // them), but only reconstructs the layers its own optimizer will
+    // actually step — under factor sharding that skips (R−1)/R of the
+    // gradient contractions, the heaviest op in the step.
     let mut grads = Vec::with_capacity(n);
     let mut stats = Vec::with_capacity(n);
     for l in 0..n {
@@ -568,13 +640,26 @@ fn rank_step<M: Model + ?Sized>(
             if !mask[l] {
                 // Unowned layer: the optimizer skips it and its update
                 // arrives via the exchange below — placeholders only.
+                // The pending gather is still drained (this rank's rows
+                // were contributed above; waiting keeps any transfer
+                // failure surfacing here rather than via engine poison).
+                if let Gathered::PerLayer(ops) = &mut gathered {
+                    let _ = ops[l].take().expect("stats gather issued").wait();
+                }
                 grads.push(Mat::zeros(0, 0));
                 stats.push(KronStats { a: Mat::zeros(0, 0), g: Mat::zeros(0, 0) });
                 continue;
             }
         }
-        let a = collectives::concat_rows(&parts, 2 * l);
-        let g = collectives::concat_rows(&parts, 2 * l + 1);
+        let (a, g) = match &mut gathered {
+            Gathered::Batched(parts) => {
+                (collectives::concat_rows(parts, 2 * l), collectives::concat_rows(parts, 2 * l + 1))
+            }
+            Gathered::PerLayer(ops) => {
+                let parts = ops[l].take().expect("stats gather issued").wait();
+                (collectives::concat_rows(&parts, 0), collectives::concat_rows(&parts, 1))
+            }
+        };
         let m_l = a.rows().max(1) as f32;
         grads.push(crate::tensor::matmul_at_b(&g, &a).scale(1.0 / m_l));
         stats.push(KronStats { a, g });

@@ -634,6 +634,237 @@ fn socket_clean_early_exit_is_flagged_as_spmd_violation() {
 }
 
 // =====================================================================
+// Nonblocking collectives + chunk-pipelined ring (ISSUE 5): the
+// pipelined ring must be bitwise identical to the blocking ring and the
+// star on randomized shapes — across transports, world sizes, stage
+// counts and overlap modes — and overlapped training must digest
+// identically to blocking training. Fault injection: a pending op must
+// poison/propagate from wait() (no deadlock), and a PendingOp dropped
+// without wait must neither leak nor abort.
+
+/// One rank's pipelined-ring outputs on seeded per-rank random inputs:
+/// the auto-staged pipelined all-reduce plus explicit stage counts.
+fn pipelined_collectives(
+    comm: &dyn Communicator,
+    seed: u64,
+    shapes: &[(usize, usize)],
+) -> Vec<Vec<Mat>> {
+    let mut rng = Pcg::with_stream(seed, comm.rank() as u64);
+    let mats: Vec<Mat> = shapes.iter().map(|&(r, c)| rng.normal_mat(r, c, 1.0)).collect();
+    let mut outs = vec![collectives::all_reduce_sum_pipelined(comm, &mats)];
+    for stages in [1usize, 2, 3] {
+        outs.push(collectives::all_reduce_sum_pipelined_stages(comm, &mats, stages));
+    }
+    outs
+}
+
+#[test]
+fn pipelined_ring_matches_blocking_ring_and_star_across_transports() {
+    // Randomized shape lists per (world, trial) including the edges the
+    // chunk plan must survive: empty matrices, 1×1 buffers, row counts
+    // the plan does not divide, and a multi-chunk payload of ≥ 3·R rows
+    // so stage × rank chunking is genuinely exercised.
+    let mut shape_rng = Pcg::new(0x9199);
+    for world in [2usize, 3, 4] {
+        for trial in 0..3 {
+            let mut shapes: Vec<(usize, usize)> = (0..1 + shape_rng.below(3))
+                .map(|_| (shape_rng.below(7), shape_rng.below(7)))
+                .collect();
+            shapes.push((1, 1));
+            shapes.push((0, 3));
+            shapes.push((3 * world + shape_rng.below(5), 2)); // multi-chunk
+            let seed = 9100 + (world * 100 + trial) as u64;
+            let sh = &shapes;
+            // Reference: blocking star, overlap off.
+            let star = dist::run_ranks_with(world, Algo::Star, false, |c| {
+                let mut rng = Pcg::with_stream(seed, c.rank() as u64);
+                let mats: Vec<Mat> =
+                    sh.iter().map(|&(r, c2)| rng.normal_mat(r, c2, 1.0)).collect();
+                collectives::all_reduce_sum(&c, &mats)
+            });
+            // Blocking ring, overlap off.
+            let ring = dist::run_ranks_with(world, Algo::Ring, false, |c| {
+                let mut rng = Pcg::with_stream(seed, c.rank() as u64);
+                let mats: Vec<Mat> =
+                    sh.iter().map(|&(r, c2)| rng.normal_mat(r, c2, 1.0)).collect();
+                collectives::all_reduce_sum(&c, &mats)
+            });
+            // Pipelined ring, local + socket, auto and explicit stages.
+            let pipe_local =
+                dist::run_ranks_with(world, Algo::Ring, true, |c| {
+                    pipelined_collectives(&c, seed, sh)
+                });
+            let pipe_socket = transport::run_ranks_socket_with(world, Algo::Ring, true, |c| {
+                pipelined_collectives(&c, seed, sh)
+            });
+            for rank in 0..world {
+                let ctx = format!("world {world} trial {trial} rank {rank}");
+                assert_mats_bitwise(&star[rank], &ring[rank], &format!("{ctx}: star vs ring"));
+                for (variant, outs) in
+                    [("pipelined-local", &pipe_local), ("pipelined-socket", &pipe_socket)]
+                {
+                    for (vi, v) in outs[rank].iter().enumerate() {
+                        assert_mats_bitwise(
+                            &star[rank],
+                            v,
+                            &format!("{ctx}: {variant} variant {vi}"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn overlap_training_digests_match_blocking_bitwise() {
+    // The end-to-end overlap-invariance acceptance on the local
+    // transport (the socket/process leg lives in rust/tests/dist_proc.rs
+    // behind the --overlap axis): overlap ∈ {0,1} × strategy × algo all
+    // digest identically to serial.
+    let (ds, mut cfg) = fixture();
+    cfg.epochs = 1;
+    let serial = run(&cfg, &ds, None);
+    for strategy in [DistStrategy::Replicated, DistStrategy::FactorSharded] {
+        for algo in [Algo::Star, Algo::Ring] {
+            for overlap in [false, true] {
+                let mut dc = DistCfg::local(4, strategy);
+                dc.algo = algo;
+                dc.overlap = overlap;
+                let got = run(&cfg, &ds, Some(&dc));
+                assert_bitwise_equal(
+                    &serial,
+                    &got,
+                    &format!("{} {} overlap={}", strategy.name(), algo.name(), overlap),
+                );
+                assert_eq!(
+                    serial.0.param_digest, got.0.param_digest,
+                    "{} {} overlap={}: digest",
+                    strategy.name(),
+                    algo.name(),
+                    overlap
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn local_rank_panic_with_pending_op_in_flight_propagates_from_wait() {
+    // Ranks 0/1/3 have a nonblocking all-reduce in flight when rank 2
+    // dies: the rendezvous poison must reach the engine job, and wait()
+    // must re-raise on the issuing thread — no deadlock.
+    let verdict = finishes_within(60, || {
+        dist::run_ranks_with(4, Algo::Ring, true, |comm| {
+            if comm.rank() == 2 {
+                panic!("injected fault: rank 2");
+            }
+            let m = Mat::from_fn(32, 4, |r, c| (r + c) as f32);
+            let op = comm.istart_all_reduce_sum(vec![m]);
+            let _ = op.wait();
+        });
+    });
+    assert_eq!(verdict, Some(true), "pending-op peers must error out, not deadlock");
+}
+
+#[test]
+fn socket_sever_with_pending_op_in_flight_propagates_from_wait() {
+    // Same shape over real sockets: rank 2 severs its links while its
+    // peers' pending ops are mid-transfer; every peer must observe the
+    // dead link (directly or transitively) from wait().
+    let verdict = finishes_within(60, || {
+        transport::run_ranks_socket_with(4, Algo::Ring, true, |comm| {
+            if comm.rank() == 2 {
+                comm.sever();
+                panic!("injected fault: rank 2 socket closed");
+            }
+            let m = Mat::from_fn(64, 4, |r, c| (r * 7 + c) as f32);
+            let op = comm.istart_all_reduce_sum(vec![m]);
+            let _ = op.wait();
+        });
+    });
+    assert_eq!(verdict, Some(true), "pending-op peers must error out, not deadlock");
+}
+
+#[test]
+fn pending_op_dropped_without_wait_still_completes_and_frees_the_world() {
+    // Dropping the handle detaches the op: it must still execute (its
+    // peers depend on it — the follow-up blocking exchange would
+    // otherwise misalign), the engine must stay usable, and teardown
+    // must not leak a blocked progress thread. `finishes_within` is the
+    // leak/deadlock watchdog; Some(false) = finished without panicking.
+    let verdict = finishes_within(60, || {
+        let out = dist::run_ranks_with(3, Algo::Ring, true, |comm| {
+            let op = comm.istart_exchange_f64(vec![1.0 + comm.rank() as f64]);
+            drop(op); // detach without waiting
+            let parts = comm.exchange_f64(vec![10.0 + comm.rank() as f64]);
+            parts.iter().map(|p| p[0]).sum::<f64>()
+        });
+        assert_eq!(out, vec![33.0; 3]);
+    });
+    assert_eq!(verdict, Some(false), "detached op must neither deadlock nor panic");
+}
+
+#[test]
+fn socket_comm_drop_drains_pending_ops_before_goodbye() {
+    // Every rank issues a pending exchange and returns without waiting:
+    // the comm's Drop must drain the op (completing the collective on
+    // all ranks) before sending goodbyes — otherwise peers would see an
+    // SPMD violation or EOF and the world would panic.
+    let verdict = finishes_within(60, || {
+        let out = transport::run_ranks_socket_with(2, Algo::Ring, true, |comm| {
+            let op = comm.istart_exchange_f64(vec![comm.rank() as f64 + 1.0]);
+            drop(op);
+            comm.rank()
+        });
+        assert_eq!(out, vec![0, 1]);
+    });
+    assert_eq!(verdict, Some(false), "drop-drain must complete cleanly");
+}
+
+#[test]
+fn ring_all_reduce_per_op_bytes_pin_the_bandwidth_model() {
+    // The per-op traffic counters (merged into the global slots at op
+    // completion) pin the blocking ring's byte model exactly:
+    // 2·(R−1) frames per rank of (header + N/R payload bytes) each —
+    // i.e. ~2·(R−1)/R·N payload bytes per rank. Per-op counters are
+    // immune to concurrent tests recording on the global slots.
+    let world = 4usize;
+    let rows = 64usize;
+    let cols = 4usize; // N = 256 elems = 1024 B, divisible by world
+    let n_bytes = 4 * rows * cols;
+    let hdr = 17; // FRAME_HEADER_BYTES (PROTOCOL.md §Framing)
+    let want = 2 * (world as u64 - 1) * (hdr + n_bytes as u64 / world as u64);
+    let outs = dist::run_ranks_with(world, Algo::Ring, false, |comm| {
+        let m = Mat::from_fn(rows, cols, |r, c| (r * cols + c) as f32);
+        let op = comm.istart_all_reduce_sum(vec![m]);
+        op.join();
+        let bytes = op.bytes_sent();
+        let _ = op.wait();
+        bytes
+    });
+    for (rank, got) in outs.iter().enumerate() {
+        assert_eq!(*got, want, "rank {rank}: blocking-ring bytes off the 2·(R−1)/R·N model");
+    }
+    // With overlap on, this payload's auto plan is a single stage, so
+    // the pipelined schedule puts exactly the same frames on the wire —
+    // the per-op counter must agree with the blocking pin bit for bit
+    // (the collective runs pipelined inline on the engine thread; its
+    // micro-ops are inline there, so all bytes land on this one op).
+    let outs = dist::run_ranks_with(world, Algo::Ring, true, |comm| {
+        let m = Mat::from_fn(rows, cols, |r, c| (r * cols + c) as f32);
+        let op = comm.istart_all_reduce_sum(vec![m]);
+        op.join();
+        let bytes = op.bytes_sent();
+        let _ = op.wait();
+        bytes
+    });
+    for (rank, got) in outs.iter().enumerate() {
+        assert_eq!(*got, want, "rank {rank}: single-stage pipelined bytes must match blocking");
+    }
+}
+
+// =====================================================================
 // Shard-planning padding rule in the training driver (ISSUE 3 fix):
 // world sizes that do not divide the batch still train — the balanced
 // padding rule of shard::row_shard_range replaces the old hard

@@ -43,6 +43,7 @@ fn digest_of(config: &std::path::Path, extra: &[&str]) -> String {
         "SINGD_RANKS",
         "SINGD_TRANSPORT",
         "SINGD_ALGO",
+        "SINGD_OVERLAP",
         "SINGD_RANK",
         "SINGD_WORLD",
         "SINGD_RENDEZVOUS",
@@ -121,6 +122,39 @@ fn star_and_ring_digests_match_across_transports() {
 }
 
 #[test]
+fn overlap_axis_digests_match_across_transports_and_processes() {
+    // The overlap-invariance contract (ARCHITECTURE.md contract 4) over
+    // real OS processes: --overlap 0 and --overlap 1 must produce
+    // identical param digests on both transports — overlap reorders
+    // *time*, never *reduction order*. One method under factor sharding
+    // keeps the process count bounded; the full strategy × algo ×
+    // overlap grid runs in-process in rust/tests/dist.rs.
+    let cfg = write_job("overlap-axis", "singd:diag");
+    let serial = digest_of(&cfg, &["--ranks", "1"]);
+    for transport in ["local", "socket"] {
+        for overlap in ["0", "1"] {
+            let digest = digest_of(
+                &cfg,
+                &[
+                    "--ranks",
+                    "4",
+                    "--strategy",
+                    "factor-sharded",
+                    "--transport",
+                    transport,
+                    "--algo",
+                    "ring",
+                    "--overlap",
+                    overlap,
+                ],
+            );
+            assert_eq!(serial, digest, "{transport}/overlap={overlap}: diverged from serial");
+        }
+    }
+    std::fs::remove_file(&cfg).ok();
+}
+
+#[test]
 fn socket_ranks2_smoke_with_csv_output() {
     // The multi-process smoke documented in README §Distributed: socket
     // transport also writes the rank-0 CSV, and workers stay silent.
@@ -137,6 +171,7 @@ fn socket_ranks2_smoke_with_csv_output() {
         "SINGD_RANKS",
         "SINGD_TRANSPORT",
         "SINGD_ALGO",
+        "SINGD_OVERLAP",
         "SINGD_RANK",
         "SINGD_WORLD",
         "SINGD_RENDEZVOUS",

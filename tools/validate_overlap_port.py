@@ -1,0 +1,439 @@
+#!/usr/bin/env python3
+"""Line-for-line Python port of the pipelined-ring / progress-engine logic.
+
+Methodology record for EXPERIMENTS.md §Dist-Overlap (the container this
+PR was authored in ships no Rust toolchain, so the new scheduling logic
+was validated through this port; run `./ci.sh` for the in-repo gates
+once cargo is available). Mirrors rust/src/dist/collectives.rs
+(`ring_all_reduce_flat_pipelined`) and rust/src/dist/pending.rs.
+
+Validates, with real threads and bounded (socket-buffer-like) links:
+
+1. BITWISE: pipelined ring == blocking ring == star on random float32
+   payloads, across worlds x lengths x stage counts (incl. empty, 1,
+   < world, non-dividing, multi-stage).
+2. NO DEADLOCK: every schedule terminates when each rank's collectives
+   run on a FIFO progress-engine thread over capacity-1 duplex links
+   (send blocks unless drained concurrently -- the duplex loop is
+   load-bearing, as in SocketComm).
+3. TRAFFIC MODEL: per-rank sent bytes of the blocking ring equal
+   2*(R-1)*(HDR + chunk_bytes) for divisible payloads; the pipelined
+   ring moves identical payload bytes + 2*(R-1) extra headers per
+   additional stage.
+4. ENGINE SEMANTICS: a blocking exchange issued after an unwaited
+   istart lands after it in FIFO order on every rank; a dropped
+   (never-waited) op still executes.
+"""
+import threading
+import queue
+import numpy as np
+
+HDR = 17
+DEPTH = 2
+
+
+def row_shard_range(rows, world, rank):
+    world = max(world, 1)
+    q, rem = divmod(rows, world)
+    start = rank * q + min(rank, rem)
+    end = start + q + (1 if rank < rem else 0)
+    return start, end
+
+
+def tree_combine(parts):
+    n = len(parts)
+    if n == 0:
+        return np.zeros(0, np.float32)
+    if n == 1:
+        return parts[0].copy()
+    mid = (n + 1) // 2
+    a = tree_combine(parts[:mid])
+    b = tree_combine(parts[mid:])
+    return (a + b).astype(np.float32)
+
+
+class Links:
+    """capacity-1 per-direction byte links (socket-buffer stand-in)."""
+
+    def __init__(self, world, cap=1):
+        self.q = {(f, t): queue.Queue(maxsize=cap)
+                  for f in range(world) for t in range(world) if f != t}
+        self.sent = [0] * world  # payload-frame bytes per rank
+
+
+class Comm:
+    def __init__(self, links, rank, world):
+        self.links, self.rank, self.world = links, rank, world
+
+    def send_recv(self, to, payload, frm):
+        """duplex: progress both directions (try-send / try-recv loop)."""
+        sent = False
+        got = None
+        sq, rq = self.links.q[(self.rank, to)], self.links.q[(frm, self.rank)]
+        self.links.sent[self.rank] += HDR + payload.nbytes
+        while not (sent and got is not None):
+            if not sent:
+                try:
+                    sq.put_nowait(payload)
+                    sent = True
+                    continue
+                except queue.Full:
+                    pass
+            if got is None:
+                try:
+                    got = rq.get(timeout=0.0005)
+                    continue
+                except queue.Empty:
+                    pass
+        return got
+
+
+class Engine:
+    """FIFO progress engine: one thread, ops in issue order."""
+
+    def __init__(self):
+        self.jobs = queue.Queue()
+        self.t = threading.Thread(target=self._run, daemon=True)
+        self.t.start()
+
+    def _run(self):
+        while True:
+            job = self.jobs.get()
+            if job is None:
+                return
+            f, box = job
+            box.append(f())
+            box_done = job[2] if len(job) > 2 else None
+
+    def submit(self, f):
+        box = []
+        done = threading.Event()
+
+        def wrapped():
+            r = f()
+            done.set()
+            return r
+        self.jobs.put((wrapped, box))
+        return box, done
+
+    def close(self):
+        self.jobs.put(None)
+        self.t.join(timeout=30)
+        assert not self.t.is_alive(), "engine leak"
+
+
+def wait(op):
+    box, done = op
+    assert done.wait(timeout=30), "deadlock: op never completed"
+    return box[0]
+
+
+def ring_blocking(comm, flat):
+    world, rank = comm.world, comm.rank
+    total = len(flat)
+
+    def chunk(c):
+        return row_shard_range(total, world, c)
+
+    my = chunk(rank)
+    contrib = [None] * world
+    contrib[rank] = flat[my[0]:my[1]].copy()
+    for s in range(1, world):
+        to = (rank + s) % world
+        frm = (rank + world - s) % world
+        got = comm.send_recv(to, flat[chunk(to)[0]:chunk(to)[1]].copy(), frm)
+        contrib[frm] = got
+    out = np.zeros(total, np.float32)
+    reduced = tree_combine(contrib)
+    out[my[0]:my[1]] = reduced
+    right, left = (rank + 1) % world, (rank + world - 1) % world
+    cursor = reduced
+    for s in range(world - 1):
+        ri = (rank + world - s - 1) % world
+        cursor = comm.send_recv(right, cursor, left)
+        out[chunk(ri)[0]:chunk(ri)[1]] = cursor
+    return out
+
+
+def ring_pipelined(comm, engine, flat, stages):
+    world, rank = comm.world, comm.rank
+    total = len(flat)
+    stages = max(stages, 1)
+    right, left = (rank + 1) % world, (rank + world - 1) % world
+
+    def stage_rg(m):
+        return row_shard_range(total, stages, m)
+
+    def chunk(m, c):
+        ms, me = stage_rg(m)
+        s, e = row_shard_range(me - ms, world, c)
+        return ms + s, ms + e
+
+    def issue_p1(m):
+        ops = []
+        for s in range(1, world):
+            to = (rank + s) % world
+            frm = (rank + world - s) % world
+            lo, hi = chunk(m, to)
+            payload = flat[lo:hi].copy()
+            ops.append(engine.submit(
+                lambda p=payload, t=to, f=frm: comm.send_recv(t, p, f)))
+        return ops
+
+    out = np.zeros(total, np.float32)
+    in_flight = [issue_p1(m) for m in range(min(DEPTH, stages))]
+    for m in range(stages):
+        if m + DEPTH < stages:
+            in_flight.append(issue_p1(m + DEPTH))
+        my = chunk(m, rank)
+        contrib = [None] * world
+        contrib[rank] = flat[my[0]:my[1]].copy()
+        ops = in_flight.pop(0)
+        for s, op in zip(range(1, world), ops):
+            frm = (rank + world - s) % world
+            contrib[frm] = wait(op)
+        reduced = tree_combine(contrib)
+        out[my[0]:my[1]] = reduced
+        cursor = reduced
+        for s in range(world - 1):
+            ri = (rank + world - s - 1) % world
+            cursor = wait(engine.submit(
+                lambda c=cursor: comm.send_recv(right, c, left)))
+            out[chunk(m, ri)[0]:chunk(m, ri)[1]] = cursor
+    return out
+
+
+def star(inputs):
+    return tree_combine(inputs)
+
+
+def run_world(world, fn):
+    links = Links(world)
+    outs = [None] * world
+    errs = []
+
+    def body(r):
+        try:
+            outs[r] = fn(r, links)
+        except Exception as e:  # noqa
+            errs.append((r, e))
+    ts = [threading.Thread(target=body, args=(r,)) for r in range(world)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+        assert not t.is_alive(), "deadlock: rank thread hung"
+    assert not errs, errs
+    return outs, links
+
+
+class InlineEngine:
+    """the Rust cores' istart_* semantics: execute at issue, return a
+    completed handle. Engine jobs MUST use this for nested collectives —
+    submitting micro-ops back onto the engine that is executing the job
+    deadlocks a single-threaded FIFO (this port's first draft did
+    exactly that, which is why the core/wrapper split in
+    rust/src/dist/{mod,transport}.rs is load-bearing)."""
+
+    def submit(self, f):
+        box = [f()]
+        done = threading.Event()
+        done.set()
+        return box, done
+
+    def close(self):
+        pass
+
+
+class Rendezvous:
+    """two-phase barrier exchange (the star primitive)."""
+
+    def __init__(self, world):
+        self.world = world
+        self.cv = threading.Condition()
+        self.slots = [None] * world
+        self.deposited = 0
+        self.taken = 0
+        self.reading = False
+
+    def exchange(self, rank, payload):
+        with self.cv:
+            while self.reading or self.slots[rank] is not None:
+                self.cv.wait(30)
+            self.slots[rank] = payload
+            self.deposited += 1
+            if self.deposited == self.world:
+                self.reading = True
+                self.cv.notify_all()
+            while not self.reading:
+                assert self.cv.wait(30), "exchange deadlock"
+            out = list(self.slots)
+            self.taken += 1
+            if self.taken == self.world:
+                self.slots = [None] * self.world
+                self.deposited = 0
+                self.taken = 0
+                self.reading = False
+                self.cv.notify_all()
+            return out
+
+
+def rank_step_sim(rank, world, rv, comm, engine, stats, bucket_flat, overlap):
+    """the overlapped rank_step op sequence: loss exchange, one gather
+    per layer (vs one batched gather), pipelined bucket all-reduce,
+    flag exchange — all through the FIFO engine when overlap is on."""
+    if overlap:
+        loss_op = engine.submit(lambda: rv.exchange(rank, ("loss", rank)))
+        gather_ops = [engine.submit(lambda l=l: rv.exchange(rank, ("g", l, stats[l])))
+                      for l in range(len(stats))]
+        loss = wait(loss_op)
+        gathered = [wait(op) for op in gather_ops]
+        # istart_all_reduce_sum: the whole collective is ONE engine job;
+        # inside it, micro-ops run inline on the core (InlineEngine).
+        update = wait(engine.submit(
+            lambda: ring_pipelined(comm, InlineEngine(), bucket_flat, 1)))
+        flag = wait(engine.submit(lambda: rv.exchange(rank, ("flag", rank))))
+    else:
+        loss = rv.exchange(rank, ("loss", rank))
+        batched = rv.exchange(rank, ("g", "all",
+                                     np.concatenate(stats) if stats else
+                                     np.zeros(0, np.float32)))
+        gathered = batched
+        update = ring_blocking(comm, bucket_flat)
+        flag = rv.exchange(rank, ("flag", rank))
+    # flatten gathered per-rank stats rows into one array per rank
+    def rows(part):
+        if overlap:
+            return part  # list of per-layer exchanges, checked below
+        return part
+    return loss, gathered, update, flag
+
+
+def validate_rank_step_schedule():
+    rng = np.random.default_rng(11)
+    world = 4
+    n_layers = 5
+    rounds = 3
+    per_rank_stats = [[rng.standard_normal(6).astype(np.float32)
+                       for _ in range(n_layers)] for _ in range(world)]
+    bucket = [rng.standard_normal(32).astype(np.float32)
+              for _ in range(world)]
+    results = {}
+    for overlap in (False, True):
+        links = Links(world)
+        rv = Rendezvous(world)
+        outs = [None] * world
+
+        def body(r):
+            comm = Comm(links, r, world)
+            engine = Engine() if overlap else None
+            try:
+                acc = []
+                for _ in range(rounds):
+                    acc.append(rank_step_sim(r, world, rv, comm, engine,
+                                             per_rank_stats[r], bucket[r],
+                                             overlap))
+                return acc
+            finally:
+                if engine:
+                    engine.close()
+        ts = []
+        for r in range(world):
+            t = threading.Thread(target=lambda r=r: outs.__setitem__(r, body(r)))
+            t.start()
+            ts.append(t)
+        for t in ts:
+            t.join(timeout=60)
+            assert not t.is_alive(), f"rank_step sim deadlock (overlap={overlap})"
+        # updates must be bitwise equal across overlap modes
+        results[overlap] = [[step[2] for step in outs[r]] for r in range(world)]
+        # per-layer gathered stats must reconstruct the batched bytes
+        for r in range(world):
+            for step in outs[r]:
+                g = step[1]
+                if overlap:
+                    per_layer = [[p[2] for p in g[l]] for l in range(n_layers)]
+                    recon = [np.concatenate([per_layer[l][src]
+                                             for l in range(n_layers)])
+                             for src in range(world)]
+                else:
+                    recon = [p[2] for p in g]
+                for src in range(world):
+                    want = np.concatenate(per_rank_stats[src])
+                    assert np.array_equal(recon[src], want), (overlap, r, src)
+    for r in range(world):
+        for a, b in zip(results[False][r], results[True][r]):
+            assert np.array_equal(a, b), "overlap changed update bits"
+    print("rank_step overlap schedule: bitwise + termination OK "
+          f"({rounds} rounds x {world} ranks, persistent engines)")
+
+
+def main():
+    rng = np.random.default_rng(7)
+    cases = 0
+    for world in (2, 3, 4):
+        for total in (0, 1, world - 1, 7, 3 * world, 12 * world + 5, 257):
+            inputs = [rng.standard_normal(total).astype(np.float32)
+                      for _ in range(world)]
+            want = star(inputs)
+            # blocking ring
+            outs, links_b = run_world(
+                world, lambda r, L: ring_blocking(Comm(L, r, world), inputs[r]))
+            for r, o in enumerate(outs):
+                assert np.array_equal(o, want), (world, total, r, "blocking")
+            # traffic model (divisible case)
+            if total % world == 0 and total > 0:
+                per = 2 * (world - 1) * (HDR + 4 * total // world)
+                assert links_b.sent == [per] * world, (links_b.sent, per)
+            for stages in (1, 2, 3, 7):
+                def body(r, L):
+                    eng = Engine()
+                    try:
+                        return ring_pipelined(Comm(L, r, world), eng,
+                                              inputs[r], stages)
+                    finally:
+                        eng.close()
+                outs, links_p = run_world(world, body)
+                for r, o in enumerate(outs):
+                    assert np.array_equal(o, want), (world, total, r, stages)
+                cases += 1
+                # pipelined payload bytes == blocking payload bytes up
+                # to chunk-boundary rounding; extra header bytes are
+                # exactly 2*(R-1) per additional stage. Exact when every
+                # stage length divides by R.
+                if total > 0:
+                    S = max(stages, 1)
+                    hdr_delta = HDR * (S - 1) * 2 * (world - 1)
+                    diff = links_p.sent[0] - links_b.sent[0]
+                    if total % (S * world) == 0:
+                        assert diff == hdr_delta, (world, total, stages, diff)
+                    else:
+                        slack = 4 * 2 * (world - 1) * S
+                        assert abs(diff - hdr_delta) <= slack, (
+                            world, total, stages, diff, hdr_delta)
+    print(f"bitwise + traffic + termination OK ({cases} pipelined cases)")
+
+    # Engine FIFO semantics: blocking-after-istart ordering + dropped op.
+    world = 3
+
+    def body(r, L):
+        comm = Comm(L, r, world)
+        eng = Engine()
+        ran = []
+        # "istart" a ring step, never wait it (dropped handle).
+        eng.submit(lambda: ran.append(
+            comm.send_recv((r + 1) % world, np.float32([r]), (r + world - 1) % world)))
+        # blocking call routed through the engine (FIFO after the above).
+        second = wait(eng.submit(lambda: comm.send_recv(
+            (r + 1) % world, np.float32([10 + r]), (r + world - 1) % world)))
+        eng.close()
+        assert len(ran) == 1, "dropped op must still execute"
+        return float(second[0])
+    outs, _ = run_world(world, body)
+    assert outs == [10 + (r + world - 1) % world for r in range(world)], outs
+    print("engine FIFO + dropped-op semantics OK")
+    validate_rank_step_schedule()
+
+
+if __name__ == "__main__":
+    main()
