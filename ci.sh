@@ -96,6 +96,18 @@ echo "== multi-process transport suite (separate OS processes) =="
 # and to serial ranks=1, for SINGD and KFAC, under both strategies.
 timeout "$DIST_TIMEOUT" cargo test -q --test dist_proc
 
+echo "== elastic fault-tolerance / chaos suite =="
+# Checkpoint/resume determinism and elastic regroup, in-process at
+# ranks=4 (tests/dist resume_* and elastic_*) plus the multi-process
+# chaos leg (tests/dist_proc): hard-kill a worker mid-step, survivors
+# re-rendezvous into world 3, reshard from the checkpoint, and the
+# digest must match the uninterrupted resumed run. Every leg runs under
+# the hard timeout — a deadlocked regroup fails fast.
+SINGD_RANKS=4 SINGD_TRANSPORT=local timeout "$DIST_TIMEOUT" cargo test -q --test dist resume_
+SINGD_RANKS=4 SINGD_TRANSPORT=local timeout "$DIST_TIMEOUT" cargo test -q --test dist elastic_
+timeout "$DIST_TIMEOUT" cargo test -q --test dist_proc resume_
+timeout "$DIST_TIMEOUT" cargo test -q --test dist_proc elastic_
+
 if [ "$mode" != "quick" ]; then
     echo "== hotpath bench (smoke) =="
     cargo bench --bench hotpath -- --smoke

@@ -37,6 +37,12 @@ fn base() -> JobConfig {
         ranks: 1,
         dist_strategy: singd::dist::DistStrategy::Replicated,
         transport: singd::dist::Transport::Local,
+        algo: singd::dist::default_algo(),
+        overlap: singd::dist::default_overlap(),
+        resume: None,
+        ckpt: None,
+        ckpt_every: 0,
+        elastic: false,
     }
 }
 

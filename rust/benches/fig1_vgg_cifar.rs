@@ -33,6 +33,12 @@ fn main() {
         ranks: 1,
         dist_strategy: singd::dist::DistStrategy::Replicated,
         transport: singd::dist::Transport::Local,
+        algo: singd::dist::default_algo(),
+        overlap: singd::dist::default_overlap(),
+        resume: None,
+        ckpt: None,
+        ckpt_every: 0,
+        elastic: false,
     };
     // Theorem 1 is a statement about *matched* hyper-parameters: KFAC and
     // IKFAC get identical λ and β₁ so their preconditioners track. λ is

@@ -49,6 +49,12 @@ fn main() {
             ranks: 1,
             dist_strategy: singd::dist::DistStrategy::Replicated,
             transport: singd::dist::Transport::Local,
+            algo: singd::dist::default_algo(),
+            overlap: singd::dist::default_overlap(),
+            resume: None,
+            ckpt: None,
+            ckpt_every: 0,
+            elastic: false,
         };
         let grid = run_grid(&base, &methods, &["bf16"]);
         for (label, res) in &grid {

@@ -56,6 +56,12 @@ fn main() {
             ranks: 1,
             dist_strategy: singd::dist::DistStrategy::Replicated,
             transport: singd::dist::Transport::Local,
+            algo: singd::dist::default_algo(),
+            overlap: singd::dist::default_overlap(),
+            resume: None,
+            ckpt: None,
+            ckpt_every: 0,
+            elastic: false,
         };
         let model = build_model(&cfg, shape, 100, &mut rng);
         let shapes = model.shapes();

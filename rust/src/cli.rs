@@ -61,7 +61,8 @@ USAGE:
   singd train   --config <file.toml> [--out <curves.csv>]
                 [--ranks <R>] [--strategy <replicated|factor-sharded>]
                 [--transport <local|socket>] [--algo <star|ring>]
-                [--overlap <0|1>]
+                [--overlap <0|1>] [--ckpt <file.ckpt>] [--ckpt-every <N>]
+                [--resume <file.ckpt>] [--elastic <0|1>]
   singd sweep   --config <file.toml> [--trials <N>] [--seed <S>]
   singd gcn     [--method <sgd|adamw|kfac|ingd|singd:diag|...>] [--steps <N>]
   singd inspect [--structure <dense|diag|block:k|tril|rankk:k|hier:k|toeplitz>] [--dim <d>]
@@ -85,6 +86,14 @@ either algo, either overlap mode at ranks=R is bitwise identical to
 ranks=1 for power-of-two R dividing the batch size; non-dividing
 R <= batch still train deterministically via the balanced padding
 rule. SINGD_THREADS caps the worker pool all ranks share.
+
+Fault tolerance: --ckpt F --ckpt-every N writes an atomic checkpoint
+(tmp + fsync + rename, last good kept as F.prev) every N steps;
+--resume F restores it and continues bitwise identically to an
+uninterrupted run. --elastic 1 (socket transport + Unix rendezvous
+only; requires --ckpt/--ckpt-every) survives worker death: survivors
+re-rendezvous into a smaller world, reshard optimizer state from the
+last checkpoint, and keep training deterministically.
 
 Regenerating the paper's tables/figures (see DESIGN.md §5):
   cargo bench --bench fig1_vgg_cifar       # Fig. 1 left/center (+ stability)
@@ -178,6 +187,60 @@ fn cmd_train(args: &Args) -> i32 {
                 eprintln!("error: bad --overlap '{ov}' (0 | 1 | on | off)");
                 return 2;
             }
+        }
+    }
+    if let Some(p) = args.get("ckpt") {
+        cfg.ckpt = Some(p.to_string());
+    }
+    if let Some(n) = args.get("ckpt-every") {
+        match n.parse::<usize>() {
+            Ok(v) => cfg.ckpt_every = v,
+            Err(_) => {
+                eprintln!("error: bad --ckpt-every '{n}' (expected a non-negative integer)");
+                return 2;
+            }
+        }
+    }
+    if let Some(p) = args.get("resume") {
+        cfg.resume = Some(p.to_string());
+    }
+    if let Some(e) = args.get("elastic") {
+        match crate::dist::parse_overlap(e) {
+            Some(b) => cfg.elastic = b,
+            None => {
+                eprintln!("error: bad --elastic '{e}' (0 | 1 | on | off)");
+                return 2;
+            }
+        }
+    }
+    // Re-validate the elastic preconditions after flag overrides (the
+    // TOML layer already checked its own combination) so a bad CLI mix
+    // is a clean exit-2, not a driver panic mid-rendezvous.
+    if cfg.elastic {
+        if cfg.transport != crate::dist::Transport::Socket {
+            eprintln!("error: --elastic requires --transport socket");
+            return 2;
+        }
+        if cfg.ckpt.is_none() {
+            eprintln!("error: --elastic requires --ckpt (recovery reloads the last checkpoint)");
+            return 2;
+        }
+        if cfg.ckpt_every == 0 {
+            eprintln!("error: --elastic requires --ckpt-every >= 1");
+            return 2;
+        }
+        if cfg.ranks < 2 {
+            eprintln!("error: --elastic requires --ranks >= 2 (got {})", cfg.ranks);
+            return 2;
+        }
+    }
+    // Fail a bad resume path up front with a readable error; the loader
+    // itself falls back to the .prev sibling, so accept either existing.
+    if let Some(r) = &cfg.resume {
+        let prev = format!("{r}.prev");
+        if !std::path::Path::new(r).exists() && !std::path::Path::new(&prev).exists() {
+            eprintln!("error: --resume checkpoint '{r}' not found (nor '{prev}')");
+            return 2;
         }
     }
     // Catch this here (covers --ranks, [dist] ranks and SINGD_RANKS alike)
@@ -384,6 +447,51 @@ mod tests {
         // error, not a driver assert. (Non-dividing ranks <= batch are
         // allowed: they shard via the balanced padding rule.)
         assert_eq!(run(&sv(&["train", "--config", p, "--ranks", "33"])), 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn train_rejects_bad_fault_tolerance_flags() {
+        let path = std::env::temp_dir().join("singd_cli_ft_test.toml");
+        std::fs::write(&path, "[model]\narch = \"mlp\"\n").unwrap();
+        let p = path.to_str().unwrap();
+        assert_eq!(run(&sv(&["train", "--config", p, "--ckpt-every", "x"])), 2);
+        assert_eq!(run(&sv(&["train", "--config", p, "--elastic", "sideways"])), 2);
+        // A resume path that exists neither as-is nor as .prev.
+        assert_eq!(
+            run(&sv(&["train", "--config", p, "--resume", "/nonexistent/no.ckpt"])),
+            2
+        );
+        // Elastic preconditions, each missing in turn (bare --elastic = on).
+        assert_eq!(run(&sv(&["train", "--config", p, "--elastic"])), 2); // not socket
+        assert_eq!(
+            run(&sv(&["train", "--config", p, "--transport", "socket", "--elastic"])),
+            2
+        ); // no --ckpt
+        assert_eq!(
+            run(&sv(&[
+                "train", "--config", p, "--transport", "socket", "--elastic", "--ckpt",
+                "/tmp/e.ckpt"
+            ])),
+            2
+        ); // ckpt_every = 0
+        assert_eq!(
+            run(&sv(&[
+                "train",
+                "--config",
+                p,
+                "--transport",
+                "socket",
+                "--elastic",
+                "--ckpt",
+                "/tmp/e.ckpt",
+                "--ckpt-every",
+                "2",
+                "--ranks",
+                "1"
+            ])),
+            2
+        ); // ranks < 2
         std::fs::remove_file(&path).ok();
     }
 

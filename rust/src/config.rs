@@ -28,6 +28,9 @@
 //! batch_size = 64
 //! schedule = "cosine:600"
 //! seed = 7
+//! ckpt = "run.ckpt"            # periodic checkpoint path (atomic writes + .prev)
+//! ckpt_every = 50              # checkpoint cadence in steps (0 = never)
+//! resume = "run.ckpt"          # resume bitwise from a checkpoint
 //!
 //! [dist]
 //! ranks = 4                    # default: SINGD_RANKS env, else 1
@@ -35,6 +38,8 @@
 //! transport = "socket"         # local | socket (default: SINGD_TRANSPORT env, else local)
 //! algo = "ring"                # star | ring (default: SINGD_ALGO env, else ring)
 //! overlap = true               # comm/compute overlap (default: SINGD_OVERLAP env, else on)
+//! elastic = true               # survive worker death / admit joiners (socket only;
+//!                              # requires ckpt + ckpt_every >= 1)
 //! ```
 
 use crate::dist::{self, Algo, DistStrategy, Transport};
@@ -238,6 +243,18 @@ pub struct JobConfig {
     /// overlap-invariance contract; the knob trades progress-engine
     /// overhead for hidden collective latency.
     pub overlap: bool,
+    /// Resume from this checkpoint (`[train] resume` / `--resume`); the
+    /// continued run is bitwise identical to an uninterrupted one.
+    pub resume: Option<String>,
+    /// Periodic checkpoint path (`[train] ckpt` / `--ckpt`); writes are
+    /// atomic (tmp + fsync + rename) with a `.prev` last-good sibling.
+    pub ckpt: Option<String>,
+    /// Checkpoint cadence in optimizer steps (`[train] ckpt_every`;
+    /// 0 = never).
+    pub ckpt_every: usize,
+    /// Elastic fault tolerance (`[dist] elastic` / `--elastic`): socket
+    /// transport only, requires `ckpt` + `ckpt_every >= 1` + `ranks >= 2`.
+    pub elastic: bool,
 }
 
 impl JobConfig {
@@ -299,6 +316,59 @@ impl JobConfig {
                 .and_then(dist::parse_overlap)
                 .ok_or_else(|| format!("bad dist.overlap value {v:?} (true | false)"))?,
         };
+        let resume = match t.get("train.resume") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| format!("bad train.resume value {v:?} (expected a string path)"))?
+                    .to_string(),
+            ),
+        };
+        let ckpt = match t.get("train.ckpt") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| format!("bad train.ckpt value {v:?} (expected a string path)"))?
+                    .to_string(),
+            ),
+        };
+        let ckpt_every = match t.get("train.ckpt_every") {
+            None => 0,
+            Some(v) => v.as_usize().ok_or_else(|| {
+                format!("bad train.ckpt_every value {v:?} (expected a non-negative integer)")
+            })?,
+        };
+        let elastic = match t.get("dist.elastic") {
+            None => false,
+            Some(Value::Bool(b)) => *b,
+            Some(v) => return Err(format!("bad dist.elastic value {v:?} (true | false)")),
+        };
+        if elastic {
+            if transport != Transport::Socket {
+                return Err(
+                    "dist.elastic requires dist.transport = \"socket\" (the in-process \
+                     local transport has no processes to lose)"
+                        .into(),
+                );
+            }
+            if ckpt.is_none() {
+                return Err(
+                    "dist.elastic requires train.ckpt (recovery reloads the last checkpoint)"
+                        .into(),
+                );
+            }
+            if ckpt_every == 0 {
+                return Err("dist.elastic requires train.ckpt_every >= 1 (the checkpoint \
+                            cadence bounds the work lost to a failure)"
+                    .into());
+            }
+            if ranks < 2 {
+                return Err(format!(
+                    "dist.elastic requires dist.ranks >= 2 (got {ranks}); a single rank has \
+                     no peers to survive"
+                ));
+            }
+        }
         Ok(JobConfig {
             arch,
             dataset: t.str_or("data.dataset", "cifar100").to_string(),
@@ -317,6 +387,10 @@ impl JobConfig {
             transport,
             algo,
             overlap,
+            resume,
+            ckpt,
+            ckpt_every,
+            elastic,
         })
     }
 
@@ -445,6 +519,43 @@ seed = 7
         assert_eq!(cfg.overlap, dist::default_overlap());
         assert!(JobConfig::from_str_toml("[dist]\noverlap = \"sideways\"\n").is_err());
         assert!(JobConfig::from_str_toml("[dist]\noverlap = 2\n").is_err());
+    }
+
+    #[test]
+    fn train_section_parses_checkpoint_keys() {
+        let toml = "[train]\nckpt = \"run.ckpt\"\nckpt_every = 10\nresume = \"old.ckpt\"\n";
+        let cfg = JobConfig::from_str_toml(toml).unwrap();
+        assert_eq!(cfg.ckpt.as_deref(), Some("run.ckpt"));
+        assert_eq!(cfg.ckpt_every, 10);
+        assert_eq!(cfg.resume.as_deref(), Some("old.ckpt"));
+        // Defaults: no checkpointing, no resume, not elastic.
+        let cfg = JobConfig::from_str_toml("[model]\narch = \"mlp\"\n").unwrap();
+        assert_eq!(cfg.ckpt, None);
+        assert_eq!(cfg.ckpt_every, 0);
+        assert_eq!(cfg.resume, None);
+        assert!(!cfg.elastic);
+        // Wrong types are rejected loudly, not defaulted.
+        assert!(JobConfig::from_str_toml("[train]\nckpt = 3\n").is_err());
+        assert!(JobConfig::from_str_toml("[train]\nckpt_every = \"ten\"\n").is_err());
+        assert!(JobConfig::from_str_toml("[train]\nresume = true\n").is_err());
+    }
+
+    #[test]
+    fn elastic_requires_socket_ckpt_cadence_and_ranks() {
+        let good = "[train]\nckpt = \"e.ckpt\"\nckpt_every = 2\n\
+                    [dist]\nranks = 4\ntransport = \"socket\"\nelastic = true\n";
+        let cfg = JobConfig::from_str_toml(good).unwrap();
+        assert!(cfg.elastic);
+        // Each precondition missing in turn → a loud, specific error.
+        let no_sock = good.replace("transport = \"socket\"", "transport = \"local\"");
+        assert!(JobConfig::from_str_toml(&no_sock).unwrap_err().contains("socket"));
+        let no_ckpt = good.replace("ckpt = \"e.ckpt\"\n", "");
+        assert!(JobConfig::from_str_toml(&no_ckpt).unwrap_err().contains("train.ckpt"));
+        let no_cadence = good.replace("ckpt_every = 2", "ckpt_every = 0");
+        assert!(JobConfig::from_str_toml(&no_cadence).unwrap_err().contains("ckpt_every"));
+        let one_rank = good.replace("ranks = 4", "ranks = 1");
+        assert!(JobConfig::from_str_toml(&one_rank).unwrap_err().contains("ranks"));
+        assert!(JobConfig::from_str_toml("[dist]\nelastic = \"sideways\"\n").is_err());
     }
 
     #[test]

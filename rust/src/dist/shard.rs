@@ -116,6 +116,75 @@ impl ShardPlan {
     }
 }
 
+/// Deal a *canonical* optimizer-state snapshot (serial layout: layers
+/// ascending, `blobs_per_layer` consecutive blobs each) to one rank of a
+/// `world`-sized factor-sharded topology: the returned blobs are exactly
+/// what `rank`'s optimizer ([`round_robin_owner`]-owned layers
+/// ascending) expects from
+/// [`crate::optim::Optimizer::load_state_vectors`]. This is the
+/// resharding primitive of the elastic driver — a checkpoint written at
+/// world R re-deals losslessly to any R′ because the canonical layout is
+/// world-independent.
+pub fn deal_state(
+    canonical: &[Vec<f32>],
+    blobs_per_layer: usize,
+    world: usize,
+    rank: usize,
+) -> Vec<Vec<f32>> {
+    if blobs_per_layer == 0 {
+        return Vec::new();
+    }
+    assert_eq!(
+        canonical.len() % blobs_per_layer,
+        0,
+        "deal_state: {} blobs not divisible by {blobs_per_layer} per layer",
+        canonical.len()
+    );
+    let n_layers = canonical.len() / blobs_per_layer;
+    (0..n_layers)
+        .filter(|&l| round_robin_owner(l, world) == rank)
+        .flat_map(|l| {
+            canonical[l * blobs_per_layer..(l + 1) * blobs_per_layer].iter().cloned()
+        })
+        .collect()
+}
+
+/// Inverse of [`deal_state`]: merge every rank's owned-layer blobs
+/// (`per_rank[r]` = rank `r`'s [`crate::optim::Optimizer::state_vectors`]
+/// snapshot under the factor-sharded strategy) back into the canonical
+/// serial layout. The gather side of a world-R checkpoint save.
+pub fn merge_state(
+    per_rank: &[Vec<Vec<f32>>],
+    blobs_per_layer: usize,
+    n_layers: usize,
+) -> Vec<Vec<f32>> {
+    let world = per_rank.len().max(1);
+    if blobs_per_layer == 0 {
+        return Vec::new();
+    }
+    let mut cursor = vec![0usize; world];
+    let mut out = Vec::with_capacity(n_layers * blobs_per_layer);
+    for l in 0..n_layers {
+        let r = round_robin_owner(l, world);
+        let at = cursor[r];
+        assert!(
+            at + blobs_per_layer <= per_rank[r].len(),
+            "merge_state: rank {r} ran out of blobs at layer {l}"
+        );
+        out.extend(per_rank[r][at..at + blobs_per_layer].iter().cloned());
+        cursor[r] = at + blobs_per_layer;
+    }
+    for (r, &c) in cursor.iter().enumerate() {
+        assert_eq!(
+            c,
+            per_rank[r].len(),
+            "merge_state: rank {r} had {} unconsumed blobs",
+            per_rank[r].len() - c
+        );
+    }
+    out
+}
+
 /// Per-layer dense Kronecker-factor element count `d_i² + d_o²` for
 /// layer shapes `(d_o, d_i)` — the cost model for balanced sharding and
 /// the per-rank memory telemetry of `benches/dist_scaling.rs`.
@@ -156,6 +225,53 @@ mod tests {
         assert_eq!(max_bal, 1000, "LPT must isolate the dominant layer");
         // Deterministic.
         assert_eq!(bal, ShardPlan::balanced(&costs, 4));
+    }
+
+    #[test]
+    fn deal_then_merge_is_identity_for_every_world() {
+        // Canonical snapshot for 7 layers × 3 blobs each, values tagged
+        // (layer, blob) so any mis-deal is visible.
+        let bpl = 3usize;
+        let n_layers = 7usize;
+        let canonical: Vec<Vec<f32>> = (0..n_layers)
+            .flat_map(|l| (0..bpl).map(move |b| vec![l as f32, b as f32, (l * bpl + b) as f32]))
+            .collect();
+        for world in 1..=5usize {
+            let per_rank: Vec<Vec<Vec<f32>>> =
+                (0..world).map(|r| deal_state(&canonical, bpl, world, r)).collect();
+            // Each rank got exactly its owned layers' blobs, ascending.
+            for (r, blobs) in per_rank.iter().enumerate() {
+                let owned: Vec<usize> =
+                    (0..n_layers).filter(|&l| round_robin_owner(l, world) == r).collect();
+                assert_eq!(blobs.len(), owned.len() * bpl, "world {world} rank {r}");
+                for (i, &l) in owned.iter().enumerate() {
+                    assert_eq!(blobs[i * bpl][0], l as f32, "world {world} rank {r}");
+                }
+            }
+            assert_eq!(
+                merge_state(&per_rank, bpl, n_layers),
+                canonical,
+                "world {world}: deal∘merge must be identity"
+            );
+        }
+        // Zero blobs per layer (stateless optimizer) is a no-op.
+        assert!(deal_state(&canonical, 0, 4, 0).is_empty());
+        assert!(merge_state(&[Vec::new(), Vec::new()], 0, n_layers).is_empty());
+    }
+
+    #[test]
+    fn reshard_across_worlds_preserves_canonical_layout() {
+        // The elastic R → R′ path: merge at world 4, re-deal at world 3,
+        // merge again — canonical snapshot unchanged.
+        let bpl = 5usize;
+        let n_layers = 4usize;
+        let canonical: Vec<Vec<f32>> =
+            (0..n_layers * bpl).map(|i| vec![i as f32; 2 + i % 3]).collect();
+        let at4: Vec<Vec<Vec<f32>>> =
+            (0..4).map(|r| deal_state(&canonical, bpl, 4, r)).collect();
+        let merged = merge_state(&at4, bpl, n_layers);
+        let at3: Vec<Vec<Vec<f32>>> = (0..3).map(|r| deal_state(&merged, bpl, 3, r)).collect();
+        assert_eq!(merge_state(&at3, bpl, n_layers), canonical);
     }
 
     #[test]

@@ -55,6 +55,22 @@
 //! "died". `SINGD_SOCK_TIMEOUT_SECS` bounds rendezvous (and, when set,
 //! per-read) waits.
 //!
+//! # Elastic rendezvous v2
+//!
+//! The panic-poisoning above is also the *detection* mechanism for the
+//! elastic layer (PROTOCOL.md §Elastic rendezvous v2): an elastic driver
+//! catches the poison panic, severs its own links so the failure
+//! propagates, and re-rendezvouses into a new **generation** — a fresh
+//! world at a generation-derived sibling endpoint with a
+//! generation-mixed run id. Rank 0 owns membership as the
+//! [`Coordinator`]: it answers [`status`] queries on a `<path>.ctrl`
+//! control endpoint, parks [`join`] requests from new workers, and on
+//! regroup collects survivor [`rejoin`] hellos at a `<path>.r<gen>`
+//! membership endpoint, assigning the new world's ranks (coordinator
+//! first, survivors by old rank, joiners last). Hellos are
+//! generation-stamped, so a straggler from generation `g` can never slip
+//! into generation `g+1`. Coordinator death remains fatal to the world.
+//!
 //! # The `SINGD_RANK` / `SINGD_WORLD` / `SINGD_RENDEZVOUS` contract
 //!
 //! A multi-process world is assembled torchrun-style by re-exec'ing the
@@ -119,7 +135,11 @@ pub const ENV_RUN_ID: &str = "SINGD_RUN_ID";
 pub const ENV_TIMEOUT: &str = "SINGD_SOCK_TIMEOUT_SECS";
 
 const MAGIC: u64 = 0x5349_4e47_4456_0001; // "SINGDV" tag + wire rev
-const PROTO_VERSION: u32 = 1;
+/// Wire revision 2: the hello grew from 28 to 40 bytes (generation +
+/// intent fields — PROTOCOL.md §Elastic rendezvous v2). A v1 peer's
+/// short hello fails the 40-byte read or the version check and is
+/// dropped at handshake, never mid-collective.
+const PROTO_VERSION: u32 = 2;
 /// Sanity bound on a single frame (guards a garbled length prefix from
 /// triggering an absurd allocation).
 const MAX_FRAME: u64 = 1 << 36;
@@ -146,6 +166,22 @@ const ST_BAD_RUN_ID: u32 = 2;
 const ST_BAD_WORLD: u32 = 3;
 const ST_BAD_RANK: u32 = 4;
 const ST_DUP_RANK: u32 = 5;
+/// Generation mismatch: a straggler from a previous membership epoch
+/// dialled a newer world (elastic rendezvous v2).
+const ST_BAD_GEN: u32 = 6;
+
+// Hello intents (elastic rendezvous v2). Data-plane rendezvous uses
+// WORKER; the control endpoint serves STATUS and JOIN; the per-regroup
+// membership endpoint serves REJOIN.
+const INTENT_WORKER: u32 = 0;
+const INTENT_STATUS: u32 = 1;
+const INTENT_JOIN: u32 = 2;
+const INTENT_REJOIN: u32 = 3;
+
+/// Rank sentinel in a REJOIN hello: "new joiner, no previous rank".
+const RANK_NONE: u32 = u32::MAX;
+/// Generation sentinel in a control grant: "world finished, go away".
+const GEN_DONE: u64 = u64::MAX;
 
 fn status_msg(st: u32) -> &'static str {
     match st {
@@ -153,6 +189,7 @@ fn status_msg(st: u32) -> &'static str {
         ST_BAD_WORLD => "world size mismatch",
         ST_BAD_RANK => "rank out of range",
         ST_DUP_RANK => "duplicate rank",
+        ST_BAD_GEN => "stale generation: membership epoch has moved on",
         _ => "unknown handshake failure",
     }
 }
@@ -264,8 +301,34 @@ impl Listener {
     }
 }
 
+/// Parse a `SINGD_SOCK_TIMEOUT_SECS` value: a positive whole second
+/// count. Pure so it is unit-testable without mutating the process
+/// environment (tests run concurrently).
+pub(crate) fn parse_timeout_secs(raw: &str) -> Result<u64, String> {
+    match raw.trim().parse::<u64>() {
+        Ok(0) => Err(format!("malformed value '{raw}': must be >= 1 second")),
+        Ok(v) => Ok(v),
+        Err(_) => Err(format!("malformed value '{raw}' (expected whole seconds, e.g. '30')")),
+    }
+}
+
+/// Parse a `SINGD_RANK`/`SINGD_WORLD`/`SINGD_RUN_ID`-style unsigned env
+/// value. Pure for the same concurrent-test reason as
+/// [`parse_timeout_secs`].
+pub(crate) fn parse_env_u64(key: &str, raw: &str) -> Result<u64, String> {
+    raw.trim()
+        .parse::<u64>()
+        .map_err(|_| format!("{key}: malformed value '{raw}' (expected a non-negative integer)"))
+}
+
 fn timeout_secs() -> Option<u64> {
-    std::env::var(ENV_TIMEOUT).ok().and_then(|v| v.parse::<u64>().ok())
+    let raw = std::env::var(ENV_TIMEOUT).ok()?;
+    match parse_timeout_secs(&raw) {
+        Ok(v) => Some(v),
+        // A malformed timeout silently falling back to "no timeout"
+        // turns a typo into an unbounded hang; fail loudly instead.
+        Err(e) => panic!("dist[socket]: {ENV_TIMEOUT}: {e}"),
+    }
 }
 
 /// Deadline for assembling the world (accept/connect retries).
@@ -278,6 +341,57 @@ fn rendezvous_timeout() -> Duration {
 /// test timeout.
 fn read_timeout() -> Option<Duration> {
     timeout_secs().map(|s| Duration::from_secs(s.max(1)))
+}
+
+/// Attach context to an I/O error (which endpoint, which phase) so a
+/// failed dial or bind names its cause instead of a bare `ECONNREFUSED`.
+fn io_ctx(e: io::Error, what: &str) -> io::Error {
+    io::Error::new(e.kind(), format!("{what}: {e}"))
+}
+
+/// SplitMix64: the jitter hash behind [`Backoff`]. Deterministic — no
+/// wall-clock entropy anywhere in the transport (the cross-transport
+/// conformance suite replays runs bit-exactly).
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Bounded exponential backoff with deterministic per-rank jitter, used
+/// by every dial loop (rendezvous, mesh, rejoin). The delay for attempt
+/// `n` is drawn from `[cap/2, cap]` of `base << n` (clamped to
+/// `cap_ms`), with the draw keyed on `salt ^ n` — so a thundering herd
+/// of ranks re-dialling a reborn coordinator decorrelates without any
+/// wall-clock randomness.
+pub(crate) struct Backoff {
+    attempt: u32,
+    base_ms: u64,
+    cap_ms: u64,
+    salt: u64,
+}
+
+impl Backoff {
+    /// A dial backoff starting at `base_ms` and capped at `cap_ms`,
+    /// jitter-keyed on `salt` (callers pass their rank).
+    pub(crate) fn new(base_ms: u64, cap_ms: u64, salt: u64) -> Backoff {
+        Backoff { attempt: 0, base_ms: base_ms.max(1), cap_ms: cap_ms.max(1), salt }
+    }
+
+    /// Delay before the next dial attempt; each call advances the
+    /// schedule. Deterministic for a fixed `(base, cap, salt)`.
+    pub(crate) fn next_delay(&mut self) -> Duration {
+        let shift = self.attempt.min(16);
+        self.attempt = self.attempt.saturating_add(1);
+        let exp = self.base_ms.saturating_mul(1u64 << shift).min(self.cap_ms);
+        // Jitter in [exp/2, exp]: full decorrelation while keeping the
+        // exponential envelope (delay never exceeds `exp`).
+        let half = (exp / 2).max(1);
+        let jit = splitmix64(self.salt ^ self.attempt as u64) % (exp - half + 1).max(1);
+        Duration::from_millis(half + jit)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -457,15 +571,57 @@ fn read_frame(s: &mut Stream) -> io::Result<(u8, u64, Vec<u8>)> {
 // ---------------------------------------------------------------------
 // Handshake.
 
-fn write_hello(s: &mut Stream, run_id: u64, world: usize, rank: usize) -> io::Result<()> {
-    let mut hello = [0u8; 28];
+/// Decoded 40-byte v2 hello (PROTOCOL.md §Elastic rendezvous v2):
+/// `magic u64 | version u32 | run_id u64 | world u32 | rank u32 |
+/// gen u64 | intent u32`, all little-endian.
+struct Hello {
+    run_id: u64,
+    world: u32,
+    rank: u32,
+    gen: u64,
+    intent: u32,
+}
+
+fn write_hello(
+    s: &mut Stream,
+    run_id: u64,
+    world: usize,
+    rank: u32,
+    gen: u64,
+    intent: u32,
+) -> io::Result<()> {
+    let mut hello = [0u8; 40];
     hello[0..8].copy_from_slice(&MAGIC.to_le_bytes());
     hello[8..12].copy_from_slice(&PROTO_VERSION.to_le_bytes());
     hello[12..20].copy_from_slice(&run_id.to_le_bytes());
     hello[20..24].copy_from_slice(&(world as u32).to_le_bytes());
-    hello[24..28].copy_from_slice(&(rank as u32).to_le_bytes());
+    hello[24..28].copy_from_slice(&rank.to_le_bytes());
+    hello[28..36].copy_from_slice(&gen.to_le_bytes());
+    hello[36..40].copy_from_slice(&intent.to_le_bytes());
     s.write_all(&hello)?;
     s.flush()
+}
+
+/// Read + validate the fixed fields of a v2 hello (magic, version).
+/// A v1 peer's 28-byte hello either stalls the 40-byte read (bounded by
+/// the caller's read timeout) or fails the version check — it is never
+/// half-interpreted.
+fn read_hello(s: &mut Stream) -> io::Result<Hello> {
+    let mut hello = [0u8; 40];
+    s.read_exact(&mut hello)?;
+    let magic = u64::from_le_bytes(hello[0..8].try_into().unwrap());
+    let version = u32::from_le_bytes(hello[8..12].try_into().unwrap());
+    if magic != MAGIC || version != PROTO_VERSION {
+        // Not even speaking our protocol: drop without a reply.
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic/version"));
+    }
+    Ok(Hello {
+        run_id: u64::from_le_bytes(hello[12..20].try_into().unwrap()),
+        world: u32::from_le_bytes(hello[20..24].try_into().unwrap()),
+        rank: u32::from_le_bytes(hello[24..28].try_into().unwrap()),
+        gen: u64::from_le_bytes(hello[28..36].try_into().unwrap()),
+        intent: u32::from_le_bytes(hello[36..40].try_into().unwrap()),
+    })
 }
 
 fn write_welcome(s: &mut Stream, status: u32) -> io::Result<()> {
@@ -476,28 +632,56 @@ fn write_welcome(s: &mut Stream, status: u32) -> io::Result<()> {
     s.flush()
 }
 
-/// Server side: read and validate one peer's hello; reply with a status.
-/// Returns the peer's rank on success.
+/// Write the unified 28-byte control/grant reply frame:
+/// `magic u64 | status u32 | world u32 | gen u64 | extra u32` —
+/// `extra` is the run state in a STATUS reply, the assigned rank in a
+/// membership grant, and `u32::MAX` in a regroup announcement.
+fn write_reply28(s: &mut Stream, status: u32, world: u32, gen: u64, extra: u32) -> io::Result<()> {
+    let mut w = [0u8; 28];
+    w[0..8].copy_from_slice(&MAGIC.to_le_bytes());
+    w[8..12].copy_from_slice(&status.to_le_bytes());
+    w[12..16].copy_from_slice(&world.to_le_bytes());
+    w[16..24].copy_from_slice(&gen.to_le_bytes());
+    w[24..28].copy_from_slice(&extra.to_le_bytes());
+    s.write_all(&w)?;
+    s.flush()
+}
+
+/// Read a 28-byte control/grant reply; returns `(status, world, gen,
+/// extra)` after validating the magic.
+fn read_reply28(s: &mut Stream) -> io::Result<(u32, u32, u64, u32)> {
+    let mut w = [0u8; 28];
+    s.read_exact(&mut w)?;
+    let magic = u64::from_le_bytes(w[0..8].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad control reply"));
+    }
+    Ok((
+        u32::from_le_bytes(w[8..12].try_into().unwrap()),
+        u32::from_le_bytes(w[12..16].try_into().unwrap()),
+        u64::from_le_bytes(w[16..24].try_into().unwrap()),
+        u32::from_le_bytes(w[24..28].try_into().unwrap()),
+    ))
+}
+
+/// Server side: read and validate one peer's data-plane hello; reply
+/// with a status. Returns the peer's rank on success.
 fn handshake_server(
     s: &mut Stream,
     world: usize,
     run_id: u64,
+    gen: u64,
     taken: &[bool],
 ) -> io::Result<usize> {
-    let mut hello = [0u8; 28];
-    s.read_exact(&mut hello)?;
-    let magic = u64::from_le_bytes(hello[0..8].try_into().unwrap());
-    let version = u32::from_le_bytes(hello[8..12].try_into().unwrap());
-    if magic != MAGIC || version != PROTO_VERSION {
-        // Not even speaking our protocol: drop without a reply.
-        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad magic/version"));
-    }
-    let peer_run = u64::from_le_bytes(hello[12..20].try_into().unwrap());
-    let peer_world = u32::from_le_bytes(hello[20..24].try_into().unwrap()) as usize;
-    let peer_rank = u32::from_le_bytes(hello[24..28].try_into().unwrap()) as usize;
-    let status = if peer_run != run_id {
+    let h = read_hello(s)?;
+    let peer_rank = h.rank as usize;
+    let status = if h.run_id != run_id {
         ST_BAD_RUN_ID
-    } else if peer_world != world {
+    } else if h.gen != gen || h.intent != INTENT_WORKER {
+        // A straggler from another membership epoch, or a control-plane
+        // intent aimed at the data endpoint.
+        ST_BAD_GEN
+    } else if h.world as usize != world {
         ST_BAD_WORLD
     } else if peer_rank == 0 || peer_rank >= world {
         ST_BAD_RANK
@@ -516,14 +700,20 @@ fn handshake_server(
 
 /// Rank 0: bind the endpoint and accept + validate `world − 1` peers.
 /// Returns streams indexed by `peer rank − 1`.
-fn accept_peers(ep: &Endpoint, world: usize, run_id: u64) -> io::Result<Vec<Stream>> {
+fn accept_peers(ep: &Endpoint, world: usize, run_id: u64, gen: u64) -> io::Result<Vec<Stream>> {
     let listener = match ep {
         Endpoint::Unix(path) => {
             // A stale socket file from a dead run blocks bind; remove it.
             let _ = std::fs::remove_file(path);
-            Listener::Unix(UnixListener::bind(path)?)
+            Listener::Unix(
+                UnixListener::bind(path)
+                    .map_err(|e| io_ctx(e, &format!("bind rendezvous unix:{path}")))?,
+            )
         }
-        Endpoint::Tcp(addr) => Listener::Tcp(TcpListener::bind(addr)?),
+        Endpoint::Tcp(addr) => Listener::Tcp(
+            TcpListener::bind(addr)
+                .map_err(|e| io_ctx(e, &format!("bind rendezvous tcp:{addr}")))?,
+        ),
     };
     listener.set_nonblocking(true)?;
     let deadline = Instant::now() + rendezvous_timeout();
@@ -549,7 +739,7 @@ fn accept_peers(ep: &Endpoint, world: usize, run_id: u64) -> io::Result<Vec<Stre
                 // budget so a connected-but-silent peer cannot stall past
                 // the deadline.
                 s.set_read_timeout(Some(budget))?;
-                match handshake_server(&mut s, world, run_id, &taken) {
+                match handshake_server(&mut s, world, run_id, gen, &taken) {
                     Ok(r) => {
                         taken[r] = true;
                         slots[r - 1] = Some(s);
@@ -580,51 +770,72 @@ fn accept_peers(ep: &Endpoint, world: usize, run_id: u64) -> io::Result<Vec<Stre
     Ok(links)
 }
 
-/// Rank > 0: dial the rendezvous endpoint (retrying until the server
-/// binds) and run the hello/welcome handshake.
-fn dial_root(ep: &Endpoint, rank: usize, world: usize, run_id: u64) -> io::Result<Stream> {
-    let deadline = Instant::now() + rendezvous_timeout();
+/// An error kind a dial loop should retry on: the server has not bound
+/// yet (or a stale socket file was just unlinked).
+fn dial_retryable(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::NotFound
+            | io::ErrorKind::ConnectionRefused
+            | io::ErrorKind::ConnectionReset
+            | io::ErrorKind::AddrNotAvailable
+    )
+}
+
+/// Dial `ep` with bounded exponential backoff (deterministic jitter
+/// keyed on `salt`) until `deadline`; retries only on
+/// [`dial_retryable`] kinds, and tags terminal errors with `what`.
+fn dial_backoff(
+    ep: &Endpoint,
+    deadline: Instant,
+    mut backoff: Backoff,
+    what: &str,
+) -> io::Result<Stream> {
     loop {
         let attempt = match ep {
             Endpoint::Unix(path) => UnixStream::connect(path).map(Stream::Unix),
             Endpoint::Tcp(addr) => TcpStream::connect(addr).map(Stream::Tcp),
         };
         match attempt {
-            Ok(mut s) => {
+            Ok(s) => {
                 s.set_nodelay();
-                s.set_read_timeout(Some(rendezvous_timeout()))?;
-                write_hello(&mut s, run_id, world, rank)?;
-                let mut w = [0u8; 12];
-                s.read_exact(&mut w)?;
-                let magic = u64::from_le_bytes(w[0..8].try_into().unwrap());
-                let status = u32::from_le_bytes(w[8..12].try_into().unwrap());
-                if magic != MAGIC {
-                    return Err(io::Error::new(io::ErrorKind::InvalidData, "bad welcome"));
-                }
-                if status != ST_OK {
-                    return Err(io::Error::new(
-                        io::ErrorKind::ConnectionRefused,
-                        format!("handshake rejected: {}", status_msg(status)),
-                    ));
-                }
-                s.set_read_timeout(read_timeout())?;
                 return Ok(s);
             }
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    io::ErrorKind::NotFound
-                        | io::ErrorKind::ConnectionRefused
-                        | io::ErrorKind::ConnectionReset
-                        | io::ErrorKind::AddrNotAvailable
-                ) && Instant::now() < deadline =>
-            {
-                // Server not up yet; retry until the rendezvous deadline.
-                std::thread::sleep(Duration::from_millis(5));
+            Err(e) if dial_retryable(&e) && Instant::now() < deadline => {
+                // Server not up yet; back off (exponentially, jittered)
+                // and retry until the rendezvous deadline.
+                let delay = backoff.next_delay();
+                let left = deadline.saturating_duration_since(Instant::now());
+                std::thread::sleep(delay.min(left));
             }
-            Err(e) => return Err(e),
+            Err(e) => return Err(io_ctx(e, what)),
         }
     }
+}
+
+/// Rank > 0: dial the rendezvous endpoint (retrying with backoff until
+/// the server binds) and run the hello/welcome handshake.
+fn dial_root(ep: &Endpoint, rank: usize, world: usize, run_id: u64, gen: u64) -> io::Result<Stream> {
+    let deadline = Instant::now() + rendezvous_timeout();
+    let what = format!("rank {rank}: dial rendezvous {ep:?}");
+    let mut s = dial_backoff(ep, deadline, Backoff::new(2, 200, rank as u64), &what)?;
+    s.set_read_timeout(Some(rendezvous_timeout()))?;
+    write_hello(&mut s, run_id, world, rank as u32, gen, INTENT_WORKER)?;
+    let mut w = [0u8; 12];
+    s.read_exact(&mut w).map_err(|e| io_ctx(e, &format!("rank {rank}: read welcome")))?;
+    let magic = u64::from_le_bytes(w[0..8].try_into().unwrap());
+    let status = u32::from_le_bytes(w[8..12].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad welcome"));
+    }
+    if status != ST_OK {
+        return Err(io::Error::new(
+            io::ErrorKind::ConnectionRefused,
+            format!("handshake rejected: {}", status_msg(status)),
+        ));
+    }
+    s.set_read_timeout(read_timeout())?;
+    Ok(s)
 }
 
 // ---------------------------------------------------------------------
@@ -660,37 +871,16 @@ fn mesh_listener(ep: &Endpoint, rank: usize, links: &[Stream]) -> io::Result<(Li
 fn dial_mesh_peer(addr: &str, my_rank: usize, run_id: u64) -> io::Result<Stream> {
     let ep = Endpoint::parse(addr);
     let deadline = Instant::now() + rendezvous_timeout();
-    loop {
-        let attempt = match &ep {
-            Endpoint::Unix(path) => UnixStream::connect(path).map(Stream::Unix),
-            Endpoint::Tcp(a) => TcpStream::connect(a).map(Stream::Tcp),
-        };
-        match attempt {
-            Ok(mut s) => {
-                s.set_nodelay();
-                let mut hello = [0u8; 20];
-                hello[0..8].copy_from_slice(&MAGIC.to_le_bytes());
-                hello[8..16].copy_from_slice(&run_id.to_le_bytes());
-                hello[16..20].copy_from_slice(&(my_rank as u32).to_le_bytes());
-                s.write_all(&hello)?;
-                s.flush()?;
-                s.set_read_timeout(read_timeout())?;
-                return Ok(s);
-            }
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    io::ErrorKind::NotFound
-                        | io::ErrorKind::ConnectionRefused
-                        | io::ErrorKind::ConnectionReset
-                        | io::ErrorKind::AddrNotAvailable
-                ) && Instant::now() < deadline =>
-            {
-                std::thread::sleep(Duration::from_millis(2));
-            }
-            Err(e) => return Err(e),
-        }
-    }
+    let what = format!("rank {my_rank}: dial mesh peer {addr}");
+    let mut s = dial_backoff(&ep, deadline, Backoff::new(1, 100, my_rank as u64), &what)?;
+    let mut hello = [0u8; 20];
+    hello[0..8].copy_from_slice(&MAGIC.to_le_bytes());
+    hello[8..16].copy_from_slice(&run_id.to_le_bytes());
+    hello[16..20].copy_from_slice(&(my_rank as u32).to_le_bytes());
+    s.write_all(&hello)?;
+    s.flush()?;
+    s.set_read_timeout(read_timeout())?;
+    Ok(s)
 }
 
 /// Accept mesh connections from every higher-ranked peer, validating the
@@ -848,15 +1038,46 @@ impl SocketComm {
         algo: Algo,
         overlap: bool,
     ) -> io::Result<SocketComm> {
+        Self::connect_impl(rank, world, rendezvous, run_id, 0, algo, overlap)
+    }
+
+    /// Join generation `gen` of an elastic world (PROTOCOL.md §Elastic
+    /// rendezvous v2): the data plane of generation `g > 0` lives at the
+    /// sibling endpoint [`elastic_data_endpoint`] under the
+    /// generation-mixed run id [`mix_run_id`], so stragglers from an
+    /// older epoch can never handshake into a newer one. Generation 0 is
+    /// exactly [`SocketComm::connect_opts`]. Unix rendezvous only.
+    pub fn connect_elastic(
+        rank: usize,
+        world: usize,
+        rendezvous: &str,
+        run_id: u64,
+        gen: u64,
+        algo: Algo,
+        overlap: bool,
+    ) -> io::Result<SocketComm> {
+        let ep = elastic_data_endpoint(rendezvous, gen)?;
+        Self::connect_impl(rank, world, &ep, mix_run_id(run_id, gen), gen, algo, overlap)
+    }
+
+    fn connect_impl(
+        rank: usize,
+        world: usize,
+        rendezvous: &str,
+        run_id: u64,
+        gen: u64,
+        algo: Algo,
+        overlap: bool,
+    ) -> io::Result<SocketComm> {
         assert!(world >= 1, "dist[socket]: world size must be >= 1");
         assert!(rank < world, "dist[socket]: rank {rank} out of range for world {world}");
         let ep = Endpoint::parse(rendezvous);
         let links = if world == 1 {
             Vec::new()
         } else if rank == 0 {
-            accept_peers(&ep, world, run_id)?
+            accept_peers(&ep, world, run_id, gen)?
         } else {
-            vec![dial_root(&ep, rank, world, run_id)?]
+            vec![dial_root(&ep, rank, world, run_id, gen)?]
         };
         let core = SocketCore {
             rank,
@@ -1034,6 +1255,10 @@ fn duplex_exchange(
     // indefinitely and rely on EOF for peer death).
     let stall_limit = read_timeout();
     let mut last_progress = Instant::now();
+    // Idle-spin backoff: 100 µs doubling to a 2 ms cap, reset to 100 µs
+    // whenever either direction makes progress — short stalls stay
+    // low-latency, long stalls stop burning a core.
+    let mut idle_us: u64 = 100;
     let mut sent = 0usize;
     let mut hdr = [0u8; FRAME_HEADER_BYTES];
     let mut got_hdr = 0usize;
@@ -1105,6 +1330,7 @@ fn duplex_exchange(
         }
         if progressed {
             last_progress = Instant::now();
+            idle_us = 100;
         } else {
             if stall_limit.is_some_and(|t| last_progress.elapsed() >= t) {
                 peer_failed(
@@ -1115,7 +1341,8 @@ fn duplex_exchange(
                     ),
                 );
             }
-            std::thread::sleep(Duration::from_micros(200));
+            std::thread::sleep(Duration::from_micros(idle_us));
+            idle_us = (idle_us * 2).min(2000);
         }
     }
     send.set_nonblocking(false).unwrap_or_else(|e| peer_failed(to, &e));
@@ -1385,15 +1612,32 @@ pub struct WorkerEnv {
 /// `Some` iff this process was launched as a worker rank (the
 /// `SINGD_RANK` env contract). Read fresh on every call — launchers and
 /// tests manipulate these variables.
+///
+/// A *present but malformed* variable panics loudly (naming the
+/// variable and value) instead of silently demoting the process to a
+/// non-worker — a typo'd `SINGD_RANK` must not make a worker launch its
+/// own world.
 pub fn worker_env() -> Option<WorkerEnv> {
-    let rank = std::env::var(ENV_RANK).ok()?.parse::<usize>().ok()?;
-    let world = std::env::var(ENV_WORLD).ok()?.parse::<usize>().ok()?;
-    let rendezvous = std::env::var(ENV_RENDEZVOUS).ok()?;
-    let run_id =
-        std::env::var(ENV_RUN_ID).ok().and_then(|v| v.parse::<u64>().ok()).unwrap_or(0);
-    if rank >= world {
-        return None;
-    }
+    let rank_raw = std::env::var(ENV_RANK).ok()?;
+    let rank = parse_env_u64(ENV_RANK, &rank_raw)
+        .unwrap_or_else(|e| panic!("dist[socket]: {e}")) as usize;
+    let world_raw = std::env::var(ENV_WORLD).unwrap_or_else(|_| {
+        panic!("dist[socket]: {ENV_RANK} is set but {ENV_WORLD} is missing")
+    });
+    let world =
+        parse_env_u64(ENV_WORLD, &world_raw).unwrap_or_else(|e| panic!("dist[socket]: {e}"))
+            as usize;
+    let rendezvous = std::env::var(ENV_RENDEZVOUS).unwrap_or_else(|_| {
+        panic!("dist[socket]: {ENV_RANK} is set but {ENV_RENDEZVOUS} is missing")
+    });
+    let run_id = match std::env::var(ENV_RUN_ID) {
+        Ok(raw) => parse_env_u64(ENV_RUN_ID, &raw).unwrap_or_else(|e| panic!("dist[socket]: {e}")),
+        Err(_) => 0,
+    };
+    assert!(
+        rank < world,
+        "dist[socket]: {ENV_RANK}={rank} is out of range for {ENV_WORLD}={world}"
+    );
     Some(WorkerEnv { rank, world, rendezvous, run_id })
 }
 
@@ -1473,6 +1717,23 @@ pub fn wait_workers(children: &mut Vec<std::process::Child>) -> Result<(), Strin
     }
 }
 
+/// Reap worker processes *leniently*: collect (don't propagate) failure
+/// descriptions. The elastic driver uses this at the end of a run where
+/// some workers died by design — a chaos-killed rank's non-zero exit is
+/// an expected outcome there, not a launcher error.
+pub fn wait_workers_lenient(children: &mut Vec<std::process::Child>) -> Vec<String> {
+    let mut errs = Vec::new();
+    for (i, c) in children.iter_mut().enumerate() {
+        match c.wait() {
+            Ok(st) if st.success() => {}
+            Ok(st) => errs.push(format!("worker rank {} exited with {st}", i + 1)),
+            Err(e) => errs.push(format!("worker rank {}: wait failed: {e}", i + 1)),
+        }
+    }
+    children.clear();
+    errs
+}
+
 /// Run `world` SPMD rank bodies over a real socket world inside this
 /// process under the default collective algorithm and overlap mode; see
 /// [`run_ranks_socket_with`].
@@ -1529,6 +1790,435 @@ where
                 .expect("run_ranks_socket: rank produced no result")
         })
         .collect()
+}
+
+// ---------------------------------------------------------------------
+// Elastic rendezvous v2: generation-stamped membership (PROTOCOL.md
+// §Elastic rendezvous v2). Rank 0 owns membership as the [`Coordinator`];
+// survivors and joiners re-rendezvous through [`rejoin`] / [`join`], and
+// anyone can probe the world with [`status`].
+
+/// Run state advertised in a [`status`] reply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunState {
+    /// Training is progressing under the advertised generation.
+    Running,
+    /// A membership regroup is being negotiated.
+    Regrouping,
+    /// The run has finished; joining is pointless.
+    Done,
+}
+
+impl RunState {
+    fn to_u32(self) -> u32 {
+        match self {
+            RunState::Running => 0,
+            RunState::Regrouping => 1,
+            RunState::Done => 2,
+        }
+    }
+
+    fn from_u32(v: u32) -> io::Result<RunState> {
+        match v {
+            0 => Ok(RunState::Running),
+            1 => Ok(RunState::Regrouping),
+            2 => Ok(RunState::Done),
+            _ => Err(io::Error::new(io::ErrorKind::InvalidData, "bad run state in status reply")),
+        }
+    }
+}
+
+/// A [`status`] query's answer: the coordinator's view of the world.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorldStatus {
+    /// Current world size.
+    pub world: usize,
+    /// Current membership generation.
+    pub gen: u64,
+    /// Current run state.
+    pub state: RunState,
+}
+
+/// A rank's identity in a regrouped world: the outcome of
+/// [`Coordinator::regroup`], [`rejoin`] or [`join`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Membership {
+    /// This process's rank in the new world.
+    pub rank: usize,
+    /// The new world size.
+    pub world: usize,
+    /// The membership generation the grant is for.
+    pub gen: u64,
+}
+
+/// Derive the Unix socket path of an elastic sibling endpoint. Elastic
+/// mode is Unix-only: TCP endpoints cannot derive per-generation
+/// sibling addresses, so they are rejected loudly here.
+fn unix_base(rendezvous: &str, what: &str) -> io::Result<String> {
+    match Endpoint::parse(rendezvous) {
+        Endpoint::Unix(path) => Ok(path),
+        Endpoint::Tcp(addr) => Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!(
+                "elastic {what} requires a unix: rendezvous endpoint \
+                 (tcp:{addr} cannot derive per-generation sibling endpoints)"
+            ),
+        )),
+    }
+}
+
+/// The data-plane rendezvous endpoint of generation `gen`: the base
+/// endpoint for generation 0, the sibling `unix:<path>.g<gen>` after.
+/// Mesh listener paths derive from this base, so each generation's mesh
+/// is automatically disjoint from its predecessors'.
+pub fn elastic_data_endpoint(rendezvous: &str, gen: u64) -> io::Result<String> {
+    if gen == 0 {
+        return Ok(rendezvous.to_string());
+    }
+    Ok(format!("unix:{}.g{gen}", unix_base(rendezvous, "data plane")?))
+}
+
+/// Mix a membership generation into a run id (SplitMix64-style odd
+/// multiplier), so a straggler's data-plane hello from generation `g`
+/// can never pass the handshake of generation `g' ≠ g` even if the
+/// endpoints were somehow confused. Generation 0 is the identity —
+/// non-elastic runs are untouched.
+pub fn mix_run_id(run_id: u64, gen: u64) -> u64 {
+    run_id ^ gen.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
+fn ctrl_endpoint(base: &str) -> String {
+    format!("{base}.ctrl")
+}
+
+fn membership_endpoint(base: &str, gen: u64) -> String {
+    format!("{base}.r{gen}")
+}
+
+/// Coordinator-side shared view of the world, advertised over `/status`.
+struct CtrlShared {
+    world: u32,
+    gen: u64,
+    state: RunState,
+}
+
+/// Rank 0's membership authority (elastic rendezvous v2). Owns the
+/// `<path>.ctrl` control endpoint: a background thread answers
+/// [`status`] queries and parks [`join`] requests; [`Coordinator::regroup`]
+/// negotiates a new generation after a failure (or to admit joiners).
+/// The coordinator itself is the fixed point of the protocol — its death
+/// is fatal to the world, by design (see the module docs).
+pub struct Coordinator {
+    base: String,
+    run_id: u64,
+    shared: Arc<Mutex<CtrlShared>>,
+    parked: Arc<Mutex<Vec<Stream>>>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Bind the control endpoint for an elastic world of initial size
+    /// `world` and start answering status/join traffic. Unix rendezvous
+    /// endpoints only.
+    pub fn new(rendezvous: &str, run_id: u64, world: usize) -> io::Result<Coordinator> {
+        let base = unix_base(rendezvous, "coordinator")?;
+        let ctrl = ctrl_endpoint(&base);
+        // A stale control socket from a dead run blocks bind; remove it.
+        let _ = std::fs::remove_file(&ctrl);
+        let listener = UnixListener::bind(&ctrl)
+            .map_err(|e| io_ctx(e, &format!("bind control endpoint unix:{ctrl}")))?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Mutex::new(CtrlShared {
+            world: world as u32,
+            gen: 0,
+            state: RunState::Running,
+        }));
+        let parked: Arc<Mutex<Vec<Stream>>> = Arc::new(Mutex::new(Vec::new()));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let (sh, pk, st) = (Arc::clone(&shared), Arc::clone(&parked), Arc::clone(&stop));
+        let thread = std::thread::Builder::new()
+            .name("singd-elastic-ctrl".into())
+            .spawn(move || ctrl_serve(listener, run_id, sh, pk, st))
+            .map_err(|e| io_ctx(e, "spawn control thread"))?;
+        Ok(Coordinator { base, run_id, shared, parked, stop, thread: Some(thread) })
+    }
+
+    /// True iff a [`join`] request is parked at the control endpoint —
+    /// the elastic driver polls this once per step (rank 0 folds it into
+    /// a scalar exchange) and triggers a regroup to admit the joiner.
+    pub fn join_pending(&self) -> bool {
+        !self.parked.lock().unwrap_or_else(|e| e.into_inner()).is_empty()
+    }
+
+    /// Negotiate membership generation `gen`: announce to parked
+    /// joiners, collect survivor/joiner hellos at the per-generation
+    /// membership endpoint until the arrival quiesce window closes, and
+    /// grant the new world's ranks (coordinator first, survivors by old
+    /// rank, joiners last, in arrival order). Returns this process's
+    /// (rank 0) membership in the new world.
+    pub fn regroup(&self, gen: u64) -> io::Result<Membership> {
+        let old_world = {
+            let mut sh = self.shared.lock().unwrap_or_else(|e| e.into_inner());
+            sh.state = RunState::Regrouping;
+            sh.world as usize
+        };
+        let mpath = membership_endpoint(&self.base, gen);
+        let _ = std::fs::remove_file(&mpath);
+        let listener = UnixListener::bind(&mpath)
+            .map_err(|e| io_ctx(e, &format!("bind membership endpoint unix:{mpath}")))?;
+        listener.set_nonblocking(true)?;
+        // Announce the regroup to parked joiners; each then dials the
+        // membership endpoint like a survivor (with RANK_NONE).
+        let mut n_join = 0usize;
+        for mut s in self.parked.lock().unwrap_or_else(|e| e.into_inner()).drain(..) {
+            if write_reply28(&mut s, ST_OK, 0, gen, u32::MAX).is_ok() {
+                n_join += 1;
+            }
+            s.shutdown();
+        }
+        // Quiesce-collect hellos: the window starts QUIESCE after bind,
+        // extends QUIESCE past every arrival, is capped by the rendezvous
+        // deadline, and closes early once every possible member (all
+        // old_world − 1 survivors + every announced joiner) has arrived.
+        const QUIESCE: Duration = Duration::from_millis(1500);
+        let hard_deadline = Instant::now() + rendezvous_timeout();
+        let mut window = Instant::now() + QUIESCE;
+        let mut survivors: Vec<(usize, Stream)> = Vec::new();
+        let mut joiners: Vec<Stream> = Vec::new();
+        loop {
+            let now = Instant::now();
+            if now >= window.min(hard_deadline) {
+                break;
+            }
+            if survivors.len() + joiners.len() == old_world - 1 + n_join {
+                break;
+            }
+            match listener.accept() {
+                Ok((s, _)) => {
+                    let mut s = Stream::Unix(s);
+                    s.set_nonblocking(false)?;
+                    s.set_read_timeout(Some(Duration::from_secs(5)))?;
+                    match read_hello(&mut s) {
+                        Ok(h)
+                            if h.run_id == self.run_id
+                                && h.gen == gen
+                                && h.intent == INTENT_REJOIN =>
+                        {
+                            if h.rank == RANK_NONE {
+                                joiners.push(s);
+                                window = Instant::now() + QUIESCE;
+                            } else {
+                                let r = h.rank as usize;
+                                let dup = survivors.iter().any(|(or, _)| *or == r);
+                                if r == 0 || r >= old_world || dup {
+                                    let _ = write_reply28(&mut s, ST_BAD_RANK, 0, gen, 0);
+                                    s.shutdown();
+                                } else {
+                                    survivors.push((r, s));
+                                    window = Instant::now() + QUIESCE;
+                                }
+                            }
+                        }
+                        Ok(_) => {
+                            let _ = write_reply28(&mut s, ST_BAD_GEN, 0, gen, 0);
+                            s.shutdown();
+                        }
+                        Err(_) => s.shutdown(),
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(io_ctx(e, "accept membership hello")),
+            }
+        }
+        let _ = std::fs::remove_file(&mpath);
+        // Assign the new world: coordinator keeps rank 0, survivors sort
+        // by old rank (a deterministic, shard-map-friendly order),
+        // joiners follow in arrival order.
+        survivors.sort_by_key(|(r, _)| *r);
+        let new_world = 1 + survivors.len() + joiners.len();
+        let mut new_rank = 1u32;
+        for (_, mut s) in survivors.into_iter().chain(joiners.into_iter().map(|s| (0usize, s))) {
+            // A grant that fails to send means that member died between
+            // hello and grant; it simply misses the generation (and the
+            // data-plane rendezvous will time out if it was counted —
+            // the next regroup excises it).
+            let _ = write_reply28(&mut s, ST_OK, new_world as u32, gen, new_rank);
+            s.shutdown();
+            new_rank += 1;
+        }
+        let mut sh = self.shared.lock().unwrap_or_else(|e| e.into_inner());
+        sh.world = new_world as u32;
+        sh.gen = gen;
+        sh.state = RunState::Running;
+        Ok(Membership { rank: 0, world: new_world, gen })
+    }
+
+    /// Mark the run finished in status replies (joiners are turned away
+    /// with `GEN_DONE` from this point on).
+    pub fn finish(&self) {
+        self.shared.lock().unwrap_or_else(|e| e.into_inner()).state = RunState::Done;
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        // Tell parked joiners the world is gone rather than ghosting
+        // them into their read timeout.
+        for mut s in self.parked.lock().unwrap_or_else(|e| e.into_inner()).drain(..) {
+            let _ = write_reply28(&mut s, ST_OK, 0, GEN_DONE, u32::MAX);
+            s.shutdown();
+        }
+        let _ = std::fs::remove_file(ctrl_endpoint(&self.base));
+    }
+}
+
+/// The control thread body: answer status queries, park join requests.
+fn ctrl_serve(
+    listener: UnixListener,
+    run_id: u64,
+    shared: Arc<Mutex<CtrlShared>>,
+    parked: Arc<Mutex<Vec<Stream>>>,
+    stop: Arc<std::sync::atomic::AtomicBool>,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((s, _)) => {
+                let mut s = Stream::Unix(s);
+                if s.set_nonblocking(false).is_err()
+                    || s.set_read_timeout(Some(Duration::from_secs(5))).is_err()
+                {
+                    continue;
+                }
+                match read_hello(&mut s) {
+                    Ok(h) if h.run_id != run_id => {
+                        let _ = write_reply28(&mut s, ST_BAD_RUN_ID, 0, 0, 0);
+                        s.shutdown();
+                    }
+                    Ok(h) if h.intent == INTENT_STATUS => {
+                        let (w, g, st) = {
+                            let sh = shared.lock().unwrap_or_else(|e| e.into_inner());
+                            (sh.world, sh.gen, sh.state)
+                        };
+                        let _ = write_reply28(&mut s, ST_OK, w, g, st.to_u32());
+                        s.shutdown();
+                    }
+                    Ok(h) if h.intent == INTENT_JOIN => {
+                        let done = {
+                            let sh = shared.lock().unwrap_or_else(|e| e.into_inner());
+                            sh.state == RunState::Done
+                        };
+                        if done {
+                            let _ = write_reply28(&mut s, ST_OK, 0, GEN_DONE, u32::MAX);
+                            s.shutdown();
+                        } else {
+                            parked.lock().unwrap_or_else(|e| e.into_inner()).push(s);
+                        }
+                    }
+                    Ok(_) => {
+                        // WORKER/REJOIN intents belong on the data and
+                        // membership endpoints, not the control one.
+                        let _ = write_reply28(&mut s, ST_BAD_GEN, 0, 0, 0);
+                        s.shutdown();
+                    }
+                    Err(_) => s.shutdown(),
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+/// Survivor side of a regroup: dial generation `gen`'s membership
+/// endpoint (with backoff — the coordinator may not have bound it yet),
+/// present this process's old rank, and receive the new membership
+/// grant. `old_rank == RANK_NONE as usize` marks a fresh joiner
+/// (see [`join`], which wraps this).
+pub fn rejoin(rendezvous: &str, run_id: u64, old_rank: usize, gen: u64) -> io::Result<Membership> {
+    let base = unix_base(rendezvous, "rejoin")?;
+    let mpath = membership_endpoint(&base, gen);
+    let ep = Endpoint::Unix(mpath.clone());
+    let deadline = Instant::now() + rendezvous_timeout();
+    let what = format!("rejoin: dial membership endpoint unix:{mpath}");
+    let mut s = dial_backoff(&ep, deadline, Backoff::new(2, 200, old_rank as u64), &what)?;
+    s.set_read_timeout(Some(rendezvous_timeout()))?;
+    write_hello(&mut s, run_id, 0, old_rank as u32, gen, INTENT_REJOIN)?;
+    let (status, world, got_gen, rank) =
+        read_reply28(&mut s).map_err(|e| io_ctx(e, "rejoin: read membership grant"))?;
+    s.shutdown();
+    if status != ST_OK {
+        return Err(io::Error::new(
+            io::ErrorKind::ConnectionRefused,
+            format!("rejoin rejected: {}", status_msg(status)),
+        ));
+    }
+    if got_gen != gen || rank == u32::MAX {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "malformed membership grant"));
+    }
+    Ok(Membership { rank: rank as usize, world: world as usize, gen })
+}
+
+/// Join a running elastic world as a fresh worker: park a join request
+/// at the control endpoint, block until the coordinator announces a
+/// regroup (bounded by the `SINGD_SOCK_TIMEOUT_SECS` read timeout when
+/// set), then [`rejoin`] into the announced generation. Errors if the
+/// run already finished.
+pub fn join(rendezvous: &str, run_id: u64) -> io::Result<Membership> {
+    let base = unix_base(rendezvous, "join")?;
+    let cpath = ctrl_endpoint(&base);
+    let ep = Endpoint::Unix(cpath.clone());
+    let deadline = Instant::now() + rendezvous_timeout();
+    let what = format!("join: dial control endpoint unix:{cpath}");
+    let mut s = dial_backoff(&ep, deadline, Backoff::new(2, 200, 0x6a6f_696e), &what)?;
+    write_hello(&mut s, run_id, 0, RANK_NONE, 0, INTENT_JOIN)?;
+    // Block until the next regroup is announced; an env-set socket
+    // timeout bounds the wait, the default waits indefinitely.
+    s.set_read_timeout(read_timeout())?;
+    let (status, _world, gen, _extra) =
+        read_reply28(&mut s).map_err(|e| io_ctx(e, "join: read regroup announcement"))?;
+    s.shutdown();
+    if status != ST_OK {
+        return Err(io::Error::new(
+            io::ErrorKind::ConnectionRefused,
+            format!("join rejected: {}", status_msg(status)),
+        ));
+    }
+    if gen == GEN_DONE {
+        return Err(io::Error::new(io::ErrorKind::NotConnected, "join refused: world finished"));
+    }
+    rejoin(rendezvous, run_id, RANK_NONE as usize, gen)
+}
+
+/// Query a running elastic world's membership epoch and state from its
+/// control endpoint.
+pub fn status(rendezvous: &str, run_id: u64) -> io::Result<WorldStatus> {
+    let base = unix_base(rendezvous, "status query")?;
+    let cpath = ctrl_endpoint(&base);
+    let ep = Endpoint::Unix(cpath.clone());
+    let deadline = Instant::now() + rendezvous_timeout();
+    let what = format!("status: dial control endpoint unix:{cpath}");
+    let mut s = dial_backoff(&ep, deadline, Backoff::new(2, 200, 0x7374_6174), &what)?;
+    s.set_read_timeout(Some(rendezvous_timeout()))?;
+    write_hello(&mut s, run_id, 0, RANK_NONE, 0, INTENT_STATUS)?;
+    let (status, world, gen, state) =
+        read_reply28(&mut s).map_err(|e| io_ctx(e, "status: read reply"))?;
+    s.shutdown();
+    if status != ST_OK {
+        return Err(io::Error::new(
+            io::ErrorKind::ConnectionRefused,
+            format!("status query rejected: {}", status_msg(status)),
+        ));
+    }
+    Ok(WorldStatus { world: world as usize, gen, state: RunState::from_u32(state)? })
 }
 
 #[cfg(test)]
@@ -1726,7 +2416,7 @@ mod tests {
             let wrong = s.spawn(move || {
                 // Dials claiming a 4-rank world against a 2-rank server.
                 let ep = Endpoint::parse(rv);
-                dial_root(&ep, 1, 4, run_id)
+                dial_root(&ep, 1, 4, run_id, 0)
             });
             assert!(wrong.join().unwrap().is_err(), "world mismatch must be rejected");
             let ok = s.spawn(move || SocketComm::connect(1, 2, rv, run_id));
@@ -1748,5 +2438,110 @@ mod tests {
         let b = fresh_rendezvous();
         assert_ne!(a, b);
         assert!(a.starts_with("unix:"));
+    }
+
+    #[test]
+    fn stale_generation_is_rejected_at_handshake() {
+        let rendezvous = fresh_rendezvous();
+        let run_id = fresh_run_id();
+        let rv = &rendezvous;
+        std::thread::scope(|s| {
+            let server = s.spawn(move || SocketComm::connect(0, 2, rv, run_id));
+            // A straggler stamped with generation 1 dials a generation-0
+            // world at the same endpoint and run id.
+            let stale = s.spawn(move || {
+                let ep = Endpoint::parse(rv);
+                dial_root(&ep, 1, 2, run_id, 1)
+            });
+            let err = stale.join().unwrap();
+            assert!(err.is_err(), "stale generation must be rejected");
+            let msg = err.err().unwrap().to_string();
+            assert!(msg.contains("stale generation"), "unexpected rejection reason: {msg}");
+            let ok = s.spawn(move || SocketComm::connect(1, 2, rv, run_id));
+            assert!(server.join().unwrap().is_ok());
+            assert!(ok.join().unwrap().is_ok());
+        });
+    }
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_growing() {
+        let delays = |salt: u64| -> Vec<u64> {
+            let mut b = Backoff::new(2, 200, salt);
+            (0..12).map(|_| b.next_delay().as_millis() as u64).collect()
+        };
+        let a = delays(3);
+        let b = delays(3);
+        assert_eq!(a, b, "same salt must replay the same schedule");
+        // Every delay sits inside the jitter envelope [exp/2, exp] of the
+        // capped exponential.
+        for (i, &d) in a.iter().enumerate() {
+            let exp = (2u64 << i.min(16)).min(200) / 2 * 2; // base<<i, capped
+            let exp = exp.min(200).max(2);
+            assert!(d >= exp / 2 && d <= exp, "attempt {i}: delay {d} outside [{}, {exp}]", exp / 2);
+        }
+        // Late attempts are pinned at the cap envelope.
+        assert!(a[11] >= 100 && a[11] <= 200, "capped delay out of range: {}", a[11]);
+        // Different salts decorrelate (not all delays identical).
+        assert_ne!(delays(0), delays(1));
+    }
+
+    #[test]
+    fn timeout_env_values_parse_loudly() {
+        assert_eq!(parse_timeout_secs("30"), Ok(30));
+        assert_eq!(parse_timeout_secs(" 5 "), Ok(5));
+        assert!(parse_timeout_secs("0").is_err(), "zero timeout must be rejected");
+        assert!(parse_timeout_secs("ten").is_err());
+        assert!(parse_timeout_secs("-3").is_err());
+        assert!(parse_timeout_secs("1.5").is_err());
+        assert_eq!(parse_env_u64("SINGD_RANK", "7"), Ok(7));
+        let e = parse_env_u64("SINGD_RANK", "x7").unwrap_err();
+        assert!(e.contains("SINGD_RANK") && e.contains("x7"), "error must name var+value: {e}");
+    }
+
+    #[test]
+    fn elastic_endpoints_derive_from_unix_base() {
+        assert_eq!(elastic_data_endpoint("unix:/tmp/a.sock", 0).unwrap(), "unix:/tmp/a.sock");
+        assert_eq!(elastic_data_endpoint("/tmp/a.sock", 2).unwrap(), "unix:/tmp/a.sock.g2");
+        assert!(elastic_data_endpoint("tcp:127.0.0.1:4000", 1).is_err(), "tcp must be rejected");
+        assert_eq!(mix_run_id(42, 0), 42, "generation 0 must not change the run id");
+        assert_ne!(mix_run_id(42, 1), 42);
+        assert_ne!(mix_run_id(42, 1), mix_run_id(42, 2));
+    }
+
+    #[test]
+    fn status_join_rejoin_roundtrip_through_coordinator() {
+        let rendezvous = fresh_rendezvous();
+        let run_id = fresh_run_id();
+        let coord = Coordinator::new(&rendezvous, run_id, 3).expect("coordinator");
+        // Status reflects the initial world.
+        let st = status(&rendezvous, run_id).expect("status");
+        assert_eq!(st, WorldStatus { world: 3, gen: 0, state: RunState::Running });
+        // A stale-run status probe is rejected.
+        let bad = status(&rendezvous, run_id ^ 1).unwrap_err().to_string();
+        assert!(bad.contains("stale peer"), "unexpected status rejection: {bad}");
+        // Survivors 1 and 2 of a 3-world rejoin generation 1 while a
+        // fresh worker joins: world grows to 4, survivors keep their
+        // rank order, the joiner lands last.
+        let rv = &rendezvous;
+        std::thread::scope(|s| {
+            let j = s.spawn(move || join(rv, run_id));
+            // Let the join request park before regrouping.
+            while !coord.join_pending() {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            let s2 = s.spawn(move || rejoin(rv, run_id, 2, 1));
+            let s1 = s.spawn(move || rejoin(rv, run_id, 1, 1));
+            let m0 = coord.regroup(1).expect("regroup");
+            assert_eq!(m0, Membership { rank: 0, world: 4, gen: 1 });
+            assert_eq!(s1.join().unwrap().unwrap(), Membership { rank: 1, world: 4, gen: 1 });
+            assert_eq!(s2.join().unwrap().unwrap(), Membership { rank: 2, world: 4, gen: 1 });
+            assert_eq!(j.join().unwrap().unwrap(), Membership { rank: 3, world: 4, gen: 1 });
+        });
+        let st = status(&rendezvous, run_id).expect("status after regroup");
+        assert_eq!(st, WorldStatus { world: 4, gen: 1, state: RunState::Running });
+        // After finish(), joiners are turned away.
+        coord.finish();
+        let refused = join(&rendezvous, run_id).unwrap_err().to_string();
+        assert!(refused.contains("world finished"), "unexpected join refusal: {refused}");
     }
 }

@@ -70,6 +70,9 @@ pub fn run_job(cfg: &JobConfig) -> RunResult {
         seed: cfg.seed,
         eval_every: 0,
         stop_on_divergence: true,
+        resume: cfg.resume.as_ref().map(std::path::PathBuf::from),
+        ckpt: cfg.ckpt.as_ref().map(std::path::PathBuf::from),
+        ckpt_every: cfg.ckpt_every,
     };
     let dc = DistCfg {
         ranks: cfg.ranks,
@@ -77,6 +80,7 @@ pub fn run_job(cfg: &JobConfig) -> RunResult {
         transport: cfg.transport,
         algo: cfg.algo,
         overlap: cfg.overlap,
+        elastic: cfg.elastic,
     };
     train_dist(model.as_mut(), &ds, &tc, &dc)
 }
@@ -226,6 +230,12 @@ mod tests {
             ranks: 1,
             dist_strategy: crate::dist::DistStrategy::Replicated,
             transport: crate::dist::Transport::Local,
+            algo: crate::dist::default_algo(),
+            overlap: crate::dist::default_overlap(),
+            resume: None,
+            ckpt: None,
+            ckpt_every: 0,
+            elastic: false,
         }
     }
 

@@ -77,6 +77,10 @@ impl Optimizer for AdamW {
         self.diverged
     }
 
+    fn state_blobs_per_layer(&self) -> usize {
+        2
+    }
+
     fn state_vectors(&self) -> Vec<Vec<f32>> {
         // Two blobs per layer: second moment, then first moment.
         self.second

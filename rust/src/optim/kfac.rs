@@ -205,6 +205,10 @@ impl Optimizer for Kfac {
         self.dist.owned_layers(self.layers.len())
     }
 
+    fn state_blobs_per_layer(&self) -> usize {
+        5
+    }
+
     fn state_vectors(&self) -> Vec<Vec<f32>> {
         // Five blobs per owned layer: S_K, S_C, S_K⁻¹, S_C⁻¹, m_μ.
         let mut out = Vec::new();

@@ -188,6 +188,16 @@ pub trait Optimizer: Send {
         Vec::new()
     }
 
+    /// Number of [`Optimizer::state_vectors`] blobs each layer
+    /// contributes (a per-method constant). The elastic resharding path
+    /// uses it to re-deal a canonical (serial-layout) state snapshot to
+    /// a different world size: layer `l`'s blobs are the consecutive
+    /// `l·n .. (l+1)·n` slots of the canonical snapshot. `0` means the
+    /// optimizer carries no checkpointable state.
+    fn state_blobs_per_layer(&self) -> usize {
+        0
+    }
+
     /// Restore state captured by [`Optimizer::state_vectors`] from an
     /// identically-configured optimizer. Errors on any count/length
     /// mismatch without modifying state.

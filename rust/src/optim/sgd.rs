@@ -52,6 +52,10 @@ impl Optimizer for Sgd {
         self.diverged
     }
 
+    fn state_blobs_per_layer(&self) -> usize {
+        1
+    }
+
     fn state_vectors(&self) -> Vec<Vec<f32>> {
         self.momentum.iter().map(|m| m.data().to_vec()).collect()
     }

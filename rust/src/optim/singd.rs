@@ -289,6 +289,10 @@ impl Optimizer for Singd {
         self.dist.owned_layers(self.layers.len())
     }
 
+    fn state_blobs_per_layer(&self) -> usize {
+        5
+    }
+
     fn state_vectors(&self) -> Vec<Vec<f32>> {
         // Five blobs per owned layer: K, C, m_K, m_C (structured
         // coefficient order), then m_μ (row-major).

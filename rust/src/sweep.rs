@@ -148,6 +148,12 @@ mod tests {
             ranks: 1,
             dist_strategy: crate::dist::DistStrategy::Replicated,
             transport: crate::dist::Transport::Local,
+            algo: crate::dist::default_algo(),
+            overlap: crate::dist::default_overlap(),
+            resume: None,
+            ckpt: None,
+            ckpt_every: 0,
+            elastic: false,
         };
         let trials = random_search(&base, &Space::default(), 3, 42);
         assert_eq!(trials.len(), 3);

@@ -1,26 +1,44 @@
-//! Minimal binary checkpoint format for model parameters and optimizer
-//! state.
+//! Minimal binary checkpoint format for model parameters, optimizer
+//! state and (v3) training-driver state.
 //!
 //! Layout (little-endian):
 //!
 //! - v1: `magic "SNGD" | u32 version=1 | u32 n_layers | per layer: u32
 //!   rows, u32 cols, rows·cols f32 | u64 FNV-1a checksum`.
-//! - v2 (current): the v1 parameter section, followed by `u32 n_blobs |
+//! - v2: the v1 parameter section, followed by `u32 n_blobs |
 //!   per blob: u32 len, len f32` — the optimizer's
 //!   [`crate::optim::Optimizer::state_vectors`] snapshot (momenta,
 //!   Kronecker/structured factors in coefficient order) — before the
 //!   checksum. `n_blobs = 0` is a pure-parameter checkpoint.
+//! - v3 (current): the v2 sections, followed by `u8 flag`; when the flag
+//!   is 1, a [`DriverState`] section: `u64 step | f32 best | f64
+//!   epoch_loss | u64 nb | u32 n_rows | per row: u64 step, u64 epoch,
+//!   f32 train_loss, f32 test_loss, f32 test_err, f32 lr, u8 diverged`.
+//!   The driver section lets a resumed run replay its pre-checkpoint log
+//!   rows bitwise (the [`super::run_digest`] hashes every row), carry
+//!   the best-so-far error, and restore the partial-epoch f64 loss
+//!   accumulators so an epoch interrupted mid-way re-emits the identical
+//!   epoch-average row.
 //!
-//! Readers accept both versions (v1 loads with empty optimizer state);
-//! the writer always emits v2. The checksum covers everything before it,
-//! so truncation and bit corruption are both rejected.
+//! Readers accept all three versions (v1 loads with empty optimizer
+//! state; v1/v2 load with no driver state); the writer always emits v3.
+//! The checksum covers everything before it, so truncation and bit
+//! corruption are both rejected.
+//!
+//! Writes are atomic and keep one generation of history: the body is
+//! written to `<path>.tmp` and fsynced, any existing `<path>` is renamed
+//! to `<path>.prev` (the last-good copy), and the tmp file is renamed
+//! over `<path>`. A crash mid-write can therefore corrupt at most the
+//! tmp file; [`load_checkpoint_auto`] falls back to `<path>.prev` when
+//! the primary fails validation.
 
+use super::LogRow;
 use crate::tensor::Mat;
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"SNGD";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 /// FNV-1a 64 over a byte image — shared by the checkpoint framing and
 /// the run digest of [`super::run_digest`].
@@ -31,6 +49,31 @@ pub(super) fn checksum(data: &[u8]) -> u64 {
         h = h.wrapping_mul(0x100000001b3);
     }
     h
+}
+
+/// Training-driver progress stored alongside parameters and optimizer
+/// state (checkpoint v3): everything [`super::train_loop`] needs to
+/// resume mid-run and reproduce the uninterrupted run's digest bitwise.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DriverState {
+    /// Global step count at checkpoint time (batches consumed).
+    pub step: usize,
+    /// Best test error seen so far.
+    pub best: f32,
+    /// Partial-epoch f64 training-loss accumulator.
+    pub epoch_loss: f64,
+    /// Batches accumulated into `epoch_loss` this epoch.
+    pub nb: usize,
+    /// Every log row emitted before the checkpoint (replayed on resume
+    /// so [`super::run_digest`] matches the uninterrupted run).
+    pub rows: Vec<LogRow>,
+}
+
+/// `<path>.suffix` as a sibling file (`ckpt.bin` → `ckpt.bin.tmp`).
+fn sibling(path: &Path, suffix: &str) -> PathBuf {
+    let mut name = path.as_os_str().to_os_string();
+    name.push(suffix);
+    PathBuf::from(name)
 }
 
 /// Save parameter matrices to `path` (no optimizer state).
@@ -44,6 +87,18 @@ pub fn save_checkpoint_full(
     path: &Path,
     params: &[Mat],
     state: &[Vec<f32>],
+) -> std::io::Result<()> {
+    save_checkpoint_driver(path, params, state, None)
+}
+
+/// Save parameters, optimizer state, and optional [`DriverState`]
+/// (checkpoint v3) atomically: body → `<path>.tmp` (fsynced), existing
+/// `<path>` → `<path>.prev`, tmp renamed over `<path>`.
+pub fn save_checkpoint_driver(
+    path: &Path,
+    params: &[Mat],
+    state: &[Vec<f32>],
+    driver: Option<&DriverState>,
 ) -> std::io::Result<()> {
     let mut body = Vec::new();
     body.extend_from_slice(MAGIC);
@@ -63,23 +118,63 @@ pub fn save_checkpoint_full(
             body.extend_from_slice(&v.to_le_bytes());
         }
     }
+    match driver {
+        None => body.push(0u8),
+        Some(d) => {
+            body.push(1u8);
+            body.extend_from_slice(&(d.step as u64).to_le_bytes());
+            body.extend_from_slice(&d.best.to_le_bytes());
+            body.extend_from_slice(&d.epoch_loss.to_le_bytes());
+            body.extend_from_slice(&(d.nb as u64).to_le_bytes());
+            body.extend_from_slice(&(d.rows.len() as u32).to_le_bytes());
+            for r in &d.rows {
+                body.extend_from_slice(&(r.step as u64).to_le_bytes());
+                body.extend_from_slice(&(r.epoch as u64).to_le_bytes());
+                body.extend_from_slice(&r.train_loss.to_le_bytes());
+                body.extend_from_slice(&r.test_loss.to_le_bytes());
+                body.extend_from_slice(&r.test_err.to_le_bytes());
+                body.extend_from_slice(&r.lr.to_le_bytes());
+                body.push(u8::from(r.diverged));
+            }
+        }
+    }
     let sum = checksum(&body);
     body.extend_from_slice(&sum.to_le_bytes());
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    std::fs::File::create(path)?.write_all(&body)
+    // Atomic publish: a crash can corrupt only the tmp file, never the
+    // checkpoint readers see; the previous good file survives as .prev.
+    let tmp = sibling(path, ".tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&body)?;
+        f.sync_all()?;
+    }
+    if path.exists() {
+        std::fs::rename(path, sibling(path, ".prev"))?;
+    }
+    std::fs::rename(&tmp, path)
 }
 
-/// Load parameter matrices from `path` (v1 or v2; any optimizer state is
-/// validated but dropped).
+/// Load parameter matrices from `path` (any version; optimizer and
+/// driver state are validated but dropped).
 pub fn load_checkpoint(path: &Path) -> std::io::Result<Vec<Mat>> {
     load_checkpoint_full(path).map(|(params, _)| params)
 }
 
 /// Load parameters and optimizer-state blobs from `path` (validates
-/// magic, version and checksum; v1 files yield empty state).
+/// magic, version and checksum; v1 files yield empty state; any v3
+/// driver state is validated but dropped).
 pub fn load_checkpoint_full(path: &Path) -> std::io::Result<(Vec<Mat>, Vec<Vec<f32>>)> {
+    load_checkpoint_driver(path).map(|(params, state, _)| (params, state))
+}
+
+/// Load parameters, optimizer state and (v3) [`DriverState`] from
+/// `path`. v1/v2 files yield `None` driver state.
+pub fn load_checkpoint_driver(
+    path: &Path,
+) -> std::io::Result<(Vec<Mat>, Vec<Vec<f32>>, Option<DriverState>)> {
     let mut buf = Vec::new();
     std::fs::File::open(path)?.read_to_end(&mut buf)?;
     let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
@@ -146,10 +241,86 @@ pub fn load_checkpoint_full(path: &Path) -> std::io::Result<(Vec<Mat>, Vec<Vec<f
             state.push(blob);
         }
     }
+    let mut driver = None;
+    if ver >= 3 {
+        if off + 1 > body.len() {
+            return Err(err("truncated driver flag"));
+        }
+        let flag = body[off];
+        off += 1;
+        if flag > 1 {
+            return Err(err("bad driver flag"));
+        }
+        if flag == 1 {
+            if off + 8 + 4 + 8 + 8 + 4 > body.len() {
+                return Err(err("truncated driver header"));
+            }
+            let step = u64::from_le_bytes(body[off..off + 8].try_into().unwrap()) as usize;
+            let best = f32::from_le_bytes(body[off + 8..off + 12].try_into().unwrap());
+            let epoch_loss = f64::from_le_bytes(body[off + 12..off + 20].try_into().unwrap());
+            let nb = u64::from_le_bytes(body[off + 20..off + 28].try_into().unwrap()) as usize;
+            let n_rows = u32::from_le_bytes(body[off + 28..off + 32].try_into().unwrap()) as usize;
+            off += 32;
+            const ROW_BYTES: usize = 8 + 8 + 4 * 4 + 1;
+            let mut rows = Vec::with_capacity(n_rows);
+            for _ in 0..n_rows {
+                if off + ROW_BYTES > body.len() {
+                    return Err(err("truncated driver row"));
+                }
+                rows.push(LogRow {
+                    step: u64::from_le_bytes(body[off..off + 8].try_into().unwrap()) as usize,
+                    epoch: u64::from_le_bytes(body[off + 8..off + 16].try_into().unwrap())
+                        as usize,
+                    train_loss: f32::from_le_bytes(body[off + 16..off + 20].try_into().unwrap()),
+                    test_loss: f32::from_le_bytes(body[off + 20..off + 24].try_into().unwrap()),
+                    test_err: f32::from_le_bytes(body[off + 24..off + 28].try_into().unwrap()),
+                    lr: f32::from_le_bytes(body[off + 28..off + 32].try_into().unwrap()),
+                    diverged: body[off + 32] != 0,
+                });
+                off += ROW_BYTES;
+            }
+            driver = Some(DriverState { step, best, epoch_loss, nb, rows });
+        }
+    }
     if off != body.len() {
         return Err(err("trailing bytes after checkpoint payload"));
     }
-    Ok((params, state))
+    Ok((params, state, driver))
+}
+
+/// [`load_checkpoint_driver`] with automatic fallback to the
+/// `<path>.prev` last-good copy when the primary file fails validation
+/// (e.g. a crash corrupted it mid-write before the atomic rename
+/// landed, or the disk ate it). A fallback is reported on stderr so the
+/// data loss is visible; when both fail the primary's error is
+/// returned, annotated with the fallback failure.
+pub fn load_checkpoint_auto(
+    path: &Path,
+) -> std::io::Result<(Vec<Mat>, Vec<Vec<f32>>, Option<DriverState>)> {
+    match load_checkpoint_driver(path) {
+        Ok(ok) => Ok(ok),
+        Err(primary) => {
+            let prev = sibling(path, ".prev");
+            match load_checkpoint_driver(&prev) {
+                Ok(ok) => {
+                    eprintln!(
+                        "warning: checkpoint {}: {primary}; resumed from last-good {}",
+                        path.display(),
+                        prev.display()
+                    );
+                    Ok(ok)
+                }
+                Err(fallback) => Err(std::io::Error::new(
+                    primary.kind(),
+                    format!(
+                        "checkpoint {}: {primary} (fallback {}: {fallback})",
+                        path.display(),
+                        prev.display()
+                    ),
+                )),
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +360,7 @@ mod tests {
             assert_eq!(a, b);
         }
         std::fs::remove_file(&path).ok();
+        std::fs::remove_file(sibling(&path, ".prev")).ok();
     }
 
     #[test]
@@ -221,6 +393,52 @@ mod tests {
         fresh.load_state_vectors(&ls).unwrap();
         assert_eq!(fresh.state_vectors(), state);
         std::fs::remove_file(&path).ok();
+        std::fs::remove_file(sibling(&path, ".prev")).ok();
+    }
+
+    #[test]
+    fn v3_driver_state_roundtrips_bitwise() {
+        let mut rng = Pcg::new(87);
+        let params = vec![rng.normal_mat(3, 4, 1.0)];
+        let driver = DriverState {
+            step: 12,
+            best: 0.251f32,
+            epoch_loss: 3.0625f64 + 1e-12,
+            nb: 4,
+            rows: vec![
+                LogRow {
+                    step: 4,
+                    epoch: 0,
+                    train_loss: 1.5,
+                    test_loss: 1.25,
+                    test_err: 0.5,
+                    lr: 0.05,
+                    diverged: false,
+                },
+                LogRow {
+                    step: 8,
+                    epoch: 1,
+                    train_loss: 1.25,
+                    test_loss: 1.0,
+                    test_err: 0.251,
+                    lr: 0.025,
+                    diverged: true,
+                },
+            ],
+        };
+        let path = std::env::temp_dir().join("singd_test_ckpt_v3.bin");
+        save_checkpoint_driver(&path, &params, &[vec![1.0, 2.0]], Some(&driver)).unwrap();
+        let (lp, ls, ld) = load_checkpoint_driver(&path).unwrap();
+        assert_eq!(lp, params);
+        assert_eq!(ls, vec![vec![1.0, 2.0]]);
+        assert_eq!(ld, Some(driver));
+        // A driver-less v3 file loads with None.
+        save_checkpoint_full(&path, &params, &[]).unwrap();
+        let (_, _, ld) = load_checkpoint_driver(&path).unwrap();
+        assert_eq!(ld, None);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(sibling(&path, ".prev")).ok();
+        std::fs::remove_file(sibling(&path, ".tmp")).ok();
     }
 
     #[test]
@@ -247,6 +465,7 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         assert!(load_checkpoint(&path).is_err());
         std::fs::remove_file(&path).ok();
+        std::fs::remove_file(sibling(&path, ".prev")).ok();
     }
 
     #[test]
@@ -263,6 +482,7 @@ mod tests {
         std::fs::write(&path, &bytes[..10]).unwrap();
         assert!(load_checkpoint_full(&path).is_err());
         std::fs::remove_file(&path).ok();
+        std::fs::remove_file(sibling(&path, ".prev")).ok();
     }
 
     #[test]
@@ -277,5 +497,45 @@ mod tests {
         std::fs::write(&path, &body).unwrap();
         assert!(load_checkpoint(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn kill_mid_write_leaves_last_good_recoverable() {
+        // Simulate a crash mid-write: the new body reaches only the tmp
+        // file (truncated), while the previous save's rename already
+        // published a good primary. The auto loader must (a) prefer the
+        // intact primary, and (b) when the primary itself is later
+        // corrupted, fall back to `<path>.prev`.
+        let mut rng = Pcg::new(88);
+        let gen1 = vec![rng.normal_mat(3, 3, 1.0)];
+        let gen2 = vec![rng.normal_mat(3, 3, 1.0)];
+        let path = std::env::temp_dir().join("singd_test_ckpt_crash.bin");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(sibling(&path, ".prev")).ok();
+        save_checkpoint(&path, &gen1).unwrap();
+        save_checkpoint(&path, &gen2).unwrap();
+        // gen1 survived as .prev, gen2 is the primary.
+        assert_eq!(load_checkpoint(&sibling(&path, ".prev")).unwrap(), gen1);
+        // "Crash" while writing gen3: a truncated tmp file exists.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(sibling(&path, ".tmp"), &bytes[..bytes.len() / 2]).unwrap();
+        let (p, _, _) = load_checkpoint_auto(&path).unwrap();
+        assert_eq!(p, gen2, "intact primary must win despite a stale tmp file");
+        // Corrupt the primary: auto falls back to the last-good .prev.
+        let mut bad = bytes.clone();
+        bad[16] ^= 0x55;
+        std::fs::write(&path, &bad).unwrap();
+        let (p, _, _) = load_checkpoint_auto(&path).unwrap();
+        assert_eq!(p, gen1, "corrupted primary must fall back to .prev");
+        // Both corrupted: a real error naming both files.
+        std::fs::write(sibling(&path, ".prev"), b"junk").unwrap();
+        let e = load_checkpoint_auto(&path).unwrap_err().to_string();
+        assert!(e.contains(".prev"), "error must name the fallback: {e}");
+        // A leftover tmp file never breaks the next save.
+        save_checkpoint(&path, &gen1).unwrap();
+        assert_eq!(load_checkpoint(&path).unwrap(), gen1);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(sibling(&path, ".prev")).ok();
+        std::fs::remove_file(sibling(&path, ".tmp")).ok();
     }
 }

@@ -5,7 +5,8 @@
 mod checkpoint;
 
 pub use checkpoint::{
-    load_checkpoint, load_checkpoint_full, save_checkpoint, save_checkpoint_full,
+    load_checkpoint, load_checkpoint_auto, load_checkpoint_driver, load_checkpoint_full,
+    save_checkpoint, save_checkpoint_driver, save_checkpoint_full, DriverState,
 };
 
 use crate::data::Dataset;
@@ -141,6 +142,17 @@ pub struct TrainCfg {
     pub eval_every: usize,
     /// Stop early when loss goes non-finite.
     pub stop_on_divergence: bool,
+    /// Resume from this checkpoint (`[train] resume` / `--resume`): the
+    /// run restores parameters, canonical optimizer state and the driver
+    /// bookkeeping, then replays the skipped batches' RNG draws so the
+    /// continued trajectory is bitwise identical to an uninterrupted run.
+    pub resume: Option<std::path::PathBuf>,
+    /// Write checkpoints to this path (`[train] ckpt` / `--ckpt`);
+    /// atomic tmp+fsync+rename with a `.prev` last-good sibling.
+    pub ckpt: Option<std::path::PathBuf>,
+    /// Checkpoint cadence in optimizer steps (0 = never). Elastic runs
+    /// require `>= 1`: the cadence bounds the work lost to a failure.
+    pub ckpt_every: usize,
 }
 
 impl Default for TrainCfg {
@@ -154,28 +166,55 @@ impl Default for TrainCfg {
             seed: 0,
             eval_every: 0,
             stop_on_divergence: true,
+            resume: None,
+            ckpt: None,
+            ckpt_every: 0,
         }
     }
 }
 
 /// The epoch/eval/divergence bookkeeping shared by the serial and
 /// distributed drivers: batch sampling, LR scheduling, loss accounting,
-/// eval cadence, and the divergence stop. `step_fn` performs one
-/// optimization step on a batch and returns `(batch loss, diverged)`.
-/// Keeping this loop single-sourced is part of the rank-invariance
-/// contract — both drivers see identical batches, schedules and rows.
+/// eval cadence, checkpoint cadence, resume replay, and the divergence
+/// stop. `step_fn` performs one optimization step on a batch and returns
+/// `(batch loss, diverged)`. Keeping this loop single-sourced is part of
+/// the rank-invariance contract — both drivers see identical batches,
+/// schedules and rows.
+///
+/// # Resume replay
+///
+/// With `resume = Some(d)` the caller has already restored parameters
+/// and optimizer state as of step `d.step`; the loop re-draws the same
+/// seeded batch stream but skips `step_fn` for steps `< d.step`, then
+/// restores the partial-epoch f64 loss accumulators at the boundary.
+/// Rows/best resume from `d`, so the continued run's log — including
+/// the re-emitted row of a partially-complete epoch — is bitwise
+/// identical to an uninterrupted run's (`rust/tests/dist.rs` asserts
+/// the digests match).
+///
+/// # Checkpoint hook
+///
+/// When `cfg.ckpt_every > 0`, `ckpt_hook` fires after each
+/// `ckpt_every`-th step (after that step's eval row, before any
+/// epoch-end row) with the model and the [`DriverState`] a resumed run
+/// needs to reproduce the remainder bit for bit.
 fn train_loop<M: Model + ?Sized>(
     model: &mut M,
     dataset: &Dataset,
     cfg: &TrainCfg,
+    resume: Option<DriverState>,
+    mut ckpt_hook: Option<&mut dyn FnMut(&M, &DriverState)>,
     mut step_fn: impl FnMut(&mut M, &Batch, usize, f32) -> (f32, bool),
 ) -> (Vec<LogRow>, f32, usize, bool, f64) {
     let mut rng = Pcg::with_stream(cfg.seed, 0x7261696e);
     let base_lr = cfg.hyper.lr;
     let start = std::time::Instant::now();
 
-    let mut rows = Vec::new();
-    let mut best = f32::INFINITY;
+    let resume_step = resume.as_ref().map(|d| d.step).unwrap_or(0);
+    let (mut rows, mut best, resume_el, resume_nb) = match resume {
+        Some(d) => (d.rows, d.best, d.epoch_loss, d.nb),
+        None => (Vec::new(), f32::INFINITY, 0.0, 0),
+    };
     let mut step = 0usize;
     let mut diverged = false;
     'outer: for epoch in 0..cfg.epochs {
@@ -183,6 +222,19 @@ fn train_loop<M: Model + ?Sized>(
         let mut epoch_loss = 0.0f64;
         let mut nb = 0usize;
         for b in &batches {
+            if step < resume_step {
+                // Replay-skip: consume the batch (the RNG stream already
+                // advanced identically) without stepping; at the resume
+                // boundary restore the checkpointed partial-epoch
+                // accumulators so the interrupted epoch's row re-emits
+                // from the exact f64 partials.
+                step += 1;
+                if step == resume_step {
+                    epoch_loss = resume_el;
+                    nb = resume_nb;
+                }
+                continue;
+            }
             let lr = base_lr * cfg.schedule.factor(step);
             let (loss, div) = step_fn(model, b, step, lr);
             epoch_loss += loss as f64;
@@ -193,6 +245,14 @@ fn train_loop<M: Model + ?Sized>(
                 let row = eval_row(model, dataset, step, epoch, (epoch_loss / nb as f64) as f32, base_lr * cfg.schedule.factor(step), diverged);
                 best = best.min(row.test_err);
                 rows.push(row);
+            }
+            if cfg.ckpt_every > 0 && step % cfg.ckpt_every == 0 {
+                if let Some(hook) = ckpt_hook.as_mut() {
+                    hook(
+                        model,
+                        &DriverState { step, best, epoch_loss, nb, rows: rows.clone() },
+                    );
+                }
             }
             if diverged && cfg.stop_on_divergence {
                 rows.push(LogRow {
@@ -207,7 +267,7 @@ fn train_loop<M: Model + ?Sized>(
                 break 'outer;
             }
         }
-        if cfg.eval_every == 0 {
+        if cfg.eval_every == 0 && step >= resume_step {
             let row = eval_row(model, dataset, step, epoch, (epoch_loss / nb.max(1) as f64) as f32, base_lr * cfg.schedule.factor(step), diverged);
             best = best.min(row.test_err);
             rows.push(row);
@@ -216,16 +276,112 @@ fn train_loop<M: Model + ?Sized>(
     (rows, best, step, diverged, start.elapsed().as_secs_f64())
 }
 
+/// Restore checkpointed parameters into `model`, erroring loudly on a
+/// layer-count or shape mismatch (a resume against the wrong config).
+fn restore_params<M: Model + ?Sized>(model: &mut M, params: Vec<Mat>) {
+    let cur = model.params();
+    assert_eq!(
+        params.len(),
+        cur.len(),
+        "resume: checkpoint has {} layers but the model has {} — \
+         the checkpoint was written by a different model config",
+        params.len(),
+        cur.len()
+    );
+    for (l, (p, c)) in params.iter().zip(cur.iter()).enumerate() {
+        assert_eq!(
+            (p.rows(), p.cols()),
+            (c.rows(), c.cols()),
+            "resume: layer {l} is {}x{} in the checkpoint but {}x{} in the model — \
+             the checkpoint was written by a different model config",
+            p.rows(),
+            p.cols(),
+            c.rows(),
+            c.cols()
+        );
+    }
+    *model.params_mut() = params;
+}
+
+/// Load `cfg.resume` (if set) into the model, apply the canonical
+/// optimizer-state snapshot through `load_state`, and return the
+/// [`DriverState`] for [`train_loop`]'s replay. `load_state` receives
+/// the canonical (serial-layout) blobs and is responsible for any
+/// world-specific dealing; it is not called when the checkpoint carries
+/// no optimizer state (a fresh step-0 checkpoint).
+fn apply_resume<M: Model + ?Sized>(
+    model: &mut M,
+    cfg: &TrainCfg,
+    mut load_state: impl FnMut(&[Vec<f32>]),
+) -> Option<DriverState> {
+    let path = cfg.resume.as_ref()?;
+    let (params, state, driver) = checkpoint::load_checkpoint_auto(path)
+        .unwrap_or_else(|e| panic!("resume: {e}"));
+    restore_params(model, params);
+    if !state.is_empty() {
+        load_state(&state);
+    }
+    Some(driver.unwrap_or_default())
+}
+
+/// Reassemble the canonical (serial-layout) optimizer-state snapshot on
+/// every rank of a socket world: under factor sharding each rank
+/// contributes its owned blobs as `1×len` matrices over the exchange and
+/// the canonical deal is merged back; replicated state is already
+/// canonical on every rank.
+fn gather_canonical_state(
+    comm: &dyn Communicator,
+    opt: &Mutex<Box<dyn Optimizer>>,
+    n_layers: usize,
+) -> Vec<Vec<f32>> {
+    let (mine, owned, bpl) = {
+        let o = opt.lock().unwrap_or_else(|e| e.into_inner());
+        (o.state_vectors(), o.owned_layers().is_some(), o.state_blobs_per_layer())
+    };
+    if !owned || bpl == 0 || comm.world_size() == 1 {
+        return mine;
+    }
+    let mats: Vec<Mat> =
+        mine.iter().map(|b| Mat::from_vec(1, b.len(), b.clone())).collect();
+    let parts = comm.exchange_mats(mats);
+    let per_rank: Vec<Vec<Vec<f32>>> = parts
+        .iter()
+        .map(|ms| ms.iter().map(|m| m.data().to_vec()).collect())
+        .collect();
+    shard::merge_state(&per_rank, bpl, n_layers)
+}
+
 /// Train `model` on `dataset`; returns loss/error curves + telemetry.
 pub fn train_image_model<M: Model + ?Sized>(
     model: &mut M,
     dataset: &Dataset,
     cfg: &TrainCfg,
 ) -> RunResult {
-    let mut opt = cfg.method.build(&model.shapes(), &cfg.hyper);
+    let opt: Mutex<Box<dyn Optimizer>> =
+        Mutex::new(cfg.method.build(&model.shapes(), &cfg.hyper));
+    let resume = apply_resume(model, cfg, |state| {
+        opt.lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .load_state_vectors(state)
+            .unwrap_or_else(|e| panic!("resume: optimizer state mismatch: {e}"));
+    });
+    let mut hook_impl;
+    let hook: Option<&mut dyn FnMut(&M, &DriverState)> = match &cfg.ckpt {
+        Some(path) if cfg.ckpt_every > 0 => {
+            let path = path.clone();
+            hook_impl = |m: &M, d: &DriverState| {
+                let state = opt.lock().unwrap_or_else(|e| e.into_inner()).state_vectors();
+                checkpoint::save_checkpoint_driver(&path, m.params(), &state, Some(d))
+                    .unwrap_or_else(|e| panic!("checkpoint save {}: {e}", path.display()));
+            };
+            Some(&mut hook_impl)
+        }
+        _ => None,
+    };
     let (rows, best, steps_run, diverged, wall_secs) =
-        train_loop(model, dataset, cfg, |model, b, step, lr| {
+        train_loop(model, dataset, cfg, resume, hook, |model, b, step, lr| {
             let res = model.forward_backward(b);
+            let mut opt = opt.lock().unwrap_or_else(|e| e.into_inner());
             opt.set_lr(lr);
             opt.step(step, model.params_mut(), &res.grads, &res.stats);
             (res.loss, opt.diverged())
@@ -241,7 +397,7 @@ pub fn train_image_model<M: Model + ?Sized>(
         },
         wall_secs,
         steps_run,
-        telemetry: opt.telemetry(),
+        telemetry: opt.lock().unwrap_or_else(|e| e.into_inner()).telemetry(),
         param_digest: run_digest(&rows, model.params()),
         rows,
     }
@@ -267,6 +423,12 @@ pub struct DistCfg {
     /// default; bitwise identical either way — contract 4 of
     /// [`crate::dist`]).
     pub overlap: bool,
+    /// Elastic fault tolerance (`[dist] elastic` / `--elastic`): survive
+    /// worker death and admit joiners by re-rendezvousing into a new
+    /// membership generation and resharding optimizer state from the
+    /// last checkpoint (socket transport only; requires `ckpt` +
+    /// `ckpt_every >= 1`). See [`train_dist`] §Elastic fault tolerance.
+    pub elastic: bool,
 }
 
 impl Default for DistCfg {
@@ -277,6 +439,7 @@ impl Default for DistCfg {
             transport: dist::default_transport(),
             algo: dist::default_algo(),
             overlap: dist::default_overlap(),
+            elastic: false,
         }
     }
 }
@@ -293,6 +456,7 @@ impl DistCfg {
             transport: Transport::Local,
             algo: dist::default_algo(),
             overlap: dist::default_overlap(),
+            elastic: false,
         }
     }
 }
@@ -375,6 +539,21 @@ impl DistCfg {
 /// and `rust/tests/dist_proc.rs` compare the digests across
 /// `SINGD_OVERLAP ∈ {0,1}` × transport × algo; the knob is purely about
 /// wall-clock (`benches/dist_scaling.rs` measures the difference).
+///
+/// # Elastic fault tolerance
+///
+/// [`DistCfg::elastic`] (socket transport + Unix-domain rendezvous only;
+/// requires [`TrainCfg::ckpt`] and `ckpt_every >= 1`) makes the world
+/// survive worker death and admit late joiners: rank 0 runs the control
+/// plane of PROTOCOL.md §Elastic rendezvous v2, a failure poisons the
+/// collectives on every survivor (the panic-on-EOF contract), survivors
+/// re-rendezvous into generation `g+1` with contiguous re-assigned
+/// ranks, reload the last checkpoint, re-deal the canonical optimizer
+/// state to the new world size, and resume via [`train_loop`]'s replay.
+/// Because any fixed world size is deterministic, the continued run is
+/// bitwise identical to an uninterrupted run of the *new* world size
+/// resumed from the same checkpoint — `rust/tests/dist_proc.rs` kills a
+/// real worker mid-step and asserts the digest equality.
 pub fn train_dist<M: Model + ?Sized>(
     model: &mut M,
     dataset: &Dataset,
@@ -391,8 +570,22 @@ pub fn train_dist<M: Model + ?Sized>(
         cfg.batch_size
     );
     match dcfg.transport {
-        Transport::Local => train_dist_local(model, dataset, cfg, dcfg),
-        Transport::Socket => train_dist_socket(model, dataset, cfg, dcfg),
+        Transport::Local => {
+            assert!(
+                !dcfg.elastic,
+                "train_dist: elastic mode requires the socket transport \
+                 (--transport socket); the in-process local transport has \
+                 no processes to lose"
+            );
+            train_dist_local(model, dataset, cfg, dcfg)
+        }
+        Transport::Socket => {
+            if dcfg.elastic {
+                train_dist_elastic(model, dataset, cfg, dcfg)
+            } else {
+                train_dist_socket(model, dataset, cfg, dcfg)
+            }
+        }
     }
 }
 
@@ -413,13 +606,61 @@ fn train_dist_local<M: Model + ?Sized>(
             Mutex::new(cfg.method.build_dist(&shapes, &cfg.hyper, ctx))
         })
         .collect();
+    let n_layers = shapes.len();
+    let resume = apply_resume(model, cfg, |state| {
+        // Each in-process rank restores its slice of the canonical
+        // snapshot: factor-sharded optimizers get their owned layers'
+        // blobs re-dealt for this world size, replicated ones (and
+        // optimizers without layer ownership) load the full canonical.
+        for (r, o) in opts.iter().enumerate() {
+            let mut o = o.lock().unwrap_or_else(|e| e.into_inner());
+            let bpl = o.state_blobs_per_layer();
+            let dealt;
+            let blobs: &[Vec<f32>] = if o.owned_layers().is_some() && bpl > 0 {
+                dealt = shard::deal_state(state, bpl, world, r);
+                &dealt
+            } else {
+                state
+            };
+            o.load_state_vectors(blobs)
+                .unwrap_or_else(|e| panic!("resume: rank {r} optimizer state mismatch: {e}"));
+        }
+    });
+    let mut hook_impl;
+    let hook: Option<&mut dyn FnMut(&M, &DriverState)> = match &cfg.ckpt {
+        Some(path) if cfg.ckpt_every > 0 => {
+            let path = path.clone();
+            let opts_ref = &opts;
+            hook_impl = move |m: &M, d: &DriverState| {
+                // Merge the per-rank shards back into the canonical
+                // serial layout so the checkpoint is world-size-free.
+                let (owned, bpl) = {
+                    let o = opts_ref[0].lock().unwrap_or_else(|e| e.into_inner());
+                    (o.owned_layers().is_some(), o.state_blobs_per_layer())
+                };
+                let canonical = if owned && bpl > 0 {
+                    let per_rank: Vec<Vec<Vec<f32>>> = opts_ref
+                        .iter()
+                        .map(|o| o.lock().unwrap_or_else(|e| e.into_inner()).state_vectors())
+                        .collect();
+                    shard::merge_state(&per_rank, bpl, n_layers)
+                } else {
+                    opts_ref[0].lock().unwrap_or_else(|e| e.into_inner()).state_vectors()
+                };
+                checkpoint::save_checkpoint_driver(&path, m.params(), &canonical, Some(d))
+                    .unwrap_or_else(|e| panic!("checkpoint save {}: {e}", path.display()));
+            };
+            Some(&mut hook_impl)
+        }
+        _ => None,
+    };
     // One persistent world for the whole run: the communicators (p2p
     // sequence counters, lazily spawned progress engines) live across
     // steps, exactly like a SocketComm world — with overlap on, the
     // per-rank engine thread is spawned once per run, not once per step.
     let local_world = dist::LocalWorld::new(world, dcfg.algo, dcfg.overlap);
     let (rows, best, steps_run, diverged, wall_secs) =
-        train_loop(model, dataset, cfg, |model, b, step, lr| {
+        train_loop(model, dataset, cfg, resume, hook, |model, b, step, lr| {
             let model_ref = &*model;
             let outs = local_world.run(|comm| {
                 rank_step(comm, model_ref, b, &opts[comm.rank()], step, lr)
@@ -505,9 +746,45 @@ fn train_dist_socket<M: Model + ?Sized>(
             .unwrap_or_else(|e| panic!("train_dist[socket]: rank {rank} rendezvous: {e}"));
     let shapes = model.shapes();
     let ctx = DistCtx::new(dcfg.strategy, rank, world);
-    let opt = Mutex::new(cfg.method.build_dist(&shapes, &cfg.hyper, ctx));
+    let opt: Mutex<Box<dyn Optimizer>> =
+        Mutex::new(cfg.method.build_dist(&shapes, &cfg.hyper, ctx));
+    // Every rank reads the checkpoint itself (shared filesystem) and
+    // restores its own slice of the canonical optimizer state.
+    let resume = apply_resume(model, cfg, |state| {
+        let mut o = opt.lock().unwrap_or_else(|e| e.into_inner());
+        let bpl = o.state_blobs_per_layer();
+        let dealt;
+        let blobs: &[Vec<f32>] = if o.owned_layers().is_some() && bpl > 0 {
+            dealt = shard::deal_state(state, bpl, world, rank);
+            &dealt
+        } else {
+            state
+        };
+        o.load_state_vectors(blobs)
+            .unwrap_or_else(|e| panic!("resume: rank {rank} optimizer state mismatch: {e}"));
+    });
+    let n_layers = shapes.len();
+    let mut hook_impl;
+    let hook: Option<&mut dyn FnMut(&M, &DriverState)> = match &cfg.ckpt {
+        Some(path) if cfg.ckpt_every > 0 => {
+            let path = path.clone();
+            let comm_ref = &comm;
+            let opt_ref = &opt;
+            hook_impl = move |m: &M, d: &DriverState| {
+                // SPMD: every rank joins the state gather (the exchange
+                // is a collective), but only rank 0 touches the disk.
+                let canonical = gather_canonical_state(comm_ref, opt_ref, n_layers);
+                if comm_ref.rank() == 0 {
+                    checkpoint::save_checkpoint_driver(&path, m.params(), &canonical, Some(d))
+                        .unwrap_or_else(|e| panic!("checkpoint save {}: {e}", path.display()));
+                }
+            };
+            Some(&mut hook_impl)
+        }
+        _ => None,
+    };
     let (rows, best, steps_run, diverged, wall_secs) =
-        train_loop(model, dataset, cfg, |model, b, step, lr| {
+        train_loop(model, dataset, cfg, resume, hook, |model, b, step, lr| {
             let out = rank_step(&comm, &*model, b, &opt, step, lr);
             *model.params_mut() = out.params;
             (out.loss, out.diverged)
@@ -534,6 +811,257 @@ fn train_dist_socket<M: Model + ?Sized>(
         telemetry: opt.lock().unwrap_or_else(|e| e.into_inner()).telemetry(),
         param_digest: run_digest(&rows, model.params()),
         rows,
+    }
+}
+
+/// Elastic multi-process driver (see [`train_dist`] §Elastic fault
+/// tolerance): each membership generation runs the normal SPMD step
+/// loop under `catch_unwind`; a poisoned collective (peer death) or a
+/// coordinator join request unwinds every survivor into the recovery
+/// path — sever the links, re-rendezvous into generation `g+1`, reload
+/// the last checkpoint, re-deal the canonical optimizer state to the
+/// new world size, and resume from the checkpointed step.
+fn train_dist_elastic<M: Model + ?Sized>(
+    model: &mut M,
+    dataset: &Dataset,
+    cfg: &TrainCfg,
+    dcfg: &DistCfg,
+) -> RunResult {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    let init_world = dcfg.ranks;
+    let ckpt_path = cfg.ckpt.clone().unwrap_or_else(|| {
+        panic!(
+            "train_dist[elastic]: elastic mode requires a checkpoint path \
+             ([train] ckpt / --ckpt): recovery reloads the last checkpoint"
+        )
+    });
+    assert!(
+        cfg.ckpt_every >= 1,
+        "train_dist[elastic]: elastic mode requires ckpt_every >= 1 \
+         (the checkpoint cadence bounds the work lost to a failure)"
+    );
+    let (orig_rank, rendezvous, run_id, mut workers) = match transport::worker_env() {
+        Some(we) => {
+            assert_eq!(
+                we.world, init_world,
+                "train_dist[elastic]: SINGD_WORLD {} != configured ranks {init_world}",
+                we.world
+            );
+            (we.rank, we.rendezvous, we.run_id, Vec::new())
+        }
+        None => {
+            let rendezvous = transport::fresh_rendezvous();
+            let run_id = transport::fresh_run_id();
+            let workers =
+                transport::launch_workers(init_world, &rendezvous, run_id, dcfg.algo, dcfg.overlap)
+                    .unwrap_or_else(|e| panic!("train_dist[elastic]: launching workers: {e}"));
+            (0, rendezvous, run_id, workers)
+        }
+    };
+    // Fault-injection knob for the chaos suite: SINGD_CHAOS_ABORT =
+    // "<rank>:<step>" hard-aborts this process (no goodbye, no unwind —
+    // a simulated crash) just before the 1-based step <step> of
+    // generation 0 on original rank <rank>.
+    let chaos: Option<(usize, usize)> = std::env::var("SINGD_CHAOS_ABORT")
+        .ok()
+        .filter(|v| !v.is_empty())
+        .map(|v| {
+            let parsed = v.split_once(':').and_then(|(r, s)| {
+                Some((r.trim().parse().ok()?, s.trim().parse().ok()?))
+            });
+            parsed.unwrap_or_else(|| {
+                panic!(
+                    "train_dist[elastic]: SINGD_CHAOS_ABORT={v:?} is malformed \
+                     (expected \"<rank>:<step>\", e.g. \"2:3\")"
+                )
+            })
+        });
+    let coord = if orig_rank == 0 {
+        Some(
+            transport::Coordinator::new(&rendezvous, run_id, init_world)
+                .unwrap_or_else(|e| panic!("train_dist[elastic]: coordinator: {e}")),
+        )
+    } else {
+        None
+    };
+    let shapes = model.shapes();
+    let n_layers = shapes.len();
+
+    // Establish the recovery point: an explicit resume checkpoint, or a
+    // fresh step-0 checkpoint rank 0 writes up front so even a failure
+    // before the first cadence point has something to reload. An empty
+    // state section means "fresh optimizer" (nothing to re-deal).
+    let mut canonical_state: Vec<Vec<f32>> = Vec::new();
+    let mut resume: DriverState = match &cfg.resume {
+        Some(path) => {
+            let (params, state, driver) = checkpoint::load_checkpoint_auto(path)
+                .unwrap_or_else(|e| panic!("train_dist[elastic]: resume: {e}"));
+            restore_params(model, params);
+            canonical_state = state;
+            driver.unwrap_or_default()
+        }
+        None => {
+            if orig_rank == 0 {
+                checkpoint::save_checkpoint_driver(
+                    &ckpt_path,
+                    model.params(),
+                    &[],
+                    Some(&DriverState::default()),
+                )
+                .unwrap_or_else(|e| panic!("train_dist[elastic]: initial checkpoint: {e}"));
+            }
+            DriverState::default()
+        }
+    };
+
+    let mut rank = orig_rank;
+    let mut world = init_world;
+    let mut gen: u64 = 0;
+    let mut gens_used = 1usize;
+    loop {
+        // The communicator lives OUTSIDE catch_unwind so the recovery
+        // path below can sever and drop it after a caught panic.
+        let comm = SocketComm::connect_elastic(
+            rank, world, &rendezvous, run_id, gen, dcfg.algo, dcfg.overlap,
+        )
+        .unwrap_or_else(|e| {
+            panic!("train_dist[elastic]: rank {rank} gen {gen} rendezvous: {e}")
+        });
+        let ctx = DistCtx::new(dcfg.strategy, rank, world);
+        let opt: Mutex<Box<dyn Optimizer>> =
+            Mutex::new(cfg.method.build_dist(&shapes, &cfg.hyper, ctx));
+        if !canonical_state.is_empty() {
+            let mut o = opt.lock().unwrap_or_else(|e| e.into_inner());
+            let bpl = o.state_blobs_per_layer();
+            let dealt;
+            let blobs: &[Vec<f32>] = if o.owned_layers().is_some() && bpl > 0 {
+                dealt = shard::deal_state(&canonical_state, bpl, world, rank);
+                &dealt
+            } else {
+                &canonical_state
+            };
+            o.load_state_vectors(blobs).unwrap_or_else(|e| {
+                panic!("train_dist[elastic]: rank {rank} optimizer state mismatch: {e}")
+            });
+        }
+        let gen_resume = resume.clone();
+        let out = catch_unwind(AssertUnwindSafe(|| {
+            let mut hook_impl = |m: &M, d: &DriverState| {
+                let canonical = gather_canonical_state(&comm, &opt, n_layers);
+                if comm.rank() == 0 {
+                    checkpoint::save_checkpoint_driver(&ckpt_path, m.params(), &canonical, Some(d))
+                        .unwrap_or_else(|e| {
+                            panic!("train_dist[elastic]: checkpoint save {}: {e}", ckpt_path.display())
+                        });
+                }
+            };
+            train_loop(
+                model,
+                dataset,
+                cfg,
+                Some(gen_resume),
+                Some(&mut hook_impl),
+                |model, b, step, lr| {
+                    // Fold the coordinator's join-pending flag into a
+                    // per-step scalar exchange so every rank routes
+                    // through the same recovery path a failure takes.
+                    // The exchanged flags never touch the training math,
+                    // so the digest is unaffected.
+                    let jp = if coord.as_ref().is_some_and(|c| c.join_pending()) { 1.0 } else { 0.0 };
+                    let flags = comm.exchange_f64(vec![jp]);
+                    if flags.iter().any(|p| p[0] != 0.0) {
+                        panic!("train_dist[elastic]: regroup requested (worker joining)");
+                    }
+                    if gen == 0 {
+                        if let Some((cr, cs)) = chaos {
+                            if cr == rank && step + 1 == cs {
+                                // Simulated crash: peers see a raw EOF.
+                                std::process::abort();
+                            }
+                        }
+                    }
+                    let out = rank_step(&comm, &*model, b, &opt, step, lr);
+                    *model.params_mut() = out.params;
+                    (out.loss, out.diverged)
+                },
+            )
+        }));
+        match out {
+            Ok((rows, best, steps_run, diverged, wall_secs)) => {
+                if let Some(c) = &coord {
+                    c.finish();
+                }
+                // Clean shutdown (goodbye frames) before reaping.
+                drop(comm);
+                for f in transport::wait_workers_lenient(&mut workers) {
+                    // Chaos-killed workers exit nonzero by design; the
+                    // run completed, so report and move on.
+                    eprintln!("train_dist[elastic]: note: {f}");
+                }
+                let final_err = rows.last().map(|r| r.test_err).unwrap_or(1.0);
+                let telemetry = {
+                    let t = opt.lock().unwrap_or_else(|e| e.into_inner()).telemetry();
+                    let tag = format!("elastic:gens={gens_used} world={world}");
+                    if t.is_empty() { tag } else { format!("{t} {tag}") }
+                };
+                return RunResult {
+                    final_test_err: final_err,
+                    best_test_err: best.min(final_err),
+                    diverged,
+                    optimizer_bytes: {
+                        let ctx0 = DistCtx::new(dcfg.strategy, 0, world);
+                        cfg.method.build_dist(&shapes, &cfg.hyper, ctx0).state_bytes()
+                    },
+                    wall_secs,
+                    steps_run,
+                    telemetry,
+                    param_digest: run_digest(&rows, model.params()),
+                    rows,
+                };
+            }
+            Err(_) => {
+                // A peer died (poisoned collective) or a regroup was
+                // requested: finish propagating the failure, then
+                // negotiate the next membership generation.
+                comm.sever();
+                drop(comm);
+                gen += 1;
+                gens_used += 1;
+                let m = if let Some(c) = &coord {
+                    c.regroup(gen).unwrap_or_else(|e| {
+                        panic!("train_dist[elastic]: regroup gen {gen}: {e}")
+                    })
+                } else {
+                    transport::rejoin(&rendezvous, run_id, rank, gen).unwrap_or_else(|e| {
+                        panic!("train_dist[elastic]: rank {rank} rejoin gen {gen}: {e}")
+                    })
+                };
+                rank = m.rank;
+                world = m.world;
+                assert!(
+                    cfg.batch_size >= world,
+                    "train_dist[elastic]: batch_size {} must be >= regrouped world {world}",
+                    cfg.batch_size
+                );
+                if rank == 0 {
+                    // Preserve the recovery point for the determinism
+                    // audit: an uninterrupted world-R' run resumed from
+                    // this exact file must reproduce our digest. Copy
+                    // before any gen-g checkpoint overwrites it.
+                    let tag = format!("{}.resharded-g{gen}", ckpt_path.display());
+                    std::fs::copy(&ckpt_path, &tag).unwrap_or_else(|e| {
+                        panic!("train_dist[elastic]: snapshot {tag}: {e}")
+                    });
+                }
+                let (params, state, driver) = checkpoint::load_checkpoint_auto(&ckpt_path)
+                    .unwrap_or_else(|e| {
+                        panic!("train_dist[elastic]: reload after regroup: {e}")
+                    });
+                restore_params(model, params);
+                canonical_state = state;
+                resume = driver.unwrap_or_default();
+            }
+        }
     }
 }
 

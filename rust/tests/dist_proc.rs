@@ -17,15 +17,15 @@ fn bin() -> &'static str {
     env!("CARGO_BIN_EXE_singd")
 }
 
-/// A tiny deterministic job: 4-batch MLP epoch over the synthetic
+/// A tiny deterministic job: 4-batch MLP epochs over the synthetic
 /// CIFAR stand-in (seconds per run, exercises the full dist stack).
-fn write_job(name: &str, method: &str) -> PathBuf {
+fn write_job_epochs(name: &str, method: &str, epochs: usize) -> PathBuf {
     let toml = format!(
         "label = \"dist-proc\"\n\
          [model]\narch = \"mlp\"\nwidth = 32\n\
          [data]\nclasses = 4\nn_train = 128\nn_test = 32\n\
          [optim]\nmethod = \"{method}\"\nlr = 0.01\ndamping = 0.1\nt_update = 1\n\
-         [train]\nepochs = 1\nbatch_size = 32\nseed = 11\n"
+         [train]\nepochs = {epochs}\nbatch_size = 32\nseed = 11\n"
     );
     let path = std::env::temp_dir()
         .join(format!("singd-dist-proc-{}-{name}.toml", std::process::id()));
@@ -33,22 +33,41 @@ fn write_job(name: &str, method: &str) -> PathBuf {
     path
 }
 
+fn write_job(name: &str, method: &str) -> PathBuf {
+    write_job_epochs(name, method, 1)
+}
+
+/// The SINGD_* knobs cleared from child environments so the CI matrix
+/// (and a previous chaos run) cannot leak a world size, transport or
+/// fault injection into the child.
+const CLEARED_ENV: [&str; 9] = [
+    "SINGD_RANKS",
+    "SINGD_TRANSPORT",
+    "SINGD_ALGO",
+    "SINGD_OVERLAP",
+    "SINGD_RANK",
+    "SINGD_WORLD",
+    "SINGD_RENDEZVOUS",
+    "SINGD_RUN_ID",
+    "SINGD_CHAOS_ABORT",
+];
+
 /// Run `singd train` with the given extra flags; return its param digest.
-/// The parent env's SINGD_* knobs are cleared so the CI matrix cannot
-/// leak a world size or transport into the child.
 fn digest_of(config: &std::path::Path, extra: &[&str]) -> String {
+    digest_of_env(config, extra, &[])
+}
+
+/// [`digest_of`] with explicit extra environment variables (set after
+/// the [`CLEARED_ENV`] scrub — the chaos test injects its kill knob
+/// here).
+fn digest_of_env(config: &std::path::Path, extra: &[&str], envs: &[(&str, &str)]) -> String {
     let mut cmd = Command::new(bin());
     cmd.arg("train").arg("--config").arg(config).args(extra);
-    for k in [
-        "SINGD_RANKS",
-        "SINGD_TRANSPORT",
-        "SINGD_ALGO",
-        "SINGD_OVERLAP",
-        "SINGD_RANK",
-        "SINGD_WORLD",
-        "SINGD_RENDEZVOUS",
-    ] {
+    for k in CLEARED_ENV {
         cmd.env_remove(k);
+    }
+    for (k, v) in envs {
+        cmd.env(k, v);
     }
     let out = cmd.output().expect("spawn singd");
     let stdout = String::from_utf8_lossy(&out.stdout).to_string();
@@ -167,15 +186,7 @@ fn socket_ranks2_smoke_with_csv_output() {
         .arg(&cfg)
         .args(["--ranks", "2", "--transport", "socket", "--out"])
         .arg(&out_csv);
-    for k in [
-        "SINGD_RANKS",
-        "SINGD_TRANSPORT",
-        "SINGD_ALGO",
-        "SINGD_OVERLAP",
-        "SINGD_RANK",
-        "SINGD_WORLD",
-        "SINGD_RENDEZVOUS",
-    ] {
+    for k in CLEARED_ENV {
         cmd.env_remove(k);
     }
     let out = cmd.output().expect("spawn singd");
@@ -189,4 +200,93 @@ fn socket_ranks2_smoke_with_csv_output() {
     assert!(csv.lines().count() >= 2, "csv rows");
     std::fs::remove_file(&cfg).ok();
     std::fs::remove_file(&out_csv).ok();
+}
+
+// =====================================================================
+// Elastic fault tolerance over real OS processes (ISSUE 6).
+
+#[test]
+fn resume_socket_matches_uninterrupted_digest() {
+    // Checkpoint/resume across real processes: a 1-epoch socket run that
+    // checkpoints every 2 steps, resumed into the 2-epoch schedule, must
+    // digest identically to the uninterrupted 2-epoch socket run. Every
+    // rank (parent and re-exec'd workers) reads the checkpoint off the
+    // shared filesystem and re-deals the canonical state.
+    let cfg1 = write_job_epochs("resume-1", "singd:diag", 1);
+    let cfg2 = write_job_epochs("resume-2", "singd:diag", 2);
+    let ckpt = std::env::temp_dir()
+        .join(format!("singd-dist-proc-resume-{}.ckpt", std::process::id()));
+    let ckpt_s = ckpt.to_str().unwrap().to_string();
+    let common: &[&str] =
+        &["--ranks", "4", "--strategy", "factor-sharded", "--transport", "socket"];
+    let full = digest_of(&cfg2, common);
+    let _ = digest_of(&cfg1, &[common, &["--ckpt", &ckpt_s, "--ckpt-every", "2"][..]].concat());
+    assert!(ckpt.exists(), "socket run must write the checkpoint");
+    let resumed = digest_of(&cfg2, &[common, &["--resume", &ckpt_s][..]].concat());
+    assert_eq!(full, resumed, "socket resume diverged from the uninterrupted run");
+    std::fs::remove_file(&cfg1).ok();
+    std::fs::remove_file(&cfg2).ok();
+    std::fs::remove_file(&ckpt).ok();
+    std::fs::remove_file(format!("{ckpt_s}.prev")).ok();
+}
+
+#[test]
+fn elastic_chaos_kill_worker_midstep_reshards_and_matches_uninterrupted() {
+    // The chaos acceptance (ISSUE 6): rank 2 of an elastic 4-process
+    // world hard-aborts (std::process::abort — severed sockets, no
+    // goodbye) just before step 3 of an 8-step run checkpointing every
+    // 2 steps. Survivors must observe the EOF, re-rendezvous into
+    // generation 1 as world 3, reload the step-2 checkpoint, re-deal the
+    // canonical optimizer state to 3 ranks and finish — and the digest
+    // must equal an uninterrupted ranks=3 run resumed from the exact
+    // recovery checkpoint (preserved as `<ckpt>.resharded-g1`).
+    let cfg = write_job_epochs("chaos", "singd:diag", 2);
+    let ckpt = std::env::temp_dir()
+        .join(format!("singd-dist-proc-chaos-{}.ckpt", std::process::id()));
+    let ckpt_s = ckpt.to_str().unwrap().to_string();
+    let interrupted = digest_of_env(
+        &cfg,
+        &[
+            "--ranks",
+            "4",
+            "--strategy",
+            "factor-sharded",
+            "--transport",
+            "socket",
+            "--elastic",
+            "1",
+            "--ckpt",
+            &ckpt_s,
+            "--ckpt-every",
+            "2",
+        ],
+        &[("SINGD_CHAOS_ABORT", "2:3"), ("SINGD_SOCK_TIMEOUT_SECS", "20")],
+    );
+    let resharded = format!("{ckpt_s}.resharded-g1");
+    assert!(
+        std::path::Path::new(&resharded).exists(),
+        "regroup must snapshot the recovery checkpoint as {resharded}"
+    );
+    let uninterrupted = digest_of(
+        &cfg,
+        &[
+            "--ranks",
+            "3",
+            "--strategy",
+            "factor-sharded",
+            "--transport",
+            "socket",
+            "--resume",
+            &resharded,
+        ],
+    );
+    assert_eq!(
+        interrupted, uninterrupted,
+        "interrupted+resharded R=4→R'=3 run diverged from the uninterrupted \
+         R'=3 run resumed from the same checkpoint"
+    );
+    std::fs::remove_file(&cfg).ok();
+    std::fs::remove_file(&ckpt).ok();
+    std::fs::remove_file(&resharded).ok();
+    std::fs::remove_file(format!("{ckpt_s}.prev")).ok();
 }
