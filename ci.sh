@@ -108,6 +108,47 @@ SINGD_RANKS=4 SINGD_TRANSPORT=local timeout "$DIST_TIMEOUT" cargo test -q --test
 timeout "$DIST_TIMEOUT" cargo test -q --test dist_proc resume_
 timeout "$DIST_TIMEOUT" cargo test -q --test dist_proc elastic_
 
+echo "== trace leg (--trace-dir artifacts validated by tools/check_trace.py) =="
+# A small traced distributed job on each transport: every rank must
+# export a well-formed r<N>.jsonl + r<N>.trace.json pair (socket workers
+# inherit the dir via the pinned SINGD_TRACE env), and the checker's
+# schema/loadability/overlap pass must be clean. The bitwise
+# non-interference of tracing is asserted by the test suites above; this
+# leg guards the artifact format end to end through the release binary.
+trace_tmp="$(mktemp -d)"
+trap 'rm -rf "$trace_tmp"' EXIT
+cat > "$trace_tmp/job.toml" <<'EOF'
+label = "ci-trace"
+[model]
+arch = "mlp"
+width = 32
+[data]
+classes = 4
+n_train = 128
+n_test = 32
+[optim]
+method = "singd:diag"
+lr = 0.01
+damping = 0.1
+t_update = 1
+[train]
+epochs = 1
+batch_size = 32
+seed = 11
+EOF
+for tr in local socket; do
+    echo "-- traced train_dist ($tr transport)"
+    timeout "$DIST_TIMEOUT" env -u SINGD_TRACE -u SINGD_LOG \
+        target/release/singd train --config "$trace_tmp/job.toml" \
+        --ranks 4 --transport "$tr" --algo ring \
+        --trace-dir "$trace_tmp/$tr"
+    python3 tools/check_trace.py "$trace_tmp/$tr"
+    for r in 0 1 2 3; do
+        test -s "$trace_tmp/$tr/r$r.jsonl" || {
+            echo "missing r$r.jsonl ($tr)"; exit 1; }
+    done
+done
+
 if [ "$mode" != "quick" ]; then
     echo "== hotpath bench (smoke) =="
     cargo bench --bench hotpath -- --smoke

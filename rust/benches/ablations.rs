@@ -43,6 +43,8 @@ fn base() -> JobConfig {
         ckpt: None,
         ckpt_every: 0,
         elastic: false,
+        trace_dir: None,
+        log: None,
     }
 }
 

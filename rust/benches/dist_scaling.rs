@@ -25,6 +25,7 @@ use singd::data;
 use singd::dist::{self, collectives, traffic, Algo, DistCtx, DistStrategy};
 use singd::model::cnn::ImgShape;
 use singd::model::Mlp;
+use singd::obs::trace::{self, RankOverlap};
 use singd::optim::{Hyper, Method, Optimizer};
 use singd::proptest::Pcg;
 use singd::tensor::{pool, Mat};
@@ -51,6 +52,27 @@ struct CollectiveRow {
     sent_by_rank: Vec<u64>,
 }
 
+/// Trace-derived comm/compute overlap efficiency of one traced epoch:
+/// how much of each rank's comm-span time was hidden under compute
+/// (ISSUE-7 story — the fraction the overlap knob actually buys, as
+/// measured from the span tracer rather than modeled).
+struct OverlapEffRow {
+    overlap: bool,
+    by_rank: Vec<RankOverlap>,
+}
+
+impl OverlapEffRow {
+    fn mean_hidden_frac(&self) -> f64 {
+        let comm: u64 = self.by_rank.iter().map(|r| r.comm_us).sum();
+        let hidden: u64 = self.by_rank.iter().map(|r| r.hidden_us).sum();
+        if comm == 0 {
+            0.0
+        } else {
+            hidden as f64 / comm as f64
+        }
+    }
+}
+
 fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
@@ -60,7 +82,12 @@ fn json_u64_array(xs: &[u64]) -> String {
     format!("[{}]", items.join(", "))
 }
 
-fn write_json(rows: &[Row], colls: &[CollectiveRow], smoke: bool) {
+fn json_f64_array(xs: &[f64]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| format!("{x:.4}")).collect();
+    format!("[{}]", items.join(", "))
+}
+
+fn write_json(rows: &[Row], colls: &[CollectiveRow], effs: &[OverlapEffRow], smoke: bool) {
     let mut out = String::from("{\n");
     out.push_str("  \"bench\": \"dist_scaling\",\n");
     out.push_str(&format!("  \"smoke\": {smoke},\n"));
@@ -105,6 +132,25 @@ fn write_json(rows: &[Row], colls: &[CollectiveRow], smoke: bool) {
             ring_optimal,
         ));
         out.push_str(if i + 1 < colls.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n");
+    // Overlap efficiency: measured from the span tracer (trace::begin
+    // with no export dir around one epoch, then trace::overlap_stats),
+    // not modeled — the hidden-comm fraction ring overlap buys.
+    out.push_str("  \"overlap_efficiency\": [\n");
+    for (i, e) in effs.iter().enumerate() {
+        let comm: Vec<u64> = e.by_rank.iter().map(|r| r.comm_us).collect();
+        let hidden: Vec<u64> = e.by_rank.iter().map(|r| r.hidden_us).collect();
+        let fracs: Vec<f64> = e.by_rank.iter().map(|r| r.hidden_frac()).collect();
+        out.push_str(&format!(
+            "    {{\"name\": \"traced epoch ranks=4 factor-sharded ring\", \"overlap\": {}, \"comm_us_by_rank\": {}, \"hidden_us_by_rank\": {}, \"hidden_frac_by_rank\": {}, \"mean_hidden_frac\": {:.4}}}",
+            e.overlap,
+            json_u64_array(&comm),
+            json_u64_array(&hidden),
+            json_f64_array(&fracs),
+            e.mean_hidden_frac(),
+        ));
+        out.push_str(if i + 1 < effs.len() { ",\n" } else { "\n" });
     }
     out.push_str("  ]\n}\n");
     match std::fs::write("BENCH_dist_scaling.json", &out) {
@@ -281,6 +327,36 @@ fn main() {
         });
     }
 
+    // Overlap efficiency from the tracer: one traced epoch per overlap
+    // mode (ring, factor-sharded, world 4) under an in-memory session
+    // (`trace::begin(None, ..)` — spans only, no artifacts), reduced by
+    // `trace::overlap_stats` to the per-rank hidden-comm fraction. This
+    // is the measured counterpart of the blocking-vs-pipelined timing
+    // rows above: the knob's win is compute hiding comm, and the tracer
+    // sees exactly which comm-span microseconds compute covered.
+    let effs: Vec<OverlapEffRow> = [false, true]
+        .iter()
+        .map(|&overlap| {
+            let mut dc = DistCfg::local(4, DistStrategy::FactorSharded);
+            dc.algo = Algo::Ring;
+            dc.overlap = overlap;
+            assert!(trace::begin(None, 0), "a trace session is already armed");
+            {
+                let mut mrng = Pcg::new(7);
+                let mut model = Mlp::new(&mut mrng, &dims);
+                let res = train_dist(&mut model, &ds, &cfg, &dc);
+                assert!(!res.diverged, "traced bench run diverged");
+            }
+            let row = OverlapEffRow { overlap, by_rank: trace::overlap_stats(&trace::finish()) };
+            println!(
+                "-- traced epoch ranks=4 ring overlap={}: mean hidden-comm frac {:.1}%",
+                overlap as u8,
+                100.0 * row.mean_hidden_frac(),
+            );
+            row
+        })
+        .collect();
+
     // The headline memory claim in one line: sharded rank-0 bytes vs
     // replicated, at the largest world size.
     let rep = rows
@@ -301,7 +377,7 @@ fn main() {
     if smoke {
         println!("-- smoke mode: skipping BENCH_dist_scaling.json");
     } else {
-        write_json(&rows, &colls, smoke);
+        write_json(&rows, &colls, &effs, smoke);
     }
     h.finish();
 }

@@ -39,6 +39,8 @@ fn main() {
         ckpt: None,
         ckpt_every: 0,
         elastic: false,
+        trace_dir: None,
+        log: None,
     };
     // Theorem 1 is a statement about *matched* hyper-parameters: KFAC and
     // IKFAC get identical λ and β₁ so their preconditioners track. λ is

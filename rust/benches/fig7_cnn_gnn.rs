@@ -55,6 +55,8 @@ fn main() {
             ckpt: None,
             ckpt_every: 0,
             elastic: false,
+            trace_dir: None,
+            log: None,
         };
         let grid = run_grid(&base, &methods, &["bf16"]);
         for (label, res) in &grid {

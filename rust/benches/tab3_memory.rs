@@ -62,6 +62,8 @@ fn main() {
             ckpt: None,
             ckpt_every: 0,
             elastic: false,
+            trace_dir: None,
+            log: None,
         };
         let model = build_model(&cfg, shape, 100, &mut rng);
         let shapes = model.shapes();

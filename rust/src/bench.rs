@@ -51,7 +51,7 @@ pub struct Harness {
 
 impl Harness {
     pub fn new(label: &str) -> Self {
-        println!("== bench: {label} ==");
+        crate::obs_info!("== bench: {label} ==");
         Harness { label: label.to_string(), results: Vec::new(), target_secs: 0.5, max_iters: 1000 }
     }
 
@@ -79,7 +79,7 @@ impl Harness {
             min_ns: samples[0],
             max_ns: *samples.last().unwrap(),
         };
-        println!(
+        crate::obs_info!(
             "{:<44} {:>12} median {:>12} mean ({} iters)",
             name,
             fmt_ns(stats.median_ns),
@@ -92,7 +92,7 @@ impl Harness {
 
     /// Record an externally-measured value (e.g. bytes) as a result row.
     pub fn record(&mut self, name: &str, value: f64, unit: &str) {
-        println!("{name:<44} {value:>14.2} {unit}");
+        crate::obs_info!("{name:<44} {value:>14.2} {unit}");
         self.results.push(Stats {
             name: format!("{name} [{unit}]"),
             iters: 1,
@@ -118,7 +118,7 @@ impl Harness {
             ));
         }
         if let Ok(path) = crate::train::write_csv(&format!("{}.csv", self.label), &csv) {
-            println!("-- wrote {}", path.display());
+            crate::obs_info!("-- wrote {}", path.display());
         }
         self.results
     }

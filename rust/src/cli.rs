@@ -63,6 +63,7 @@ USAGE:
                 [--transport <local|socket>] [--algo <star|ring>]
                 [--overlap <0|1>] [--ckpt <file.ckpt>] [--ckpt-every <N>]
                 [--resume <file.ckpt>] [--elastic <0|1>]
+                [--trace-dir <dir>] [--log <error|warn|info|debug>]
   singd sweep   --config <file.toml> [--trials <N>] [--seed <S>]
   singd gcn     [--method <sgd|adamw|kfac|ingd|singd:diag|...>] [--steps <N>]
   singd inspect [--structure <dense|diag|block:k|tril|rankk:k|hier:k|toeplitz>] [--dim <d>]
@@ -95,6 +96,17 @@ only; requires --ckpt/--ckpt-every) survives worker death: survivors
 re-rendezvous into a smaller world, reshard optimizer state from the
 last checkpoint, and keep training deterministically.
 
+Observability: --trace-dir D (default: SINGD_TRACE env, else off) arms
+the per-rank structured tracer — each rank writes a span/event journal
+D/r<N>.jsonl plus a Chrome trace D/r<N>.trace.json (open in
+chrome://tracing or ui.perfetto.dev; validate with
+tools/check_trace.py). Tracing never changes training math: digests are
+bitwise identical with tracing on or off. --log L (default: SINGD_LOG
+env; info for launchers, warn for re-exec'd workers) sets the leveled
+logger; worker lines are prefixed [rN]. A mid-run STATUS query of the
+elastic control channel returns live telemetry (step, loss, bytes
+sent, grad-scaler scale, membership generation) — see PROTOCOL.md.
+
 Regenerating the paper's tables/figures (see DESIGN.md §5):
   cargo bench --bench fig1_vgg_cifar       # Fig. 1 left/center (+ stability)
   cargo bench --bench fig6_transformers    # Fig. 6
@@ -110,7 +122,7 @@ pub fn run(argv: &[String]) -> i32 {
     let args = match Args::parse(argv) {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("error: {e}\n\n{USAGE}");
+            crate::obs_error!("error: {e}\n\n{USAGE}");
             return 2;
         }
     };
@@ -124,7 +136,7 @@ pub fn run(argv: &[String]) -> i32 {
         "gcn" => cmd_gcn(&args),
         "inspect" => cmd_inspect(&args),
         other => {
-            eprintln!("unknown subcommand '{other}'\n\n{USAGE}");
+            crate::obs_error!("unknown subcommand '{other}'\n\n{USAGE}");
             2
         }
     }
@@ -140,7 +152,7 @@ fn cmd_train(args: &Args) -> i32 {
     let mut cfg = match load_config(args) {
         Ok(c) => c,
         Err(e) => {
-            eprintln!("error: {e}");
+            crate::obs_error!("error: {e}");
             return 2;
         }
     };
@@ -148,7 +160,7 @@ fn cmd_train(args: &Args) -> i32 {
         match r.parse::<usize>() {
             Ok(n) if n >= 1 => cfg.ranks = n,
             _ => {
-                eprintln!("error: bad --ranks '{r}'");
+                crate::obs_error!("error: bad --ranks '{r}'");
                 return 2;
             }
         }
@@ -157,7 +169,7 @@ fn cmd_train(args: &Args) -> i32 {
         match crate::dist::DistStrategy::parse(s) {
             Some(st) => cfg.dist_strategy = st,
             None => {
-                eprintln!("error: bad --strategy '{s}' (replicated | factor-sharded)");
+                crate::obs_error!("error: bad --strategy '{s}' (replicated | factor-sharded)");
                 return 2;
             }
         }
@@ -166,7 +178,7 @@ fn cmd_train(args: &Args) -> i32 {
         match crate::dist::Transport::parse(tr) {
             Some(t) => cfg.transport = t,
             None => {
-                eprintln!("error: bad --transport '{tr}' (local | socket)");
+                crate::obs_error!("error: bad --transport '{tr}' (local | socket)");
                 return 2;
             }
         }
@@ -175,7 +187,7 @@ fn cmd_train(args: &Args) -> i32 {
         match crate::dist::Algo::parse(al) {
             Some(a) => cfg.algo = a,
             None => {
-                eprintln!("error: bad --algo '{al}' (star | ring)");
+                crate::obs_error!("error: bad --algo '{al}' (star | ring)");
                 return 2;
             }
         }
@@ -184,7 +196,7 @@ fn cmd_train(args: &Args) -> i32 {
         match crate::dist::parse_overlap(ov) {
             Some(o) => cfg.overlap = o,
             None => {
-                eprintln!("error: bad --overlap '{ov}' (0 | 1 | on | off)");
+                crate::obs_error!("error: bad --overlap '{ov}' (0 | 1 | on | off)");
                 return 2;
             }
         }
@@ -196,7 +208,7 @@ fn cmd_train(args: &Args) -> i32 {
         match n.parse::<usize>() {
             Ok(v) => cfg.ckpt_every = v,
             Err(_) => {
-                eprintln!("error: bad --ckpt-every '{n}' (expected a non-negative integer)");
+                crate::obs_error!("error: bad --ckpt-every '{n}' (expected a non-negative integer)");
                 return 2;
             }
         }
@@ -208,9 +220,29 @@ fn cmd_train(args: &Args) -> i32 {
         match crate::dist::parse_overlap(e) {
             Some(b) => cfg.elastic = b,
             None => {
-                eprintln!("error: bad --elastic '{e}' (0 | 1 | on | off)");
+                crate::obs_error!("error: bad --elastic '{e}' (0 | 1 | on | off)");
                 return 2;
             }
+        }
+    }
+    if let Some(d) = args.get("trace-dir") {
+        cfg.trace_dir = Some(d.to_string());
+    }
+    if let Some(l) = args.get("log") {
+        match crate::obs::log::Level::parse(l) {
+            Some(level) => cfg.log = Some(level),
+            None => {
+                crate::obs_error!("error: bad --log '{l}' (error | warn | info | debug)");
+                return 2;
+            }
+        }
+    }
+    // Workers re-exec'd by the socket launcher inherit the trace dir
+    // via the pinned SINGD_TRACE env (transport::launch_workers), so a
+    // --trace-dir run traces every rank, not just rank 0.
+    if let Some(d) = &cfg.trace_dir {
+        if crate::dist::transport::worker_env().is_none() {
+            std::env::set_var("SINGD_TRACE", d);
         }
     }
     // Re-validate the elastic preconditions after flag overrides (the
@@ -218,19 +250,19 @@ fn cmd_train(args: &Args) -> i32 {
     // is a clean exit-2, not a driver panic mid-rendezvous.
     if cfg.elastic {
         if cfg.transport != crate::dist::Transport::Socket {
-            eprintln!("error: --elastic requires --transport socket");
+            crate::obs_error!("error: --elastic requires --transport socket");
             return 2;
         }
         if cfg.ckpt.is_none() {
-            eprintln!("error: --elastic requires --ckpt (recovery reloads the last checkpoint)");
+            crate::obs_error!("error: --elastic requires --ckpt (recovery reloads the last checkpoint)");
             return 2;
         }
         if cfg.ckpt_every == 0 {
-            eprintln!("error: --elastic requires --ckpt-every >= 1");
+            crate::obs_error!("error: --elastic requires --ckpt-every >= 1");
             return 2;
         }
         if cfg.ranks < 2 {
-            eprintln!("error: --elastic requires --ranks >= 2 (got {})", cfg.ranks);
+            crate::obs_error!("error: --elastic requires --ranks >= 2 (got {})", cfg.ranks);
             return 2;
         }
     }
@@ -239,21 +271,21 @@ fn cmd_train(args: &Args) -> i32 {
     if let Some(r) = &cfg.resume {
         let prev = format!("{r}.prev");
         if !std::path::Path::new(r).exists() && !std::path::Path::new(&prev).exists() {
-            eprintln!("error: --resume checkpoint '{r}' not found (nor '{prev}')");
+            crate::obs_error!("error: --resume checkpoint '{r}' not found (nor '{prev}')");
             return 2;
         }
     }
     // Catch this here (covers --ranks, [dist] ranks and SINGD_RANKS alike)
     // so a bad combination is a clean CLI error, not a driver panic.
     if cfg.ranks > 1 && cfg.batch_size < cfg.ranks {
-        eprintln!(
+        crate::obs_error!(
             "error: train.batch_size {} is smaller than ranks {}",
             cfg.batch_size, cfg.ranks
         );
         return 2;
     }
     if cfg.ranks > 1 && cfg.batch_size % cfg.ranks != 0 {
-        eprintln!(
+        crate::obs_warn!(
             "warning: train.batch_size {} is not divisible by ranks {}: shards follow \
              the balanced padding rule; training stays deterministic at this world \
              size but forfeits the bitwise rank-invariance guarantee",
@@ -268,7 +300,7 @@ fn cmd_train(args: &Args) -> i32 {
         let res = exp::run_job(&cfg);
         return if res.diverged { 1 } else { 0 };
     }
-    println!(
+    crate::obs_info!(
         "training {} / {} with {} ({}), {} epochs, ranks={} ({}, {}, {}, overlap={})",
         cfg.label,
         cfg.dataset,
@@ -283,7 +315,7 @@ fn cmd_train(args: &Args) -> i32 {
     );
     let res = exp::run_job(&cfg);
     for r in &res.rows {
-        println!(
+        crate::obs_info!(
             "epoch {:>3} step {:>6}  train_loss {:.4}  test_err {:.4}{}",
             r.epoch,
             r.step,
@@ -292,17 +324,17 @@ fn cmd_train(args: &Args) -> i32 {
             if r.diverged { "  DIVERGED" } else { "" }
         );
     }
-    println!(
+    crate::obs_info!(
         "final_err {:.4}  best {:.4}  optimizer_state {} bytes  wall {:.1}s  param_digest {:016x}",
         res.final_test_err, res.best_test_err, res.optimizer_bytes, res.wall_secs, res.param_digest
     );
     if let Some(out) = args.get("out") {
         let csv = res.to_csv(&cfg.label);
         if let Err(e) = std::fs::write(out, csv) {
-            eprintln!("write {out}: {e}");
+            crate::obs_error!("write {out}: {e}");
             return 1;
         }
-        println!("wrote {out}");
+        crate::obs_info!("wrote {out}");
     }
     if res.diverged {
         1
@@ -315,7 +347,7 @@ fn cmd_sweep(args: &Args) -> i32 {
     let cfg = match load_config(args) {
         Ok(c) => c,
         Err(e) => {
-            eprintln!("error: {e}");
+            crate::obs_error!("error: {e}");
             return 2;
         }
     };
@@ -323,7 +355,7 @@ fn cmd_sweep(args: &Args) -> i32 {
     let seed = args.usize_or("seed", 0) as u64;
     let results = crate::sweep::random_search(&cfg, &crate::sweep::Space::default(), trials, seed);
     let best = &results[0];
-    println!(
+    crate::obs_info!(
         "best: err {:.4} @ lr={:.3e} wd={:.3e} λ={:.3e} β₁={:.3e} α₁={:.1}",
         best.final_err,
         best.hyper.lr,
@@ -338,17 +370,17 @@ fn cmd_sweep(args: &Args) -> i32 {
 fn cmd_gcn(args: &Args) -> i32 {
     let method = Method::parse(args.get("method").unwrap_or("singd:diag"));
     let Some(method) = method else {
-        eprintln!("unknown --method");
+        crate::obs_error!("unknown --method");
         return 2;
     };
     let steps = args.usize_or("steps", 200);
     let hp = exp::default_hyper(&method, false);
     let (curve, diverged) = exp::run_gcn(&method, &hp, steps, 7);
     for (t, loss, err) in &curve {
-        println!("step {t:>5}  test_loss {loss:.4}  test_err {err:.4}");
+        crate::obs_info!("step {t:>5}  test_loss {loss:.4}  test_err {err:.4}");
     }
     if diverged {
-        println!("DIVERGED");
+        crate::obs_info!("DIVERGED");
         1
     } else {
         0

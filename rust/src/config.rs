@@ -40,9 +40,16 @@
 //! overlap = true               # comm/compute overlap (default: SINGD_OVERLAP env, else on)
 //! elastic = true               # survive worker death / admit joiners (socket only;
 //!                              # requires ckpt + ckpt_every >= 1)
+//!
+//! [obs]
+//! trace_dir = "traces/run1"    # per-rank span journal + Chrome trace
+//!                              # (default: SINGD_TRACE env, else off)
+//! log = "debug"                # error | warn | info | debug
+//!                              # (default: SINGD_LOG env, else info)
 //! ```
 
 use crate::dist::{self, Algo, DistStrategy, Transport};
+use crate::obs::log::Level;
 use crate::numerics::Policy;
 use crate::optim::{Hyper, Method};
 use crate::train::Schedule;
@@ -255,6 +262,15 @@ pub struct JobConfig {
     /// Elastic fault tolerance (`[dist] elastic` / `--elastic`): socket
     /// transport only, requires `ckpt` + `ckpt_every >= 1` + `ranks >= 2`.
     pub elastic: bool,
+    /// Structured-trace output directory (`[obs] trace_dir` /
+    /// `--trace-dir`; defaults to the `SINGD_TRACE` env contract, else
+    /// off). Each rank writes `r<N>.jsonl` + `r<N>.trace.json` there;
+    /// tracing never changes training math (the non-interference
+    /// contract of [`crate::obs`]).
+    pub trace_dir: Option<String>,
+    /// Log-level override (`[obs] log`; defaults to the `SINGD_LOG` env
+    /// contract — see [`crate::obs::log`]).
+    pub log: Option<Level>,
 }
 
 impl JobConfig {
@@ -343,6 +359,26 @@ impl JobConfig {
             Some(Value::Bool(b)) => *b,
             Some(v) => return Err(format!("bad dist.elastic value {v:?} (true | false)")),
         };
+        let trace_dir = match t.get("obs.trace_dir") {
+            None => std::env::var("SINGD_TRACE").ok().filter(|v| !v.is_empty()),
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| {
+                        format!("bad obs.trace_dir value {v:?} (expected a string path)")
+                    })?
+                    .to_string(),
+            ),
+        };
+        let log = match t.get("obs.log") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .and_then(Level::parse)
+                    .ok_or_else(|| {
+                        format!("bad obs.log value {v:?} (error | warn | info | debug)")
+                    })?,
+            ),
+        };
         if elastic {
             if transport != Transport::Socket {
                 return Err(
@@ -391,6 +427,8 @@ impl JobConfig {
             ckpt,
             ckpt_every,
             elastic,
+            trace_dir,
+            log,
         })
     }
 
@@ -556,6 +594,24 @@ seed = 7
         let one_rank = good.replace("ranks = 4", "ranks = 1");
         assert!(JobConfig::from_str_toml(&one_rank).unwrap_err().contains("ranks"));
         assert!(JobConfig::from_str_toml("[dist]\nelastic = \"sideways\"\n").is_err());
+    }
+
+    #[test]
+    fn obs_section_parses_trace_dir_and_log() {
+        let cfg =
+            JobConfig::from_str_toml("[obs]\ntrace_dir = \"traces/t1\"\nlog = \"debug\"\n")
+                .unwrap();
+        assert_eq!(cfg.trace_dir.as_deref(), Some("traces/t1"));
+        assert_eq!(cfg.log, Some(Level::Debug));
+        // Defaults: log unset (env contract applies at run time). The
+        // trace_dir default reads SINGD_TRACE, which tests must not set
+        // process-wide, so only the explicit-key paths are pinned here.
+        let cfg = JobConfig::from_str_toml("[model]\narch = \"mlp\"\n").unwrap();
+        assert_eq!(cfg.log, None);
+        // Wrong types / unknown levels are rejected loudly.
+        assert!(JobConfig::from_str_toml("[obs]\ntrace_dir = 3\n").is_err());
+        assert!(JobConfig::from_str_toml("[obs]\nlog = \"loud\"\n").is_err());
+        assert!(JobConfig::from_str_toml("[obs]\nlog = 2\n").is_err());
     }
 
     #[test]

@@ -48,8 +48,20 @@
 //! counters of [`crate::dist::traffic`] when the operation completes, so
 //! concurrently in-flight ops attribute bytes-on-wire atomically — a
 //! snapshot never observes a half-accounted collective.
+//!
+//! # Observability
+//!
+//! When a trace session is armed ([`crate::obs::trace`]), each op's
+//! lifecycle is journaled: an `op_issue` instant on the issuing thread,
+//! an `op_exec` span (category `comm`, with final byte count) on the
+//! engine thread, and an `op_wait` span (category `wait`) around
+//! [`PendingOp::wait`], all correlated by a per-process op id. Disabled,
+//! each hook is one relaxed atomic load; the id is only ever assigned
+//! under an armed session, so the hot path is untouched — and nothing
+//! here feeds back into execution (non-interference).
 
 use crate::dist::traffic;
+use crate::obs::trace;
 use crate::tensor::pool;
 use std::any::Any;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -84,6 +96,9 @@ struct Shared<T> {
     cv: Condvar,
     /// Payload-frame bytes this op put on the wire (final once complete).
     bytes: AtomicU64,
+    /// Trace correlation id (0 = untraced; assigned at submit only when
+    /// a trace session is armed).
+    op_id: AtomicU64,
 }
 
 /// Handle to a nonblocking collective in flight: poll with
@@ -105,6 +120,7 @@ impl<T> PendingOp<T> {
                 slot: Mutex::new(Slot::Done(value)),
                 cv: Condvar::new(),
                 bytes: AtomicU64::new(0),
+                op_id: AtomicU64::new(0),
             }),
         }
     }
@@ -114,6 +130,7 @@ impl<T> PendingOp<T> {
             slot: Mutex::new(Slot::Pending),
             cv: Condvar::new(),
             bytes: AtomicU64::new(0),
+            op_id: AtomicU64::new(0),
         });
         (PendingOp { shared: Arc::clone(&shared) }, shared)
     }
@@ -150,6 +167,10 @@ impl<T> PendingOp<T> {
     /// in-flight ops propagate exactly like failures of blocking
     /// collectives.
     pub fn wait(self) -> T {
+        let mut sp = trace::span("op_wait", "wait");
+        if sp.is_recording() {
+            sp.arg("op", trace::ArgVal::U(self.shared.op_id.load(Ordering::Relaxed)));
+        }
         let mut slot = self.shared.slot.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             match std::mem::replace(&mut *slot, Slot::Taken) {
@@ -207,11 +228,23 @@ impl Engine {
             "dist: an earlier nonblocking collective on this communicator failed"
         );
         let (op, shared) = PendingOp::fresh();
+        if trace::active() {
+            static NEXT_OP_ID: AtomicU64 = AtomicU64::new(1);
+            let id = NEXT_OP_ID.fetch_add(1, Ordering::Relaxed);
+            shared.op_id.store(id, Ordering::Relaxed);
+            trace::instant_rank("op_issue", "comm", rank, vec![("op", trace::ArgVal::U(id))]);
+        }
         let poisoned = Arc::clone(&self.poisoned);
         let job: Job = Box::new(move || {
             traffic::op_begin(rank, Arc::clone(&shared));
+            let mut sp = trace::span_rank("op_exec", "comm", rank);
             let out = catch_unwind(AssertUnwindSafe(f));
             traffic::op_end();
+            if sp.is_recording() {
+                sp.arg("op", trace::ArgVal::U(shared.op_id.load(Ordering::Relaxed)));
+                sp.arg("bytes", trace::ArgVal::U(shared.bytes.load(Ordering::Relaxed)));
+            }
+            drop(sp);
             let mut slot = shared.slot.lock().unwrap_or_else(|e| e.into_inner());
             *slot = match out {
                 Ok(v) => Slot::Done(v),

@@ -647,6 +647,38 @@ fn write_reply28(s: &mut Stream, status: u32, world: u32, gen: u64, extra: u32) 
     s.flush()
 }
 
+/// Write the 40-byte STATUS metrics block that follows a successful
+/// STATUS reply: `step u64 | loss_bits u64 | bytes u64 | scale_bits
+/// u64 | gen u64`, little-endian (PROTOCOL.md §control frames). Other
+/// reply kinds stay 28 bytes — the block is appended only where the
+/// client knows to read it.
+fn write_status_metrics(
+    s: &mut Stream,
+    m: &crate::obs::metrics::StatusMetrics,
+) -> io::Result<()> {
+    let mut w = [0u8; 40];
+    w[0..8].copy_from_slice(&m.step.to_le_bytes());
+    w[8..16].copy_from_slice(&m.loss_bits.to_le_bytes());
+    w[16..24].copy_from_slice(&m.bytes.to_le_bytes());
+    w[24..32].copy_from_slice(&m.scale_bits.to_le_bytes());
+    w[32..40].copy_from_slice(&m.gen.to_le_bytes());
+    s.write_all(&w)?;
+    s.flush()
+}
+
+/// Read the 40-byte STATUS metrics block (see [`write_status_metrics`]).
+fn read_status_metrics(s: &mut Stream) -> io::Result<crate::obs::metrics::StatusMetrics> {
+    let mut w = [0u8; 40];
+    s.read_exact(&mut w)?;
+    Ok(crate::obs::metrics::StatusMetrics {
+        step: u64::from_le_bytes(w[0..8].try_into().unwrap()),
+        loss_bits: u64::from_le_bytes(w[8..16].try_into().unwrap()),
+        bytes: u64::from_le_bytes(w[16..24].try_into().unwrap()),
+        scale_bits: u64::from_le_bytes(w[24..32].try_into().unwrap()),
+        gen: u64::from_le_bytes(w[32..40].try_into().unwrap()),
+    })
+}
+
 /// Read a 28-byte control/grant reply; returns `(status, world, gen,
 /// extra)` after validating the magic.
 fn read_reply28(s: &mut Stream) -> io::Result<(u32, u32, u64, u32)> {
@@ -1108,6 +1140,14 @@ impl SocketComm {
     /// peers observe EOF mid-collective (including mid-pending-op)
     /// instead of a clean shutdown.
     pub fn sever(&self) {
+        if crate::obs::trace::active() {
+            crate::obs::trace::instant_rank(
+                "sever",
+                "elastic",
+                self.core.rank,
+                vec![("world", crate::obs::trace::ArgVal::U(self.core.world as u64))],
+            );
+        }
         self.core.sever();
     }
 }
@@ -1666,9 +1706,14 @@ pub fn fresh_run_id() -> u64 {
 /// pinned to the launcher's resolved collective algorithm and overlap
 /// mode so a programmatically-set [`crate::train::DistCfg`] reaches
 /// workers whose argv/config do not carry them (every rank of a world
-/// must agree on both run-level constants). The calling process is rank
-/// 0. Worker stdout is discarded (rank 0 owns reporting); stderr is
-/// inherited so worker panics stay visible.
+/// must agree on both run-level constants); `SINGD_TRACE` and
+/// `SINGD_LOG` are pinned to the launcher's trace directory and log
+/// level so observability knobs propagate to workers the same way
+/// (each worker exports its own `r<N>` trace files into the shared
+/// directory). The calling process is rank 0. Worker stdout is
+/// discarded — stdout is the launcher's data channel, and workers log
+/// at `warn` by default anyway (`SINGD_LOG` contract); stderr is
+/// inherited so worker panics and rank-prefixed warnings stay visible.
 pub fn launch_workers(
     world: usize,
     rendezvous: &str,
@@ -1684,17 +1729,26 @@ pub fn launch_workers(
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut children = Vec::with_capacity(world.saturating_sub(1));
     for r in 1..world {
-        let child = std::process::Command::new(&exe)
-            .args(&args)
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.args(&args)
             .env(ENV_RANK, r.to_string())
             .env(ENV_WORLD, world.to_string())
             .env(ENV_RENDEZVOUS, rendezvous)
             .env(ENV_RUN_ID, run_id.to_string())
             .env("SINGD_ALGO", algo.name())
             .env("SINGD_OVERLAP", if overlap { "1" } else { "0" })
-            .stdout(std::process::Stdio::null())
-            .spawn()?;
-        children.push(child);
+            .stdout(std::process::Stdio::null());
+        for knob in ["SINGD_TRACE", "SINGD_LOG"] {
+            match std::env::var(knob) {
+                Ok(v) => {
+                    cmd.env(knob, v);
+                }
+                Err(_) => {
+                    cmd.env_remove(knob);
+                }
+            }
+        }
+        children.push(cmd.spawn()?);
     }
     Ok(children)
 }
@@ -1837,6 +1891,13 @@ pub struct WorldStatus {
     pub gen: u64,
     /// Current run state.
     pub state: RunState,
+    /// Live telemetry snapshot from the coordinator process (current
+    /// step, loss, bytes sent, scaler scale, generation) — the 40-byte
+    /// metrics block every STATUS reply carries (PROTOCOL.md §control
+    /// frames). All-`u64` so [`WorldStatus`] stays `Eq`; decode floats
+    /// with [`crate::obs::metrics::StatusMetrics::loss`] /
+    /// [`crate::obs::metrics::StatusMetrics::scale`].
+    pub metrics: crate::obs::metrics::StatusMetrics,
 }
 
 /// A rank's identity in a regrouped world: the outcome of
@@ -2053,6 +2114,18 @@ impl Coordinator {
         sh.world = new_world as u32;
         sh.gen = gen;
         sh.state = RunState::Running;
+        if crate::obs::trace::active() {
+            crate::obs::trace::instant_rank(
+                "regroup",
+                "elastic",
+                0,
+                vec![
+                    ("gen", crate::obs::trace::ArgVal::U(gen)),
+                    ("world", crate::obs::trace::ArgVal::U(new_world as u64)),
+                    ("joiners", crate::obs::trace::ArgVal::U(n_join as u64)),
+                ],
+            );
+        }
         Ok(Membership { rank: 0, world: new_world, gen })
     }
 
@@ -2106,7 +2179,17 @@ fn ctrl_serve(
                             let sh = shared.lock().unwrap_or_else(|e| e.into_inner());
                             (sh.world, sh.gen, sh.state)
                         };
-                        let _ = write_reply28(&mut s, ST_OK, w, g, st.to_u32());
+                        // The live telemetry block: step/loss/scale from
+                        // the always-on obs snapshot this (coordinator =
+                        // rank 0) process maintains, bytes from its
+                        // traffic slots — a `/status` endpoint readable
+                        // mid-run without touching the data plane.
+                        let m = crate::obs::metrics::status_snapshot(
+                            crate::dist::traffic::total_sent(),
+                        );
+                        if write_reply28(&mut s, ST_OK, w, g, st.to_u32()).is_ok() {
+                            let _ = write_status_metrics(&mut s, &m);
+                        }
                         s.shutdown();
                     }
                     Ok(h) if h.intent == INTENT_JOIN => {
@@ -2164,6 +2247,17 @@ pub fn rejoin(rendezvous: &str, run_id: u64, old_rank: usize, gen: u64) -> io::R
     if got_gen != gen || rank == u32::MAX {
         return Err(io::Error::new(io::ErrorKind::InvalidData, "malformed membership grant"));
     }
+    if crate::obs::trace::active() {
+        crate::obs::trace::instant_rank(
+            "rejoin",
+            "elastic",
+            rank as usize,
+            vec![
+                ("gen", crate::obs::trace::ArgVal::U(gen)),
+                ("world", crate::obs::trace::ArgVal::U(world as u64)),
+            ],
+        );
+    }
     Ok(Membership { rank: rank as usize, world: world as usize, gen })
 }
 
@@ -2211,14 +2305,17 @@ pub fn status(rendezvous: &str, run_id: u64) -> io::Result<WorldStatus> {
     write_hello(&mut s, run_id, 0, RANK_NONE, 0, INTENT_STATUS)?;
     let (status, world, gen, state) =
         read_reply28(&mut s).map_err(|e| io_ctx(e, "status: read reply"))?;
-    s.shutdown();
     if status != ST_OK {
+        s.shutdown();
         return Err(io::Error::new(
             io::ErrorKind::ConnectionRefused,
             format!("status query rejected: {}", status_msg(status)),
         ));
     }
-    Ok(WorldStatus { world: world as usize, gen, state: RunState::from_u32(state)? })
+    let metrics =
+        read_status_metrics(&mut s).map_err(|e| io_ctx(e, "status: read metrics block"))?;
+    s.shutdown();
+    Ok(WorldStatus { world: world as usize, gen, state: RunState::from_u32(state)?, metrics })
 }
 
 #[cfg(test)]
@@ -2513,9 +2610,11 @@ mod tests {
         let rendezvous = fresh_rendezvous();
         let run_id = fresh_run_id();
         let coord = Coordinator::new(&rendezvous, run_id, 3).expect("coordinator");
-        // Status reflects the initial world.
+        // Status reflects the initial world. The metrics block mirrors
+        // live process-wide telemetry (other tests may be stepping or
+        // sending concurrently), so assert the membership fields only.
         let st = status(&rendezvous, run_id).expect("status");
-        assert_eq!(st, WorldStatus { world: 3, gen: 0, state: RunState::Running });
+        assert_eq!((st.world, st.gen, st.state), (3, 0, RunState::Running));
         // A stale-run status probe is rejected.
         let bad = status(&rendezvous, run_id ^ 1).unwrap_err().to_string();
         assert!(bad.contains("stale peer"), "unexpected status rejection: {bad}");
@@ -2538,7 +2637,7 @@ mod tests {
             assert_eq!(j.join().unwrap().unwrap(), Membership { rank: 3, world: 4, gen: 1 });
         });
         let st = status(&rendezvous, run_id).expect("status after regroup");
-        assert_eq!(st, WorldStatus { world: 4, gen: 1, state: RunState::Running });
+        assert_eq!((st.world, st.gen, st.state), (4, 1, RunState::Running));
         // After finish(), joiners are turned away.
         coord.finish();
         let refused = join(&rendezvous, run_id).unwrap_err().to_string();

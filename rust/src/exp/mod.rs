@@ -58,6 +58,11 @@ pub fn build_model(cfg: &JobConfig, shape: ImgShape, classes: usize, rng: &mut P
 /// (in-process `local` or multi-process `socket`); `ranks = 1` is the
 /// serial path.
 pub fn run_job(cfg: &JobConfig) -> RunResult {
+    // `[obs] log` overrides the SINGD_LOG / worker-default level for the
+    // whole process — observability config, never training math.
+    if let Some(level) = cfg.log {
+        crate::obs::log::set_level(level);
+    }
     let mut rng = Pcg::with_stream(cfg.seed, 0xda7a);
     let ds = build_dataset(cfg, &mut rng);
     let mut model = build_model(cfg, ds.shape, ds.classes, &mut rng);
@@ -73,6 +78,7 @@ pub fn run_job(cfg: &JobConfig) -> RunResult {
         resume: cfg.resume.as_ref().map(std::path::PathBuf::from),
         ckpt: cfg.ckpt.as_ref().map(std::path::PathBuf::from),
         ckpt_every: cfg.ckpt_every,
+        trace_dir: cfg.trace_dir.as_ref().map(std::path::PathBuf::from),
     };
     let dc = DistCfg {
         ranks: cfg.ranks,
@@ -101,7 +107,7 @@ pub fn run_grid(
             cfg.hyper.policy = crate::numerics::Policy::parse(prec).expect("precision");
             let label = format!("{}-{}", method.name(), prec);
             let res = run_job(&cfg);
-            println!(
+            crate::obs_info!(
                 "{label:<28} final_err={:.3} best={:.3} diverged={} bytes={} wall={:.1}s {}",
                 res.final_test_err,
                 res.best_test_err,
@@ -236,6 +242,8 @@ mod tests {
             ckpt: None,
             ckpt_every: 0,
             elastic: false,
+            trace_dir: None,
+            log: None,
         }
     }
 

@@ -27,6 +27,9 @@
 //!   artifacts (produced by `python/compile/aot.py`) and executes them.
 //! - [`train`] — training-loop driver, LR schedules, metrics, checkpoints,
 //!   memory accounting.
+//! - [`obs`] — observability: leveled logging, a process-wide metrics
+//!   registry, and a per-rank span tracer (JSONL + Chrome `trace_event`
+//!   export) under a strict non-interference contract.
 //! - [`config`] — typed configuration + minimal TOML-subset parser.
 //! - [`sweep`] — random hyperparameter search (paper Table 4).
 //! - [`exp`] — one driver per paper table/figure.
@@ -43,6 +46,7 @@ pub mod exp;
 pub mod linalg;
 pub mod model;
 pub mod numerics;
+pub mod obs;
 pub mod optim;
 pub mod proptest;
 pub mod runtime;

@@ -63,6 +63,16 @@ impl GradScaler {
             self.scale = (self.scale * self.backoff_factor).max(1.0);
             self.clean_steps = 0;
             self.skipped += 1;
+            // Observability only — nothing below affects the decision.
+            crate::obs_count!("scaler.overflows", 1);
+            crate::obs::metrics::set_scale(self.scale);
+            if crate::obs::trace::active() {
+                crate::obs::trace::instant(
+                    "scaler_overflow",
+                    "scaler",
+                    vec![("scale", crate::obs::trace::ArgVal::F(self.scale as f64))],
+                );
+            }
             return false;
         }
         for g in grads.iter_mut() {
@@ -72,7 +82,16 @@ impl GradScaler {
         if self.clean_steps >= self.growth_interval {
             self.scale *= self.growth_factor;
             self.clean_steps = 0;
+            crate::obs_count!("scaler.growths", 1);
+            if crate::obs::trace::active() {
+                crate::obs::trace::instant(
+                    "scaler_growth",
+                    "scaler",
+                    vec![("scale", crate::obs::trace::ArgVal::F(self.scale as f64))],
+                );
+            }
         }
+        crate::obs::metrics::set_scale(self.scale);
         true
     }
 }

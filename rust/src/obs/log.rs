@@ -1,0 +1,220 @@
+//! Leveled, rank-prefixed logging.
+//!
+//! One process-wide level, initialized lazily from `SINGD_LOG`
+//! (`error|warn|info|debug`). When `SINGD_LOG` is unset, launcher
+//! processes default to [`Level::Info`] and worker processes (those
+//! with `SINGD_RANK` in the environment) default to [`Level::Warn`] —
+//! the logger is the single quiet-worker mechanism, replacing per-site
+//! print guards. `[obs] log` config keys override via [`set_level`].
+//!
+//! Messages at `info`/`debug` go to stdout, `warn`/`error` to stderr,
+//! matching the `println!`/`eprintln!` split of the call sites the
+//! logger replaced. When the emitting thread runs inside a rank (an
+//! SPMD rank body, or a worker process) the line is prefixed `[rN] `;
+//! launcher output stays unprefixed so existing stdout consumers see
+//! byte-identical lines.
+//!
+//! Use the crate-root macros, not [`emit`] directly:
+//!
+//! ```
+//! # use singd::obs_info;
+//! obs_info!("training {} ranks", 4);
+//! ```
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Log severity, ordered `Error < Warn < Info < Debug` (a level enables
+/// itself and everything less verbose).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or operator-facing failures (stderr).
+    Error = 0,
+    /// Degraded-but-continuing conditions, e.g. elastic recovery notes
+    /// (stderr). The default for worker processes.
+    Warn = 1,
+    /// Progress output: banners, per-epoch rows, artifact paths
+    /// (stdout). The default for launcher processes.
+    Info = 2,
+    /// Verbose diagnostics (stdout).
+    Debug = 3,
+}
+
+impl Level {
+    /// Parse a `SINGD_LOG` / `[obs] log` value. Case-insensitive;
+    /// `None` for anything that is not one of the four level names.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    /// The canonical lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            _ => Level::Debug,
+        }
+    }
+}
+
+const UNINIT: u8 = 0xff;
+static LEVEL: AtomicU8 = AtomicU8::new(UNINIT);
+
+fn init_level() -> Level {
+    if let Some(l) = std::env::var("SINGD_LOG").ok().as_deref().and_then(Level::parse) {
+        return l;
+    }
+    // Workers (re-exec'd with SINGD_RANK pinned) default quiet: their
+    // stdout is the launcher's data channel, not a progress feed.
+    if std::env::var("SINGD_RANK").is_ok() {
+        Level::Warn
+    } else {
+        Level::Info
+    }
+}
+
+/// The current process-wide level (lazily initialized, see module docs).
+pub fn current() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        UNINIT => {
+            let l = init_level();
+            LEVEL.store(l as u8, Ordering::Relaxed);
+            l
+        }
+        v => Level::from_u8(v),
+    }
+}
+
+/// Override the process-wide level (config `[obs] log`, tests).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Whether messages at `level` are currently emitted — the cheap check
+/// the macros perform before building `format_args!`.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    level <= current()
+}
+
+/// The rank prefix for the calling thread: the SPMD thread rank when
+/// set (rank bodies install it via [`crate::obs::trace::rank_scope`]),
+/// else the process's `SINGD_RANK` (worker processes), else none.
+fn prefix_rank() -> Option<u32> {
+    let r = crate::obs::trace::thread_rank_raw();
+    if r != crate::obs::trace::RANK_NONE {
+        return Some(r);
+    }
+    static ENV_RANK: OnceLock<Option<u32>> = OnceLock::new();
+    *ENV_RANK.get_or_init(|| std::env::var("SINGD_RANK").ok().and_then(|v| v.parse().ok()))
+}
+
+/// Emit one message (the macros' backend; rechecks [`enabled`]).
+pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    match (level, prefix_rank()) {
+        (Level::Error | Level::Warn, Some(r)) => eprintln!("[r{r}] {args}"),
+        (Level::Error | Level::Warn, None) => eprintln!("{args}"),
+        (_, Some(r)) => println!("[r{r}] {args}"),
+        (_, None) => println!("{args}"),
+    }
+}
+
+/// Log at [`Level::Error`] (stderr).
+#[macro_export]
+macro_rules! obs_error {
+    ($($a:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::emit($crate::obs::log::Level::Error, ::std::format_args!($($a)*));
+        }
+    };
+}
+
+/// Log at [`Level::Warn`] (stderr).
+#[macro_export]
+macro_rules! obs_warn {
+    ($($a:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::emit($crate::obs::log::Level::Warn, ::std::format_args!($($a)*));
+        }
+    };
+}
+
+/// Log at [`Level::Info`] (stdout).
+#[macro_export]
+macro_rules! obs_info {
+    ($($a:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::emit($crate::obs::log::Level::Info, ::std::format_args!($($a)*));
+        }
+    };
+}
+
+/// Log at [`Level::Debug`] (stdout).
+#[macro_export]
+macro_rules! obs_debug {
+    ($($a:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::emit($crate::obs::log::Level::Debug, ::std::format_args!($($a)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_four_levels_case_insensitively() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse(" Info "), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("verbose"), None);
+        assert_eq!(Level::parse(""), None);
+    }
+
+    #[test]
+    fn levels_order_by_verbosity() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn set_level_gates_enabled() {
+        // The level is process-global; restore what other tests expect.
+        let prev = current();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(prev);
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::parse(l.name()), Some(l));
+        }
+    }
+}

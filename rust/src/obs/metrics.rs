@@ -1,0 +1,342 @@
+//! Process-wide metrics registry plus the always-on status snapshot.
+//!
+//! Metrics are registered by name on first use and live for the process
+//! lifetime (lookup-or-leak, the same discipline as the
+//! [`crate::dist::traffic`] slots): [`counter`] / [`gauge`] / [`histo`]
+//! return `&'static` handles whose update paths are single relaxed
+//! atomic ops — safe on hot paths and from any thread. The crate-root
+//! `obs_count!` / `obs_gauge!` / `obs_histo!` macros cache the
+//! registry lookup in a per-call-site static so steady-state cost is
+//! the atomic op alone.
+//!
+//! [`status_snapshot`] reads the live telemetry atomics (current step,
+//! loss, scaler scale, world generation) that the training drivers
+//! maintain unconditionally; the elastic STATUS control reply ships it
+//! on the wire (PROTOCOL.md §control frames).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// A monotonically increasing event/byte counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add `n` (relaxed).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value (relaxed).
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins instantaneous value (stored as `f64` bits).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Set the gauge (relaxed).
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value (relaxed).
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// A count/sum/max summary of observed `u64` samples (e.g. durations
+/// in µs, batch sizes). Deliberately bucket-free: cheap, lock-free,
+/// and enough for mean + worst-case reporting.
+#[derive(Debug, Default)]
+pub struct Histo {
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Histo {
+    /// Record one sample (relaxed).
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// `(count, sum, max)` of everything observed so far (relaxed).
+    pub fn get(&self) -> (u64, u64, u64) {
+        (
+            self.count.load(Ordering::Relaxed),
+            self.sum.load(Ordering::Relaxed),
+            self.max.load(Ordering::Relaxed),
+        )
+    }
+}
+
+enum Slot {
+    C(&'static Counter),
+    G(&'static Gauge),
+    H(&'static Histo),
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, Slot>> {
+    static REG: OnceLock<Mutex<BTreeMap<String, Slot>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Look up (registering on first use) the counter named `name`.
+///
+/// # Panics
+///
+/// If `name` is already registered as a different metric kind.
+pub fn counter(name: &str) -> &'static Counter {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    match reg
+        .entry(name.to_string())
+        .or_insert_with(|| Slot::C(Box::leak(Box::new(Counter::default()))))
+    {
+        Slot::C(c) => c,
+        _ => panic!("obs: metric {name:?} already registered with a different kind"),
+    }
+}
+
+/// Look up (registering on first use) the gauge named `name`.
+///
+/// # Panics
+///
+/// If `name` is already registered as a different metric kind.
+pub fn gauge(name: &str) -> &'static Gauge {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    match reg
+        .entry(name.to_string())
+        .or_insert_with(|| Slot::G(Box::leak(Box::new(Gauge::default()))))
+    {
+        Slot::G(g) => g,
+        _ => panic!("obs: metric {name:?} already registered with a different kind"),
+    }
+}
+
+/// Look up (registering on first use) the histogram named `name`.
+///
+/// # Panics
+///
+/// If `name` is already registered as a different metric kind.
+pub fn histo(name: &str) -> &'static Histo {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    match reg
+        .entry(name.to_string())
+        .or_insert_with(|| Slot::H(Box::leak(Box::new(Histo::default()))))
+    {
+        Slot::H(h) => h,
+        _ => panic!("obs: metric {name:?} already registered with a different kind"),
+    }
+}
+
+/// A snapshot value for one registered metric.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    /// Counter value.
+    Counter(u64),
+    /// Gauge value.
+    Gauge(f64),
+    /// Histogram `(count, sum, max)`.
+    Histo(u64, u64, u64),
+}
+
+/// Snapshot every registered metric, sorted by name.
+pub fn snapshot() -> Vec<(String, MetricValue)> {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.iter()
+        .map(|(k, v)| {
+            let mv = match v {
+                Slot::C(c) => MetricValue::Counter(c.get()),
+                Slot::G(g) => MetricValue::Gauge(g.get()),
+                Slot::H(h) => {
+                    let (n, s, m) = h.get();
+                    MetricValue::Histo(n, s, m)
+                }
+            };
+            (k.clone(), mv)
+        })
+        .collect()
+}
+
+/// Add to a named counter, caching the registry lookup per call site.
+#[macro_export]
+macro_rules! obs_count {
+    ($name:literal, $n:expr) => {{
+        static SLOT: ::std::sync::OnceLock<&'static $crate::obs::metrics::Counter> =
+            ::std::sync::OnceLock::new();
+        SLOT.get_or_init(|| $crate::obs::metrics::counter($name)).add($n);
+    }};
+}
+
+/// Set a named gauge, caching the registry lookup per call site.
+#[macro_export]
+macro_rules! obs_gauge {
+    ($name:literal, $v:expr) => {{
+        static SLOT: ::std::sync::OnceLock<&'static $crate::obs::metrics::Gauge> =
+            ::std::sync::OnceLock::new();
+        SLOT.get_or_init(|| $crate::obs::metrics::gauge($name)).set($v);
+    }};
+}
+
+/// Observe into a named histogram, caching the registry lookup per
+/// call site.
+#[macro_export]
+macro_rules! obs_histo {
+    ($name:literal, $v:expr) => {{
+        static SLOT: ::std::sync::OnceLock<&'static $crate::obs::metrics::Histo> =
+            ::std::sync::OnceLock::new();
+        SLOT.get_or_init(|| $crate::obs::metrics::histo($name)).observe($v);
+    }};
+}
+
+// ---------------------------------------------------------------------
+// Live status snapshot (the STATUS telemetry payload).
+// ---------------------------------------------------------------------
+
+static STEP: AtomicU64 = AtomicU64::new(0);
+static LOSS_BITS: AtomicU64 = AtomicU64::new(0);
+static SCALE_BITS: AtomicU64 = AtomicU64::new(0);
+static GEN: AtomicU64 = AtomicU64::new(0);
+
+/// Record the current global training step (relaxed; always-on).
+#[inline]
+pub fn set_step(step: u64) {
+    STEP.store(step, Ordering::Relaxed);
+}
+
+/// Record the most recent training loss (relaxed; always-on).
+#[inline]
+pub fn set_loss(loss: f64) {
+    LOSS_BITS.store(loss.to_bits(), Ordering::Relaxed);
+}
+
+/// Record the current GradScaler scale (relaxed; always-on).
+#[inline]
+pub fn set_scale(scale: f32) {
+    SCALE_BITS.store(scale.to_bits() as u64, Ordering::Relaxed);
+}
+
+/// Record the current elastic world generation (relaxed; always-on).
+#[inline]
+pub fn set_gen(gen: u64) {
+    GEN.store(gen, Ordering::Relaxed);
+}
+
+/// The live metrics payload carried by the elastic STATUS control
+/// reply: all fields are raw `u64` so the struct stays `Eq` and maps
+/// 1:1 onto the 40-byte wire block (PROTOCOL.md §control frames).
+/// Floats travel as IEEE-754 bits; use [`StatusMetrics::loss`] /
+/// [`StatusMetrics::scale`] to decode.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatusMetrics {
+    /// Current global training step on the replying process.
+    pub step: u64,
+    /// Most recent loss, as `f64` bits.
+    pub loss_bits: u64,
+    /// Bytes sent by the replying process ([`crate::dist::traffic`]),
+    /// current traffic epoch only.
+    pub bytes: u64,
+    /// Current GradScaler scale, as `f32` bits (in the low 32).
+    pub scale_bits: u64,
+    /// Elastic world generation the replying process is training in.
+    pub gen: u64,
+}
+
+impl StatusMetrics {
+    /// Decode the loss field.
+    pub fn loss(&self) -> f64 {
+        f64::from_bits(self.loss_bits)
+    }
+
+    /// Decode the scale field.
+    pub fn scale(&self) -> f32 {
+        f32::from_bits(self.scale_bits as u32)
+    }
+}
+
+/// Snapshot the live telemetry atomics. `bytes` is supplied by the
+/// caller (the coordinator passes its process's
+/// [`crate::dist::traffic::total_sent`]) so this module stays free of
+/// dist dependencies.
+pub fn status_snapshot(bytes: u64) -> StatusMetrics {
+    StatusMetrics {
+        step: STEP.load(Ordering::Relaxed),
+        loss_bits: LOSS_BITS.load(Ordering::Relaxed),
+        bytes,
+        scale_bits: SCALE_BITS.load(Ordering::Relaxed),
+        gen: GEN.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_histo_register_once_and_accumulate() {
+        let c = counter("test.metrics.counter");
+        c.add(3);
+        counter("test.metrics.counter").add(4);
+        assert_eq!(c.get(), 7);
+
+        gauge("test.metrics.gauge").set(2.5);
+        assert_eq!(gauge("test.metrics.gauge").get(), 2.5);
+
+        let h = histo("test.metrics.histo");
+        h.observe(10);
+        h.observe(4);
+        assert_eq!(h.get(), (2, 14, 10));
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        counter("test.metrics.kind_clash");
+        gauge("test.metrics.kind_clash");
+    }
+
+    #[test]
+    fn snapshot_contains_registered_metrics_sorted() {
+        counter("test.metrics.snap.a").add(1);
+        gauge("test.metrics.snap.b").set(1.0);
+        let snap = snapshot();
+        let names: Vec<&str> = snap
+            .iter()
+            .map(|(k, _)| k.as_str())
+            .filter(|k| k.starts_with("test.metrics.snap"))
+            .collect();
+        assert_eq!(names, vec!["test.metrics.snap.a", "test.metrics.snap.b"]);
+    }
+
+    #[test]
+    fn obs_count_macro_caches_and_adds() {
+        for _ in 0..3 {
+            obs_count!("test.metrics.macro_counter", 2);
+        }
+        assert_eq!(counter("test.metrics.macro_counter").get(), 6);
+    }
+
+    #[test]
+    fn status_metrics_round_trip_float_bits() {
+        let m = StatusMetrics {
+            step: 7,
+            loss_bits: 0.125f64.to_bits(),
+            bytes: 99,
+            scale_bits: 65536.0f32.to_bits() as u64,
+            gen: 2,
+        };
+        assert_eq!(m.loss(), 0.125);
+        assert_eq!(m.scale(), 65536.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! Observability: leveled logging, a process-wide metrics registry, and
+//! a per-rank structured span tracer.
+//!
+//! The subsystem has three layers, each usable on its own:
+//!
+//! - [`log`] — a leveled, rank-prefixed logger (`SINGD_LOG=error|warn|
+//!   info|debug`) behind the crate-root `obs_error!` / `obs_warn!` /
+//!   `obs_info!` / `obs_debug!` macros. Worker processes (those with
+//!   `SINGD_RANK` in the environment) default to `warn`, which replaces
+//!   the old ad-hoc "quiet worker mode" special-casing.
+//! - [`metrics`] — process-wide counters / gauges / histograms behind
+//!   lookup-or-leak registration (same lifetime discipline as the
+//!   [`crate::dist::traffic`] slots) plus the `obs_count!` /
+//!   `obs_gauge!` / `obs_histo!` macros, and the always-on status
+//!   snapshot backing the elastic STATUS telemetry reply.
+//! - [`trace`] — a per-run span tracer recording step phases, pending-op
+//!   lifecycles, pool batches, scaler events and elastic transitions,
+//!   exported per rank as a JSONL journal (`r<N>.jsonl`) and a Chrome
+//!   `trace_event` file (`r<N>.trace.json`).
+//!
+//! # Non-interference contract
+//!
+//! Observability must never perturb training math. Concretely (the
+//! "sixth contract" in ARCHITECTURE.md): every value that feeds a
+//! reduction, a parameter update or a digest is bitwise identical with
+//! tracing enabled or disabled; timestamps exist only in exported
+//! artifacts and in log lines, never in reduction order or in any
+//! computed quantity. When tracing is disabled every hook is a single
+//! relaxed atomic load off the hot path; registry counters are plain
+//! relaxed atomic adds (the [`crate::dist::traffic`] precedent) and
+//! carry no ordering anyone synchronizes on.
+#![deny(missing_docs)]
+
+pub mod log;
+pub mod metrics;
+pub mod trace;

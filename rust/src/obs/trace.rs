@@ -1,0 +1,618 @@
+//! Per-rank structured span tracer with JSONL + Chrome `trace_event`
+//! export.
+//!
+//! A *session* is armed per run ([`begin`]) and exported per run
+//! ([`finish`]): train drivers arm one when `--trace-dir` / `[obs]
+//! trace_dir` / `SINGD_TRACE` is set, benches arm an in-memory session
+//! (no directory) and consume the returned events directly. While no
+//! session is armed, every hook — [`span`], [`instant`], the guards —
+//! is a single relaxed [`AtomicBool`] load and an immediate return:
+//! the zero-overhead-when-disabled contract.
+//!
+//! Events carry a rank (explicit, or the calling thread's rank
+//! installed by [`rank_scope`], or the session default), a small dense
+//! thread id, microsecond timestamps relative to session start, and
+//! typed args. [`finish`] groups events by rank and writes, per rank
+//! present, `r<N>.jsonl` (one JSON object per line — the machine
+//! journal) and `r<N>.trace.json` (a Chrome `trace_event` wrapper —
+//! load it at `chrome://tracing` or <https://ui.perfetto.dev>).
+//!
+//! Timestamps never feed back into training: the non-interference
+//! contract (see [`crate::obs`]) is enforced by construction — spans
+//! observe, they are never consulted.
+
+use std::cell::Cell;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Sentinel for "no rank attributed to this thread".
+pub(crate) const RANK_NONE: u32 = u32::MAX;
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+struct SessionInner {
+    t0: Instant,
+    dir: Option<PathBuf>,
+    default_rank: u32,
+    events: Mutex<Vec<Event>>,
+}
+
+fn session_slot() -> &'static Mutex<Option<Arc<SessionInner>>> {
+    static S: OnceLock<Mutex<Option<Arc<SessionInner>>>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(None))
+}
+
+fn cur_session() -> Option<Arc<SessionInner>> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return None;
+    }
+    session_slot().lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Whether a trace session is currently armed (one relaxed load — the
+/// gate every hook checks first).
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Arm a trace session. `dir` is where [`finish`] exports the per-rank
+/// artifacts (`None` = in-memory only, for benches). `default_rank`
+/// attributes events from threads with no rank of their own — worker
+/// processes pass their `SINGD_RANK`, single-process runs pass 0.
+///
+/// Returns `false` (and changes nothing) if a session is already
+/// armed: nested drivers — `train_dist` delegating to
+/// `train_image_model` — call [`begin`]/[`finish`] unconditionally and
+/// only the outermost pair wins.
+pub fn begin(dir: Option<&Path>, default_rank: usize) -> bool {
+    let mut slot = session_slot().lock().unwrap_or_else(|e| e.into_inner());
+    if slot.is_some() {
+        return false;
+    }
+    *slot = Some(Arc::new(SessionInner {
+        t0: Instant::now(),
+        dir: dir.map(Path::to_path_buf),
+        default_rank: default_rank as u32,
+        events: Mutex::new(Vec::new()),
+    }));
+    ACTIVE.store(true, Ordering::Release);
+    true
+}
+
+/// Disarm the session, export its artifacts (when it has a directory),
+/// and return the recorded events sorted by `(rank, ts_us)`. A no-op
+/// returning an empty `Vec` when no session is armed. Export I/O
+/// failures are logged at `warn`, never raised — tracing must not be
+/// able to fail a run.
+pub fn finish() -> Vec<Event> {
+    let inner = {
+        let mut slot = session_slot().lock().unwrap_or_else(|e| e.into_inner());
+        ACTIVE.store(false, Ordering::Release);
+        slot.take()
+    };
+    let Some(inner) = inner else {
+        return Vec::new();
+    };
+    let mut events = {
+        let mut ev = inner.events.lock().unwrap_or_else(|e| e.into_inner());
+        std::mem::take(&mut *ev)
+    };
+    events.sort_by_key(|e| (e.rank, e.ts_us, e.dur_us));
+    if let Some(dir) = &inner.dir {
+        if let Err(e) = export(dir, &events) {
+            crate::obs_warn!("obs: trace export to {} failed: {e}", dir.display());
+        }
+    }
+    events
+}
+
+// ---------------------------------------------------------------------
+// Thread attribution.
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static THREAD_RANK: Cell<u32> = const { Cell::new(RANK_NONE) };
+}
+
+fn thread_tid() -> u32 {
+    thread_local! {
+        static TID: u32 = {
+            static NEXT: AtomicU32 = AtomicU32::new(1);
+            NEXT.fetch_add(1, Ordering::Relaxed)
+        };
+    }
+    TID.with(|t| *t)
+}
+
+/// The calling thread's rank, [`RANK_NONE`] when unset (used by the
+/// logger's rank prefix).
+pub(crate) fn thread_rank_raw() -> u32 {
+    THREAD_RANK.with(|r| r.get())
+}
+
+/// Attribute the calling thread to `rank` until the guard drops
+/// (restoring the previous attribution — scopes nest). Rank bodies
+/// install this unconditionally: it is one thread-local store, and it
+/// also rank-prefixes log lines, so it is not gated on [`active`].
+pub fn rank_scope(rank: usize) -> RankScope {
+    let prev = THREAD_RANK.with(|r| r.replace(rank as u32));
+    RankScope { prev }
+}
+
+/// Guard restoring the previous thread-rank attribution on drop.
+#[must_use = "the rank attribution ends when this guard drops"]
+pub struct RankScope {
+    prev: u32,
+}
+
+impl Drop for RankScope {
+    fn drop(&mut self) {
+        THREAD_RANK.with(|r| r.set(self.prev));
+    }
+}
+
+fn resolve_rank(explicit: Option<usize>, s: &SessionInner) -> u32 {
+    if let Some(r) = explicit {
+        return r as u32;
+    }
+    let t = thread_rank_raw();
+    if t != RANK_NONE {
+        t
+    } else {
+        s.default_rank
+    }
+}
+
+// ---------------------------------------------------------------------
+// Events.
+// ---------------------------------------------------------------------
+
+/// A typed event argument.
+#[derive(Clone, Debug)]
+pub enum ArgVal {
+    /// Unsigned integer (bytes, counts, ids).
+    U(u64),
+    /// Float (scales, fractions). Non-finite values export as `null`.
+    F(f64),
+    /// Short label (endpoint names, op kinds).
+    S(String),
+}
+
+/// One recorded trace event: a complete span (`ph == 'X'`, with
+/// duration) or an instant (`ph == 'i'`).
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Phase or event name (`"forward_backward"`, `"op_exec"`, …).
+    pub name: &'static str,
+    /// Category: `"compute"`, `"comm"`, `"wait"`, `"pool"`,
+    /// `"scaler"`, `"elastic"`, `"step"`.
+    pub cat: &'static str,
+    /// `'X'` complete span or `'i'` instant (Chrome `trace_event`
+    /// phase codes).
+    pub ph: char,
+    /// Rank the event is attributed to (Chrome `pid`).
+    pub rank: u32,
+    /// Dense per-thread id (Chrome `tid`).
+    pub tid: u32,
+    /// Start time, µs since session start.
+    pub ts_us: u64,
+    /// Duration in µs (0 for instants).
+    pub dur_us: u64,
+    /// Typed key/value arguments.
+    pub args: Vec<(&'static str, ArgVal)>,
+}
+
+fn us_since(t0: Instant, t: Instant) -> u64 {
+    t.saturating_duration_since(t0).as_micros() as u64
+}
+
+/// Record an instant event attributed to the calling thread's rank
+/// (else the session default). No-op when no session is armed.
+pub fn instant(name: &'static str, cat: &'static str, args: Vec<(&'static str, ArgVal)>) {
+    instant_at(name, cat, None, args);
+}
+
+/// [`instant`] with an explicit rank.
+pub fn instant_rank(
+    name: &'static str,
+    cat: &'static str,
+    rank: usize,
+    args: Vec<(&'static str, ArgVal)>,
+) {
+    instant_at(name, cat, Some(rank), args);
+}
+
+fn instant_at(
+    name: &'static str,
+    cat: &'static str,
+    rank: Option<usize>,
+    args: Vec<(&'static str, ArgVal)>,
+) {
+    let Some(s) = cur_session() else { return };
+    let ev = Event {
+        name,
+        cat,
+        ph: 'i',
+        rank: resolve_rank(rank, &s),
+        tid: thread_tid(),
+        ts_us: us_since(s.t0, Instant::now()),
+        dur_us: 0,
+        args,
+    };
+    s.events.lock().unwrap_or_else(|e| e.into_inner()).push(ev);
+}
+
+/// Open a span attributed to the calling thread's rank (else the
+/// session default); it records itself when the guard drops. When no
+/// session is armed this is one relaxed load and returns an inert
+/// guard.
+pub fn span(name: &'static str, cat: &'static str) -> Span {
+    span_at(name, cat, None)
+}
+
+/// [`span`] with an explicit rank (engine threads, worker closures).
+pub fn span_rank(name: &'static str, cat: &'static str, rank: usize) -> Span {
+    span_at(name, cat, Some(rank))
+}
+
+fn span_at(name: &'static str, cat: &'static str, rank: Option<usize>) -> Span {
+    let Some(s) = cur_session() else { return Span(None) };
+    let rank = resolve_rank(rank, &s);
+    Span(Some(SpanLive { s, name, cat, rank, start: Instant::now(), args: Vec::new() }))
+}
+
+struct SpanLive {
+    s: Arc<SessionInner>,
+    name: &'static str,
+    cat: &'static str,
+    rank: u32,
+    start: Instant,
+    args: Vec<(&'static str, ArgVal)>,
+}
+
+/// A live span guard; drop closes and records it. Inert (all methods
+/// free) when tracing is disabled.
+#[must_use = "the span closes when this guard drops"]
+pub struct Span(Option<SpanLive>);
+
+impl Span {
+    /// Attach an argument to the span (no-op when inert).
+    pub fn arg(&mut self, key: &'static str, val: ArgVal) {
+        if let Some(live) = &mut self.0 {
+            live.args.push((key, val));
+        }
+    }
+
+    /// Whether the span is actually recording.
+    pub fn is_recording(&self) -> bool {
+        self.0.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(live) = self.0.take() else { return };
+        let end = Instant::now();
+        let ts_us = us_since(live.s.t0, live.start);
+        let ev = Event {
+            name: live.name,
+            cat: live.cat,
+            ph: 'X',
+            rank: live.rank,
+            tid: thread_tid(),
+            ts_us,
+            dur_us: us_since(live.s.t0, end).saturating_sub(ts_us),
+            args: live.args,
+        };
+        live.s.events.lock().unwrap_or_else(|e| e.into_inner()).push(ev);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Export.
+// ---------------------------------------------------------------------
+
+fn json_escape(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+fn push_args(out: &mut String, args: &[(&'static str, ArgVal)]) {
+    out.push('{');
+    for (i, (k, v)) in args.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('"');
+        json_escape(out, k);
+        out.push_str("\":");
+        match v {
+            ArgVal::U(u) => out.push_str(&u.to_string()),
+            ArgVal::F(f) if f.is_finite() => out.push_str(&format!("{f:?}")),
+            ArgVal::F(_) => out.push_str("null"),
+            ArgVal::S(s) => {
+                out.push('"');
+                json_escape(out, s);
+                out.push('"');
+            }
+        }
+    }
+    out.push('}');
+}
+
+fn push_event(out: &mut String, e: &Event, chrome: bool) {
+    out.push_str("{\"name\":\"");
+    json_escape(out, e.name);
+    out.push_str("\",\"cat\":\"");
+    json_escape(out, e.cat);
+    out.push_str("\",\"ph\":\"");
+    out.push(e.ph);
+    out.push('"');
+    if chrome {
+        out.push_str(&format!(",\"pid\":{},\"tid\":{},\"ts\":{}", e.rank, e.tid, e.ts_us));
+        if e.ph == 'X' {
+            out.push_str(&format!(",\"dur\":{}", e.dur_us));
+        } else {
+            out.push_str(",\"s\":\"t\"");
+        }
+    } else {
+        out.push_str(&format!(
+            ",\"rank\":{},\"tid\":{},\"ts_us\":{},\"dur_us\":{}",
+            e.rank, e.tid, e.ts_us, e.dur_us
+        ));
+    }
+    out.push_str(",\"args\":");
+    push_args(out, &e.args);
+    out.push('}');
+}
+
+fn export(dir: &Path, events: &[Event]) -> std::io::Result<()> {
+    fs::create_dir_all(dir)?;
+    let mut ranks: Vec<u32> = events.iter().map(|e| e.rank).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    for r in ranks {
+        let evs: Vec<&Event> = events.iter().filter(|e| e.rank == r).collect();
+        let mut jsonl = String::new();
+        for e in &evs {
+            push_event(&mut jsonl, e, false);
+            jsonl.push('\n');
+        }
+        fs::write(dir.join(format!("r{r}.jsonl")), jsonl.as_bytes())?;
+        let mut chrome = String::from("{\"traceEvents\":[\n");
+        for (i, e) in evs.iter().enumerate() {
+            push_event(&mut chrome, e, true);
+            if i + 1 < evs.len() {
+                chrome.push(',');
+            }
+            chrome.push('\n');
+        }
+        chrome.push_str("]}\n");
+        fs::write(dir.join(format!("r{r}.trace.json")), chrome.as_bytes())?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Overlap analysis.
+// ---------------------------------------------------------------------
+
+/// Per-rank comm/compute overlap summary derived from a trace: how
+/// much of the rank's communication span time was hidden under (i.e.
+/// wall-clock-overlapped by) its compute spans.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RankOverlap {
+    /// Rank the summary describes.
+    pub rank: u32,
+    /// Total µs inside `cat == "comm"` spans.
+    pub comm_us: u64,
+    /// µs of that comm time overlapped by `cat == "compute"` spans.
+    pub hidden_us: u64,
+}
+
+impl RankOverlap {
+    /// Hidden fraction in `[0, 1]` (0 when no comm was recorded).
+    pub fn hidden_frac(&self) -> f64 {
+        if self.comm_us == 0 {
+            0.0
+        } else {
+            self.hidden_us as f64 / self.comm_us as f64
+        }
+    }
+}
+
+fn merge_intervals(mut iv: Vec<(u64, u64)>) -> Vec<(u64, u64)> {
+    iv.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(iv.len());
+    for (a, b) in iv {
+        match out.last_mut() {
+            Some((_, e)) if a <= *e => *e = (*e).max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+/// Compute the per-rank comm-hidden-under-compute summary from a
+/// recorded event set (the Rust twin of `tools/check_trace.py`'s
+/// overlap report; `benches/dist_scaling.rs` feeds its rows from it).
+pub fn overlap_stats(events: &[Event]) -> Vec<RankOverlap> {
+    let mut ranks: Vec<u32> = events.iter().map(|e| e.rank).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    ranks
+        .iter()
+        .map(|&rank| {
+            let compute = merge_intervals(
+                events
+                    .iter()
+                    .filter(|e| e.rank == rank && e.ph == 'X' && e.cat == "compute")
+                    .map(|e| (e.ts_us, e.ts_us + e.dur_us))
+                    .collect(),
+            );
+            let mut comm_us = 0u64;
+            let mut hidden_us = 0u64;
+            for e in events.iter().filter(|e| e.rank == rank && e.ph == 'X' && e.cat == "comm") {
+                let (a, b) = (e.ts_us, e.ts_us + e.dur_us);
+                comm_us += b - a;
+                for &(ca, cb) in &compute {
+                    let lo = a.max(ca);
+                    let hi = b.min(cb);
+                    if lo < hi {
+                        hidden_us += hi - lo;
+                    }
+                }
+            }
+            RankOverlap { rank, comm_us, hidden_us }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Sessions are process-global; tests that arm one serialize here.
+    fn session_lock() -> std::sync::MutexGuard<'static, ()> {
+        static L: OnceLock<Mutex<()>> = OnceLock::new();
+        L.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn inactive_hooks_are_inert() {
+        let _g = session_lock();
+        assert!(!active());
+        let mut sp = span("noop", "compute");
+        assert!(!sp.is_recording());
+        sp.arg("k", ArgVal::U(1));
+        drop(sp);
+        instant("noop", "compute", vec![]);
+        assert!(finish().is_empty());
+    }
+
+    #[test]
+    fn begin_is_exclusive_and_finish_disarms() {
+        let _g = session_lock();
+        assert!(begin(None, 0));
+        assert!(!begin(None, 0), "second begin must lose");
+        assert!(active());
+        let _ = finish();
+        assert!(!active());
+        assert!(begin(None, 0));
+        let _ = finish();
+    }
+
+    #[test]
+    fn spans_and_instants_record_with_rank_attribution() {
+        let _g = session_lock();
+        assert!(begin(None, 3));
+        {
+            let _s = span("default_rank", "compute");
+        }
+        {
+            let _scope = rank_scope(1);
+            let _s = span("thread_rank", "compute");
+        }
+        {
+            let mut s = span_rank("explicit", "comm", 2);
+            s.arg("bytes", ArgVal::U(64));
+        }
+        instant("marker", "elastic", vec![("gen", ArgVal::U(5))]);
+        let events = finish();
+        assert_eq!(events.len(), 4);
+        let by_name = |n: &str| events.iter().find(|e| e.name == n).unwrap();
+        assert_eq!(by_name("default_rank").rank, 3);
+        assert_eq!(by_name("thread_rank").rank, 1);
+        assert_eq!(by_name("explicit").rank, 2);
+        assert_eq!(by_name("explicit").args.len(), 1);
+        assert_eq!(by_name("marker").ph, 'i');
+        assert_eq!(by_name("default_rank").ph, 'X');
+    }
+
+    #[test]
+    fn rank_scope_nests_and_restores() {
+        assert_eq!(thread_rank_raw(), RANK_NONE);
+        {
+            let _a = rank_scope(4);
+            assert_eq!(thread_rank_raw(), 4);
+            {
+                let _b = rank_scope(7);
+                assert_eq!(thread_rank_raw(), 7);
+            }
+            assert_eq!(thread_rank_raw(), 4);
+        }
+        assert_eq!(thread_rank_raw(), RANK_NONE);
+    }
+
+    #[test]
+    fn export_writes_per_rank_jsonl_and_chrome_files() {
+        let _g = session_lock();
+        let dir = std::env::temp_dir().join(format!("singd-trace-test-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        assert!(begin(Some(&dir), 0));
+        {
+            let _s = span_rank("alpha", "compute", 0);
+        }
+        {
+            let _s = span_rank("beta", "comm", 1);
+        }
+        instant_rank("gamma", "elastic", 1, vec![("label", ArgVal::S("a\"b".into()))]);
+        let events = finish();
+        assert_eq!(events.len(), 3);
+        for r in [0u32, 1] {
+            let jsonl = fs::read_to_string(dir.join(format!("r{r}.jsonl"))).unwrap();
+            for line in jsonl.lines() {
+                assert!(line.starts_with('{') && line.ends_with('}'), "bad line {line:?}");
+                assert!(line.contains("\"name\":\""));
+            }
+            let chrome = fs::read_to_string(dir.join(format!("r{r}.trace.json"))).unwrap();
+            assert!(chrome.starts_with("{\"traceEvents\":["));
+            assert!(chrome.trim_end().ends_with("]}"));
+        }
+        let r1 = fs::read_to_string(dir.join("r1.jsonl")).unwrap();
+        assert!(r1.contains("a\\\"b"), "string args must be escaped: {r1}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overlap_stats_measures_hidden_comm() {
+        let ev = |cat: &'static str, ts: u64, dur: u64| Event {
+            name: "e",
+            cat,
+            ph: 'X',
+            rank: 0,
+            tid: 1,
+            ts_us: ts,
+            dur_us: dur,
+            args: vec![],
+        };
+        // compute covers [0,100); comm spans [50,150) and [200,210).
+        let events = vec![ev("compute", 0, 100), ev("comm", 50, 100), ev("comm", 200, 10)];
+        let stats = overlap_stats(&events);
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].comm_us, 110);
+        assert_eq!(stats[0].hidden_us, 50);
+        assert!((stats[0].hidden_frac() - 50.0 / 110.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_intervals_coalesces_overlaps() {
+        assert_eq!(merge_intervals(vec![(5, 10), (0, 6), (20, 30)]), vec![(0, 10), (20, 30)]);
+        assert_eq!(merge_intervals(vec![]), Vec::<(u64, u64)>::new());
+    }
+}

@@ -84,7 +84,7 @@ pub fn random_search(base: &JobConfig, space: &Space, n_trials: usize, seed: u64
         cfg.hyper = hyper.clone();
         cfg.seed = seed ^ (i as u64).wrapping_mul(0x9e37);
         let res = run_job(&cfg);
-        println!(
+        crate::obs_info!(
             "trial {i:>3}: lr={:.2e} wd={:.2e} λ={:.2e} β₁={:.2e} α₁={:.1} → err {:.3}{}",
             hyper.lr,
             hyper.weight_decay,
@@ -154,6 +154,8 @@ mod tests {
             ckpt: None,
             ckpt_every: 0,
             elastic: false,
+            trace_dir: None,
+            log: None,
         };
         let trials = random_search(&base, &Space::default(), 3, 42);
         assert_eq!(trials.len(), 3);

@@ -126,6 +126,7 @@ pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
 
 fn queue() -> &'static Arc<Queue> {
     POOL.get_or_init(|| {
+        crate::obs_gauge!("pool.threads", num_threads() as f64);
         let queue = Arc::new(Queue {
             jobs: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
@@ -168,10 +169,20 @@ fn worker_loop(q: Arc<Queue>) {
 /// itself a pool worker (nesting). Panics if any job panicked.
 pub fn run_jobs<'scope>(jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
     if jobs.len() <= 1 || current_threads() <= 1 || IS_WORKER.with(|c| c.get()) {
+        crate::obs_count!("pool.jobs_inline", jobs.len() as u64);
         for job in jobs {
             job();
         }
         return;
+    }
+    // Occupancy accounting: always-on relaxed counters (the traffic.rs
+    // discipline) plus one span per *batch* — never per job — when a
+    // trace session is armed; disabled-tracing cost is one relaxed load.
+    crate::obs_count!("pool.batches", 1);
+    crate::obs_count!("pool.jobs", jobs.len() as u64);
+    let mut sp = crate::obs::trace::span("pool_batch", "pool");
+    if sp.is_recording() {
+        sp.arg("jobs", crate::obs::trace::ArgVal::U(jobs.len() as u64));
     }
     let q = queue();
     let latch = Arc::new(Latch {

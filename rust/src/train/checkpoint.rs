@@ -303,7 +303,7 @@ pub fn load_checkpoint_auto(
             let prev = sibling(path, ".prev");
             match load_checkpoint_driver(&prev) {
                 Ok(ok) => {
-                    eprintln!(
+                    crate::obs_warn!(
                         "warning: checkpoint {}: {primary}; resumed from last-good {}",
                         path.display(),
                         prev.display()

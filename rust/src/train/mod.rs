@@ -15,6 +15,8 @@ use crate::dist::{
     SocketComm, Transport,
 };
 use crate::model::{BackwardResult, Batch, Model};
+use crate::obs::metrics as obs_metrics;
+use crate::obs::trace::{self, ArgVal};
 use crate::optim::{Hyper, KronStats, Method, Optimizer};
 use crate::proptest::Pcg;
 use crate::tensor::Mat;
@@ -153,6 +155,13 @@ pub struct TrainCfg {
     /// Checkpoint cadence in optimizer steps (0 = never). Elastic runs
     /// require `>= 1`: the cadence bounds the work lost to a failure.
     pub ckpt_every: usize,
+    /// Arm a trace session and export per-rank span artifacts
+    /// (`r<N>.jsonl` + `r<N>.trace.json`) into this directory
+    /// (`[obs] trace_dir` / `--trace-dir` / `SINGD_TRACE`). Tracing is
+    /// observation-only: digests are bitwise identical with it on or
+    /// off (the non-interference contract, ARCHITECTURE.md
+    /// §Observability).
+    pub trace_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for TrainCfg {
@@ -169,6 +178,7 @@ impl Default for TrainCfg {
             resume: None,
             ckpt: None,
             ckpt_every: 0,
+            trace_dir: None,
         }
     }
 }
@@ -236,10 +246,19 @@ fn train_loop<M: Model + ?Sized>(
                 continue;
             }
             let lr = base_lr * cfg.schedule.factor(step);
+            let mut sp = trace::span("step", "step");
+            if sp.is_recording() {
+                sp.arg("step", ArgVal::U(step as u64));
+            }
             let (loss, div) = step_fn(model, b, step, lr);
+            drop(sp);
             epoch_loss += loss as f64;
             nb += 1;
             step += 1;
+            // Live telemetry for the STATUS endpoint: always-on relaxed
+            // stores, read only by the control plane — never by math.
+            obs_metrics::set_step(step as u64);
+            obs_metrics::set_loss(loss as f64);
             diverged = diverged || !loss.is_finite() || div;
             if cfg.eval_every > 0 && step % cfg.eval_every == 0 {
                 let row = eval_row(model, dataset, step, epoch, (epoch_loss / nb as f64) as f32, base_lr * cfg.schedule.factor(step), diverged);
@@ -351,12 +370,27 @@ fn gather_canonical_state(
     shard::merge_state(&per_rank, bpl, n_layers)
 }
 
+/// Arm the process-wide trace session from `cfg.trace_dir`. Returns
+/// whether this call owns the session and must call [`trace::finish`]
+/// when the run completes — nested drivers (e.g. [`train_dist`]
+/// delegating to [`train_image_model`] for a one-rank world) arm once
+/// at the outermost layer and the inner call is a no-op. With
+/// `trace_dir` unset this is a single branch and tracing stays
+/// entirely off the hot path.
+fn arm_trace(cfg: &TrainCfg, default_rank: usize) -> bool {
+    match &cfg.trace_dir {
+        Some(dir) => trace::begin(Some(dir), default_rank),
+        None => false,
+    }
+}
+
 /// Train `model` on `dataset`; returns loss/error curves + telemetry.
 pub fn train_image_model<M: Model + ?Sized>(
     model: &mut M,
     dataset: &Dataset,
     cfg: &TrainCfg,
 ) -> RunResult {
+    let owns_trace = arm_trace(cfg, 0);
     let opt: Mutex<Box<dyn Optimizer>> =
         Mutex::new(cfg.method.build(&model.shapes(), &cfg.hyper));
     let resume = apply_resume(model, cfg, |state| {
@@ -386,6 +420,9 @@ pub fn train_image_model<M: Model + ?Sized>(
             opt.step(step, model.params_mut(), &res.grads, &res.stats);
             (res.loss, opt.diverged())
         });
+    if owns_trace {
+        let _ = trace::finish();
+    }
     let final_err = rows.last().map(|r| r.test_err).unwrap_or(1.0);
     RunResult {
         final_test_err: final_err,
@@ -569,7 +606,14 @@ pub fn train_dist<M: Model + ?Sized>(
         "train_dist: batch_size {} must be >= ranks {world}",
         cfg.batch_size
     );
-    match dcfg.transport {
+    // Arm the per-process trace session at the outermost driver layer.
+    // Under the socket transport each OS process hosts one rank, so a
+    // worker's session defaults to its own rank; the launcher (and the
+    // whole local-transport world) defaults to 0 and per-thread
+    // [`trace::rank_scope`] guards in `rank_step` attribute the rest.
+    let default_rank = transport::worker_env().map(|we| we.rank).unwrap_or(0);
+    let owns_trace = arm_trace(cfg, default_rank);
+    let out = match dcfg.transport {
         Transport::Local => {
             assert!(
                 !dcfg.elastic,
@@ -586,7 +630,11 @@ pub fn train_dist<M: Model + ?Sized>(
                 train_dist_socket(model, dataset, cfg, dcfg)
             }
         }
+    };
+    if owns_trace {
+        let _ = trace::finish();
     }
+    out
 }
 
 /// In-process data-parallel driver: SPMD rank closures over the
@@ -919,6 +967,9 @@ fn train_dist_elastic<M: Model + ?Sized>(
     let mut gen: u64 = 0;
     let mut gens_used = 1usize;
     loop {
+        // Live telemetry: the STATUS endpoint reports the membership
+        // generation this process is currently training in.
+        obs_metrics::set_gen(gen);
         // The communicator lives OUTSIDE catch_unwind so the recovery
         // path below can sever and drop it after a caught panic.
         let comm = SocketComm::connect_elastic(
@@ -996,8 +1047,12 @@ fn train_dist_elastic<M: Model + ?Sized>(
                 for f in transport::wait_workers_lenient(&mut workers) {
                     // Chaos-killed workers exit nonzero by design; the
                     // run completed, so report and move on.
-                    eprintln!("train_dist[elastic]: note: {f}");
+                    crate::obs_warn!("train_dist[elastic]: note: {f}");
                 }
+                // Close the final generation's traffic epoch so its
+                // per-rank byte totals survive in the metrics registry
+                // (`traffic.gen<G>.r<N>`).
+                let _ = crate::dist::traffic::epoch(&format!("gen{gen}"));
                 let final_err = rows.last().map(|r| r.test_err).unwrap_or(1.0);
                 let telemetry = {
                     let t = opt.lock().unwrap_or_else(|e| e.into_inner()).telemetry();
@@ -1025,6 +1080,10 @@ fn train_dist_elastic<M: Model + ?Sized>(
                 // negotiate the next membership generation.
                 comm.sever();
                 drop(comm);
+                // The failed generation is over and nothing is in
+                // flight: close its traffic epoch so per-generation
+                // byte totals stay separated in the metrics registry.
+                let _ = crate::dist::traffic::epoch(&format!("gen{gen}"));
                 gen += 1;
                 gens_used += 1;
                 let m = if let Some(c) = &coord {
@@ -1084,6 +1143,10 @@ fn rank_step<M: Model + ?Sized>(
 ) -> RankStepOut {
     let world = comm.world_size();
     let rank = comm.rank();
+    // Attribute every span/instant this thread records (and any log
+    // line it emits) to this rank — under the local transport all ranks
+    // share one process, so the session default rank is not enough.
+    let _rank_scope = trace::rank_scope(rank);
     let overlap = comm.overlap() && world > 1;
     let m_total = batch.y.len();
     // Contiguous balanced shard (the padding rule for non-dividing
@@ -1093,7 +1156,9 @@ fn rank_step<M: Model + ?Sized>(
         x: Mat::from_fn(block.len(), batch.x.cols(), |r, c| batch.x.at(block.start + r, c)),
         y: batch.y[block.clone()].to_vec(),
     };
+    let fb_span = trace::span("forward_backward", "compute");
     let res: BackwardResult = model.forward_backward(&shard);
+    drop(fb_span);
 
     let n = res.stats.len();
     let owned_mask: Option<Vec<bool>> =
@@ -1138,7 +1203,9 @@ fn rank_step<M: Model + ?Sized>(
         let loss = (collectives::tree_sum_f64(&sums) / total_rows.max(1.0)) as f32;
         (loss, Gathered::PerLayer(gather_ops))
     } else {
+        let loss_span = trace::span("loss_exchange", "comm");
         let scal = comm.exchange_f64(vec![res.loss_sum, res.loss_rows as f64]);
+        drop(loss_span);
         let sums: Vec<f64> = scal.iter().map(|v| v[0]).collect();
         let total_rows: f64 = scal.iter().map(|v| v[1]).sum();
         let loss = (collectives::tree_sum_f64(&sums) / total_rows.max(1.0)) as f32;
@@ -1151,7 +1218,10 @@ fn rank_step<M: Model + ?Sized>(
         // the ring it circulates over neighbor links instead of fanning
         // in at rank 0 — this is the heaviest exchange of the step. Pure
         // data movement either way, so the reconstruction below is exact.
-        (loss, Gathered::Batched(collectives::all_gather(comm, payload)))
+        let gather_span = trace::span("stats_gather", "comm");
+        let parts = collectives::all_gather(comm, payload);
+        drop(gather_span);
+        (loss, Gathered::Batched(parts))
     };
 
     // Gather full-batch statistics rows (exact concatenation in rank
@@ -1188,19 +1258,26 @@ fn rank_step<M: Model + ?Sized>(
                 (collectives::concat_rows(&parts, 0), collectives::concat_rows(&parts, 1))
             }
         };
+        let mut sp = trace::span("grad_reconstruct", "compute");
+        if sp.is_recording() {
+            sp.arg("layer", ArgVal::U(l as u64));
+        }
         let m_l = a.rows().max(1) as f32;
         grads.push(crate::tensor::matmul_at_b(&g, &a).scale(1.0 / m_l));
         stats.push(KronStats { a, g });
+        drop(sp);
     }
 
     // Step this rank's optimizer replica on a scratch parameter copy.
     let mut params: Vec<Mat> = model.params().clone();
+    let opt_span = trace::span("precond_update", "compute");
     let diverged = {
         let mut opt = opt.lock().unwrap_or_else(|e| e.into_inner());
         opt.set_lr(lr);
         opt.step(step, &mut params, &grads, &stats);
         opt.diverged()
     };
+    drop(opt_span);
     if let Some(mask) = &owned_mask {
         // Factor-sharded: this rank only updated its owned layers. Zero
         // the rest and all-reduce — every element has exactly one
@@ -1211,7 +1288,9 @@ fn rank_step<M: Model + ?Sized>(
                 p.map_inplace(|_| 0.0);
             }
         }
+        let ps_span = trace::span("param_step", "comm");
         bucket::all_reduce_sum_bucketed(comm, &mut params, bucket::DEFAULT_BUCKET_ELEMS);
+        drop(ps_span);
     }
     // OR-reduce the divergence flag so every rank stops at the same step
     // — under factor sharding only the owner of a sick layer sees it,

@@ -38,9 +38,11 @@ fn write_job(name: &str, method: &str) -> PathBuf {
 }
 
 /// The SINGD_* knobs cleared from child environments so the CI matrix
-/// (and a previous chaos run) cannot leak a world size, transport or
-/// fault injection into the child.
-const CLEARED_ENV: [&str; 9] = [
+/// (and a previous chaos run) cannot leak a world size, transport, fault
+/// injection or observability setting into the child. SINGD_LOG matters
+/// doubly here: a leaked `error` level would silence the `param_digest`
+/// line these tests parse.
+const CLEARED_ENV: [&str; 11] = [
     "SINGD_RANKS",
     "SINGD_TRANSPORT",
     "SINGD_ALGO",
@@ -50,6 +52,8 @@ const CLEARED_ENV: [&str; 9] = [
     "SINGD_RENDEZVOUS",
     "SINGD_RUN_ID",
     "SINGD_CHAOS_ABORT",
+    "SINGD_TRACE",
+    "SINGD_LOG",
 ];
 
 /// Run `singd train` with the given extra flags; return its param digest.
@@ -289,4 +293,174 @@ fn elastic_chaos_kill_worker_midstep_reshards_and_matches_uninterrupted() {
     std::fs::remove_file(&ckpt).ok();
     std::fs::remove_file(&resharded).ok();
     std::fs::remove_file(format!("{ckpt_s}.prev")).ok();
+}
+
+// =====================================================================
+// Observability over real OS processes (ISSUE 7).
+
+/// Parse a journal file into (`step` span intervals, phase intervals).
+/// Every line must be a well-formed single-object journal record; the
+/// child process ran exactly one job, so — unlike the in-process suite —
+/// the artifact is pristine and the checks can be exhaustive.
+fn parse_journal(path: &std::path::Path, rank: u64) -> (Vec<(u64, u64)>, Vec<(String, u64, u64)>) {
+    let jsonl = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    assert!(!jsonl.trim().is_empty(), "{} is empty", path.display());
+    let mut steps = Vec::new();
+    let mut phases = Vec::new();
+    for line in jsonl.lines() {
+        assert!(line.starts_with('{') && line.ends_with('}'), "bad journal line {line:?}");
+        for key in ["\"name\":", "\"cat\":", "\"ph\":", "\"ts_us\":", "\"dur_us\":", "\"args\":"] {
+            assert!(line.contains(key), "journal line missing {key}: {line}");
+        }
+        let field = |k: &str| -> u64 {
+            let tail = &line[line.find(k).unwrap_or_else(|| panic!("no {k} in {line}")) + k.len()..];
+            let digits: String = tail.chars().take_while(|c| c.is_ascii_digit()).collect();
+            digits.parse().unwrap_or_else(|e| panic!("bad {k} in {line}: {e}"))
+        };
+        assert_eq!(field("\"rank\":"), rank, "event on a foreign rank: {line}");
+        let name = {
+            let tail = &line[line.find("\"name\":\"").unwrap() + 8..];
+            tail[..tail.find('"').unwrap()].to_string()
+        };
+        let (ts, dur) = (field("\"ts_us\":"), field("\"dur_us\":"));
+        if name == "step" {
+            steps.push((ts, ts + dur));
+        } else if ["forward_backward", "grad_reconstruct", "precond_update"]
+            .contains(&name.as_str())
+        {
+            phases.push((name, ts, ts + dur));
+        }
+    }
+    (steps, phases)
+}
+
+fn assert_phases_nest(steps: &[(u64, u64)], phases: &[(String, u64, u64)], ctx: &str) {
+    assert!(!steps.is_empty(), "{ctx}: no step spans");
+    assert!(
+        phases.iter().any(|(n, _, _)| n == "forward_backward"),
+        "{ctx}: no forward_backward phase"
+    );
+    for (name, a, b) in phases {
+        assert!(
+            steps.iter().any(|(sa, sb)| sa <= a && b <= sb),
+            "{ctx}: phase {name} [{a},{b}] not nested in any step span"
+        );
+    }
+}
+
+#[test]
+fn traced_runs_digest_identically_and_export_per_rank_artifacts() {
+    // The sixth contract end to end through the CLI: SINGD_TRACE /
+    // --trace-dir must not perturb the param digest on either transport,
+    // and every rank — including re-exec'd socket worker processes, which
+    // inherit the dir via the pinned SINGD_TRACE env — exports its
+    // r<N>.jsonl + r<N>.trace.json pair.
+    let cfg = write_job("traced", "singd:diag");
+    let common: &[&str] = &["--ranks", "4", "--strategy", "factor-sharded", "--algo", "ring"];
+    for transport in ["local", "socket"] {
+        let plain =
+            digest_of(&cfg, &[common, &["--transport", transport][..]].concat());
+        let dir = std::env::temp_dir()
+            .join(format!("singd-proc-trace-{}-{transport}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_str().unwrap().to_string();
+        // local leg exercises the --trace-dir flag, socket leg the
+        // SINGD_TRACE env default — both plumbing paths end at the same
+        // exporter.
+        let traced = if transport == "local" {
+            digest_of(
+                &cfg,
+                &[common, &["--transport", transport, "--trace-dir", &dir_s][..]].concat(),
+            )
+        } else {
+            digest_of_env(
+                &cfg,
+                &[common, &["--transport", transport][..]].concat(),
+                &[("SINGD_TRACE", &dir_s)],
+            )
+        };
+        assert_eq!(plain, traced, "{transport}: tracing changed the param digest");
+        for r in 0..4u64 {
+            let journal = dir.join(format!("r{r}.jsonl"));
+            assert!(journal.exists(), "{transport}: missing {}", journal.display());
+            let chrome = std::fs::read_to_string(dir.join(format!("r{r}.trace.json")))
+                .unwrap_or_else(|e| panic!("{transport}: r{r}.trace.json: {e}"));
+            assert!(chrome.starts_with("{\"traceEvents\":["), "{transport}: chrome header");
+            assert!(chrome.trim_end().ends_with("]}"), "{transport}: chrome footer");
+            // Each socket process drives its own train loop, so every
+            // rank file is self-contained: steps and phases share the
+            // process clock and must nest exhaustively. Local transport
+            // is one process with one session clock — its `step` spans
+            // live on the driver thread (rank 0) and worker ranks carry
+            // phases only, so nesting is checked globally below.
+            let (steps, phases) = parse_journal(&journal, r);
+            if transport == "socket" {
+                assert_phases_nest(&steps, &phases, &format!("socket r{r}"));
+            }
+        }
+        if transport == "local" {
+            let (steps, _) = parse_journal(&dir.join("r0.jsonl"), 0);
+            for r in 0..4u64 {
+                let (_, phases) = parse_journal(&dir.join(format!("r{r}.jsonl")), r);
+                assert_phases_nest(&steps, &phases, &format!("local r{r}"));
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    std::fs::remove_file(&cfg).ok();
+}
+
+#[test]
+fn traced_elastic_chaos_digest_matches_untraced_and_records_regroup() {
+    // Tracing must stay non-interfering through the hardest path: a
+    // worker hard-abort mid-step, EOF detection, re-rendezvous and
+    // checkpoint reshard. The traced interrupted run must digest
+    // identically to the untraced interrupted run, and the coordinator's
+    // journal must carry the `regroup` elastic instant.
+    let cfg = write_job_epochs("chaos-traced", "singd:diag", 2);
+    let dir = std::env::temp_dir()
+        .join(format!("singd-proc-trace-chaos-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dir_s = dir.to_str().unwrap().to_string();
+    let mut digests = Vec::new();
+    for traced in [false, true] {
+        let ckpt = std::env::temp_dir().join(format!(
+            "singd-proc-trace-chaos-{}-{traced}.ckpt",
+            std::process::id()
+        ));
+        let ckpt_s = ckpt.to_str().unwrap().to_string();
+        let mut envs: Vec<(&str, &str)> =
+            vec![("SINGD_CHAOS_ABORT", "2:3"), ("SINGD_SOCK_TIMEOUT_SECS", "20")];
+        if traced {
+            envs.push(("SINGD_TRACE", &dir_s));
+        }
+        digests.push(digest_of_env(
+            &cfg,
+            &[
+                "--ranks",
+                "4",
+                "--strategy",
+                "factor-sharded",
+                "--transport",
+                "socket",
+                "--elastic",
+                "1",
+                "--ckpt",
+                &ckpt_s,
+                "--ckpt-every",
+                "2",
+            ],
+            &envs,
+        ));
+        std::fs::remove_file(&ckpt).ok();
+        std::fs::remove_file(format!("{ckpt_s}.prev")).ok();
+        std::fs::remove_file(format!("{ckpt_s}.resharded-g1")).ok();
+    }
+    assert_eq!(digests[0], digests[1], "tracing changed the elastic chaos digest");
+    let r0 = std::fs::read_to_string(dir.join("r0.jsonl"))
+        .expect("coordinator must export its journal");
+    assert!(r0.contains("\"name\":\"regroup\""), "no regroup instant in coordinator journal");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::remove_file(&cfg).ok();
 }

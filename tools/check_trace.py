@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Validate a SINGD trace directory (the `--trace-dir` / SINGD_TRACE output).
+
+Usage: python3 tools/check_trace.py <trace-dir>
+
+Checks, per rank `N` found in the directory:
+
+  * `rN.jsonl` — one JSON object per line with the journal schema
+    (`name`, `cat`, `ph`, `rank`, `tid`, `ts_us`, `dur_us`, `args`),
+    `ph` in {"X", "i"}, integer non-negative timestamps, instants with
+    `dur_us == 0`, and every event attributed to rank N.
+  * `rN.trace.json` — loads as JSON, has a `traceEvents` list whose
+    entries carry the Chrome trace_event keys (`name`, `cat`, `ph`,
+    `pid`, `tid`, `ts`), so chrome://tracing / ui.perfetto.dev accept it.
+  * The two files agree on the event count.
+
+Then prints the per-rank overlap-efficiency summary — the fraction of
+`cat == "comm"` span time hidden under `cat == "compute"` spans — the
+Python twin of `trace::overlap_stats` in rust/src/obs/trace.rs.
+
+Exits nonzero on any violation (including an empty directory).
+"""
+
+import json
+import sys
+from pathlib import Path
+
+JOURNAL_KEYS = {"name", "cat", "ph", "rank", "tid", "ts_us", "dur_us", "args"}
+CHROME_KEYS = {"name", "cat", "ph", "pid", "tid", "ts"}
+
+errors = 0
+
+
+def err(msg: str) -> None:
+    global errors
+    errors += 1
+    print(f"check_trace: ERROR: {msg}", file=sys.stderr)
+
+
+def check_journal(path: Path, rank: int):
+    """Validate one journal; return its events as dicts."""
+    events = []
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError as e:
+            err(f"{path}:{i}: not a JSON object: {e}")
+            continue
+        missing = JOURNAL_KEYS - ev.keys()
+        if missing:
+            err(f"{path}:{i}: missing keys {sorted(missing)}")
+            continue
+        if ev["ph"] not in ("X", "i"):
+            err(f"{path}:{i}: bad ph {ev['ph']!r} (want X or i)")
+        if ev["rank"] != rank:
+            err(f"{path}:{i}: rank {ev['rank']} in r{rank}.jsonl")
+        for k in ("ts_us", "dur_us", "tid", "rank"):
+            if not isinstance(ev[k], int) or ev[k] < 0:
+                err(f"{path}:{i}: {k} must be a non-negative integer")
+        if ev["ph"] == "i" and ev["dur_us"] != 0:
+            err(f"{path}:{i}: instant with nonzero dur_us")
+        if not isinstance(ev["args"], dict):
+            err(f"{path}:{i}: args must be an object")
+        events.append(ev)
+    if not events:
+        err(f"{path}: empty journal")
+    return events
+
+
+def check_chrome(path: Path, rank: int) -> int:
+    """Validate one Chrome trace file; return its event count."""
+    try:
+        doc = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        err(f"{path}: not loadable JSON: {e}")
+        return 0
+    tev = doc.get("traceEvents")
+    if not isinstance(tev, list):
+        err(f"{path}: no traceEvents list")
+        return 0
+    for i, ev in enumerate(tev):
+        missing = CHROME_KEYS - ev.keys()
+        if missing:
+            err(f"{path}: traceEvents[{i}]: missing keys {sorted(missing)}")
+        elif ev["pid"] != rank:
+            err(f"{path}: traceEvents[{i}]: pid {ev['pid']} in r{rank}.trace.json")
+    return len(tev)
+
+
+def merge(intervals):
+    out = []
+    for a, b in sorted(intervals):
+        if out and a <= out[-1][1]:
+            out[-1][1] = max(out[-1][1], b)
+        else:
+            out.append([a, b])
+    return out
+
+
+def overlap_summary(rank: int, events) -> str:
+    compute = merge(
+        (e["ts_us"], e["ts_us"] + e["dur_us"])
+        for e in events
+        if e["ph"] == "X" and e["cat"] == "compute"
+    )
+    comm_us = hidden_us = 0
+    for e in events:
+        if e["ph"] != "X" or e["cat"] != "comm":
+            continue
+        a, b = e["ts_us"], e["ts_us"] + e["dur_us"]
+        comm_us += b - a
+        for ca, cb in compute:
+            lo, hi = max(a, ca), min(b, cb)
+            if lo < hi:
+                hidden_us += hi - lo
+    frac = hidden_us / comm_us if comm_us else 0.0
+    return (
+        f"r{rank}: {len(events)} events, comm {comm_us} us, "
+        f"hidden {hidden_us} us ({100.0 * frac:.1f}% overlapped)"
+    )
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    root = Path(sys.argv[1])
+    journals = sorted(root.glob("r*.jsonl"))
+    if not journals:
+        err(f"no r*.jsonl journals under {root}")
+        return 1
+    for journal in journals:
+        stem = journal.name[1 : -len(".jsonl")]
+        if not stem.isdigit():
+            err(f"{journal}: malformed rank in filename")
+            continue
+        rank = int(stem)
+        events = check_journal(journal, rank)
+        chrome = journal.with_name(f"r{rank}.trace.json")
+        if chrome.exists():
+            n = check_chrome(chrome, rank)
+            if events and n != len(events):
+                err(f"{chrome}: {n} events vs {len(events)} journal lines")
+        else:
+            err(f"missing {chrome}")
+        if events:
+            print(overlap_summary(rank, events))
+    if errors:
+        print(f"check_trace: FAILED ({errors} error(s))", file=sys.stderr)
+        return 1
+    print(f"check_trace: OK ({len(journals)} rank(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
