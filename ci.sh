@@ -108,6 +108,23 @@ SINGD_RANKS=4 SINGD_TRANSPORT=local timeout "$DIST_TIMEOUT" cargo test -q --test
 timeout "$DIST_TIMEOUT" cargo test -q --test dist_proc resume_
 timeout "$DIST_TIMEOUT" cargo test -q --test dist_proc elastic_
 
+echo "== wire-dtype compressed-collective suite (SINGD_WIRE_DTYPE axis) =="
+# The wire_* cells in tests/dist.rs pin the ISSUE-8 contract: at a fixed
+# wire dtype, collectives and training are bitwise invariant across
+# transport x algo x overlap, the traffic counters are dtype-sized, and
+# fp16-storage runs (GradScaler armed) resume bitwise from checkpoint v4.
+# Only the wire_ prefix runs under SINGD_WIRE_DTYPE=bf16: the wider dist
+# suite's serial-equality and f32-frame bandwidth pins are f32-wire
+# contracts by design (a half wire rightly breaks them), and the bf16
+# axis rides DistCfg::local's env default through the wire_ cells.
+for wd in f32 bf16; do
+    for tr in local socket; do
+        echo "-- SINGD_RANKS=4 SINGD_TRANSPORT=$tr SINGD_WIRE_DTYPE=$wd: wire suite"
+        SINGD_RANKS=4 SINGD_TRANSPORT=$tr SINGD_WIRE_DTYPE=$wd \
+            timeout "$DIST_TIMEOUT" cargo test -q --test dist wire_
+    done
+done
+
 echo "== trace leg (--trace-dir artifacts validated by tools/check_trace.py) =="
 # A small traced distributed job on each transport: every rank must
 # export a well-formed r<N>.jsonl + r<N>.trace.json pair (socket workers

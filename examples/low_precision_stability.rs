@@ -4,19 +4,99 @@
 //! SINGD) remain stable — their updates are multiplications only.
 //!
 //! This driver trains a small VGG on synthetic CIFAR-100 under
-//! fp32 / bf16 / pure-bf16 with KFAC, IKFAC and SINGD-Diag, and reports
-//! divergences and Cholesky failures.
+//! fp32 / bf16 / pure-bf16 with KFAC, IKFAC and SINGD-Diag and reports,
+//! per cell: divergence (and the step it first bit), accumulated
+//! Cholesky failures, the final/best error gap to the fp32 reference,
+//! and the optimizer-state bytes (half-precision storage packs the
+//! Kronecker factors as 2-byte [`singd::numerics::QMat`] payloads). A
+//! second section isolates the end-to-end low-precision *wire*: the same
+//! distributed job at an f32 vs bf16 wire dtype, with per-rank collective
+//! bytes from `singd::dist::traffic`. Results land in
+//! `BENCH_low_precision.json` alongside the printed table.
 //!
 //! ```bash
 //! cargo run --release --example low_precision_stability
 //! ```
 
 use singd::config::{Arch, JobConfig};
+use singd::dist::{traffic, DistStrategy};
 use singd::exp::{default_hyper, run_job};
-use singd::numerics::Policy;
+use singd::numerics::{Dtype, Policy};
 use singd::optim::Method;
 use singd::structured::Structure;
 use singd::train::Schedule;
+
+struct Cell {
+    method: String,
+    precision: &'static str,
+    final_err: f32,
+    best_err: f32,
+    diverged: bool,
+    /// First step whose log row carries the diverged flag (the run stops
+    /// there under `stop_on_divergence`); `None` for stable runs.
+    divergence_step: Option<usize>,
+    chol_failures: usize,
+    optimizer_bytes: usize,
+    steps_run: usize,
+    wall_secs: f64,
+}
+
+struct WireRow {
+    wire: &'static str,
+    ranks: usize,
+    wire_bytes_by_rank: Vec<u64>,
+}
+
+/// Pull `chol_failures=N` out of the optimizer telemetry string.
+fn parse_chol_failures(telemetry: &str) -> usize {
+    telemetry
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("chol_failures="))
+        .and_then(|n| n.parse().ok())
+        .unwrap_or(0)
+}
+
+fn json_u64_array(xs: &[u64]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(", "))
+}
+
+fn write_json(cells: &[Cell], wires: &[WireRow]) {
+    let mut out = String::from("{\n  \"bench\": \"low_precision\",\n  \"cases\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"method\": \"{}\", \"precision\": \"{}\", \"final_err\": {:.4}, \"best_err\": {:.4}, \"diverged\": {}, \"divergence_step\": {}, \"chol_failures\": {}, \"optimizer_bytes\": {}, \"steps_run\": {}, \"wall_secs\": {:.2}}}",
+            c.method,
+            c.precision,
+            c.final_err,
+            c.best_err,
+            c.diverged,
+            c.divergence_step.map_or("null".to_string(), |s| s.to_string()),
+            c.chol_failures,
+            c.optimizer_bytes,
+            c.steps_run,
+            c.wall_secs,
+        ));
+        out.push_str(if i + 1 < cells.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n  \"wire\": [\n");
+    for (i, w) in wires.iter().enumerate() {
+        let max = w.wire_bytes_by_rank.iter().max().copied().unwrap_or(0);
+        out.push_str(&format!(
+            "    {{\"wire\": \"{}\", \"ranks\": {}, \"wire_bytes_by_rank\": {}, \"max_rank_wire_bytes\": {}}}",
+            w.wire,
+            w.ranks,
+            json_u64_array(&w.wire_bytes_by_rank),
+            max,
+        ));
+        out.push_str(if i + 1 < wires.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_low_precision.json", &out) {
+        Ok(()) => println!("\n-- wrote BENCH_low_precision.json"),
+        Err(e) => eprintln!("\n-- failed to write BENCH_low_precision.json: {e}"),
+    }
+}
 
 fn main() {
     let base = JobConfig {
@@ -33,12 +113,25 @@ fn main() {
         seed: 17,
         label: "stability".into(),
         ranks: 1,
-        dist_strategy: singd::dist::DistStrategy::Replicated,
+        dist_strategy: DistStrategy::Replicated,
         transport: singd::dist::Transport::Local,
+        algo: singd::dist::default_algo(),
+        overlap: singd::dist::default_overlap(),
+        wire_dtype: singd::dist::default_wire_dtype(),
+        resume: None,
+        ckpt: None,
+        ckpt_every: 0,
+        elastic: false,
+        trace_dir: None,
+        log: None,
     };
 
-    println!("{:<16} {:<10} {:>9} {:>9} {:>10}  {}", "method", "precision", "final", "best", "diverged", "telemetry");
-    println!("{}", "-".repeat(72));
+    println!(
+        "{:<16} {:<10} {:>9} {:>9} {:>10} {:>10} {:>6} {:>12}",
+        "method", "precision", "final", "best", "diverged", "div_step", "chol", "state_bytes"
+    );
+    println!("{}", "-".repeat(92));
+    let mut cells: Vec<Cell> = Vec::new();
     for method in [
         Method::Kfac,
         Method::Ikfac { structure: Structure::Dense },
@@ -56,20 +149,73 @@ fn main() {
                 cfg.hyper.precond_lr = 0.1;
             }
             let res = run_job(&cfg);
+            let cell = Cell {
+                method: method.name(),
+                precision: prec,
+                final_err: res.final_test_err,
+                best_err: res.best_test_err,
+                diverged: res.diverged,
+                divergence_step: res.rows.iter().find(|r| r.diverged).map(|r| r.step),
+                chol_failures: parse_chol_failures(&res.telemetry),
+                optimizer_bytes: res.optimizer_bytes,
+                steps_run: res.steps_run,
+                wall_secs: res.wall_secs,
+            };
             println!(
-                "{:<16} {:<10} {:>9.3} {:>9.3} {:>10}  {}",
-                method.name(),
-                prec,
-                res.final_test_err,
-                res.best_test_err,
-                if res.diverged { "YES" } else { "no" },
-                res.telemetry
+                "{:<16} {:<10} {:>9.3} {:>9.3} {:>10} {:>10} {:>6} {:>12}",
+                cell.method,
+                cell.precision,
+                cell.final_err,
+                cell.best_err,
+                if cell.diverged { "YES" } else { "no" },
+                cell.divergence_step.map_or("-".to_string(), |s| s.to_string()),
+                cell.chol_failures,
+                cell.optimizer_bytes,
             );
+            cells.push(cell);
         }
     }
+
+    // The wire leg: the same small SINGD job data-parallel at ranks=4,
+    // once per wire dtype. Bulk collective frames carry dtype-sized
+    // elements, so the bf16 wire moves ~half the per-rank bytes; the f64
+    // control plane and checkpoint gathers stay exact either way.
+    println!("\nwire dtype    ranks   max B/rank");
+    let mut wires: Vec<WireRow> = Vec::new();
+    for wire in [Dtype::F32, Dtype::Bf16] {
+        let mut cfg = base.clone();
+        cfg.method = Method::Singd { structure: Structure::Diagonal };
+        cfg.hyper = default_hyper(&cfg.method, false);
+        cfg.arch = Arch::Mlp { hidden: vec![64, 32] };
+        cfg.n_train = 320;
+        cfg.n_test = 64;
+        cfg.epochs = 1;
+        cfg.ranks = 4;
+        cfg.dist_strategy = DistStrategy::FactorSharded;
+        cfg.wire_dtype = wire;
+        traffic::reset();
+        let res = run_job(&cfg);
+        assert!(!res.diverged, "wire leg diverged at {}", wire.name());
+        let row = WireRow {
+            wire: wire.name(),
+            ranks: cfg.ranks,
+            wire_bytes_by_rank: traffic::sent_by_rank(cfg.ranks),
+        };
+        println!(
+            "{:<13} {:>5} {:>12}",
+            row.wire,
+            row.ranks,
+            row.wire_bytes_by_rank.iter().max().copied().unwrap_or(0),
+        );
+        wires.push(row);
+    }
+
+    write_json(&cells, &wires);
+
     println!("\nExpected shape (paper Fig. 1): KFAC's bf16 runs hit Cholesky failures");
     println!("(its damped factors lose positive-definiteness to rounding) and degrade,");
     println!("while the inverse-free methods (IKFAC / SINGD) match their fp32 quality");
-    println!("in bf16 with no failures. The hard-NaN regime is exercised by");
-    println!("`cargo test bf16_cholesky` and `cargo test kfac_bf16`.");
+    println!("in bf16 with no failures — at half the factor bytes — and the bf16 wire");
+    println!("halves the per-rank collective bytes on top. The hard-NaN regime is");
+    println!("exercised by `cargo test bf16_cholesky` and `cargo test kfac_bf16`.");
 }

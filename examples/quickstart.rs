@@ -28,6 +28,15 @@ fn main() {
         ranks: 1,
         dist_strategy: singd::dist::DistStrategy::Replicated,
         transport: singd::dist::Transport::Local,
+        algo: singd::dist::default_algo(),
+        overlap: singd::dist::default_overlap(),
+        wire_dtype: singd::dist::default_wire_dtype(),
+        resume: None,
+        ckpt: None,
+        ckpt_every: 0,
+        elastic: false,
+        trace_dir: None,
+        log: None,
     };
 
     for method in [

@@ -25,6 +25,7 @@ use singd::data;
 use singd::dist::{self, collectives, traffic, Algo, DistCtx, DistStrategy};
 use singd::model::cnn::ImgShape;
 use singd::model::Mlp;
+use singd::numerics::Dtype;
 use singd::obs::trace::{self, RankOverlap};
 use singd::optim::{Hyper, Method, Optimizer};
 use singd::proptest::Pcg;
@@ -37,6 +38,7 @@ struct Row {
     strategy: &'static str,
     algo: &'static str,
     overlap: bool,
+    wire: &'static str,
     per_rank_state_bytes: usize,
     wire_bytes_by_rank: Vec<u64>,
     steps: usize,
@@ -47,6 +49,9 @@ struct CollectiveRow {
     /// Whether the overlapped (chunk-pipelined, for the ring) schedule
     /// produced these bytes.
     overlap: bool,
+    /// Wire dtype the bulk payload travelled as (ISSUE 8: half wire
+    /// dtypes halve the per-rank payload bytes).
+    wire: &'static str,
     world: usize,
     payload_bytes: usize,
     sent_by_rank: Vec<u64>,
@@ -96,7 +101,7 @@ fn write_json(rows: &[Row], colls: &[CollectiveRow], effs: &[OverlapEffRow], smo
     for (i, row) in rows.iter().enumerate() {
         let s = &row.stats;
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"iters\": {}, \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \"min_ns\": {:.1}, \"max_ns\": {:.1}, \"ranks\": {}, \"strategy\": \"{}\", \"algo\": \"{}\", \"overlap\": {}, \"steps\": {}, \"median_step_ns\": {:.1}, \"per_rank_state_bytes\": {}, \"wire_bytes_by_rank\": {}, \"max_rank_wire_bytes\": {}}}",
+            "    {{\"name\": \"{}\", \"iters\": {}, \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \"min_ns\": {:.1}, \"max_ns\": {:.1}, \"ranks\": {}, \"strategy\": \"{}\", \"algo\": \"{}\", \"overlap\": {}, \"wire\": \"{}\", \"steps\": {}, \"median_step_ns\": {:.1}, \"per_rank_state_bytes\": {}, \"wire_bytes_by_rank\": {}, \"max_rank_wire_bytes\": {}}}",
             json_escape(&s.name),
             s.iters,
             s.median_ns,
@@ -107,6 +112,7 @@ fn write_json(rows: &[Row], colls: &[CollectiveRow], effs: &[OverlapEffRow], smo
             row.strategy,
             row.algo,
             row.overlap,
+            row.wire,
             row.steps,
             s.median_ns / row.steps.max(1) as f64,
             row.per_rank_state_bytes,
@@ -122,9 +128,10 @@ fn write_json(rows: &[Row], colls: &[CollectiveRow], effs: &[OverlapEffRow], smo
         let ring_optimal =
             2 * (c.world as u64 - 1) * c.payload_bytes as u64 / c.world as u64;
         out.push_str(&format!(
-            "    {{\"op\": \"all_reduce\", \"algo\": \"{}\", \"overlap\": {}, \"world\": {}, \"payload_bytes\": {}, \"sent_by_rank\": {}, \"max_rank_sent_bytes\": {}, \"ring_optimal_per_rank_bytes\": {}}}",
+            "    {{\"op\": \"all_reduce\", \"algo\": \"{}\", \"overlap\": {}, \"wire\": \"{}\", \"world\": {}, \"payload_bytes\": {}, \"sent_by_rank\": {}, \"max_rank_sent_bytes\": {}, \"ring_optimal_per_rank_bytes\": {}}}",
             c.algo,
             c.overlap,
+            c.wire,
             c.world,
             c.payload_bytes,
             json_u64_array(&c.sent_by_rank),
@@ -164,9 +171,15 @@ fn write_json(rows: &[Row], colls: &[CollectiveRow], effs: &[OverlapEffRow], smo
 /// (in-process transport; the byte model is the socket frame layout
 /// either way — under overlap the ring runs chunk-pipelined, paying one
 /// extra frame header per additional pipeline stage round).
-fn measure_collective(world: usize, algo: Algo, overlap: bool, payload: &Mat) -> CollectiveRow {
+fn measure_collective(
+    world: usize,
+    algo: Algo,
+    overlap: bool,
+    wire: Dtype,
+    payload: &Mat,
+) -> CollectiveRow {
     traffic::reset();
-    let outs = dist::run_ranks_with(world, algo, overlap, |c| {
+    let outs = dist::run_ranks_wire(world, algo, overlap, wire, |c| {
         let red = collectives::all_reduce_sum(&c, std::slice::from_ref(payload));
         red[0].at(0, 0)
     });
@@ -174,8 +187,11 @@ fn measure_collective(world: usize, algo: Algo, overlap: bool, payload: &Mat) ->
     CollectiveRow {
         algo: algo.name(),
         overlap,
+        wire: wire.name(),
         world,
-        payload_bytes: 4 * payload.len(),
+        // Dtype-sized: the logical payload as it travels the wire, so the
+        // ring-optimal model below stays exact for half wire dtypes too.
+        payload_bytes: wire.bytes() * payload.len(),
         sent_by_rank: traffic::sent_by_rank(world),
     }
 }
@@ -269,6 +285,7 @@ fn main() {
                         strategy: strategy.name(),
                         algo: algo.name(),
                         overlap,
+                        wire: dc.wire_dtype.name(),
                         per_rank_state_bytes,
                         wire_bytes_by_rank,
                         steps,
@@ -278,23 +295,87 @@ fn main() {
         }
     }
 
+    // The wire-compression story (ISSUE 8): the same ranks=4 ring epoch
+    // with bf16 collective payloads. Bulk frames carry 2-byte elements,
+    // so per-rank wire bytes drop ~2× (frame headers and the exact f64
+    // control plane are unaffected); the bits stay invariant across
+    // algo × overlap at the fixed bf16 wire (contract 7), which
+    // rust/tests/dist.rs `wire_` cells pin.
+    for strategy in [DistStrategy::Replicated, DistStrategy::FactorSharded] {
+        let shapes: Vec<(usize, usize)> = dims.windows(2).map(|w| (w[1], w[0] + 1)).collect();
+        let per_rank_state_bytes = method
+            .build_dist(&shapes, &cfg.hyper, DistCtx::new(strategy, 0, 4))
+            .state_bytes();
+        let mut dc = DistCfg::local(4, strategy);
+        dc.algo = Algo::Ring;
+        dc.overlap = true;
+        dc.wire_dtype = Dtype::Bf16;
+        traffic::reset();
+        {
+            let mut mrng = Pcg::new(7);
+            let mut model = Mlp::new(&mut mrng, &dims);
+            let res = train_dist(&mut model, &ds, &cfg, &dc);
+            assert!(!res.diverged, "bf16-wire bench run diverged");
+        }
+        let wire_bytes_by_rank = traffic::sent_by_rank(4);
+        if let Some(f32_row) = rows.iter().find(|r| {
+            r.ranks == 4
+                && r.strategy == strategy.name()
+                && r.algo == "ring"
+                && r.overlap
+                && r.wire == dist::default_wire_dtype().name()
+        }) {
+            let f32_max = f32_row.wire_bytes_by_rank.iter().max().copied().unwrap_or(0);
+            let bf16_max = wire_bytes_by_rank.iter().max().copied().unwrap_or(0);
+            println!(
+                "-- ranks=4 {} ring bf16 wire: max {} B/rank vs {} B/rank f32 ({:.2}x reduction)",
+                strategy.name(),
+                bf16_max,
+                f32_max,
+                f32_max as f64 / bf16_max.max(1) as f64,
+            );
+        }
+        let name = format!("train step ranks=4 {} ring overlap=1 wire=bf16", strategy.name());
+        let st = h.bench(&name, || {
+            let mut mrng = Pcg::new(7);
+            let mut model = Mlp::new(&mut mrng, &dims);
+            let res = train_dist(&mut model, &ds, &cfg, &dc);
+            assert!(!res.diverged, "bf16-wire bench run diverged");
+        });
+        rows.push(Row {
+            stats: st,
+            ranks: 4,
+            strategy: strategy.name(),
+            algo: "ring",
+            overlap: true,
+            wire: "bf16",
+            per_rank_state_bytes,
+            wire_bytes_by_rank,
+            steps,
+        });
+    }
+
     // The bandwidth story isolated: one 1-MiB all-reduce at world 4.
     // Star: rank 0 sends (R−1)·(gathered blob ≈ R·N); ring: every rank
     // sends 2·(R−1)/R·N; the pipelined ring moves the same payload with
-    // one extra header per additional stage round.
+    // one extra header per additional stage round; the bf16 wire halves
+    // the per-element width on either algo.
     let payload = Mat::from_fn(512, 512, |r, c| (r * 31 + c) as f32 * 1e-3);
     let colls: Vec<CollectiveRow> = [
-        (Algo::Star, false),
-        (Algo::Ring, false),
-        (Algo::Ring, true),
+        (Algo::Star, false, Dtype::F32),
+        (Algo::Ring, false, Dtype::F32),
+        (Algo::Ring, true, Dtype::F32),
+        (Algo::Star, false, Dtype::Bf16),
+        (Algo::Ring, false, Dtype::Bf16),
     ]
     .iter()
-    .map(|&(algo, overlap)| {
-        let c = measure_collective(4, algo, overlap, &payload);
+    .map(|&(algo, overlap, wire)| {
+        let c = measure_collective(4, algo, overlap, wire, &payload);
         println!(
-            "-- all_reduce 1 MiB world=4 {} overlap={}: sent/rank {:?} (max {} B)",
+            "-- all_reduce 1 MiB world=4 {} overlap={} wire={}: sent/rank {:?} (max {} B)",
             c.algo,
             c.overlap as u8,
+            c.wire,
             c.sent_by_rank,
             c.sent_by_rank.iter().max().copied().unwrap_or(0),
         );
@@ -321,6 +402,7 @@ fn main() {
             strategy: "collective",
             algo: "ring",
             overlap,
+            wire: dist::default_wire_dtype().name(),
             per_rank_state_bytes: 0,
             wire_bytes_by_rank: Vec::new(),
             steps: 1,
@@ -359,13 +441,26 @@ fn main() {
 
     // The headline memory claim in one line: sharded rank-0 bytes vs
     // replicated, at the largest world size.
+    let default_wire = dist::default_wire_dtype().name();
     let rep = rows
         .iter()
-        .find(|r| r.ranks == 4 && r.strategy == "replicated" && r.algo == "ring" && r.overlap)
+        .find(|r| {
+            r.ranks == 4
+                && r.strategy == "replicated"
+                && r.algo == "ring"
+                && r.overlap
+                && r.wire == default_wire
+        })
         .unwrap();
     let sh = rows
         .iter()
-        .find(|r| r.ranks == 4 && r.strategy == "factor-sharded" && r.algo == "ring" && r.overlap)
+        .find(|r| {
+            r.ranks == 4
+                && r.strategy == "factor-sharded"
+                && r.algo == "ring"
+                && r.overlap
+                && r.wire == default_wire
+        })
         .unwrap();
     println!(
         "-- ranks=4 per-rank factor state: replicated {} B, factor-sharded {} B ({:.2}x)",

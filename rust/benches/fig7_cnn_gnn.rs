@@ -51,6 +51,7 @@ fn main() {
             transport: singd::dist::Transport::Local,
             algo: singd::dist::default_algo(),
             overlap: singd::dist::default_overlap(),
+            wire_dtype: singd::dist::default_wire_dtype(),
             resume: None,
             ckpt: None,
             ckpt_every: 0,

@@ -61,7 +61,8 @@ USAGE:
   singd train   --config <file.toml> [--out <curves.csv>]
                 [--ranks <R>] [--strategy <replicated|factor-sharded>]
                 [--transport <local|socket>] [--algo <star|ring>]
-                [--overlap <0|1>] [--ckpt <file.ckpt>] [--ckpt-every <N>]
+                [--overlap <0|1>] [--wire-dtype <f32|bf16|fp16>]
+                [--ckpt <file.ckpt>] [--ckpt-every <N>]
                 [--resume <file.ckpt>] [--elastic <0|1>]
                 [--trace-dir <dir>] [--log <error|warn|info|debug>]
   singd sweep   --config <file.toml> [--trials <N>] [--seed <S>]
@@ -86,7 +87,12 @@ exchanges issued ahead of their waits — bitwise identical to
 either algo, either overlap mode at ranks=R is bitwise identical to
 ranks=1 for power-of-two R dividing the batch size; non-dividing
 R <= batch still train deterministically via the balanced padding
-rule. SINGD_THREADS caps the worker pool all ranks share.
+rule. --wire-dtype bf16|fp16 (default f32; SINGD_WIRE_DTYPE env
+overrides) moves the stats gathers and update all-reduces as 2-byte
+payloads (~half the per-rank wire bytes); runs stay bitwise identical
+across transport x algo x overlap at a fixed wire dtype but a half
+wire forfeits exact serial equality. SINGD_THREADS caps the worker
+pool all ranks share.
 
 Fault tolerance: --ckpt F --ckpt-every N writes an atomic checkpoint
 (tmp + fsync + rename, last good kept as F.prev) every N steps;
@@ -201,6 +207,15 @@ fn cmd_train(args: &Args) -> i32 {
             }
         }
     }
+    if let Some(w) = args.get("wire-dtype") {
+        match crate::numerics::Dtype::parse(w) {
+            Some(d) => cfg.wire_dtype = d,
+            None => {
+                crate::obs_error!("error: bad --wire-dtype '{w}' (f32 | bf16 | fp16)");
+                return 2;
+            }
+        }
+    }
     if let Some(p) = args.get("ckpt") {
         cfg.ckpt = Some(p.to_string());
     }
@@ -301,7 +316,7 @@ fn cmd_train(args: &Args) -> i32 {
         return if res.diverged { 1 } else { 0 };
     }
     crate::obs_info!(
-        "training {} / {} with {} ({}), {} epochs, ranks={} ({}, {}, {}, overlap={})",
+        "training {} / {} with {} ({}), {} epochs, ranks={} ({}, {}, {}, overlap={}, wire={})",
         cfg.label,
         cfg.dataset,
         cfg.method.name(),
@@ -311,7 +326,8 @@ fn cmd_train(args: &Args) -> i32 {
         cfg.dist_strategy.name(),
         cfg.transport.name(),
         cfg.algo.name(),
-        if cfg.overlap { 1 } else { 0 }
+        if cfg.overlap { 1 } else { 0 },
+        cfg.wire_dtype.name()
     );
     let res = exp::run_job(&cfg);
     for r in &res.rows {
@@ -475,6 +491,7 @@ mod tests {
         assert_eq!(run(&sv(&["train", "--config", p, "--transport", "pigeon"])), 2);
         assert_eq!(run(&sv(&["train", "--config", p, "--algo", "mesh"])), 2);
         assert_eq!(run(&sv(&["train", "--config", p, "--overlap", "sideways"])), 2);
+        assert_eq!(run(&sv(&["train", "--config", p, "--wire-dtype", "int4"])), 2);
         // batch_size 32 (default) smaller than the world size → clean
         // error, not a driver assert. (Non-dividing ranks <= batch are
         // allowed: they shard via the balanced padding rule.)

@@ -38,6 +38,8 @@
 //! transport = "socket"         # local | socket (default: SINGD_TRANSPORT env, else local)
 //! algo = "ring"                # star | ring (default: SINGD_ALGO env, else ring)
 //! overlap = true               # comm/compute overlap (default: SINGD_OVERLAP env, else on)
+//! wire_dtype = "bf16"          # f32 | bf16 | fp16 collective payload dtype
+//!                              # (default: SINGD_WIRE_DTYPE env, else f32)
 //! elastic = true               # survive worker death / admit joiners (socket only;
 //!                              # requires ckpt + ckpt_every >= 1)
 //!
@@ -50,7 +52,7 @@
 
 use crate::dist::{self, Algo, DistStrategy, Transport};
 use crate::obs::log::Level;
-use crate::numerics::Policy;
+use crate::numerics::{Dtype, Policy};
 use crate::optim::{Hyper, Method};
 use crate::train::Schedule;
 use std::collections::BTreeMap;
@@ -250,6 +252,12 @@ pub struct JobConfig {
     /// overlap-invariance contract; the knob trades progress-engine
     /// overhead for hidden collective latency.
     pub overlap: bool,
+    /// Collective payload dtype (`[dist] wire_dtype`; defaults to the
+    /// `SINGD_WIRE_DTYPE` env contract, else exact `f32`). Half wire
+    /// dtypes halve the per-rank bytes of the stats gather and update
+    /// all-reduce; runs stay bitwise deterministic across transport ×
+    /// algo × overlap at any fixed wire dtype.
+    pub wire_dtype: Dtype,
     /// Resume from this checkpoint (`[train] resume` / `--resume`); the
     /// continued run is bitwise identical to an uninterrupted one.
     pub resume: Option<String>,
@@ -322,6 +330,11 @@ impl JobConfig {
         let default_algo = dist::default_algo();
         let algo = Algo::parse(t.str_or("dist.algo", default_algo.name()))
             .ok_or_else(|| format!("unknown dist.algo '{}'", t.str_or("dist.algo", "")))?;
+        let default_wire = dist::default_wire_dtype();
+        let wire_dtype = Dtype::parse(t.str_or("dist.wire_dtype", default_wire.name()))
+            .ok_or_else(|| {
+                format!("unknown dist.wire_dtype '{}'", t.str_or("dist.wire_dtype", ""))
+            })?;
         // `overlap = true|false` (TOML bool) or a string form accepted by
         // dist::parse_overlap; anything else is rejected, not ignored.
         let overlap = match t.get("dist.overlap") {
@@ -423,6 +436,7 @@ impl JobConfig {
             transport,
             algo,
             overlap,
+            wire_dtype,
             resume,
             ckpt,
             ckpt_every,
@@ -612,6 +626,20 @@ seed = 7
         assert!(JobConfig::from_str_toml("[obs]\ntrace_dir = 3\n").is_err());
         assert!(JobConfig::from_str_toml("[obs]\nlog = \"loud\"\n").is_err());
         assert!(JobConfig::from_str_toml("[obs]\nlog = 2\n").is_err());
+    }
+
+    #[test]
+    fn dist_section_parses_wire_dtype() {
+        let cfg = JobConfig::from_str_toml("[dist]\nwire_dtype = \"bf16\"\n").unwrap();
+        assert_eq!(cfg.wire_dtype, Dtype::Bf16);
+        let cfg = JobConfig::from_str_toml("[dist]\nwire_dtype = \"fp16\"\n").unwrap();
+        assert_eq!(cfg.wire_dtype, Dtype::Fp16);
+        let cfg = JobConfig::from_str_toml("[dist]\nwire_dtype = \"f32\"\n").unwrap();
+        assert_eq!(cfg.wire_dtype, Dtype::F32);
+        // Default follows the SINGD_WIRE_DTYPE env contract (f32 when unset).
+        let cfg = JobConfig::from_str_toml("[model]\narch = \"mlp\"\n").unwrap();
+        assert_eq!(cfg.wire_dtype, dist::default_wire_dtype());
+        assert!(JobConfig::from_str_toml("[dist]\nwire_dtype = \"int4\"\n").is_err());
     }
 
     #[test]

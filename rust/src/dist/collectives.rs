@@ -68,9 +68,27 @@
 //! gathering raw statistics rows (exact concatenation) and all-reducing
 //! zero-padded updates (one nonzero contributor per element — any
 //! reduction order gives the same bits).
+//!
+//! # Wire dtype
+//!
+//! Bulk collectives honor [`Communicator::wire_dtype`]: contributions
+//! are *snapped* to the wire format's representable set
+//! ([`crate::numerics::Dtype::round`]) before any byte leaves a rank,
+//! p2p chunk payloads and encoded gather lists carry dtype-width element
+//! images (2 bytes under `bf16`/`fp16`), and every reduced chunk is
+//! re-snapped before it circulates — so the values on the wire are
+//! always exactly representable and the narrowing encode is lossless.
+//! The reduction contract becomes `snap(tree(snap(contributions)))`,
+//! identical across star/ring × transports × overlap at a fixed wire
+//! dtype (the refined contract 7). [`Dtype::F32`] snaps are identity and
+//! the byte images are the classic 4-byte frames, so the default path is
+//! untouched bit for bit. [`broadcast`] stays exact on any wire dtype —
+//! it replicates checkpoint/init state, not per-step gradients, and
+//! forwards the root's bytes unmodified either way.
 
-use super::transport::{decode_mats, encode_mats};
+use super::transport::{decode_mats, decode_mats_wire, encode_mats, encode_mats_wire};
 use super::{Communicator, PendingOp};
+use crate::numerics::{Bf16, Dtype, Fp16};
 use crate::tensor::Mat;
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -183,53 +201,117 @@ fn ring_reduce_phase(
 ) -> Vec<f32> {
     let world = comm.world_size();
     let rank = comm.rank();
+    let wire = comm.wire_dtype();
     let my = range_of(rank);
     let mut contrib: Vec<Vec<f32>> = vec![Vec::new(); world];
     contrib[rank] = flat[my.clone()].to_vec();
     for s in 1..world {
         let to = (rank + s) % world;
         let from = (rank + world - s) % world;
-        let got = comm.send_recv_bytes(to, &f32s_to_bytes(&flat[range_of(to)]), from);
-        contrib[from] = bytes_to_f32s(&got, my.len());
+        let got = comm.send_recv_bytes(to, &chunk_to_bytes(wire, &flat[range_of(to)]), from);
+        contrib[from] = bytes_to_chunk(wire, &got, my.len());
     }
     tree_combine_f32(contrib)
 }
 
-/// Bit-exact f32 → LE-byte image of a chunk (the p2p payload format;
-/// `PROTOCOL.md` §Ring chunks).
-fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
-    let mut buf = Vec::with_capacity(4 * xs.len());
-    for v in xs {
-        buf.extend_from_slice(&v.to_le_bytes());
+/// Snap every element to the wire format's representable set (identity
+/// at [`Dtype::F32`]). Idempotent, so a pre-snapped buffer is unchanged
+/// bit for bit — the property that makes the dtype-width chunk encode
+/// lossless everywhere it is applied.
+fn snap_slice(wire: Dtype, xs: &mut [f32]) {
+    if wire != Dtype::F32 {
+        for v in xs.iter_mut() {
+            *v = wire.round(*v);
+        }
+    }
+}
+
+/// Snapped copy of a matrix list (no copy avoidance at `F32` — callers
+/// on that path skip the call entirely).
+fn snap_mats(wire: Dtype, mats: &[Mat]) -> Vec<Mat> {
+    mats.iter()
+        .map(|m| {
+            let mut data = m.data().to_vec();
+            snap_slice(wire, &mut data);
+            Mat::from_vec(m.rows(), m.cols(), data)
+        })
+        .collect()
+}
+
+/// Wire-dtype LE-byte image of a chunk (the p2p payload format;
+/// `PROTOCOL.md` §Ring chunks): 4-byte f32 bits at [`Dtype::F32`],
+/// 2-byte half bits otherwise. Callers snap first, so the narrowing is
+/// bit-exact either way.
+fn chunk_to_bytes(wire: Dtype, xs: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(wire.bytes() * xs.len());
+    match wire {
+        Dtype::F32 => {
+            for v in xs {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Dtype::Bf16 => {
+            for v in xs {
+                buf.extend_from_slice(&Bf16::from_f32(*v).bits().to_le_bytes());
+            }
+        }
+        Dtype::Fp16 => {
+            for v in xs {
+                buf.extend_from_slice(&Fp16::from_f32(*v).bits().to_le_bytes());
+            }
+        }
     }
     buf
 }
 
 /// Decode a chunk, checking the element count the schedule prescribes —
 /// a mismatch is an SPMD call-order violation, not data to interpret.
-fn bytes_to_f32s(bytes: &[u8], expect: usize) -> Vec<f32> {
+fn bytes_to_chunk(wire: Dtype, bytes: &[u8], expect: usize) -> Vec<f32> {
     assert_eq!(
         bytes.len(),
-        4 * expect,
+        wire.bytes() * expect,
         "dist: ring chunk size mismatch (SPMD call order violated?)"
     );
-    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+    match wire {
+        Dtype::F32 => {
+            bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+        }
+        Dtype::Bf16 => bytes
+            .chunks_exact(2)
+            .map(|c| Bf16::from_bits(u16::from_le_bytes(c.try_into().unwrap())).to_f32())
+            .collect(),
+        Dtype::Fp16 => bytes
+            .chunks_exact(2)
+            .map(|c| Fp16::from_bits(u16::from_le_bytes(c.try_into().unwrap())).to_f32())
+            .collect(),
+    }
 }
 
 /// All-reduce (sum) a list of matrices: every rank contributes its list,
-/// every rank receives the elementwise halving-tree sum. Shapes must
-/// agree across ranks. Dispatches on [`Communicator::algo`] — and, under
-/// [`Algo::Ring`], on [`Communicator::overlap`]: the chunk-pipelined
-/// schedule ([`all_reduce_sum_pipelined`]) when overlap is enabled, the
-/// blocking ring otherwise. All paths produce identical bits.
+/// every rank receives the elementwise halving-tree sum of the
+/// wire-snapped contributions, re-snapped
+/// (`snap(tree(snap(contributions)))`; snap is identity on the default
+/// `F32` wire). Shapes must agree across ranks. Dispatches on
+/// [`Communicator::algo`] — and, under [`Algo::Ring`], on
+/// [`Communicator::overlap`]: the chunk-pipelined schedule
+/// ([`all_reduce_sum_pipelined`]) when overlap is enabled, the blocking
+/// ring otherwise. All paths produce identical bits at a fixed wire
+/// dtype.
 pub fn all_reduce_sum(comm: &dyn Communicator, mats: &[Mat]) -> Vec<Mat> {
     if comm.world_size() == 1 {
         return mats.to_vec();
     }
     match comm.algo() {
         Algo::Star => {
-            let parts = comm.exchange_mats(mats.to_vec());
-            tree_combine(&parts)
+            let wire = comm.wire_dtype();
+            let contribution =
+                if wire == Dtype::F32 { mats.to_vec() } else { snap_mats(wire, mats) };
+            let parts = comm.exchange_mats_wire(contribution);
+            let mut out = tree_combine(&parts);
+            for m in &mut out {
+                snap_slice(wire, m.data_mut());
+            }
+            out
         }
         Algo::Ring => {
             if comm.overlap() {
@@ -290,7 +372,8 @@ pub fn all_reduce_sum_pipelined_stages(
     if comm.world_size() == 1 {
         return mats.to_vec();
     }
-    let flat = flatten(mats);
+    let mut flat = flatten(mats);
+    snap_slice(comm.wire_dtype(), &mut flat);
     let reduced = ring_all_reduce_flat_pipelined(comm, &flat, stages);
     unflatten(mats, &reduced)
 }
@@ -319,7 +402,10 @@ pub fn broadcast(comm: &dyn Communicator, root: usize, mats: Vec<Mat>) -> Vec<Ma
 }
 
 /// All-gather arbitrary per-rank matrix lists, returned in rank order.
-/// Pure data movement — exact on any algorithm/transport. Under
+/// Pure data movement after the one-time wire snap: contributions are
+/// quantized to [`Communicator::wire_dtype`] at the source (identity on
+/// the default `F32` wire — then the gather is exact) and every rank
+/// receives identical bits on any algorithm/transport. Under
 /// [`Algo::Ring`] the encoded lists circulate over neighbor links
 /// (`R−1` hops, forwarded byte-identically), replacing the star's rank-0
 /// fan-in; this is the collective behind the training driver's
@@ -328,8 +414,18 @@ pub fn all_gather(comm: &dyn Communicator, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>>
     if comm.world_size() == 1 {
         return vec![Arc::new(mats)];
     }
+    let wire = comm.wire_dtype();
+    let mats = if wire == Dtype::F32 {
+        mats
+    } else {
+        let mut mats = mats;
+        for m in &mut mats {
+            snap_slice(wire, m.data_mut());
+        }
+        mats
+    };
     match comm.algo() {
-        Algo::Star => comm.exchange_mats(mats),
+        Algo::Star => comm.exchange_mats_wire(mats),
         // A gather is pure data movement: a zero-copy transport returns
         // the identical bits without the ring's encode/forward/decode
         // hops (see [`Communicator::gather_zero_copy`]); wire transports
@@ -419,11 +515,12 @@ fn unflatten(mats: &[Mat], flat: &[f32]) -> Vec<Mat> {
     out
 }
 
-/// Ring all-reduce of a matrix list: flatten, pairwise-exchange
-/// reduce-scatter over the element space, halving-tree reduce each chunk
-/// at its destination, ring all-gather, unflatten.
+/// Ring all-reduce of a matrix list: flatten, snap to the wire dtype,
+/// pairwise-exchange reduce-scatter over the element space, halving-tree
+/// reduce each chunk at its destination, ring all-gather, unflatten.
 fn ring_all_reduce(comm: &dyn Communicator, mats: &[Mat]) -> Vec<Mat> {
-    let flat = flatten(mats);
+    let mut flat = flatten(mats);
+    snap_slice(comm.wire_dtype(), &mut flat);
     let reduced = ring_all_reduce_flat(comm, &flat);
     unflatten(mats, &reduced)
 }
@@ -447,6 +544,7 @@ fn ring_all_reduce_flat_pipelined(
 ) -> Vec<f32> {
     let world = comm.world_size();
     let rank = comm.rank();
+    let wire = comm.wire_dtype();
     let total = flat.len();
     let stages = stages.max(1);
     let right = (rank + 1) % world;
@@ -465,7 +563,7 @@ fn ring_all_reduce_flat_pipelined(
             .map(|s| {
                 let to = (rank + s) % world;
                 let from = (rank + world - s) % world;
-                comm.istart_send_recv_bytes(to, f32s_to_bytes(&flat[chunk(m, to)]), from)
+                comm.istart_send_recv_bytes(to, chunk_to_bytes(wire, &flat[chunk(m, to)]), from)
             })
             .collect()
     };
@@ -484,12 +582,16 @@ fn ring_all_reduce_flat_pipelined(
         let ops = in_flight.pop_front().expect("pipelined ring: missing phase-1 ops");
         for (s, op) in (1..world).zip(ops) {
             let from = (rank + world - s) % world;
-            contrib[from] = bytes_to_f32s(&op.wait(), my.len());
+            contrib[from] = bytes_to_chunk(wire, &op.wait(), my.len());
         }
         // Destination reduction: the same rank-indexed halving tree as
         // the blocking ring and the star — this compute overlaps the
-        // engine's transfers for stages m+1..m+PIPELINE_DEPTH.
-        let reduced = tree_combine_f32(contrib);
+        // engine's transfers for stages m+1..m+PIPELINE_DEPTH. The
+        // reduced chunk is re-snapped before it circulates so phase 2
+        // stays lossless on a half wire dtype (and the result matches
+        // the star's `snap(tree(snap))` bit for bit).
+        let mut reduced = tree_combine_f32(contrib);
+        snap_slice(wire, &mut reduced);
         out[my.clone()].copy_from_slice(&reduced);
         // Phase 2 of stage m: circulate the reduced chunks. Each hop's
         // payload is the previous hop's receipt, so the chain is issued
@@ -498,8 +600,9 @@ fn ring_all_reduce_flat_pipelined(
         let mut cursor = reduced;
         for s in 0..world - 1 {
             let recv_idx = (rank + world - s - 1) % world;
-            let got = comm.istart_send_recv_bytes(right, f32s_to_bytes(&cursor), left).wait();
-            cursor = bytes_to_f32s(&got, chunk(m, recv_idx).len());
+            let got =
+                comm.istart_send_recv_bytes(right, chunk_to_bytes(wire, &cursor), left).wait();
+            cursor = bytes_to_chunk(wire, &got, chunk(m, recv_idx).len());
             out[chunk(m, recv_idx)].copy_from_slice(&cursor);
         }
     }
@@ -514,12 +617,15 @@ fn ring_all_reduce_flat_pipelined(
 fn ring_all_reduce_flat(comm: &dyn Communicator, flat: &[f32]) -> Vec<f32> {
     let world = comm.world_size();
     let rank = comm.rank();
+    let wire = comm.wire_dtype();
     let total = flat.len();
     let chunk = |c: usize| super::shard::row_shard_range(total, world, c);
     let my = chunk(rank);
 
-    // Phase 1 — pairwise-exchange reduce-scatter.
-    let reduced = ring_reduce_phase(comm, flat, &chunk);
+    // Phase 1 — pairwise-exchange reduce-scatter; the reduced chunk is
+    // re-snapped before it circulates (see the pipelined schedule).
+    let mut reduced = ring_reduce_phase(comm, flat, &chunk);
+    snap_slice(wire, &mut reduced);
 
     // Phase 2 — ring all-gather: circulate the reduced chunks clockwise;
     // at step s this rank forwards chunk (rank − s) mod world and
@@ -531,8 +637,8 @@ fn ring_all_reduce_flat(comm: &dyn Communicator, flat: &[f32]) -> Vec<f32> {
     let mut cursor = reduced;
     for s in 0..world - 1 {
         let recv_idx = (rank + world - s - 1) % world;
-        let got = comm.send_recv_bytes(right, &f32s_to_bytes(&cursor), left);
-        cursor = bytes_to_f32s(&got, chunk(recv_idx).len());
+        let got = comm.send_recv_bytes(right, &chunk_to_bytes(wire, &cursor), left);
+        cursor = bytes_to_chunk(wire, &got, chunk(recv_idx).len());
         out[chunk(recv_idx)].copy_from_slice(&cursor);
     }
     out
@@ -544,6 +650,7 @@ fn ring_all_reduce_flat(comm: &dyn Communicator, flat: &[f32]) -> Vec<f32> {
 fn ring_reduce_scatter_rows(comm: &dyn Communicator, m: &Mat) -> Mat {
     let world = comm.world_size();
     let rank = comm.rank();
+    let wire = comm.wire_dtype();
     let (rows, cols) = m.shape();
     // Row blocks are contiguous element ranges of the row-major data, so
     // the shared phase applies directly with a row→element range map.
@@ -552,24 +659,33 @@ fn ring_reduce_scatter_rows(comm: &dyn Communicator, m: &Mat) -> Mat {
         r.start * cols..r.end * cols
     };
     let my_rows = super::shard::row_shard_range(rows, world, rank).len();
-    Mat::from_vec(my_rows, cols, ring_reduce_phase(comm, m.data(), erange))
+    // Snap the contribution and the reduced block so the result matches
+    // the star path's `snap(tree(snap))` on any wire dtype.
+    let mut flat = m.data().to_vec();
+    snap_slice(wire, &mut flat);
+    let mut reduced = ring_reduce_phase(comm, &flat, erange);
+    snap_slice(wire, &mut reduced);
+    Mat::from_vec(my_rows, cols, reduced)
 }
 
-/// Ring all-gather of per-rank matrix lists: the encoded list circulates
-/// over neighbor links and is forwarded byte-identically, so every rank
-/// decodes the exact bytes the originator produced.
+/// Ring all-gather of per-rank matrix lists: the wire-dtype-encoded list
+/// circulates over neighbor links and is forwarded byte-identically, so
+/// every rank decodes the exact bytes the originator produced (the
+/// caller pre-snapped the payload, so the dtype-width encode is
+/// lossless).
 fn ring_all_gather_lists(comm: &dyn Communicator, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
     let world = comm.world_size();
     let rank = comm.rank();
+    let wire = comm.wire_dtype();
     let right = (rank + 1) % world;
     let left = (rank + world - 1) % world;
     let mut out: Vec<Option<Arc<Vec<Mat>>>> = (0..world).map(|_| None).collect();
-    let mut cursor = encode_mats(&mats);
+    let mut cursor = encode_mats_wire(&mats, wire);
     out[rank] = Some(Arc::new(mats));
     for s in 0..world - 1 {
         let recv_idx = (rank + world - s - 1) % world;
         let got = comm.send_recv_bytes(right, &cursor, left);
-        let decoded = decode_mats(&got)
+        let decoded = decode_mats_wire(&got, wire)
             .unwrap_or_else(|e| panic!("dist: corrupt ring all-gather payload: {e}"));
         out[recv_idx] = Some(Arc::new(decoded));
         cursor = got;
@@ -882,5 +998,77 @@ mod tests {
         assert_eq!(ar[0].data(), m.data());
         assert_eq!(ag.data(), m.data());
         assert_eq!(bc[0].data(), m.data());
+    }
+
+    #[test]
+    fn wire_chunk_codec_is_lossless_on_snapped_values() {
+        let mut rng = Pcg::new(0x71fe);
+        for wire in [Dtype::F32, Dtype::Bf16, Dtype::Fp16] {
+            let mut xs: Vec<f32> = (0..257).map(|_| rng.normal() * 3.0).collect();
+            snap_slice(wire, &mut xs);
+            let bytes = chunk_to_bytes(wire, &xs);
+            assert_eq!(bytes.len(), wire.bytes() * xs.len(), "{}", wire.name());
+            let back = bytes_to_chunk(wire, &bytes, xs.len());
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&back), bits(&xs), "{}", wire.name());
+        }
+    }
+
+    #[test]
+    fn wire_half_all_reduce_is_algo_and_overlap_invariant() {
+        use crate::dist::run_ranks_wire;
+        // The refined contract 7: at a fixed half wire dtype, star,
+        // blocking ring and pipelined ring still agree bit for bit (and
+        // every element of the result is wire-representable).
+        let mut rng = Pcg::new(0xa1b2);
+        for world in [2usize, 3, 4] {
+            let mats: Vec<Vec<Mat>> =
+                (0..world).map(|_| vec![rng.normal_mat(5, 7, 1.0), rng.normal_mat(1, 3, 4.0)]).collect();
+            let mref = &mats;
+            for wire in [Dtype::Bf16, Dtype::Fp16] {
+                let mut results: Vec<Vec<Mat>> = Vec::new();
+                for (algo, overlap) in [
+                    (Algo::Star, false),
+                    (Algo::Ring, false),
+                    (Algo::Ring, true),
+                ] {
+                    let out = run_ranks_wire(world, algo, overlap, wire, |c| {
+                        all_reduce_sum(&c, &mref[c.rank()])
+                    });
+                    for r in &out {
+                        for m in r {
+                            for &v in m.data() {
+                                assert_eq!(v.to_bits(), wire.round(v).to_bits());
+                            }
+                        }
+                    }
+                    results.push(out.into_iter().next().unwrap());
+                }
+                for r in &results[1..] {
+                    assert_eq!(r, &results[0], "world {world} wire {}", wire.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wire_half_all_gather_snaps_contributions_once() {
+        use crate::dist::run_ranks_wire;
+        let mut rng = Pcg::new(0xc3d4);
+        let contribs: Vec<Mat> = (0..3).map(|_| rng.normal_mat(4, 5, 1.0)).collect();
+        let cref = &contribs;
+        for algo in [Algo::Star, Algo::Ring] {
+            let out = run_ranks_wire(3, algo, false, Dtype::Bf16, |c| {
+                all_gather(&c, vec![cref[c.rank()].clone()])
+            });
+            for parts in &out {
+                for (r, p) in parts.iter().enumerate() {
+                    let want: Vec<u32> =
+                        cref[r].data().iter().map(|&v| Dtype::Bf16.round(v).to_bits()).collect();
+                    let got: Vec<u32> = p[0].data().iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(got, want, "rank {r} {}", algo.name());
+                }
+            }
+        }
     }
 }

@@ -86,20 +86,42 @@
 //! Scalar exchanges ([`Communicator::exchange_f64`]: loss partials,
 //! divergence flags) always ride the barrier-exchange star regardless of
 //! [`Algo`] — they are a few bytes per step and double as the SPMD
-//! heartbeat.
+//! heartbeat. They are also never compressed: the wire dtype below
+//! applies to bulk tensor payloads only, so the control plane stays
+//! exact.
 //!
-//! # The `SINGD_RANKS` / `SINGD_TRANSPORT` / `SINGD_ALGO` / `SINGD_OVERLAP` contract
+//! # Wire dtype (compressed collectives)
+//!
+//! [`Communicator::wire_dtype`] selects the element format bulk tensor
+//! collectives move over the wire: stats all-gathers and reducing
+//! all-reduces snap their contributions to the wire-representable set
+//! ([`crate::numerics::Dtype::round`]) and ship 2-byte element images
+//! under `bf16`/`fp16` — halving per-rank collective bytes — while
+//! [`crate::numerics::Dtype::F32`] (the default) is the identity: exact
+//! 4-byte frames, bitwise identical to the uncompressed protocol. The
+//! reduction contract becomes `snap(tree(snap(contributions)))`, so the
+//! determinism guarantee is refined to **bitwise within a wire dtype**:
+//! at a fixed wire dtype and world size, results are still invariant
+//! across transport × algorithm × overlap (ARCHITECTURE.md contract 7);
+//! at a half wire dtype the serial-equality and rank-count-invariance
+//! contracts deliberately no longer apply. Checkpoint state gathers and
+//! broadcasts stay exact ([`Communicator::exchange_mats`]) regardless of
+//! the knob.
+//!
+//! # The `SINGD_RANKS` / `SINGD_TRANSPORT` / `SINGD_ALGO` / `SINGD_OVERLAP` / `SINGD_WIRE_DTYPE` contract
 //!
 //! `SINGD_RANKS=<n>` sets the *default* world size,
 //! `SINGD_TRANSPORT=<local|socket>` the *default* transport,
-//! `SINGD_ALGO=<star|ring>` the *default* collective algorithm and
-//! `SINGD_OVERLAP=<0|1>` the *default* overlap mode used by
+//! `SINGD_ALGO=<star|ring>` the *default* collective algorithm,
+//! `SINGD_OVERLAP=<0|1>` the *default* overlap mode and
+//! `SINGD_WIRE_DTYPE=<f32|bf16|fp16>` the *default* wire dtype used by
 //! config-driven entry points ([`crate::config::JobConfig`]); explicit
 //! `[dist]` config keys and `--ranks` / `--transport` / `--algo` /
-//! `--overlap` CLI flags override them. Read once, cached. Like the
-//! algorithm, the overlap mode is a run-level constant: every rank of a
-//! world must be constructed with the same value (the socket launcher
-//! pins it into workers' environments).
+//! `--overlap` / `--wire-dtype` CLI flags override them. Read once,
+//! cached. Like the algorithm, the overlap mode and wire dtype are
+//! run-level constants: every rank of a world must be constructed with
+//! the same value (the socket launcher pins them into workers'
+//! environments).
 #![deny(missing_docs)]
 
 pub mod bucket;
@@ -113,6 +135,7 @@ pub use collectives::Algo;
 pub use pending::PendingOp;
 pub use transport::{SocketComm, Transport};
 
+use crate::numerics::Dtype;
 use crate::tensor::{pool, Mat};
 use pending::Engine;
 use std::any::Any;
@@ -267,6 +290,22 @@ pub fn default_overlap() -> bool {
     })
 }
 
+/// Default wire dtype for compressed collectives: `SINGD_WIRE_DTYPE`
+/// (read once, cached), else [`Dtype::F32`] — exact 4-byte frames, the
+/// bitwise-identical-to-serial default. `bf16` / `fp16` halve the bulk
+/// collective bytes at the cost of snapping contributions to the wire
+/// format (see the module docs). Explicit `[dist] wire_dtype` config
+/// keys and `--wire-dtype` CLI flags override it.
+pub fn default_wire_dtype() -> Dtype {
+    static CACHED: OnceLock<Dtype> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::env::var("SINGD_WIRE_DTYPE")
+            .ok()
+            .and_then(|v| Dtype::parse(&v))
+            .unwrap_or(Dtype::F32)
+    })
+}
+
 /// Rank/topology plus the communication primitives every collective is
 /// built on: a barrier exchange (each rank contributes one payload per
 /// call and receives all ranks' payloads in rank order), point-to-point
@@ -319,10 +358,34 @@ pub trait Communicator {
     /// 4 — the knob trades progress-engine overhead for overlap.
     fn overlap(&self) -> bool;
 
+    /// The element format bulk tensor collectives move over the wire (a
+    /// run-level constant, like [`algo`](Communicator::algo)): the
+    /// [`collectives`] dispatchers snap contributions to this format's
+    /// representable set and transports ship dtype-width element images.
+    /// [`Dtype::F32`] (the default) is the identity — exact 4-byte
+    /// frames, bitwise identical to the uncompressed protocol.
+    fn wire_dtype(&self) -> Dtype {
+        Dtype::F32
+    }
+
     /// Exchange a list of matrices; returns every rank's payload in rank
     /// order. A *barrier*: no rank returns before every rank has
     /// deposited. Every rank must call it, in the same global order.
     fn exchange_mats(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>>;
+
+    /// [`exchange_mats`](Communicator::exchange_mats) over wire-dtype
+    /// frames: payload elements travel (or, on pointer-sharing
+    /// transports, are *accounted*) at
+    /// [`wire_dtype`](Communicator::wire_dtype) width. Callers must snap
+    /// payloads to the wire-representable set first
+    /// ([`collectives`] does) so the narrowing encode is lossless. The
+    /// default is the exact exchange — correct for the `F32` wire;
+    /// transports with a half wire dtype override it. Checkpoint state
+    /// gathers keep calling the exact
+    /// [`exchange_mats`](Communicator::exchange_mats) directly.
+    fn exchange_mats_wire(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
+        self.exchange_mats(mats)
+    }
 
     /// Exchange a list of f64 scalars (loss partials, divergence flags);
     /// same barrier/call-order obligations as
@@ -563,6 +626,7 @@ struct LocalCore {
     world: usize,
     algo: Algo,
     overlap: bool,
+    wire: Dtype,
     rv: Arc<Rendezvous>,
     /// Per-direction p2p frame counters (`[to]` on send, `[from]` on
     /// receive), mirroring the socket transport's link seq checking.
@@ -610,6 +674,10 @@ impl Communicator for LocalCore {
         self.overlap
     }
 
+    fn wire_dtype(&self) -> Dtype {
+        self.wire
+    }
+
     fn exchange_mats(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
         let own = transport::encoded_len_mats(&mats);
         let parts: Vec<Arc<Vec<Mat>>> = self
@@ -618,6 +686,25 @@ impl Communicator for LocalCore {
             .map(|a| a.downcast::<Vec<Mat>>().expect("dist: SPMD call order violated (mats)"))
             .collect();
         let lens: Vec<usize> = parts.iter().map(|p| transport::encoded_len_mats(p)).collect();
+        self.record_star_traffic(own, &lens);
+        parts
+    }
+
+    fn exchange_mats_wire(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
+        if self.wire == Dtype::F32 {
+            return self.exchange_mats(mats);
+        }
+        // Pointer-sharing exchange (payloads are pre-snapped, so sharing
+        // the f32 images is bitwise identical to an encode/decode round
+        // trip), accounted at wire-dtype frame sizes.
+        let own = transport::encoded_len_mats_wire(&mats, self.wire);
+        let parts: Vec<Arc<Vec<Mat>>> = self
+            .exchange_any(Arc::new(mats))
+            .into_iter()
+            .map(|a| a.downcast::<Vec<Mat>>().expect("dist: SPMD call order violated (mats)"))
+            .collect();
+        let lens: Vec<usize> =
+            parts.iter().map(|p| transport::encoded_len_mats_wire(p, self.wire)).collect();
         self.record_star_traffic(own, &lens);
         parts
     }
@@ -676,7 +763,8 @@ impl Communicator for LocalCore {
             .map(|a| a.downcast::<Vec<Mat>>().expect("dist: SPMD call order violated (mats)"))
             .collect();
         if self.world > 1 {
-            let lens: Vec<usize> = parts.iter().map(|p| transport::encoded_len_mats(p)).collect();
+            let lens: Vec<usize> =
+                parts.iter().map(|p| transport::encoded_len_mats_wire(p, self.wire)).collect();
             let mut sent = 0u64;
             for k in 0..self.world - 1 {
                 let idx = (self.rank + self.world - k) % self.world;
@@ -726,12 +814,24 @@ impl Communicator for LocalComm {
         self.core.overlap
     }
 
+    fn wire_dtype(&self) -> Dtype {
+        self.core.wire
+    }
+
     fn exchange_mats(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
         if let Some(eng) = self.engine.get() {
             let core = Arc::clone(&self.core);
             return eng.submit(self.core.rank, move || core.exchange_mats(mats)).wait();
         }
         self.core.exchange_mats(mats)
+    }
+
+    fn exchange_mats_wire(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
+        if let Some(eng) = self.engine.get() {
+            let core = Arc::clone(&self.core);
+            return eng.submit(self.core.rank, move || core.exchange_mats_wire(mats)).wait();
+        }
+        self.core.exchange_mats_wire(mats)
     }
 
     fn exchange_f64(&self, vals: Vec<f64>) -> Vec<Arc<Vec<f64>>> {
@@ -866,6 +966,17 @@ where
     T: Send,
     F: Fn(LocalComm) -> T + Sync,
 {
+    run_ranks_wire(world, algo, overlap, default_wire_dtype(), f)
+}
+
+/// [`run_ranks_with`] with an explicit wire dtype (the other entry
+/// points use the [`default_wire_dtype`] env default) — the conformance
+/// suites and benchmarks pin the wire format per world with this.
+pub fn run_ranks_wire<T, F>(world: usize, algo: Algo, overlap: bool, wire: Dtype, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(LocalComm) -> T + Sync,
+{
     assert!(world >= 1, "run_ranks: world size must be >= 1");
     let rv = Arc::new(Rendezvous::new(world));
     let mk_comm = |rank: usize| LocalComm {
@@ -874,6 +985,7 @@ where
             world,
             algo,
             overlap,
+            wire,
             rv: Arc::clone(&rv),
             p2p_sent: Mutex::new(vec![0; world]),
             p2p_rcvd: Mutex::new(vec![0; world]),
@@ -953,6 +1065,13 @@ impl LocalWorld {
     /// collective algorithm and overlap mode (run-level constants, as
     /// everywhere).
     pub fn new(world: usize, algo: Algo, overlap: bool) -> LocalWorld {
+        LocalWorld::new_wire(world, algo, overlap, default_wire_dtype())
+    }
+
+    /// [`LocalWorld::new`] with an explicit wire dtype (a run-level
+    /// constant; [`LocalWorld::new`] uses the [`default_wire_dtype`] env
+    /// default).
+    pub fn new_wire(world: usize, algo: Algo, overlap: bool, wire: Dtype) -> LocalWorld {
         assert!(world >= 1, "LocalWorld: world size must be >= 1");
         let rv = Arc::new(Rendezvous::new(world));
         let comms = (0..world)
@@ -962,6 +1081,7 @@ impl LocalWorld {
                     world,
                     algo,
                     overlap,
+                    wire,
                     rv: Arc::clone(&rv),
                     p2p_sent: Mutex::new(vec![0; world]),
                     p2p_rcvd: Mutex::new(vec![0; world]),
@@ -1228,5 +1348,25 @@ mod tests {
             .and_then(|v| parse_overlap(&v))
             .unwrap_or(true);
         assert_eq!(default_overlap(), want);
+    }
+
+    #[test]
+    fn default_wire_dtype_follows_env_or_f32() {
+        let want = std::env::var("SINGD_WIRE_DTYPE")
+            .ok()
+            .and_then(|v| Dtype::parse(&v))
+            .unwrap_or(Dtype::F32);
+        assert_eq!(default_wire_dtype(), want);
+    }
+
+    #[test]
+    fn explicit_wire_dtype_reaches_every_rank() {
+        for wire in [Dtype::F32, Dtype::Bf16, Dtype::Fp16] {
+            let out = run_ranks_wire(3, Algo::Ring, false, wire, |c| c.wire_dtype());
+            assert_eq!(out, vec![wire; 3]);
+        }
+        let world = LocalWorld::new_wire(2, Algo::Star, false, Dtype::Bf16);
+        let out = world.run(|c| c.wire_dtype());
+        assert_eq!(out, vec![Dtype::Bf16; 2]);
     }
 }

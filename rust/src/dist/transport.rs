@@ -33,10 +33,20 @@
 //! ```text
 //! frame   := kind:u8 | seq:u64 | len:u64 | payload[len]      (LE)
 //! mats    := count:u32 | (rows:u32 | cols:u32 | f32[rows*cols])*
+//! wmats   := count:u32 | (rows:u32 | cols:u32 | u16[rows*cols])*  (half wire dtype)
 //! f64s    := count:u32 | f64[count]
 //! gathered:= count:u32 | (len:u64 | payload[len])*           (rank order)
-//! chunk   := f32[len/4]                                      (ring chunks)
+//! chunk   := f32[len/4] | bf16[len/2] | fp16[len/2]          (ring chunks, wire dtype)
 //! ```
+//!
+//! `wmats` frames (`KIND_MATS_WIRE`) carry the compressed-collective
+//! payloads of [`Communicator::exchange_mats_wire`]: element images at
+//! the run's wire dtype ([`Communicator::wire_dtype`], pinned via
+//! `SINGD_WIRE_DTYPE`), which the dispatchers pre-snap so the narrowing
+//! encode is lossless. On the `f32` wire (the default) the exact `mats`
+//! frames are used and nothing changes. Ring `chunk` payloads carry the
+//! same wire-dtype element images; both sides derive the element width
+//! from the run-level wire dtype, never from the frame.
 //!
 //! `seq` is the per-communicator exchange counter on star frames and the
 //! per-direction link counter on mesh frames; together with `kind` it is
@@ -83,6 +93,7 @@
 
 use super::pending::Engine;
 use super::{collectives, traffic, Algo, Communicator, PendingOp};
+use crate::numerics::{Bf16, Dtype, Fp16};
 use crate::tensor::Mat;
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -159,6 +170,10 @@ const KIND_P2P: u8 = 6;
 /// Mesh-listener address advertisement (rendezvous-time star exchange).
 const KIND_MESH: u8 = 7;
 const KIND_GATHERED_MESH: u8 = 8;
+/// Wire-dtype matrix-list frame (`wmats` payload — PROTOCOL.md §Wire
+/// dtype): element images at the run's half wire dtype. Gathered replies
+/// reuse `KIND_GATHERED_MATS` (the blob entries are opaque bytes).
+const KIND_MATS_WIRE: u8 = 9;
 
 // Handshake status codes in the welcome reply.
 const ST_OK: u32 = 0;
@@ -486,6 +501,77 @@ pub(crate) fn decode_mats(buf: &[u8]) -> io::Result<Vec<Mat>> {
         let bytes = cur.take(nbytes)?;
         let data: Vec<f32> =
             bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        out.push(Mat::from_vec(rows, cols, data));
+    }
+    cur.done()?;
+    Ok(out)
+}
+
+/// Encoded byte length of a matrix-list payload at a wire dtype (the
+/// `wmats` image: shape headers as in `mats`, elements at dtype width).
+/// Equals [`encoded_len_mats`] on the `f32` wire — the one formula the
+/// local transport's wire-byte model and the socket encoder share.
+pub(crate) fn encoded_len_mats_wire(mats: &[Mat], wire: Dtype) -> usize {
+    4 + mats.iter().map(|m| 8 + wire.bytes() * m.len()).sum::<usize>()
+}
+
+/// Encode a matrix list at the wire dtype (`wmats` payload). Callers
+/// snap elements to the wire-representable set first, so the narrowing
+/// `from_f32` here is bit-exact; on the `f32` wire this *is*
+/// [`encode_mats`].
+pub(crate) fn encode_mats_wire(mats: &[Mat], wire: Dtype) -> Vec<u8> {
+    if wire == Dtype::F32 {
+        return encode_mats(mats);
+    }
+    let mut buf = Vec::with_capacity(encoded_len_mats_wire(mats, wire));
+    buf.extend_from_slice(&(mats.len() as u32).to_le_bytes());
+    for m in mats {
+        buf.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+        buf.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+        match wire {
+            Dtype::F32 => unreachable!(),
+            Dtype::Bf16 => {
+                for &v in m.data() {
+                    buf.extend_from_slice(&Bf16::from_f32(v).bits().to_le_bytes());
+                }
+            }
+            Dtype::Fp16 => {
+                for &v in m.data() {
+                    buf.extend_from_slice(&Fp16::from_f32(v).bits().to_le_bytes());
+                }
+            }
+        }
+    }
+    buf
+}
+
+/// Decode a `wmats` payload, widening each element exactly. The wire
+/// dtype is a run-level constant known to both sides — never read from
+/// the frame.
+pub(crate) fn decode_mats_wire(buf: &[u8], wire: Dtype) -> io::Result<Vec<Mat>> {
+    if wire == Dtype::F32 {
+        return decode_mats(buf);
+    }
+    let mut cur = Cur::new(buf);
+    let n = cur.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(cur.remaining() / 8));
+    for _ in 0..n {
+        let rows = cur.u32()? as usize;
+        let cols = cur.u32()? as usize;
+        let nbytes = rows
+            .checked_mul(cols)
+            .and_then(|e| e.checked_mul(wire.bytes()))
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "matrix shape overflow"))?;
+        let bytes = cur.take(nbytes)?;
+        let widen = |c: &[u8]| {
+            let bits = u16::from_le_bytes(c.try_into().unwrap());
+            match wire {
+                Dtype::F32 => unreachable!(),
+                Dtype::Bf16 => Bf16::from_bits(bits).to_f32(),
+                Dtype::Fp16 => Fp16::from_bits(bits).to_f32(),
+            }
+        };
+        let data: Vec<f32> = bytes.chunks_exact(2).map(widen).collect();
         out.push(Mat::from_vec(rows, cols, data));
     }
     cur.done()?;
@@ -1008,6 +1094,7 @@ struct SocketCore {
     world: usize,
     algo: Algo,
     overlap: bool,
+    wire: Dtype,
     inner: Mutex<Inner>,
 }
 
@@ -1059,9 +1146,11 @@ impl SocketComm {
     }
 
     /// [`SocketComm::connect`] with explicit collective algorithm *and*
-    /// overlap mode. Every rank of a world must pass the same values for
-    /// both (the launcher pins `SINGD_ALGO` / `SINGD_OVERLAP` into
-    /// worker environments for exactly this reason).
+    /// overlap mode (wire dtype stays the
+    /// [`crate::dist::default_wire_dtype`] env default). Every rank of a
+    /// world must pass the same values for both (the launcher pins
+    /// `SINGD_ALGO` / `SINGD_OVERLAP` into worker environments for
+    /// exactly this reason).
     pub fn connect_opts(
         rank: usize,
         world: usize,
@@ -1070,7 +1159,32 @@ impl SocketComm {
         algo: Algo,
         overlap: bool,
     ) -> io::Result<SocketComm> {
-        Self::connect_impl(rank, world, rendezvous, run_id, 0, algo, overlap)
+        Self::connect_opts_wire(
+            rank,
+            world,
+            rendezvous,
+            run_id,
+            algo,
+            overlap,
+            crate::dist::default_wire_dtype(),
+        )
+    }
+
+    /// [`SocketComm::connect_opts`] with an explicit wire dtype (a
+    /// run-level constant like the algorithm; the launcher pins
+    /// `SINGD_WIRE_DTYPE` into worker environments so every rank
+    /// agrees).
+    #[allow(clippy::too_many_arguments)]
+    pub fn connect_opts_wire(
+        rank: usize,
+        world: usize,
+        rendezvous: &str,
+        run_id: u64,
+        algo: Algo,
+        overlap: bool,
+        wire: Dtype,
+    ) -> io::Result<SocketComm> {
+        Self::connect_impl(rank, world, rendezvous, run_id, 0, algo, overlap, wire)
     }
 
     /// Join generation `gen` of an elastic world (PROTOCOL.md §Elastic
@@ -1079,6 +1193,7 @@ impl SocketComm {
     /// generation-mixed run id [`mix_run_id`], so stragglers from an
     /// older epoch can never handshake into a newer one. Generation 0 is
     /// exactly [`SocketComm::connect_opts`]. Unix rendezvous only.
+    #[allow(clippy::too_many_arguments)]
     pub fn connect_elastic(
         rank: usize,
         world: usize,
@@ -1087,11 +1202,13 @@ impl SocketComm {
         gen: u64,
         algo: Algo,
         overlap: bool,
+        wire: Dtype,
     ) -> io::Result<SocketComm> {
         let ep = elastic_data_endpoint(rendezvous, gen)?;
-        Self::connect_impl(rank, world, &ep, mix_run_id(run_id, gen), gen, algo, overlap)
+        Self::connect_impl(rank, world, &ep, mix_run_id(run_id, gen), gen, algo, overlap, wire)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn connect_impl(
         rank: usize,
         world: usize,
@@ -1100,6 +1217,7 @@ impl SocketComm {
         gen: u64,
         algo: Algo,
         overlap: bool,
+        wire: Dtype,
     ) -> io::Result<SocketComm> {
         assert!(world >= 1, "dist[socket]: world size must be >= 1");
         assert!(rank < world, "dist[socket]: rank {rank} out of range for world {world}");
@@ -1116,6 +1234,7 @@ impl SocketComm {
             world,
             algo,
             overlap,
+            wire,
             inner: Mutex::new(Inner {
                 links,
                 seq: 0,
@@ -1227,7 +1346,7 @@ impl SocketCore {
             return vec![mine];
         }
         let gathered_kind = match kind {
-            KIND_MATS => KIND_GATHERED_MATS,
+            KIND_MATS | KIND_MATS_WIRE => KIND_GATHERED_MATS,
             KIND_MESH => KIND_GATHERED_MESH,
             _ => KIND_GATHERED_F64,
         };
@@ -1434,6 +1553,10 @@ impl Communicator for SocketCore {
         self.overlap
     }
 
+    fn wire_dtype(&self) -> Dtype {
+        self.wire
+    }
+
     fn send_bytes(&self, to: usize, payload: &[u8]) {
         assert!(to != self.rank && to < self.world, "dist[socket]: bad p2p target {to}");
         let mut guard = self.inner.lock().unwrap_or_else(|e| e.into_inner());
@@ -1491,6 +1614,21 @@ impl Communicator for SocketCore {
             .collect()
     }
 
+    fn exchange_mats_wire(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
+        if self.wire == Dtype::F32 {
+            return self.exchange_mats(mats);
+        }
+        let parts = self.exchange_bytes(KIND_MATS_WIRE, encode_mats_wire(&mats, self.wire));
+        parts
+            .iter()
+            .map(|p| {
+                Arc::new(decode_mats_wire(p, self.wire).unwrap_or_else(|e| {
+                    panic!("dist[socket]: corrupt wire mats payload: {e}")
+                }))
+            })
+            .collect()
+    }
+
     fn exchange_f64(&self, vals: Vec<f64>) -> Vec<Arc<Vec<f64>>> {
         let parts = self.exchange_bytes(KIND_F64, encode_f64s(&vals));
         parts
@@ -1531,6 +1669,10 @@ impl Communicator for SocketComm {
         self.core.overlap
     }
 
+    fn wire_dtype(&self) -> Dtype {
+        self.core.wire
+    }
+
     fn send_bytes(&self, to: usize, payload: &[u8]) {
         if let Some(eng) = self.engine.get() {
             let core = Arc::clone(&self.core);
@@ -1566,6 +1708,14 @@ impl Communicator for SocketComm {
             return eng.submit(self.core.rank, move || core.exchange_mats(mats)).wait();
         }
         self.core.exchange_mats(mats)
+    }
+
+    fn exchange_mats_wire(&self, mats: Vec<Mat>) -> Vec<Arc<Vec<Mat>>> {
+        if let Some(eng) = self.engine.get() {
+            let core = Arc::clone(&self.core);
+            return eng.submit(self.core.rank, move || core.exchange_mats_wire(mats)).wait();
+        }
+        self.core.exchange_mats_wire(mats)
     }
 
     fn exchange_f64(&self, vals: Vec<f64>) -> Vec<Arc<Vec<f64>>> {
@@ -1702,24 +1852,26 @@ pub fn fresh_run_id() -> u64 {
 
 /// Re-exec this binary as worker ranks `1..world` (torchrun-style): same
 /// argv, plus the `SINGD_RANK`/`SINGD_WORLD`/`SINGD_RENDEZVOUS`/
-/// `SINGD_RUN_ID` env contract. `SINGD_ALGO` and `SINGD_OVERLAP` are
-/// pinned to the launcher's resolved collective algorithm and overlap
-/// mode so a programmatically-set [`crate::train::DistCfg`] reaches
-/// workers whose argv/config do not carry them (every rank of a world
-/// must agree on both run-level constants); `SINGD_TRACE` and
-/// `SINGD_LOG` are pinned to the launcher's trace directory and log
-/// level so observability knobs propagate to workers the same way
-/// (each worker exports its own `r<N>` trace files into the shared
-/// directory). The calling process is rank 0. Worker stdout is
-/// discarded — stdout is the launcher's data channel, and workers log
-/// at `warn` by default anyway (`SINGD_LOG` contract); stderr is
-/// inherited so worker panics and rank-prefixed warnings stay visible.
+/// `SINGD_RUN_ID` env contract. `SINGD_ALGO`, `SINGD_OVERLAP` and
+/// `SINGD_WIRE_DTYPE` are pinned to the launcher's resolved collective
+/// algorithm, overlap mode and wire dtype so a programmatically-set
+/// [`crate::train::DistCfg`] reaches workers whose argv/config do not
+/// carry them (every rank of a world must agree on these run-level
+/// constants); `SINGD_TRACE` and `SINGD_LOG` are pinned to the
+/// launcher's trace directory and log level so observability knobs
+/// propagate to workers the same way (each worker exports its own
+/// `r<N>` trace files into the shared directory). The calling process
+/// is rank 0. Worker stdout is discarded — stdout is the launcher's
+/// data channel, and workers log at `warn` by default anyway
+/// (`SINGD_LOG` contract); stderr is inherited so worker panics and
+/// rank-prefixed warnings stay visible.
 pub fn launch_workers(
     world: usize,
     rendezvous: &str,
     run_id: u64,
     algo: Algo,
     overlap: bool,
+    wire: Dtype,
 ) -> io::Result<Vec<std::process::Child>> {
     assert!(
         worker_env().is_none(),
@@ -1737,6 +1889,7 @@ pub fn launch_workers(
             .env(ENV_RUN_ID, run_id.to_string())
             .env("SINGD_ALGO", algo.name())
             .env("SINGD_OVERLAP", if overlap { "1" } else { "0" })
+            .env("SINGD_WIRE_DTYPE", wire.name())
             .stdout(std::process::Stdio::null());
         for knob in ["SINGD_TRACE", "SINGD_LOG"] {
             match std::env::var(knob) {
@@ -1822,6 +1975,23 @@ where
     T: Send,
     F: Fn(SocketComm) -> T + Sync,
 {
+    run_ranks_socket_wire(world, algo, overlap, crate::dist::default_wire_dtype(), f)
+}
+
+/// [`run_ranks_socket_with`] with an explicit wire dtype — the socket
+/// analogue of [`crate::dist::run_ranks_wire`] for the wire-compression
+/// conformance suites.
+pub fn run_ranks_socket_wire<T, F>(
+    world: usize,
+    algo: Algo,
+    overlap: bool,
+    wire: Dtype,
+    f: F,
+) -> Vec<T>
+where
+    T: Send,
+    F: Fn(SocketComm) -> T + Sync,
+{
     assert!(world >= 1, "run_ranks_socket: world size must be >= 1");
     let rendezvous = fresh_rendezvous();
     let run_id = fresh_run_id();
@@ -1830,8 +2000,9 @@ where
     std::thread::scope(|s| {
         for r in 0..world {
             s.spawn(move || {
-                let comm = SocketComm::connect_opts(r, world, rv, run_id, algo, overlap)
-                    .unwrap_or_else(|e| panic!("dist[socket]: rank {r} rendezvous: {e}"));
+                let comm =
+                    SocketComm::connect_opts_wire(r, world, rv, run_id, algo, overlap, wire)
+                        .unwrap_or_else(|e| panic!("dist[socket]: rank {r} rendezvous: {e}"));
                 *rs[r].lock().unwrap_or_else(|e| e.into_inner()) = Some(fr(comm));
             });
         }

@@ -86,6 +86,7 @@ pub fn run_job(cfg: &JobConfig) -> RunResult {
         transport: cfg.transport,
         algo: cfg.algo,
         overlap: cfg.overlap,
+        wire_dtype: cfg.wire_dtype,
         elastic: cfg.elastic,
     };
     train_dist(model.as_mut(), &ds, &tc, &dc)
@@ -238,6 +239,7 @@ mod tests {
             transport: crate::dist::Transport::Local,
             algo: crate::dist::default_algo(),
             overlap: crate::dist::default_overlap(),
+            wire_dtype: crate::numerics::Dtype::F32,
             resume: None,
             ckpt: None,
             ckpt_every: 0,

@@ -24,9 +24,11 @@
 //! report (negative pivots from 8-bit-mantissa rounding of an
 //! ill-conditioned `S + λI`).
 
+mod qmat;
 mod scalar;
 mod scaler;
 
+pub use qmat::QMat;
 pub use scalar::{Bf16, Fp16};
 pub use scaler::GradScaler;
 
@@ -62,12 +64,15 @@ impl Dtype {
         }
     }
 
-    /// Machine epsilon of the format.
+    /// Machine epsilon of the format. The half formats use the exact
+    /// powers of two (2⁻⁷ / 2⁻¹⁰); a truncated decimal literal here would
+    /// be one ulp off the representable value and disagree with
+    /// [`Bf16::EPSILON`] / [`Fp16::EPSILON`].
     pub fn eps(self) -> f32 {
         match self {
             Dtype::F32 => f32::EPSILON,
-            Dtype::Bf16 => 0.0078125,  // 2^-7
-            Dtype::Fp16 => 0.00097656, // 2^-10
+            Dtype::Bf16 => 2f32.powi(-7),
+            Dtype::Fp16 => 2f32.powi(-10),
         }
     }
 
@@ -351,6 +356,16 @@ mod tests {
     fn eps_ordering() {
         assert!(Dtype::F32.eps() < Dtype::Fp16.eps());
         assert!(Dtype::Fp16.eps() < Dtype::Bf16.eps());
+    }
+
+    #[test]
+    fn eps_matches_scalar_epsilon_exactly() {
+        // Satellite bugfix: the fp16 eps literal used to be the truncated
+        // 0.00097656 (≠ 2⁻¹⁰ = 0.0009765625), one ulp off the scalar
+        // constant. Both formats must agree bitwise with their scalar type.
+        assert_eq!(Dtype::Bf16.eps().to_bits(), Bf16::EPSILON.to_f32().to_bits());
+        assert_eq!(Dtype::Fp16.eps().to_bits(), Fp16::EPSILON.to_f32().to_bits());
+        assert_eq!(Dtype::Fp16.eps(), 0.0009765625);
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! [`QMat`]: a matrix tagged with a storage dtype, physically stored in
+//! that dtype.
+//!
+//! `Policy::quantize_mat` guarantees *values* are representable in the
+//! storage format but keeps the 4-byte `f32` image in memory — fine for
+//! studying rounding behaviour, wrong for studying memory. `QMat` closes
+//! that gap: under a half-precision policy the payload is the narrowed
+//! `u16` words themselves, so `bytes()` is the real footprint and the
+//! Table-3 memory accounting measures actual allocations instead of a
+//! formula. Under an `f32` policy the payload stays a plain [`Mat`] and
+//! every operation is the identity — zero behaviour change for the
+//! full-precision reference path.
+//!
+//! Widening is exact (both half formats embed losslessly in f32), so
+//! `store` → `widen` round-trips bitwise for already-quantized values and
+//! all existing bitwise contracts (checkpoint state vectors, serial vs
+//! distributed digests) hold unchanged.
+//!
+//! The matmul entry points ([`QMat::matmul_qa`] / [`QMat::matmul_qb`])
+//! widen at *pack time* inside `tensor::matmul` — the panel packers copy
+//! into contiguous strips anyway, so the u16→f32 conversion rides that
+//! copy and the 4×16 microkernel keeps accumulating in f32. The result is
+//! bitwise identical to widening the whole operand first, without ever
+//! materializing the 4-byte copy.
+
+use super::{Bf16, Dtype, Fp16, Policy};
+use crate::tensor::{matmul, matmul_a_wb, matmul_wa_b, Mat};
+
+fn widen_bf16(bits: u16) -> f32 {
+    Bf16::from_bits(bits).to_f32()
+}
+
+fn widen_fp16(bits: u16) -> f32 {
+    Fp16::from_bits(bits).to_f32()
+}
+
+/// The pack-time widening function for a half dtype.
+fn widen_fn(dtype: Dtype) -> fn(u16) -> f32 {
+    match dtype {
+        Dtype::Bf16 => widen_bf16,
+        Dtype::Fp16 => widen_fp16,
+        Dtype::F32 => unreachable!("f32 payloads are stored as Mat"),
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+enum Payload {
+    /// Full-precision storage: a plain matrix (the zero-cost default).
+    F32(Mat),
+    /// Half-precision storage: the narrowed bit patterns of the dtype.
+    U16(Vec<u16>),
+}
+
+/// A matrix tagged with a storage dtype whose contents are always
+/// representable in that dtype — and, for the half formats, physically
+/// stored as 2-byte words.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QMat {
+    dtype: Dtype,
+    rows: usize,
+    cols: usize,
+    payload: Payload,
+}
+
+impl QMat {
+    /// Quantize `m` under `policy` (honouring its rounding mode) and store
+    /// the result in the policy's storage dtype.
+    pub fn store(policy: &Policy, m: &Mat) -> QMat {
+        let q = policy.quantized(m);
+        QMat::from_quantized(policy.store, q)
+    }
+
+    /// Narrow an already-representable matrix into `dtype` storage with
+    /// nearest-even conversion (exact when `m` was produced by `widen` or
+    /// `Policy::quantize_mat` under the same dtype).
+    pub fn from_quantized(dtype: Dtype, m: Mat) -> QMat {
+        let (rows, cols) = (m.rows(), m.cols());
+        let payload = match dtype {
+            Dtype::F32 => Payload::F32(m),
+            Dtype::Bf16 => {
+                Payload::U16(m.data().iter().map(|&x| Bf16::from_f32(x).bits()).collect())
+            }
+            Dtype::Fp16 => {
+                Payload::U16(m.data().iter().map(|&x| Fp16::from_f32(x).bits()).collect())
+            }
+        };
+        QMat { dtype, rows, cols, payload }
+    }
+
+    /// An all-zeros matrix in `dtype` storage.
+    pub fn zeros(dtype: Dtype, rows: usize, cols: usize) -> QMat {
+        match dtype {
+            Dtype::F32 => {
+                QMat { dtype, rows, cols, payload: Payload::F32(Mat::zeros(rows, cols)) }
+            }
+            _ => QMat { dtype, rows, cols, payload: Payload::U16(vec![0u16; rows * cols]) },
+        }
+    }
+
+    /// The identity matrix in `dtype` storage (1.0 is exact in all formats).
+    pub fn eye(dtype: Dtype, n: usize) -> QMat {
+        QMat::from_quantized(dtype, Mat::eye(n))
+    }
+
+    /// Widen to a full-precision working copy (exact).
+    pub fn widen(&self) -> Mat {
+        match &self.payload {
+            Payload::F32(m) => m.clone(),
+            Payload::U16(bits) => {
+                let w = widen_fn(self.dtype);
+                Mat::from_vec(self.rows, self.cols, bits.iter().map(|&b| w(b)).collect())
+            }
+        }
+    }
+
+    /// Storage dtype tag.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// True iff the matrix has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Physical payload bytes (the real memory footprint — 2 bytes per
+    /// element for half formats, 4 for f32).
+    pub fn bytes(&self) -> usize {
+        self.len() * self.dtype.bytes()
+    }
+
+    /// `self @ b`, widening `self` at pack time. Bitwise identical to
+    /// `matmul(&self.widen(), b)` at every size.
+    pub fn matmul_qa(&self, b: &Mat) -> Mat {
+        match &self.payload {
+            Payload::F32(m) => matmul(m, b),
+            Payload::U16(bits) => {
+                matmul_wa_b(bits, widen_fn(self.dtype), self.rows, self.cols, b)
+            }
+        }
+    }
+
+    /// `a @ self`, widening `self` at pack time. Bitwise identical to
+    /// `matmul(a, &self.widen())` at every size.
+    pub fn matmul_qb(&self, a: &Mat) -> Mat {
+        match &self.payload {
+            Payload::F32(m) => matmul(a, m),
+            Payload::U16(bits) => {
+                matmul_a_wb(a, bits, widen_fn(self.dtype), self.rows, self.cols)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::Pcg;
+
+    #[test]
+    fn f32_store_is_the_identity() {
+        let mut rng = Pcg::new(3);
+        let m = rng.normal_mat(5, 7, 1.0);
+        let q = QMat::store(&Policy::fp32(), &m);
+        assert_eq!(q.dtype(), Dtype::F32);
+        assert_eq!(q.widen(), m);
+        assert_eq!(q.bytes(), 5 * 7 * 4);
+    }
+
+    #[test]
+    fn half_store_widen_roundtrips_bitwise() {
+        // store → widen → store must be a fixed point: widening is exact,
+        // so the second narrowing reproduces the same u16 words.
+        let mut rng = Pcg::new(11);
+        let m = rng.normal_mat(9, 6, 2.0);
+        for policy in [Policy::bf16_mixed(), Policy::fp16_mixed()] {
+            let q = QMat::store(&policy, &m);
+            assert_eq!(q.bytes(), 9 * 6 * 2, "half payloads are 2 bytes/elem");
+            let w = q.widen();
+            assert_eq!(w, policy.quantized(&m), "widen equals the quantized image");
+            let q2 = QMat::store(&policy, &w);
+            assert_eq!(q, q2, "store∘widen must be a fixed point");
+        }
+    }
+
+    #[test]
+    fn qmat_matmul_matches_widened_matmul_bitwise() {
+        let mut rng = Pcg::new(29);
+        // Small (tiny path) and large (packed/pooled path) shapes.
+        for (m, k, n) in [(3usize, 4usize, 5usize), (70, 90, 80)] {
+            let a = rng.normal_mat(m, k, 1.0);
+            let b = rng.normal_mat(k, n, 1.0);
+            for policy in [Policy::fp32(), Policy::bf16_mixed(), Policy::fp16_mixed()] {
+                let qa = QMat::store(&policy, &a);
+                let qb = QMat::store(&policy, &b);
+                assert_eq!(qa.matmul_qa(&b), matmul(&qa.widen(), &b), "qa {m}x{k}x{n}");
+                assert_eq!(qb.matmul_qb(&a), matmul(&a, &qb.widen()), "qb {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn zeros_and_eye_are_exact() {
+        for dtype in [Dtype::F32, Dtype::Bf16, Dtype::Fp16] {
+            assert_eq!(QMat::zeros(dtype, 3, 2).widen(), Mat::zeros(3, 2));
+            assert_eq!(QMat::eye(dtype, 4).widen(), Mat::eye(4));
+        }
+    }
+}

@@ -300,4 +300,127 @@ mod tests {
         assert!(Fp16::from_f32(f32::NEG_INFINITY).is_infinite());
         assert!(Fp16::from_f32(1e10).is_infinite());
     }
+
+    // =================================================================
+    // Exhaustive 65536-bit-pattern conformance (ISSUE 8 satellite).
+    // Both half formats are now a storage format ([`super::super::QMat`])
+    // *and* a wire format, so every one of the 2^16 payloads must widen
+    // and re-narrow faithfully — a single wrong pattern would silently
+    // corrupt checkpoints and collectives.
+
+    #[test]
+    fn bf16_all_65536_bit_patterns_widen_and_renarrow_bitwise() {
+        // `to_f32` is exact, so every non-NaN pattern is representable
+        // and nearest-even re-narrowing must be the bitwise identity.
+        // NaN payloads need not round-trip bitwise (`from_f32` quiets
+        // them), but the class must survive, as must the sign/inf/finite
+        // classes of everything else.
+        for bits in 0..=u16::MAX {
+            let h = Bf16::from_bits(bits);
+            let w = h.to_f32();
+            let back = Bf16::from_f32(w);
+            if h.is_nan() {
+                assert!(w.is_nan(), "bf16 {bits:#06x}: widened NaN lost");
+                assert!(back.is_nan(), "bf16 {bits:#06x}: re-narrowed NaN lost");
+            } else {
+                assert_eq!(back.bits(), bits, "bf16 {bits:#06x} -> {w:e}");
+                assert_eq!(h.is_infinite(), w.is_infinite(), "bf16 {bits:#06x}: inf class");
+                assert_eq!(h.is_finite(), w.is_finite(), "bf16 {bits:#06x}: finite class");
+                assert_eq!(
+                    bits & 0x8000 != 0,
+                    w.is_sign_negative(),
+                    "bf16 {bits:#06x}: sign"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_all_65536_bit_patterns_widen_and_renarrow_bitwise() {
+        for bits in 0..=u16::MAX {
+            let h = Fp16::from_bits(bits);
+            let w = h.to_f32();
+            let back = Fp16::from_f32(w);
+            if h.is_nan() {
+                assert!(w.is_nan(), "fp16 {bits:#06x}: widened NaN lost");
+                assert!(back.is_nan(), "fp16 {bits:#06x}: re-narrowed NaN lost");
+            } else {
+                assert_eq!(back.bits(), bits, "fp16 {bits:#06x} -> {w:e}");
+                assert_eq!(h.is_infinite(), w.is_infinite(), "fp16 {bits:#06x}: inf class");
+                assert_eq!(h.is_finite(), w.is_finite(), "fp16 {bits:#06x}: finite class");
+                assert_eq!(
+                    bits & 0x8000 != 0,
+                    w.is_sign_negative() || w == 0.0 && bits == 0x8000,
+                    "fp16 {bits:#06x}: sign"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_narrowing_matches_bias_trick_reference_on_every_high_half() {
+        // Independent nearest-even reference (add the rounding bias,
+        // truncate), swept over all 2^16 f32 high halves × low-half
+        // patterns straddling the rounding boundary: exact (0x0000),
+        // just-below-half (0x7fff), the tie (0x8000), just-above-half
+        // (0x8001), and all-ones (0xffff).
+        let reference = |x: f32| -> u16 {
+            let bits = x.to_bits();
+            let bias = 0x7fffu32 + ((bits >> 16) & 1);
+            (bits.wrapping_add(bias) >> 16) as u16
+        };
+        for hi in 0..=u16::MAX {
+            for lo in [0x0000u32, 0x7fff, 0x8000, 0x8001, 0xffff] {
+                let x = f32::from_bits(((hi as u32) << 16) | lo);
+                if x.is_nan() {
+                    continue; // NaN narrowing is class-, not bit-, specified
+                }
+                assert_eq!(
+                    Bf16::from_f32(x).bits(),
+                    reference(x),
+                    "hi={hi:#06x} lo={lo:#06x} x={x:e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_every_rounding_boundary_is_ties_to_even() {
+        // For every adjacent pair of same-sign finite fp16 magnitudes,
+        // the exact f32 midpoint (representable: ≤ 12-bit significand)
+        // must narrow to the even-mantissa neighbour, and one f32 ulp to
+        // either side must narrow to the strictly nearer neighbour.
+        // Sweeps normals, subnormals, the subnormal/normal seam and the
+        // zero boundary, for both signs — 2 × 31743 boundaries.
+        for sign in [0u16, 0x8000] {
+            for mag in 0..Fp16::MAX.bits() {
+                let lo = Fp16::from_bits(sign | mag);
+                let hi = Fp16::from_bits(sign | (mag + 1));
+                let mid = 0.5 * (lo.to_f32() + hi.to_f32());
+                let want_even = if mag & 1 == 0 { lo } else { hi };
+                assert_eq!(
+                    Fp16::from_f32(mid).bits(),
+                    want_even.bits(),
+                    "tie at {:#06x}",
+                    sign | mag
+                );
+                // from_bits(±1) on the midpoint moves one f32 ulp toward /
+                // away from zero in magnitude — lo is always the
+                // smaller-magnitude neighbour.
+                let mb = mid.to_bits();
+                assert_eq!(
+                    Fp16::from_f32(f32::from_bits(mb - 1)).bits(),
+                    lo.bits(),
+                    "below tie at {:#06x}",
+                    sign | mag
+                );
+                assert_eq!(
+                    Fp16::from_f32(f32::from_bits(mb + 1)).bits(),
+                    hi.bits(),
+                    "above tie at {:#06x}",
+                    sign | mag
+                );
+            }
+        }
+    }
 }

@@ -49,23 +49,33 @@ impl GradScaler {
         g.scale(self.scale)
     }
 
-    /// Unscale gradients in place and report whether the step is usable.
-    /// On any non-finite entry the step must be skipped and the scale is
-    /// backed off; on success the clean-streak counter advances and the
-    /// scale may grow.
-    pub fn unscale_and_update(&mut self, grads: &mut [Mat]) -> bool {
-        let inv = 1.0 / self.scale;
-        let mut finite = true;
-        for g in grads.iter() {
-            finite &= !g.has_nonfinite();
-        }
-        if !finite {
+    /// Snapshot the schedule state for checkpointing:
+    /// `(scale, clean_steps, skipped)`. Resume restores it with
+    /// [`GradScaler::restore`]; without this, a resumed fp16 run would
+    /// reset the scale to 65536 and break bitwise resume determinism.
+    pub fn state(&self) -> (f32, usize, usize) {
+        (self.scale, self.clean_steps, self.skipped)
+    }
+
+    /// Restore a checkpointed schedule snapshot (see [`GradScaler::state`]).
+    pub fn restore(&mut self, scale: f32, clean_steps: usize, skipped: usize) {
+        self.scale = scale;
+        self.clean_steps = clean_steps;
+        self.skipped = skipped;
+    }
+
+    /// Advance the scale schedule given this step's overflow verdict:
+    /// back off (and count a skip) on overflow, otherwise extend the clean
+    /// streak and grow at the interval. Split from the unscaling so
+    /// distributed drivers can feed it the OR-reduced overflow flag — the
+    /// schedule then advances identically on every rank.
+    pub fn update(&mut self, overflow: bool) {
+        if overflow {
             self.scale = (self.scale * self.backoff_factor).max(1.0);
             self.clean_steps = 0;
             self.skipped += 1;
             // Observability only — nothing below affects the decision.
             crate::obs_count!("scaler.overflows", 1);
-            crate::obs::metrics::set_scale(self.scale);
             if crate::obs::trace::active() {
                 crate::obs::trace::instant(
                     "scaler_overflow",
@@ -73,25 +83,43 @@ impl GradScaler {
                     vec![("scale", crate::obs::trace::ArgVal::F(self.scale as f64))],
                 );
             }
+        } else {
+            self.clean_steps += 1;
+            if self.clean_steps >= self.growth_interval {
+                self.scale *= self.growth_factor;
+                self.clean_steps = 0;
+                crate::obs_count!("scaler.growths", 1);
+                if crate::obs::trace::active() {
+                    crate::obs::trace::instant(
+                        "scaler_growth",
+                        "scaler",
+                        vec![("scale", crate::obs::trace::ArgVal::F(self.scale as f64))],
+                    );
+                }
+            }
+        }
+        crate::obs::metrics::set_scale(self.scale);
+    }
+
+    /// Unscale gradients in place and report whether the step is usable.
+    /// On any non-finite entry the step must be skipped and the scale is
+    /// backed off; on success the clean-streak counter advances and the
+    /// scale may grow. Serial convenience wrapper over the
+    /// detect-then-[`GradScaler::update`] split.
+    pub fn unscale_and_update(&mut self, grads: &mut [Mat]) -> bool {
+        let inv = 1.0 / self.scale;
+        let mut finite = true;
+        for g in grads.iter() {
+            finite &= !g.has_nonfinite();
+        }
+        if !finite {
+            self.update(true);
             return false;
         }
         for g in grads.iter_mut() {
             g.map_inplace(|x| x * inv);
         }
-        self.clean_steps += 1;
-        if self.clean_steps >= self.growth_interval {
-            self.scale *= self.growth_factor;
-            self.clean_steps = 0;
-            crate::obs_count!("scaler.growths", 1);
-            if crate::obs::trace::active() {
-                crate::obs::trace::instant(
-                    "scaler_growth",
-                    "scaler",
-                    vec![("scale", crate::obs::trace::ArgVal::F(self.scale as f64))],
-                );
-            }
-        }
-        crate::obs::metrics::set_scale(self.scale);
+        self.update(false);
         true
     }
 }
@@ -210,6 +238,40 @@ mod tests {
         assert!(scaler.unscale_and_update(&mut grads));
         opt.step(1, &mut params, &grads, &stats);
         assert_ne!(opt.state_vectors(), state_before);
+    }
+
+    #[test]
+    fn state_restore_roundtrips_and_resumes_the_schedule() {
+        let mut s = GradScaler::new(2048.0);
+        s.update(true); // backoff → 1024, skipped = 1
+        s.update(false); // clean streak = 1
+        let (scale, clean, skipped) = s.state();
+        assert_eq!((scale, clean, skipped), (1024.0, 1, 1));
+        let mut resumed = GradScaler::default();
+        resumed.restore(scale, clean, skipped);
+        assert_eq!(resumed.state(), s.state());
+        // The restored scaler continues the identical schedule.
+        s.update(false);
+        resumed.update(false);
+        assert_eq!(resumed.state(), s.state());
+    }
+
+    #[test]
+    fn update_split_matches_unscale_and_update() {
+        // The detect/apply split must drive the same schedule as the
+        // serial convenience wrapper.
+        let mut a = GradScaler { growth_interval: 2, ..GradScaler::new(64.0) };
+        let mut b = GradScaler { growth_interval: 2, ..GradScaler::new(64.0) };
+        for &overflow in &[false, true, false, false, false, true] {
+            let mut g = if overflow {
+                [Mat::from_vec(1, 1, vec![f32::INFINITY])]
+            } else {
+                [Mat::ones(1, 1)]
+            };
+            assert_eq!(a.unscale_and_update(&mut g), !overflow);
+            b.update(overflow);
+            assert_eq!(a.state(), b.state());
+        }
     }
 
     #[test]

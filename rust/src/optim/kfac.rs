@@ -19,15 +19,20 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use super::{Hyper, KronStats, Optimizer};
 use crate::dist::DistCtx;
 use crate::linalg::{lu_inverse, spd_inverse};
-use crate::numerics::Policy;
+use crate::numerics::{Policy, QMat};
 use crate::tensor::{pool, Mat};
 
+/// Per-layer factor state, physically stored in the policy's storage
+/// dtype via [`QMat`] (2 bytes/element under bf16/fp16, plain f32 under
+/// the reference policy). Working copies are widened — exactly — for the
+/// f32 EMA/inversion arithmetic, and the preconditioning matmuls widen at
+/// pack time so the 4-byte image is never materialized.
 struct LayerState {
-    s_k: Mat,
-    s_c: Mat,
-    s_k_inv: Mat,
-    s_c_inv: Mat,
-    m_mu: Mat,
+    s_k: QMat,
+    s_c: QMat,
+    s_k_inv: QMat,
+    s_c_inv: QMat,
+    m_mu: QMat,
 }
 
 /// `(S + λI)⁻¹` with fp32 compute but storage-format rounding of the
@@ -81,16 +86,17 @@ impl Kfac {
     /// One rank of a distributed topology: under the factor-sharded
     /// strategy only owned layers allocate `S_K`/`S_C`/inverses.
     pub fn with_dist(shapes: &[(usize, usize)], hp: &Hyper, dist: DistCtx) -> Self {
+        let store = hp.policy.store;
         let layers = shapes
             .iter()
             .enumerate()
             .map(|(l, &(o, i))| {
                 dist.owns_layer(l).then(|| LayerState {
-                    s_k: Mat::eye(i),
-                    s_c: Mat::eye(o),
-                    s_k_inv: Mat::eye(i),
-                    s_c_inv: Mat::eye(o),
-                    m_mu: Mat::zeros(o, i),
+                    s_k: QMat::eye(store, i),
+                    s_c: QMat::eye(store, o),
+                    s_k_inv: QMat::eye(store, i),
+                    s_c_inv: QMat::eye(store, o),
+                    m_mu: QMat::zeros(store, o, i),
                 })
             })
             .collect();
@@ -126,15 +132,28 @@ impl Optimizer for Kfac {
                     let dv = &diverged;
                     Box::new(move || {
                         // EMA of the Kronecker factors, accumulated in the
-                        // storage format (this is where bf16 hurts).
+                        // storage format (this is where bf16 hurts). The
+                        // stored u16 factors widen exactly into the f32
+                        // working copies; re-storing after quantization is
+                        // a lossless narrowing.
                         let u = stat.u_dense();
                         let g = stat.g_dense();
-                        st.s_k.ema(1.0 - b1, b1, &u);
-                        st.s_c.ema(1.0 - b1, b1, &g);
-                        policy.quantize_mat(&mut st.s_k);
-                        policy.quantize_mat(&mut st.s_c);
-                        st.s_k_inv = damped_inverse(&st.s_k, hp.damping, &policy, cf, dv);
-                        st.s_c_inv = damped_inverse(&st.s_c, hp.damping, &policy, cf, dv);
+                        let mut s_k = st.s_k.widen();
+                        let mut s_c = st.s_c.widen();
+                        s_k.ema(1.0 - b1, b1, &u);
+                        s_c.ema(1.0 - b1, b1, &g);
+                        policy.quantize_mat(&mut s_k);
+                        policy.quantize_mat(&mut s_c);
+                        st.s_k_inv = QMat::from_quantized(
+                            policy.store,
+                            damped_inverse(&s_k, hp.damping, &policy, cf, dv),
+                        );
+                        st.s_c_inv = QMat::from_quantized(
+                            policy.store,
+                            damped_inverse(&s_c, hp.damping, &policy, cf, dv),
+                        );
+                        st.s_k = QMat::from_quantized(policy.store, s_k);
+                        st.s_c = QMat::from_quantized(policy.store, s_c);
                     }) as Box<dyn FnOnce() + Send + '_>
                 })
                 .collect();
@@ -151,19 +170,22 @@ impl Optimizer for Kfac {
             .map(|(st, p, g)| {
                 let dv = &diverged;
                 Box::new(move || {
-                    // m_μ ← α₂ m_μ + S_C⁻¹ ∇W S_K⁻¹ + γ W
-                    let precond =
-                        crate::tensor::matmul(&st.s_c_inv, &crate::tensor::matmul(g, &st.s_k_inv));
-                    st.m_mu.ema(hp.momentum, 1.0, &precond);
-                    st.m_mu.axpy(hp.weight_decay, p);
-                    policy.quantize_mat(&mut st.m_mu);
+                    // m_μ ← α₂ m_μ + S_C⁻¹ ∇W S_K⁻¹ + γ W. The inverse
+                    // factors stay in u16 storage; the two matmuls widen
+                    // them at pack time.
+                    let precond = st.s_c_inv.matmul_qa(&st.s_k_inv.matmul_qb(g));
+                    let mut m_mu = st.m_mu.widen();
+                    m_mu.ema(hp.momentum, 1.0, &precond);
+                    m_mu.axpy(hp.weight_decay, p);
+                    policy.quantize_mat(&mut m_mu);
                     // KL-style RMS trust region on the preconditioned update.
-                    let f = super::update_clip_factor(hp.lr, &st.m_mu, hp.update_clip);
-                    p.axpy(-hp.lr * f, &st.m_mu);
+                    let f = super::update_clip_factor(hp.lr, &m_mu, hp.update_clip);
+                    p.axpy(-hp.lr * f, &m_mu);
                     policy.quantize_mat(p);
-                    if p.has_nonfinite() || st.m_mu.has_nonfinite() {
+                    if p.has_nonfinite() || m_mu.has_nonfinite() {
                         dv.store(true, Ordering::Relaxed);
                     }
+                    st.m_mu = QMat::from_quantized(policy.store, m_mu);
                 }) as Box<dyn FnOnce() + Send + '_>
             })
             .collect();
@@ -177,14 +199,18 @@ impl Optimizer for Kfac {
 
     fn state_bytes(&self) -> usize {
         // S_K, S_C, their inverses, and the momentum buffer — owned
-        // layers only (per-rank bytes under factor sharding).
+        // layers only (per-rank bytes under factor sharding). These are
+        // the *physical* payload sizes of the QMat allocations, which by
+        // construction equal `policy.stored_bytes` for each shape.
         self.layers
             .iter()
             .flatten()
             .map(|st| {
-                self.hp.policy.stored_bytes(st.s_k.rows(), st.s_k.cols()) * 2
-                    + self.hp.policy.stored_bytes(st.s_c.rows(), st.s_c.cols()) * 2
-                    + self.hp.policy.stored_bytes(st.m_mu.rows(), st.m_mu.cols())
+                st.s_k.bytes()
+                    + st.s_c.bytes()
+                    + st.s_k_inv.bytes()
+                    + st.s_c_inv.bytes()
+                    + st.m_mu.bytes()
             })
             .sum()
     }
@@ -210,14 +236,16 @@ impl Optimizer for Kfac {
     }
 
     fn state_vectors(&self) -> Vec<Vec<f32>> {
-        // Five blobs per owned layer: S_K, S_C, S_K⁻¹, S_C⁻¹, m_μ.
+        // Five blobs per owned layer: S_K, S_C, S_K⁻¹, S_C⁻¹, m_μ — as
+        // the exact f32 images of the stored values (widening is exact, so
+        // the checkpoint round-trip stays bitwise).
         let mut out = Vec::new();
         for st in self.layers.iter().flatten() {
-            out.push(st.s_k.data().to_vec());
-            out.push(st.s_c.data().to_vec());
-            out.push(st.s_k_inv.data().to_vec());
-            out.push(st.s_c_inv.data().to_vec());
-            out.push(st.m_mu.data().to_vec());
+            out.push(st.s_k.widen().data().to_vec());
+            out.push(st.s_c.widen().data().to_vec());
+            out.push(st.s_k_inv.widen().data().to_vec());
+            out.push(st.s_c_inv.widen().data().to_vec());
+            out.push(st.m_mu.widen().data().to_vec());
         }
         out
     }
@@ -232,13 +260,19 @@ impl Optimizer for Kfac {
             })
             .collect();
         super::check_blob_lens("kfac", blobs, &want)?;
+        let store = self.hp.policy.store;
         let mut it = blobs.iter();
         for st in self.layers.iter_mut().flatten() {
-            st.s_k.data_mut().copy_from_slice(it.next().unwrap());
-            st.s_c.data_mut().copy_from_slice(it.next().unwrap());
-            st.s_k_inv.data_mut().copy_from_slice(it.next().unwrap());
-            st.s_c_inv.data_mut().copy_from_slice(it.next().unwrap());
-            st.m_mu.data_mut().copy_from_slice(it.next().unwrap());
+            // Checkpointed values were widened from this dtype, so the
+            // narrowing below is lossless.
+            let mut load = |rows: usize, cols: usize| {
+                QMat::from_quantized(store, Mat::from_vec(rows, cols, it.next().unwrap().clone()))
+            };
+            st.s_k = load(st.s_k.rows(), st.s_k.cols());
+            st.s_c = load(st.s_c.rows(), st.s_c.cols());
+            st.s_k_inv = load(st.s_k_inv.rows(), st.s_k_inv.cols());
+            st.s_c_inv = load(st.s_c_inv.rows(), st.s_c_inv.cols());
+            st.m_mu = load(st.m_mu.rows(), st.m_mu.cols());
         }
         Ok(())
     }
@@ -324,6 +358,18 @@ mod tests {
         fresh.load_state_vectors(&snap).unwrap();
         assert_eq!(fresh.state_vectors(), snap);
         assert!(fresh.load_state_vectors(&snap[..4]).is_err());
+    }
+
+    #[test]
+    fn half_precision_factor_state_is_physically_half_sized() {
+        // QMat stores u16 words under a half policy: the real allocation
+        // is half the fp32 footprint, matching the stored_bytes formula.
+        let shapes = [(8usize, 6usize), (4, 8)];
+        let bytes = |policy: Policy| {
+            Kfac::new(&shapes, &Hyper { policy, ..Hyper::default() }).state_bytes()
+        };
+        assert_eq!(bytes(Policy::bf16_mixed()) * 2, bytes(Policy::fp32()));
+        assert_eq!(bytes(Policy::fp16_mixed()), bytes(Policy::bf16_mixed()));
     }
 
     #[test]

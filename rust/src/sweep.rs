@@ -150,6 +150,7 @@ mod tests {
             transport: crate::dist::Transport::Local,
             algo: crate::dist::default_algo(),
             overlap: crate::dist::default_overlap(),
+            wire_dtype: crate::dist::default_wire_dtype(),
             resume: None,
             ckpt: None,
             ckpt_every: 0,

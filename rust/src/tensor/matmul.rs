@@ -52,10 +52,94 @@ const PAR_FLOPS: usize = 1 << 20;
 /// panel costs more than the whole product for ~16³ and under).
 const TINY_FLOPS: usize = 8192;
 
+/// Element source for panel packing: plain `f32` slices, or dtype-narrowed
+/// `u16` words widened through a conversion function *at pack time*. The
+/// packers copy into contiguous zero-padded strips anyway, so the u16→f32
+/// conversion rides that copy and the microkernel always accumulates f32 —
+/// half-precision operands cost one extra convert per packed element,
+/// nothing on the FMA stream.
+#[derive(Clone, Copy)]
+enum Src<'a> {
+    F32(&'a [f32]),
+    U16(&'a [u16], fn(u16) -> f32),
+}
+
+impl Src<'_> {
+    #[inline]
+    fn at(self, idx: usize) -> f32 {
+        match self {
+            Src::F32(s) => s[idx],
+            Src::U16(s, widen) => widen(s[idx]),
+        }
+    }
+}
+
 /// `C = A @ B`.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     let mut c = Mat::zeros(a.rows(), b.cols());
     matmul_into(a, b, &mut c, false);
+    c
+}
+
+/// `C = A @ B` where `A` is `m×k` of dtype-narrowed `u16` words, widened
+/// through `widen` at pack time. Bitwise identical to widening the whole
+/// operand into an `f32` matrix first (same blocking, same accumulation
+/// order) at every size — without materializing the 4-byte copy.
+pub fn matmul_wa_b(ad: &[u16], widen: fn(u16) -> f32, m: usize, k: usize, b: &Mat) -> Mat {
+    assert_eq!(ad.len(), m * k, "matmul_wa_b: payload len");
+    assert_eq!(k, b.rows(), "matmul_wa_b: inner dims {m}x{k} @ {}x{}", b.rows(), b.cols());
+    let n = b.cols();
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || k == 0 || n == 0 {
+        return c;
+    }
+    let flops = 2 * m * k * n;
+    if flops < TINY_FLOPS {
+        // Below the packing threshold there is no pack to ride; widening
+        // into a scratch operand is the same arithmetic on the same values.
+        let wa = Mat::from_vec(m, k, ad.iter().map(|&u| widen(u)).collect());
+        matmul_into(&wa, b, &mut c, false);
+        return c;
+    }
+    let a_src = Src::U16(ad, widen);
+    let b_src = Src::F32(b.data());
+    if flops < PAR_FLOPS {
+        gemm_rows(a_src, b_src, c.data_mut(), 0, m, k, n, k, false);
+        return c;
+    }
+    pool::parallel_chunks_mut(c.data_mut(), n, MR, |row0, chunk| {
+        let rows = chunk.len() / n;
+        gemm_rows(a_src, b_src, chunk, row0, rows, k, n, k, false);
+    });
+    c
+}
+
+/// `C = A @ B` where `B` is `k×n` of dtype-narrowed `u16` words, widened
+/// through `widen` at pack time (see [`matmul_wa_b`]).
+pub fn matmul_a_wb(a: &Mat, bd: &[u16], widen: fn(u16) -> f32, k: usize, n: usize) -> Mat {
+    assert_eq!(bd.len(), k * n, "matmul_a_wb: payload len");
+    assert_eq!(a.cols(), k, "matmul_a_wb: inner dims {}x{} @ {k}x{n}", a.rows(), a.cols());
+    let m = a.rows();
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || k == 0 || n == 0 {
+        return c;
+    }
+    let flops = 2 * m * k * n;
+    if flops < TINY_FLOPS {
+        let wb = Mat::from_vec(k, n, bd.iter().map(|&u| widen(u)).collect());
+        matmul_into(a, &wb, &mut c, false);
+        return c;
+    }
+    let a_src = Src::F32(a.data());
+    let b_src = Src::U16(bd, widen);
+    if flops < PAR_FLOPS {
+        gemm_rows(a_src, b_src, c.data_mut(), 0, m, k, n, k, false);
+        return c;
+    }
+    pool::parallel_chunks_mut(c.data_mut(), n, MR, |row0, chunk| {
+        let rows = chunk.len() / n;
+        gemm_rows(a_src, b_src, chunk, row0, rows, k, n, k, false);
+    });
     c
 }
 
@@ -83,12 +167,12 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat, accumulate: bool) {
         return;
     }
     if flops < PAR_FLOPS {
-        gemm_rows(ad, bd, c.data_mut(), 0, m, k, n, k, false);
+        gemm_rows(Src::F32(ad), Src::F32(bd), c.data_mut(), 0, m, k, n, k, false);
         return;
     }
     pool::parallel_chunks_mut(c.data_mut(), n, MR, |row0, chunk| {
         let rows = chunk.len() / n;
-        gemm_rows(ad, bd, chunk, row0, rows, k, n, k, false);
+        gemm_rows(Src::F32(ad), Src::F32(bd), chunk, row0, rows, k, n, k, false);
     });
 }
 
@@ -114,12 +198,12 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
         return c;
     }
     if flops < PAR_FLOPS {
-        gemm_rows(ad, bd, c.data_mut(), 0, ka, m, n, ka, true);
+        gemm_rows(Src::F32(ad), Src::F32(bd), c.data_mut(), 0, ka, m, n, ka, true);
         return c;
     }
     pool::parallel_chunks_mut(c.data_mut(), n, MR, |row0, chunk| {
         let rows = chunk.len() / n;
-        gemm_rows(ad, bd, chunk, row0, rows, m, n, ka, true);
+        gemm_rows(Src::F32(ad), Src::F32(bd), chunk, row0, rows, m, n, ka, true);
     });
     c
 }
@@ -198,8 +282,8 @@ fn at_b_tiny(ad: &[f32], bd: &[f32], cd: &mut [f32], m: usize, ka: usize, n: usi
 /// visited in order), independent of `row0`/`rows` — so any row-sharding
 /// of `C` is bitwise identical to the serial pass.
 fn gemm_rows(
-    ad: &[f32],
-    bd: &[f32],
+    ad: Src,
+    bd: Src,
     cd: &mut [f32],
     row0: usize,
     rows: usize,
@@ -255,15 +339,22 @@ fn gemm_rows(
 /// contiguous `NR`-wide column strips: strip `s` holds, for each `p`, the
 /// `NR` values `B[kb+p][jb + s·NR ..]`, zero-padded past the panel edge so
 /// the microkernel never needs a column-fringe path.
-fn pack_b(bd: &[f32], pb: &mut [f32], kb: usize, kc: usize, jb: usize, nc: usize, n: usize) {
+fn pack_b(bd: Src, pb: &mut [f32], kb: usize, kc: usize, jb: usize, nc: usize, n: usize) {
     for s in 0..nc.div_ceil(NR) {
         let j0 = jb + s * NR;
         let w = NR.min(jb + nc - j0);
         let dst = &mut pb[s * kc * NR..(s + 1) * kc * NR];
         for p in 0..kc {
-            let src = &bd[(kb + p) * n + j0..(kb + p) * n + j0 + w];
+            let base = (kb + p) * n + j0;
             let drow = &mut dst[p * NR..(p + 1) * NR];
-            drow[..w].copy_from_slice(src);
+            match bd {
+                Src::F32(src) => drow[..w].copy_from_slice(&src[base..base + w]),
+                Src::U16(src, widen) => {
+                    for (x, &u) in drow[..w].iter_mut().zip(&src[base..base + w]) {
+                        *x = widen(u);
+                    }
+                }
+            }
             for x in &mut drow[w..] {
                 *x = 0.0;
             }
@@ -276,7 +367,7 @@ fn pack_b(bd: &[f32], pb: &mut [f32], kb: usize, kc: usize, jb: usize, nc: usize
 /// `A[r0 + s·MR ..][kb+p]`, zero-padded past the tile edge. Padded rows
 /// multiply real `B` values but land in accumulator rows that are never
 /// stored, so they cost nothing and corrupt nothing.
-fn pack_a(ad: &[f32], pa: &mut [f32], r0: usize, mc: usize, kb: usize, kc: usize, lda: usize) {
+fn pack_a(ad: Src, pa: &mut [f32], r0: usize, mc: usize, kb: usize, kc: usize, lda: usize) {
     for s in 0..mc.div_ceil(MR) {
         let base = r0 + s * MR;
         let h = MR.min(mc - s * MR);
@@ -284,7 +375,7 @@ fn pack_a(ad: &[f32], pa: &mut [f32], r0: usize, mc: usize, kb: usize, kc: usize
         for p in 0..kc {
             let drow = &mut dst[p * MR..(p + 1) * MR];
             for (i, x) in drow.iter_mut().enumerate() {
-                *x = if i < h { ad[(base + i) * lda + kb + p] } else { 0.0 };
+                *x = if i < h { ad.at((base + i) * lda + kb + p) } else { 0.0 };
             }
         }
     }
@@ -293,15 +384,22 @@ fn pack_a(ad: &[f32], pa: &mut [f32], r0: usize, mc: usize, kb: usize, kc: usize
 /// Like [`pack_a`] but for `AᵀB`: strip rows are *columns* of the
 /// `k × lda` row-major `A`, so for each `p` the `MR` values
 /// `A[kb+p][c0 + s·MR ..]` are a contiguous read.
-fn pack_at(ad: &[f32], pa: &mut [f32], c0: usize, mc: usize, kb: usize, kc: usize, lda: usize) {
+fn pack_at(ad: Src, pa: &mut [f32], c0: usize, mc: usize, kb: usize, kc: usize, lda: usize) {
     for s in 0..mc.div_ceil(MR) {
         let base = c0 + s * MR;
         let h = MR.min(mc - s * MR);
         let dst = &mut pa[s * kc * MR..(s + 1) * kc * MR];
         for p in 0..kc {
-            let src = &ad[(kb + p) * lda + base..(kb + p) * lda + base + h];
+            let base_idx = (kb + p) * lda + base;
             let drow = &mut dst[p * MR..(p + 1) * MR];
-            drow[..h].copy_from_slice(src);
+            match ad {
+                Src::F32(src) => drow[..h].copy_from_slice(&src[base_idx..base_idx + h]),
+                Src::U16(src, widen) => {
+                    for (x, &u) in drow[..h].iter_mut().zip(&src[base_idx..base_idx + h]) {
+                        *x = widen(u);
+                    }
+                }
+            }
             for x in &mut drow[h..] {
                 *x = 0.0;
             }
@@ -463,6 +561,31 @@ mod tests {
         let a = Mat::from_fn(8, 21, |_, _| rng.normal());
         let b = Mat::from_fn(5, 21, |_, _| rng.normal());
         assert_close(&matmul_a_bt(&a, &b), &matmul(&a, &b.transpose()), 1e-5);
+    }
+
+    #[test]
+    fn widened_matmul_matches_prewidened_bitwise() {
+        // The u16 entry points must be bitwise identical to widening the
+        // operand first, across the tiny / serial-blocked / pooled
+        // dispatch tiers (the pack-time conversion feeds the microkernel
+        // the exact same panel values).
+        fn widen_half(bits: u16) -> f32 {
+            // A stand-in conversion with the same shape as bf16 widening.
+            f32::from_bits((bits as u32) << 16)
+        }
+        let mut rng = Pcg::new(41);
+        for (m, k, n) in [(3usize, 5usize, 4usize), (40, 60, 50), (MC + 3, KC + 5, NC + 2)] {
+            let a_bits: Vec<u16> =
+                (0..m * k).map(|_| (rng.next_u32() >> 16) as u16 & 0x7f7f).collect();
+            let b_bits: Vec<u16> =
+                (0..k * n).map(|_| (rng.next_u32() >> 16) as u16 & 0x7f7f).collect();
+            let aw = Mat::from_vec(m, k, a_bits.iter().map(|&u| widen_half(u)).collect());
+            let bw = Mat::from_vec(k, n, b_bits.iter().map(|&u| widen_half(u)).collect());
+            let c_wa = matmul_wa_b(&a_bits, widen_half, m, k, &bw);
+            assert_eq!(c_wa, matmul(&aw, &bw), "wa {m}x{k}x{n}");
+            let c_wb = matmul_a_wb(&aw, &b_bits, widen_half, k, n);
+            assert_eq!(c_wb, matmul(&aw, &bw), "wb {m}x{k}x{n}");
+        }
     }
 
     #[test]

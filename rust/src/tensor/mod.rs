@@ -15,7 +15,7 @@ mod matmul;
 mod ops;
 pub mod pool;
 
-pub use matmul::{matmul, matmul_at_b, matmul_a_bt, matmul_into};
+pub use matmul::{matmul, matmul_a_bt, matmul_a_wb, matmul_at_b, matmul_into, matmul_wa_b};
 
 /// A dense row-major `f32` matrix.
 #[derive(Clone, PartialEq)]

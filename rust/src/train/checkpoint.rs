@@ -10,7 +10,7 @@
 //!   [`crate::optim::Optimizer::state_vectors`] snapshot (momenta,
 //!   Kronecker/structured factors in coefficient order) — before the
 //!   checksum. `n_blobs = 0` is a pure-parameter checkpoint.
-//! - v3 (current): the v2 sections, followed by `u8 flag`; when the flag
+//! - v3: the v2 sections, followed by `u8 flag`; when the flag
 //!   is 1, a [`DriverState`] section: `u64 step | f32 best | f64
 //!   epoch_loss | u64 nb | u32 n_rows | per row: u64 step, u64 epoch,
 //!   f32 train_loss, f32 test_loss, f32 test_err, f32 lr, u8 diverged`.
@@ -19,11 +19,16 @@
 //!   the best-so-far error, and restore the partial-epoch f64 loss
 //!   accumulators so an epoch interrupted mid-way re-emits the identical
 //!   epoch-average row.
+//! - v4 (current): the v3 driver section additionally ends with `u8
+//!   has_scaler`; when 1, a [`crate::numerics::GradScaler`] schedule
+//!   snapshot follows: `f32 scale | u64 clean_steps | u64 skipped`.
+//!   Without it a resumed fp16 run would restart the loss scale at its
+//!   default and break bitwise resume determinism.
 //!
-//! Readers accept all three versions (v1 loads with empty optimizer
-//! state; v1/v2 load with no driver state); the writer always emits v3.
-//! The checksum covers everything before it, so truncation and bit
-//! corruption are both rejected.
+//! Readers accept all four versions (v1 loads with empty optimizer
+//! state; v1/v2 load with no driver state; v1-v3 load with no scaler
+//! state); the writer always emits v4. The checksum covers everything
+//! before it, so truncation and bit corruption are both rejected.
 //!
 //! Writes are atomic and keep one generation of history: the body is
 //! written to `<path>.tmp` and fsynced, any existing `<path>` is renamed
@@ -38,7 +43,7 @@ use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"SNGD";
-const VERSION: u32 = 3;
+const VERSION: u32 = 4;
 
 /// FNV-1a 64 over a byte image — shared by the checkpoint framing and
 /// the run digest of [`super::run_digest`].
@@ -67,6 +72,11 @@ pub struct DriverState {
     /// Every log row emitted before the checkpoint (replayed on resume
     /// so [`super::run_digest`] matches the uninterrupted run).
     pub rows: Vec<LogRow>,
+    /// Loss-scale schedule snapshot of the active
+    /// [`crate::numerics::GradScaler`] (v4): `(scale, clean_steps,
+    /// skipped)`. `None` for runs without fp16 storage (and for any
+    /// pre-v4 checkpoint).
+    pub scaler: Option<(f32, usize, usize)>,
 }
 
 /// `<path>.suffix` as a sibling file (`ckpt.bin` → `ckpt.bin.tmp`).
@@ -136,6 +146,15 @@ pub fn save_checkpoint_driver(
                 body.extend_from_slice(&r.lr.to_le_bytes());
                 body.push(u8::from(r.diverged));
             }
+            match d.scaler {
+                None => body.push(0u8),
+                Some((scale, clean, skipped)) => {
+                    body.push(1u8);
+                    body.extend_from_slice(&scale.to_le_bytes());
+                    body.extend_from_slice(&(clean as u64).to_le_bytes());
+                    body.extend_from_slice(&(skipped as u64).to_le_bytes());
+                }
+            }
         }
     }
     let sum = checksum(&body);
@@ -170,8 +189,9 @@ pub fn load_checkpoint_full(path: &Path) -> std::io::Result<(Vec<Mat>, Vec<Vec<f
     load_checkpoint_driver(path).map(|(params, state, _)| (params, state))
 }
 
-/// Load parameters, optimizer state and (v3) [`DriverState`] from
-/// `path`. v1/v2 files yield `None` driver state.
+/// Load parameters, optimizer state and (v3+) [`DriverState`] from
+/// `path`. v1/v2 files yield `None` driver state; v3 files yield driver
+/// state with no scaler snapshot.
 pub fn load_checkpoint_driver(
     path: &Path,
 ) -> std::io::Result<(Vec<Mat>, Vec<Vec<f32>>, Option<DriverState>)> {
@@ -279,7 +299,30 @@ pub fn load_checkpoint_driver(
                 });
                 off += ROW_BYTES;
             }
-            driver = Some(DriverState { step, best, epoch_loss, nb, rows });
+            let mut scaler = None;
+            if ver >= 4 {
+                if off + 1 > body.len() {
+                    return Err(err("truncated scaler flag"));
+                }
+                let sflag = body[off];
+                off += 1;
+                if sflag > 1 {
+                    return Err(err("bad scaler flag"));
+                }
+                if sflag == 1 {
+                    if off + 4 + 8 + 8 > body.len() {
+                        return Err(err("truncated scaler state"));
+                    }
+                    let scale = f32::from_le_bytes(body[off..off + 4].try_into().unwrap());
+                    let clean =
+                        u64::from_le_bytes(body[off + 4..off + 12].try_into().unwrap()) as usize;
+                    let skipped =
+                        u64::from_le_bytes(body[off + 12..off + 20].try_into().unwrap()) as usize;
+                    off += 20;
+                    scaler = Some((scale, clean, skipped));
+                }
+            }
+            driver = Some(DriverState { step, best, epoch_loss, nb, rows, scaler });
         }
     }
     if off != body.len() {
@@ -425,6 +468,7 @@ mod tests {
                     diverged: true,
                 },
             ],
+            scaler: None,
         };
         let path = std::env::temp_dir().join("singd_test_ckpt_v3.bin");
         save_checkpoint_driver(&path, &params, &[vec![1.0, 2.0]], Some(&driver)).unwrap();
@@ -439,6 +483,57 @@ mod tests {
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(sibling(&path, ".prev")).ok();
         std::fs::remove_file(sibling(&path, ".tmp")).ok();
+    }
+
+    #[test]
+    fn v4_scaler_state_roundtrips_bitwise() {
+        let mut rng = Pcg::new(89);
+        let params = vec![rng.normal_mat(2, 3, 1.0)];
+        let driver = DriverState {
+            step: 7,
+            best: 0.5,
+            epoch_loss: 1.75,
+            nb: 3,
+            rows: Vec::new(),
+            scaler: Some((32768.0, 41, 2)),
+        };
+        let path = std::env::temp_dir().join("singd_test_ckpt_v4.bin");
+        save_checkpoint_driver(&path, &params, &[], Some(&driver)).unwrap();
+        let (_, _, ld) = load_checkpoint_driver(&path).unwrap();
+        assert_eq!(ld, Some(driver), "scaler schedule must round-trip bitwise");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(sibling(&path, ".prev")).ok();
+        std::fs::remove_file(sibling(&path, ".tmp")).ok();
+    }
+
+    #[test]
+    fn v3_files_load_with_no_scaler_state() {
+        // Hand-write a v3 file (driver section without the scaler flag):
+        // readers must accept it and yield `scaler: None`.
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC);
+        body.extend_from_slice(&3u32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes()); // n_layers
+        body.extend_from_slice(&1u32.to_le_bytes()); // rows
+        body.extend_from_slice(&1u32.to_le_bytes()); // cols
+        body.extend_from_slice(&2.5f32.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes()); // n_blobs
+        body.push(1u8); // driver flag
+        body.extend_from_slice(&9u64.to_le_bytes()); // step
+        body.extend_from_slice(&0.125f32.to_le_bytes()); // best
+        body.extend_from_slice(&2.0f64.to_le_bytes()); // epoch_loss
+        body.extend_from_slice(&1u64.to_le_bytes()); // nb
+        body.extend_from_slice(&0u32.to_le_bytes()); // n_rows
+        let sum = checksum(&body);
+        body.extend_from_slice(&sum.to_le_bytes());
+        let path = std::env::temp_dir().join("singd_test_ckpt_v3_compat.bin");
+        std::fs::write(&path, &body).unwrap();
+        let (lp, _, ld) = load_checkpoint_driver(&path).unwrap();
+        assert_eq!(lp[0].at(0, 0), 2.5);
+        let d = ld.unwrap();
+        assert_eq!((d.step, d.best, d.nb), (9, 0.125, 1));
+        assert_eq!(d.scaler, None, "v3 driver state carries no scaler snapshot");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

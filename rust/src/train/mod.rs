@@ -15,6 +15,7 @@ use crate::dist::{
     SocketComm, Transport,
 };
 use crate::model::{BackwardResult, Batch, Model};
+use crate::numerics::{Dtype, GradScaler, Policy};
 use crate::obs::metrics as obs_metrics;
 use crate::obs::trace::{self, ArgVal};
 use crate::optim::{Hyper, KronStats, Method, Optimizer};
@@ -269,7 +270,10 @@ fn train_loop<M: Model + ?Sized>(
                 if let Some(hook) = ckpt_hook.as_mut() {
                     hook(
                         model,
-                        &DriverState { step, best, epoch_loss, nb, rows: rows.clone() },
+                        // The scaler snapshot (if any) is filled in by the
+                        // driver-owned hook — the loop doesn't know about
+                        // loss scaling.
+                        &DriverState { step, best, epoch_loss, nb, rows: rows.clone(), scaler: None },
                     );
                 }
             }
@@ -343,6 +347,29 @@ fn apply_resume<M: Model + ?Sized>(
     Some(driver.unwrap_or_default())
 }
 
+/// Build the dynamic loss scaler for runs whose optimizer state is
+/// stored in true half precision ([`Dtype::Fp16`], whose 5-bit exponent
+/// under- and overflows on real gradients; bf16 shares f32's exponent
+/// range and needs none). Restores a checkpointed schedule snapshot so a
+/// resumed run continues the identical scale trajectory — the fp16
+/// resume-determinism contract.
+fn build_scaler(hp: &Hyper, resume: Option<&DriverState>) -> Option<Mutex<GradScaler>> {
+    if hp.policy.store != Dtype::Fp16 {
+        return None;
+    }
+    let mut s = GradScaler::default();
+    if let Some((scale, clean, skipped)) = resume.and_then(|d| d.scaler) {
+        s.restore(scale, clean, skipped);
+    }
+    Some(Mutex::new(s))
+}
+
+/// Snapshot the active scaler's schedule for a checkpoint (`None` when
+/// the run trains without loss scaling).
+fn scaler_snapshot(scaler: &Option<Mutex<GradScaler>>) -> Option<(f32, usize, usize)> {
+    scaler.as_ref().map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).state())
+}
+
 /// Reassemble the canonical (serial-layout) optimizer-state snapshot on
 /// every rank of a socket world: under factor sharding each rank
 /// contributes its owned blobs as `1×len` matrices over the exchange and
@@ -399,13 +426,17 @@ pub fn train_image_model<M: Model + ?Sized>(
             .load_state_vectors(state)
             .unwrap_or_else(|e| panic!("resume: optimizer state mismatch: {e}"));
     });
+    let scaler = build_scaler(&cfg.hyper, resume.as_ref());
     let mut hook_impl;
     let hook: Option<&mut dyn FnMut(&M, &DriverState)> = match &cfg.ckpt {
         Some(path) if cfg.ckpt_every > 0 => {
             let path = path.clone();
-            hook_impl = |m: &M, d: &DriverState| {
-                let state = opt.lock().unwrap_or_else(|e| e.into_inner()).state_vectors();
-                checkpoint::save_checkpoint_driver(&path, m.params(), &state, Some(d))
+            let scaler_ref = &scaler;
+            let opt_ref = &opt;
+            hook_impl = move |m: &M, d: &DriverState| {
+                let state = opt_ref.lock().unwrap_or_else(|e| e.into_inner()).state_vectors();
+                let d = DriverState { scaler: scaler_snapshot(scaler_ref), ..d.clone() };
+                checkpoint::save_checkpoint_driver(&path, m.params(), &state, Some(&d))
                     .unwrap_or_else(|e| panic!("checkpoint save {}: {e}", path.display()));
             };
             Some(&mut hook_impl)
@@ -417,7 +448,29 @@ pub fn train_image_model<M: Model + ?Sized>(
             let res = model.forward_backward(b);
             let mut opt = opt.lock().unwrap_or_else(|e| e.into_inner());
             opt.set_lr(lr);
-            opt.step(step, model.params_mut(), &res.grads, &res.stats);
+            if let Some(sc) = &scaler {
+                // Fp16 storage: scale the gradients, pass them through
+                // the half-precision round they are stored at (tiny
+                // entries survive, overflowed ones go infinite), then
+                // unscale for the step — or skip it entirely at a
+                // backed-off scale when any entry overflowed.
+                let mut sc = sc.lock().unwrap_or_else(|e| e.into_inner());
+                let mut grads: Vec<Mat> = res
+                    .grads
+                    .iter()
+                    .map(|g| {
+                        let mut sg = sc.scale_mat(g);
+                        cfg.hyper.policy.quantize_mat(&mut sg);
+                        sg
+                    })
+                    .collect();
+                if !sc.unscale_and_update(&mut grads) {
+                    return (res.loss, opt.diverged());
+                }
+                opt.step(step, model.params_mut(), &grads, &res.stats);
+            } else {
+                opt.step(step, model.params_mut(), &res.grads, &res.stats);
+            }
             (res.loss, opt.diverged())
         });
     if owns_trace {
@@ -441,9 +494,9 @@ pub fn train_image_model<M: Model + ?Sized>(
 }
 
 /// Distributed topology of a training run (the `[dist]` config section /
-/// `--ranks` + `--transport` + `--algo` + `--overlap` CLI knobs /
-/// `SINGD_RANKS` + `SINGD_TRANSPORT` + `SINGD_ALGO` + `SINGD_OVERLAP`
-/// env defaults).
+/// `--ranks` + `--transport` + `--algo` + `--overlap` + `--wire-dtype`
+/// CLI knobs / `SINGD_RANKS` + `SINGD_TRANSPORT` + `SINGD_ALGO` +
+/// `SINGD_OVERLAP` + `SINGD_WIRE_DTYPE` env defaults).
 #[derive(Clone, Debug)]
 pub struct DistCfg {
     /// World size; `1` falls back to the serial driver.
@@ -460,6 +513,13 @@ pub struct DistCfg {
     /// default; bitwise identical either way — contract 4 of
     /// [`crate::dist`]).
     pub overlap: bool,
+    /// Wire dtype for the heavy collectives (`[dist] wire_dtype` /
+    /// `--wire-dtype` / `SINGD_WIRE_DTYPE`): statistics all-gathers and
+    /// update all-reduces move 2-byte payloads when set to a half
+    /// format. Runs stay bitwise deterministic across transport × algo ×
+    /// overlap at any fixed wire dtype, but a half wire forfeits the
+    /// serial-equality contract (see [`crate::dist`] §Wire dtype).
+    pub wire_dtype: Dtype,
     /// Elastic fault tolerance (`[dist] elastic` / `--elastic`): survive
     /// worker death and admit joiners by re-rendezvousing into a new
     /// membership generation and resharding optimizer state from the
@@ -476,6 +536,7 @@ impl Default for DistCfg {
             transport: dist::default_transport(),
             algo: dist::default_algo(),
             overlap: dist::default_overlap(),
+            wire_dtype: dist::default_wire_dtype(),
             elastic: false,
         }
     }
@@ -493,6 +554,7 @@ impl DistCfg {
             transport: Transport::Local,
             algo: dist::default_algo(),
             overlap: dist::default_overlap(),
+            wire_dtype: dist::default_wire_dtype(),
             elastic: false,
         }
     }
@@ -674,11 +736,13 @@ fn train_dist_local<M: Model + ?Sized>(
                 .unwrap_or_else(|e| panic!("resume: rank {r} optimizer state mismatch: {e}"));
         }
     });
+    let scaler = build_scaler(&cfg.hyper, resume.as_ref());
     let mut hook_impl;
     let hook: Option<&mut dyn FnMut(&M, &DriverState)> = match &cfg.ckpt {
         Some(path) if cfg.ckpt_every > 0 => {
             let path = path.clone();
             let opts_ref = &opts;
+            let scaler_ref = &scaler;
             hook_impl = move |m: &M, d: &DriverState| {
                 // Merge the per-rank shards back into the canonical
                 // serial layout so the checkpoint is world-size-free.
@@ -695,7 +759,8 @@ fn train_dist_local<M: Model + ?Sized>(
                 } else {
                     opts_ref[0].lock().unwrap_or_else(|e| e.into_inner()).state_vectors()
                 };
-                checkpoint::save_checkpoint_driver(&path, m.params(), &canonical, Some(d))
+                let d = DriverState { scaler: scaler_snapshot(scaler_ref), ..d.clone() };
+                checkpoint::save_checkpoint_driver(&path, m.params(), &canonical, Some(&d))
                     .unwrap_or_else(|e| panic!("checkpoint save {}: {e}", path.display()));
             };
             Some(&mut hook_impl)
@@ -706,14 +771,23 @@ fn train_dist_local<M: Model + ?Sized>(
     // sequence counters, lazily spawned progress engines) live across
     // steps, exactly like a SocketComm world — with overlap on, the
     // per-rank engine thread is spawned once per run, not once per step.
-    let local_world = dist::LocalWorld::new(world, dcfg.algo, dcfg.overlap);
+    let local_world = dist::LocalWorld::new_wire(world, dcfg.algo, dcfg.overlap, dcfg.wire_dtype);
     let (rows, best, steps_run, diverged, wall_secs) =
         train_loop(model, dataset, cfg, resume, hook, |model, b, step, lr| {
             let model_ref = &*model;
+            // One driver-owned scaler: every rank steps at the same
+            // scale, and the schedule advances once per step from the
+            // OR-reduced overflow flag.
+            let amp = scaler.as_ref().map(|s| {
+                (s.lock().unwrap_or_else(|e| e.into_inner()).scale(), cfg.hyper.policy)
+            });
             let outs = local_world.run(|comm| {
-                rank_step(comm, model_ref, b, &opts[comm.rank()], step, lr)
+                rank_step(comm, model_ref, b, &opts[comm.rank()], step, lr, amp)
             });
             let first = outs.into_iter().next().unwrap();
+            if let Some(s) = &scaler {
+                s.lock().unwrap_or_else(|e| e.into_inner()).update(first.overflow);
+            }
             // All ranks hold bitwise-identical post-step parameters
             // (redundantly for replicated, via the exact zero-padded
             // all-reduce for factor-sharded); rank 0's become canonical.
@@ -783,15 +857,17 @@ fn train_dist_socket<M: Model + ?Sized>(
         None => {
             let rendezvous = transport::fresh_rendezvous();
             let run_id = transport::fresh_run_id();
-            let workers =
-                transport::launch_workers(world, &rendezvous, run_id, dcfg.algo, dcfg.overlap)
-                    .unwrap_or_else(|e| panic!("train_dist[socket]: launching workers: {e}"));
+            let workers = transport::launch_workers(
+                world, &rendezvous, run_id, dcfg.algo, dcfg.overlap, dcfg.wire_dtype,
+            )
+            .unwrap_or_else(|e| panic!("train_dist[socket]: launching workers: {e}"));
             (0, rendezvous, run_id, workers)
         }
     };
-    let comm =
-        SocketComm::connect_opts(rank, world, &rendezvous, run_id, dcfg.algo, dcfg.overlap)
-            .unwrap_or_else(|e| panic!("train_dist[socket]: rank {rank} rendezvous: {e}"));
+    let comm = SocketComm::connect_opts_wire(
+        rank, world, &rendezvous, run_id, dcfg.algo, dcfg.overlap, dcfg.wire_dtype,
+    )
+    .unwrap_or_else(|e| panic!("train_dist[socket]: rank {rank} rendezvous: {e}"));
     let shapes = model.shapes();
     let ctx = DistCtx::new(dcfg.strategy, rank, world);
     let opt: Mutex<Box<dyn Optimizer>> =
@@ -811,6 +887,10 @@ fn train_dist_socket<M: Model + ?Sized>(
         o.load_state_vectors(blobs)
             .unwrap_or_else(|e| panic!("resume: rank {rank} optimizer state mismatch: {e}"));
     });
+    // Every process holds a scaler replica; the OR-reduced overflow flag
+    // drives all of them through the identical schedule, so rank 0's
+    // checkpointed snapshot speaks for the world.
+    let scaler = build_scaler(&cfg.hyper, resume.as_ref());
     let n_layers = shapes.len();
     let mut hook_impl;
     let hook: Option<&mut dyn FnMut(&M, &DriverState)> = match &cfg.ckpt {
@@ -818,12 +898,14 @@ fn train_dist_socket<M: Model + ?Sized>(
             let path = path.clone();
             let comm_ref = &comm;
             let opt_ref = &opt;
+            let scaler_ref = &scaler;
             hook_impl = move |m: &M, d: &DriverState| {
                 // SPMD: every rank joins the state gather (the exchange
                 // is a collective), but only rank 0 touches the disk.
                 let canonical = gather_canonical_state(comm_ref, opt_ref, n_layers);
                 if comm_ref.rank() == 0 {
-                    checkpoint::save_checkpoint_driver(&path, m.params(), &canonical, Some(d))
+                    let d = DriverState { scaler: scaler_snapshot(scaler_ref), ..d.clone() };
+                    checkpoint::save_checkpoint_driver(&path, m.params(), &canonical, Some(&d))
                         .unwrap_or_else(|e| panic!("checkpoint save {}: {e}", path.display()));
                 }
             };
@@ -833,7 +915,13 @@ fn train_dist_socket<M: Model + ?Sized>(
     };
     let (rows, best, steps_run, diverged, wall_secs) =
         train_loop(model, dataset, cfg, resume, hook, |model, b, step, lr| {
-            let out = rank_step(&comm, &*model, b, &opt, step, lr);
+            let amp = scaler.as_ref().map(|s| {
+                (s.lock().unwrap_or_else(|e| e.into_inner()).scale(), cfg.hyper.policy)
+            });
+            let out = rank_step(&comm, &*model, b, &opt, step, lr, amp);
+            if let Some(s) = &scaler {
+                s.lock().unwrap_or_else(|e| e.into_inner()).update(out.overflow);
+            }
             *model.params_mut() = out.params;
             (out.loss, out.diverged)
         });
@@ -900,9 +988,10 @@ fn train_dist_elastic<M: Model + ?Sized>(
         None => {
             let rendezvous = transport::fresh_rendezvous();
             let run_id = transport::fresh_run_id();
-            let workers =
-                transport::launch_workers(init_world, &rendezvous, run_id, dcfg.algo, dcfg.overlap)
-                    .unwrap_or_else(|e| panic!("train_dist[elastic]: launching workers: {e}"));
+            let workers = transport::launch_workers(
+                init_world, &rendezvous, run_id, dcfg.algo, dcfg.overlap, dcfg.wire_dtype,
+            )
+            .unwrap_or_else(|e| panic!("train_dist[elastic]: launching workers: {e}"));
             (0, rendezvous, run_id, workers)
         }
     };
@@ -973,7 +1062,7 @@ fn train_dist_elastic<M: Model + ?Sized>(
         // The communicator lives OUTSIDE catch_unwind so the recovery
         // path below can sever and drop it after a caught panic.
         let comm = SocketComm::connect_elastic(
-            rank, world, &rendezvous, run_id, gen, dcfg.algo, dcfg.overlap,
+            rank, world, &rendezvous, run_id, gen, dcfg.algo, dcfg.overlap, dcfg.wire_dtype,
         )
         .unwrap_or_else(|e| {
             panic!("train_dist[elastic]: rank {rank} gen {gen} rendezvous: {e}")
@@ -981,6 +1070,10 @@ fn train_dist_elastic<M: Model + ?Sized>(
         let ctx = DistCtx::new(dcfg.strategy, rank, world);
         let opt: Mutex<Box<dyn Optimizer>> =
             Mutex::new(cfg.method.build_dist(&shapes, &cfg.hyper, ctx));
+        // The scaler restarts each generation from the checkpointed
+        // schedule (`resume.scaler`), exactly like optimizer state —
+        // recovery rewinds both to the same step.
+        let scaler = build_scaler(&cfg.hyper, Some(&resume));
         if !canonical_state.is_empty() {
             let mut o = opt.lock().unwrap_or_else(|e| e.into_inner());
             let bpl = o.state_blobs_per_layer();
@@ -1000,7 +1093,8 @@ fn train_dist_elastic<M: Model + ?Sized>(
             let mut hook_impl = |m: &M, d: &DriverState| {
                 let canonical = gather_canonical_state(&comm, &opt, n_layers);
                 if comm.rank() == 0 {
-                    checkpoint::save_checkpoint_driver(&ckpt_path, m.params(), &canonical, Some(d))
+                    let d = DriverState { scaler: scaler_snapshot(&scaler), ..d.clone() };
+                    checkpoint::save_checkpoint_driver(&ckpt_path, m.params(), &canonical, Some(&d))
                         .unwrap_or_else(|e| {
                             panic!("train_dist[elastic]: checkpoint save {}: {e}", ckpt_path.display())
                         });
@@ -1031,7 +1125,13 @@ fn train_dist_elastic<M: Model + ?Sized>(
                             }
                         }
                     }
-                    let out = rank_step(&comm, &*model, b, &opt, step, lr);
+                    let amp = scaler.as_ref().map(|s| {
+                        (s.lock().unwrap_or_else(|e| e.into_inner()).scale(), cfg.hyper.policy)
+                    });
+                    let out = rank_step(&comm, &*model, b, &opt, step, lr, amp);
+                    if let Some(s) = &scaler {
+                        s.lock().unwrap_or_else(|e| e.into_inner()).update(out.overflow);
+                    }
                     *model.params_mut() = out.params;
                     (out.loss, out.diverged)
                 },
@@ -1131,8 +1231,20 @@ struct RankStepOut {
     params: Vec<Mat>,
     loss: f32,
     diverged: bool,
+    /// Any rank saw a non-finite scaled gradient this step (OR-reduced;
+    /// always `false` without loss scaling). The step was skipped on
+    /// every rank; the driver feeds this to [`GradScaler::update`] so
+    /// the replicated schedule advances identically everywhere.
+    overflow: bool,
 }
 
+/// One rank's optimization step. `amp` carries the fp16 loss-scaling
+/// context when active: `(current scale, storage policy)`. The scaled
+/// gradients pass through the policy's half-precision round, the
+/// overflow verdict is OR-reduced across ranks *before* any optimizer
+/// state moves, and an overflowed step leaves parameters and state
+/// untouched on every rank — the distributed split of
+/// [`GradScaler::unscale_and_update`].
 fn rank_step<M: Model + ?Sized>(
     comm: &dyn Communicator,
     model: &M,
@@ -1140,6 +1252,7 @@ fn rank_step<M: Model + ?Sized>(
     opt: &Mutex<Box<dyn Optimizer>>,
     step: usize,
     lr: f32,
+    amp: Option<(f32, Policy)>,
 ) -> RankStepOut {
     let world = comm.world_size();
     let rank = comm.rank();
@@ -1268,6 +1381,38 @@ fn rank_step<M: Model + ?Sized>(
         drop(sp);
     }
 
+    // Fp16 loss scaling: scale each reconstructed gradient, pass it
+    // through the half-precision storage round, and OR-reduce the
+    // overflow verdict BEFORE the optimizer step — every rank then
+    // agrees to skip (or keep) the step, so replicated optimizer state
+    // never forks. Reconstruction is bitwise identical on every rank,
+    // so under replication the flags already agree; the exchange is for
+    // factor sharding, where only a layer's owner reconstructs it.
+    if let Some((scale, policy)) = amp {
+        let mut local_overflow = false;
+        for g in grads.iter_mut() {
+            let mut sg = g.scale(scale);
+            policy.quantize_mat(&mut sg);
+            local_overflow |= sg.has_nonfinite();
+            *g = sg;
+        }
+        let flags = comm.exchange_f64(vec![if local_overflow { 1.0 } else { 0.0 }]);
+        if flags.iter().any(|p| p[0] != 0.0) {
+            // Skipped step: unchanged parameters on every rank, no
+            // optimizer state touched, no divergence verdict to reduce.
+            return RankStepOut {
+                params: model.params().clone(),
+                loss,
+                diverged: false,
+                overflow: true,
+            };
+        }
+        let inv = 1.0 / scale;
+        for g in grads.iter_mut() {
+            g.map_inplace(|x| x * inv);
+        }
+    }
+
     // Step this rank's optimizer replica on a scratch parameter copy.
     let mut params: Vec<Mat> = model.params().clone();
     let opt_span = trace::span("precond_update", "compute");
@@ -1298,7 +1443,7 @@ fn rank_step<M: Model + ?Sized>(
     // (fatal for the socket transport, wasteful for the local one).
     let flags = comm.exchange_f64(vec![if diverged { 1.0 } else { 0.0 }]);
     let any_diverged = flags.iter().any(|p| p[0] != 0.0);
-    RankStepOut { params, loss, diverged: any_diverged }
+    RankStepOut { params, loss, diverged: any_diverged, overflow: false }
 }
 
 fn eval_row<M: Model + ?Sized>(
