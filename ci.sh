@@ -45,50 +45,58 @@ DIST_TIMEOUT="${SINGD_CI_DIST_TIMEOUT:-900}"
 echo "== cargo test -q =="
 timeout "$((2 * DIST_TIMEOUT))" cargo test -q
 
-echo "== determinism suites (SINGD_THREADS x SINGD_RANKS x SINGD_TRANSPORT x SINGD_ALGO x SINGD_OVERLAP matrix) =="
+echo "== determinism suites (SINGD_THREADS x SINGD_RANKS x SINGD_TRANSPORT x SINGD_ALGO x SINGD_OVERLAP x SINGD_STREAM matrix) =="
 # The bitwise contracts must hold at every pool size, world size,
-# transport, collective algorithm and overlap mode: serial vs pooled
-# kernels (tests/parallel.rs) and serial vs distributed training
-# (tests/dist.rs, which also exercises the SINGD_RANKS / SINGD_TRANSPORT
-# / SINGD_ALGO / SINGD_OVERLAP env defaults — DistCfg::local follows
-# SINGD_ALGO and SINGD_OVERLAP, so the whole dist suite trains through
-# both schedules and both overlap modes). Every dist leg runs under a
-# hard timeout so a hung rendezvous fails fast instead of stalling the
-# suite. The full 2×2×2 transport × algo × overlap cube at ranks=4 would
-# be 8 cells per pool size; redundant cells are pruned while keeping
-# every axis pair covered somewhere: ring (whose pipelined schedule is
-# what overlap changes most) runs both overlap modes on both
-# transports, and star — also overlap-sensitive end-to-end, since the
-# driver's per-layer pending gathers ride it too — runs overlap=1 on
-# local and overlap=0 on socket. The unpruned shape/stage grid runs
-# in-process inside tests/dist.rs itself.
-run_dist_leg() { # t r transport algo overlap
-    echo "-- SINGD_THREADS=$1 SINGD_RANKS=$2 SINGD_TRANSPORT=$3 SINGD_ALGO=$4 SINGD_OVERLAP=$5: dist suite"
-    SINGD_THREADS=$1 SINGD_RANKS=$2 SINGD_TRANSPORT=$3 SINGD_ALGO=$4 SINGD_OVERLAP=$5 \
+# transport, collective algorithm, overlap mode and streaming mode:
+# serial vs pooled kernels (tests/parallel.rs) and serial vs distributed
+# training (tests/dist.rs, which also exercises the SINGD_RANKS /
+# SINGD_TRANSPORT / SINGD_ALGO / SINGD_OVERLAP / SINGD_STREAM env
+# defaults — DistCfg::local follows SINGD_ALGO, SINGD_OVERLAP and
+# SINGD_STREAM, so the whole dist suite trains through both schedules,
+# both overlap modes and both streaming modes). Every dist leg runs
+# under a hard timeout so a hung rendezvous fails fast instead of
+# stalling the suite. The full transport × algo × overlap × stream cube
+# at ranks=4 would be 16 cells per pool size; redundant cells are
+# pruned while keeping every axis pair covered somewhere: ring (whose
+# pipelined schedule is what overlap changes most) runs both overlap
+# modes on both transports, star — also overlap-sensitive end-to-end,
+# since the driver's per-layer pending gathers ride it too — runs
+# overlap=1 on local and overlap=0 on socket, and the stream values are
+# spread so each transport sees both stream modes under overlap=1
+# (stream is inert under overlap=0 — pinned by the stream_ cells — so
+# those legs' value is arbitrary). The unpruned shape/stage grid runs
+# in-process inside tests/dist.rs itself (stream_ and accum_ cells
+# drive both stream modes and the micro-batch folds explicitly,
+# whatever the env says).
+run_dist_leg() { # t r transport algo overlap stream
+    echo "-- SINGD_THREADS=$1 SINGD_RANKS=$2 SINGD_TRANSPORT=$3 SINGD_ALGO=$4 SINGD_OVERLAP=$5 SINGD_STREAM=$6: dist suite"
+    SINGD_THREADS=$1 SINGD_RANKS=$2 SINGD_TRANSPORT=$3 SINGD_ALGO=$4 SINGD_OVERLAP=$5 SINGD_STREAM=$6 \
         timeout "$DIST_TIMEOUT" cargo test -q --test dist
 }
 for t in 1 4; do
     echo "-- SINGD_THREADS=$t: parallel suite"
     SINGD_THREADS=$t cargo test -q --test parallel
     # ranks=1: the serial-delegation cell (transport/algo/overlap moot).
-    run_dist_leg "$t" 1 local ring 1
+    run_dist_leg "$t" 1 local ring 1 1
 done
 # ranks=4 at the realistic pool size: ring × both transports × both
 # overlap modes; star covers one overlap mode per transport (both modes
-# across the pair).
+# across the pair). Stream: each transport's overlapped ring leg runs
+# stream=0 here (stream=1 cells at t=1 and star-local below).
 for tr in local socket; do
-    run_dist_leg 4 4 "$tr" ring 0
-    run_dist_leg 4 4 "$tr" ring 1
+    run_dist_leg 4 4 "$tr" ring 0 1
+    run_dist_leg 4 4 "$tr" ring 1 0
 done
-run_dist_leg 4 4 local star 1
-run_dist_leg 4 4 socket star 0
+run_dist_leg 4 4 local star 1 1
+run_dist_leg 4 4 socket star 0 0
 # ranks=4 at SINGD_THREADS=1 (scoped-thread rank bodies): the overlap
 # axis interacts with rank scheduling here, so keep ring 0/1 on the
 # local transport plus a socket ring cell (ring is the algorithm the
-# overlap axis actually changes; socket star is covered at t=4).
-run_dist_leg 1 4 local ring 0
-run_dist_leg 1 4 local ring 1
-run_dist_leg 1 4 socket ring 1
+# overlap axis actually changes; socket star is covered at t=4). The
+# overlapped legs run stream=1, completing the per-transport pair.
+run_dist_leg 1 4 local ring 0 1
+run_dist_leg 1 4 local ring 1 1
+run_dist_leg 1 4 socket ring 1 1
 
 echo "== multi-process transport suite (separate OS processes) =="
 # tests/dist_proc.rs drives the singd binary: --transport socket at
@@ -165,6 +173,27 @@ for tr in local socket; do
             echo "missing r$r.jsonl ($tr)"; exit 1; }
     done
 done
+
+echo "== accumulation smoke (--accum-steps digest parity through the binary) =="
+# Power-of-two micro-batch folds must reproduce the unsplit digest bit
+# for bit (rust/src/optim/accum.rs contract) — serial and at ranks=4
+# factor-sharded with streaming on (the default), end to end through
+# the release binary. Reuses the trace leg's job config.
+run_digest() { # train flags...
+    timeout "$DIST_TIMEOUT" env -u SINGD_TRACE -u SINGD_LOG -u SINGD_STREAM \
+        target/release/singd train --config "$trace_tmp/job.toml" "$@" \
+        | awk '{for (i = 1; i < NF; i++) if ($i == "param_digest") print $(i + 1)}'
+}
+base_digest="$(run_digest --ranks 1)"
+test -n "$base_digest" || { echo "no param_digest from serial run"; exit 1; }
+for k in 2 4; do
+    split_digest="$(run_digest --ranks 1 --accum-steps "$k")"
+    [ "$base_digest" = "$split_digest" ] || {
+        echo "accum-steps=$k serial digest mismatch: $base_digest vs $split_digest"; exit 1; }
+done
+dist_digest="$(run_digest --ranks 4 --strategy factor-sharded --accum-steps 2)"
+[ "$base_digest" = "$dist_digest" ] || {
+    echo "accum-steps=2 ranks=4 digest mismatch: $base_digest vs $dist_digest"; exit 1; }
 
 if [ "$mode" != "quick" ]; then
     echo "== hotpath bench (smoke) =="

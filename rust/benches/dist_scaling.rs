@@ -1,11 +1,12 @@
 //! Distributed-scaling bench: step time, per-rank Kronecker-factor
 //! memory, and per-rank bytes-on-wire vs. world size — for both dist
-//! strategies, both collective algorithms (star vs ring) and both
-//! overlap modes (blocking vs nonblocking/chunk-pipelined).
+//! strategies, both collective algorithms (star vs ring), both overlap
+//! modes (blocking vs nonblocking/chunk-pipelined) and both streaming
+//! modes (gathers issued after the backward vs from inside it).
 //!
 //! Same JSON shape as `BENCH_hotpath.json` (a `cases` array of timing
 //! stats) with per-case `ranks` / `strategy` / `algo` / `overlap` /
-//! `per_rank_state_bytes` / `wire_bytes_by_rank` fields, plus a
+//! `stream` / `per_rank_state_bytes` / `wire_bytes_by_rank` fields, plus a
 //! `collectives` array that isolates the bandwidth story: one all-reduce
 //! of a fixed payload, measured through `singd::dist::traffic`. The
 //! memory column is the paper's Table-3 story stretched across ranks;
@@ -15,7 +16,11 @@
 //! story: ring rows appear as a blocking-vs-pipelined series (overlap 0
 //! vs 1 — same bits, the knob only moves wall-clock), and the isolated
 //! `all_reduce` timing rows compare the blocking ring against the
-//! chunk-pipelined ring on a multi-stage payload at world 4.
+//! chunk-pipelined ring on a multi-stage payload at world 4. The stream
+//! axis is the ISSUE-9 story: with streaming on, each layer's stats
+//! gather is issued from inside its backward hook, so the traced-epoch
+//! rows show a strictly larger hidden-comm fraction at ranks=4 ring
+//! (same bits — contract 8 — and same bytes; only issue time moves).
 //!
 //! Run: `cargo bench --bench dist_scaling`
 //! CI:  `cargo bench --bench dist_scaling -- --smoke`
@@ -38,6 +43,10 @@ struct Row {
     strategy: &'static str,
     algo: &'static str,
     overlap: bool,
+    /// Whether per-layer stats gathers were issued from inside the
+    /// backward hooks (ISSUE 9; bitwise-inert by contract 8, so the
+    /// byte columns match the unstreamed row — only wall-clock moves).
+    stream: bool,
     wire: &'static str,
     per_rank_state_bytes: usize,
     wire_bytes_by_rank: Vec<u64>,
@@ -63,6 +72,7 @@ struct CollectiveRow {
 /// measured from the span tracer rather than modeled).
 struct OverlapEffRow {
     overlap: bool,
+    stream: bool,
     by_rank: Vec<RankOverlap>,
 }
 
@@ -101,7 +111,7 @@ fn write_json(rows: &[Row], colls: &[CollectiveRow], effs: &[OverlapEffRow], smo
     for (i, row) in rows.iter().enumerate() {
         let s = &row.stats;
         out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"iters\": {}, \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \"min_ns\": {:.1}, \"max_ns\": {:.1}, \"ranks\": {}, \"strategy\": \"{}\", \"algo\": \"{}\", \"overlap\": {}, \"wire\": \"{}\", \"steps\": {}, \"median_step_ns\": {:.1}, \"per_rank_state_bytes\": {}, \"wire_bytes_by_rank\": {}, \"max_rank_wire_bytes\": {}}}",
+            "    {{\"name\": \"{}\", \"iters\": {}, \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \"min_ns\": {:.1}, \"max_ns\": {:.1}, \"ranks\": {}, \"strategy\": \"{}\", \"algo\": \"{}\", \"overlap\": {}, \"stream\": {}, \"wire\": \"{}\", \"steps\": {}, \"median_step_ns\": {:.1}, \"per_rank_state_bytes\": {}, \"wire_bytes_by_rank\": {}, \"max_rank_wire_bytes\": {}}}",
             json_escape(&s.name),
             s.iters,
             s.median_ns,
@@ -112,6 +122,7 @@ fn write_json(rows: &[Row], colls: &[CollectiveRow], effs: &[OverlapEffRow], smo
             row.strategy,
             row.algo,
             row.overlap,
+            row.stream,
             row.wire,
             row.steps,
             s.median_ns / row.steps.max(1) as f64,
@@ -150,8 +161,9 @@ fn write_json(rows: &[Row], colls: &[CollectiveRow], effs: &[OverlapEffRow], smo
         let hidden: Vec<u64> = e.by_rank.iter().map(|r| r.hidden_us).collect();
         let fracs: Vec<f64> = e.by_rank.iter().map(|r| r.hidden_frac()).collect();
         out.push_str(&format!(
-            "    {{\"name\": \"traced epoch ranks=4 factor-sharded ring\", \"overlap\": {}, \"comm_us_by_rank\": {}, \"hidden_us_by_rank\": {}, \"hidden_frac_by_rank\": {}, \"mean_hidden_frac\": {:.4}}}",
+            "    {{\"name\": \"traced epoch ranks=4 factor-sharded ring\", \"overlap\": {}, \"stream\": {}, \"comm_us_by_rank\": {}, \"hidden_us_by_rank\": {}, \"hidden_frac_by_rank\": {}, \"mean_hidden_frac\": {:.4}}}",
             e.overlap,
+            e.stream,
             json_u64_array(&comm),
             json_u64_array(&hidden),
             json_f64_array(&fracs),
@@ -235,13 +247,20 @@ fn main() {
                 if ranks == 1 && algo == Algo::Star {
                     continue; // no collectives at world 1: one baseline row
                 }
-                // The blocking-vs-pipelined series: ring rows at every
-                // multi-rank world run both overlap modes (same bits by
-                // contract 4 — the axis only moves wall-clock); star and
-                // the world-1 baseline are pinned to the default.
-                let overlaps: &[bool] =
-                    if algo == Algo::Ring && ranks > 1 { &[false, true] } else { &[true] };
-                for &overlap in overlaps {
+                // The blocking-vs-pipelined-vs-streamed series: ring
+                // rows at every multi-rank world run blocking, then
+                // pipelined with post-backward gather issue, then
+                // pipelined with in-backward (streamed) issue — same
+                // bits by contracts 4 and 8; both axes only move
+                // wall-clock. Star and the world-1 baseline are pinned
+                // to the defaults (stream needs overlap, so it is inert
+                // on blocking rows and omitted there).
+                let modes: &[(bool, bool)] = if algo == Algo::Ring && ranks > 1 {
+                    &[(false, false), (true, false), (true, true)]
+                } else {
+                    &[(true, true)]
+                };
+                for &(overlap, stream) in modes {
                     let shapes: Vec<(usize, usize)> =
                         dims.windows(2).map(|w| (w[1], w[0] + 1)).collect();
                     let per_rank_state_bytes = method
@@ -250,6 +269,7 @@ fn main() {
                     let mut dc = DistCfg::local(ranks, strategy);
                     dc.algo = algo;
                     dc.overlap = overlap;
+                    dc.stream = stream;
                     // One traffic-accounted run before timing: per-rank
                     // payload-frame bytes for the whole 8-step epoch.
                     traffic::reset();
@@ -261,10 +281,11 @@ fn main() {
                     }
                     let wire_bytes_by_rank = traffic::sent_by_rank(ranks);
                     let name = format!(
-                        "train step ranks={ranks} {} {} overlap={}",
+                        "train step ranks={ranks} {} {} overlap={} stream={}",
                         strategy.name(),
                         algo.name(),
-                        overlap as u8
+                        overlap as u8,
+                        stream as u8
                     );
                     let st = h.bench(&name, || {
                         let mut mrng = Pcg::new(7);
@@ -285,6 +306,7 @@ fn main() {
                         strategy: strategy.name(),
                         algo: algo.name(),
                         overlap,
+                        stream,
                         wire: dc.wire_dtype.name(),
                         per_rank_state_bytes,
                         wire_bytes_by_rank,
@@ -309,6 +331,7 @@ fn main() {
         let mut dc = DistCfg::local(4, strategy);
         dc.algo = Algo::Ring;
         dc.overlap = true;
+        dc.stream = true;
         dc.wire_dtype = Dtype::Bf16;
         traffic::reset();
         {
@@ -323,6 +346,7 @@ fn main() {
                 && r.strategy == strategy.name()
                 && r.algo == "ring"
                 && r.overlap
+                && r.stream
                 && r.wire == dist::default_wire_dtype().name()
         }) {
             let f32_max = f32_row.wire_bytes_by_rank.iter().max().copied().unwrap_or(0);
@@ -335,7 +359,10 @@ fn main() {
                 f32_max as f64 / bf16_max.max(1) as f64,
             );
         }
-        let name = format!("train step ranks=4 {} ring overlap=1 wire=bf16", strategy.name());
+        let name = format!(
+            "train step ranks=4 {} ring overlap=1 stream=1 wire=bf16",
+            strategy.name()
+        );
         let st = h.bench(&name, || {
             let mut mrng = Pcg::new(7);
             let mut model = Mlp::new(&mut mrng, &dims);
@@ -348,6 +375,7 @@ fn main() {
             strategy: strategy.name(),
             algo: "ring",
             overlap: true,
+            stream: true,
             wire: "bf16",
             per_rank_state_bytes,
             wire_bytes_by_rank,
@@ -402,6 +430,8 @@ fn main() {
             strategy: "collective",
             algo: "ring",
             overlap,
+            // No backward pass in an isolated collective — stream moot.
+            stream: false,
             wire: dist::default_wire_dtype().name(),
             per_rank_state_bytes: 0,
             wire_bytes_by_rank: Vec::new(),
@@ -409,19 +439,25 @@ fn main() {
         });
     }
 
-    // Overlap efficiency from the tracer: one traced epoch per overlap
-    // mode (ring, factor-sharded, world 4) under an in-memory session
-    // (`trace::begin(None, ..)` — spans only, no artifacts), reduced by
-    // `trace::overlap_stats` to the per-rank hidden-comm fraction. This
-    // is the measured counterpart of the blocking-vs-pipelined timing
-    // rows above: the knob's win is compute hiding comm, and the tracer
-    // sees exactly which comm-span microseconds compute covered.
-    let effs: Vec<OverlapEffRow> = [false, true]
+    // Overlap efficiency from the tracer: one traced epoch per
+    // (overlap, stream) mode (ring, factor-sharded, world 4) under an
+    // in-memory session (`trace::begin(None, ..)` — spans only, no
+    // artifacts), reduced by `trace::overlap_stats` to the per-rank
+    // hidden-comm fraction. This is the measured counterpart of the
+    // blocking-vs-pipelined timing rows above: the knob's win is
+    // compute hiding comm, and the tracer sees exactly which comm-span
+    // microseconds compute covered. The streamed row is the ISSUE-9
+    // headline — issuing each layer's gather from inside its backward
+    // hook exposes the rest of the backward as hiding time, so its
+    // hidden-comm fraction must come out strictly above the
+    // post-backward-issue row's.
+    let effs: Vec<OverlapEffRow> = [(false, false), (true, false), (true, true)]
         .iter()
-        .map(|&overlap| {
+        .map(|&(overlap, stream)| {
             let mut dc = DistCfg::local(4, DistStrategy::FactorSharded);
             dc.algo = Algo::Ring;
             dc.overlap = overlap;
+            dc.stream = stream;
             assert!(trace::begin(None, 0), "a trace session is already armed");
             {
                 let mut mrng = Pcg::new(7);
@@ -429,15 +465,30 @@ fn main() {
                 let res = train_dist(&mut model, &ds, &cfg, &dc);
                 assert!(!res.diverged, "traced bench run diverged");
             }
-            let row = OverlapEffRow { overlap, by_rank: trace::overlap_stats(&trace::finish()) };
+            let row = OverlapEffRow {
+                overlap,
+                stream,
+                by_rank: trace::overlap_stats(&trace::finish()),
+            };
             println!(
-                "-- traced epoch ranks=4 ring overlap={}: mean hidden-comm frac {:.1}%",
+                "-- traced epoch ranks=4 ring overlap={} stream={}: mean hidden-comm frac {:.1}%",
                 overlap as u8,
+                stream as u8,
                 100.0 * row.mean_hidden_frac(),
             );
             row
         })
         .collect();
+    if let (Some(off), Some(on)) = (
+        effs.iter().find(|e| e.overlap && !e.stream),
+        effs.iter().find(|e| e.overlap && e.stream),
+    ) {
+        println!(
+            "-- stream-on hides {:.1}% of comm vs {:.1}% stream-off (ranks=4 ring overlap=1)",
+            100.0 * on.mean_hidden_frac(),
+            100.0 * off.mean_hidden_frac(),
+        );
+    }
 
     // The headline memory claim in one line: sharded rank-0 bytes vs
     // replicated, at the largest world size.
@@ -449,6 +500,7 @@ fn main() {
                 && r.strategy == "replicated"
                 && r.algo == "ring"
                 && r.overlap
+                && r.stream
                 && r.wire == default_wire
         })
         .unwrap();
@@ -459,6 +511,7 @@ fn main() {
                 && r.strategy == "factor-sharded"
                 && r.algo == "ring"
                 && r.overlap
+                && r.stream
                 && r.wire == default_wire
         })
         .unwrap();

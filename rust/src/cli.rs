@@ -61,7 +61,8 @@ USAGE:
   singd train   --config <file.toml> [--out <curves.csv>]
                 [--ranks <R>] [--strategy <replicated|factor-sharded>]
                 [--transport <local|socket>] [--algo <star|ring>]
-                [--overlap <0|1>] [--wire-dtype <f32|bf16|fp16>]
+                [--overlap <0|1>] [--stream <0|1>]
+                [--wire-dtype <f32|bf16|fp16>] [--accum-steps <k>]
                 [--ckpt <file.ckpt>] [--ckpt-every <N>]
                 [--resume <file.ckpt>] [--elastic <0|1>]
                 [--trace-dir <dir>] [--log <error|warn|info|debug>]
@@ -83,11 +84,19 @@ are bitwise identical. --overlap 1 (default; SINGD_OVERLAP env
 overrides) hides collective latency behind compute: nonblocking stats
 gathers, a chunk-pipelined ring all-reduce, and bucketed update
 exchanges issued ahead of their waits — bitwise identical to
---overlap 0 by the overlap-invariance contract. Either transport,
-either algo, either overlap mode at ranks=R is bitwise identical to
-ranks=1 for power-of-two R dividing the batch size; non-dividing
-R <= batch still train deterministically via the balanced padding
-rule. --wire-dtype bf16|fp16 (default f32; SINGD_WIRE_DTYPE env
+--overlap 0 by the overlap-invariance contract. --stream 1 (default;
+SINGD_STREAM env overrides; needs --overlap 1) fuses backward with
+comm: each layer's stats gather is issued from inside that layer's
+backward hook, so it rides the wire while earlier layers are still
+computing — bitwise identical to --stream 0 by the stream-invariance
+contract. Either transport, either algo, either overlap mode, either
+stream mode at ranks=R is bitwise identical to ranks=1 for
+power-of-two R dividing the batch size; non-dividing R <= batch still
+train deterministically via the balanced padding rule. --accum-steps k
+(default 1 = off) splits every optimizer step into k contiguous
+micro-batches and folds their Kronecker stats back together — bitwise
+identical to the unsplit step when each micro-batch height is a power
+of two. --wire-dtype bf16|fp16 (default f32; SINGD_WIRE_DTYPE env
 overrides) moves the stats gathers and update all-reduces as 2-byte
 payloads (~half the per-rank wire bytes); runs stay bitwise identical
 across transport x algo x overlap at a fixed wire dtype but a half
@@ -207,6 +216,24 @@ fn cmd_train(args: &Args) -> i32 {
             }
         }
     }
+    if let Some(st) = args.get("stream") {
+        match crate::dist::parse_overlap(st) {
+            Some(s) => cfg.stream = s,
+            None => {
+                crate::obs_error!("error: bad --stream '{st}' (0 | 1 | on | off)");
+                return 2;
+            }
+        }
+    }
+    if let Some(k) = args.get("accum-steps") {
+        match k.parse::<usize>() {
+            Ok(v) => cfg.accum_steps = v.max(1),
+            Err(_) => {
+                crate::obs_error!("error: bad --accum-steps '{k}' (expected a positive integer)");
+                return 2;
+            }
+        }
+    }
     if let Some(w) = args.get("wire-dtype") {
         match crate::numerics::Dtype::parse(w) {
             Some(d) => cfg.wire_dtype = d,
@@ -316,7 +343,8 @@ fn cmd_train(args: &Args) -> i32 {
         return if res.diverged { 1 } else { 0 };
     }
     crate::obs_info!(
-        "training {} / {} with {} ({}), {} epochs, ranks={} ({}, {}, {}, overlap={}, wire={})",
+        "training {} / {} with {} ({}), {} epochs, ranks={} ({}, {}, {}, overlap={}, \
+         stream={}, wire={}, accum={})",
         cfg.label,
         cfg.dataset,
         cfg.method.name(),
@@ -327,7 +355,9 @@ fn cmd_train(args: &Args) -> i32 {
         cfg.transport.name(),
         cfg.algo.name(),
         if cfg.overlap { 1 } else { 0 },
-        cfg.wire_dtype.name()
+        if cfg.stream { 1 } else { 0 },
+        cfg.wire_dtype.name(),
+        cfg.accum_steps
     );
     let res = exp::run_job(&cfg);
     for r in &res.rows {
@@ -491,7 +521,9 @@ mod tests {
         assert_eq!(run(&sv(&["train", "--config", p, "--transport", "pigeon"])), 2);
         assert_eq!(run(&sv(&["train", "--config", p, "--algo", "mesh"])), 2);
         assert_eq!(run(&sv(&["train", "--config", p, "--overlap", "sideways"])), 2);
+        assert_eq!(run(&sv(&["train", "--config", p, "--stream", "sideways"])), 2);
         assert_eq!(run(&sv(&["train", "--config", p, "--wire-dtype", "int4"])), 2);
+        assert_eq!(run(&sv(&["train", "--config", p, "--accum-steps", "x"])), 2);
         // batch_size 32 (default) smaller than the world size → clean
         // error, not a driver assert. (Non-dividing ranks <= batch are
         // allowed: they shard via the balanced padding rule.)

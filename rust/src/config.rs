@@ -31,6 +31,7 @@
 //! ckpt = "run.ckpt"            # periodic checkpoint path (atomic writes + .prev)
 //! ckpt_every = 50              # checkpoint cadence in steps (0 = never)
 //! resume = "run.ckpt"          # resume bitwise from a checkpoint
+//! accum_steps = 4              # gradient-accumulation micro-batches (1 = off)
 //!
 //! [dist]
 //! ranks = 4                    # default: SINGD_RANKS env, else 1
@@ -38,6 +39,9 @@
 //! transport = "socket"         # local | socket (default: SINGD_TRANSPORT env, else local)
 //! algo = "ring"                # star | ring (default: SINGD_ALGO env, else ring)
 //! overlap = true               # comm/compute overlap (default: SINGD_OVERLAP env, else on)
+//! stream = true                # layer-streamed backward↔comm fusion: issue each
+//!                              # layer's stats gather from inside its backward hook
+//!                              # (default: SINGD_STREAM env, else on; needs overlap)
 //! wire_dtype = "bf16"          # f32 | bf16 | fp16 collective payload dtype
 //!                              # (default: SINGD_WIRE_DTYPE env, else f32)
 //! elastic = true               # survive worker death / admit joiners (socket only;
@@ -252,6 +256,13 @@ pub struct JobConfig {
     /// overlap-invariance contract; the knob trades progress-engine
     /// overhead for hidden collective latency.
     pub overlap: bool,
+    /// Layer-streamed backward↔comm fusion (`[dist] stream`; defaults to
+    /// the `SINGD_STREAM` env contract, else on). When on (and overlap
+    /// is on), each layer's stats gather is issued from inside that
+    /// layer's backward hook so it overlaps the backward of earlier
+    /// layers. Bitwise-neutral by the stream-invariance contract
+    /// (determinism contract 8).
+    pub stream: bool,
     /// Collective payload dtype (`[dist] wire_dtype`; defaults to the
     /// `SINGD_WIRE_DTYPE` env contract, else exact `f32`). Half wire
     /// dtypes halve the per-rank bytes of the stats gather and update
@@ -267,6 +278,13 @@ pub struct JobConfig {
     /// Checkpoint cadence in optimizer steps (`[train] ckpt_every`;
     /// 0 = never).
     pub ckpt_every: usize,
+    /// Gradient-accumulation micro-batch count (`[train] accum_steps`;
+    /// 0/1 = off). Each optimizer step splits its batch into `k`
+    /// contiguous micro-batches and folds their Kronecker stats back
+    /// together; bitwise identical to the unsplit step when every
+    /// micro-batch height is a power of two (see
+    /// [`crate::optim::accum`]).
+    pub accum_steps: usize,
     /// Elastic fault tolerance (`[dist] elastic` / `--elastic`): socket
     /// transport only, requires `ckpt` + `ckpt_every >= 1` + `ranks >= 2`.
     pub elastic: bool,
@@ -345,6 +363,16 @@ impl JobConfig {
                 .and_then(dist::parse_overlap)
                 .ok_or_else(|| format!("bad dist.overlap value {v:?} (true | false)"))?,
         };
+        // `stream = true|false` (TOML bool) or a string form accepted by
+        // dist::parse_overlap; anything else is rejected, not ignored.
+        let stream = match t.get("dist.stream") {
+            None => dist::default_stream(),
+            Some(Value::Bool(b)) => *b,
+            Some(v) => v
+                .as_str()
+                .and_then(dist::parse_overlap)
+                .ok_or_else(|| format!("bad dist.stream value {v:?} (true | false)"))?,
+        };
         let resume = match t.get("train.resume") {
             None => None,
             Some(v) => Some(
@@ -366,6 +394,15 @@ impl JobConfig {
             Some(v) => v.as_usize().ok_or_else(|| {
                 format!("bad train.ckpt_every value {v:?} (expected a non-negative integer)")
             })?,
+        };
+        let accum_steps = match t.get("train.accum_steps") {
+            None => 1,
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| {
+                    format!("bad train.accum_steps value {v:?} (expected a non-negative integer)")
+                })?
+                .max(1),
         };
         let elastic = match t.get("dist.elastic") {
             None => false,
@@ -436,10 +473,12 @@ impl JobConfig {
             transport,
             algo,
             overlap,
+            stream,
             wire_dtype,
             resume,
             ckpt,
             ckpt_every,
+            accum_steps,
             elastic,
             trace_dir,
             log,
@@ -571,6 +610,35 @@ seed = 7
         assert_eq!(cfg.overlap, dist::default_overlap());
         assert!(JobConfig::from_str_toml("[dist]\noverlap = \"sideways\"\n").is_err());
         assert!(JobConfig::from_str_toml("[dist]\noverlap = 2\n").is_err());
+    }
+
+    #[test]
+    fn dist_section_parses_stream() {
+        let cfg = JobConfig::from_str_toml("[dist]\nstream = false\n").unwrap();
+        assert!(!cfg.stream);
+        let cfg = JobConfig::from_str_toml("[dist]\nstream = true\n").unwrap();
+        assert!(cfg.stream);
+        // String forms ride the shared parser.
+        let cfg = JobConfig::from_str_toml("[dist]\nstream = \"off\"\n").unwrap();
+        assert!(!cfg.stream);
+        // Default follows the SINGD_STREAM env contract (on when unset).
+        let cfg = JobConfig::from_str_toml("[model]\narch = \"mlp\"\n").unwrap();
+        assert_eq!(cfg.stream, dist::default_stream());
+        assert!(JobConfig::from_str_toml("[dist]\nstream = \"sideways\"\n").is_err());
+        assert!(JobConfig::from_str_toml("[dist]\nstream = 2\n").is_err());
+    }
+
+    #[test]
+    fn train_section_parses_accum_steps() {
+        let cfg = JobConfig::from_str_toml("[train]\naccum_steps = 4\n").unwrap();
+        assert_eq!(cfg.accum_steps, 4);
+        // 0 is clamped to 1 (off), the default is 1, wrong types rejected.
+        let cfg = JobConfig::from_str_toml("[train]\naccum_steps = 0\n").unwrap();
+        assert_eq!(cfg.accum_steps, 1);
+        let cfg = JobConfig::from_str_toml("[model]\narch = \"mlp\"\n").unwrap();
+        assert_eq!(cfg.accum_steps, 1);
+        assert!(JobConfig::from_str_toml("[train]\naccum_steps = \"four\"\n").is_err());
+        assert!(JobConfig::from_str_toml("[train]\naccum_steps = -2\n").is_err());
     }
 
     #[test]

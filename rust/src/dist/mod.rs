@@ -108,20 +108,21 @@
 //! broadcasts stay exact ([`Communicator::exchange_mats`]) regardless of
 //! the knob.
 //!
-//! # The `SINGD_RANKS` / `SINGD_TRANSPORT` / `SINGD_ALGO` / `SINGD_OVERLAP` / `SINGD_WIRE_DTYPE` contract
+//! # The `SINGD_RANKS` / `SINGD_TRANSPORT` / `SINGD_ALGO` / `SINGD_OVERLAP` / `SINGD_STREAM` / `SINGD_WIRE_DTYPE` contract
 //!
 //! `SINGD_RANKS=<n>` sets the *default* world size,
 //! `SINGD_TRANSPORT=<local|socket>` the *default* transport,
 //! `SINGD_ALGO=<star|ring>` the *default* collective algorithm,
-//! `SINGD_OVERLAP=<0|1>` the *default* overlap mode and
+//! `SINGD_OVERLAP=<0|1>` the *default* overlap mode,
+//! `SINGD_STREAM=<0|1>` the *default* layer-streaming mode and
 //! `SINGD_WIRE_DTYPE=<f32|bf16|fp16>` the *default* wire dtype used by
 //! config-driven entry points ([`crate::config::JobConfig`]); explicit
 //! `[dist]` config keys and `--ranks` / `--transport` / `--algo` /
-//! `--overlap` / `--wire-dtype` CLI flags override them. Read once,
-//! cached. Like the algorithm, the overlap mode and wire dtype are
-//! run-level constants: every rank of a world must be constructed with
-//! the same value (the socket launcher pins them into workers'
-//! environments).
+//! `--overlap` / `--stream` / `--wire-dtype` CLI flags override them.
+//! Read once, cached. Like the algorithm, the overlap mode, streaming
+//! mode and wire dtype are run-level constants: every rank of a world
+//! must be constructed with the same value (the socket launcher pins
+//! them into workers' environments).
 #![deny(missing_docs)]
 
 pub mod bucket;
@@ -287,6 +288,20 @@ pub fn default_overlap() -> bool {
     static CACHED: OnceLock<bool> = OnceLock::new();
     *CACHED.get_or_init(|| {
         std::env::var("SINGD_OVERLAP").ok().and_then(|v| parse_overlap(&v)).unwrap_or(true)
+    })
+}
+
+/// Default layer-streaming mode: `SINGD_STREAM` (read once, cached; same
+/// `0|1|on|off` grammar as [`parse_overlap`]), else `true` — the training
+/// driver issues each layer's statistics gather from inside the backward
+/// pass (see `DistCfg::stream` in [`crate::train`]). Streaming rides the
+/// overlap engine, is a no-op when overlap is off, and is bitwise
+/// identical either way (determinism contract 8). Explicit `[dist]
+/// stream` config keys and `--stream` CLI flags override it.
+pub fn default_stream() -> bool {
+    static CACHED: OnceLock<bool> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::env::var("SINGD_STREAM").ok().and_then(|v| parse_overlap(&v)).unwrap_or(true)
     })
 }
 
@@ -1348,6 +1363,15 @@ mod tests {
             .and_then(|v| parse_overlap(&v))
             .unwrap_or(true);
         assert_eq!(default_overlap(), want);
+    }
+
+    #[test]
+    fn default_stream_follows_env_or_on() {
+        let want = std::env::var("SINGD_STREAM")
+            .ok()
+            .and_then(|v| parse_overlap(&v))
+            .unwrap_or(true);
+        assert_eq!(default_stream(), want);
     }
 
     #[test]

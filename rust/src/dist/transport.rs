@@ -1852,12 +1852,14 @@ pub fn fresh_run_id() -> u64 {
 
 /// Re-exec this binary as worker ranks `1..world` (torchrun-style): same
 /// argv, plus the `SINGD_RANK`/`SINGD_WORLD`/`SINGD_RENDEZVOUS`/
-/// `SINGD_RUN_ID` env contract. `SINGD_ALGO`, `SINGD_OVERLAP` and
-/// `SINGD_WIRE_DTYPE` are pinned to the launcher's resolved collective
-/// algorithm, overlap mode and wire dtype so a programmatically-set
-/// [`crate::train::DistCfg`] reaches workers whose argv/config do not
-/// carry them (every rank of a world must agree on these run-level
-/// constants); `SINGD_TRACE` and `SINGD_LOG` are pinned to the
+/// `SINGD_RUN_ID` env contract. `SINGD_ALGO`, `SINGD_OVERLAP`,
+/// `SINGD_STREAM` and `SINGD_WIRE_DTYPE` are pinned to the launcher's
+/// resolved collective algorithm, overlap mode, streaming mode and wire
+/// dtype so a programmatically-set [`crate::train::DistCfg`] reaches
+/// workers whose argv/config do not carry them (every rank of a world
+/// must agree on these run-level constants — streaming changes the
+/// collective *issue* schedule, so a mixed world would deadlock);
+/// `SINGD_TRACE` and `SINGD_LOG` are pinned to the
 /// launcher's trace directory and log level so observability knobs
 /// propagate to workers the same way (each worker exports its own
 /// `r<N>` trace files into the shared directory). The calling process
@@ -1871,6 +1873,7 @@ pub fn launch_workers(
     run_id: u64,
     algo: Algo,
     overlap: bool,
+    stream: bool,
     wire: Dtype,
 ) -> io::Result<Vec<std::process::Child>> {
     assert!(
@@ -1889,6 +1892,7 @@ pub fn launch_workers(
             .env(ENV_RUN_ID, run_id.to_string())
             .env("SINGD_ALGO", algo.name())
             .env("SINGD_OVERLAP", if overlap { "1" } else { "0" })
+            .env("SINGD_STREAM", if stream { "1" } else { "0" })
             .env("SINGD_WIRE_DTYPE", wire.name())
             .stdout(std::process::Stdio::null());
         for knob in ["SINGD_TRACE", "SINGD_LOG"] {

@@ -78,6 +78,7 @@ pub fn run_job(cfg: &JobConfig) -> RunResult {
         resume: cfg.resume.as_ref().map(std::path::PathBuf::from),
         ckpt: cfg.ckpt.as_ref().map(std::path::PathBuf::from),
         ckpt_every: cfg.ckpt_every,
+        accum_steps: cfg.accum_steps,
         trace_dir: cfg.trace_dir.as_ref().map(std::path::PathBuf::from),
     };
     let dc = DistCfg {
@@ -86,6 +87,7 @@ pub fn run_job(cfg: &JobConfig) -> RunResult {
         transport: cfg.transport,
         algo: cfg.algo,
         overlap: cfg.overlap,
+        stream: cfg.stream,
         wire_dtype: cfg.wire_dtype,
         elastic: cfg.elastic,
     };
@@ -239,10 +241,12 @@ mod tests {
             transport: crate::dist::Transport::Local,
             algo: crate::dist::default_algo(),
             overlap: crate::dist::default_overlap(),
+            stream: crate::dist::default_stream(),
             wire_dtype: crate::numerics::Dtype::F32,
             resume: None,
             ckpt: None,
             ckpt_every: 0,
+            accum_steps: 1,
             elastic: false,
             trace_dir: None,
             log: None,

@@ -11,7 +11,10 @@
 //!   (depthwise convs replaced by pointwise mixing — the structural point
 //!   is the patch-embed + isotropic-conv topology, see DESIGN.md §3).
 
-use super::{relu_bwd, softmax_xent, BackwardResult, Batch, Linear, Model};
+use super::{
+    layer_backward_span, relu_bwd, softmax_xent, BackwardResult, Batch, LayerEvent, LayerHook,
+    Linear, Model,
+};
 use crate::optim::KronStats;
 use crate::proptest::Pcg;
 use crate::tensor::Mat;
@@ -326,7 +329,7 @@ impl Model for Cnn {
         &self.params
     }
 
-    fn forward_backward(&self, batch: &Batch) -> BackwardResult {
+    fn forward_backward_hooked(&self, batch: &Batch, hook: &mut LayerHook<'_>) -> BackwardResult {
         let m = batch.x.rows();
         let (conv_caches, shapes_seen, head_xb, logits) = self.forward_cached(&batch.x);
         let (loss_sum, correct, dz) = super::softmax_xent_sum(&logits, &batch.y);
@@ -336,7 +339,10 @@ impl Model for Cnn {
 
         // Head backward.
         let head_idx = n - 1;
+        let lb = layer_backward_span(head_idx);
         let (g, mut dcur, st) = Linear::backward(&self.params[head_idx], &head_xb, &dz);
+        hook(LayerEvent { layer_id: head_idx, grad: &g, kron_stats: &st });
+        drop(lb);
         grads[head_idx] = g;
         stats[head_idx] = Some(st);
 
@@ -349,10 +355,13 @@ impl Model for Cnn {
                     ci -= 1;
                     let (ref xb, ref z_rows, cache_shape, pi) = conv_caches[ci];
                     debug_assert_eq!(cache_shape.len(), in_shape.len());
+                    let lb = layer_backward_span(pi);
                     let (ho, wo) = out_hw(in_shape, k, s, p);
                     let dy_rows = chw_to_rows(&dcur, m, c_out, ho, wo);
                     let dz_rows = relu_bwd(z_rows, &dy_rows);
                     let (g, dpatch, st) = Linear::backward(&self.params[pi], xb, &dz_rows);
+                    hook(LayerEvent { layer_id: pi, grad: &g, kron_stats: &st });
+                    drop(lb);
                     grads[pi] = g;
                     stats[pi] = Some(st);
                     dcur = col2im(&dpatch, m, in_shape, k, s, p);
@@ -460,6 +469,29 @@ mod tests {
         let mut net = Cnn::convmixer(&mut rng, shape, 4, 6, 2, 3);
         let batch = Batch { x: rng.normal_mat(3, shape.len(), 1.0), y: vec![0, 1, 2] };
         testutil::check_grads(&mut net, &batch, 25, 5e-2);
+    }
+
+    #[test]
+    fn vgg_hook_events_are_final_reverse_ordered_and_bitwise() {
+        let mut rng = Pcg::new(15);
+        let shape = ImgShape { c: 2, h: 8, w: 8 };
+        let net = Cnn::vgg(&mut rng, shape, 4, 3);
+        let batch = Batch { x: rng.normal_mat(3, shape.len(), 1.0), y: vec![0, 1, 2] };
+        // Head first, then the conv stack last-to-first.
+        let n = net.shapes().len();
+        let want: Vec<usize> = (0..n).rev().collect();
+        assert_eq!(testutil::check_hook_events(&net, &batch), want);
+    }
+
+    #[test]
+    fn convmixer_hooked_gradcheck_and_stats() {
+        let mut rng = Pcg::new(16);
+        let shape = ImgShape { c: 2, h: 8, w: 8 };
+        let mut net = Cnn::convmixer(&mut rng, shape, 4, 6, 2, 3);
+        let batch = Batch { x: rng.normal_mat(3, shape.len(), 1.0), y: vec![0, 1, 2] };
+        testutil::check_hook_events(&net, &batch);
+        testutil::check_grads_hooked(&mut net, &batch, 25, 5e-2);
+        testutil::check_stats_consistency_hooked(&net, &batch, 1e-3);
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //! [`crate::data::cora`]. Nodes act as the batch dimension for the
 //! Kronecker statistics.
 
-use super::{relu, relu_bwd, softmax_xent, BackwardResult, Batch, Linear, Model};
+use super::{
+    layer_backward_span, relu, relu_bwd, softmax_xent, BackwardResult, Batch, LayerEvent,
+    LayerHook, Linear, Model,
+};
 use crate::proptest::Pcg;
 use crate::tensor::{matmul, Mat};
 
@@ -47,8 +50,22 @@ impl Gcn {
         (xb1, z1, xb2, z2, agg1)
     }
 
-    /// Full-graph forward/backward with masked loss.
+    /// Full-graph forward/backward with masked loss
+    /// ([`Gcn::forward_backward_graph_hooked`] with a no-op hook).
     pub fn forward_backward_graph(&self, g: &Graph, mask: &[usize]) -> BackwardResult {
+        self.forward_backward_graph_hooked(g, mask, &mut |_| {})
+    }
+
+    /// Full-graph forward/backward with masked loss, delivering each
+    /// layer's completion through `hook` (the graph counterpart of
+    /// [`Model::forward_backward_hooked`]; same bitwise-transparency
+    /// contract).
+    pub fn forward_backward_graph_hooked(
+        &self,
+        g: &Graph,
+        mask: &[usize],
+        hook: &mut LayerHook<'_>,
+    ) -> BackwardResult {
         let (xb1, z1, xb2, z2, _agg1) = self.forward_cached(g);
         // Masked CE: gather masked logits, scatter gradients back.
         let mm = mask.len();
@@ -62,11 +79,17 @@ impl Gcn {
                 *dz2.at_mut(node, c) = dmasked.at(r, c);
             }
         }
+        let lb = layer_backward_span(1);
         let (g2, dagg1, st2) = Linear::backward(&self.params[1], &xb2, &dz2);
+        hook(LayerEvent { layer_id: 1, grad: &g2, kron_stats: &st2 });
+        drop(lb);
         // dH1 = Âᵀ dagg1 (Â symmetric).
         let dh1 = matmul(&g.adj, &dagg1);
         let dz1 = relu_bwd(&z1, &dh1);
+        let lb = layer_backward_span(0);
         let (g1, _dx, st1) = Linear::backward(&self.params[0], &xb1, &dz1);
+        hook(LayerEvent { layer_id: 0, grad: &g1, kron_stats: &st1 });
+        drop(lb);
         BackwardResult {
             loss,
             correct,
@@ -101,9 +124,10 @@ impl Model for Gcn {
 
     /// The generic [`Model`] entry points are not used for graphs (the
     /// graph does not fit the flat [`Batch`] layout); the Fig. 7 driver
-    /// calls [`Gcn::forward_backward_graph`].
-    fn forward_backward(&self, _batch: &Batch) -> BackwardResult {
-        unimplemented!("use forward_backward_graph");
+    /// calls [`Gcn::forward_backward_graph`] /
+    /// [`Gcn::forward_backward_graph_hooked`].
+    fn forward_backward_hooked(&self, _batch: &Batch, _hook: &mut LayerHook<'_>) -> BackwardResult {
+        unimplemented!("use forward_backward_graph_hooked");
     }
 
     fn evaluate(&self, _batch: &Batch) -> (f32, usize) {
@@ -137,6 +161,31 @@ mod tests {
             let fd = (lp - lm) / (2.0 * eps);
             let an = res.grads[l].data()[idx];
             assert!((fd - an).abs() < 3e-2 * (1.0 + fd.abs()), "({l},{idx}): {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn gcn_hook_events_are_final_reverse_ordered_and_bitwise() {
+        let mut rng = Pcg::new(33);
+        let g = toy_graph(&mut rng);
+        let net = Gcn::new(&mut rng, g.x.cols(), 6, 3);
+        let mut order = Vec::new();
+        let mut captured: Vec<Option<(Mat, crate::optim::KronStats)>> = vec![None, None];
+        let hooked = net.forward_backward_graph_hooked(&g, &g.train_mask, &mut |ev| {
+            assert_eq!(ev.grad.shape(), net.shapes[ev.layer_id], "layer {} grad shape", ev.layer_id);
+            assert_eq!(ev.kron_stats.a.rows(), ev.kron_stats.g.rows());
+            order.push(ev.layer_id);
+            captured[ev.layer_id] = Some((ev.grad.clone(), ev.kron_stats.clone()));
+        });
+        assert_eq!(order, vec![1, 0], "head layer backward completes first");
+        let plain = net.forward_backward_graph(&g, &g.train_mask);
+        assert_eq!(plain.loss_sum.to_bits(), hooked.loss_sum.to_bits());
+        for l in 0..2 {
+            let (eg, est) = captured[l].as_ref().unwrap();
+            assert_eq!(eg.data(), hooked.grads[l].data(), "layer {l}: event grad final");
+            assert_eq!(est.a.data(), hooked.stats[l].a.data(), "layer {l}: event A final");
+            assert_eq!(plain.grads[l].data(), hooked.grads[l].data(), "layer {l}: hook-free bitwise");
+            assert_eq!(plain.stats[l].g.data(), hooked.stats[l].g.data(), "layer {l}: G bitwise");
         }
     }
 

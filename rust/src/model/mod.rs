@@ -53,6 +53,37 @@ pub struct BackwardResult {
     pub loss_rows: usize,
 }
 
+/// One layer's backward completion, delivered through
+/// [`Model::forward_backward_hooked`] the moment that layer's
+/// `(grad, stats)` pair exists — while earlier layers are still being
+/// differentiated. The borrows point at the exact matrices that end up
+/// in the [`BackwardResult`], so a consumer that clones them (e.g. the
+/// streaming distributed driver issuing a per-layer gather) sees the
+/// same bits the batched path would.
+pub struct LayerEvent<'a> {
+    /// Index into [`Model::shapes`] / `BackwardResult::grads`.
+    pub layer_id: usize,
+    /// Gradient of the *mean* loss for this layer, `d_out × d_in`.
+    pub grad: &'a Mat,
+    /// This layer's Kronecker statistics (KFAC-expand form).
+    pub kron_stats: &'a KronStats,
+}
+
+/// Per-layer backward callback (see [`LayerEvent`]).
+pub type LayerHook<'h> = dyn FnMut(LayerEvent<'_>) + 'h;
+
+/// A `layer_backward` compute span covering one layer's backward
+/// (gradient + stats production and hook delivery). Nested inside the
+/// driver's `forward_backward` span; a streaming consumer's
+/// `layer_gather_issue` span nests inside this one.
+pub(crate) fn layer_backward_span(layer_id: usize) -> crate::obs::trace::Span {
+    let mut sp = crate::obs::trace::span("layer_backward", "compute");
+    if sp.is_recording() {
+        sp.arg("layer", crate::obs::trace::ArgVal::U(layer_id as u64));
+    }
+    sp
+}
+
 /// Common model interface consumed by [`crate::train::Trainer`].
 ///
 /// `Sync` so the distributed training driver can run its SPMD rank
@@ -67,8 +98,20 @@ pub trait Model: Sync {
 
     fn params(&self) -> &Vec<Mat>;
 
-    /// Forward + backward on a batch.
-    fn forward_backward(&self, batch: &Batch) -> BackwardResult;
+    /// Forward + backward on a batch, invoking `hook` once per trainable
+    /// layer as soon as that layer's gradient and Kronecker statistics
+    /// are final (reverse-topological order; each `layer_id` exactly
+    /// once). The hook is an observation seam: implementations perform
+    /// the identical floating-point operations in the identical order as
+    /// [`Model::forward_backward`], so the returned result is bitwise
+    /// the same whether or not a hook consumes the events.
+    fn forward_backward_hooked(&self, batch: &Batch, hook: &mut LayerHook<'_>) -> BackwardResult;
+
+    /// Forward + backward on a batch ([`Model::forward_backward_hooked`]
+    /// with a no-op hook).
+    fn forward_backward(&self, batch: &Batch) -> BackwardResult {
+        self.forward_backward_hooked(batch, &mut |_| {})
+    }
 
     /// Forward only: mean loss and #correct (eval).
     fn evaluate(&self, batch: &Batch) -> (f32, usize);
@@ -207,7 +250,7 @@ impl Model for Mlp {
         &self.params
     }
 
-    fn forward_backward(&self, batch: &Batch) -> BackwardResult {
+    fn forward_backward_hooked(&self, batch: &Batch, hook: &mut LayerHook<'_>) -> BackwardResult {
         let (pre, cached, logits) = self.forward_cached(&batch.x);
         let (loss_sum, correct, mut dz) = softmax_xent_sum(&logits, &batch.y);
         let loss_rows = batch.y.len();
@@ -215,7 +258,10 @@ impl Model for Mlp {
         let mut grads = vec![Mat::zeros(1, 1); n];
         let mut stats: Vec<Option<KronStats>> = (0..n).map(|_| None).collect();
         for i in (0..n).rev() {
+            let lb = layer_backward_span(i);
             let (g, dx, st) = Linear::backward(&self.params[i], &cached[i], &dz);
+            hook(LayerEvent { layer_id: i, grad: &g, kron_stats: &st });
+            drop(lb);
             grads[i] = g;
             stats[i] = Some(st);
             if i > 0 {
@@ -278,6 +324,97 @@ pub(crate) mod testutil {
             crate::proptest::assert_mat_close(&rebuilt, &res.grads[l], tol, &format!("layer {l}"));
         }
     }
+
+    /// The hook-seam contract, checked for one `(model, batch)` pair:
+    ///
+    /// * exactly one [`LayerEvent`] per trainable layer, each `layer_id`
+    ///   once, shapes matching [`Model::shapes`];
+    /// * every event's `grad`/`kron_stats` bits equal the corresponding
+    ///   entries of the returned [`BackwardResult`] (the event *is* the
+    ///   final value, not a draft);
+    /// * the hooked result is bitwise identical to the hook-free
+    ///   [`Model::forward_backward`] path.
+    ///
+    /// Returns the `layer_id` emission order so callers can pin each
+    /// model's reverse-topological ordering.
+    pub fn check_hook_events<M: Model>(model: &M, batch: &Batch) -> Vec<usize> {
+        let shapes = model.shapes();
+        let mut order = Vec::new();
+        let mut captured: Vec<Option<(Mat, KronStats)>> = (0..shapes.len()).map(|_| None).collect();
+        let hooked = model.forward_backward_hooked(batch, &mut |ev: LayerEvent<'_>| {
+            assert!(ev.layer_id < shapes.len(), "layer_id {} out of range", ev.layer_id);
+            assert!(captured[ev.layer_id].is_none(), "layer {} emitted twice", ev.layer_id);
+            assert_eq!(ev.grad.shape(), shapes[ev.layer_id], "layer {} grad shape", ev.layer_id);
+            assert_eq!(ev.kron_stats.a.cols(), shapes[ev.layer_id].1, "layer {} A cols", ev.layer_id);
+            assert_eq!(ev.kron_stats.g.cols(), shapes[ev.layer_id].0, "layer {} G cols", ev.layer_id);
+            assert_eq!(ev.kron_stats.a.rows(), ev.kron_stats.g.rows(), "layer {} A/G rows", ev.layer_id);
+            order.push(ev.layer_id);
+            captured[ev.layer_id] = Some((ev.grad.clone(), ev.kron_stats.clone()));
+        });
+        assert_eq!(order.len(), shapes.len(), "one event per trainable layer");
+        for (l, cap) in captured.iter().enumerate() {
+            let (g, st) = cap.as_ref().expect("every layer emitted");
+            assert_eq!(g.data(), hooked.grads[l].data(), "layer {l}: event grad == result grad");
+            assert_eq!(st.a.data(), hooked.stats[l].a.data(), "layer {l}: event A == result A");
+            assert_eq!(st.g.data(), hooked.stats[l].g.data(), "layer {l}: event G == result G");
+        }
+        let plain = model.forward_backward(batch);
+        assert_eq!(plain.loss_sum.to_bits(), hooked.loss_sum.to_bits(), "loss_sum bitwise");
+        assert_eq!(plain.loss_rows, hooked.loss_rows);
+        assert_eq!(plain.correct, hooked.correct);
+        for l in 0..shapes.len() {
+            assert_eq!(plain.grads[l].data(), hooked.grads[l].data(), "layer {l}: grads bitwise");
+            assert_eq!(plain.stats[l].a.data(), hooked.stats[l].a.data(), "layer {l}: A bitwise");
+            assert_eq!(plain.stats[l].g.data(), hooked.stats[l].g.data(), "layer {l}: G bitwise");
+        }
+        order
+    }
+
+    /// [`check_grads`] driven through the hook path: the finite-difference
+    /// reference is compared against the *event* gradients, so the seam —
+    /// not just the batched result — is what the check covers.
+    pub fn check_grads_hooked<M: Model>(model: &mut M, batch: &Batch, n_checks: usize, tol: f32) {
+        let n = model.params().len();
+        let mut grads: Vec<Option<Mat>> = (0..n).map(|_| None).collect();
+        model.forward_backward_hooked(batch, &mut |ev: LayerEvent<'_>| {
+            grads[ev.layer_id] = Some(ev.grad.clone());
+        });
+        let grads: Vec<Mat> = grads.into_iter().map(|g| g.expect("layer emitted")).collect();
+        let mut rng = Pcg::new(777);
+        let eps = 1e-2f32;
+        for _ in 0..n_checks {
+            let l = rng.below(n);
+            let idx = rng.below(model.params()[l].len());
+            let orig = model.params()[l].data()[idx];
+            model.params_mut()[l].data_mut()[idx] = orig + eps;
+            let (lp, _) = model.evaluate(batch);
+            model.params_mut()[l].data_mut()[idx] = orig - eps;
+            let (lm, _) = model.evaluate(batch);
+            model.params_mut()[l].data_mut()[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = grads[l].data()[idx];
+            assert!(
+                (fd - an).abs() <= tol * (1.0 + fd.abs().max(an.abs())),
+                "hooked layer {l} idx {idx}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    /// [`check_stats_consistency`] driven through the hook path: each
+    /// event's stats outer product must reproduce that event's gradient.
+    pub fn check_stats_consistency_hooked<M: Model>(model: &M, batch: &Batch, tol: f32) {
+        model.forward_backward_hooked(batch, &mut |ev: LayerEvent<'_>| {
+            let m = ev.kron_stats.a.rows() as f32;
+            let rebuilt =
+                crate::tensor::matmul_at_b(&ev.kron_stats.g, &ev.kron_stats.a).scale(1.0 / m);
+            crate::proptest::assert_mat_close(
+                &rebuilt,
+                ev.grad,
+                tol,
+                &format!("hooked layer {}", ev.layer_id),
+            );
+        });
+    }
 }
 
 #[cfg(test)]
@@ -314,6 +451,24 @@ mod tests {
         let mlp = Mlp::new(&mut rng, &[5, 8, 3]);
         let batch = toy_batch(&mut rng, 9, 5, 3);
         testutil::check_stats_consistency(&mlp, &batch, 1e-4);
+    }
+
+    #[test]
+    fn mlp_hook_events_are_final_reverse_ordered_and_bitwise() {
+        let mut rng = Pcg::new(21);
+        let mlp = Mlp::new(&mut rng, &[5, 7, 6, 4]);
+        let batch = toy_batch(&mut rng, 8, 5, 4);
+        // An MLP differentiates strictly last-to-first.
+        assert_eq!(testutil::check_hook_events(&mlp, &batch), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn mlp_hooked_gradcheck_and_stats() {
+        let mut rng = Pcg::new(22);
+        let mut mlp = Mlp::new(&mut rng, &[5, 7, 4]);
+        let batch = toy_batch(&mut rng, 6, 5, 4);
+        testutil::check_grads_hooked(&mut mlp, &batch, 30, 2e-2);
+        testutil::check_stats_consistency_hooked(&mlp, &batch, 1e-4);
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //! affine so the optimizer interface stays uniform (see DESIGN.md §3).
 
 use super::cnn::ImgShape;
-use super::{relu, relu_bwd, softmax_xent, BackwardResult, Batch, Linear, Model};
+use super::{
+    layer_backward_span, relu, relu_bwd, softmax_xent, BackwardResult, Batch, LayerEvent,
+    LayerHook, Linear, Model,
+};
 use crate::optim::KronStats;
 use crate::proptest::Pcg;
 use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, Mat};
@@ -317,7 +320,7 @@ impl Model for Transformer {
         &self.params
     }
 
-    fn forward_backward(&self, batch: &Batch) -> BackwardResult {
+    fn forward_backward_hooked(&self, batch: &Batch, hook: &mut LayerHook<'_>) -> BackwardResult {
         let cache = self.forward_cached(batch);
         let m = cache.m;
         let s = self.seq_len(batch);
@@ -334,7 +337,10 @@ impl Model for Transformer {
         let mut stats: Vec<Option<KronStats>> = (0..n).map(|_| None).collect();
 
         // Head.
+        let lb = layer_backward_span(self.head_idx);
         let (g, dhead_in, st) = Linear::backward(&self.params[self.head_idx], &cache.head_xb, &dlogits);
+        hook(LayerEvent { layer_id: self.head_idx, grad: &g, kron_stats: &st });
+        drop(lb);
         grads[self.head_idx] = g;
         stats[self.head_idx] = Some(st);
 
@@ -361,18 +367,27 @@ impl Model for Transformer {
             let bc = &cache.blocks[bi];
             // out = after_att + mlp(ln2(after_att))
             let dm2 = dh.clone();
+            let lb = layer_backward_span(blk.w2);
             let (g2, dm1_act, st2) = Linear::backward(&self.params[blk.w2], &bc.m2_xb, &dm2);
+            hook(LayerEvent { layer_id: blk.w2, grad: &g2, kron_stats: &st2 });
+            drop(lb);
             grads[blk.w2] = g2;
             stats[blk.w2] = Some(st2);
             let dm1_pre = relu_bwd(&bc.m1_pre, &dm1_act);
+            let lb = layer_backward_span(blk.w1);
             let (g1, dln2_out, st1) = Linear::backward(&self.params[blk.w1], &bc.m1_xb, &dm1_pre);
+            hook(LayerEvent { layer_id: blk.w1, grad: &g1, kron_stats: &st1 });
+            drop(lb);
             grads[blk.w1] = g1;
             stats[blk.w1] = Some(st1);
             let dafter_att_mlp = layernorm_bwd(&dln2_out, &bc.ln2.1, &bc.ln2.2);
             let dafter_att = dh.add(&dafter_att_mlp);
 
             // after_att = h + proj(att)
+            let lb = layer_backward_span(blk.wo);
             let (go, datt, sto) = Linear::backward(&self.params[blk.wo], &bc.o_xb, &dafter_att);
+            hook(LayerEvent { layer_id: blk.wo, grad: &go, kron_stats: &sto });
+            drop(lb);
             grads[blk.wo] = go;
             stats[blk.wo] = Some(sto);
 
@@ -408,9 +423,18 @@ impl Model for Transformer {
             }
             let _ = &bc.att_out;
 
+            let lb = layer_backward_span(blk.wq);
             let (gq, dln1_q, stq) = Linear::backward(&self.params[blk.wq], &bc.q_xb, &dq);
+            hook(LayerEvent { layer_id: blk.wq, grad: &gq, kron_stats: &stq });
+            drop(lb);
+            let lb = layer_backward_span(blk.wk);
             let (gk, dln1_k, stk) = Linear::backward(&self.params[blk.wk], &bc.k_xb, &dk);
+            hook(LayerEvent { layer_id: blk.wk, grad: &gk, kron_stats: &stk });
+            drop(lb);
+            let lb = layer_backward_span(blk.wv);
             let (gv, dln1_v, stv) = Linear::backward(&self.params[blk.wv], &bc.v_xb, &dv);
+            hook(LayerEvent { layer_id: blk.wv, grad: &gv, kron_stats: &stv });
+            drop(lb);
             grads[blk.wq] = gq;
             stats[blk.wq] = Some(stq);
             grads[blk.wk] = gk;
@@ -423,7 +447,10 @@ impl Model for Transformer {
         }
 
         // Embedding.
+        let lb = layer_backward_span(self.embed_idx);
         let (ge, _demb, ste) = Linear::backward(&self.params[self.embed_idx], &cache.embed_xb, &dh);
+        hook(LayerEvent { layer_id: self.embed_idx, grad: &ge, kron_stats: &ste });
+        drop(lb);
         grads[self.embed_idx] = ge;
         stats[self.embed_idx] = Some(ste);
 
@@ -514,6 +541,39 @@ mod tests {
         let t = vit(&mut rng);
         let batch = Batch { x: rng.normal_mat(2, 2 * 8 * 8, 1.0), y: vec![1, 2] };
         testutil::check_stats_consistency(&t, &batch, 1e-3);
+    }
+
+    #[test]
+    fn vit_hook_events_follow_block_reverse_order() {
+        let mut rng = Pcg::new(28);
+        let t = vit(&mut rng);
+        let batch = Batch { x: rng.normal_mat(2, 2 * 8 * 8, 1.0), y: vec![0, 2] };
+        let order = testutil::check_hook_events(&t, &batch);
+        // Head first, blocks in reverse with per-block order w2, w1, wo,
+        // wq, wk, wv, embedding last. depth=2: layers 1..6 are block 0,
+        // 7..12 block 1, 13 the head, 0 the embedding.
+        assert_eq!(order, vec![13, 12, 11, 10, 7, 8, 9, 6, 5, 4, 1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn causal_lm_hooked_gradcheck_and_stats() {
+        let mut rng = Pcg::new(29);
+        let mut t = Transformer::new(
+            &mut rng,
+            TransformerCfg {
+                embed: Embed::Token { vocab: 7 },
+                dim: 8,
+                depth: 1,
+                mlp_ratio: 2,
+                out: 7,
+                causal_lm: true,
+            },
+        );
+        let x = Mat::from_fn(2, 5, |_, _| rng.below(7) as f32);
+        let batch = Batch { x, y: vec![3, 4] };
+        testutil::check_hook_events(&t, &batch);
+        testutil::check_grads_hooked(&mut t, &batch, 20, 6e-2);
+        testutil::check_stats_consistency_hooked(&t, &batch, 1e-3);
     }
 
     #[test]

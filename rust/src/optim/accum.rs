@@ -1,0 +1,368 @@
+//! Gradient accumulation (`--accum-steps`): fold `k` micro-batches into
+//! the full-batch backward result, bitwise.
+//!
+//! The [`crate::model::Model`] backward makes this exact rather than
+//! approximate. Per-row Kronecker statistics are scale-free — a layer's
+//! `G` rows are `dy · m` with the mean-loss `1/m` undone, so a micro-batch
+//! of any height produces the *same* stat rows the full batch would — and
+//! the canonical contiguous split rule
+//! ([`crate::dist::shard::row_shard_range`]) makes micro-batch stats the
+//! exact row-slices of the full-batch stats. Accumulation is therefore
+//! concatenation (no floating-point reduction at all), the gradient is
+//! rebuilt from the concatenated stats with the distributed driver's own
+//! reconstruction formula `∇W = Gᵀ A / m`, and the f64 loss partials
+//! combine through the same fixed halving tree
+//! ([`crate::dist::collectives::tree_sum_f64`]) the serial loss uses.
+//!
+//! Bitwise caveat (the same carve-out the distributed driver documents):
+//! the per-micro `1/m` softmax scale is an exact exponent shift only when
+//! every micro-batch height is a power of two, so `k` micro-batches of
+//! `B/k` reproduce one batch of `B` bit-for-bit exactly when the
+//! power-of-two heights align (e.g. `B = 32`, `k ∈ {1, 2, 4, 8}`). A
+//! non-dividing `B % k ≠ 0` split stays fully deterministic — the
+//! `row_shard_range` rule fixes every micro height — but forfeits bitwise
+//! equality with the unsplit batch, exactly like a world size that does
+//! not divide the batch.
+
+use crate::dist::shard::row_shard_range;
+use crate::model::{BackwardResult, Batch, Model};
+use crate::optim::KronStats;
+use crate::tensor::{matmul_at_b, Mat};
+
+/// Split a batch into `k` contiguous micro-batches by the canonical
+/// row-shard rule ([`row_shard_range`] — the same split the distributed
+/// driver deals ranks). Empty micro-batches (`rows < k`) are dropped.
+pub fn split_batch(batch: &Batch, k: usize) -> Vec<Batch> {
+    let k = k.max(1);
+    let rows = batch.x.rows();
+    (0..k)
+        .filter_map(|i| {
+            let rg = row_shard_range(rows, k, i);
+            if rg.is_empty() {
+                return None;
+            }
+            let x = Mat::from_fn(rg.len(), batch.x.cols(), |r, c| batch.x.at(rg.start + r, c));
+            Some(Batch { x, y: batch.y[rg].to_vec() })
+        })
+        .collect()
+}
+
+/// One layer's accumulated stat rows (flat row-major buffers, appended
+/// micro-batch by micro-batch — pure concatenation, no arithmetic).
+struct LayerBuf {
+    a: Vec<f32>,
+    a_cols: usize,
+    g: Vec<f32>,
+    g_cols: usize,
+    rows: usize,
+}
+
+/// Folds the backward results of `k` contiguous micro-batches into the
+/// full-batch equivalent (see the module docs for the bitwise contract).
+///
+/// Streaming-friendly: [`BatchAccumulator::push_stats`] accepts one
+/// layer at a time, and [`BatchAccumulator::layer_concat`] can splice a
+/// final micro-batch's just-computed layer stats onto the buffered rows
+/// without mutating — which is what lets the distributed driver issue a
+/// layer's gather from inside the *last* micro-batch's backward hook,
+/// while that micro-batch's earlier layers are still being
+/// differentiated.
+pub struct BatchAccumulator {
+    layers: Vec<LayerBuf>,
+    loss_parts: Vec<f64>,
+    loss_rows: usize,
+    correct: usize,
+}
+
+impl BatchAccumulator {
+    /// An empty accumulator for a model with `n_layers` trainable layers.
+    pub fn new(n_layers: usize) -> Self {
+        BatchAccumulator {
+            layers: (0..n_layers)
+                .map(|_| LayerBuf { a: Vec::new(), a_cols: 0, g: Vec::new(), g_cols: 0, rows: 0 })
+                .collect(),
+            loss_parts: Vec::new(),
+            loss_rows: 0,
+            correct: 0,
+        }
+    }
+
+    /// Number of micro-batches folded so far.
+    pub fn micros(&self) -> usize {
+        self.loss_parts.len()
+    }
+
+    /// Total stat rows accumulated for layer `l`.
+    pub fn layer_rows(&self, l: usize) -> usize {
+        self.layers[l].rows
+    }
+
+    /// Append one layer's micro-batch stats (row concatenation).
+    pub fn push_stats(&mut self, l: usize, st: &KronStats) {
+        let buf = &mut self.layers[l];
+        if buf.rows == 0 {
+            buf.a_cols = st.a.cols();
+            buf.g_cols = st.g.cols();
+        }
+        assert_eq!(buf.a_cols, st.a.cols(), "layer {l}: A col mismatch across micro-batches");
+        assert_eq!(buf.g_cols, st.g.cols(), "layer {l}: G col mismatch across micro-batches");
+        assert_eq!(st.a.rows(), st.g.rows(), "layer {l}: A/G row mismatch");
+        buf.a.extend_from_slice(st.a.data());
+        buf.g.extend_from_slice(st.g.data());
+        buf.rows += st.a.rows();
+    }
+
+    /// Fold one micro-batch's loss bookkeeping (f64 partial, row count,
+    /// correct count) without touching the per-layer stats.
+    pub fn push_loss(&mut self, res: &BackwardResult) {
+        self.loss_parts.push(res.loss_sum);
+        self.loss_rows += res.loss_rows;
+        self.correct += res.correct;
+    }
+
+    /// Fold one micro-batch's full backward result (all layers + loss).
+    pub fn push_result(&mut self, res: &BackwardResult) {
+        for (l, st) in res.stats.iter().enumerate() {
+            self.push_stats(l, st);
+        }
+        self.push_loss(res);
+    }
+
+    /// Layer `l`'s accumulated stats with `tail`'s rows spliced on the
+    /// end, as owned matrices — the buffered micro-batches stay untouched.
+    pub fn layer_concat(&self, l: usize, tail: Option<&KronStats>) -> KronStats {
+        let buf = &self.layers[l];
+        let (tail_a, tail_g, tail_rows, a_cols, g_cols) = match tail {
+            Some(st) => (st.a.data(), st.g.data(), st.a.rows(), st.a.cols(), st.g.cols()),
+            None => (&[][..], &[][..], 0, buf.a_cols, buf.g_cols),
+        };
+        if buf.rows > 0 {
+            assert_eq!(buf.a_cols, a_cols, "layer {l}: A col mismatch at concat");
+            assert_eq!(buf.g_cols, g_cols, "layer {l}: G col mismatch at concat");
+        }
+        let rows = buf.rows + tail_rows;
+        let mut a = Vec::with_capacity(rows * a_cols);
+        a.extend_from_slice(&buf.a);
+        a.extend_from_slice(tail_a);
+        let mut g = Vec::with_capacity(rows * g_cols);
+        g.extend_from_slice(&buf.g);
+        g.extend_from_slice(tail_g);
+        KronStats { a: Mat::from_vec(rows, a_cols, a), g: Mat::from_vec(rows, g_cols, g) }
+    }
+
+    /// The accumulated f64 loss partials combined through the fixed
+    /// halving tree, plus the total loss rows and correct count.
+    pub fn loss(&self) -> (f64, usize, usize) {
+        (crate::dist::collectives::tree_sum_f64(&self.loss_parts), self.loss_rows, self.correct)
+    }
+
+    /// The full-batch-equivalent [`BackwardResult`]: concatenated stats,
+    /// gradients rebuilt as `∇W = Gᵀ A / m` (the distributed driver's
+    /// reconstruction formula), tree-combined loss.
+    pub fn finalize(&self) -> BackwardResult {
+        self.finalize_impl(true)
+    }
+
+    /// [`BatchAccumulator::finalize`] without the gradient matmuls
+    /// (`grads` is left empty) — for the distributed driver, which
+    /// rebuilds gradients from the *gathered* statistics anyway.
+    pub fn finalize_stats(&self) -> BackwardResult {
+        self.finalize_impl(false)
+    }
+
+    fn finalize_impl(&self, with_grads: bool) -> BackwardResult {
+        let stats: Vec<KronStats> =
+            (0..self.layers.len()).map(|l| self.layer_concat(l, None)).collect();
+        let grads: Vec<Mat> = if with_grads {
+            stats
+                .iter()
+                .map(|st| {
+                    let m = st.a.rows().max(1) as f32;
+                    matmul_at_b(&st.g, &st.a).scale(1.0 / m)
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let (loss_sum, loss_rows, correct) = self.loss();
+        BackwardResult {
+            loss: (loss_sum / loss_rows.max(1) as f64) as f32,
+            correct,
+            grads,
+            stats,
+            loss_sum,
+            loss_rows,
+        }
+    }
+}
+
+/// Run `batch` as `k` contiguous micro-batches through the model's
+/// backward and fold them into the full-batch-equivalent result. `k <= 1`
+/// delegates to the plain single-pass backward.
+pub fn forward_backward_accum<M: Model + ?Sized>(
+    model: &M,
+    batch: &Batch,
+    k: usize,
+) -> BackwardResult {
+    if k <= 1 {
+        return model.forward_backward(batch);
+    }
+    let mut acc = BatchAccumulator::new(model.shapes().len());
+    for micro in split_batch(batch, k) {
+        acc.push_result(&model.forward_backward(&micro));
+    }
+    acc.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Mlp;
+    use crate::proptest::{assert_mat_close, Pcg};
+
+    fn toy_batch(rng: &mut Pcg, m: usize, d: usize, c: usize) -> Batch {
+        Batch { x: rng.normal_mat(m, d, 1.0), y: (0..m).map(|i| i % c).collect() }
+    }
+
+    #[test]
+    fn split_batch_covers_rows_in_order() {
+        let mut rng = Pcg::new(71);
+        let b = toy_batch(&mut rng, 10, 3, 4);
+        for k in [1usize, 2, 3, 4, 7, 10, 16] {
+            let micros = split_batch(&b, k);
+            let total: usize = micros.iter().map(|m| m.x.rows()).sum();
+            assert_eq!(total, 10, "k={k}: row coverage");
+            let mut r = 0usize;
+            for m in &micros {
+                assert!(!m.y.is_empty(), "k={k}: empty micro-batches must be dropped");
+                for rr in 0..m.x.rows() {
+                    assert_eq!(m.x.row(rr), b.x.row(r), "k={k}: row {r} order");
+                    assert_eq!(m.y[rr], b.y[r]);
+                    r += 1;
+                }
+            }
+        }
+    }
+
+    /// The headline property: power-of-two micro-batches of a power-of-
+    /// two batch reproduce the unsplit backward bitwise — stats, grads
+    /// and loss — across randomized shapes and micro counts.
+    #[test]
+    fn pow2_micro_batches_match_full_batch_bitwise() {
+        let mut rng = Pcg::new(72);
+        for trial in 0..6 {
+            let dims = vec![
+                2 + rng.below(6),
+                3 + rng.below(8),
+                2 + rng.below(5),
+                2 + rng.below(4),
+            ];
+            let m = [8usize, 16, 32][rng.below(3)];
+            let mlp = Mlp::new(&mut rng, &dims);
+            let batch = toy_batch(&mut rng, m, dims[0], *dims.last().unwrap());
+            let full = mlp.forward_backward(&batch);
+            for k in [1usize, 2, 4, 8] {
+                let acc = forward_backward_accum(&mlp, &batch, k);
+                assert_eq!(
+                    acc.loss_sum.to_bits(),
+                    full.loss_sum.to_bits(),
+                    "trial {trial} k={k}: loss_sum"
+                );
+                assert_eq!(acc.loss_rows, full.loss_rows);
+                assert_eq!(acc.correct, full.correct);
+                for l in 0..full.grads.len() {
+                    assert_eq!(
+                        acc.stats[l].a.data(),
+                        full.stats[l].a.data(),
+                        "trial {trial} k={k} layer {l}: A"
+                    );
+                    assert_eq!(
+                        acc.stats[l].g.data(),
+                        full.stats[l].g.data(),
+                        "trial {trial} k={k} layer {l}: G"
+                    );
+                    // Grads go through the reconstruction formula; for
+                    // power-of-two heights the 1/m shifts commute exactly.
+                    assert_eq!(
+                        acc.grads[l].data(),
+                        full.grads[l].data(),
+                        "trial {trial} k={k} layer {l}: grads"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The non-dividing edge (`B % k != 0`): deterministic (two runs are
+    /// bitwise identical) and numerically equivalent to the unsplit
+    /// batch, but not bit-equal — the documented carve-out.
+    #[test]
+    fn non_dividing_split_is_deterministic_and_close() {
+        let mut rng = Pcg::new(73);
+        let dims = [5usize, 7, 4];
+        let mlp = Mlp::new(&mut rng, &dims);
+        let batch = toy_batch(&mut rng, 10, 5, 4);
+        let full = mlp.forward_backward(&batch);
+        for k in [3usize, 4, 7] {
+            let a = forward_backward_accum(&mlp, &batch, k);
+            let b = forward_backward_accum(&mlp, &batch, k);
+            assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits(), "k={k}: deterministic loss");
+            for l in 0..full.grads.len() {
+                assert_eq!(a.grads[l].data(), b.grads[l].data(), "k={k} layer {l}: deterministic");
+                assert_mat_close(&a.grads[l], &full.grads[l], 1e-4, &format!("k={k} layer {l}"));
+                // Stat rows are scale-free, so even the non-dividing split
+                // keeps A exactly (pure row slices of the same inputs).
+                assert_eq!(a.stats[l].a.data(), full.stats[l].a.data(), "k={k} layer {l}: A rows");
+            }
+            assert!((a.loss - full.loss).abs() <= 1e-5 * (1.0 + full.loss.abs()), "k={k}: loss");
+        }
+    }
+
+    /// More micro-batches than rows: the empty shards drop out and the
+    /// result still matches the full batch (each micro is a single row).
+    #[test]
+    fn more_micros_than_rows_degenerates_to_per_row() {
+        let mut rng = Pcg::new(74);
+        let dims = [4usize, 6, 3];
+        let mlp = Mlp::new(&mut rng, &dims);
+        let batch = toy_batch(&mut rng, 4, 4, 3);
+        let full = mlp.forward_backward(&batch);
+        let acc = forward_backward_accum(&mlp, &batch, 4);
+        for l in 0..full.grads.len() {
+            // 4 rows / 4 micros: every micro height is 1 = 2^0, aligned
+            // power-of-two blocks — bitwise holds.
+            assert_eq!(acc.stats[l].g.data(), full.stats[l].g.data(), "layer {l}: G");
+            assert_eq!(acc.grads[l].data(), full.grads[l].data(), "layer {l}: grads");
+        }
+        let over = forward_backward_accum(&mlp, &batch, 9);
+        assert_eq!(over.loss_rows, 4);
+        assert_eq!(over.stats[0].a.rows(), 4);
+    }
+
+    /// Streaming splice: `layer_concat` with the last micro's stats as
+    /// `tail` must equal folding that micro in and concatenating.
+    #[test]
+    fn layer_concat_tail_matches_push_then_concat() {
+        let mut rng = Pcg::new(75);
+        let dims = [4usize, 5, 3];
+        let mlp = Mlp::new(&mut rng, &dims);
+        let batch = toy_batch(&mut rng, 8, 4, 3);
+        let micros = split_batch(&batch, 4);
+        let mut acc = BatchAccumulator::new(2);
+        for m in &micros[..3] {
+            acc.push_result(&mlp.forward_backward(m));
+        }
+        let last = mlp.forward_backward(&micros[3]);
+        for l in 0..2 {
+            let spliced = acc.layer_concat(l, Some(&last.stats[l]));
+            let mut folded = BatchAccumulator::new(2);
+            for m in &micros {
+                folded.push_result(&mlp.forward_backward(m));
+            }
+            let full = folded.layer_concat(l, None);
+            assert_eq!(spliced.a.data(), full.a.data(), "layer {l}: A splice");
+            assert_eq!(spliced.g.data(), full.g.data(), "layer {l}: G splice");
+            assert_eq!(spliced.a.rows(), 8);
+        }
+    }
+}

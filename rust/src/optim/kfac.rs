@@ -71,6 +71,9 @@ pub struct Kfac {
     /// Per-layer factor state; `None` for layers this rank does not own
     /// under [`DistCtx`] (factor-sharded).
     layers: Vec<Option<LayerState>>,
+    /// Per-layer refresh periods ([`Optimizer::set_precond_schedule`]);
+    /// empty → uniform [`Hyper::t_update`]. Indexed by *global* layer id.
+    schedule: Vec<usize>,
     dist: DistCtx,
     diverged: bool,
     /// Count of preconditioner refreshes where Cholesky failed (stability
@@ -100,7 +103,7 @@ impl Kfac {
                 })
             })
             .collect();
-        Kfac { hp: hp.clone(), layers, dist, diverged: false, chol_failures: 0 }
+        Kfac { hp: hp.clone(), layers, schedule: Vec::new(), dist, diverged: false, chol_failures: 0 }
     }
 }
 
@@ -116,17 +119,25 @@ impl Optimizer for Kfac {
         let policy = self.hp.policy;
         let b1 = self.hp.precond_lr;
         let hp = &self.hp;
-        if t % self.hp.t_update == 0 {
+        {
             // Per-layer refresh — the `u_dense`/`g_dense` statistics
             // products plus two inversions — fans out across the pool; the
-            // failure counters are the only shared state.
+            // failure counters are the only shared state. Each layer is
+            // due on its own cadence (the paper's `T`, layer-wise; uniform
+            // `t_update` unless a schedule overrides it), so with the
+            // default schedule this block refreshes all owned layers when
+            // `t % t_update == 0` and none otherwise — bitwise identical
+            // to the former whole-step gate.
             let chol_failures = AtomicUsize::new(0);
             let diverged = AtomicBool::new(false);
+            let schedule = &self.schedule;
             let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
                 .layers
                 .iter_mut()
                 .zip(stats.iter())
-                .filter_map(|(st, stat)| st.as_mut().map(|st| (st, stat)))
+                .enumerate()
+                .filter(|(l, _)| t % schedule.get(*l).copied().unwrap_or(hp.t_update).max(1) == 0)
+                .filter_map(|(_, (st, stat))| st.as_mut().map(|st| (st, stat)))
                 .map(|(st, stat)| {
                     let cf = &chol_failures;
                     let dv = &diverged;
@@ -157,7 +168,9 @@ impl Optimizer for Kfac {
                     }) as Box<dyn FnOnce() + Send + '_>
                 })
                 .collect();
-            pool::run_jobs(jobs);
+            if !jobs.is_empty() {
+                pool::run_jobs(jobs);
+            }
             self.chol_failures += chol_failures.load(Ordering::Relaxed);
             self.diverged |= diverged.load(Ordering::Relaxed);
         }
@@ -195,6 +208,10 @@ impl Optimizer for Kfac {
 
     fn set_lr(&mut self, lr: f32) {
         self.hp.lr = lr;
+    }
+
+    fn set_precond_schedule(&mut self, periods: Vec<usize>) {
+        self.schedule = periods;
     }
 
     fn state_bytes(&self) -> usize {
@@ -358,6 +375,45 @@ mod tests {
         fresh.load_state_vectors(&snap).unwrap();
         assert_eq!(fresh.state_vectors(), snap);
         assert!(fresh.load_state_vectors(&snap[..4]).is_err());
+    }
+
+    /// Per-layer refresh cadence: an explicit uniform schedule is bitwise
+    /// the default gate, and staggered periods freeze the off-cadence
+    /// layer's factors between refreshes.
+    #[test]
+    fn kfac_per_layer_precond_schedule() {
+        let shapes = [(5usize, 4usize), (3, 5)];
+        let hp = Hyper { t_update: 2, ..Hyper::default() };
+        let run = |schedule: Option<Vec<usize>>| -> Vec<Vec<Vec<f32>>> {
+            let mut rng = Pcg::new(64);
+            let mut opt = Kfac::new(&shapes, &hp);
+            if let Some(s) = schedule {
+                opt.set_precond_schedule(s);
+            }
+            let mut params = vec![Mat::zeros(5, 4), Mat::zeros(3, 5)];
+            let mut snaps = Vec::new();
+            for t in 0..6 {
+                let grads = vec![rng.normal_mat(5, 4, 0.1), rng.normal_mat(3, 5, 0.1)];
+                let stats = vec![
+                    KronStats { a: rng.normal_mat(12, 4, 1.0), g: rng.normal_mat(12, 5, 1.0) },
+                    KronStats { a: rng.normal_mat(12, 5, 1.0), g: rng.normal_mat(12, 3, 1.0) },
+                ];
+                opt.step(t, &mut params, &grads, &stats);
+                snaps.push(opt.state_vectors());
+            }
+            snaps
+        };
+        assert_eq!(run(None), run(Some(vec![2, 2])), "uniform schedule must be a no-op");
+        // Blob layout: 5 per layer, S_K first → layer 1's S_K is blob 5.
+        let staggered = run(Some(vec![1, 3]));
+        for t in 1..6 {
+            assert_ne!(staggered[t][0], staggered[t - 1][0], "t={t}: layer 0 refreshes each step");
+            if t % 3 == 0 {
+                assert_ne!(staggered[t][5], staggered[t - 1][5], "t={t}: layer 1 must refresh");
+            } else {
+                assert_eq!(staggered[t][5], staggered[t - 1][5], "t={t}: layer 1 stays frozen");
+            }
+        }
     }
 
     #[test]

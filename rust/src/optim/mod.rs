@@ -23,11 +23,13 @@
 //! persistent worker pool in [`crate::tensor::pool`]; pooled and serial
 //! stepping produce identical trajectories (`rust/tests/parallel.rs`).
 
+pub mod accum;
 mod adamw;
 mod kfac;
 mod sgd;
 mod singd;
 
+pub use accum::BatchAccumulator;
 pub use adamw::AdamW;
 pub use kfac::Kfac;
 pub use sgd::Sgd;
@@ -160,6 +162,18 @@ pub trait Optimizer: Send {
 
     /// Update the parameter learning rate `β₂` (LR schedules).
     fn set_lr(&mut self, lr: f32);
+
+    /// Give each layer its own preconditioner refresh period (the paper's
+    /// `T`, per layer): layer `l` refreshes its factor pair at steps where
+    /// `t % periods[l] == 0`. The second-order methods (KFAC and the
+    /// SINGD family) honour this; first-order baselines have no
+    /// preconditioner and ignore it. An empty vector — and the default
+    /// for layers beyond `periods.len()` — means "use [`Hyper::t_update`]
+    /// uniformly", which is bitwise identical to never calling this.
+    /// Periods are clamped to ≥ 1.
+    fn set_precond_schedule(&mut self, periods: Vec<usize>) {
+        let _ = periods;
+    }
 
     /// True once any state became NaN/Inf (divergence detection for the
     /// stability experiments).

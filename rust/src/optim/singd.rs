@@ -47,6 +47,10 @@ pub struct Singd {
     /// not own under [`DistCtx`] (factor-sharded) — unowned layers cost
     /// no factor memory and are skipped by `step`.
     layers: Vec<Option<LayerState>>,
+    /// Per-layer preconditioner refresh periods
+    /// ([`Optimizer::set_precond_schedule`]); empty → uniform
+    /// [`Hyper::t_update`]. Indexed by *global* layer id.
+    schedule: Vec<usize>,
     dist: DistCtx,
     diverged: bool,
     label: String,
@@ -123,7 +127,17 @@ impl Singd {
                 format!("singd:{}", structure.name())
             }
         });
-        Singd { hp: hp.clone(), structure, adaptive, alpha1, layers, dist, diverged: false, label }
+        Singd {
+            hp: hp.clone(),
+            structure,
+            adaptive,
+            alpha1,
+            layers,
+            schedule: Vec::new(),
+            dist,
+            diverged: false,
+            label,
+        }
     }
 
     /// Access a layer's `K` factor (tests / telemetry). Panics for a
@@ -216,8 +230,8 @@ impl Optimizer for Singd {
         assert_eq!(grads.len(), params.len(), "singd: grads/params mismatch");
         assert_eq!(stats.len(), params.len(), "singd: stats/params mismatch");
         let policy = self.hp.policy;
-        let refresh = t % self.hp.t_update == 0;
         let hp = &self.hp;
+        let schedule = &self.schedule;
         let adaptive = self.adaptive;
         let alpha1 = self.alpha1;
         let diverged = AtomicBool::new(false);
@@ -226,9 +240,14 @@ impl Optimizer for Singd {
             .iter_mut()
             .zip(params.iter_mut())
             .zip(grads.iter().zip(stats.iter()))
-            .filter_map(|((st, p), (g, stat))| st.as_mut().map(|st| (st, p, g, stat)))
-            .map(|(st, p, g, stat)| {
+            .enumerate()
+            .filter_map(|(l, ((st, p), (g, stat)))| st.as_mut().map(|st| (l, st, p, g, stat)))
+            .map(|(l, st, p, g, stat)| {
                 let dv = &diverged;
+                // Per-layer refresh cadence (the paper's `T`, layer-wise):
+                // default uniform `t_update` unless a schedule overrides it.
+                let period = schedule.get(l).copied().unwrap_or(hp.t_update).max(1);
+                let refresh = t % period == 0;
                 Box::new(move || {
                     if refresh {
                         Self::refresh_layer(st, stat, hp, adaptive, alpha1);
@@ -259,6 +278,10 @@ impl Optimizer for Singd {
 
     fn set_lr(&mut self, lr: f32) {
         self.hp.lr = lr;
+    }
+
+    fn set_precond_schedule(&mut self, periods: Vec<usize>) {
+        self.schedule = periods;
     }
 
     fn state_bytes(&self) -> usize {
@@ -515,6 +538,67 @@ mod tests {
         assert!(fresh.load_state_vectors(&bad).is_err());
         assert!(fresh.load_state_vectors(&snap[1..]).is_err());
         assert_eq!(fresh.state_vectors(), snap);
+    }
+
+    /// An explicit uniform schedule must be bitwise identical to the
+    /// default `t_update` gate (the "never called" baseline).
+    #[test]
+    fn uniform_precond_schedule_matches_default_bitwise() {
+        let shapes = [(5usize, 4usize), (3, 5)];
+        let hp = Hyper { t_update: 3, ..Hyper::default() };
+        let run = |schedule: Option<Vec<usize>>| -> Vec<Vec<f32>> {
+            let mut rng = Pcg::new(62);
+            let mut opt = Singd::new(&shapes, &hp, Structure::Dense);
+            if let Some(s) = schedule {
+                opt.set_precond_schedule(s);
+            }
+            let mut params = vec![Mat::zeros(5, 4), Mat::zeros(3, 5)];
+            for t in 0..7 {
+                let grads = vec![rng.normal_mat(5, 4, 0.1), rng.normal_mat(3, 5, 0.1)];
+                let stats = vec![
+                    KronStats { a: rng.normal_mat(8, 4, 1.0), g: rng.normal_mat(8, 5, 1.0) },
+                    KronStats { a: rng.normal_mat(8, 5, 1.0), g: rng.normal_mat(8, 3, 1.0) },
+                ];
+                opt.step(t, &mut params, &grads, &stats);
+            }
+            params.iter().map(|p| p.data().to_vec()).collect()
+        };
+        assert_eq!(run(None), run(Some(vec![3, 3])), "uniform schedule must be a no-op");
+        // A short schedule falls back to t_update for the uncovered tail.
+        assert_eq!(run(None), run(Some(vec![3])), "tail layers default to t_update");
+        assert_ne!(run(None), run(Some(vec![1, 1])), "a different cadence must matter");
+    }
+
+    /// Staggered periods: each layer's factors refresh exactly on its own
+    /// multiples and stay bit-frozen in between.
+    #[test]
+    fn staggered_precond_schedule_refreshes_per_layer() {
+        let shapes = [(5usize, 4usize), (3, 5)];
+        let hp = Hyper { t_update: 1, ..Hyper::default() };
+        let mut rng = Pcg::new(63);
+        let mut opt = Singd::new(&shapes, &hp, Structure::Dense);
+        opt.set_precond_schedule(vec![1, 3]);
+        let mut params = vec![Mat::zeros(5, 4), Mat::zeros(3, 5)];
+        let mut prev_k0 = opt.k_factor(0).coeffs();
+        let mut prev_k1 = opt.k_factor(1).coeffs();
+        for t in 0..7 {
+            let grads = vec![rng.normal_mat(5, 4, 0.1), rng.normal_mat(3, 5, 0.1)];
+            let stats = vec![
+                KronStats { a: rng.normal_mat(8, 4, 1.0), g: rng.normal_mat(8, 5, 1.0) },
+                KronStats { a: rng.normal_mat(8, 5, 1.0), g: rng.normal_mat(8, 3, 1.0) },
+            ];
+            opt.step(t, &mut params, &grads, &stats);
+            let k0 = opt.k_factor(0).coeffs();
+            let k1 = opt.k_factor(1).coeffs();
+            assert_ne!(k0, prev_k0, "t={t}: layer 0 (period 1) must refresh every step");
+            if t % 3 == 0 {
+                assert_ne!(k1, prev_k1, "t={t}: layer 1 (period 3) must refresh");
+            } else {
+                assert_eq!(k1, prev_k1, "t={t}: layer 1 (period 3) must stay bit-frozen");
+            }
+            prev_k0 = k0;
+            prev_k1 = k1;
+        }
     }
 
     #[test]

@@ -156,6 +156,16 @@ pub struct TrainCfg {
     /// Checkpoint cadence in optimizer steps (0 = never). Elastic runs
     /// require `>= 1`: the cadence bounds the work lost to a failure.
     pub ckpt_every: usize,
+    /// Gradient accumulation (`[train] accum_steps` / `--accum-steps`):
+    /// split every batch — each rank's shard, under the distributed
+    /// driver — into this many contiguous micro-batches and fold them
+    /// back into the full-batch backward result before the optimizer
+    /// step ([`crate::optim::accum`]). `0`/`1` disable. Statistics fold
+    /// by exact row concatenation and the f64 loss partials by the fixed
+    /// halving tree, so with power-of-two micro heights `k` micro-batches
+    /// of `B/k` reproduce one batch of `B` bitwise — gradients, stats,
+    /// loss, and the [`GradScaler`] overflow verdict (skip lockstep).
+    pub accum_steps: usize,
     /// Arm a trace session and export per-rank span artifacts
     /// (`r<N>.jsonl` + `r<N>.trace.json`) into this directory
     /// (`[obs] trace_dir` / `--trace-dir` / `SINGD_TRACE`). Tracing is
@@ -179,6 +189,7 @@ impl Default for TrainCfg {
             resume: None,
             ckpt: None,
             ckpt_every: 0,
+            accum_steps: 1,
             trace_dir: None,
         }
     }
@@ -445,7 +456,9 @@ pub fn train_image_model<M: Model + ?Sized>(
     };
     let (rows, best, steps_run, diverged, wall_secs) =
         train_loop(model, dataset, cfg, resume, hook, |model, b, step, lr| {
-            let res = model.forward_backward(b);
+            // `accum_steps <= 1` is a straight delegation to the plain
+            // single-pass backward — zero accumulation overhead.
+            let res = crate::optim::accum::forward_backward_accum(&*model, b, cfg.accum_steps);
             let mut opt = opt.lock().unwrap_or_else(|e| e.into_inner());
             opt.set_lr(lr);
             if let Some(sc) = &scaler {
@@ -494,9 +507,10 @@ pub fn train_image_model<M: Model + ?Sized>(
 }
 
 /// Distributed topology of a training run (the `[dist]` config section /
-/// `--ranks` + `--transport` + `--algo` + `--overlap` + `--wire-dtype`
-/// CLI knobs / `SINGD_RANKS` + `SINGD_TRANSPORT` + `SINGD_ALGO` +
-/// `SINGD_OVERLAP` + `SINGD_WIRE_DTYPE` env defaults).
+/// `--ranks` + `--transport` + `--algo` + `--overlap` + `--stream` +
+/// `--wire-dtype` CLI knobs / `SINGD_RANKS` + `SINGD_TRANSPORT` +
+/// `SINGD_ALGO` + `SINGD_OVERLAP` + `SINGD_STREAM` + `SINGD_WIRE_DTYPE`
+/// env defaults).
 #[derive(Clone, Debug)]
 pub struct DistCfg {
     /// World size; `1` falls back to the serial driver.
@@ -520,6 +534,19 @@ pub struct DistCfg {
     /// overlap at any fixed wire dtype, but a half wire forfeits the
     /// serial-equality contract (see [`crate::dist`] §Wire dtype).
     pub wire_dtype: Dtype,
+    /// Layer-streamed backward↔comm fusion (`[dist] stream` / `--stream`
+    /// / `SINGD_STREAM`, default on): `rank_step` issues layer `l`'s
+    /// statistics gather from *inside* the backward pass, the moment that
+    /// layer's hook event fires — so the transfer overlaps the backward
+    /// of layers `l−1…0` still computing, not just the reconstruction
+    /// loop. Requires `overlap` (it rides the same FIFO engine) and is a
+    /// no-op without it. The hook is a pure observation seam and the
+    /// engine executes ops in the SPMD-consistent issue order, so runs
+    /// are bitwise identical with streaming on or off (determinism
+    /// contract 8, ARCHITECTURE.md; `stream_` cells in
+    /// `rust/tests/dist.rs`). The knob is purely about wall-clock
+    /// (`benches/dist_scaling.rs` measures the hidden-comm fraction).
+    pub stream: bool,
     /// Elastic fault tolerance (`[dist] elastic` / `--elastic`): survive
     /// worker death and admit joiners by re-rendezvousing into a new
     /// membership generation and resharding optimizer state from the
@@ -537,6 +564,7 @@ impl Default for DistCfg {
             algo: dist::default_algo(),
             overlap: dist::default_overlap(),
             wire_dtype: dist::default_wire_dtype(),
+            stream: dist::default_stream(),
             elastic: false,
         }
     }
@@ -544,9 +572,10 @@ impl Default for DistCfg {
 
 impl DistCfg {
     /// An explicit in-process topology (the common test fixture); the
-    /// collective algorithm and overlap mode follow the `SINGD_ALGO` /
-    /// `SINGD_OVERLAP` env defaults so the ci.sh matrix drives the whole
-    /// dist suite through both schedules and both overlap modes.
+    /// collective algorithm, overlap mode and streaming mode follow the
+    /// `SINGD_ALGO` / `SINGD_OVERLAP` / `SINGD_STREAM` env defaults so
+    /// the ci.sh matrix drives the whole dist suite through both
+    /// schedules, both overlap modes and both streaming modes.
     pub fn local(ranks: usize, strategy: DistStrategy) -> DistCfg {
         DistCfg {
             ranks,
@@ -555,6 +584,7 @@ impl DistCfg {
             algo: dist::default_algo(),
             overlap: dist::default_overlap(),
             wire_dtype: dist::default_wire_dtype(),
+            stream: dist::default_stream(),
             elastic: false,
         }
     }
@@ -782,7 +812,17 @@ fn train_dist_local<M: Model + ?Sized>(
                 (s.lock().unwrap_or_else(|e| e.into_inner()).scale(), cfg.hyper.policy)
             });
             let outs = local_world.run(|comm| {
-                rank_step(comm, model_ref, b, &opts[comm.rank()], step, lr, amp)
+                rank_step(
+                    comm,
+                    model_ref,
+                    b,
+                    &opts[comm.rank()],
+                    step,
+                    lr,
+                    amp,
+                    dcfg.stream,
+                    cfg.accum_steps,
+                )
             });
             let first = outs.into_iter().next().unwrap();
             if let Some(s) = &scaler {
@@ -858,7 +898,13 @@ fn train_dist_socket<M: Model + ?Sized>(
             let rendezvous = transport::fresh_rendezvous();
             let run_id = transport::fresh_run_id();
             let workers = transport::launch_workers(
-                world, &rendezvous, run_id, dcfg.algo, dcfg.overlap, dcfg.wire_dtype,
+                world,
+                &rendezvous,
+                run_id,
+                dcfg.algo,
+                dcfg.overlap,
+                dcfg.stream,
+                dcfg.wire_dtype,
             )
             .unwrap_or_else(|e| panic!("train_dist[socket]: launching workers: {e}"));
             (0, rendezvous, run_id, workers)
@@ -918,7 +964,8 @@ fn train_dist_socket<M: Model + ?Sized>(
             let amp = scaler.as_ref().map(|s| {
                 (s.lock().unwrap_or_else(|e| e.into_inner()).scale(), cfg.hyper.policy)
             });
-            let out = rank_step(&comm, &*model, b, &opt, step, lr, amp);
+            let out =
+                rank_step(&comm, &*model, b, &opt, step, lr, amp, dcfg.stream, cfg.accum_steps);
             if let Some(s) = &scaler {
                 s.lock().unwrap_or_else(|e| e.into_inner()).update(out.overflow);
             }
@@ -989,7 +1036,13 @@ fn train_dist_elastic<M: Model + ?Sized>(
             let rendezvous = transport::fresh_rendezvous();
             let run_id = transport::fresh_run_id();
             let workers = transport::launch_workers(
-                init_world, &rendezvous, run_id, dcfg.algo, dcfg.overlap, dcfg.wire_dtype,
+                init_world,
+                &rendezvous,
+                run_id,
+                dcfg.algo,
+                dcfg.overlap,
+                dcfg.stream,
+                dcfg.wire_dtype,
             )
             .unwrap_or_else(|e| panic!("train_dist[elastic]: launching workers: {e}"));
             (0, rendezvous, run_id, workers)
@@ -1128,7 +1181,17 @@ fn train_dist_elastic<M: Model + ?Sized>(
                     let amp = scaler.as_ref().map(|s| {
                         (s.lock().unwrap_or_else(|e| e.into_inner()).scale(), cfg.hyper.policy)
                     });
-                    let out = rank_step(&comm, &*model, b, &opt, step, lr, amp);
+                    let out = rank_step(
+                        &comm,
+                        &*model,
+                        b,
+                        &opt,
+                        step,
+                        lr,
+                        amp,
+                        dcfg.stream,
+                        cfg.accum_steps,
+                    );
                     if let Some(s) = &scaler {
                         s.lock().unwrap_or_else(|e| e.into_inner()).update(out.overflow);
                     }
@@ -1245,6 +1308,21 @@ struct RankStepOut {
 /// state moves, and an overflowed step leaves parameters and state
 /// untouched on every rank — the distributed split of
 /// [`GradScaler::unscale_and_update`].
+///
+/// `stream` ([`DistCfg::stream`]) moves the per-layer statistics gather
+/// *into* the backward pass: the model's layer hook
+/// ([`Model::forward_backward_hooked`]) issues layer `l`'s gather as a
+/// pending op under a `layer_gather_issue` span the moment that layer's
+/// backward completes, so the transfer overlaps the remaining layers'
+/// differentiation. Effective only with `overlap` (it rides the same
+/// FIFO engine); the payload bytes and the SPMD-consistent issue order
+/// are exactly the batched path's, so the step is bitwise identical
+/// with streaming on or off. `accum` ([`TrainCfg::accum_steps`]) runs
+/// this rank's shard as contiguous micro-batches folded through
+/// [`crate::optim::accum`]; when both are active the first `k−1`
+/// micro-batches accumulate locally and the *last* micro-batch streams,
+/// each hook splicing its layer's fresh rows onto the buffered ones so
+/// the gathers still launch from inside the backward.
 fn rank_step<M: Model + ?Sized>(
     comm: &dyn Communicator,
     model: &M,
@@ -1253,6 +1331,8 @@ fn rank_step<M: Model + ?Sized>(
     step: usize,
     lr: f32,
     amp: Option<(f32, Policy)>,
+    stream: bool,
+    accum: usize,
 ) -> RankStepOut {
     let world = comm.world_size();
     let rank = comm.rank();
@@ -1269,11 +1349,9 @@ fn rank_step<M: Model + ?Sized>(
         x: Mat::from_fn(block.len(), batch.x.cols(), |r, c| batch.x.at(block.start + r, c)),
         y: batch.y[block.clone()].to_vec(),
     };
-    let fb_span = trace::span("forward_backward", "compute");
-    let res: BackwardResult = model.forward_backward(&shard);
-    drop(fb_span);
-
-    let n = res.stats.len();
+    let streaming = stream && overlap;
+    let k = accum.max(1);
+    let n = model.shapes().len();
     let owned_mask: Option<Vec<bool>> =
         opt.lock().unwrap_or_else(|e| e.into_inner()).owned_layers().map(|owned| {
             let mut mask = vec![false; n];
@@ -1283,11 +1361,13 @@ fn rank_step<M: Model + ?Sized>(
             mask
         });
 
-    // The statistics gather arrives in one of two SPMD-equivalent forms:
-    // one batched all-gather of every layer's `(A, G)` rows (blocking
-    // path), or one pending per-layer gather (overlap path) — the same
-    // bytes either way, so reconstruction below is identical bit for
-    // bit. The loss exchange is issued first in both forms.
+    // The statistics gather arrives in one of three SPMD-equivalent
+    // forms: one batched all-gather of every layer's `(A, G)` rows
+    // (blocking path), one pending per-layer gather issued after the
+    // backward (overlap path), or one pending per-layer gather issued
+    // from *inside* the backward by the layer hook (streaming path) —
+    // the same bytes in the same SPMD-consistent queue discipline every
+    // way, so reconstruction below is identical bit for bit.
     #[allow(clippy::type_complexity)]
     enum Gathered {
         /// `parts[r]` holds `[a_0, g_0, a_1, g_1, …]` of rank `r`.
@@ -1299,42 +1379,117 @@ fn rank_step<M: Model + ?Sized>(
     // Global loss: tree-combine the shard f64 partials. Contiguous equal
     // shards are complete subtrees of the full-batch halving tree, so
     // this reproduces the serial loss bit for bit.
-    let (loss, mut gathered) = if overlap {
-        // Issue the loss exchange and every layer's statistics gather as
-        // pending ops up front; the engine moves layer l+1's rows while
-        // this thread reconstructs layer l's gradient below — waiting
-        // only at each layer's true data dependency.
-        let loss_op = comm.istart_exchange_f64(vec![res.loss_sum, res.loss_rows as f64]);
-        let gather_ops: Vec<_> = res
-            .stats
-            .iter()
-            .map(|st| Some(comm.istart_all_gather(vec![st.a.clone(), st.g.clone()])))
-            .collect();
+    let (loss, mut gathered) = if streaming {
+        // Streaming: each layer's gather launches from inside the
+        // backward, the moment its hook event fires — reverse layer
+        // order, identically on every rank — so the engine moves layer
+        // l's rows while layers l−1…0 are still differentiating. The
+        // loss exchange rides the same FIFO queue once the backward
+        // returns. No blocking collective may run while these are in
+        // flight (engine exclusivity), so the loss goes pending too.
+        let fb_span = trace::span("forward_backward", "compute");
+        let mut gather_ops: Vec<Option<dist::PendingOp<Vec<Arc<Vec<Mat>>>>>> =
+            (0..n).map(|_| None).collect();
+        let issue = |ops: &mut Vec<Option<dist::PendingOp<Vec<Arc<Vec<Mat>>>>>>,
+                     layer: usize,
+                     a: Mat,
+                     g: Mat| {
+            let mut sp = trace::span("layer_gather_issue", "comm");
+            if sp.is_recording() {
+                sp.arg("layer", ArgVal::U(layer as u64));
+            }
+            ops[layer] = Some(comm.istart_all_gather(vec![a, g]));
+            drop(sp);
+        };
+        let (loss_sum, loss_rows) = if k > 1 {
+            // Accumulating: fold the first k−1 micro-batches locally,
+            // then stream the last one — each hook splices its layer's
+            // fresh rows onto the buffered micro-batches, so the gather
+            // payload is the full accumulated shard.
+            let micros = crate::optim::accum::split_batch(&shard, k);
+            let mut acc = crate::optim::BatchAccumulator::new(n);
+            let (last, head) = micros.split_last().expect("shard has at least one micro-batch");
+            for mb in head {
+                acc.push_result(&model.forward_backward(mb));
+            }
+            let last_res = {
+                let acc_ref = &acc;
+                let ops_ref = &mut gather_ops;
+                model.forward_backward_hooked(last, &mut |ev| {
+                    let full = acc_ref.layer_concat(ev.layer_id, Some(ev.kron_stats));
+                    issue(ops_ref, ev.layer_id, full.a, full.g);
+                })
+            };
+            acc.push_loss(&last_res);
+            let (loss_sum, loss_rows, _) = acc.loss();
+            (loss_sum, loss_rows)
+        } else {
+            let ops_ref = &mut gather_ops;
+            let res = model.forward_backward_hooked(&shard, &mut |ev| {
+                issue(ops_ref, ev.layer_id, ev.kron_stats.a.clone(), ev.kron_stats.g.clone());
+            });
+            (res.loss_sum, res.loss_rows)
+        };
+        drop(fb_span);
+        let loss_op = comm.istart_exchange_f64(vec![loss_sum, loss_rows as f64]);
         let scal = loss_op.wait();
         let sums: Vec<f64> = scal.iter().map(|v| v[0]).collect();
         let total_rows: f64 = scal.iter().map(|v| v[1]).sum();
         let loss = (collectives::tree_sum_f64(&sums) / total_rows.max(1.0)) as f32;
         (loss, Gathered::PerLayer(gather_ops))
     } else {
-        let loss_span = trace::span("loss_exchange", "comm");
-        let scal = comm.exchange_f64(vec![res.loss_sum, res.loss_rows as f64]);
-        drop(loss_span);
-        let sums: Vec<f64> = scal.iter().map(|v| v[0]).collect();
-        let total_rows: f64 = scal.iter().map(|v| v[1]).sum();
-        let loss = (collectives::tree_sum_f64(&sums) / total_rows.max(1.0)) as f32;
-        let mut payload = Vec::with_capacity(2 * n);
-        for st in &res.stats {
-            payload.push(st.a.clone());
-            payload.push(st.g.clone());
+        let fb_span = trace::span("forward_backward", "compute");
+        let res: BackwardResult = if k > 1 {
+            // Fold the shard's micro-batches; gradients are rebuilt from
+            // the *gathered* statistics below, so skip their local
+            // reconstruction.
+            let mut acc = crate::optim::BatchAccumulator::new(n);
+            for mb in crate::optim::accum::split_batch(&shard, k) {
+                acc.push_result(&model.forward_backward(&mb));
+            }
+            acc.finalize_stats()
+        } else {
+            model.forward_backward(&shard)
+        };
+        drop(fb_span);
+        if overlap {
+            // Issue the loss exchange and every layer's statistics gather
+            // as pending ops up front; the engine moves layer l+1's rows
+            // while this thread reconstructs layer l's gradient below —
+            // waiting only at each layer's true data dependency.
+            let loss_op = comm.istart_exchange_f64(vec![res.loss_sum, res.loss_rows as f64]);
+            let gather_ops: Vec<_> = res
+                .stats
+                .iter()
+                .map(|st| Some(comm.istart_all_gather(vec![st.a.clone(), st.g.clone()])))
+                .collect();
+            let scal = loss_op.wait();
+            let sums: Vec<f64> = scal.iter().map(|v| v[0]).collect();
+            let total_rows: f64 = scal.iter().map(|v| v[1]).sum();
+            let loss = (collectives::tree_sum_f64(&sums) / total_rows.max(1.0)) as f32;
+            (loss, Gathered::PerLayer(gather_ops))
+        } else {
+            let loss_span = trace::span("loss_exchange", "comm");
+            let scal = comm.exchange_f64(vec![res.loss_sum, res.loss_rows as f64]);
+            drop(loss_span);
+            let sums: Vec<f64> = scal.iter().map(|v| v[0]).collect();
+            let total_rows: f64 = scal.iter().map(|v| v[1]).sum();
+            let loss = (collectives::tree_sum_f64(&sums) / total_rows.max(1.0)) as f32;
+            let mut payload = Vec::with_capacity(2 * n);
+            for st in &res.stats {
+                payload.push(st.a.clone());
+                payload.push(st.g.clone());
+            }
+            // Route the gather through the algo-dispatched collective:
+            // under the ring it circulates over neighbor links instead of
+            // fanning in at rank 0 — this is the heaviest exchange of the
+            // step. Pure data movement either way, so the reconstruction
+            // below is exact.
+            let gather_span = trace::span("stats_gather", "comm");
+            let parts = collectives::all_gather(comm, payload);
+            drop(gather_span);
+            (loss, Gathered::Batched(parts))
         }
-        // Route the gather through the algo-dispatched collective: under
-        // the ring it circulates over neighbor links instead of fanning
-        // in at rank 0 — this is the heaviest exchange of the step. Pure
-        // data movement either way, so the reconstruction below is exact.
-        let gather_span = trace::span("stats_gather", "comm");
-        let parts = collectives::all_gather(comm, payload);
-        drop(gather_span);
-        (loss, Gathered::Batched(parts))
     };
 
     // Gather full-batch statistics rows (exact concatenation in rank

@@ -42,11 +42,12 @@ fn write_job(name: &str, method: &str) -> PathBuf {
 /// injection or observability setting into the child. SINGD_LOG matters
 /// doubly here: a leaked `error` level would silence the `param_digest`
 /// line these tests parse.
-const CLEARED_ENV: [&str; 11] = [
+const CLEARED_ENV: [&str; 12] = [
     "SINGD_RANKS",
     "SINGD_TRANSPORT",
     "SINGD_ALGO",
     "SINGD_OVERLAP",
+    "SINGD_STREAM",
     "SINGD_RANK",
     "SINGD_WORLD",
     "SINGD_RENDEZVOUS",
@@ -173,6 +174,75 @@ fn overlap_axis_digests_match_across_transports_and_processes() {
             );
             assert_eq!(serial, digest, "{transport}/overlap={overlap}: diverged from serial");
         }
+    }
+    std::fs::remove_file(&cfg).ok();
+}
+
+#[test]
+fn stream_axis_digests_match_across_transports_and_processes() {
+    // The stream-invariance contract (ARCHITECTURE.md contract 8) over
+    // real OS processes: --stream 0 and --stream 1 must produce
+    // identical param digests on both transports — streaming moves each
+    // layer's stats gather *into* the backward pass (issued from the
+    // per-layer hook), which reorders *issue time*, never data or
+    // reduction order. The launcher pins SINGD_STREAM into re-exec'd
+    // workers, so the socket leg also proves the env propagation: a
+    // mixed world would deadlock, not merely diverge. One method under
+    // factor sharding keeps the process count bounded; the full
+    // strategy × algo × R × method grid runs in-process in
+    // rust/tests/dist.rs.
+    let cfg = write_job("stream-axis", "singd:diag");
+    let serial = digest_of(&cfg, &["--ranks", "1"]);
+    for transport in ["local", "socket"] {
+        for stream in ["0", "1"] {
+            let digest = digest_of(
+                &cfg,
+                &[
+                    "--ranks",
+                    "4",
+                    "--strategy",
+                    "factor-sharded",
+                    "--transport",
+                    transport,
+                    "--algo",
+                    "ring",
+                    "--overlap",
+                    "1",
+                    "--stream",
+                    stream,
+                ],
+            );
+            assert_eq!(serial, digest, "{transport}/stream={stream}: diverged from serial");
+        }
+    }
+    std::fs::remove_file(&cfg).ok();
+}
+
+#[test]
+fn accum_steps_digest_matches_unsplit_across_processes() {
+    // Gradient accumulation end to end through the CLI: splitting every
+    // step of a 32-row batch into 2 and 4 power-of-two micro-batches
+    // must reproduce the unsplit digest bit for bit — serial and over a
+    // real 4-process socket world (8-row shards → 4- and 2-row micros).
+    let cfg = write_job("accum", "singd:diag");
+    let serial = digest_of(&cfg, &["--ranks", "1"]);
+    for k in ["2", "4"] {
+        let split = digest_of(&cfg, &["--ranks", "1", "--accum-steps", k]);
+        assert_eq!(serial, split, "serial accum-steps={k}: diverged from unsplit");
+        let socket = digest_of(
+            &cfg,
+            &[
+                "--ranks",
+                "4",
+                "--strategy",
+                "factor-sharded",
+                "--transport",
+                "socket",
+                "--accum-steps",
+                k,
+            ],
+        );
+        assert_eq!(serial, socket, "socket ranks=4 accum-steps={k}: diverged from unsplit");
     }
     std::fs::remove_file(&cfg).ok();
 }
@@ -405,6 +475,93 @@ fn traced_runs_digest_identically_and_export_per_rank_artifacts() {
                 let (_, phases) = parse_journal(&dir.join(format!("r{r}.jsonl")), r);
                 assert_phases_nest(&steps, &phases, &format!("local r{r}"));
             }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    std::fs::remove_file(&cfg).ok();
+}
+
+#[test]
+fn traced_stream_run_issues_gathers_inside_backward_and_only_then() {
+    // The trace-backed overlap regression for streaming (ISSUE 9): in a
+    // pristine single-job process, --stream 1 must record a
+    // `layer_gather_issue` span that *begins before the enclosing
+    // `forward_backward` span ends* — the gather demonstrably launches
+    // while the backward is still running — and --stream 0 must record
+    // none at all (its gathers are issued after the backward returns,
+    // under other span names). The in-process suite cannot pin the
+    // absence half (the trace session is process-global and concurrent
+    // tests stream by default); this child process runs exactly one job,
+    // so the check is exact. tools/check_trace.py enforces the same
+    // nesting rule on any journal it is handed.
+    let cfg = write_job("stream-traced", "singd:diag");
+    for stream in ["0", "1"] {
+        let dir = std::env::temp_dir().join(format!(
+            "singd-proc-trace-stream-{}-{stream}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let dir_s = dir.to_str().unwrap().to_string();
+        let _ = digest_of(
+            &cfg,
+            &[
+                "--ranks",
+                "2",
+                "--transport",
+                "local",
+                "--algo",
+                "ring",
+                "--overlap",
+                "1",
+                "--stream",
+                stream,
+                "--trace-dir",
+                &dir_s,
+            ],
+        );
+        let mut issues = 0usize;
+        for r in 0..2u64 {
+            let journal = dir.join(format!("r{r}.jsonl"));
+            let jsonl = std::fs::read_to_string(&journal)
+                .unwrap_or_else(|e| panic!("{}: {e}", journal.display()));
+            let mut fb: Vec<(u64, u64)> = Vec::new();
+            let mut gi: Vec<(u64, u64)> = Vec::new();
+            for line in jsonl.lines() {
+                let field = |k: &str| -> u64 {
+                    let tail = &line
+                        [line.find(k).unwrap_or_else(|| panic!("no {k} in {line}")) + k.len()..];
+                    let digits: String =
+                        tail.chars().take_while(|c| c.is_ascii_digit()).collect();
+                    digits.parse().unwrap_or_else(|e| panic!("bad {k} in {line}: {e}"))
+                };
+                let interval = || (field("\"ts_us\":"), field("\"ts_us\":") + field("\"dur_us\":"));
+                if line.contains("\"name\":\"forward_backward\"") {
+                    fb.push(interval());
+                } else if line.contains("\"name\":\"layer_gather_issue\"") {
+                    gi.push(interval());
+                }
+            }
+            if stream == "0" {
+                assert!(
+                    gi.is_empty(),
+                    "r{r}: layer_gather_issue spans recorded with --stream 0"
+                );
+            } else {
+                assert!(!fb.is_empty(), "r{r}: no forward_backward spans");
+                for (a, b) in &gi {
+                    assert!(
+                        fb.iter().any(|(fa, fe)| fa <= a && b <= fe),
+                        "r{r}: layer_gather_issue [{a},{b}] does not nest inside any \
+                         forward_backward span {fb:?}"
+                    );
+                }
+                issues += gi.len();
+            }
+        }
+        if stream == "1" {
+            // 2 ranks × 4 layers × ≥4 steps — every layer's gather must
+            // have been issued from inside some backward.
+            assert!(issues >= 8, "too few layer_gather_issue spans: {issues}");
         }
         let _ = std::fs::remove_dir_all(&dir);
     }

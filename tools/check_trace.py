@@ -14,6 +14,13 @@ Checks, per rank `N` found in the directory:
     `pid`, `tid`, `ts`), so chrome://tracing / ui.perfetto.dev accept it.
   * The two files agree on the event count.
 
+Additionally enforces the streaming nesting rule (determinism contract
+8): every `layer_gather_issue` span — the streamed per-layer stats
+gather issued from inside a layer's backward hook — must nest inside a
+`forward_backward` span on the same rank. A violation means a gather
+was issued outside any backward, which breaks the premise of the
+backward↔comm fusion.
+
 Then prints the per-rank overlap-efficiency summary — the fraction of
 `cat == "comm"` span time hidden under `cat == "compute"` spans — the
 Python twin of `trace::overlap_stats` in rust/src/obs/trace.rs.
@@ -97,6 +104,26 @@ def merge(intervals):
     return out
 
 
+def check_stream_nesting(path: Path, events) -> None:
+    """Every layer_gather_issue span must nest inside a forward_backward
+    span (closed intervals: the issue is recorded strictly inside the
+    backward, but the microsecond clock can tie at either edge)."""
+    backward = [
+        (e["ts_us"], e["ts_us"] + e["dur_us"])
+        for e in events
+        if e["ph"] == "X" and e["name"] == "forward_backward"
+    ]
+    for e in events:
+        if e["ph"] != "X" or e["name"] != "layer_gather_issue":
+            continue
+        a, b = e["ts_us"], e["ts_us"] + e["dur_us"]
+        if not any(fa <= a and b <= fb for fa, fb in backward):
+            err(
+                f"{path}: layer_gather_issue [{a},{b}] (layer "
+                f"{e['args'].get('layer', '?')}) nests in no forward_backward span"
+            )
+
+
 def overlap_summary(rank: int, events) -> str:
     compute = merge(
         (e["ts_us"], e["ts_us"] + e["dur_us"])
@@ -144,6 +171,7 @@ def main() -> int:
         else:
             err(f"missing {chrome}")
         if events:
+            check_stream_nesting(journal, events)
             print(overlap_summary(rank, events))
     if errors:
         print(f"check_trace: FAILED ({errors} error(s))", file=sys.stderr)

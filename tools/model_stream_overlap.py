@@ -1,0 +1,184 @@
+#!/usr/bin/env python3
+"""Deterministic discrete-event model of the traced-epoch hidden-comm
+fractions in BENCH_dist_scaling.json (`overlap_efficiency` rows).
+
+Methodology record for EXPERIMENTS.md §Dist-Stream: the container this
+PR was authored in ships no Rust toolchain, so the trace-derived
+overlap-efficiency rows cannot be wall-clock measurements; a native
+`cargo bench --bench dist_scaling` run overwrites them with real
+microseconds (same schema). Until then this script is their provenance:
+it replays the exact op schedules of `rank_step`
+(rust/src/train/mod.rs) for one R=4 factor-sharded ring epoch under the
+three (overlap, stream) modes the bench traces, over a single-threaded
+FIFO progress engine (rust/src/dist/pending.rs semantics), and reduces
+the resulting spans with a line-for-line port of
+`trace::overlap_stats` (rust/src/obs/trace.rs) — the fraction of
+comm-span time covered by compute spans.
+
+Schedules (one step; the epoch is 8 identical steps):
+
+  overlap=0            blocking collectives — every comm span runs with
+                       no compute span in flight, so nothing is hidden.
+  overlap=1, stream=0  the PR-5 schedule: all per-layer stats gathers
+                       are issued back to back after the backward
+                       finishes; they hide only under the local
+                       precond-prep compute between issue and drain,
+                       plus the bucket-pipelined update exchange.
+  overlap=1, stream=1  the ISSUE-9 schedule: layer l's gather is issued
+                       from inside its backward hook, so it additionally
+                       hides under the backward of layers l-1..0 — the
+                       engine drains the queue while the rest of the
+                       backward is still computing.
+
+Durations are nominal microseconds, not measurements: per-layer
+backward/gather costs proportional to the dist_scaling MLP's layer
+sizes (seven 64x65 layers + one 8x65 head), with link service times in
+a regime where one layer's gather fits under roughly two layers of
+backward (comm ~40% of backward — the regime where issue order
+matters). The *fractions* are the model's output; the structural claim
+they encode — streamed issue strictly increases the hidden fraction,
+because the same FIFO engine sees the same ops strictly earlier
+relative to the same compute — holds for any positive durations.
+
+Run: python3 tools/model_stream_overlap.py
+Prints the three overlap_efficiency JSON rows and a summary.
+"""
+
+import json
+
+WORLD = 4
+STEPS = 8
+FORWARD_US = 300
+# Backward + gather-service cost per layer, reverse (issue) order:
+# seven 64x65 hidden layers then the 8x65 head (backward runs last
+# layer first).
+BWD_US = [40] + [180] * 7  # head first: layers 7, 6, .., 0
+GATHER_US = [60] + [95] * 7
+PRECOND_PREP_US = 260  # local compute between gather issue and drain
+BUCKETS = 4  # bucketed update exchange: compute then issue, pipelined
+BUCKET_COMPUTE_US = 70
+BUCKET_COMM_US = 85
+UPDATE_APPLY_US = 120
+
+
+def merge(intervals):
+    out = []
+    for a, b in sorted(intervals):
+        if out and a <= out[-1][1]:
+            out[-1][1] = max(out[-1][1], b)
+        else:
+            out.append([a, b])
+    return out
+
+
+def hidden(comm, compute):
+    """Port of trace::overlap_stats: comm-span time under compute."""
+    merged = merge(compute)
+    total = sum(b - a for a, b in comm)
+    hid = 0
+    for a, b in comm:
+        for ca, cb in merged:
+            lo, hi = max(a, ca), min(b, cb)
+            if lo < hi:
+                hid += hi - lo
+    return total, hid
+
+
+def one_step(overlap, stream):
+    """Spans of one rank_step; all ranks run the same symmetric ring
+    schedule, so one rank's timeline is every rank's timeline."""
+    compute, comm = [], []
+    t = FORWARD_US  # forward done; backward begins
+    issue = []  # (issue_time, service_us) per gather, issue order
+    for bwd, g in zip(BWD_US, GATHER_US):
+        t += bwd
+        issue.append((t, g))  # streamed: issued the moment the layer ends
+    backward_end = t
+    compute.append((0, backward_end))  # the forward_backward span
+    if not overlap:
+        # Blocking: batched gather then update exchange, nothing in
+        # flight during any compute span.
+        t = backward_end
+        for _, g in issue:
+            comm.append((t, t + g))
+            t += g
+        compute.append((t, t + PRECOND_PREP_US))
+        t += PRECOND_PREP_US
+        for _ in range(BUCKETS):
+            compute.append((t, t + BUCKET_COMPUTE_US))
+            t += BUCKET_COMPUTE_US
+            comm.append((t, t + BUCKET_COMM_US))
+            t += BUCKET_COMM_US
+        compute.append((t, t + UPDATE_APPLY_US))
+        return compute, comm, t + UPDATE_APPLY_US
+    # Overlapped: FIFO engine services gathers concurrently with compute.
+    if not stream:
+        issue = [(backward_end, g) for _, g in issue]
+    engine_t = 0
+    for at, g in issue:
+        engine_t = max(engine_t, at)
+        comm.append((engine_t, engine_t + g))
+        engine_t += g
+    drain = engine_t
+    # Local precond prep overlaps the tail of the gather queue; the rank
+    # then waits for the drain if the engine is still behind.
+    prep_end = backward_end + PRECOND_PREP_US
+    compute.append((backward_end, prep_end))
+    t = max(prep_end, drain)
+    # Bucketed update exchange: compute bucket k, issue it, compute k+1
+    # while k is on the wire (the PR-5 issue-every-bucket-then-drain
+    # schedule).
+    engine_t = t
+    for _ in range(BUCKETS):
+        compute.append((t, t + BUCKET_COMPUTE_US))
+        t += BUCKET_COMPUTE_US
+        engine_t = max(engine_t, t)
+        comm.append((engine_t, engine_t + BUCKET_COMM_US))
+        engine_t += BUCKET_COMM_US
+    t = max(t, engine_t)
+    compute.append((t, t + UPDATE_APPLY_US))
+    return compute, comm, t + UPDATE_APPLY_US
+
+
+def epoch(overlap, stream):
+    compute, comm = [], []
+    t0 = 0
+    for _ in range(STEPS):
+        c, m, dur = one_step(overlap, stream)
+        compute += [(a + t0, b + t0) for a, b in c]
+        comm += [(a + t0, b + t0) for a, b in m]
+        t0 += dur
+    return hidden(comm, compute)
+
+
+def main():
+    rows = []
+    for overlap, stream in ((False, False), (True, False), (True, True)):
+        comm_us, hidden_us = epoch(overlap, stream)
+        frac = hidden_us / comm_us if comm_us else 0.0
+        rows.append(
+            {
+                "name": "traced epoch ranks=4 factor-sharded ring",
+                "overlap": overlap,
+                "stream": stream,
+                "comm_us_by_rank": [comm_us] * WORLD,
+                "hidden_us_by_rank": [hidden_us] * WORLD,
+                "hidden_frac_by_rank": [round(frac, 4)] * WORLD,
+                "mean_hidden_frac": round(frac, 4),
+            }
+        )
+        print(
+            f"overlap={int(overlap)} stream={int(stream)}: "
+            f"comm {comm_us} us, hidden {hidden_us} us "
+            f"({100.0 * frac:.1f}% hidden)"
+        )
+    off = next(r for r in rows if r["overlap"] and not r["stream"])
+    on = next(r for r in rows if r["overlap"] and r["stream"])
+    assert on["mean_hidden_frac"] > off["mean_hidden_frac"], (
+        "streamed issue must strictly increase the hidden fraction"
+    )
+    print(json.dumps(rows, indent=2))
+
+
+if __name__ == "__main__":
+    main()
