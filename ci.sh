@@ -104,6 +104,20 @@ echo "== multi-process transport suite (separate OS processes) =="
 # and to serial ranks=1, for SINGD and KFAC, under both strategies.
 timeout "$DIST_TIMEOUT" cargo test -q --test dist_proc
 
+echo "== optimizer-zoo determinism legs (rkfac + mac) =="
+# The zoo_ cells in tests/dist.rs train RK-FAC and MAC through the full
+# strategy x algo x stream grid in-process; here each transport gets one
+# pruned env cell (hard timeout, default ring/overlap/stream) so both
+# new methods ride the same matrix axis as the resident optimizers
+# without doubling the cube. The real-OS-process digest leg
+# (dist_proc socket_ranks4_digest_matches_serial_for_rkfac_and_mac)
+# already ran in the multi-process suite above.
+for tr in local socket; do
+    echo "-- SINGD_RANKS=4 SINGD_TRANSPORT=$tr: zoo cells"
+    SINGD_RANKS=4 SINGD_TRANSPORT=$tr \
+        timeout "$DIST_TIMEOUT" cargo test -q --test dist zoo_
+done
+
 echo "== elastic fault-tolerance / chaos suite =="
 # Checkpoint/resume determinism and elastic regroup, in-process at
 # ranks=4 (tests/dist resume_* and elastic_*) plus the multi-process
@@ -200,6 +214,12 @@ if [ "$mode" != "quick" ]; then
     cargo bench --bench hotpath -- --smoke
     echo "== dist_scaling bench (smoke) =="
     cargo bench --bench dist_scaling -- --smoke
+    echo "== ablations bench (smoke; regenerates BENCH_ablations.json) =="
+    # Unlike hotpath, the smoke leg DOES rewrite BENCH_ablations.json:
+    # the zoo rows' state-bytes ordering (mac < rkfac < kfac) is exact at
+    # any epoch count, and the JSON's "smoke" flag marks the timings as
+    # 1-epoch noise. The full `bench` mode refreshes the real numbers.
+    cargo bench --bench ablations -- --smoke
 fi
 
 if [ "$mode" = "bench" ]; then
@@ -207,6 +227,8 @@ if [ "$mode" = "bench" ]; then
     cargo bench --bench hotpath
     echo "== dist_scaling bench (full) =="
     cargo bench --bench dist_scaling
+    echo "== ablations bench (full) =="
+    cargo bench --bench ablations
 fi
 
 echo "CI OK"

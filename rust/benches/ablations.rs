@@ -6,31 +6,43 @@
 //! 2. **Riemannian momentum** `α₁ ∈ {0, 0.3, 0.6, 0.9}`;
 //! 3. **Preconditioner refresh interval** `T ∈ {1, 5, 20}` — the
 //!    amortization knob of §2.1 (cost ∝ 1/T, quality should degrade
-//!    gracefully).
+//!    gracefully);
+//! 4. **Optimizer zoo** (ISSUE 10) — RK-FAC (sketched Kronecker factors)
+//!    and MAC (rank-1 mean-activation curvature) against the resident
+//!    AdamW / KFAC / SINGD rows: per-step wall time, per-rank state
+//!    bytes and the loss trajectory. The state-bytes ordering
+//!    `mac < rkfac < kfac` is asserted here — it is the memory claim the
+//!    zoo exists to demonstrate.
 //!
 //! (The Appendix-F Kronecker-rescaling invariance is exercised exactly in
 //! `optim::singd::tests::invariance_of_ingd_to_kronecker_rescaling`.)
 //!
+//! Each run dumps machine-readable results to `BENCH_ablations.json` in
+//! the repo root — in `--smoke` mode too (ci.sh regenerates the file on
+//! every full pass so the zoo rows can never go stale; the `smoke` flag
+//! inside the JSON marks rows whose timings are 1-epoch noise).
+//!
 //! Run: `cargo bench --bench ablations`
+//! CI:  `cargo bench --bench ablations -- --smoke`
 
 use singd::config::{Arch, JobConfig};
 use singd::exp::{default_hyper, run_job};
 use singd::optim::Method;
 use singd::structured::Structure;
-use singd::train::Schedule;
+use singd::train::{RunResult, Schedule};
 
-fn base() -> JobConfig {
+fn base(smoke: bool) -> JobConfig {
     let m = Method::Singd { structure: Structure::Diagonal };
     JobConfig {
         arch: Arch::Mlp { hidden: vec![64, 32] },
         dataset: "cifar100".into(),
         classes: 10,
-        n_train: 1000,
-        n_test: 250,
+        n_train: if smoke { 256 } else { 1000 },
+        n_test: if smoke { 64 } else { 250 },
         method: m.clone(),
         hyper: default_hyper(&m, false),
         schedule: Schedule::Cosine { total: 300 },
-        epochs: 10,
+        epochs: if smoke { 1 } else { 10 },
         batch_size: 32,
         seed: 77,
         label: "ablation".into(),
@@ -39,18 +51,87 @@ fn base() -> JobConfig {
         transport: singd::dist::Transport::Local,
         algo: singd::dist::default_algo(),
         overlap: singd::dist::default_overlap(),
+        stream: singd::dist::default_stream(),
         wire_dtype: singd::dist::default_wire_dtype(),
         resume: None,
         ckpt: None,
         ckpt_every: 0,
+        accum_steps: 1,
         elastic: false,
         trace_dir: None,
         log: None,
     }
 }
 
+/// One optimizer-zoo JSON row.
+struct ZooRow {
+    method: String,
+    state_bytes: usize,
+    step_ms: f64,
+    final_err: f32,
+    best_err: f32,
+    diverged: bool,
+    loss_curve: Vec<f32>,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// At most 12 evenly spaced train-loss samples — enough to see the
+/// trajectory shape without dumping every step.
+fn sample_losses(res: &RunResult) -> Vec<f32> {
+    let n = res.rows.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let take = n.min(12);
+    (0..take).map(|i| res.rows[i * (n - 1) / (take - 1).max(1)].train_loss).collect()
+}
+
+fn write_json(zoo: &[ZooRow], csv_rows: &[(String, String, f32, f32, bool, f64)], smoke: bool) {
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"ablations\",\n");
+    out.push_str(&format!("  \"smoke\": {smoke},\n"));
+    out.push_str("  \"zoo\": [\n");
+    for (i, r) in zoo.iter().enumerate() {
+        let curve =
+            r.loss_curve.iter().map(|l| format!("{l:.4}")).collect::<Vec<_>>().join(", ");
+        out.push_str(&format!(
+            "    {{\"method\": \"{}\", \"state_bytes\": {}, \"step_ms\": {:.3}, \
+             \"final_err\": {:.4}, \"best_err\": {:.4}, \"diverged\": {}, \
+             \"loss_curve\": [{curve}]}}{}\n",
+            json_escape(&r.method),
+            r.state_bytes,
+            r.step_ms,
+            r.final_err,
+            r.best_err,
+            r.diverged,
+            if i + 1 < zoo.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"ablations\": [\n");
+    for (i, (group, setting, fin, best, div, wall)) in csv_rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"group\": \"{}\", \"setting\": \"{}\", \"final_err\": {fin:.4}, \
+             \"best_err\": {best:.4}, \"diverged\": {div}, \"wall_s\": {wall:.2}}}{}\n",
+            json_escape(group),
+            json_escape(setting),
+            if i + 1 < csv_rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_ablations.json", &out) {
+        Ok(()) => println!("-- wrote BENCH_ablations.json"),
+        Err(e) => eprintln!("-- failed to write BENCH_ablations.json: {e}"),
+    }
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut csv = String::from("ablation,setting,final_err,best_err,diverged,wall_s\n");
+    let mut rows: Vec<(String, String, f32, f32, bool, f64)> = Vec::new();
     let mut emit = |group: &str, setting: &str, cfg: &JobConfig| {
         let res = run_job(cfg);
         println!(
@@ -63,11 +144,19 @@ fn main() {
             "{group},{setting},{},{},{},{:.2}\n",
             res.final_test_err, res.best_test_err, res.diverged as u8, res.wall_secs
         ));
+        rows.push((
+            group.into(),
+            setting.into(),
+            res.final_test_err,
+            res.best_test_err,
+            res.diverged,
+            res.wall_secs,
+        ));
         (res.best_test_err, res.diverged)
     };
 
     println!("== ablation 1: trace adaptivity (dense structure) ==");
-    let mut cfg = base();
+    let mut cfg = base(smoke);
     cfg.method = Method::Singd { structure: Structure::Dense };
     cfg.hyper = default_hyper(&cfg.method, false);
     let (adaptive_err, _) = emit("adaptivity", "ingd(adaptive)", &cfg);
@@ -78,7 +167,7 @@ fn main() {
 
     println!("== ablation 2: Riemannian momentum α₁ ==");
     for a1 in [0.0f32, 0.3, 0.6, 0.9] {
-        let mut cfg = base();
+        let mut cfg = base(smoke);
         cfg.hyper.riem_momentum = a1;
         emit("riem_momentum", &format!("α₁={a1}"), &cfg);
     }
@@ -87,14 +176,69 @@ fn main() {
     println!("== ablation 3: refresh interval T ==");
     let mut errs_t = Vec::new();
     for t in [1usize, 5, 20] {
-        let mut cfg = base();
+        let mut cfg = base(smoke);
         cfg.hyper.t_update = t;
         let (e, d) = emit("t_update", &format!("T={t}"), &cfg);
         errs_t.push((t, e, d));
     }
-    // Amortization must degrade gracefully: T=20 within 0.1 of T=1.
-    let e1 = errs_t[0].1;
-    let e20 = errs_t[2].1;
-    assert!(e20 < e1 + 0.1, "T=20 should stay close to T=1: {e1} vs {e20}");
+    if !smoke {
+        // Amortization must degrade gracefully: T=20 within 0.1 of T=1.
+        // (Skipped in smoke mode — one epoch is all warm-up noise.)
+        let e1 = errs_t[0].1;
+        let e20 = errs_t[2].1;
+        assert!(e20 < e1 + 0.1, "T=20 should stay close to T=1: {e1} vs {e20}");
+    }
+    println!();
+
+    println!("== ablation 4: optimizer zoo (RK-FAC + MAC vs residents) ==");
+    let mut zoo: Vec<ZooRow> = Vec::new();
+    for method in [
+        Method::AdamW,
+        Method::Kfac,
+        Method::Singd { structure: Structure::Diagonal },
+        Method::RkFac { k: singd::optim::DEFAULT_SKETCH_RANK },
+        Method::Mac,
+    ] {
+        let mut cfg = base(smoke);
+        cfg.method = method.clone();
+        cfg.hyper = default_hyper(&method, false);
+        let res = run_job(&cfg);
+        let step_ms = res.wall_secs * 1e3 / res.steps_run.max(1) as f64;
+        println!(
+            "{:<12} {:>10} B/rank  {step_ms:>8.3} ms/step  final {:.3}{}",
+            method.name(),
+            res.optimizer_bytes,
+            res.final_test_err,
+            if res.diverged { "  DIVERGED" } else { "" }
+        );
+        csv.push_str(&format!(
+            "zoo,{},{},{},{},{:.2}\n",
+            method.name(),
+            res.final_test_err,
+            res.best_test_err,
+            res.diverged as u8,
+            res.wall_secs
+        ));
+        zoo.push(ZooRow {
+            method: method.name(),
+            state_bytes: res.optimizer_bytes,
+            step_ms,
+            final_err: res.final_test_err,
+            best_err: res.best_test_err,
+            diverged: res.diverged,
+            loss_curve: sample_losses(&res),
+        });
+    }
+    // The memory claim the zoo demonstrates (ISSUE 10 acceptance):
+    // rank-1 MAC < rank-k RK-FAC < dense-factor KFAC state bytes.
+    let bytes =
+        |name: &str| zoo.iter().find(|r| r.method == name).map(|r| r.state_bytes).unwrap();
+    let (mac, rkfac, kfac) = (bytes("mac"), bytes("rkfac"), bytes("kfac"));
+    assert!(
+        mac < rkfac && rkfac < kfac,
+        "zoo state-bytes ordering violated: mac {mac} !< rkfac {rkfac} !< kfac {kfac}"
+    );
+
     singd::train::write_csv("ablations.csv", &csv).ok();
+    write_json(&zoo, &rows, smoke);
 }

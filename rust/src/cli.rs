@@ -67,7 +67,7 @@ USAGE:
                 [--resume <file.ckpt>] [--elastic <0|1>]
                 [--trace-dir <dir>] [--log <error|warn|info|debug>]
   singd sweep   --config <file.toml> [--trials <N>] [--seed <S>]
-  singd gcn     [--method <sgd|adamw|kfac|ingd|singd:diag|...>] [--steps <N>]
+  singd gcn     [--method <sgd|adamw|kfac|rkfac[:k]|mac|ingd|singd:diag|...>] [--steps <N>]
   singd inspect [--structure <dense|diag|block:k|tril|rankk:k|hier:k|toeplitz>] [--dim <d>]
   singd help
 

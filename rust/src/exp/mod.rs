@@ -204,6 +204,29 @@ pub fn default_hyper(method: &Method, policy_eps_scale: bool) -> Hyper {
             update_clip: 0.05,
             ..Hyper::default()
         },
+        // Sketched KFAC shares the KFAC-family winners: the Woodbury core
+        // inverts through the same λ, so the same heavy damping applies.
+        Method::RkFac { .. } => Hyper {
+            lr: 0.01,
+            momentum: 0.9,
+            precond_lr: 0.1,
+            damping: 0.1,
+            weight_decay: 1e-2,
+            t_update: 5,
+            update_clip: 0.05,
+            ..Hyper::default()
+        },
+        // MAC behaves first-order in all directions orthogonal to the mean
+        // activation, so it tunes like SGD with a curvature damping knob.
+        Method::Mac => Hyper {
+            lr: 0.05,
+            momentum: 0.9,
+            precond_lr: 0.1,
+            damping: 0.1,
+            weight_decay: 1e-4,
+            t_update: 5,
+            ..Hyper::default()
+        },
     };
     if policy_eps_scale {
         // Half precision cannot resolve damping below the rounding scale.

@@ -38,8 +38,9 @@ struct LayerState {
 /// `(S + λI)⁻¹` with fp32 compute but storage-format rounding of the
 /// result — the paper's "transform into FP32, invert, transform back"
 /// recipe. A free function (with atomic failure telemetry) so per-layer
-/// refreshes can run concurrently on the worker pool.
-fn damped_inverse(
+/// refreshes can run concurrently on the worker pool. Shared with
+/// [`super::RkFac`], whose k×k Woodbury core is the same damped inverse.
+pub(super) fn damped_inverse(
     s: &Mat,
     damping: f32,
     policy: &Policy,

@@ -1,0 +1,311 @@
+//! MAC — mean-activation approximated curvature (after arXiv 2506.08464):
+//! the input-side Kronecker factor `U = AᵀA/m` is collapsed to the rank-1
+//! outer product of the running mean activation `ā ∈ R^{d_i}`, giving a
+//! nearly memory-free preconditioner — `O(d_i)` state per layer, the
+//! smallest of the zoo (`state_bytes_ordering_matches_table3`).
+//!
+//! The damped rank-1 inverse has a closed Sherman–Morrison form; we apply
+//! it scaled by `λ` so the step reduces to plain gradient descent in the
+//! directions orthogonal to `ā` (scale-stable at any damping — a
+//! rank-deficient curvature model must not amplify its own null space):
+//!
+//! ```text
+//! ∇W ← ∇W (I − ā āᵀ / (λ + āᵀā))  =  λ · ∇W (λI + ā āᵀ)⁻¹.
+//! ```
+//!
+//! `ā` refreshes on the [`Hyper::t_update`] cadence (per-layer via
+//! [`Optimizer::set_precond_schedule`]) as an EMA of the gathered batch's
+//! column means with weight `β₁ = precond_lr`. The gathered statistics
+//! are identical on every rank and the column-mean loop accumulates rows
+//! in ascending order, so MAC inherits every determinism contract (1–8)
+//! with no per-method machinery.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use super::{Hyper, KronStats, Optimizer};
+use crate::dist::DistCtx;
+use crate::numerics::QMat;
+use crate::tensor::{matmul, matmul_a_bt, pool, Mat};
+
+/// Per-layer state: the running mean activation `ā` as a `1 × d_i` row
+/// (stored in the policy's storage dtype, like every optimizer buffer).
+struct LayerState {
+    a_bar: QMat,
+}
+
+pub struct Mac {
+    hp: Hyper,
+    /// Per-layer state; `None` for layers this rank does not own under
+    /// [`DistCtx`] (factor-sharded).
+    layers: Vec<Option<LayerState>>,
+    /// Per-layer refresh periods; empty → uniform [`Hyper::t_update`].
+    schedule: Vec<usize>,
+    dist: DistCtx,
+    diverged: bool,
+}
+
+impl Mac {
+    pub fn new(shapes: &[(usize, usize)], hp: &Hyper) -> Self {
+        Self::with_dist(shapes, hp, DistCtx::single())
+    }
+
+    pub fn with_dist(shapes: &[(usize, usize)], hp: &Hyper, dist: DistCtx) -> Self {
+        let store = hp.policy.store;
+        let layers = shapes
+            .iter()
+            .enumerate()
+            .map(|(l, &(_, i))| {
+                dist.owns_layer(l).then(|| LayerState { a_bar: QMat::zeros(store, 1, i) })
+            })
+            .collect();
+        Mac { hp: hp.clone(), layers, schedule: Vec::new(), dist, diverged: false }
+    }
+
+    /// Column means of the gathered activations, rows accumulated in
+    /// ascending order (deterministic for any pool size / rank count).
+    fn column_mean(a: &Mat) -> Mat {
+        let (m, d) = (a.rows(), a.cols());
+        let mut out = Mat::zeros(1, d);
+        for r in 0..m {
+            let row = a.row(r);
+            for (o, &v) in out.data_mut().iter_mut().zip(row.iter()) {
+                *o += v;
+            }
+        }
+        let inv = 1.0 / m.max(1) as f32;
+        for o in out.data_mut() {
+            *o *= inv;
+        }
+        out
+    }
+}
+
+impl Optimizer for Mac {
+    fn name(&self) -> String {
+        "mac".into()
+    }
+
+    fn step(&mut self, t: usize, params: &mut [Mat], grads: &[Mat], stats: &[KronStats]) {
+        assert_eq!(params.len(), self.layers.len(), "mac: params/layers mismatch");
+        assert_eq!(grads.len(), params.len(), "mac: grads/params mismatch");
+        assert_eq!(stats.len(), params.len(), "mac: stats/params mismatch");
+        let policy = self.hp.policy;
+        let hp = &self.hp;
+        let b1 = hp.precond_lr;
+        let schedule = &self.schedule;
+        let diverged = AtomicBool::new(false);
+        // One job per owned layer: refresh (when due) + preconditioned
+        // update. Layers share no state, so pooled and serial stepping
+        // are bitwise identical.
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
+            .layers
+            .iter_mut()
+            .zip(params.iter_mut().zip(grads.iter().zip(stats.iter())))
+            .enumerate()
+            .filter_map(|(l, (st, rest))| st.as_mut().map(|st| (l, st, rest)))
+            .map(|(l, st, (p, (g, stat)))| {
+                let dv = &diverged;
+                Box::new(move || {
+                    if t % schedule.get(l).copied().unwrap_or(hp.t_update).max(1) == 0 {
+                        // ā ← (1−β₁) ā + β₁ · colmean(A), EMA accumulated
+                        // in the storage format like every factor EMA.
+                        let mean = Self::column_mean(&stat.a);
+                        let mut a_bar = st.a_bar.widen();
+                        a_bar.ema(1.0 - b1, b1, &mean);
+                        policy.quantize_mat(&mut a_bar);
+                        st.a_bar = QMat::from_quantized(policy.store, a_bar);
+                    }
+                    // u = ∇W (I − ā āᵀ / (λ + āᵀā)) + γ W (Sherman–
+                    // Morrison, λ-scaled so u → ∇W as ā → 0).
+                    let a_bar = st.a_bar.widen();
+                    let norm2: f32 = a_bar.data().iter().map(|&v| v * v).sum();
+                    let ga = matmul_a_bt(g, &a_bar); // d_o × 1
+                    let corr = matmul(&ga, &a_bar).scale(1.0 / (hp.damping + norm2));
+                    let mut u = g.sub(&corr);
+                    u.axpy(hp.weight_decay, p);
+                    policy.quantize_mat(&mut u);
+                    let f = super::update_clip_factor(hp.lr, &u, hp.update_clip);
+                    p.axpy(-hp.lr * f, &u);
+                    policy.quantize_mat(p);
+                    if p.has_nonfinite() || u.has_nonfinite() {
+                        dv.store(true, Ordering::Relaxed);
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::run_jobs(jobs);
+        self.diverged |= diverged.load(Ordering::Relaxed);
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.hp.lr = lr;
+    }
+
+    fn set_precond_schedule(&mut self, periods: Vec<usize>) {
+        self.schedule = periods;
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.layers.iter().flatten().map(|st| st.a_bar.bytes()).sum()
+    }
+
+    fn diverged(&self) -> bool {
+        self.diverged
+    }
+
+    fn owned_layers(&self) -> Option<Vec<usize>> {
+        self.dist.owned_layers(self.layers.len())
+    }
+
+    fn state_blobs_per_layer(&self) -> usize {
+        1
+    }
+
+    fn state_vectors(&self) -> Vec<Vec<f32>> {
+        // One blob per owned layer: ā (exact f32 image of the store).
+        self.layers.iter().flatten().map(|st| st.a_bar.widen().data().to_vec()).collect()
+    }
+
+    fn load_state_vectors(&mut self, blobs: &[Vec<f32>]) -> Result<(), String> {
+        let want: Vec<usize> = self.layers.iter().flatten().map(|st| st.a_bar.len()).collect();
+        super::check_blob_lens("mac", blobs, &want)?;
+        let store = self.hp.policy.store;
+        let mut it = blobs.iter();
+        for st in self.layers.iter_mut().flatten() {
+            st.a_bar = QMat::from_quantized(
+                store,
+                Mat::from_vec(1, st.a_bar.cols(), it.next().unwrap().clone()),
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{DistCtx, DistStrategy};
+    use crate::optim::{testutil, Method};
+    use crate::proptest::Pcg;
+
+    #[test]
+    fn mac_converges_on_quadratic() {
+        let hp = Hyper {
+            lr: 0.05,
+            damping: 0.1,
+            precond_lr: 0.1,
+            weight_decay: 0.0,
+            t_update: 1,
+            ..Hyper::default()
+        };
+        let (l0, ln) = testutil::run_quadratic(&Method::Mac, &hp, 100, 31);
+        assert!(ln < 0.1 * l0, "mac {l0} -> {ln}");
+    }
+
+    #[test]
+    fn mac_suppresses_the_mean_activation_direction() {
+        // With ā fully refreshed (β₁ = 1) and a gradient aligned to ā,
+        // the preconditioned update shrinks by λ/(λ+‖ā‖²) relative to the
+        // orthogonal direction.
+        let hp = Hyper {
+            lr: 1.0,
+            weight_decay: 0.0,
+            damping: 0.5,
+            precond_lr: 1.0,
+            t_update: 1,
+            update_clip: 0.0,
+            ..Hyper::default()
+        };
+        let d_i = 3;
+        // Constant activations → ā = (2, 0, 0), ‖ā‖² = 4.
+        let mut a = Mat::zeros(8, d_i);
+        for r in 0..8 {
+            *a.at_mut(r, 0) = 2.0;
+        }
+        let stats = KronStats { a, g: Mat::zeros(8, 1) };
+        let grad = Mat::from_vec(1, d_i, vec![1.0, 1.0, 0.0]);
+        let mut params = [Mat::zeros(1, d_i)];
+        let mut opt = Mac::new(&[(1, d_i)], &hp);
+        opt.step(0, &mut params, std::slice::from_ref(&grad), std::slice::from_ref(&stats));
+        let step0 = -params[0].at(0, 0); // along ā
+        let step1 = -params[0].at(0, 1); // orthogonal
+        assert!((step1 - 1.0).abs() < 1e-5, "orthogonal direction is plain GD: {step1}");
+        let want = 0.5 / (0.5 + 4.0);
+        assert!((step0 - want).abs() < 1e-5, "ā direction damped to λ/(λ+‖ā‖²): {step0}");
+    }
+
+    #[test]
+    fn mac_state_vectors_roundtrip_bitwise() {
+        let mut rng = Pcg::new(37);
+        let shapes = [(5usize, 4usize), (3, 5)];
+        let hp = Hyper { t_update: 1, ..Hyper::default() };
+        let mut opt = Mac::new(&shapes, &hp);
+        let mut params = vec![rng.normal_mat(5, 4, 0.2), rng.normal_mat(3, 5, 0.2)];
+        for t in 0..3 {
+            let grads = vec![rng.normal_mat(5, 4, 0.1), rng.normal_mat(3, 5, 0.1)];
+            let stats = vec![
+                KronStats { a: rng.normal_mat(12, 4, 1.0), g: rng.normal_mat(12, 5, 1.0) },
+                KronStats { a: rng.normal_mat(12, 5, 1.0), g: rng.normal_mat(12, 3, 1.0) },
+            ];
+            opt.step(t, &mut params, &grads, &stats);
+        }
+        let snap = opt.state_vectors();
+        assert_eq!(snap.len(), 2);
+        assert!(snap.iter().any(|b| b.iter().any(|&v| v != 0.0)), "ā must be non-trivial");
+        let mut fresh = Mac::new(&shapes, &hp);
+        fresh.load_state_vectors(&snap).unwrap();
+        assert_eq!(fresh.state_vectors(), snap);
+        assert!(fresh.load_state_vectors(&snap[..1]).is_err());
+    }
+
+    #[test]
+    fn mac_per_layer_precond_schedule() {
+        let shapes = [(5usize, 4usize), (3, 5)];
+        let hp = Hyper { t_update: 2, ..Hyper::default() };
+        let run = |schedule: Option<Vec<usize>>| -> Vec<Vec<Vec<f32>>> {
+            let mut rng = Pcg::new(38);
+            let mut opt = Mac::new(&shapes, &hp);
+            if let Some(s) = schedule {
+                opt.set_precond_schedule(s);
+            }
+            let mut params = vec![Mat::zeros(5, 4), Mat::zeros(3, 5)];
+            let mut snaps = Vec::new();
+            for t in 0..6 {
+                let grads = vec![rng.normal_mat(5, 4, 0.1), rng.normal_mat(3, 5, 0.1)];
+                let stats = vec![
+                    KronStats { a: rng.normal_mat(12, 4, 1.0), g: rng.normal_mat(12, 5, 1.0) },
+                    KronStats { a: rng.normal_mat(12, 5, 1.0), g: rng.normal_mat(12, 3, 1.0) },
+                ];
+                opt.step(t, &mut params, &grads, &stats);
+                snaps.push(opt.state_vectors());
+            }
+            snaps
+        };
+        assert_eq!(run(None), run(Some(vec![2, 2])), "uniform schedule must be a no-op");
+        // Blob layout: 1 per layer → layer 1's ā is blob 1.
+        let staggered = run(Some(vec![1, 3]));
+        for t in 1..6 {
+            assert_ne!(staggered[t][0], staggered[t - 1][0], "t={t}: layer 0 refreshes each step");
+            if t % 3 == 0 {
+                assert_ne!(staggered[t][1], staggered[t - 1][1], "t={t}: layer 1 must refresh");
+            } else {
+                assert_eq!(staggered[t][1], staggered[t - 1][1], "t={t}: layer 1 stays frozen");
+            }
+        }
+    }
+
+    #[test]
+    fn factor_sharded_ranks_only_hold_owned_state() {
+        let shapes = [(5usize, 4usize), (3, 5), (4, 3), (6, 4)];
+        let hp = Hyper::default();
+        let full = Mac::new(&shapes, &hp).state_bytes();
+        let mut sharded = 0usize;
+        for rank in 0..4 {
+            let ctx = DistCtx { rank, world: 4, strategy: DistStrategy::FactorSharded };
+            let opt = Mac::with_dist(&shapes, &hp, ctx);
+            assert_eq!(opt.owned_layers(), Some(vec![rank]));
+            sharded += opt.state_bytes();
+        }
+        assert_eq!(sharded, full, "per-rank shards partition the full state");
+    }
+}

@@ -26,12 +26,16 @@
 pub mod accum;
 mod adamw;
 mod kfac;
+mod mac;
+mod rkfac;
 mod sgd;
 mod singd;
 
 pub use accum::BatchAccumulator;
 pub use adamw::AdamW;
 pub use kfac::Kfac;
+pub use mac::Mac;
+pub use rkfac::{RkFac, DEFAULT_SKETCH_RANK};
 pub use sgd::Sgd;
 pub use singd::Singd;
 
@@ -234,10 +238,17 @@ pub enum Method {
     Ikfac { structure: Structure },
     /// INGD ≡ SINGD-Dense; SINGD with any structure.
     Singd { structure: Structure },
+    /// RK-FAC — KFAC with rank-`k` sketched Kronecker factors
+    /// (arXiv 2206.15397), applied through the Woodbury identity.
+    RkFac { k: usize },
+    /// MAC — mean-activation approximated curvature (arXiv 2506.08464):
+    /// a rank-1 input-side preconditioner with `O(d)` state.
+    Mac,
 }
 
 impl Method {
-    /// Parse `"sgd" | "adamw" | "kfac" | "ikfac" | "ingd" | "singd:<structure>"`.
+    /// Parse `"sgd" | "adamw" | "kfac" | "ikfac" | "ingd" |
+    /// "singd:<structure>" | "rkfac[:<k>]" | "mac"`.
     pub fn parse(s: &str) -> Option<Method> {
         let low = s.to_ascii_lowercase();
         match low.as_str() {
@@ -246,11 +257,15 @@ impl Method {
             "kfac" => Some(Method::Kfac),
             "ikfac" => Some(Method::Ikfac { structure: Structure::Dense }),
             "ingd" => Some(Method::Singd { structure: Structure::Dense }),
+            "rkfac" => Some(Method::RkFac { k: DEFAULT_SKETCH_RANK }),
+            "mac" => Some(Method::Mac),
             _ => {
                 if let Some(rest) = low.strip_prefix("singd:") {
                     Structure::parse(rest).map(|st| Method::Singd { structure: st })
                 } else if let Some(rest) = low.strip_prefix("ikfac:") {
                     Structure::parse(rest).map(|st| Method::Ikfac { structure: st })
+                } else if let Some(rest) = low.strip_prefix("rkfac:") {
+                    rest.parse::<usize>().ok().filter(|&k| k >= 1).map(|k| Method::RkFac { k })
                 } else {
                     None
                 }
@@ -277,6 +292,14 @@ impl Method {
                     format!("singd:{}", structure.name())
                 }
             }
+            Method::RkFac { k } => {
+                if *k == DEFAULT_SKETCH_RANK {
+                    "rkfac".into()
+                } else {
+                    format!("rkfac:{k}")
+                }
+            }
+            Method::Mac => "mac".into(),
         }
     }
 
@@ -302,6 +325,8 @@ impl Method {
             Method::Kfac => Box::new(Kfac::with_dist(shapes, hp, dist)),
             Method::Ikfac { structure } => Box::new(Singd::ikfac_dist(shapes, hp, *structure, dist)),
             Method::Singd { structure } => Box::new(Singd::with_dist(shapes, hp, *structure, dist)),
+            Method::RkFac { k } => Box::new(RkFac::with_dist(shapes, hp, *k, dist)),
+            Method::Mac => Box::new(Mac::with_dist(shapes, hp, dist)),
         }
     }
 }
@@ -387,11 +412,14 @@ mod tests {
         for name in [
             "sgd", "adamw", "kfac", "ikfac", "ingd", "singd:diag", "singd:block:8",
             "singd:hier:16", "singd:toeplitz", "singd:rankk:2", "singd:tril",
+            "rkfac", "rkfac:2", "mac",
         ] {
             let m = Method::parse(name).unwrap_or_else(|| panic!("parse {name}"));
             assert_eq!(Method::parse(&m.name()).unwrap(), m, "{name}");
         }
         assert!(Method::parse("foo").is_none());
+        assert!(Method::parse("rkfac:0").is_none());
+        assert!(Method::parse("rkfac:x").is_none());
     }
 
     #[test]
@@ -423,6 +451,18 @@ mod tests {
                 m.name()
             );
         }
+        // The sketched/rank-1 methods amplify their curvature null space by
+        // 1/λ, so they need the heavier second-order damping to be stable on
+        // this quadratic (same value their own unit tests use).
+        let hp2 = Hyper { damping: 0.1, ..hp };
+        for m in [Method::RkFac { k: DEFAULT_SKETCH_RANK }, Method::Mac] {
+            let (l0, ln) = testutil::run_quadratic(&m, &hp2, 60, 99);
+            assert!(
+                ln < 0.5 * l0,
+                "{} failed to optimize: {l0} -> {ln}",
+                m.name()
+            );
+        }
     }
 
     #[test]
@@ -438,5 +478,13 @@ mod tests {
         assert!(diag < adamw, "diag {diag} < adamw {adamw}");
         assert!(adamw < dense, "adamw {adamw} < dense {dense}");
         assert!(adamw < kfac, "adamw {adamw} < kfac {kfac}");
+        // Optimizer-zoo memory ordering (acceptance criterion): the rank-1
+        // MAC state is smaller than sketched RK-FAC, which is smaller than
+        // dense KFAC factors.
+        let mac = Method::Mac.build(&shapes, &hp).state_bytes();
+        let rkfac =
+            Method::RkFac { k: DEFAULT_SKETCH_RANK }.build(&shapes, &hp).state_bytes();
+        assert!(mac < rkfac, "mac {mac} < rkfac {rkfac}");
+        assert!(rkfac < kfac, "rkfac {rkfac} < kfac {kfac}");
     }
 }

@@ -1,0 +1,536 @@
+//! RK-FAC — randomized (sketched) KFAC, after "Randomized K-FACs"
+//! (arXiv 2206.15397): the Kronecker factors `U = AᵀA/m` and
+//! `G = GmᵀGm/m` are never formed. Each refresh draws a deterministic
+//! rank-`k` Rademacher sketch `S ∈ {±1}^{k×m}` and keeps only
+//! `Y = S·X/√(km)` (so `E[YᵀY] = XᵀX/m`), plus the k×k Woodbury core
+//! `C = (λI_k + Y Yᵀ)⁻¹`. The damped inverse applies by the Woodbury
+//! identity without ever materializing a d×d matrix:
+//!
+//! ```text
+//! (λI_d + YᵀY)⁻¹ = (I_d − Yᵀ C Y) / λ,     C = (λI_k + Y Yᵀ)⁻¹,
+//! ```
+//!
+//! so per-layer state is `O(k·d)` per side plus the `d_o×d_i` momentum
+//! buffer — between MAC's `O(d)` and dense KFAC's `O(d²)` (the
+//! `state_bytes_ordering_matches_table3` pin in `optim::tests`).
+//!
+//! Determinism contract (rust/tests/dist.rs digest grid): the sketch
+//! bits are a pure function of `(layer, t)` through a *local* SplitMix64
+//! stream — no shared RNG, no call-order dependence — so every rank and
+//! every pool size derives bitwise-identical sketches from the gathered
+//! batch (`sketch_bits_are_thread_and_shard_invariant` below is the test
+//! a shared-RNG-call-order bug must fail before the digest grid does).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use super::{Hyper, KronStats, Optimizer};
+use crate::dist::DistCtx;
+use crate::numerics::QMat;
+use crate::tensor::{matmul, matmul_a_bt, matmul_at_b, pool, Mat};
+
+/// Default sketch rank for `Method::RkFac` (`"rkfac"` without a suffix).
+pub const DEFAULT_SKETCH_RANK: usize = 4;
+
+/// Domain-separation constant for the sketch stream (an arbitrary odd
+/// 64-bit constant, distinct from the transport and numerics streams).
+const SKETCH_STREAM: u64 = 0x5ee7_c4fa_c0de_2397;
+
+/// One SplitMix64 output; advances `state`. Local to this module on
+/// purpose: the sketch must not share a stream (or call order) with any
+/// other consumer.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Seed of the sketch stream for `(layer, refresh step)` — the only
+/// inputs, so identical on every rank/thread for the same global step.
+pub fn sketch_seed(layer: usize, t: usize) -> u64 {
+    let mut s = SKETCH_STREAM
+        ^ (layer as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ (t as u64).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    splitmix64(&mut s)
+}
+
+/// The Rademacher sign pattern `S ∈ {±1}^{k×m}` as raw bits, row-major
+/// (one bit per entry, drawn in fixed `(row, col)` order). Exposed for
+/// the determinism test; [`sketch`] consumes the same stream.
+pub fn sketch_signs(seed: u64, k: usize, m: usize) -> Vec<bool> {
+    let mut state = seed;
+    (0..k * m).map(|_| splitmix64(&mut state) & 1 == 1).collect()
+}
+
+/// `Y = S·X/√(km)` for the deterministic sign pattern of `seed`.
+/// Accumulation is scalar, row `i` ascending — independent of pool size.
+pub fn sketch(seed: u64, k: usize, x: &Mat) -> Mat {
+    let m = x.rows();
+    let d = x.cols();
+    let mut y = Mat::zeros(k, d);
+    let scale = 1.0 / ((k.max(1) * m.max(1)) as f32).sqrt();
+    let mut state = seed;
+    for r in 0..k {
+        let yr = &mut y.data_mut()[r * d..(r + 1) * d];
+        for i in 0..m {
+            let s = if splitmix64(&mut state) & 1 == 1 { -scale } else { scale };
+            let xr = x.row(i);
+            for (yv, &xv) in yr.iter_mut().zip(xr.iter()) {
+                *yv += s * xv;
+            }
+        }
+    }
+    y
+}
+
+/// Per-layer sketched factor state (storage dtype via [`QMat`], exactly
+/// like KFAC): `y_k`/`c_k` input side (`k×d_i`, `k×k`), `y_c`/`c_c`
+/// output side, and the momentum buffer.
+struct LayerState {
+    y_k: QMat,
+    c_k: QMat,
+    y_c: QMat,
+    c_c: QMat,
+    m_mu: QMat,
+}
+
+pub struct RkFac {
+    hp: Hyper,
+    k: usize,
+    /// Per-layer state; `None` for layers this rank does not own under
+    /// [`DistCtx`] (factor-sharded).
+    layers: Vec<Option<LayerState>>,
+    /// Per-layer refresh periods; empty → uniform [`Hyper::t_update`].
+    schedule: Vec<usize>,
+    dist: DistCtx,
+    diverged: bool,
+    /// Cholesky failures of the k×k Woodbury core (stability telemetry).
+    pub chol_failures: usize,
+}
+
+impl RkFac {
+    pub fn new(shapes: &[(usize, usize)], hp: &Hyper, k: usize) -> Self {
+        Self::with_dist(shapes, hp, k, DistCtx::single())
+    }
+
+    pub fn with_dist(shapes: &[(usize, usize)], hp: &Hyper, k: usize, dist: DistCtx) -> Self {
+        let store = hp.policy.store;
+        let k = k.max(1);
+        let layers = shapes
+            .iter()
+            .enumerate()
+            .map(|(l, &(o, i))| {
+                dist.owns_layer(l).then(|| LayerState {
+                    y_k: QMat::zeros(store, k, i),
+                    c_k: QMat::zeros(store, k, k),
+                    y_c: QMat::zeros(store, k, o),
+                    c_c: QMat::zeros(store, k, k),
+                    m_mu: QMat::zeros(store, o, i),
+                })
+            })
+            .collect();
+        RkFac {
+            hp: hp.clone(),
+            k,
+            layers,
+            schedule: Vec::new(),
+            dist,
+            diverged: false,
+            chol_failures: 0,
+        }
+    }
+
+    /// Woodbury application of the damped input-factor inverse on the
+    /// right of a `d_o × d_i` gradient ([`Self::woodbury_left`] is the
+    /// output-factor mirror).
+    fn woodbury_right(g: &Mat, y: &Mat, c: &Mat, damping: f32) -> Mat {
+        // G (λI + YᵀY)⁻¹ = (G − (G Yᵀ) C Y) / λ
+        let gy = matmul_a_bt(g, y); // d_o × k
+        let corr = matmul(&matmul(&gy, c), y); // d_o × d_i
+        g.sub(&corr).scale(1.0 / damping)
+    }
+
+    fn woodbury_left(v: &Mat, y: &Mat, c: &Mat, damping: f32) -> Mat {
+        // (λI + YᵀY)⁻¹ V = (V − Yᵀ C (Y V)) / λ
+        let yv = matmul(y, v); // k × d_i
+        let corr = matmul_at_b(y, &matmul(c, &yv)); // d_o × d_i
+        v.sub(&corr).scale(1.0 / damping)
+    }
+}
+
+impl Optimizer for RkFac {
+    fn name(&self) -> String {
+        if self.k == DEFAULT_SKETCH_RANK {
+            "rkfac".into()
+        } else {
+            format!("rkfac:{}", self.k)
+        }
+    }
+
+    fn step(&mut self, t: usize, params: &mut [Mat], grads: &[Mat], stats: &[KronStats]) {
+        assert_eq!(params.len(), self.layers.len(), "rkfac: params/layers mismatch");
+        assert_eq!(grads.len(), params.len(), "rkfac: grads/params mismatch");
+        assert_eq!(stats.len(), params.len(), "rkfac: stats/params mismatch");
+        let policy = self.hp.policy;
+        let hp = &self.hp;
+        let k = self.k;
+        {
+            // Sketch refresh fans out per owned layer; each job derives
+            // its own SplitMix64 stream from (layer, t), so nothing here
+            // depends on job execution order or pool size.
+            let chol_failures = AtomicUsize::new(0);
+            let diverged = AtomicBool::new(false);
+            let schedule = &self.schedule;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
+                .layers
+                .iter_mut()
+                .zip(stats.iter())
+                .enumerate()
+                .filter(|(l, _)| t % schedule.get(*l).copied().unwrap_or(hp.t_update).max(1) == 0)
+                .filter_map(|(l, (st, stat))| st.as_mut().map(|st| (l, st, stat)))
+                .map(|(l, st, stat)| {
+                    let cf = &chol_failures;
+                    let dv = &diverged;
+                    Box::new(move || {
+                        let seed = sketch_seed(l, t);
+                        // Two sides share one stream: input signs first,
+                        // output signs continue where the input left off
+                        // (both sketches still pure functions of (l, t)).
+                        let m = stat.a.rows();
+                        let mut y_k = sketch(seed, k, &stat.a);
+                        let mut state = seed;
+                        for _ in 0..k * m {
+                            splitmix64(&mut state);
+                        }
+                        let mut y_c = sketch(state, k, &stat.g);
+                        policy.quantize_mat(&mut y_k);
+                        policy.quantize_mat(&mut y_c);
+                        // k×k Woodbury cores C = (λI + Y Yᵀ)⁻¹, fp32
+                        // compute with storage rounding (same recipe and
+                        // failure telemetry as KFAC's damped inverse).
+                        let c_k = super::kfac::damped_inverse(
+                            &matmul_a_bt(&y_k, &y_k),
+                            hp.damping,
+                            &policy,
+                            cf,
+                            dv,
+                        );
+                        let c_c = super::kfac::damped_inverse(
+                            &matmul_a_bt(&y_c, &y_c),
+                            hp.damping,
+                            &policy,
+                            cf,
+                            dv,
+                        );
+                        st.y_k = QMat::from_quantized(policy.store, y_k);
+                        st.y_c = QMat::from_quantized(policy.store, y_c);
+                        st.c_k = QMat::from_quantized(policy.store, c_k);
+                        st.c_c = QMat::from_quantized(policy.store, c_c);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            if !jobs.is_empty() {
+                pool::run_jobs(jobs);
+            }
+            self.chol_failures += chol_failures.load(Ordering::Relaxed);
+            self.diverged |= diverged.load(Ordering::Relaxed);
+        }
+        let diverged = AtomicBool::new(false);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = self
+            .layers
+            .iter_mut()
+            .zip(params.iter_mut().zip(grads.iter()))
+            .filter_map(|(st, (p, g))| st.as_mut().map(|st| (st, p, g)))
+            .map(|(st, p, g)| {
+                let dv = &diverged;
+                Box::new(move || {
+                    // m_μ ← α₂ m_μ + Ĝ⁻¹ ∇W Û⁻¹ + γ W with both damped
+                    // inverses applied through the Woodbury identity.
+                    let y_k = st.y_k.widen();
+                    let c_k = st.c_k.widen();
+                    let y_c = st.y_c.widen();
+                    let c_c = st.c_c.widen();
+                    let right = Self::woodbury_right(g, &y_k, &c_k, hp.damping);
+                    let precond = Self::woodbury_left(&right, &y_c, &c_c, hp.damping);
+                    let mut m_mu = st.m_mu.widen();
+                    m_mu.ema(hp.momentum, 1.0, &precond);
+                    m_mu.axpy(hp.weight_decay, p);
+                    policy.quantize_mat(&mut m_mu);
+                    let f = super::update_clip_factor(hp.lr, &m_mu, hp.update_clip);
+                    p.axpy(-hp.lr * f, &m_mu);
+                    policy.quantize_mat(p);
+                    if p.has_nonfinite() || m_mu.has_nonfinite() {
+                        dv.store(true, Ordering::Relaxed);
+                    }
+                    st.m_mu = QMat::from_quantized(policy.store, m_mu);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool::run_jobs(jobs);
+        self.diverged |= diverged.load(Ordering::Relaxed);
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.hp.lr = lr;
+    }
+
+    fn set_precond_schedule(&mut self, periods: Vec<usize>) {
+        self.schedule = periods;
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .flatten()
+            .map(|st| {
+                st.y_k.bytes() + st.c_k.bytes() + st.y_c.bytes() + st.c_c.bytes() + st.m_mu.bytes()
+            })
+            .sum()
+    }
+
+    fn diverged(&self) -> bool {
+        self.diverged
+    }
+
+    fn telemetry(&self) -> String {
+        if self.chol_failures > 0 {
+            format!("chol_failures={}", self.chol_failures)
+        } else {
+            String::new()
+        }
+    }
+
+    fn owned_layers(&self) -> Option<Vec<usize>> {
+        self.dist.owned_layers(self.layers.len())
+    }
+
+    fn state_blobs_per_layer(&self) -> usize {
+        5
+    }
+
+    fn state_vectors(&self) -> Vec<Vec<f32>> {
+        // Five blobs per owned layer: Y_K, C_K, Y_C, C_C, m_μ (exact f32
+        // images of the stored values — the round-trip stays bitwise).
+        let mut out = Vec::new();
+        for st in self.layers.iter().flatten() {
+            out.push(st.y_k.widen().data().to_vec());
+            out.push(st.c_k.widen().data().to_vec());
+            out.push(st.y_c.widen().data().to_vec());
+            out.push(st.c_c.widen().data().to_vec());
+            out.push(st.m_mu.widen().data().to_vec());
+        }
+        out
+    }
+
+    fn load_state_vectors(&mut self, blobs: &[Vec<f32>]) -> Result<(), String> {
+        let want: Vec<usize> = self
+            .layers
+            .iter()
+            .flatten()
+            .flat_map(|st| [st.y_k.len(), st.c_k.len(), st.y_c.len(), st.c_c.len(), st.m_mu.len()])
+            .collect();
+        super::check_blob_lens("rkfac", blobs, &want)?;
+        let store = self.hp.policy.store;
+        let mut it = blobs.iter();
+        for st in self.layers.iter_mut().flatten() {
+            let mut load = |rows: usize, cols: usize| {
+                QMat::from_quantized(store, Mat::from_vec(rows, cols, it.next().unwrap().clone()))
+            };
+            st.y_k = load(st.y_k.rows(), st.y_k.cols());
+            st.c_k = load(st.c_k.rows(), st.c_k.cols());
+            st.y_c = load(st.y_c.rows(), st.y_c.cols());
+            st.c_c = load(st.c_c.rows(), st.c_c.cols());
+            st.m_mu = load(st.m_mu.rows(), st.m_mu.cols());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{DistCtx, DistStrategy};
+    use crate::optim::{testutil, Method};
+    use crate::proptest::Pcg;
+
+    #[test]
+    fn rkfac_converges_on_ill_conditioned_quadratic() {
+        let hp = Hyper {
+            lr: 0.05,
+            momentum: 0.3,
+            damping: 0.1,
+            precond_lr: 1.0,
+            weight_decay: 0.0,
+            t_update: 1,
+            ..Hyper::default()
+        };
+        let (l0, ln) =
+            testutil::run_quadratic(&Method::RkFac { k: DEFAULT_SKETCH_RANK }, &hp, 100, 23);
+        assert!(ln < 0.1 * l0, "rkfac {l0} -> {ln}");
+    }
+
+    /// The ISSUE-10 deterministic-sketch contract: the sketch bits for a
+    /// given (layer, refresh step) are identical across pool sizes and
+    /// across rank decompositions. A shared-RNG-call-order bug (e.g.
+    /// seeding from a global stream that other layers also advance) must
+    /// fail here, before the dist.rs digest grid ever runs.
+    #[test]
+    fn sketch_bits_are_thread_and_shard_invariant() {
+        let mut rng = Pcg::new(91);
+        let x = rng.normal_mat(24, 10, 1.0);
+        let baseline: Vec<(Vec<bool>, Mat)> = (0..4)
+            .map(|l| (sketch_signs(sketch_seed(l, 6), 3, 24), sketch(sketch_seed(l, 6), 3, &x)))
+            .collect();
+        for threads in [1usize, 4] {
+            pool::with_threads(threads, || {
+                // Sketch every layer in reverse order too: a call-order
+                // dependence would shift the stream; a pure per-(l, t)
+                // stream cannot notice.
+                for &l in &[3usize, 1, 0, 2] {
+                    let signs = sketch_signs(sketch_seed(l, 6), 3, 24);
+                    assert_eq!(signs, baseline[l].0, "threads={threads} layer={l}");
+                    let y = sketch(sketch_seed(l, 6), 3, &x);
+                    assert_eq!(y.data(), baseline[l].1.data(), "threads={threads} layer={l}");
+                }
+            });
+        }
+        // Rank decompositions {1, 4}: every rank that owns layer l under
+        // factor sharding derives the identical sketch for (l, t).
+        for world in [1usize, 4] {
+            for rank in 0..world {
+                let ctx = DistCtx { rank, world, strategy: DistStrategy::FactorSharded };
+                for l in 0..4 {
+                    if ctx.owns_layer(l) {
+                        assert_eq!(
+                            sketch_signs(sketch_seed(l, 6), 3, 24),
+                            baseline[l].0,
+                            "world={world} rank={rank} layer={l}"
+                        );
+                    }
+                }
+            }
+        }
+        // Distinct (layer, t) keys give distinct sign patterns.
+        assert_ne!(sketch_signs(sketch_seed(0, 6), 3, 24), sketch_signs(sketch_seed(1, 6), 3, 24));
+        assert_ne!(sketch_signs(sketch_seed(0, 6), 3, 24), sketch_signs(sketch_seed(0, 7), 3, 24));
+    }
+
+    #[test]
+    fn sketch_gram_approximates_factor_in_expectation() {
+        // Average YᵀY over many refresh keys ≈ XᵀX/m (the sketch is an
+        // unbiased estimator; 256 draws shrink the variance enough for a
+        // loose tolerance).
+        let mut rng = Pcg::new(92);
+        let x = rng.normal_mat(32, 6, 1.0);
+        let want = crate::tensor::matmul_at_b(&x, &x).scale(1.0 / 32.0);
+        let mut acc = Mat::zeros(6, 6);
+        let draws = 256;
+        for t in 0..draws {
+            let y = sketch(sketch_seed(0, t), 4, &x);
+            acc.axpy(1.0 / draws as f32, &crate::tensor::matmul_at_b(&y, &y));
+        }
+        crate::proptest::assert_mat_close(&acc, &want, 0.35, "sketch mean");
+    }
+
+    #[test]
+    fn woodbury_matches_dense_damped_inverse() {
+        // (λI + YᵀY)⁻¹ applied via the k×k core must agree with the
+        // dense d×d inverse on both sides of the gradient.
+        let mut rng = Pcg::new(93);
+        let (k, d_i, d_o) = (3usize, 7usize, 5usize);
+        let damping = 0.05f32;
+        let y_k = rng.normal_mat(k, d_i, 1.0);
+        let y_c = rng.normal_mat(k, d_o, 1.0);
+        let g = rng.normal_mat(d_o, d_i, 1.0);
+        let cores = |y: &Mat| {
+            let mut s = matmul_a_bt(y, y);
+            s.add_diag(damping);
+            crate::linalg::spd_inverse(&s).unwrap()
+        };
+        let right = RkFac::woodbury_right(&g, &y_k, &cores(&y_k), damping);
+        let left = RkFac::woodbury_left(&right, &y_c, &cores(&y_c), damping);
+        let dense_inv = |y: &Mat, d: usize| {
+            let mut s = matmul_at_b(y, y);
+            s.add_diag(damping);
+            assert_eq!(s.rows(), d);
+            crate::linalg::spd_inverse(&s).unwrap()
+        };
+        let want = matmul(&dense_inv(&y_c, d_o), &matmul(&g, &dense_inv(&y_k, d_i)));
+        crate::proptest::assert_mat_close(&left, &want, 1e-3, "woodbury");
+    }
+
+    #[test]
+    fn rkfac_state_vectors_roundtrip_bitwise() {
+        let mut rng = Pcg::new(94);
+        let shapes = [(5usize, 4usize), (3, 5)];
+        let hp = Hyper { t_update: 1, ..Hyper::default() };
+        let mut opt = RkFac::new(&shapes, &hp, 2);
+        let mut params = vec![rng.normal_mat(5, 4, 0.2), rng.normal_mat(3, 5, 0.2)];
+        for t in 0..2 {
+            let grads = vec![rng.normal_mat(5, 4, 0.1), rng.normal_mat(3, 5, 0.1)];
+            let stats = vec![
+                KronStats { a: rng.normal_mat(12, 4, 1.0), g: rng.normal_mat(12, 5, 1.0) },
+                KronStats { a: rng.normal_mat(12, 5, 1.0), g: rng.normal_mat(12, 3, 1.0) },
+            ];
+            opt.step(t, &mut params, &grads, &stats);
+        }
+        let snap = opt.state_vectors();
+        assert_eq!(snap.len(), 2 * 5);
+        let mut fresh = RkFac::new(&shapes, &hp, 2);
+        fresh.load_state_vectors(&snap).unwrap();
+        assert_eq!(fresh.state_vectors(), snap);
+        assert!(fresh.load_state_vectors(&snap[..4]).is_err());
+    }
+
+    #[test]
+    fn rkfac_per_layer_precond_schedule() {
+        let shapes = [(5usize, 4usize), (3, 5)];
+        let hp = Hyper { t_update: 2, damping: 0.1, ..Hyper::default() };
+        let run = |schedule: Option<Vec<usize>>| -> Vec<Vec<Vec<f32>>> {
+            let mut rng = Pcg::new(95);
+            let mut opt = RkFac::new(&shapes, &hp, 2);
+            if let Some(s) = schedule {
+                opt.set_precond_schedule(s);
+            }
+            let mut params = vec![Mat::zeros(5, 4), Mat::zeros(3, 5)];
+            let mut snaps = Vec::new();
+            for t in 0..6 {
+                let grads = vec![rng.normal_mat(5, 4, 0.1), rng.normal_mat(3, 5, 0.1)];
+                let stats = vec![
+                    KronStats { a: rng.normal_mat(12, 4, 1.0), g: rng.normal_mat(12, 5, 1.0) },
+                    KronStats { a: rng.normal_mat(12, 5, 1.0), g: rng.normal_mat(12, 3, 1.0) },
+                ];
+                opt.step(t, &mut params, &grads, &stats);
+                snaps.push(opt.state_vectors());
+            }
+            snaps
+        };
+        assert_eq!(run(None), run(Some(vec![2, 2])), "uniform schedule must be a no-op");
+        // Blob layout: 5 per layer, Y_K first → layer 1's Y_K is blob 5.
+        let staggered = run(Some(vec![1, 3]));
+        for t in 1..6 {
+            assert_ne!(staggered[t][0], staggered[t - 1][0], "t={t}: layer 0 refreshes each step");
+            if t % 3 == 0 {
+                assert_ne!(staggered[t][5], staggered[t - 1][5], "t={t}: layer 1 must refresh");
+            } else {
+                assert_eq!(staggered[t][5], staggered[t - 1][5], "t={t}: layer 1 stays frozen");
+            }
+        }
+    }
+
+    #[test]
+    fn factor_sharded_ranks_only_hold_owned_state() {
+        let shapes = [(5usize, 4usize), (3, 5), (4, 3), (6, 4)];
+        let hp = Hyper::default();
+        let full = RkFac::new(&shapes, &hp, 2).state_bytes();
+        let mut sharded = 0usize;
+        for rank in 0..4 {
+            let ctx = DistCtx { rank, world: 4, strategy: DistStrategy::FactorSharded };
+            let opt = RkFac::with_dist(&shapes, &hp, 2, ctx);
+            assert_eq!(opt.owned_layers(), Some(vec![rank]));
+            sharded += opt.state_bytes();
+        }
+        assert_eq!(sharded, full, "per-rank shards partition the full state");
+    }
+}

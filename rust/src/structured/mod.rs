@@ -682,6 +682,183 @@ mod tests {
         }
     }
 
+    /// Exact (no-tolerance) matrix comparison for the conformance grid.
+    /// Values must agree bitwise up to IEEE's `-0.0 == 0.0`
+    /// identification; NaN anywhere fails.
+    pub(crate) fn assert_mat_bitwise(a: &Mat, b: &Mat, ctx: &str) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{ctx}: shape mismatch");
+        for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+            assert!(
+                x == y,
+                "{ctx}: entry {i}: {x:e} ({:#010x}) != {y:e} ({:#010x})",
+                x.to_bits(),
+                y.to_bits()
+            );
+        }
+    }
+
+    /// Conformance grid: products with an exact identity operand must be
+    /// BITWISE equal to the dense reference, for every structure class
+    /// and every op (`matmul`, `right_mul`, `left_mul`, both transpose
+    /// legs). With an identity operand every output entry is one exact
+    /// coefficient plus exact-zero terms, so any summation order — the
+    /// scalar loops, the blocked dense kernel on extracted blocks, the
+    /// pooled shards — must reproduce the coefficient exactly; any
+    /// indexing or accumulation bug shows up as a bit flip, not as noise
+    /// hidden under a tolerance.
+    #[test]
+    fn conformance_identity_products_bitwise_equal_dense() {
+        // d stays below the Toeplitz FFT crossover so every class runs
+        // its direct path; the FFT leg has its own tolerance cells in
+        // `toeplitz.rs`.
+        forall(51, 10, |rng, case| {
+            let d = 1 + rng.below(32);
+            let eye = Mat::eye(d);
+            for &s in ALL {
+                let k = random_smat(s, d, rng);
+                let kd = k.to_dense();
+                let kdt = kd.transpose();
+                let id = SMat::identity(s, d);
+                let ctx = format!("case {case} d {d} {s:?}");
+                assert_mat_bitwise(&k.matmul(&id).to_dense(), &kd, &format!("{ctx} K@I"));
+                assert_mat_bitwise(&id.matmul(&k).to_dense(), &kd, &format!("{ctx} I@K"));
+                assert_mat_bitwise(&k.right_mul(&eye, false), &kd, &format!("{ctx} I·K"));
+                assert_mat_bitwise(&k.right_mul(&eye, true), &kdt, &format!("{ctx} I·Kᵀ"));
+                assert_mat_bitwise(&k.left_mul(&eye, false), &kd, &format!("{ctx} K·I"));
+                assert_mat_bitwise(&k.left_mul(&eye, true), &kdt, &format!("{ctx} Kᵀ·I"));
+            }
+        });
+    }
+
+    /// Conformance grid, non-square operands: one-hot selector matrices
+    /// (`m ≠ d`) pick rows/columns of `K`, so the expected output is an
+    /// exact gather from the dense form — bitwise, like the identity
+    /// cells, but through the rectangular code paths.
+    #[test]
+    fn conformance_one_hot_selectors_bitwise_gather_rows_and_cols() {
+        forall(52, 10, |rng, case| {
+            let d = 2 + rng.below(30);
+            let m = 1 + rng.below(2 * d); // freely non-square, both m<d and m>d
+            let picks: Vec<usize> = (0..m).map(|_| rng.below(d)).collect();
+            // X ∈ R^{m×d} with exactly one 1.0 per row.
+            let mut x = Mat::zeros(m, d);
+            for (r, &p) in picks.iter().enumerate() {
+                x.set(r, p, 1.0);
+            }
+            let xt = x.transpose(); // d×m, one 1.0 per column
+            for &s in ALL {
+                let k = random_smat(s, d, rng);
+                let kd = k.to_dense();
+                let ctx = format!("case {case} d {d} m {m} {s:?}");
+                // X@K gathers rows of K; X@Kᵀ gathers rows of Kᵀ.
+                let want_rows = Mat::from_fn(m, d, |r, c| kd.at(picks[r], c));
+                let want_rows_t = Mat::from_fn(m, d, |r, c| kd.at(c, picks[r]));
+                assert_mat_bitwise(&k.right_mul(&x, false), &want_rows, &format!("{ctx} right"));
+                assert_mat_bitwise(
+                    &k.right_mul(&x, true),
+                    &want_rows_t,
+                    &format!("{ctx} right-T"),
+                );
+                // K@Xᵀ gathers columns of K; Kᵀ@Xᵀ gathers columns of Kᵀ.
+                let want_cols = Mat::from_fn(d, m, |r, c| kd.at(r, picks[c]));
+                let want_cols_t = Mat::from_fn(d, m, |r, c| kd.at(picks[c], r));
+                assert_mat_bitwise(&k.left_mul(&xt, false), &want_cols, &format!("{ctx} left"));
+                assert_mat_bitwise(
+                    &k.left_mul(&xt, true),
+                    &want_cols_t,
+                    &format!("{ctx} left-T"),
+                );
+            }
+        });
+    }
+
+    /// Conformance grid, degenerate shapes: a 0-row batch must
+    /// gram-project to the exact zero element, and 1×1 factors must run
+    /// every op exactly (single-coefficient arithmetic has no rounding
+    /// freedom).
+    #[test]
+    fn conformance_zero_row_and_one_by_one_shapes() {
+        let mut rng = Pcg::new(53);
+        for &s in ALL {
+            // 0-row batch: Π̂(scale · BᵀB) with B ∈ R^{0×d} is exactly 0.
+            let d = 7;
+            let k = random_smat(s, d, &mut rng);
+            let b0 = Mat::zeros(0, d);
+            let got = k.gram_project(&b0, 1.3);
+            assert_eq!(got.structure(), k.structure(), "{s:?} 0-row closure");
+            assert_mat_bitwise(
+                &got.to_dense(),
+                &Mat::zeros(d, d),
+                &format!("{s:?} 0-row gram"),
+            );
+            // right_mul with a 0-row operand: a 0×d result, no panic.
+            let empty = k.right_mul(&b0, false);
+            assert_eq!((empty.rows(), empty.cols()), (0, d), "{s:?} 0-row right_mul");
+
+            // 1×1: every class degenerates to scalar arithmetic.
+            let k1 = random_smat(s, 1, &mut rng);
+            let v = k1.to_dense().at(0, 0);
+            let x = rng.normal_mat(3, 1, 1.0);
+            let want = Mat::from_fn(3, 1, |r, _| x.at(r, 0) * v);
+            assert_mat_bitwise(&k1.right_mul(&x, false), &want, &format!("{s:?} 1×1 right"));
+            assert_mat_bitwise(&k1.right_mul(&x, true), &want, &format!("{s:?} 1×1 right-T"));
+            let prod = k1.matmul(&k1).to_dense().at(0, 0);
+            assert!(prod == v * v, "{s:?} 1×1 matmul: {prod:e} != {:e}", v * v);
+            // Single-row batch: the gram is one product, so every
+            // accumulation strategy must hit the same bits (scale 0.5 is
+            // a power of two — exact).
+            let b = rng.normal_mat(1, 1, 1.0);
+            let want_gram = b.at(0, 0) * b.at(0, 0) * 0.5;
+            let got_gram = k1.gram_project(&b, 0.5).to_dense().at(0, 0);
+            assert!(
+                got_gram == want_gram,
+                "{s:?} 1×1 gram: {got_gram:e} != {want_gram:e}"
+            );
+        }
+    }
+
+    /// Conformance grid, scheduling axis: every structured op must be
+    /// BITWISE identical between a serial run and a pooled run, at a
+    /// shape big enough that the pooled path actually shards
+    /// (`PAR_WORK`-crossing matmul/gram work). This is the property the
+    /// optimizer determinism contracts stand on — a tolerance here would
+    /// let scheduling-dependent reductions leak into the digests.
+    #[test]
+    fn conformance_serial_and_pooled_runs_bitwise_identical() {
+        for (d, m) in [(12usize, 8usize), (96, 72)] {
+            // Build inputs OUTSIDE with_threads so both runs see the
+            // identical bits.
+            let mut rng = Pcg::new(54 + d as u64);
+            let x_right = rng.normal_mat(m, d, 1.0);
+            let x_left = rng.normal_mat(d, m, 1.0);
+            for &s in ALL {
+                let a = random_smat(s, d, &mut rng);
+                let b = random_smat(s, d, &mut rng);
+                let run = || {
+                    (
+                        a.matmul(&b).to_dense(),
+                        a.right_mul(&x_right, false),
+                        a.right_mul(&x_right, true),
+                        a.left_mul(&x_left, false),
+                        a.left_mul(&x_left, true),
+                        a.gram_project(&x_right, 0.7).to_dense(),
+                        a.self_gram_project(1.3).to_dense(),
+                    )
+                };
+                let serial = crate::tensor::pool::with_threads(1, run);
+                let pooled = crate::tensor::pool::with_threads(4, run);
+                let ctx = format!("d {d} {s:?}");
+                assert_mat_bitwise(&serial.0, &pooled.0, &format!("{ctx} matmul"));
+                assert_mat_bitwise(&serial.1, &pooled.1, &format!("{ctx} right"));
+                assert_mat_bitwise(&serial.2, &pooled.2, &format!("{ctx} right-T"));
+                assert_mat_bitwise(&serial.3, &pooled.3, &format!("{ctx} left"));
+                assert_mat_bitwise(&serial.4, &pooled.4, &format!("{ctx} left-T"));
+                assert_mat_bitwise(&serial.5, &pooled.5, &format!("{ctx} gram"));
+                assert_mat_bitwise(&serial.6, &pooled.6, &format!("{ctx} self-gram"));
+            }
+        }
+    }
+
     #[test]
     fn structure_parse_roundtrip() {
         for &s in ALL {

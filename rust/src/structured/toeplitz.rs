@@ -166,6 +166,14 @@ impl ToepF {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::proptest::{assert_mat_close, forall, Pcg};
+    use crate::structured::{proj, Structure};
+
+    /// Random well-scaled coefficient vector (geometric band decay so
+    /// convolutions stay O(1)).
+    fn random_coef(d: usize, rng: &mut Pcg) -> Vec<f32> {
+        (0..d).map(|j| rng.normal() * 0.5f32.powi(j.min(12) as i32)).collect()
+    }
 
     #[test]
     fn identity_dense() {
@@ -186,5 +194,128 @@ mod tests {
         let a = ToepF { d: 5, coef: vec![1.0, 0.5, 0.2, 0.0, 0.1] };
         let b = ToepF { d: 5, coef: vec![2.0, -0.3, 0.0, 0.4, 0.0] };
         assert_eq!(a.matmul(&b).coef, b.matmul(&a).coef);
+    }
+
+    /// The FFT matmul path (d ≥ FFT_MIN_D) must agree with the direct
+    /// truncated convolution it replaces, across the crossover boundary.
+    #[test]
+    fn fft_matmul_matches_direct_convolution_across_crossover() {
+        forall(61, 6, |rng, case| {
+            for d in [ToepF::FFT_MIN_D - 1, ToepF::FFT_MIN_D, ToepF::FFT_MIN_D + 33] {
+                let a = ToepF { d, coef: random_coef(d, rng) };
+                let b = ToepF { d, coef: random_coef(d, rng) };
+                let got = a.matmul(&b);
+                // Direct reference, written out independently.
+                let mut want = vec![0.0f32; d];
+                for (j, w) in want.iter_mut().enumerate() {
+                    let mut acc = 0.0f64;
+                    for i in 0..=j {
+                        acc += a.coef[i] as f64 * b.coef[j - i] as f64;
+                    }
+                    *w = acc as f32;
+                }
+                for (j, (g, w)) in got.coef.iter().zip(&want).enumerate() {
+                    assert!(
+                        (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                        "case {case} d {d} coef {j}: {g} vs {w}"
+                    );
+                }
+            }
+        });
+    }
+
+    /// The FFT gram path (batched autocorrelation) must agree with the
+    /// direct O(m d²) loop across the crossover.
+    #[test]
+    fn fft_gram_project_matches_direct_across_crossover() {
+        forall(62, 4, |rng, case| {
+            for d in [ToepF::FFT_MIN_D - 1, ToepF::FFT_MIN_D + 8] {
+                let m = 3 + rng.below(6);
+                let b = rng.normal_mat(m, d, 1.0);
+                let k = ToepF::identity(d);
+                let got = k.gram_project(&b, 0.7);
+                // Direct reference via the dense projection map.
+                let gram = crate::tensor::matmul_at_b(&b, &b).scale(0.7);
+                let want = proj::proj(Structure::TriuToeplitz, &gram);
+                assert_mat_close(
+                    &got.to_dense(),
+                    &want.to_dense(),
+                    2e-3,
+                    &format!("case {case} d {d}"),
+                );
+            }
+        });
+    }
+
+    /// A 0-row batch gram-projects to exactly zero on BOTH the direct
+    /// and the FFT path (empty autocorrelation batch).
+    #[test]
+    fn zero_row_gram_is_exactly_zero_on_both_paths() {
+        for d in [8usize, ToepF::FFT_MIN_D + 1] {
+            let k = ToepF::identity(d);
+            let out = k.gram_project(&Mat::zeros(0, d), 1.3);
+            assert!(out.coef.iter().all(|&c| c == 0.0), "d {d}: {:?}", &out.coef[..4]);
+        }
+    }
+
+    /// `left_mul`'s zero-skip fast path: coefficient vectors with exact
+    /// zeros must produce the same result as the dense reference (the
+    /// skipped terms are exact zeros, so this is bitwise).
+    #[test]
+    fn left_mul_zero_skip_matches_dense_bitwise() {
+        let mut rng = Pcg::new(63);
+        let d = 9;
+        // Sparse band: only the diagonal and two superdiagonals.
+        let mut coef = vec![0.0f32; d];
+        coef[0] = rng.normal();
+        coef[3] = rng.normal();
+        coef[5] = rng.normal();
+        let k = ToepF { d, coef };
+        let kd = k.to_dense();
+        let x = rng.normal_mat(d, 4, 1.0);
+        for transpose in [false, true] {
+            let got = k.left_mul(&x, transpose);
+            // Scalar reference in the same (row-major, ascending-p)
+            // accumulation order, without the zero skip.
+            let mut want = Mat::zeros(d, 4);
+            for r in 0..d {
+                for p in 0..d {
+                    let v = if transpose { kd.at(p, r) } else { kd.at(r, p) };
+                    for c in 0..4 {
+                        *want.at_mut(r, c) += v * x.at(p, c);
+                    }
+                }
+            }
+            assert_eq!(
+                got.data(),
+                want.data(),
+                "transpose {transpose}: zero-skip changed the bits"
+            );
+        }
+    }
+
+    /// Transposed products against the dense reference (the transpose
+    /// legs had no toeplitz-local coverage).
+    #[test]
+    fn transpose_products_match_dense_reference() {
+        forall(64, 6, |rng, case| {
+            let d = 4 + rng.below(20);
+            let k = ToepF { d, coef: random_coef(d, rng) };
+            let kd = k.to_dense();
+            let x = rng.normal_mat(5, d, 1.0);
+            let y = rng.normal_mat(d, 5, 1.0);
+            assert_mat_close(
+                &k.right_mul(&x, true),
+                &crate::tensor::matmul_a_bt(&x, &kd),
+                1e-4,
+                &format!("case {case} right-T"),
+            );
+            assert_mat_close(
+                &k.left_mul(&y, true),
+                &crate::tensor::matmul_at_b(&kd, &y),
+                1e-4,
+                &format!("case {case} left-T"),
+            );
+        });
     }
 }

@@ -19,16 +19,24 @@
 //!   the best-so-far error, and restore the partial-epoch f64 loss
 //!   accumulators so an epoch interrupted mid-way re-emits the identical
 //!   epoch-average row.
-//! - v4 (current): the v3 driver section additionally ends with `u8
-//!   has_scaler`; when 1, a [`crate::numerics::GradScaler`] schedule
-//!   snapshot follows: `f32 scale | u64 clean_steps | u64 skipped`.
-//!   Without it a resumed fp16 run would restart the loss scale at its
-//!   default and break bitwise resume determinism.
+//! - v4: the v3 driver section additionally ends with `u8 has_scaler`;
+//!   when 1, a [`crate::numerics::GradScaler`] schedule snapshot
+//!   follows: `f32 scale | u64 clean_steps | u64 skipped`. Without it a
+//!   resumed fp16 run would restart the loss scale at its default and
+//!   break bitwise resume determinism.
+//! - v5 (current): the v4 sections, followed by `u8 has_meta`; when 1,
+//!   an [`OptMeta`] section: `u32 name_len | name_len utf-8 bytes |
+//!   u32 blobs_per_layer` — the optimizer method name and its
+//!   [`crate::optim::Optimizer::state_blobs_per_layer`] stride. The
+//!   optimizer-zoo resume path uses it to reject resuming a checkpoint
+//!   into a different method (whose blobs would silently misparse)
+//!   before any blob is interpreted.
 //!
-//! Readers accept all four versions (v1 loads with empty optimizer
+//! Readers accept all five versions (v1 loads with empty optimizer
 //! state; v1/v2 load with no driver state; v1-v3 load with no scaler
-//! state); the writer always emits v4. The checksum covers everything
-//! before it, so truncation and bit corruption are both rejected.
+//! state; v1-v4 load with no optimizer metadata); the writer always
+//! emits v5. The checksum covers everything before it, so truncation
+//! and bit corruption are both rejected.
 //!
 //! Writes are atomic and keep one generation of history: the body is
 //! written to `<path>.tmp` and fsynced, any existing `<path>` is renamed
@@ -43,7 +51,7 @@ use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"SNGD";
-const VERSION: u32 = 4;
+const VERSION: u32 = 5;
 
 /// FNV-1a 64 over a byte image — shared by the checkpoint framing and
 /// the run digest of [`super::run_digest`].
@@ -79,6 +87,19 @@ pub struct DriverState {
     pub scaler: Option<(f32, usize, usize)>,
 }
 
+/// Optimizer identity stored in the checkpoint (v5): which method wrote
+/// the state blobs and at what per-layer stride. Lets the resume path
+/// fail loudly on a method mismatch instead of misparsing blobs.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OptMeta {
+    /// [`crate::optim::Method::name`] of the optimizer that produced
+    /// the state blobs (e.g. `"rkfac:4"`, `"mac"`, `"singd:diag"`).
+    pub method: String,
+    /// [`crate::optim::Optimizer::state_blobs_per_layer`] of that
+    /// optimizer; 0 for stateless methods.
+    pub blobs_per_layer: usize,
+}
+
 /// `<path>.suffix` as a sibling file (`ckpt.bin` → `ckpt.bin.tmp`).
 fn sibling(path: &Path, suffix: &str) -> PathBuf {
     let mut name = path.as_os_str().to_os_string();
@@ -109,6 +130,18 @@ pub fn save_checkpoint_driver(
     params: &[Mat],
     state: &[Vec<f32>],
     driver: Option<&DriverState>,
+) -> std::io::Result<()> {
+    save_checkpoint_meta(path, params, state, driver, None)
+}
+
+/// Save parameters, optimizer state, optional [`DriverState`] and
+/// optional [`OptMeta`] (checkpoint v5) atomically.
+pub fn save_checkpoint_meta(
+    path: &Path,
+    params: &[Mat],
+    state: &[Vec<f32>],
+    driver: Option<&DriverState>,
+    meta: Option<&OptMeta>,
 ) -> std::io::Result<()> {
     let mut body = Vec::new();
     body.extend_from_slice(MAGIC);
@@ -157,6 +190,17 @@ pub fn save_checkpoint_driver(
             }
         }
     }
+    // v5 optimizer-metadata section (top-level: present even for
+    // driver-less parameter checkpoints).
+    match meta {
+        None => body.push(0u8),
+        Some(m) => {
+            body.push(1u8);
+            body.extend_from_slice(&(m.method.len() as u32).to_le_bytes());
+            body.extend_from_slice(m.method.as_bytes());
+            body.extend_from_slice(&(m.blobs_per_layer as u32).to_le_bytes());
+        }
+    }
     let sum = checksum(&body);
     body.extend_from_slice(&sum.to_le_bytes());
     if let Some(dir) = path.parent() {
@@ -191,10 +235,19 @@ pub fn load_checkpoint_full(path: &Path) -> std::io::Result<(Vec<Mat>, Vec<Vec<f
 
 /// Load parameters, optimizer state and (v3+) [`DriverState`] from
 /// `path`. v1/v2 files yield `None` driver state; v3 files yield driver
-/// state with no scaler snapshot.
+/// state with no scaler snapshot. Any v5 [`OptMeta`] is validated but
+/// dropped; use [`load_checkpoint_meta`] to keep it.
 pub fn load_checkpoint_driver(
     path: &Path,
 ) -> std::io::Result<(Vec<Mat>, Vec<Vec<f32>>, Option<DriverState>)> {
+    load_checkpoint_meta(path).map(|(params, state, driver, _)| (params, state, driver))
+}
+
+/// Load parameters, optimizer state, (v3+) [`DriverState`] and (v5+)
+/// [`OptMeta`] from `path`. Pre-v5 files yield `None` metadata.
+pub fn load_checkpoint_meta(
+    path: &Path,
+) -> std::io::Result<(Vec<Mat>, Vec<Vec<f32>>, Option<DriverState>, Option<OptMeta>)> {
     let mut buf = Vec::new();
     std::fs::File::open(path)?.read_to_end(&mut buf)?;
     let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
@@ -325,10 +378,39 @@ pub fn load_checkpoint_driver(
             driver = Some(DriverState { step, best, epoch_loss, nb, rows, scaler });
         }
     }
+    let mut meta = None;
+    if ver >= 5 {
+        if off + 1 > body.len() {
+            return Err(err("truncated meta flag"));
+        }
+        let mflag = body[off];
+        off += 1;
+        if mflag > 1 {
+            return Err(err("bad meta flag"));
+        }
+        if mflag == 1 {
+            if off + 4 > body.len() {
+                return Err(err("truncated meta header"));
+            }
+            let name_len = u32::from_le_bytes(body[off..off + 4].try_into().unwrap()) as usize;
+            off += 4;
+            if off + name_len + 4 > body.len() {
+                return Err(err("truncated meta payload"));
+            }
+            let method = std::str::from_utf8(&body[off..off + name_len])
+                .map_err(|_| err("non-utf8 method name in meta"))?
+                .to_string();
+            off += name_len;
+            let blobs_per_layer =
+                u32::from_le_bytes(body[off..off + 4].try_into().unwrap()) as usize;
+            off += 4;
+            meta = Some(OptMeta { method, blobs_per_layer });
+        }
+    }
     if off != body.len() {
         return Err(err("trailing bytes after checkpoint payload"));
     }
-    Ok((params, state, driver))
+    Ok((params, state, driver, meta))
 }
 
 /// [`load_checkpoint_driver`] with automatic fallback to the
@@ -339,12 +421,12 @@ pub fn load_checkpoint_driver(
 /// returned, annotated with the fallback failure.
 pub fn load_checkpoint_auto(
     path: &Path,
-) -> std::io::Result<(Vec<Mat>, Vec<Vec<f32>>, Option<DriverState>)> {
-    match load_checkpoint_driver(path) {
+) -> std::io::Result<(Vec<Mat>, Vec<Vec<f32>>, Option<DriverState>, Option<OptMeta>)> {
+    match load_checkpoint_meta(path) {
         Ok(ok) => Ok(ok),
         Err(primary) => {
             let prev = sibling(path, ".prev");
-            match load_checkpoint_driver(&prev) {
+            match load_checkpoint_meta(&prev) {
                 Ok(ok) => {
                     crate::obs_warn!(
                         "warning: checkpoint {}: {primary}; resumed from last-good {}",
@@ -440,6 +522,44 @@ mod tests {
     }
 
     #[test]
+    fn optimizer_zoo_blobs_roundtrip_bitwise_with_meta() {
+        // The RK-FAC and MAC state blobs (sketches, Woodbury cores, mean
+        // activations) must survive a v5 save→load bitwise, and the meta
+        // section must identify the writing method.
+        for method in [Method::RkFac { k: 2 }, Method::Mac] {
+            let mut rng = Pcg::new(91);
+            let shapes = [(6usize, 5usize), (4, 6)];
+            let hp = Hyper { t_update: 1, damping: 0.1, ..Hyper::default() };
+            let mut opt = method.build(&shapes, &hp);
+            let mut params = vec![rng.normal_mat(6, 5, 0.2), rng.normal_mat(4, 6, 0.2)];
+            for t in 0..3 {
+                let grads = vec![rng.normal_mat(6, 5, 0.1), rng.normal_mat(4, 6, 0.1)];
+                let stats = vec![
+                    KronStats { a: rng.normal_mat(16, 5, 1.0), g: rng.normal_mat(16, 6, 1.0) },
+                    KronStats { a: rng.normal_mat(16, 6, 1.0), g: rng.normal_mat(16, 4, 1.0) },
+                ];
+                opt.step(t, &mut params, &grads, &stats);
+            }
+            let state = opt.state_vectors();
+            assert!(!state.is_empty(), "{} must carry state", method.name());
+            let meta =
+                OptMeta { method: method.name(), blobs_per_layer: opt.state_blobs_per_layer() };
+            let path = std::env::temp_dir()
+                .join(format!("singd_test_ckpt_zoo_{}.bin", method.name().replace(':', "_")));
+            save_checkpoint_meta(&path, &params, &state, None, Some(&meta)).unwrap();
+            let (lp, ls, _, lm) = load_checkpoint_meta(&path).unwrap();
+            assert_eq!(lp, params);
+            assert_eq!(ls, state, "{} blobs must round-trip bitwise", method.name());
+            assert_eq!(lm, Some(meta));
+            let mut fresh = method.build(&shapes, &hp);
+            fresh.load_state_vectors(&ls).unwrap();
+            assert_eq!(fresh.state_vectors(), state);
+            std::fs::remove_file(&path).ok();
+            std::fs::remove_file(sibling(&path, ".prev")).ok();
+        }
+    }
+
+    #[test]
     fn v3_driver_state_roundtrips_bitwise() {
         let mut rng = Pcg::new(87);
         let params = vec![rng.normal_mat(3, 4, 1.0)];
@@ -504,6 +624,125 @@ mod tests {
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(sibling(&path, ".prev")).ok();
         std::fs::remove_file(sibling(&path, ".tmp")).ok();
+    }
+
+    #[test]
+    fn v5_opt_meta_roundtrips() {
+        let mut rng = Pcg::new(90);
+        let params = vec![rng.normal_mat(2, 2, 1.0)];
+        let meta = OptMeta { method: "rkfac:4".into(), blobs_per_layer: 5 };
+        let path = std::env::temp_dir().join("singd_test_ckpt_v5.bin");
+        save_checkpoint_meta(&path, &params, &[vec![1.0, 2.0]], None, Some(&meta)).unwrap();
+        let (lp, ls, ld, lm) = load_checkpoint_meta(&path).unwrap();
+        assert_eq!(lp, params);
+        assert_eq!(ls, vec![vec![1.0, 2.0]]);
+        assert_eq!(ld, None);
+        assert_eq!(lm, Some(meta), "opt meta must round-trip exactly");
+        // A meta-less v5 file (the delegating legacy writers) loads with
+        // None metadata.
+        save_checkpoint_full(&path, &params, &[]).unwrap();
+        let (_, _, _, lm) = load_checkpoint_meta(&path).unwrap();
+        assert_eq!(lm, None);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(sibling(&path, ".prev")).ok();
+        std::fs::remove_file(sibling(&path, ".tmp")).ok();
+    }
+
+    #[test]
+    fn v5_meta_section_corruption_rejected() {
+        // Hand-craft v5 bodies with a hostile meta section; each must be
+        // rejected with a real error, never a silent misparse. The
+        // checksum is recomputed so the framing check alone cannot save
+        // us — the section parser has to do the work.
+        let write = |mutate: &dyn Fn(&mut Vec<u8>)| {
+            let mut body = Vec::new();
+            body.extend_from_slice(MAGIC);
+            body.extend_from_slice(&5u32.to_le_bytes());
+            body.extend_from_slice(&0u32.to_le_bytes()); // n_layers
+            body.extend_from_slice(&0u32.to_le_bytes()); // n_blobs
+            body.push(0u8); // driver flag
+            mutate(&mut body);
+            let sum = checksum(&body);
+            body.extend_from_slice(&sum.to_le_bytes());
+            let path = std::env::temp_dir().join("singd_test_ckpt_v5_bad.bin");
+            std::fs::write(&path, &body).unwrap();
+            let out = load_checkpoint_meta(&path);
+            std::fs::remove_file(&path).ok();
+            out
+        };
+        // Meta flag byte missing entirely.
+        assert!(write(&|_| {}).is_err(), "missing meta flag must be rejected");
+        // Flag value outside {0, 1}.
+        assert!(write(&|b| b.push(7u8)).is_err(), "bad meta flag must be rejected");
+        // Flag=1 but the name length points past the end of the body.
+        assert!(
+            write(&|b| {
+                b.push(1u8);
+                b.extend_from_slice(&1000u32.to_le_bytes());
+            })
+            .is_err(),
+            "oversized meta name must be rejected"
+        );
+        // Flag=1 with a non-utf8 method name.
+        assert!(
+            write(&|b| {
+                b.push(1u8);
+                b.extend_from_slice(&2u32.to_le_bytes());
+                b.extend_from_slice(&[0xff, 0xfe]);
+                b.extend_from_slice(&1u32.to_le_bytes());
+            })
+            .is_err(),
+            "non-utf8 meta name must be rejected"
+        );
+        // Trailing garbage after a valid meta section.
+        assert!(
+            write(&|b| {
+                b.push(0u8);
+                b.push(0xabu8);
+            })
+            .is_err(),
+            "trailing bytes must be rejected"
+        );
+        // Control: the minimal well-formed body loads.
+        let ok = write(&|b| b.push(0u8)).unwrap();
+        assert_eq!(ok.3, None);
+    }
+
+    #[test]
+    fn v4_files_load_with_no_opt_meta() {
+        // Hand-write a v4 file (scaler flag present, no meta section):
+        // readers must accept it and yield `meta: None`.
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC);
+        body.extend_from_slice(&4u32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes()); // n_layers
+        body.extend_from_slice(&1u32.to_le_bytes()); // rows
+        body.extend_from_slice(&1u32.to_le_bytes()); // cols
+        body.extend_from_slice(&1.5f32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes()); // n_blobs
+        body.extend_from_slice(&1u32.to_le_bytes()); // blob len
+        body.extend_from_slice(&3.5f32.to_le_bytes());
+        body.push(1u8); // driver flag
+        body.extend_from_slice(&6u64.to_le_bytes()); // step
+        body.extend_from_slice(&0.25f32.to_le_bytes()); // best
+        body.extend_from_slice(&1.0f64.to_le_bytes()); // epoch_loss
+        body.extend_from_slice(&2u64.to_le_bytes()); // nb
+        body.extend_from_slice(&0u32.to_le_bytes()); // n_rows
+        body.push(1u8); // scaler flag
+        body.extend_from_slice(&1024.0f32.to_le_bytes());
+        body.extend_from_slice(&3u64.to_le_bytes());
+        body.extend_from_slice(&1u64.to_le_bytes());
+        let sum = checksum(&body);
+        body.extend_from_slice(&sum.to_le_bytes());
+        let path = std::env::temp_dir().join("singd_test_ckpt_v4_compat.bin");
+        std::fs::write(&path, &body).unwrap();
+        let (lp, ls, ld, lm) = load_checkpoint_meta(&path).unwrap();
+        assert_eq!(lp[0].at(0, 0), 1.5);
+        assert_eq!(ls, vec![vec![3.5]]);
+        let d = ld.unwrap();
+        assert_eq!(d.scaler, Some((1024.0, 3, 1)));
+        assert_eq!(lm, None, "v4 files carry no optimizer metadata");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]
@@ -614,13 +853,13 @@ mod tests {
         // "Crash" while writing gen3: a truncated tmp file exists.
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(sibling(&path, ".tmp"), &bytes[..bytes.len() / 2]).unwrap();
-        let (p, _, _) = load_checkpoint_auto(&path).unwrap();
+        let (p, _, _, _) = load_checkpoint_auto(&path).unwrap();
         assert_eq!(p, gen2, "intact primary must win despite a stale tmp file");
         // Corrupt the primary: auto falls back to the last-good .prev.
         let mut bad = bytes.clone();
         bad[16] ^= 0x55;
         std::fs::write(&path, &bad).unwrap();
-        let (p, _, _) = load_checkpoint_auto(&path).unwrap();
+        let (p, _, _, _) = load_checkpoint_auto(&path).unwrap();
         assert_eq!(p, gen1, "corrupted primary must fall back to .prev");
         // Both corrupted: a real error naming both files.
         std::fs::write(sibling(&path, ".prev"), b"junk").unwrap();

@@ -6,7 +6,8 @@ mod checkpoint;
 
 pub use checkpoint::{
     load_checkpoint, load_checkpoint_auto, load_checkpoint_driver, load_checkpoint_full,
-    save_checkpoint, save_checkpoint_driver, save_checkpoint_full, DriverState,
+    load_checkpoint_meta, save_checkpoint, save_checkpoint_driver, save_checkpoint_full,
+    save_checkpoint_meta, DriverState, OptMeta,
 };
 
 use crate::data::Dataset;
@@ -349,8 +350,9 @@ fn apply_resume<M: Model + ?Sized>(
     mut load_state: impl FnMut(&[Vec<f32>]),
 ) -> Option<DriverState> {
     let path = cfg.resume.as_ref()?;
-    let (params, state, driver) = checkpoint::load_checkpoint_auto(path)
+    let (params, state, driver, meta) = checkpoint::load_checkpoint_auto(path)
         .unwrap_or_else(|e| panic!("resume: {e}"));
+    check_resume_meta("resume", &cfg.method, &state, meta.as_ref());
     restore_params(model, params);
     if !state.is_empty() {
         load_state(&state);
@@ -379,6 +381,29 @@ fn build_scaler(hp: &Hyper, resume: Option<&DriverState>) -> Option<Mutex<GradSc
 /// the run trains without loss scaling).
 fn scaler_snapshot(scaler: &Option<Mutex<GradScaler>>) -> Option<(f32, usize, usize)> {
     scaler.as_ref().map(|s| s.lock().unwrap_or_else(|e| e.into_inner()).state())
+}
+
+/// Optimizer identity section for a v5 checkpoint: the configured
+/// method name plus the per-layer blob stride of the live optimizer.
+fn opt_meta(method: &Method, blobs_per_layer: usize) -> OptMeta {
+    OptMeta { method: method.name(), blobs_per_layer }
+}
+
+/// Reject resuming optimizer state written by a different method: the
+/// blob layout is method-specific, so a silent misparse would train on
+/// garbage state. Pre-v5 checkpoints carry no metadata and skip the
+/// check (their layout mismatches still fail in `load_state_vectors`).
+fn check_resume_meta(who: &str, method: &Method, state: &[Vec<f32>], meta: Option<&OptMeta>) {
+    let Some(m) = meta else { return };
+    if !state.is_empty() && m.method != method.name() {
+        panic!(
+            "{who}: checkpoint optimizer state was written by method '{}' \
+             ({} blobs/layer) but this run uses '{}'",
+            m.method,
+            m.blobs_per_layer,
+            method.name()
+        );
+    }
 }
 
 /// Reassemble the canonical (serial-layout) optimizer-state snapshot on
@@ -444,10 +469,15 @@ pub fn train_image_model<M: Model + ?Sized>(
             let path = path.clone();
             let scaler_ref = &scaler;
             let opt_ref = &opt;
+            let method = &cfg.method;
             hook_impl = move |m: &M, d: &DriverState| {
-                let state = opt_ref.lock().unwrap_or_else(|e| e.into_inner()).state_vectors();
+                let (state, bpl) = {
+                    let o = opt_ref.lock().unwrap_or_else(|e| e.into_inner());
+                    (o.state_vectors(), o.state_blobs_per_layer())
+                };
                 let d = DriverState { scaler: scaler_snapshot(scaler_ref), ..d.clone() };
-                checkpoint::save_checkpoint_driver(&path, m.params(), &state, Some(&d))
+                let meta = opt_meta(method, bpl);
+                checkpoint::save_checkpoint_meta(&path, m.params(), &state, Some(&d), Some(&meta))
                     .unwrap_or_else(|e| panic!("checkpoint save {}: {e}", path.display()));
             };
             Some(&mut hook_impl)
@@ -790,8 +820,15 @@ fn train_dist_local<M: Model + ?Sized>(
                     opts_ref[0].lock().unwrap_or_else(|e| e.into_inner()).state_vectors()
                 };
                 let d = DriverState { scaler: scaler_snapshot(scaler_ref), ..d.clone() };
-                checkpoint::save_checkpoint_driver(&path, m.params(), &canonical, Some(&d))
-                    .unwrap_or_else(|e| panic!("checkpoint save {}: {e}", path.display()));
+                let meta = opt_meta(&cfg.method, bpl);
+                checkpoint::save_checkpoint_meta(
+                    &path,
+                    m.params(),
+                    &canonical,
+                    Some(&d),
+                    Some(&meta),
+                )
+                .unwrap_or_else(|e| panic!("checkpoint save {}: {e}", path.display()));
             };
             Some(&mut hook_impl)
         }
@@ -951,8 +988,19 @@ fn train_dist_socket<M: Model + ?Sized>(
                 let canonical = gather_canonical_state(comm_ref, opt_ref, n_layers);
                 if comm_ref.rank() == 0 {
                     let d = DriverState { scaler: scaler_snapshot(scaler_ref), ..d.clone() };
-                    checkpoint::save_checkpoint_driver(&path, m.params(), &canonical, Some(&d))
-                        .unwrap_or_else(|e| panic!("checkpoint save {}: {e}", path.display()));
+                    let bpl = opt_ref
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .state_blobs_per_layer();
+                    let meta = opt_meta(&cfg.method, bpl);
+                    checkpoint::save_checkpoint_meta(
+                        &path,
+                        m.params(),
+                        &canonical,
+                        Some(&d),
+                        Some(&meta),
+                    )
+                    .unwrap_or_else(|e| panic!("checkpoint save {}: {e}", path.display()));
                 }
             };
             Some(&mut hook_impl)
@@ -1084,19 +1132,24 @@ fn train_dist_elastic<M: Model + ?Sized>(
     let mut canonical_state: Vec<Vec<f32>> = Vec::new();
     let mut resume: DriverState = match &cfg.resume {
         Some(path) => {
-            let (params, state, driver) = checkpoint::load_checkpoint_auto(path)
+            let (params, state, driver, meta) = checkpoint::load_checkpoint_auto(path)
                 .unwrap_or_else(|e| panic!("train_dist[elastic]: resume: {e}"));
+            check_resume_meta("train_dist[elastic]: resume", &cfg.method, &state, meta.as_ref());
             restore_params(model, params);
             canonical_state = state;
             driver.unwrap_or_default()
         }
         None => {
             if orig_rank == 0 {
-                checkpoint::save_checkpoint_driver(
+                // Fresh step-0 checkpoint: no optimizer state yet, so
+                // the meta stride is 0 but the method name already
+                // guards later resumes against a method switch.
+                checkpoint::save_checkpoint_meta(
                     &ckpt_path,
                     model.params(),
                     &[],
                     Some(&DriverState::default()),
+                    Some(&opt_meta(&cfg.method, 0)),
                 )
                 .unwrap_or_else(|e| panic!("train_dist[elastic]: initial checkpoint: {e}"));
             }
@@ -1147,10 +1200,19 @@ fn train_dist_elastic<M: Model + ?Sized>(
                 let canonical = gather_canonical_state(&comm, &opt, n_layers);
                 if comm.rank() == 0 {
                     let d = DriverState { scaler: scaler_snapshot(&scaler), ..d.clone() };
-                    checkpoint::save_checkpoint_driver(&ckpt_path, m.params(), &canonical, Some(&d))
-                        .unwrap_or_else(|e| {
-                            panic!("train_dist[elastic]: checkpoint save {}: {e}", ckpt_path.display())
-                        });
+                    let bpl =
+                        opt.lock().unwrap_or_else(|e| e.into_inner()).state_blobs_per_layer();
+                    let meta = opt_meta(&cfg.method, bpl);
+                    checkpoint::save_checkpoint_meta(
+                        &ckpt_path,
+                        m.params(),
+                        &canonical,
+                        Some(&d),
+                        Some(&meta),
+                    )
+                    .unwrap_or_else(|e| {
+                        panic!("train_dist[elastic]: checkpoint save {}: {e}", ckpt_path.display())
+                    });
                 }
             };
             train_loop(
@@ -1275,7 +1337,7 @@ fn train_dist_elastic<M: Model + ?Sized>(
                         panic!("train_dist[elastic]: snapshot {tag}: {e}")
                     });
                 }
-                let (params, state, driver) = checkpoint::load_checkpoint_auto(&ckpt_path)
+                let (params, state, driver, _meta) = checkpoint::load_checkpoint_auto(&ckpt_path)
                     .unwrap_or_else(|e| {
                         panic!("train_dist[elastic]: reload after regroup: {e}")
                     });

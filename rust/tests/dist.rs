@@ -1695,3 +1695,157 @@ fn accum_fp16_scaler_overflow_schedule_stays_in_lockstep() {
         "fp16 ranks=4 accum digest"
     );
 }
+
+// =====================================================================
+// Optimizer zoo (RK-FAC sketched + MAC): the two cheap-curvature
+// optimizers behind the same sharded trait must uphold the same
+// determinism grid as SINGD/KFAC — rank invariance under both
+// strategies, algo and stream invariance, checkpoint-resume, and
+// cross-world resharding. The socket-transport and real-OS-process legs
+// of this axis live in rust/tests/dist_proc.rs (a test binary cannot
+// re-exec itself as workers).
+
+/// The zoo methods with the hypers their unit suites converge under
+/// (both need the heavy second-order damping — their sketch/rank-1
+/// curvature null spaces are amplified by 1/λ).
+fn zoo_cfgs() -> Vec<(Method, Hyper)> {
+    vec![
+        (
+            Method::RkFac { k: 4 },
+            Hyper { lr: 0.01, damping: 0.1, t_update: 1, update_clip: 0.05, ..Hyper::default() },
+        ),
+        (Method::Mac, Hyper { lr: 0.01, damping: 0.1, t_update: 1, ..Hyper::default() }),
+    ]
+}
+
+#[test]
+fn zoo_rank_invariance_replicated_and_factor_sharded() {
+    let (ds, mut cfg) = fixture();
+    cfg.epochs = 1;
+    for (method, hp) in zoo_cfgs() {
+        cfg.method = method.clone();
+        cfg.hyper = hp;
+        let name = method.name();
+        let serial = run(&cfg, &ds, None);
+        let d1 = run(&cfg, &ds, Some(&DistCfg::local(1, DistStrategy::Replicated)));
+        assert_bitwise_equal(&serial, &d1, &format!("{name} serial vs ranks=1"));
+        for strategy in [DistStrategy::Replicated, DistStrategy::FactorSharded] {
+            let d4 = run(&cfg, &ds, Some(&DistCfg::local(4, strategy)));
+            assert_bitwise_equal(&d1, &d4, &format!("{name} ranks=4 {}", strategy.name()));
+        }
+    }
+}
+
+#[test]
+fn zoo_stream_and_algo_grid_matches_serial_bitwise() {
+    // Method × strategy × algo × stream ∈ {0,1}, all overlapped, at
+    // ranks=4 — every cell bitwise equal to the serial run.
+    let (ds, mut cfg) = fixture();
+    cfg.epochs = 1;
+    for (method, hp) in zoo_cfgs() {
+        cfg.method = method.clone();
+        cfg.hyper = hp;
+        let name = method.name();
+        let serial = run(&cfg, &ds, None);
+        for strategy in [DistStrategy::Replicated, DistStrategy::FactorSharded] {
+            for algo in [Algo::Star, Algo::Ring] {
+                for stream in [false, true] {
+                    let mut dc = DistCfg::local(4, strategy);
+                    dc.algo = algo;
+                    dc.overlap = true;
+                    dc.stream = stream;
+                    let out = run(&cfg, &ds, Some(&dc));
+                    assert_bitwise_equal(
+                        &serial,
+                        &out,
+                        &format!(
+                            "{name} {} {} stream={stream}",
+                            strategy.name(),
+                            algo.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn zoo_resume_is_bitwise_identical() {
+    let (ds, mut cfg) = fixture();
+    for (method, hp) in zoo_cfgs() {
+        cfg.method = method.clone();
+        cfg.hyper = hp;
+        let name = method.name().replace(':', "_");
+        assert_resume_matches(&cfg, &ds, None, &format!("serial-{name}"));
+        for strategy in [DistStrategy::Replicated, DistStrategy::FactorSharded] {
+            let dc = DistCfg::local(4, strategy);
+            assert_resume_matches(
+                &cfg,
+                &ds,
+                Some(&dc),
+                &format!("local-{name}-{}", strategy.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn zoo_resume_across_worlds_reshards_state_bitwise() {
+    // The elastic reshard cell per new optimizer: a ranks=4
+    // factor-sharded checkpoint (canonical state) resumes under ranks=2
+    // factor-sharded, bitwise equal to the uninterrupted ranks=2 run.
+    let (ds, mut cfg) = fixture();
+    for (method, hp) in zoo_cfgs() {
+        cfg.method = method.clone();
+        cfg.hyper = hp;
+        let name = method.name().replace(':', "_");
+        let dir = resume_tmp(&format!("reshard-{name}"));
+        let ckpt = dir.join("run.ckpt");
+        let full2 = run(&cfg, &ds, Some(&DistCfg::local(2, DistStrategy::FactorSharded)));
+        let mut c1 = cfg.clone();
+        c1.epochs = 1;
+        c1.ckpt = Some(ckpt.clone());
+        c1.ckpt_every = 4;
+        let _ = run(&c1, &ds, Some(&DistCfg::local(4, DistStrategy::FactorSharded)));
+        assert!(ckpt.exists(), "{name} reshard: checkpoint not written");
+        let mut c2 = cfg.clone();
+        c2.resume = Some(ckpt);
+        let resumed = run(&c2, &ds, Some(&DistCfg::local(2, DistStrategy::FactorSharded)));
+        assert_bitwise_equal(&full2, &resumed, &format!("{name} reshard 4→2"));
+        assert_eq!(
+            full2.0.param_digest, resumed.0.param_digest,
+            "{name} reshard 4→2: digest"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn zoo_factor_sharded_per_rank_state_shrinks() {
+    // Memory claim behind the sharding: under factor sharding each
+    // rank's optimizer-state bytes shrink with world size (MAC's rank-1
+    // state and RK-FAC's sketches both shard per layer).
+    let shapes: Vec<(usize, usize)> = vec![(48, 64), (32, 48), (16, 32), (4, 16)];
+    for (method, hp) in zoo_cfgs() {
+        let full = method.build(&shapes, &hp).state_bytes();
+        for world in [2usize, 4] {
+            let per_rank: Vec<usize> = (0..world)
+                .map(|r| {
+                    method
+                        .build_dist(&shapes, &hp, DistCtx::new(DistStrategy::FactorSharded, r, world))
+                        .state_bytes()
+                })
+                .collect();
+            let total: usize = per_rank.iter().sum();
+            assert_eq!(total, full, "{} world {world}: shards must partition", method.name());
+            for (r, &b) in per_rank.iter().enumerate() {
+                assert!(
+                    b < full,
+                    "{} world {world} rank {r}: {b} not < {full}",
+                    method.name()
+                );
+            }
+        }
+    }
+}

@@ -117,6 +117,40 @@ fn socket_ranks4_bitwise_matches_local_and_serial_for_singd_and_kfac() {
 }
 
 #[test]
+fn socket_ranks4_digest_matches_serial_for_rkfac_and_mac() {
+    // The optimizer-zoo acceptance (ISSUE 10) over real OS processes:
+    // one pruned digest leg per new optimizer. RK-FAC's sketch is
+    // re-derived per (layer, refresh-step) from a rank-independent
+    // seed and MAC's mean-activation vector reduces like any factor,
+    // so a real 4-process socket world must digest identically to
+    // serial. One factor-sharded ring cell each keeps the process
+    // count bounded; the full strategy × algo × stream grid runs
+    // in-process in rust/tests/dist.rs.
+    for method in ["rkfac", "mac"] {
+        let cfg = write_job(method, method);
+        let serial = digest_of(&cfg, &["--ranks", "1"]);
+        let socket = digest_of(
+            &cfg,
+            &[
+                "--ranks",
+                "4",
+                "--strategy",
+                "factor-sharded",
+                "--transport",
+                "socket",
+                "--algo",
+                "ring",
+            ],
+        );
+        assert_eq!(
+            serial, socket,
+            "{method}: socket ring ranks=4 (separate processes) diverged from serial"
+        );
+        std::fs::remove_file(&cfg).ok();
+    }
+}
+
+#[test]
 fn star_and_ring_digests_match_across_transports() {
     // The algo axis end to end over real OS processes: star and ring
     // must produce identical param digests on both transports (one
